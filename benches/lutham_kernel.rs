@@ -1,0 +1,92 @@
+//! Bench: the LUTHAM forward path per variant and batch bucket, through
+//! the real PJRT executables (AOT artifacts).  This is the L1/L2 hot path
+//! as the serving coordinator sees it.
+//!
+//! Run: cargo bench --bench lutham_kernel
+
+use share_kan::data::rng::Pcg32;
+use share_kan::runtime::{literal, Engine};
+use share_kan::tensor::Tensor;
+use share_kan::util::bench::Bencher;
+use xla::Literal;
+
+fn main() {
+    let dir = share_kan::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(&dir).unwrap();
+    let spec = eng.manifest.kan_spec;
+    let k = eng.manifest.vq_spec.codebook_size;
+    let g = spec.grid_size;
+    let mut rng = Pcg32::seeded(1);
+
+    // weights per variant
+    let dense: Vec<Literal> = vec![
+        literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden, g],
+            &rng.normal_vec(spec.d_in * spec.d_hidden * g, 0.0, 0.3))).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out, g],
+            &rng.normal_vec(spec.d_hidden * spec.d_out * g, 0.0, 0.3))).unwrap(),
+    ];
+    let vq: Vec<Literal> = {
+        let e0 = spec.d_in * spec.d_hidden;
+        let e1 = spec.d_hidden * spec.d_out;
+        vec![
+            literal::to_literal(&Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0))).unwrap(),
+            literal::to_literal(&Tensor::from_i32(&[spec.d_in, spec.d_hidden],
+                &(0..e0).map(|_| rng.below(k) as i32).collect::<Vec<_>>())).unwrap(),
+            literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden],
+                &rng.normal_vec(e0, 0.0, 0.5))).unwrap(),
+            literal::to_literal(&Tensor::from_f32(&[spec.d_hidden],
+                &rng.normal_vec(spec.d_hidden, 0.0, 0.2))).unwrap(),
+            literal::to_literal(&Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0))).unwrap(),
+            literal::to_literal(&Tensor::from_i32(&[spec.d_hidden, spec.d_out],
+                &(0..e1).map(|_| rng.below(k) as i32).collect::<Vec<_>>())).unwrap(),
+            literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out],
+                &rng.normal_vec(e1, 0.0, 0.5))).unwrap(),
+            literal::to_literal(&Tensor::from_f32(&[spec.d_out],
+                &rng.normal_vec(spec.d_out, 0.0, 0.2))).unwrap(),
+        ]
+    };
+    let mlp: Vec<Literal> = vec![
+        literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden],
+            &rng.normal_vec(spec.d_in * spec.d_hidden, 0.0, 0.2))).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden],
+            &rng.normal_vec(spec.d_hidden, 0.0, 0.1))).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out],
+            &rng.normal_vec(spec.d_hidden * spec.d_out, 0.0, 0.2))).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_out],
+            &rng.normal_vec(spec.d_out, 0.0, 0.1))).unwrap(),
+    ];
+
+    let bencher = Bencher::default();
+    println!("LUTHAM forward path (PJRT CPU, interpret-lowered Pallas kernels)");
+    println!("{:-<100}", "");
+    for &bucket in &eng.manifest.batch_buckets.clone() {
+        let x = literal::to_literal(&Tensor::from_f32(
+            &[bucket, spec.d_in],
+            &rng.normal_vec(bucket * spec.d_in, 0.0, 1.0),
+        ))
+        .unwrap();
+        for (label, weights, family) in [
+            ("mlp", &mlp, "mlp_fwd"),
+            ("dense_kan", &dense, "dense_kan_fwd"),
+            ("vq_kan_fp32", &vq, "vq_kan_fwd"),
+        ] {
+            let name = format!("{family}_b{bucket}");
+            let exe = eng.executable(&name).unwrap();
+            let mut inputs: Vec<&Literal> = weights.iter().collect();
+            inputs.push(&x);
+            let r = bencher.run(&format!("{label} b={bucket}"), || {
+                let out = eng.execute_on(&exe, &inputs).unwrap();
+                std::hint::black_box(&out);
+            });
+            println!(
+                "{}   {:>10.0} samples/s",
+                r.report(),
+                r.throughput(bucket as f64)
+            );
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: cache-simulator throughput (probes/sec) and the §5.5 analysis
+//! wall time at paper scale — the memsim substrate must be fast enough to
+//! replay multi-million-edge traces.
+//!
+//! Run: cargo bench --bench memsim_bandwidth
+
+use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::memsim::{
+    analyze, trace_vq_layer, Cache, CacheConfig, DeviceModel, LayerShape,
+};
+use share_kan::util::bench::Bencher;
+
+fn main() {
+    let bencher = Bencher::quick();
+
+    // raw cache probe throughput
+    let mut cache = Cache::new(CacheConfig::a100_l2());
+    let mut addr = 0u64;
+    let r = bencher.run("cache probe (sequential)", || {
+        for _ in 0..1024 {
+            cache.access(addr, 4);
+            addr = addr.wrapping_add(64) & 0xfff_ffff;
+        }
+    });
+    println!("{}   {:>12.0} probes/s", r.report(), r.throughput(1024.0));
+
+    let mut cache = Cache::new(CacheConfig::a100_l2());
+    let mut state = 0x12345u64;
+    let r = bencher.run("cache probe (random)", || {
+        for _ in 0..1024 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            cache.access(state & 0xfff_ffff, 4);
+        }
+    });
+    println!("{}   {:>12.0} probes/s", r.report(), r.throughput(1024.0));
+
+    // one VQ layer trace at our scale
+    let shape = LayerShape { n_in: 64, n_out: 128, g: 10, k: 512 };
+    let mut cache = Cache::new(CacheConfig::a100_l2());
+    let r = bencher.run("vq layer trace (64x128, batch 8)", || {
+        let rep = trace_vq_layer(&mut cache, shape, 8, true, 42);
+        std::hint::black_box(rep.requested_bytes);
+    });
+    println!("{}   {:>12.0} edge-evals/s", r.report(),
+             r.throughput((64 * 128 * 8) as f64));
+
+    // full §5.5 analysis at paper scale (3.2M edges x batch)
+    let spec = KanSpec::paper_scale();
+    let vq = VqSpec { codebook_size: 65536 };
+    let t0 = std::time::Instant::now();
+    let a = analyze(&spec, &vq, &DeviceModel::a100(), CacheConfig::a100_l2(), 1, 2, 42);
+    println!(
+        "paper-scale analyze (3.2M edges, warmup 1 + measure 2): {:?}  (vq hit {:.1}%, reduction {:.0}x)",
+        t0.elapsed(),
+        100.0 * a.vq_int8.l2_hit_rate,
+        a.bandwidth_reduction
+    );
+}

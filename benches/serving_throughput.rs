@@ -1,0 +1,101 @@
+//! Bench: end-to-end serving throughput through the coordinator (batching +
+//! routing + PJRT execution), per head variant and batching policy.
+//!
+//! Run: cargo bench --bench serving_throughput
+
+use std::time::Duration;
+
+use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::data::rng::Pcg32;
+use share_kan::data::standard_splits;
+use share_kan::runtime::Engine;
+use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::vq::{compress, Precision};
+
+fn main() {
+    let dir = share_kan::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    // quick-train a head so the served weights are realistic
+    let (dense_ck, spec) = {
+        let eng = Engine::load(&dir).unwrap();
+        let spec = eng.manifest.kan_spec;
+        let data = standard_splits(42, spec.d_in, spec.d_out, 512, 64, 64, 64);
+        let mut t = KanTrainer::new(&eng, spec.grid_size, 42).unwrap();
+        t.fit(&data.train, &TrainConfig { steps: 60, base_lr: 2e-2, seed: 1, log_every: 100 })
+            .unwrap();
+        (t.to_checkpoint().unwrap(), spec)
+    };
+    let k = 512;
+    let heads: Vec<(&str, HeadWeights)> = vec![
+        ("dense_kan", HeadWeights::from_checkpoint(&dense_ck).unwrap()),
+        ("vq_fp32", HeadWeights::from_checkpoint(
+            &compress(&dense_ck, &spec, k, Precision::Fp32, 1).unwrap().to_checkpoint()).unwrap()),
+        ("vq_int8", HeadWeights::from_checkpoint(
+            &compress(&dense_ck, &spec, k, Precision::Int8, 1).unwrap().to_checkpoint()).unwrap()),
+    ];
+
+    println!("serving throughput: 2000 closed-loop requests, 4 client threads");
+    println!("{:-<100}", "");
+    for (label, head) in heads {
+        for (pol_label, policy) in [
+            ("batch<=8/0.5ms", BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) }),
+            ("batch<=32/1ms", BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) }),
+            ("batch<=128/2ms", BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(2) }),
+        ] {
+            let handle = Coordinator::start(CoordinatorConfig {
+                artifacts_dir: dir.clone(),
+                policy,
+                queue_capacity: 4096,
+            })
+            .unwrap();
+            let c = handle.client.clone();
+            c.add_head("h", head.clone()).unwrap();
+            // warmup
+            let mut rng = Pcg32::seeded(3);
+            for _ in 0..64 {
+                let _ = c.infer("h", rng.normal_vec(spec.d_in, 0.0, 1.0));
+            }
+            let n = 2000usize;
+            let t0 = std::time::Instant::now();
+            let mut joins = Vec::new();
+            for t in 0..4u64 {
+                let c = c.clone();
+                let d_in = spec.d_in;
+                joins.push(std::thread::spawn(move || {
+                    let mut rng = Pcg32::seeded(7 + t);
+                    let mut pending = Vec::new();
+                    for _ in 0..n / 4 {
+                        if let Ok(rx) = c.try_submit("h", rng.normal_vec(d_in, 0.0, 1.0)) {
+                            pending.push(rx);
+                        }
+                        if pending.len() >= 64 {
+                            for rx in pending.drain(..) {
+                                let _ = rx.recv();
+                            }
+                        }
+                    }
+                    for rx in pending {
+                        let _ = rx.recv();
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+            let dt = t0.elapsed();
+            let m = c.metrics();
+            println!(
+                "{label:<12} {pol_label:<16} {:>8.0} req/s   p50 {:>9?}  p95 {:>9?}  mean batch {:>5.1}  pad {:>4.1}%",
+                n as f64 / dt.as_secs_f64(),
+                m.latency.percentile(0.5),
+                m.latency.percentile(0.95),
+                m.counters.mean_batch_size(),
+                100.0 * m.counters.padding_fraction(),
+            );
+            handle.shutdown();
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: compression-pipeline throughput — k-means fit, assignment, and
+//! full gain-shape-bias compression per layer size and K.
+//!
+//! Run: cargo bench --bench vq_compression
+
+use share_kan::data::rng::Pcg32;
+use share_kan::util::bench::Bencher;
+use share_kan::vq::{compress_layer, normalize_grids, KMeans, KMeansConfig};
+
+fn main() {
+    let bencher = Bencher::quick();
+    let mut rng = Pcg32::seeded(1);
+
+    for (n_edges, g, k) in [(8192usize, 10usize, 512usize), (32768, 10, 1024), (8192, 20, 512)] {
+        let grids = rng.normal_vec(n_edges * g, 0.0, 0.3);
+
+        let r = bencher.run(&format!("normalize {n_edges}x{g}"), || {
+            let out = normalize_grids(&grids, n_edges, g);
+            std::hint::black_box(out.0.len());
+        });
+        println!("{}   {:>12.0} edges/s", r.report(), r.throughput(n_edges as f64));
+
+        let (shapes, _, _) = normalize_grids(&grids, n_edges, g);
+        let cfg = KMeansConfig { k, batch_size: 1024, iterations: 20, seed: 2 };
+        let r = bencher.run(&format!("kmeans fit K={k} ({n_edges}x{g}, 20 it)"), || {
+            let km = KMeans::fit(&shapes, n_edges, g, &cfg);
+            std::hint::black_box(km.centroids.len());
+        });
+        println!("{}", r.report());
+
+        let km = KMeans::fit(&shapes, n_edges, g, &cfg);
+        let r = bencher.run(&format!("assign_all K={k} ({n_edges} edges)"), || {
+            let idx = km.assign_all(&shapes, n_edges);
+            std::hint::black_box(idx.len());
+        });
+        println!("{}   {:>12.0} edges/s", r.report(), r.throughput(n_edges as f64));
+
+        let t0 = std::time::Instant::now();
+        let layer = compress_layer(&grids, n_edges / 128, 128, g, k, 3);
+        println!(
+            "full compress_layer {n_edges}x{g} K={k}: {:?}  (R² vs self = {:.3})\n",
+            t0.elapsed(),
+            share_kan::vq::r_squared(&grids, &layer.reconstruct())
+        );
+    }
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the smallest useful tour of the public API.
+//!
+//! 1. load the PJRT engine over the AOT artifacts
+//! 2. quick-train a dense KAN head (few steps, synthetic data)
+//! 3. VQ-compress it (SHARe-KAN, Int8)
+//! 4. serve a request through the coordinator
+//!
+//! Run: make artifacts && cargo run --release --example quickstart
+
+use std::time::Duration;
+
+use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::data::standard_splits;
+use share_kan::runtime::Engine;
+use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::vq::{compress, Precision};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = share_kan::runtime::default_artifacts_dir();
+
+    // 1. engine
+    let engine = Engine::load(&artifacts)?;
+    let spec = engine.manifest.kan_spec;
+    println!("engine up on {}; head = {}->{}->{} G={}",
+             engine.platform(), spec.d_in, spec.d_hidden, spec.d_out, spec.grid_size);
+
+    // 2. short training run (the real experiments train longer — see repro)
+    let data = standard_splits(42, spec.d_in, spec.d_out, 1024, 128, 256, 0);
+    let mut trainer = KanTrainer::new(&engine, spec.grid_size, 42)?;
+    let log = trainer.fit(&data.train,
+                          &TrainConfig { steps: 200, base_lr: 2e-2, seed: 1, log_every: 50 })?;
+    println!("trained 200 steps: loss {:.4} -> {:.4}",
+             log.losses.first().unwrap().1, log.final_loss);
+    let dense_ck = trainer.to_checkpoint()?;
+
+    // 3. SHARe-KAN compression (gain-shape-bias VQ + Int8)
+    let k = engine.manifest.vq_spec.codebook_size;
+    let compressed = compress(&dense_ck, &spec, k, Precision::Int8, 42)?;
+    let vq_ck = compressed.to_checkpoint();
+    println!("compressed: {} B -> {} B ({:.1}x), R² = {:?}",
+             dense_ck.total_bytes(), vq_ck.total_bytes(),
+             dense_ck.total_bytes() as f64 / vq_ck.total_bytes() as f64,
+             compressed.r2);
+
+    // 4. serve it
+    drop(engine); // the coordinator owns its own engine thread
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts,
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+        queue_capacity: 256,
+    })?;
+    let client = handle.client.clone();
+    client.add_head("demo", HeadWeights::from_checkpoint(&vq_ck)?)?;
+    let resp = client.infer("demo", data.test.features(0).to_vec())?;
+    println!("served request {}: {} scores, latency {:?}",
+             resp.id, resp.scores.len(), resp.latency);
+    println!("quickstart OK");
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX models, AOT export.
+
+Never imported at runtime — the Rust binary consumes artifacts/*.hlo.txt.
+"""

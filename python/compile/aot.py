@@ -1,0 +1,208 @@
+"""AOT export: lower every L2 model to HLO *text* + write manifest.json.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import BATCH_BUCKETS, G_SWEEP, DEFAULT_KAN, DEFAULT_MLP, DEFAULT_VQ, KanConfig
+
+TRAIN_BATCH = 16  # paper §A.1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(s):
+    return {jnp.float32: "f32", jnp.int32: "i32", jnp.int8: "i8"}[s.dtype.type] \
+        if False else str(s.dtype)
+
+
+def export(fn, arg_specs, name, out_dir, manifest, outputs, tags):
+    """Lower fn at arg_specs, write <name>.hlo.txt, record in manifest."""
+    lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "params": [{"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                   for n, s in arg_specs],
+        "outputs": outputs,
+        **tags,
+    }
+    print(f"  wrote {name}: {len(text)/1024:.0f} KiB, "
+          f"{len(arg_specs)} params")
+
+
+def kan_fwd_specs(cfg: KanConfig, batch):
+    return [
+        ("grids0", spec((cfg.d_in, cfg.d_hidden, cfg.grid_size))),
+        ("grids1", spec((cfg.d_hidden, cfg.d_out, cfg.grid_size))),
+        ("x", spec((batch, cfg.d_in))),
+    ]
+
+
+def vq_fwd_specs(cfg: KanConfig, k: int, batch):
+    return [
+        ("cb0", spec((k, cfg.grid_size))),
+        ("idx0", spec((cfg.d_in, cfg.d_hidden), jnp.int32)),
+        ("g0", spec((cfg.d_in, cfg.d_hidden))),
+        ("bs0", spec((cfg.d_hidden,))),
+        ("cb1", spec((k, cfg.grid_size))),
+        ("idx1", spec((cfg.d_hidden, cfg.d_out), jnp.int32)),
+        ("g1", spec((cfg.d_hidden, cfg.d_out))),
+        ("bs1", spec((cfg.d_out,))),
+        ("x", spec((batch, cfg.d_in))),
+    ]
+
+
+def vq_int8_fwd_specs(cfg: KanConfig, k: int, batch):
+    return [
+        ("cbq0", spec((k, cfg.grid_size), jnp.int8)),
+        ("idx0", spec((cfg.d_in, cfg.d_hidden), jnp.int32)),
+        ("gq0", spec((cfg.d_in, cfg.d_hidden), jnp.int8)),
+        ("bs0", spec((cfg.d_hidden,))),
+        ("cbq1", spec((k, cfg.grid_size), jnp.int8)),
+        ("idx1", spec((cfg.d_hidden, cfg.d_out), jnp.int32)),
+        ("gq1", spec((cfg.d_hidden, cfg.d_out), jnp.int8)),
+        ("bs1", spec((cfg.d_out,))),
+        ("scales", spec((2, 3))),
+        ("x", spec((batch, cfg.d_in))),
+    ]
+
+
+def mlp_fwd_specs(cfg, batch):
+    return [
+        ("w1", spec((cfg.d_in, cfg.d_hidden))),
+        ("b1", spec((cfg.d_hidden,))),
+        ("w2", spec((cfg.d_hidden, cfg.d_out))),
+        ("b2", spec((cfg.d_out,))),
+        ("x", spec((batch, cfg.d_in))),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode (Makefile stamp)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    kan, mlp, vq = DEFAULT_KAN, DEFAULT_MLP, DEFAULT_VQ
+    manifest = {
+        "version": 1,
+        "model": {
+            "d_in": kan.d_in, "d_hidden": kan.d_hidden, "d_out": kan.d_out,
+            "grid_size": kan.grid_size, "codebook_size": vq.codebook_size,
+            "num_edges": kan.num_edges,
+        },
+        "batch_buckets": list(BATCH_BUCKETS),
+        "g_sweep": list(G_SWEEP),
+        "train_batch": TRAIN_BATCH,
+        "artifacts": {},
+    }
+
+    print("AOT export: forward passes per batch bucket")
+    for b in BATCH_BUCKETS:
+        export(model.dense_kan_fwd, kan_fwd_specs(kan, b),
+               f"dense_kan_fwd_b{b}", out_dir, manifest, ["scores"],
+               {"kind": "fwd", "model": "dense_kan", "batch": b, "grid_size": kan.grid_size})
+        export(model.vq_kan_fwd, vq_fwd_specs(kan, vq.codebook_size, b),
+               f"vq_kan_fwd_b{b}", out_dir, manifest, ["scores"],
+               {"kind": "fwd", "model": "vq_kan_fp32", "batch": b,
+                "grid_size": kan.grid_size, "codebook_size": vq.codebook_size})
+        export(model.vq_kan_int8_fwd, vq_int8_fwd_specs(kan, vq.codebook_size, b),
+               f"vq_kan_int8_fwd_b{b}", out_dir, manifest, ["scores"],
+               {"kind": "fwd", "model": "vq_kan_int8", "batch": b,
+                "grid_size": kan.grid_size, "codebook_size": vq.codebook_size})
+        export(model.mlp_fwd, mlp_fwd_specs(mlp, b),
+               f"mlp_fwd_b{b}", out_dir, manifest, ["scores"],
+               {"kind": "fwd", "model": "mlp", "batch": b})
+
+    print("AOT export: G-sweep forwards (resolution-accuracy Pareto, §5.3)")
+    eval_b = max(BATCH_BUCKETS)
+    for g in G_SWEEP:
+        if g == kan.grid_size:
+            continue  # already exported above
+        cfg_g = KanConfig(grid_size=g)
+        export(model.dense_kan_fwd, kan_fwd_specs(cfg_g, eval_b),
+               f"dense_kan_fwd_g{g}_b{eval_b}", out_dir, manifest, ["scores"],
+               {"kind": "fwd", "model": "dense_kan", "batch": eval_b, "grid_size": g})
+
+    print("AOT export: train steps (driven by the Rust training loop)")
+    for g in G_SWEEP:
+        cfg_g = KanConfig(grid_size=g)
+        s0 = spec((cfg_g.d_in, cfg_g.d_hidden, g))
+        s1 = spec((cfg_g.d_hidden, cfg_g.d_out, g))
+        arg_specs = [
+            ("grids0", s0), ("grids1", s1),
+            ("m0", s0), ("m1", s1), ("v0", s0), ("v1", s1),
+            ("step", spec((), jnp.float32)), ("lr", spec((), jnp.float32)),
+            ("x", spec((TRAIN_BATCH, cfg_g.d_in))),
+            ("y", spec((TRAIN_BATCH, cfg_g.d_out))),
+        ]
+        export(model.kan_train_step, arg_specs, f"kan_train_step_g{g}",
+               out_dir, manifest,
+               ["grids0", "grids1", "m0", "m1", "v0", "v1", "loss"],
+               {"kind": "train", "model": "dense_kan", "batch": TRAIN_BATCH,
+                "grid_size": g})
+
+    mspecs = mlp_fwd_specs(mlp, TRAIN_BATCH)
+    w_specs = mspecs[:4]
+    arg_specs = (w_specs
+                 + [(f"m{i}", s) for i, (_, s) in enumerate(w_specs)]
+                 + [(f"v{i}", s) for i, (_, s) in enumerate(w_specs)]
+                 + [("step", spec((), jnp.float32)), ("lr", spec((), jnp.float32)),
+                    ("x", spec((TRAIN_BATCH, mlp.d_in))),
+                    ("y", spec((TRAIN_BATCH, mlp.d_out)))])
+    export(model.mlp_train_step, arg_specs, "mlp_train_step", out_dir, manifest,
+           ["w1", "b1", "w2", "b2", "m0", "m1", "m2", "m3",
+            "v0", "v1", "v2", "v3", "loss"],
+           {"kind": "train", "model": "mlp", "batch": TRAIN_BATCH})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if args.out is not None:
+        # Makefile stamp compatibility: ensure the stamp file exists
+        stamp = args.out
+        if not os.path.exists(stamp):
+            with open(stamp, "w") as f:
+                f.write("see manifest.json\n")
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Model / artifact configuration shared by L1 kernels, L2 models and aot.py.
+
+Mirrors rust/src/kan/spec.rs — keep in sync (the Rust side re-reads these
+values from artifacts/manifest.json, so Python is the single source of truth
+at build time).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class KanConfig:
+    """A KAN prediction head: features -> hidden -> classes, PLI splines."""
+
+    d_in: int = 64
+    d_hidden: int = 128
+    d_out: int = 20
+    grid_size: int = 10  # G: knots per edge on [-1, 1]
+    grid_range: Tuple[float, float] = (-1.0, 1.0)
+
+    @property
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        return [(self.d_in, self.d_hidden), (self.d_hidden, self.d_out)]
+
+    @property
+    def num_edges(self) -> int:
+        return sum(i * o for i, o in self.layer_dims)
+
+    @property
+    def num_params(self) -> int:
+        return self.num_edges * self.grid_size
+
+
+@dataclass(frozen=True)
+class MlpConfig:
+    d_in: int = 64
+    d_hidden: int = 128
+    d_out: int = 20
+
+
+@dataclass(frozen=True)
+class VqConfig:
+    """Gain-Shape-Bias vector quantization settings (SHARe-KAN §4.2)."""
+
+    codebook_size: int = 512  # K at our scale; paper uses 65,536 at 3.2M edges
+    # log-int8 gain quantization: |g| = exp(log_lo + (|q|-1) * step), q==0 -> 0
+    gain_bits: int = 8
+    codebook_bits: int = 8
+
+
+# Batch buckets the dynamic batcher pads to; one HLO artifact per bucket.
+BATCH_BUCKETS = (1, 8, 32, 128)
+
+# Grid-resolution sweep for the resolution-accuracy Pareto (§5.3).
+G_SWEEP = (5, 10, 20)
+
+DEFAULT_KAN = KanConfig()
+DEFAULT_MLP = MlpConfig()
+DEFAULT_VQ = VqConfig()

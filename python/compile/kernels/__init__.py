@@ -1,0 +1,2 @@
+"""L1 kernels: LUTHAM Pallas kernels + pure-jnp reference oracles."""
+from . import lutham, ref  # noqa: F401

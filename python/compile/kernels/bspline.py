@@ -1,0 +1,61 @@
+"""Cubic B-spline evaluation + LUTHAM tabulation (build-time only).
+
+The paper trains cubic B-splines (§A.1, k=3) and serves lookup tables
+(§4.3).  This module is the Python mirror of rust/src/kan/bspline.rs: the
+uniform cubic basis, spline evaluation, and the tabulation pass that turns
+a trained spline into the G-point PLI grid the LUTHAM kernels consume.
+Used by build-time analysis and pinned against the Rust implementation via
+shared test vectors (python/tests/test_bspline.py).
+"""
+
+import jax.numpy as jnp
+
+from . import ref
+
+
+def blend(t):
+    """Uniform cubic B-spline segment blending, t in [0, 1): 4 weights."""
+    t2 = t * t
+    t3 = t2 * t
+    return jnp.stack([
+        (1.0 - t) ** 3 / 6.0,
+        (3.0 * t3 - 6.0 * t2 + 4.0) / 6.0,
+        (-3.0 * t3 + 3.0 * t2 + 3.0 * t + 1.0) / 6.0,
+        t3 / 6.0,
+    ], axis=-1)
+
+
+def eval_spline(coef, u):
+    """Evaluate a uniform cubic B-spline over [-1, 1].
+
+    coef: [..., n_coef] control points (n_coef >= 4); u: [...] points.
+    Returns [...] values (broadcast over leading dims of coef).
+    """
+    n_coef = coef.shape[-1]
+    segs = n_coef - 3
+    pos = (jnp.clip(u, -1.0, 1.0) + 1.0) / 2.0 * segs
+    seg = jnp.clip(jnp.floor(pos), 0, segs - 1).astype(jnp.int32)
+    t = pos - seg
+    b = blend(t)  # [..., 4]
+    idx = seg[..., None] + jnp.arange(4)  # [..., 4]
+    gathered = jnp.take_along_axis(
+        jnp.broadcast_to(coef, t.shape + (n_coef,)), idx, axis=-1
+    )
+    return (b * gathered).sum(-1)
+
+
+def tabulate(coef, g: int):
+    """LUTHAM tabulation: sample the spline at G uniform knots on [-1, 1]."""
+    u = jnp.linspace(-1.0, 1.0, g)
+    return eval_spline(coef, jnp.broadcast_to(u, coef.shape[:-1] + (g,)))
+
+
+def tabulation_error(coef, g: int, probes: int = 512):
+    """Max |spline - PLI(tabulate(spline))| over a dense probe grid."""
+    u = jnp.linspace(-1.0, 1.0, probes)
+    exact = eval_spline(coef, jnp.broadcast_to(u, coef.shape[:-1] + (probes,)))
+    grid = tabulate(coef, g)
+    # PLI evaluation of the tabulated grid at the probes
+    w = ref.hat_basis(u, g)  # [probes, g]
+    approx = jnp.einsum("pg,...g->...p", w, grid)
+    return jnp.abs(exact - approx).max()

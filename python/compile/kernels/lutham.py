@@ -1,0 +1,211 @@
+"""LUTHAM Pallas kernels (L1) — LookUp Table Hardware-Aware Mapping.
+
+The paper's CUDA kernel (§4.3) keeps the per-layer VQ codebook resident in
+the GPU L2 cache and evaluates every edge with one index lookup + linear
+interpolation.  The TPU rethink (DESIGN.md §8):
+
+  * the codebook block is pinned in VMEM by its BlockSpec (index_map returns
+    the same block for every grid step) — VMEM plays the A100's L2;
+  * interpolation-over-G is expressed as a dot product with a piecewise-
+    linear "hat" basis (ref.hat_basis), i.e. a [B,G] x [G] contraction the
+    VPU/MXU executes instead of a random gather along G;
+  * the gather over K (codebook row selection) stays a gather — it is per
+    *edge*, known at weight-load time, and hits VMEM, not HBM.
+
+Kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned to ref.py by python/tests/.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+# ---------------------------------------------------------------------------
+# VQ (SHARe-KAN) layer kernel
+# ---------------------------------------------------------------------------
+
+
+def _vq_kernel(x_ref, cb_ref, idx_ref, gain_ref, bsum_ref, out_ref):
+    """One (batch-tile, nout-tile) block of the VQ KAN layer.
+
+    x_ref    [Bt, Nin]   pre-activations
+    cb_ref   [K, G]      codebook (whole table resident per DESIGN §8)
+    idx_ref  [Nin, Nt]   per-edge codebook indices
+    gain_ref [Nin, Nt]   per-edge gains
+    bsum_ref [1, Nt]     per-output folded bias
+    out_ref  [Bt, Nt]
+
+    Perf formulation (EXPERIMENTS.md §Perf L1): lookup + lerp + gain + sum
+    collapse into ONE matmul — out = hat(u).reshape(Bt, Nin*G) @
+    (gain ⊙ C[idx]).reshape(Nin*G, Nt) — instead of materializing the
+    [Bt, Nin, Nt] interpolation tensor.  On TPU this is a single MXU
+    contraction; on CPU XLA lowers it to one GEMM.
+    """
+    g = cb_ref.shape[1]
+    n_in = x_ref.shape[1]
+    bn = out_ref.shape[1]
+    u = jnp.tanh(x_ref[...])
+    # hat-basis weights: [Bt, Nin, G]; interp == dot(weights, grid values)
+    pos = jnp.clip((u + 1.0) * (g - 1) / 2.0, 0.0, float(g - 1))
+    grid_idx = jax.lax.broadcasted_iota(jnp.float32, (1, 1, g), 2)
+    w = jnp.maximum(0.0, 1.0 - jnp.abs(pos[..., None] - grid_idx))
+    rows = cb_ref[idx_ref[...]]  # [Nin, Nt, G] — VMEM gather
+    scaled = rows * gain_ref[...][:, :, None]  # fold the gain into the rows
+    rhs = scaled.transpose(0, 2, 1).reshape(n_in * g, bn)
+    lhs = w.reshape(-1, n_in * g)
+    out_ref[...] = lhs @ rhs + bsum_ref[0][None, :]
+
+
+def vq_kan_layer(x, codebook, idx, gain, bias_sum, *, block_b=128, block_n=128,
+                 interpret=True):
+    """SHARe-KAN VQ layer via pallas_call.  Shapes as in ref.vq_kan_layer."""
+    b, n_in = x.shape
+    n_out = idx.shape[1]
+    k, g = codebook.shape
+    bb = min(block_b, b)
+    bn = min(block_n, n_out)
+    grid = (pl.cdiv(b, bb), pl.cdiv(n_out, bn))
+    return pl.pallas_call(
+        _vq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i, j: (i, 0)),
+            # codebook: same (whole) block every step -> stays resident
+            pl.BlockSpec((k, g), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        interpret=interpret,
+    )(x, codebook, idx, gain, bias_sum.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# Dense KAN layer kernel (uncompressed baseline path)
+# ---------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, grids_ref, out_ref):
+    """x_ref [Bt, Nin]; grids_ref [Nin, Nt, G]; out_ref [Bt, Nt]."""
+    n_in, bn, g = grids_ref.shape
+    u = jnp.tanh(x_ref[...])
+    pos = jnp.clip((u + 1.0) * (g - 1) / 2.0, 0.0, float(g - 1))
+    grid_idx = jax.lax.broadcasted_iota(jnp.float32, (1, 1, g), 2)
+    w = jnp.maximum(0.0, 1.0 - jnp.abs(pos[..., None] - grid_idx))
+    # single-GEMM formulation (§Perf L1): out = hat(u) @ grids
+    rhs = grids_ref[...].transpose(0, 2, 1).reshape(n_in * g, bn)
+    out_ref[...] = w.reshape(-1, n_in * g) @ rhs
+
+
+def dense_kan_layer(x, grids, *, block_b=128, block_n=128, interpret=True):
+    """Dense KAN layer via pallas_call.  grids: [Nin, Nout, G]."""
+    b, n_in = x.shape
+    n_in2, n_out, g = grids.shape
+    assert n_in == n_in2, (n_in, n_in2)
+    bb = min(block_b, b)
+    bn = min(block_n, n_out)
+    grid = (pl.cdiv(b, bb), pl.cdiv(n_out, bn))
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_in, bn, g), lambda i, j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        interpret=interpret,
+    )(x, grids)
+
+
+# ---------------------------------------------------------------------------
+# Int8 VQ layer: dequantize-in-kernel (zero extra HBM traffic for fp copies)
+# ---------------------------------------------------------------------------
+
+
+def _vq_int8_kernel(x_ref, cbq_ref, idx_ref, gq_ref, bsum_ref, scale_ref, out_ref):
+    """Int8 codebook + log-int8 gains, dequantized inside the kernel.
+
+    cbq_ref [K, G] int8; gq_ref [Nin, Nt] int8;
+    scale_ref [1, 3] = (cb_scale, log_lo, log_step).
+    """
+    g = cbq_ref.shape[1]
+    cb_scale = scale_ref[0, 0]
+    log_lo = scale_ref[0, 1]
+    log_step = scale_ref[0, 2]
+    n_in = x_ref.shape[1]
+    bn = out_ref.shape[1]
+    u = jnp.tanh(x_ref[...])
+    pos = jnp.clip((u + 1.0) * (g - 1) / 2.0, 0.0, float(g - 1))
+    grid_idx = jax.lax.broadcasted_iota(jnp.float32, (1, 1, g), 2)
+    w = jnp.maximum(0.0, 1.0 - jnp.abs(pos[..., None] - grid_idx))
+    rows = cbq_ref[idx_ref[...]].astype(jnp.float32) * cb_scale
+    qf = gq_ref[...].astype(jnp.float32)
+    mag = jnp.exp(log_lo + (jnp.abs(qf) - 1.0) * log_step)
+    gain = jnp.where(qf == 0.0, 0.0, jnp.sign(qf) * mag)
+    # single-GEMM formulation (§Perf L1), dequant fused into the rows
+    scaled = rows * gain[:, :, None]
+    rhs = scaled.transpose(0, 2, 1).reshape(n_in * g, bn)
+    out_ref[...] = w.reshape(-1, n_in * g) @ rhs + bsum_ref[0][None, :]
+
+
+def vq_kan_layer_int8(x, cb_q, cb_scale, idx, gain_q, log_lo, log_step, bias_sum,
+                      *, block_b=128, block_n=128, interpret=True):
+    """Int8 SHARe-KAN layer.  Scalar quantization params are packed into a
+    [1,3] tensor so the kernel signature stays tensor-only."""
+    b, n_in = x.shape
+    n_out = idx.shape[1]
+    k, g = cb_q.shape
+    bb = min(block_b, b)
+    bn = min(block_n, n_out)
+    grid = (pl.cdiv(b, bb), pl.cdiv(n_out, bn))
+    scales = jnp.stack([cb_scale, log_lo, log_step]).reshape(1, 3).astype(jnp.float32)
+    return pl.pallas_call(
+        _vq_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, g), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 3), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        interpret=interpret,
+    )(x, cb_q, idx, gain_q, bias_sum.reshape(1, -1), scales)
+
+
+# ---------------------------------------------------------------------------
+# VMEM footprint / utilization estimate (DESIGN.md §Perf; no wallclock —
+# interpret=True timing is CPU-numpy and never a TPU proxy).
+# ---------------------------------------------------------------------------
+
+
+def vmem_footprint_bytes(*, block_b, block_n, n_in, k, g, int8=False):
+    """Bytes of VMEM a (block_b, block_n) step of the VQ kernel touches."""
+    cb_bytes = k * g * (1 if int8 else 4)
+    x_bytes = block_b * n_in * 4
+    idx_bytes = n_in * block_n * 4
+    gain_bytes = n_in * block_n * (1 if int8 else 4)
+    out_bytes = block_b * block_n * 4
+    # transient: hat weights [Bt, Nin, G] + gathered rows [Nin, Nt, G]
+    scratch = block_b * n_in * g * 4 + n_in * block_n * g * 4
+    return cb_bytes + x_bytes + idx_bytes + gain_bytes + out_bytes + scratch
+
+
+@functools.lru_cache(maxsize=None)
+def describe_blocking(n_in=64, n_out=128, k=512, g=10, block_b=128, block_n=128):
+    """Human-readable VMEM budget line used by aot.py --report."""
+    fp = vmem_footprint_bytes(block_b=block_b, block_n=block_n, n_in=n_in,
+                              k=k, g=g)
+    return (f"vq block ({block_b}x{block_n}) nin={n_in} K={k} G={g}: "
+            f"{fp / 1024:.1f} KiB VMEM (budget 16 MiB)")

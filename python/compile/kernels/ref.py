@@ -1,0 +1,118 @@
+"""Pure-jnp correctness oracles for the LUTHAM kernels.
+
+These are the ground truth the Pallas kernels (lutham.py) are tested against
+(python/tests/test_kernel.py). They implement the paper's Eq. (2)/(5):
+
+    phi_ij(x) = g_ij * LinearInterp(C[k_ij], x) + b_ij
+    y_j       = sum_i phi_ij(x_i)
+
+Inputs are squashed with tanh so they land in the grid range [-1, 1]; the
+spline grid holds G values at uniform knots and evaluation is a single index
+computation + linear interpolation (O(1) per edge, independent of G — the
+"iso-latent scaling" property of §4.1).
+"""
+
+import jax.numpy as jnp
+
+
+def squash(x):
+    """Map pre-activations into the grid range (-1, 1)."""
+    return jnp.tanh(x)
+
+
+def pli_positions(u, grid_size: int):
+    """Fractional grid positions for squashed inputs u in [-1, 1].
+
+    Returns (i0, frac) with i0 in [0, G-2] and frac in [0, 1] such that the
+    interpolated value is (1-frac)*c[i0] + frac*c[i0+1].
+    """
+    g = grid_size
+    pos = (u + 1.0) * (g - 1) / 2.0
+    pos = jnp.clip(pos, 0.0, float(g - 1))
+    i0 = jnp.clip(jnp.floor(pos), 0, g - 2).astype(jnp.int32)
+    frac = pos - i0.astype(pos.dtype)
+    return i0, frac
+
+
+def hat_basis(u, grid_size: int):
+    """Piecewise-linear 'hat' basis weights, shape [..., G].
+
+    w[..., g] = max(0, 1 - |pos - g|).  Interpolation becomes a dot product
+    with the grid values — the MXU-friendly formulation used by the Pallas
+    kernel (DESIGN.md §8: gather-over-G replaced by a small matmul).
+    """
+    g = grid_size
+    pos = (u + 1.0) * (g - 1) / 2.0
+    pos = jnp.clip(pos, 0.0, float(g - 1))
+    idx = jnp.arange(g, dtype=pos.dtype)
+    return jnp.maximum(0.0, 1.0 - jnp.abs(pos[..., None] - idx))
+
+
+def dense_kan_layer(x, grids):
+    """Dense KAN layer forward (reference).
+
+    x: [B, Nin] pre-activations; grids: [Nin, Nout, G] per-edge spline values.
+    Returns [B, Nout].
+    """
+    n_in, n_out, g = grids.shape
+    u = squash(x)
+    i0, frac = pli_positions(u, g)  # [B, Nin]
+    # gather lo/hi grid values for every (batch, edge)
+    lo = jnp.take_along_axis(
+        grids[None], i0[:, :, None, None].repeat(n_out, axis=2), axis=3
+    )[..., 0]  # [B, Nin, Nout]
+    hi = jnp.take_along_axis(
+        grids[None],
+        jnp.minimum(i0 + 1, g - 1)[:, :, None, None].repeat(n_out, axis=2),
+        axis=3,
+    )[..., 0]
+    phi = (1.0 - frac)[:, :, None] * lo + frac[:, :, None] * hi
+    return phi.sum(axis=1)
+
+
+def vq_kan_layer(x, codebook, idx, gain, bias_sum):
+    """VQ (SHARe-KAN) layer forward (reference).
+
+    codebook: [K, G]; idx: [Nin, Nout] int32; gain: [Nin, Nout];
+    bias_sum: [Nout] (per-edge biases fold into a per-output constant because
+    the layer sums contributions over i — computed at compression time).
+    """
+    rows = codebook[idx]  # [Nin, Nout, G]
+    n_out = idx.shape[1]
+    u = squash(x)
+    g = codebook.shape[1]
+    i0, frac = pli_positions(u, g)
+    lo = jnp.take_along_axis(
+        rows[None], i0[:, :, None, None].repeat(n_out, axis=2), axis=3
+    )[..., 0]
+    hi = jnp.take_along_axis(
+        rows[None],
+        jnp.minimum(i0 + 1, g - 1)[:, :, None, None].repeat(n_out, axis=2),
+        axis=3,
+    )[..., 0]
+    interp = (1.0 - frac)[:, :, None] * lo + frac[:, :, None] * hi
+    return (gain[None] * interp).sum(axis=1) + bias_sum[None, :]
+
+
+def dequant_codebook_int8(cb_q, cb_scale):
+    """Linear symmetric Int8 codebook dequantization: c = q * scale."""
+    return cb_q.astype(jnp.float32) * cb_scale
+
+
+def dequant_gain_log_int8(q, log_lo, log_step):
+    """Logarithmic Int8 gain dequantization (paper §4.2 / §5.6).
+
+    q in [-127, 127] int8; |g| = exp(log_lo + (|q|-1) * log_step), sign(g) =
+    sign(q); q == 0 -> g = 0.  High dynamic range, coarse at the extremes —
+    the outlier-sensitivity mechanism behind Table 2's Int8 OOD drop.
+    """
+    qf = q.astype(jnp.float32)
+    mag = jnp.exp(log_lo + (jnp.abs(qf) - 1.0) * log_step)
+    return jnp.where(qf == 0.0, 0.0, jnp.sign(qf) * mag)
+
+
+def vq_kan_layer_int8(x, cb_q, cb_scale, idx, gain_q, log_lo, log_step, bias_sum):
+    """Int8 VQ layer: dequantize in-graph, then the fp32 VQ forward."""
+    codebook = dequant_codebook_int8(cb_q, cb_scale)
+    gain = dequant_gain_log_int8(gain_q, log_lo, log_step)
+    return vq_kan_layer(x, codebook, idx, gain, bias_sum)

@@ -1,0 +1,159 @@
+"""L2: JAX model definitions (forward + train step), calling L1 kernels.
+
+Models
+------
+* ``dense_kan_fwd``   — uncompressed KAN head (Pallas dense_kan_layer).
+* ``vq_kan_fwd``      — SHARe-KAN fp32 VQ head (Pallas vq_kan_layer).
+* ``vq_kan_int8_fwd`` — SHARe-KAN Int8 head (dequant-in-kernel).
+* ``mlp_fwd``         — ResNet-50-MLP-head baseline (Table 1 row 1).
+* ``*_train_step``    — AdamW single step (fwd+bwd), driven from Rust so the
+  training loop itself is on the L3 side (DESIGN.md §2).
+
+Everything here is lowered ONCE by aot.py to HLO text; Python never runs at
+serve time.  Training uses the differentiable *reference* layer (gathers have
+clean VJPs); inference artifacts use the Pallas kernels so the LUTHAM kernel
+is what actually lowers into the serving HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import KanConfig, MlpConfig
+from .kernels import lutham, ref
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def dense_kan_fwd(grids0, grids1, x, *, use_pallas=True):
+    """Dense KAN head: x [B, d_in] -> logits [B, d_out].
+
+    grids0: [d_in, d_hidden, G]; grids1: [d_hidden, d_out, G].
+    """
+    layer = lutham.dense_kan_layer if use_pallas else ref.dense_kan_layer
+    h = layer(x, grids0)
+    return layer(h, grids1)
+
+
+def vq_kan_fwd(cb0, idx0, g0, bs0, cb1, idx1, g1, bs1, x, *, use_pallas=True):
+    """SHARe-KAN fp32 head.  Per-layer codebooks (paper §4.2: learned
+    independently per layer to capture depth-varying frequency content)."""
+    layer = lutham.vq_kan_layer if use_pallas else ref.vq_kan_layer
+    h = layer(x, cb0, idx0, g0, bs0)
+    return layer(h, cb1, idx1, g1, bs1)
+
+
+def vq_kan_int8_fwd(cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales, x,
+                    *, use_pallas=True):
+    """SHARe-KAN Int8 head.
+
+    scales: [2, 3] fp32 — row l = (cb_scale_l, log_lo_l, log_step_l).
+    """
+    layer = lutham.vq_kan_layer_int8 if use_pallas else ref.vq_kan_layer_int8
+    h = layer(x, cbq0, scales[0, 0], idx0, gq0, scales[0, 1], scales[0, 2], bs0)
+    return layer(h, cbq1, scales[1, 0], idx1, gq1, scales[1, 1], scales[1, 2], bs1)
+
+
+def mlp_fwd(w1, b1, w2, b2, x):
+    """MLP baseline head (ReLU), matching Table 1's ResNet-50 MLP row."""
+    h = jax.nn.relu(x @ w1 + b1[None, :])
+    return h @ w2 + b2[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Loss: multi-label sigmoid BCE (detection-head classification proxy)
+# ---------------------------------------------------------------------------
+
+
+def bce_loss(logits, y):
+    """Mean sigmoid binary cross-entropy over [B, classes] multi-label y."""
+    z = logits
+    # numerically stable log-sigmoid formulation
+    per = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return per.mean()
+
+
+# ---------------------------------------------------------------------------
+# AdamW (hand-rolled; optax not available in the image)
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 1e-4
+
+
+def adamw_update(p, grad, m, v, step, lr):
+    """One AdamW update for a single tensor.  step is 1-based float32."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    m_hat = m / (1.0 - ADAM_B1 ** step)
+    v_hat = v / (1.0 - ADAM_B2 ** step)
+    p = p - lr * (m_hat / (jnp.sqrt(v_hat) + ADAM_EPS) + WEIGHT_DECAY * p)
+    return p, m, v
+
+
+def _train_step(fwd, params, ms, vs, step, lr, x, y):
+    """Generic AdamW step over a tuple of parameter tensors."""
+
+    def loss_fn(ps):
+        return bce_loss(fwd(*ps, x), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = [adamw_update(p, g, m, v, step, lr)
+           for p, g, m, v in zip(params, grads, ms, vs)]
+    ps, ms2, vs2 = zip(*new)
+    return (*ps, *ms2, *vs2, loss)
+
+
+def kan_train_step(grids0, grids1, m0, m1, v0, v1, step, lr, x, y):
+    """Dense-KAN AdamW step.  Positional signature == HLO parameter order.
+
+    Returns (grids0', grids1', m0', m1', v0', v1', loss).
+    Uses the reference layer: training is build/offline-path, and the gather
+    formulation has the cleaner VJP.
+    """
+    fwd = lambda g0, g1, xx: dense_kan_fwd(g0, g1, xx, use_pallas=False)
+    return _train_step(fwd, (grids0, grids1), (m0, m1), (v0, v1), step, lr, x, y)
+
+
+def mlp_train_step(w1, b1, w2, b2, m1_, m2_, m3_, m4_, v1_, v2_, v3_, v4_,
+                   step, lr, x, y):
+    """MLP AdamW step: returns (w1',b1',w2',b2', m..., v..., loss)."""
+    return _train_step(mlp_fwd, (w1, b1, w2, b2), (m1_, m2_, m3_, m4_),
+                       (v1_, v2_, v3_, v4_), step, lr, x, y)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (mirrored by rust/src/train so Rust can also
+# initialize; kept here for python-side tests)
+# ---------------------------------------------------------------------------
+
+
+def init_kan_params(key, cfg: KanConfig, sigma: float = 0.02):
+    """Linear-start init (mirrors rust/src/train): each spline begins as a
+    random linear ramp a*t + noise so the layer initially acts like a dense
+    linear map.  (Paper §A.1 uses pure Gaussian sigma=0.1; pure-noise grids
+    fail to converge at high G within the training budget — see DESIGN.md.)
+    """
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    t = jnp.linspace(-1.0, 1.0, cfg.grid_size)
+
+    def layer(ka, kn, n_in, n_out):
+        a = jax.random.normal(ka, (n_in, n_out, 1)) / jnp.sqrt(n_in)
+        noise = sigma * jax.random.normal(kn, (n_in, n_out, cfg.grid_size))
+        return (a * t[None, None, :] + noise).astype(jnp.float32)
+
+    return (layer(k0, k1, cfg.d_in, cfg.d_hidden),
+            layer(k2, k3, cfg.d_hidden, cfg.d_out))
+
+
+def init_mlp_params(key, cfg: MlpConfig):
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / cfg.d_in) ** 0.5
+    s2 = (2.0 / cfg.d_hidden) ** 0.5
+    w1 = s1 * jax.random.normal(k1, (cfg.d_in, cfg.d_hidden))
+    w2 = s2 * jax.random.normal(k2, (cfg.d_hidden, cfg.d_out))
+    return (w1.astype(jnp.float32), jnp.zeros((cfg.d_hidden,), jnp.float32),
+            w2.astype(jnp.float32), jnp.zeros((cfg.d_out,), jnp.float32))

@@ -1,0 +1,75 @@
+"""Cubic B-spline + tabulation tests, incl. cross-language pin vectors
+matching rust/src/kan/bspline.rs."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bspline
+
+
+def test_constant_spline():
+    coef = jnp.full((8,), 2.5)
+    u = jnp.linspace(-1.0, 1.0, 41)
+    v = bspline.eval_spline(coef, u)
+    np.testing.assert_allclose(np.asarray(v), 2.5, rtol=1e-5)
+
+
+def test_blend_partition_of_unity():
+    t = jnp.linspace(0.0, 0.999, 37)
+    b = bspline.blend(t)
+    np.testing.assert_allclose(np.asarray(b.sum(-1)), 1.0, rtol=1e-6)
+    assert float(b.min()) >= 0.0
+
+
+def test_tabulation_error_decreases():
+    rng = np.random.default_rng(2)
+    coef = jnp.asarray(rng.normal(size=(10,)), jnp.float32)
+    e4 = float(bspline.tabulation_error(coef, 4))
+    e16 = float(bspline.tabulation_error(coef, 16))
+    e64 = float(bspline.tabulation_error(coef, 64))
+    assert e16 < e4
+    assert e64 < e16
+    assert e64 < 0.02
+
+
+def test_matches_rust_pin_vectors():
+    """Pin vectors shared with rust/src/kan/bspline.rs: coef = [0..8] ramp.
+
+    A linear ramp of control points yields (in the interior) the linear
+    function itself under the cubic basis; check midpoints exactly.
+    """
+    coef = jnp.arange(9, dtype=jnp.float32)
+    # interior evaluation at u=0 -> position 3 segments in -> value 4.0
+    v = float(bspline.eval_spline(coef, jnp.asarray(0.0)))
+    assert abs(v - 4.0) < 1e-5, v
+    v = float(bspline.eval_spline(coef, jnp.asarray(-1.0)))
+    assert abs(v - 1.0) < 1e-5, v  # B-spline does not interpolate the ends
+    v = float(bspline.eval_spline(coef, jnp.asarray(1.0)))
+    assert abs(v - 7.0) < 1e-5, v
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 16))
+@settings(max_examples=20, deadline=None)
+def test_tabulated_grid_hits_spline_at_knots(seed, n_coef):
+    rng = np.random.default_rng(seed)
+    coef = jnp.asarray(rng.normal(size=(n_coef,)), jnp.float32)
+    g = 12
+    grid = bspline.tabulate(coef, g)
+    u = jnp.linspace(-1.0, 1.0, g)
+    exact = bspline.eval_spline(coef, u)
+    np.testing.assert_allclose(np.asarray(grid), np.asarray(exact),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_batched_eval_matches_loop(seed):
+    rng = np.random.default_rng(seed)
+    coef = jnp.asarray(rng.normal(size=(3, 7)), jnp.float32)  # 3 splines
+    u = jnp.asarray(rng.uniform(-1, 1, size=(3, 5)), jnp.float32)
+    batched = bspline.eval_spline(coef[:, None, :].repeat(5, 1), u)
+    for i in range(3):
+        for j in range(5):
+            single = float(bspline.eval_spline(coef[i], u[i, j]))
+            assert abs(float(batched[i, j]) - single) < 1e-5

@@ -1,0 +1,99 @@
+"""Hypothesis property sweeps over the Pallas kernel's shapes/values.
+
+Required by the repro spec: hypothesis sweeps shapes/dtypes and
+assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lutham, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def vq_problem(draw):
+    b = draw(st.integers(1, 9))
+    n_in = draw(st.integers(1, 16))
+    n_out = draw(st.integers(1, 16))
+    k = draw(st.integers(1, 32))
+    g = draw(st.integers(2, 16))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    x = (scale * rng.normal(size=(b, n_in))).astype(np.float32)
+    cb = rng.normal(size=(k, g)).astype(np.float32)
+    idx = rng.integers(0, k, size=(n_in, n_out)).astype(np.int32)
+    gain = rng.normal(size=(n_in, n_out)).astype(np.float32)
+    bsum = rng.normal(size=(n_out,)).astype(np.float32)
+    bb = draw(st.sampled_from([1, 2, 4, 64]))
+    bn = draw(st.sampled_from([1, 3, 8, 64]))
+    return x, cb, idx, gain, bsum, bb, bn
+
+
+@given(vq_problem())
+@settings(**SETTINGS)
+def test_vq_kernel_property(problem):
+    x, cb, idx, gain, bsum, bb, bn = problem
+    want = ref.vq_kan_layer(jnp.asarray(x), jnp.asarray(cb), jnp.asarray(idx),
+                            jnp.asarray(gain), jnp.asarray(bsum))
+    got = lutham.vq_kan_layer(jnp.asarray(x), jnp.asarray(cb), jnp.asarray(idx),
+                              jnp.asarray(gain), jnp.asarray(bsum),
+                              block_b=bb, block_n=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+@st.composite
+def dense_problem(draw):
+    b = draw(st.integers(1, 8))
+    n_in = draw(st.integers(1, 12))
+    n_out = draw(st.integers(1, 12))
+    g = draw(st.integers(2, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, n_in)).astype(np.float32)
+    grids = rng.normal(size=(n_in, n_out, g)).astype(np.float32)
+    return x, grids
+
+
+@given(dense_problem())
+@settings(**SETTINGS)
+def test_dense_kernel_property(problem):
+    x, grids = problem
+    want = ref.dense_kan_layer(jnp.asarray(x), jnp.asarray(grids))
+    got = lutham.dense_kan_layer(jnp.asarray(x), jnp.asarray(grids),
+                                 block_b=4, block_n=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(2, 64), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_hat_basis_partition_of_unity_property(g, seed):
+    rng = np.random.default_rng(seed)
+    u = np.clip(rng.normal(size=(37,)), -0.999, 0.999).astype(np.float32)
+    w = ref.hat_basis(jnp.asarray(u), g)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-4, atol=1e-4)
+    assert float(w.min()) >= 0.0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_log_int8_roundtrip_monotonic(seed):
+    """Dequantized magnitudes must be monotone in |q| and sign-correct."""
+    rng = np.random.default_rng(seed)
+    lo = float(rng.uniform(-10, -2))
+    step = float(rng.uniform(0.01, 0.2))
+    q = np.arange(-127, 128, dtype=np.int8)
+    g = np.asarray(ref.dequant_gain_log_int8(jnp.asarray(q), jnp.float32(lo),
+                                             jnp.float32(step)))
+    assert g[127] == 0.0  # q == 0 entry
+    pos = g[128:]  # q = 1..127
+    assert (np.diff(pos) > 0).all()
+    neg = g[:127]  # q = -127..-1
+    assert (np.diff(neg) > 0).all()
+    np.testing.assert_allclose(-g[:127][::-1], g[128:], rtol=1e-6)

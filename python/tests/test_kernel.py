@@ -1,0 +1,152 @@
+"""Pallas LUTHAM kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Every kernel in compile/kernels/lutham.py must agree with its ref.py oracle
+to float32 tolerance across shapes, block sizes and input ranges.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import lutham, ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def make_vq(rng, b, n_in, n_out, k, g):
+    x = jnp.asarray(rng.normal(size=(b, n_in)), jnp.float32)
+    cb = jnp.asarray(rng.normal(size=(k, g)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, k, size=(n_in, n_out)), jnp.int32)
+    gain = jnp.asarray(rng.normal(size=(n_in, n_out)), jnp.float32)
+    bsum = jnp.asarray(rng.normal(size=(n_out,)), jnp.float32)
+    return x, cb, idx, gain, bsum
+
+
+@pytest.mark.parametrize("b,n_in,n_out,k,g", [
+    (1, 4, 4, 8, 5),
+    (3, 16, 24, 32, 10),
+    (8, 64, 128, 512, 10),
+    (5, 7, 13, 17, 3),     # odd sizes exercise block-edge padding
+    (2, 2, 2, 2, 2),       # minimal grid
+])
+def test_vq_kernel_matches_ref(b, n_in, n_out, k, g):
+    rng = np.random.default_rng(42 + b)
+    x, cb, idx, gain, bsum = make_vq(rng, b, n_in, n_out, k, g)
+    want = ref.vq_kan_layer(x, cb, idx, gain, bsum)
+    got = lutham.vq_kan_layer(x, cb, idx, gain, bsum, block_b=4, block_n=8)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_b,block_n", [(1, 1), (2, 8), (32, 64), (100, 200)])
+def test_vq_kernel_block_size_invariance(block_b, block_n):
+    rng = np.random.default_rng(7)
+    x, cb, idx, gain, bsum = make_vq(rng, 9, 12, 20, 16, 10)
+    want = ref.vq_kan_layer(x, cb, idx, gain, bsum)
+    got = lutham.vq_kan_layer(x, cb, idx, gain, bsum,
+                              block_b=block_b, block_n=block_n)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_vq_kernel_extreme_inputs():
+    """tanh saturation: inputs at +-50 must clamp to the grid ends, not NaN."""
+    rng = np.random.default_rng(3)
+    x, cb, idx, gain, bsum = make_vq(rng, 4, 8, 8, 16, 10)
+    x = jnp.asarray([[-50.0] * 8, [50.0] * 8, [0.0] * 8, [1e-8] * 8], jnp.float32)
+    want = ref.vq_kan_layer(x, cb, idx, gain, bsum)
+    got = lutham.vq_kan_layer(x, cb, idx, gain, bsum, block_b=2, block_n=4)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_vq_kernel_knot_exact():
+    """At exact knot positions the interpolation must return the grid value."""
+    g = 5
+    k = 4
+    cb = jnp.asarray(np.random.default_rng(0).normal(size=(k, g)), jnp.float32)
+    n_in, n_out = 1, 1
+    idx = jnp.zeros((n_in, n_out), jnp.int32) + 2
+    gain = jnp.ones((n_in, n_out), jnp.float32)
+    bsum = jnp.zeros((n_out,), jnp.float32)
+    knots = np.linspace(-1.0, 1.0, g)[1:-1]  # interior knots (tanh can't hit +-1)
+    x = jnp.asarray(np.arctanh(knots)[:, None], jnp.float32)
+    got = lutham.vq_kan_layer(x, cb, idx, gain, bsum, block_b=4, block_n=4)
+    np.testing.assert_allclose(got[:, 0], np.asarray(cb)[2, 1:-1], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,n_in,n_out,g", [
+    (1, 4, 4, 5),
+    (6, 16, 24, 10),
+    (8, 64, 128, 10),
+    (5, 7, 13, 3),
+])
+def test_dense_kernel_matches_ref(b, n_in, n_out, g):
+    rng = np.random.default_rng(b)
+    x = jnp.asarray(rng.normal(size=(b, n_in)), jnp.float32)
+    grids = jnp.asarray(rng.normal(size=(n_in, n_out, g)), jnp.float32)
+    want = ref.dense_kan_layer(x, grids)
+    got = lutham.dense_kan_layer(x, grids, block_b=4, block_n=8)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,n_in,n_out,k,g", [
+    (3, 8, 12, 16, 10),
+    (8, 64, 128, 512, 10),
+    (1, 2, 2, 2, 2),
+])
+def test_int8_kernel_matches_ref(b, n_in, n_out, k, g):
+    rng = np.random.default_rng(100 + b)
+    x = jnp.asarray(rng.normal(size=(b, n_in)), jnp.float32)
+    cbq = jnp.asarray(rng.integers(-127, 128, size=(k, g)), jnp.int8)
+    idx = jnp.asarray(rng.integers(0, k, size=(n_in, n_out)), jnp.int32)
+    gq = jnp.asarray(rng.integers(-127, 128, size=(n_in, n_out)), jnp.int8)
+    bsum = jnp.asarray(rng.normal(size=(n_out,)), jnp.float32)
+    sc, lo, st = jnp.float32(0.02), jnp.float32(-6.0), jnp.float32(0.06)
+    want = ref.vq_kan_layer_int8(x, cbq, sc, idx, gq, lo, st, bsum)
+    got = lutham.vq_kan_layer_int8(x, cbq, sc, idx, gq, lo, st, bsum,
+                                   block_b=4, block_n=8)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_int8_gain_zero_maps_to_zero():
+    """log-int8 q == 0 must decode to exactly 0 (paper's signed-log scheme)."""
+    g = ref.dequant_gain_log_int8(jnp.zeros((3, 3), jnp.int8),
+                                  jnp.float32(-5.0), jnp.float32(0.05))
+    assert float(jnp.abs(g).max()) == 0.0
+
+
+def test_hat_basis_partition_of_unity():
+    """Hat weights sum to 1 everywhere in range — interpolation is affine."""
+    u = jnp.linspace(-0.999, 0.999, 101)
+    w = ref.hat_basis(u, 10)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5, atol=1e-5)
+
+
+def test_vq_equals_dense_when_codebook_is_rows():
+    """VQ with a codebook holding every (normalized) row reproduces dense."""
+    rng = np.random.default_rng(5)
+    n_in, n_out, g, b = 6, 10, 7, 4
+    grids = rng.normal(size=(n_in, n_out, g)).astype(np.float32)
+    # decompose: b_ij = mean, g_ij = std, shape = normalized row
+    mean = grids.mean(-1, keepdims=True)
+    std = grids.std(-1, keepdims=True) + 1e-12
+    shapes = ((grids - mean) / std).reshape(-1, g)
+    cb = jnp.asarray(shapes, jnp.float32)
+    idx = jnp.arange(n_in * n_out, dtype=jnp.int32).reshape(n_in, n_out)
+    gain = jnp.asarray(std[..., 0], jnp.float32)
+    bias = mean[..., 0]
+    bsum = jnp.asarray(bias.sum(0), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, n_in)), jnp.float32)
+    want = ref.dense_kan_layer(x, jnp.asarray(grids))
+    got = lutham.vq_kan_layer(x, cb, idx, gain, bsum, block_b=2, block_n=4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_within_budget():
+    """Default blocking must fit comfortably in a 16 MiB VMEM budget."""
+    fp = lutham.vmem_footprint_bytes(block_b=32, block_n=64, n_in=64,
+                                     k=512, g=10)
+    assert fp < 4 * 1024 * 1024, fp
+    # paper-scale codebook (K=65536, int8) still fits
+    fp8 = lutham.vmem_footprint_bytes(block_b=8, block_n=32, n_in=64,
+                                      k=65536, g=10, int8=True)
+    assert fp8 < 16 * 1024 * 1024, fp8

@@ -1,0 +1,150 @@
+"""L2 model tests: shapes, training dynamics, VQ reconstruction identity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.config import KanConfig, MlpConfig
+
+CFG = KanConfig(d_in=8, d_hidden=12, d_out=5, grid_size=6)
+MCFG = MlpConfig(d_in=8, d_hidden=12, d_out=5)
+
+
+def test_dense_kan_fwd_shape():
+    key = jax.random.PRNGKey(0)
+    g0, g1 = model.init_kan_params(key, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, CFG.d_in))
+    out = model.dense_kan_fwd(g0, g1, x, use_pallas=False)
+    assert out.shape == (7, CFG.d_out)
+    out_pallas = model.dense_kan_fwd(g0, g1, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_pallas),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_fwd_shape():
+    params = model.init_mlp_params(jax.random.PRNGKey(0), MCFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, MCFG.d_in))
+    out = model.mlp_fwd(*params, x)
+    assert out.shape == (3, MCFG.d_out)
+
+
+def test_bce_loss_bounds():
+    logits = jnp.zeros((4, 5))
+    y = jnp.zeros((4, 5))
+    loss = model.bce_loss(logits, y)
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-6)
+    # perfect confident prediction -> loss ~ 0
+    big = 50.0 * (2.0 * y - 1.0)
+    assert float(model.bce_loss(big, y)) < 1e-6 + 1e-3
+
+
+def _run_steps(step_fn, params, x, y, n, lr=1e-2):
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    losses = []
+    for t in range(1, n + 1):
+        out = step_fn(*params, *ms, *vs, jnp.float32(t), jnp.float32(lr), x, y)
+        k = len(params)
+        params = out[:k]
+        ms = out[k:2 * k]
+        vs = out[2 * k:3 * k]
+        losses.append(float(out[-1]))
+    return params, losses
+
+
+def test_kan_train_step_reduces_loss():
+    key = jax.random.PRNGKey(0)
+    g0, g1 = model.init_kan_params(key, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, CFG.d_in))
+    y = (jax.random.uniform(jax.random.PRNGKey(2), (16, CFG.d_out)) > 0.5
+         ).astype(jnp.float32)
+    step = jax.jit(model.kan_train_step)
+    _, losses = _run_steps(step, (g0, g1), x, y, 30)
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_mlp_train_step_reduces_loss():
+    params = model.init_mlp_params(jax.random.PRNGKey(0), MCFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, MCFG.d_in))
+    y = (jax.random.uniform(jax.random.PRNGKey(2), (16, MCFG.d_out)) > 0.5
+         ).astype(jnp.float32)
+    step = jax.jit(model.mlp_train_step)
+    _, losses = _run_steps(step, params, x, y, 30)
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    """With zero gradient signal, AdamW decay shrinks parameters."""
+    p = jnp.ones((4,))
+    m = jnp.zeros((4,))
+    v = jnp.zeros((4,))
+    for t in range(1, 200):
+        p, m, v = model.adamw_update(p, jnp.zeros((4,)), m, v,
+                                     jnp.float32(t), 0.1)
+    assert float(jnp.abs(p).max()) < 1.0
+
+
+def test_vq_fwd_exact_when_perfect_codebook():
+    """Gain-Shape-Bias with one codeword per distinct shape == dense fwd."""
+    key = jax.random.PRNGKey(0)
+    g0, g1 = model.init_kan_params(key, CFG)
+
+    def decompose(grids):
+        g = np.asarray(grids)
+        mean = g.mean(-1, keepdims=True)
+        std = g.std(-1, keepdims=True) + 1e-12
+        shapes = ((g - mean) / std).reshape(-1, g.shape[-1])
+        idx = np.arange(shapes.shape[0], dtype=np.int32).reshape(g.shape[:2])
+        return (jnp.asarray(shapes), jnp.asarray(idx),
+                jnp.asarray(std[..., 0]), jnp.asarray(mean[..., 0].sum(0)))
+
+    cb0, idx0, gain0, bs0 = decompose(g0)
+    cb1, idx1, gain1, bs1 = decompose(g1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, CFG.d_in))
+    want = model.dense_kan_fwd(g0, g1, x, use_pallas=False)
+    got = model.vq_kan_fwd(cb0, idx0, gain0, bs0, cb1, idx1, gain1, bs1, x,
+                           use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_int8_fwd_matches_manual_dequant():
+    rng = np.random.default_rng(0)
+    k, g = 16, CFG.grid_size
+    cbq0 = jnp.asarray(rng.integers(-127, 128, (k, g)), jnp.int8)
+    cbq1 = jnp.asarray(rng.integers(-127, 128, (k, g)), jnp.int8)
+    idx0 = jnp.asarray(rng.integers(0, k, (CFG.d_in, CFG.d_hidden)), jnp.int32)
+    idx1 = jnp.asarray(rng.integers(0, k, (CFG.d_hidden, CFG.d_out)), jnp.int32)
+    gq0 = jnp.asarray(rng.integers(-127, 128, (CFG.d_in, CFG.d_hidden)), jnp.int8)
+    gq1 = jnp.asarray(rng.integers(-127, 128, (CFG.d_hidden, CFG.d_out)), jnp.int8)
+    bs0 = jnp.asarray(rng.normal(size=(CFG.d_hidden,)), jnp.float32)
+    bs1 = jnp.asarray(rng.normal(size=(CFG.d_out,)), jnp.float32)
+    scales = jnp.asarray([[0.01, -5.0, 0.05], [0.02, -4.0, 0.04]], jnp.float32)
+    x = jnp.asarray(rng.normal(size=(3, CFG.d_in)), jnp.float32)
+    got = model.vq_kan_int8_fwd(cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1,
+                                scales, x, use_pallas=False)
+    from compile.kernels import ref
+    cb0 = ref.dequant_codebook_int8(cbq0, scales[0, 0])
+    g0 = ref.dequant_gain_log_int8(gq0, scales[0, 1], scales[0, 2])
+    cb1 = ref.dequant_codebook_int8(cbq1, scales[1, 0])
+    g1 = ref.dequant_gain_log_int8(gq1, scales[1, 1], scales[1, 2])
+    want = model.vq_kan_fwd(cb0, idx0, g0, bs0, cb1, idx1, g1, bs1, x,
+                            use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grad_flows_through_dense_layer():
+    key = jax.random.PRNGKey(0)
+    g0, g1 = model.init_kan_params(key, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, CFG.d_in))
+    y = jnp.ones((4, CFG.d_out)) * 0.5
+
+    def loss(g0_):
+        return model.bce_loss(model.dense_kan_fwd(g0_, g1, x, use_pallas=False), y)
+
+    grad = jax.grad(loss)(g0)
+    assert float(jnp.abs(grad).max()) > 0.0
+    assert np.isfinite(np.asarray(grad)).all()

@@ -1,0 +1,123 @@
+//! `repro` — regenerate every table and figure in the paper's evaluation.
+//!
+//! Usage:
+//!   repro <experiment> [--artifacts DIR] [--quick] [--seed N] [--steps N]
+//!
+//! Experiments (DESIGN.md §5 index):
+//!   fig1       pruning cliff (KAN vs MLP mAP under magnitude pruning)
+//!   spectral   §3.2 SVD of the edge-grid matrix
+//!   table1     main results: size / mAP / compression ratio (+ Figure 2)
+//!   fig3       R² vs codebook size K (VQ saturation)
+//!   table3     codebook-size ablation (same sweep, table form)
+//!   table2     zero-shot COCO-shift transfer + error decomposition
+//!   pareto     §5.3 grid-resolution sweep (G = 5/10/20)
+//!   bandwidth  §5.5 memsim cache residency + measured serving throughput
+//!   isolatent  §4.1 DRAM traffic vs G
+//!   l21        Appendix B group-l21 shrinkage analysis
+//!   all        everything above, in order
+//!
+//! Reports are printed and mirrored to reports/<name>.txt.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use share_kan::experiments::{self, ExpConfig, Workbench};
+use share_kan::report;
+use share_kan::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if args.positional.is_empty() || args.flag("help") {
+        println!("{}", USAGE);
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "repro <fig1|spectral|table1|fig3|table3|table2|pareto|bandwidth|isolatent|universal|latency|l21|all> \
+[--artifacts DIR] [--quick] [--seed N] [--steps N]";
+
+fn run(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or(
+        "artifacts",
+        share_kan::runtime::default_artifacts_dir().to_str().unwrap(),
+    ));
+    let mut cfg = if args.flag("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.train_steps = args.get_usize("steps", cfg.train_steps);
+    let wb = Workbench::new(&artifacts, cfg)?;
+
+    let which = args.positional[0].as_str();
+    let all = which == "all";
+    let mut ran = false;
+
+    let mut emit = |name: &str, content: String| {
+        println!("{content}");
+        if let Err(e) = report::save(&format!("{name}.txt"), &content) {
+            eprintln!("(could not save reports/{name}.txt: {e})");
+        }
+        ran = true;
+    };
+
+    if all || which == "fig1" {
+        let sparsities = [0.0, 0.02, 0.05, 0.10, 0.20, 0.30, 0.50, 0.70, 0.90];
+        let pts = experiments::pruning_cliff::run(&wb, &sparsities)?;
+        let base = wb.base_rate(&experiments::SplitSel::Test);
+        emit("fig1_pruning_cliff", experiments::pruning_cliff::render(&pts, base));
+    }
+    if all || which == "spectral" {
+        let r = experiments::spectral_evidence::run(&wb)?;
+        emit("spectral_evidence", experiments::spectral_evidence::render(&r));
+    }
+    if all || which == "table1" || which == "fig2" {
+        let r = experiments::main_results::run(&wb)?;
+        emit("table1_main_results", experiments::main_results::render(&r, &wb));
+    }
+    if all || which == "fig3" || which == "table3" {
+        let ks = [16usize, 64, 128, 256, 512, 1024, 2048];
+        let pts = experiments::codebook_sweep::run(&wb, &ks)?;
+        let (ck, _) = wb.dense_checkpoint(wb.spec.grid_size)?;
+        let dense_map = wb.map_dense(&wb.dense_model(&ck, wb.spec.grid_size)?,
+                                     &experiments::SplitSel::Test);
+        emit("fig3_table3_codebook", experiments::codebook_sweep::render(&pts, dense_map));
+    }
+    if all || which == "table2" {
+        let r = experiments::ood_transfer::run(&wb)?;
+        emit("table2_ood_transfer", experiments::ood_transfer::render(&r));
+    }
+    if all || which == "pareto" {
+        let pts = experiments::resolution_pareto::run(&wb)?;
+        emit("pareto_resolution", experiments::resolution_pareto::render(&pts));
+    }
+    if all || which == "bandwidth" {
+        let sim_batch = if args.flag("quick") { 4 } else { 16 };
+        let serve_n = if args.flag("quick") { 400 } else { 2000 };
+        let r = experiments::bandwidth::run(&wb, sim_batch, serve_n)?;
+        emit("bandwidth_analysis", experiments::bandwidth::render(&r));
+    }
+    if all || which == "isolatent" {
+        let r = experiments::iso_latent::run(&[5, 10, 20, 40, 80, 128], 4)?;
+        emit("isolatent", experiments::iso_latent::render(&r));
+    }
+    if all || which == "universal" {
+        let n = if args.flag("quick") { 3 } else { 6 };
+        let r = experiments::universal_basis::run(&wb, n)?;
+        emit("universal_basis", experiments::universal_basis::render(&r));
+    }
+    if all || which == "latency" {
+        let rates: &[f64] = if args.flag("quick") { &[500.0, 2000.0] }
+                            else { &[500.0, 2000.0, 8000.0, 20000.0] };
+        let n = if args.flag("quick") { 300 } else { 1500 };
+        let r = experiments::latency_load::run(&wb, rates, n)?;
+        emit("latency_load", experiments::latency_load::render(&r));
+    }
+    if all || which == "l21" {
+        emit("l21_analysis", experiments::l21_analysis::run_render(&wb)?);
+    }
+
+    anyhow::ensure!(ran, "unknown experiment '{which}'\n{USAGE}");
+    Ok(())
+}

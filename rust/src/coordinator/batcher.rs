@@ -1,0 +1,184 @@
+//! Dynamic batcher: size-or-deadline batching with bucket padding.
+//!
+//! Requests accumulate per head; a batch closes when it reaches
+//! `max_batch` or the oldest request has waited `max_wait`.  The batch is
+//! padded up to the smallest AOT bucket ≥ its size (one compiled executable
+//! per bucket — see python/compile/aot.py).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferRequest;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A closed batch ready for execution.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<InferRequest>,
+    /// bucket size the executor pads to
+    pub bucket: usize,
+}
+
+impl Batch {
+    pub fn padded_slots(&self) -> usize {
+        self.bucket - self.requests.len()
+    }
+}
+
+/// Per-head pending queue with deadline tracking.
+#[derive(Debug, Default)]
+pub struct PendingQueue {
+    queue: VecDeque<InferRequest>,
+}
+
+impl PendingQueue {
+    pub fn push(&mut self, req: InferRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| now.duration_since(r.enqueued))
+    }
+
+    /// Close a batch if the policy says so.  `buckets` must be sorted
+    /// ascending.  FIFO order is preserved.
+    pub fn try_close(&mut self, policy: &BatchPolicy, buckets: &[usize], now: Instant)
+                     -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let deadline_hit = self
+            .oldest_wait(now)
+            .map(|w| w >= policy.max_wait)
+            .unwrap_or(false);
+        let size_hit = self.queue.len() >= policy.max_batch;
+        if !deadline_hit && !size_hit {
+            return None;
+        }
+        let take = self.queue.len().min(policy.max_batch);
+        // pick the smallest bucket >= take, clamping to the largest bucket;
+        // if the batch exceeds the largest bucket, split at the bucket size
+        let max_bucket = *buckets.last().expect("no buckets");
+        let take = take.min(max_bucket);
+        let bucket = buckets.iter().copied().find(|&b| b >= take).unwrap_or(max_bucket);
+        let requests: Vec<InferRequest> = self.queue.drain(..take).collect();
+        Some(Batch { requests, bucket })
+    }
+
+    /// Fail everything in the queue (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<InferRequest> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64, enqueued: Instant) -> InferRequest {
+        let (tx, _rx) = mpsc::channel();
+        InferRequest { id, head: "h".into(), features: vec![0.0], enqueued, resp: tx }
+    }
+
+    const BUCKETS: &[usize] = &[1, 8, 32, 128];
+
+    #[test]
+    fn no_batch_before_deadline_or_size() {
+        let mut q = PendingQueue::default();
+        let now = Instant::now();
+        q.push(req(1, now));
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        assert!(q.try_close(&policy, BUCKETS, now).is_none());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let mut q = PendingQueue::default();
+        let t0 = Instant::now();
+        q.push(req(1, t0));
+        q.push(req(2, t0));
+        q.push(req(3, t0));
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let later = t0 + Duration::from_millis(6);
+        let b = q.try_close(&policy, BUCKETS, later).unwrap();
+        assert_eq!(b.requests.len(), 3);
+        assert_eq!(b.bucket, 8); // smallest bucket >= 3
+        assert_eq!(b.padded_slots(), 5);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn size_closes_full_batch_immediately() {
+        let mut q = PendingQueue::default();
+        let now = Instant::now();
+        for i in 0..10 {
+            q.push(req(i, now));
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(1) };
+        let b = q.try_close(&policy, BUCKETS, now).unwrap();
+        assert_eq!(b.requests.len(), 8);
+        assert_eq!(b.bucket, 8);
+        assert_eq!(q.len(), 2); // remainder stays queued
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = PendingQueue::default();
+        let now = Instant::now();
+        for i in 0..5 {
+            q.push(req(i, now));
+        }
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::ZERO };
+        let b = q.try_close(&policy, BUCKETS, now + Duration::from_millis(1)).unwrap();
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn exact_bucket_no_padding() {
+        let mut q = PendingQueue::default();
+        let now = Instant::now();
+        for i in 0..32 {
+            q.push(req(i, now));
+        }
+        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(1) };
+        let b = q.try_close(&policy, BUCKETS, now).unwrap();
+        assert_eq!(b.bucket, 32);
+        assert_eq!(b.padded_slots(), 0);
+    }
+
+    #[test]
+    fn oversize_clamps_to_largest_bucket() {
+        let mut q = PendingQueue::default();
+        let now = Instant::now();
+        for i in 0..300 {
+            q.push(req(i, now));
+        }
+        let policy = BatchPolicy { max_batch: 512, max_wait: Duration::ZERO };
+        let b = q.try_close(&policy, BUCKETS, now + Duration::from_millis(1)).unwrap();
+        assert_eq!(b.requests.len(), 128);
+        assert_eq!(b.bucket, 128);
+        assert_eq!(q.len(), 172);
+    }
+}

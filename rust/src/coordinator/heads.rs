@@ -1,0 +1,223 @@
+//! Hot-swappable task heads (paper §1 "Deployment Context": one backbone,
+//! dozens of compressed heads sharing the serving stack).
+//!
+//! A head is a set of weight tensors matching one forward-artifact family;
+//! the executor thread turns them into PJRT literals once at registration
+//! (LUTHAM zero-copy: weights never move again).
+
+use anyhow::Result;
+
+use crate::kan::checkpoint::Checkpoint;
+use crate::kan::spec::KanSpec;
+use crate::tensor::Tensor;
+
+/// Weights for one head, in artifact parameter order (x excluded).
+#[derive(Debug, Clone)]
+pub enum HeadWeights {
+    Mlp { w1: Tensor, b1: Tensor, w2: Tensor, b2: Tensor },
+    DenseKan { grids0: Tensor, grids1: Tensor },
+    VqFp32 {
+        cb0: Tensor, idx0: Tensor, g0: Tensor, bs0: Tensor,
+        cb1: Tensor, idx1: Tensor, g1: Tensor, bs1: Tensor,
+    },
+    VqInt8 {
+        cbq0: Tensor, idx0: Tensor, gq0: Tensor, bs0: Tensor,
+        cbq1: Tensor, idx1: Tensor, gq1: Tensor, bs1: Tensor,
+        scales: Tensor,
+    },
+}
+
+impl HeadWeights {
+    /// Artifact family prefix (manifest `model` tag).
+    pub fn model(&self) -> &'static str {
+        match self {
+            HeadWeights::Mlp { .. } => "mlp_fwd",
+            HeadWeights::DenseKan { .. } => "dense_kan_fwd",
+            HeadWeights::VqFp32 { .. } => "vq_kan_fwd",
+            HeadWeights::VqInt8 { .. } => "vq_kan_int8_fwd",
+        }
+    }
+
+    /// Weight tensors in artifact parameter order.
+    pub fn tensors(&self) -> Vec<&Tensor> {
+        match self {
+            HeadWeights::Mlp { w1, b1, w2, b2 } => vec![w1, b1, w2, b2],
+            HeadWeights::DenseKan { grids0, grids1 } => vec![grids0, grids1],
+            HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
+                vec![cb0, idx0, g0, bs0, cb1, idx1, g1, bs1]
+            }
+            HeadWeights::VqInt8 { cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales } => {
+                vec![cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales]
+            }
+        }
+    }
+
+    /// Total weight bytes (the per-head marginal cost the paper optimizes).
+    pub fn weight_bytes(&self) -> usize {
+        self.tensors().iter().map(|t| t.byte_len()).sum()
+    }
+
+    /// Build head weights from a checkpoint written by the training loop or
+    /// the compression pipeline.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<HeadWeights> {
+        let model = ck.meta.get("model").and_then(|j| j.as_str()).unwrap_or("");
+        match model {
+            "dense_kan" => Ok(HeadWeights::DenseKan {
+                grids0: ck.require("grids0")?.clone(),
+                grids1: ck.require("grids1")?.clone(),
+            }),
+            "mlp" => Ok(HeadWeights::Mlp {
+                w1: ck.require("w1")?.clone(),
+                b1: ck.require("b1")?.clone(),
+                w2: ck.require("w2")?.clone(),
+                b2: ck.require("b2")?.clone(),
+            }),
+            "vq_kan_fp32" => Ok(HeadWeights::VqFp32 {
+                cb0: ck.require("cb0")?.clone(),
+                idx0: ck.require("idx0")?.clone(),
+                g0: ck.require("g0")?.clone(),
+                bs0: ck.require("bias_sum0")?.clone(),
+                cb1: ck.require("cb1")?.clone(),
+                idx1: ck.require("idx1")?.clone(),
+                g1: ck.require("g1")?.clone(),
+                bs1: ck.require("bias_sum1")?.clone(),
+            }),
+            "vq_kan_int8" => {
+                let s0 = ck.require("scales0")?.as_f32();
+                let s1 = ck.require("scales1")?.as_f32();
+                let mut scales = s0;
+                scales.extend(s1);
+                Ok(HeadWeights::VqInt8 {
+                    cbq0: ck.require("cbq0")?.clone(),
+                    idx0: ck.require("idx0")?.clone(),
+                    gq0: ck.require("gq0")?.clone(),
+                    bs0: ck.require("bias_sum0")?.clone(),
+                    cbq1: ck.require("cbq1")?.clone(),
+                    idx1: ck.require("idx1")?.clone(),
+                    gq1: ck.require("gq1")?.clone(),
+                    bs1: ck.require("bias_sum1")?.clone(),
+                    scales: Tensor::from_f32(&[2, 3], &scales),
+                })
+            }
+            other => anyhow::bail!("unknown checkpoint model '{other}'"),
+        }
+    }
+
+    /// Input feature dimension, for request validation.
+    pub fn d_in(&self, spec: &KanSpec) -> usize {
+        let _ = spec;
+        match self {
+            HeadWeights::Mlp { w1, .. } => w1.shape()[0],
+            HeadWeights::DenseKan { grids0, .. } => grids0.shape()[0],
+            HeadWeights::VqFp32 { idx0, .. } | HeadWeights::VqInt8 { idx0, .. } => idx0.shape()[0],
+        }
+    }
+
+    /// Output class count.
+    pub fn d_out(&self) -> usize {
+        match self {
+            HeadWeights::Mlp { b2, .. } => b2.shape()[0],
+            HeadWeights::DenseKan { grids1, .. } => grids1.shape()[1],
+            HeadWeights::VqFp32 { bs1, .. } | HeadWeights::VqInt8 { bs1, .. } => bs1.shape()[0],
+        }
+    }
+
+    /// Validate shapes against the manifest spec + codebook size.
+    pub fn validate(&self, spec: &KanSpec, codebook_size: usize) -> Result<()> {
+        let check = |cond: bool, what: &str| -> Result<()> {
+            anyhow::ensure!(cond, "head shape mismatch: {what}");
+            Ok(())
+        };
+        match self {
+            HeadWeights::Mlp { w1, b1, w2, b2 } => {
+                check(w1.shape() == [spec.d_in, spec.d_hidden], "w1")?;
+                check(b1.shape() == [spec.d_hidden], "b1")?;
+                check(w2.shape() == [spec.d_hidden, spec.d_out], "w2")?;
+                check(b2.shape() == [spec.d_out], "b2")
+            }
+            HeadWeights::DenseKan { grids0, grids1 } => {
+                check(grids0.shape() == [spec.d_in, spec.d_hidden, spec.grid_size], "grids0")?;
+                check(grids1.shape() == [spec.d_hidden, spec.d_out, spec.grid_size], "grids1")
+            }
+            HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
+                check(cb0.shape() == [codebook_size, spec.grid_size], "cb0")?;
+                check(idx0.shape() == [spec.d_in, spec.d_hidden], "idx0")?;
+                check(g0.shape() == [spec.d_in, spec.d_hidden], "g0")?;
+                check(bs0.shape() == [spec.d_hidden], "bs0")?;
+                check(cb1.shape() == [codebook_size, spec.grid_size], "cb1")?;
+                check(idx1.shape() == [spec.d_hidden, spec.d_out], "idx1")?;
+                check(g1.shape() == [spec.d_hidden, spec.d_out], "g1")?;
+                check(bs1.shape() == [spec.d_out], "bs1")
+            }
+            HeadWeights::VqInt8 { cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales } => {
+                check(cbq0.shape() == [codebook_size, spec.grid_size], "cbq0")?;
+                check(idx0.shape() == [spec.d_in, spec.d_hidden], "idx0")?;
+                check(gq0.shape() == [spec.d_in, spec.d_hidden], "gq0")?;
+                check(bs0.shape() == [spec.d_hidden], "bs0")?;
+                check(cbq1.shape() == [codebook_size, spec.grid_size], "cbq1")?;
+                check(idx1.shape() == [spec.d_hidden, spec.d_out], "idx1")?;
+                check(gq1.shape() == [spec.d_hidden, spec.d_out], "gq1")?;
+                check(bs1.shape() == [spec.d_out], "bs1")?;
+                check(scales.shape() == [2, 3], "scales")
+            }
+        }
+    }
+}
+
+/// Pad a codebook (and clamp indices) so a head compressed with K' < K can
+/// still be served by the fixed-K artifact: unused rows are zero.
+pub fn pad_codebook(cb: &[f32], k_actual: usize, g: usize, k_target: usize) -> Result<Vec<f32>> {
+    anyhow::ensure!(k_actual <= k_target, "codebook larger than artifact K");
+    anyhow::ensure!(cb.len() == k_actual * g, "codebook size mismatch");
+    let mut out = vec![0f32; k_target * g];
+    out[..cb.len()].copy_from_slice(cb);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn dense_checkpoint_roundtrip() {
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("dense_kan"))]));
+        ck.insert("grids0", Tensor::from_f32(&[2, 3, 4], &[0.0; 24]));
+        ck.insert("grids1", Tensor::from_f32(&[3, 2, 4], &[0.0; 24]));
+        let h = HeadWeights::from_checkpoint(&ck).unwrap();
+        assert_eq!(h.model(), "dense_kan_fwd");
+        assert_eq!(h.d_out(), 2);
+        assert_eq!(h.weight_bytes(), 48 * 4);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let ck = Checkpoint::new(Json::obj(vec![("model", Json::str("resnet"))]));
+        assert!(HeadWeights::from_checkpoint(&ck).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let spec = KanSpec { d_in: 4, d_hidden: 6, d_out: 2, grid_size: 5 };
+        let good = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[4, 6, 5], &[0.0; 120]),
+            grids1: Tensor::from_f32(&[6, 2, 5], &[0.0; 60]),
+        };
+        assert!(good.validate(&spec, 8).is_ok());
+        let bad = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[4, 6, 4], &[0.0; 96]),
+            grids1: Tensor::from_f32(&[6, 2, 5], &[0.0; 60]),
+        };
+        assert!(bad.validate(&spec, 8).is_err());
+    }
+
+    #[test]
+    fn pad_codebook_zero_fills() {
+        let cb = vec![1.0f32; 2 * 3];
+        let padded = pad_codebook(&cb, 2, 3, 4).unwrap();
+        assert_eq!(padded.len(), 12);
+        assert_eq!(&padded[0..6], &cb[..]);
+        assert!(padded[6..].iter().all(|&v| v == 0.0));
+        assert!(pad_codebook(&cb, 2, 3, 1).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Serving metrics: latency histogram (log-spaced buckets) + counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lock-free latency histogram with log2 buckets from 1 µs to ~17 min.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i µs, 2^(i+1) µs)
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const NUM_BUCKETS: usize = 30;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(NUM_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile(&self, p: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (p * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?} max={:?}",
+            self.count(),
+            self.mean(),
+            self.percentile(0.50),
+            self.percentile(0.95),
+            self.percentile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Coordinator-level counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+impl Counters {
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Fraction of executed slots that were padding (bucket waste).
+    pub fn padding_fraction(&self) -> f64 {
+        let items = self.batched_items.load(Ordering::Relaxed);
+        let pad = self.padded_slots.load(Ordering::Relaxed);
+        if items + pad == 0 {
+            return 0.0;
+        }
+        pad as f64 / (items + pad) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 50, 100, 500, 1000, 5000, 10000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.percentile(0.5) <= h.percentile(0.95));
+        assert!(h.percentile(0.95) <= h.percentile(1.0).max(h.max()));
+        assert!(h.mean() >= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.percentile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn counters_batch_math() {
+        let c = Counters::default();
+        c.batches.store(4, Ordering::Relaxed);
+        c.batched_items.store(20, Ordering::Relaxed);
+        c.padded_slots.store(12, Ordering::Relaxed);
+        assert_eq!(c.mean_batch_size(), 5.0);
+        assert!((c.padding_fraction() - 12.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_is_thread_safe() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.record(Duration::from_micros((t * 1000 + i) as u64 + 1));
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

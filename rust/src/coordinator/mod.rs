@@ -1,0 +1,17 @@
+//! L3 serving coordinator (the paper's deployment story): bounded admission,
+//! dynamic batching to AOT buckets, hot-swappable compressed heads, metrics.
+
+pub mod batcher;
+pub mod heads;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod tcp;
+pub mod workload;
+
+pub use batcher::{Batch, BatchPolicy, PendingQueue};
+pub use heads::HeadWeights;
+pub use metrics::{Counters, LatencyHistogram};
+pub use request::{InferRequest, InferResponse};
+pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
+pub use tcp::{TcpClient, TcpServer};

@@ -1,0 +1,40 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One inference request: a feature vector bound for a named task head.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    /// which hot-swappable head serves this request (multi-head deployment,
+    /// paper §1 "Deployment Context")
+    pub head: String,
+    pub features: Vec<f32>,
+    pub enqueued: Instant,
+    pub resp: mpsc::Sender<InferResponse>,
+}
+
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub scores: Vec<f32>,
+    /// end-to-end latency (enqueue -> response send)
+    pub latency: std::time::Duration,
+    pub error: Option<String>,
+}
+
+impl InferResponse {
+    pub fn ok(id: u64, scores: Vec<f32>, latency: std::time::Duration) -> Self {
+        InferResponse { id, scores, latency, error: None }
+    }
+
+    pub fn err(id: u64, msg: impl Into<String>) -> Self {
+        InferResponse {
+            id,
+            scores: Vec::new(),
+            latency: std::time::Duration::ZERO,
+            error: Some(msg.into()),
+        }
+    }
+}

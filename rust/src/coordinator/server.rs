@@ -1,0 +1,355 @@
+//! The serving coordinator: bounded admission queue -> executor thread
+//! (owns the PJRT engine) -> dynamic batcher -> bucketed execution.
+//!
+//! Threading model: PJRT wrapper types are not Send/Sync, so the engine and
+//! all literals live on ONE executor thread (the vLLM engine-loop shape).
+//! Clients talk to it via a bounded sync channel (admission control /
+//! backpressure) and get responses on per-request channels.
+//!
+//! Zero-alloc discipline on the hot path: per-head weight literals are
+//! created once at registration; per-batch the executor reuses a padded
+//! feature scratch buffer sized by the memplan-style max bucket.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::batcher::{Batch, BatchPolicy, PendingQueue};
+use super::heads::HeadWeights;
+use super::metrics::{Counters, LatencyHistogram};
+use super::request::{InferRequest, InferResponse};
+use crate::runtime::{literal, Engine};
+use crate::tensor::Tensor;
+
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    pub policy: BatchPolicy,
+    /// bounded admission queue depth; try_submit rejects beyond this
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            policy: BatchPolicy::default(),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+    pub counters: Counters,
+}
+
+enum Msg {
+    Infer(InferRequest),
+    AddHead { name: String, weights: Box<HeadWeights>, resp: mpsc::Sender<Result<(), String>> },
+    RemoveHead { name: String, resp: mpsc::Sender<bool> },
+    Shutdown,
+}
+
+/// Client handle; cloneable across threads.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: SyncSender<Msg>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+/// Owner handle that joins the executor on drop.
+pub struct CoordinatorHandle {
+    pub client: Coordinator,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the executor thread and return (owner handle, client).
+    pub fn start(cfg: CoordinatorConfig) -> Result<CoordinatorHandle> {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_capacity);
+        let metrics = Arc::new(Metrics {
+            latency: LatencyHistogram::new(),
+            exec_latency: LatencyHistogram::new(),
+            counters: Counters::default(),
+        });
+        let m2 = metrics.clone();
+        // engine must be constructed on the executor thread (not Send);
+        // report startup errors back through a one-shot channel
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("share-kan-executor".into())
+            .spawn(move || executor_loop(cfg, rx, m2, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor died during startup"))?
+            .map_err(|e| anyhow::anyhow!("executor startup: {e}"))?;
+        let client = Coordinator { tx, metrics, next_id: Arc::new(AtomicU64::new(1)) };
+        Ok(CoordinatorHandle { client, join: Some(join) })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Register (or replace) a head.  Blocks until the executor confirms.
+    pub fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::AddHead { name: name.into(), weights: Box::new(weights), resp: rtx })
+            .map_err(|_| anyhow::anyhow!("coordinator down"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator down"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Unregister a head (hot-swap out).  Returns whether it existed.
+    pub fn remove_head(&self, name: &str) -> Result<bool> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::RemoveHead { name: name.into(), resp: rtx })
+            .map_err(|_| anyhow::anyhow!("coordinator down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("coordinator down"))
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    /// Applies backpressure by rejecting when the admission queue is full.
+    pub fn try_submit(&self, head: &str, features: Vec<f32>)
+                      -> Result<Receiver<InferResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            head: head.to_string(),
+            features,
+            enqueued: Instant::now(),
+            resp: rtx,
+        };
+        self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(Msg::Infer(req)) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("admission queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("coordinator down"),
+        }
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
+        let rx = self.try_submit(head, features)?;
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?;
+        if let Some(e) = &resp.error {
+            anyhow::bail!("inference failed: {e}");
+        }
+        Ok(resp)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+impl CoordinatorHandle {
+    pub fn shutdown(mut self) {
+        self.client.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for CoordinatorHandle {
+    fn drop(&mut self) {
+        self.client.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Per-head state on the executor thread.
+struct HeadState {
+    model: &'static str,
+    weight_literals: Vec<Literal>,
+    d_in: usize,
+    d_out: usize,
+    queue: PendingQueue,
+}
+
+fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics>,
+                 ready: mpsc::Sender<Result<(), String>>) {
+    let engine = match Engine::load(&cfg.artifacts_dir) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let buckets = engine.manifest.batch_buckets.clone();
+    let max_bucket = buckets.iter().copied().max().unwrap_or(1);
+    let spec = engine.manifest.kan_spec;
+    let mut heads: HashMap<String, HeadState> = HashMap::new();
+    // padded feature scratch, reused across batches (zero-alloc hot loop)
+    let mut scratch: Vec<f32> = vec![0.0; max_bucket * spec.d_in.max(1)];
+
+    let tick = Duration::from_micros(200).min(cfg.policy.max_wait.max(Duration::from_micros(50)));
+    loop {
+        // 1) drain control / intake
+        let msg = rx.recv_timeout(tick);
+        match msg {
+            Ok(Msg::Shutdown) => break,
+            Ok(Msg::AddHead { name, weights, resp }) => {
+                let r = register_head(&engine, &mut heads, &name, *weights);
+                let _ = resp.send(r.map_err(|e| format!("{e:#}")));
+                continue;
+            }
+            Ok(Msg::RemoveHead { name, resp }) => {
+                let existed = heads.remove(&name).is_some();
+                let _ = resp.send(existed);
+                continue;
+            }
+            Ok(Msg::Infer(req)) => {
+                route(&mut heads, req);
+                // opportunistically drain everything already queued
+                while let Ok(m) = rx.try_recv() {
+                    match m {
+                        Msg::Infer(r) => route(&mut heads, r),
+                        Msg::Shutdown => {
+                            fail_all(&mut heads, "shutdown");
+                            return;
+                        }
+                        Msg::AddHead { name, weights, resp } => {
+                            let r = register_head(&engine, &mut heads, &name, *weights);
+                            let _ = resp.send(r.map_err(|e| format!("{e:#}")));
+                        }
+                        Msg::RemoveHead { name, resp } => {
+                            let _ = resp.send(heads.remove(&name).is_some());
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // 2) close + execute due batches
+        let now = Instant::now();
+        for state in heads.values_mut() {
+            while let Some(batch) = state.queue.try_close(&cfg.policy, &buckets, now) {
+                execute_batch(&engine, state, batch, &mut scratch, &metrics);
+            }
+        }
+    }
+    fail_all(&mut heads, "shutdown");
+}
+
+fn register_head(engine: &Engine, heads: &mut HashMap<String, HeadState>, name: &str,
+                 weights: HeadWeights) -> Result<()> {
+    weights.validate(&engine.manifest.kan_spec, engine.manifest.vq_spec.codebook_size)?;
+    let lits = weights
+        .tensors()
+        .iter()
+        .map(|t| literal::to_literal(t))
+        .collect::<Result<Vec<_>>>()?;
+    // pre-compile every bucket for this head family (warm start)
+    for &b in &engine.manifest.batch_buckets {
+        engine.executable(&format!("{}_b{}", weights.model(), b))?;
+    }
+    heads.insert(
+        name.to_string(),
+        HeadState {
+            model: weights.model(),
+            weight_literals: lits,
+            d_in: weights.d_in(&engine.manifest.kan_spec),
+            d_out: weights.d_out(),
+            queue: PendingQueue::default(),
+        },
+    );
+    Ok(())
+}
+
+fn route(heads: &mut HashMap<String, HeadState>, req: InferRequest) {
+    match heads.get_mut(&req.head) {
+        Some(state) => {
+            if req.features.len() != state.d_in {
+                let _ = req.resp.send(InferResponse::err(
+                    req.id,
+                    format!("feature dim {} != {}", req.features.len(), state.d_in),
+                ));
+                return;
+            }
+            state.queue.push(req);
+        }
+        None => {
+            let _ = req
+                .resp
+                .send(InferResponse::err(req.id, format!("unknown head '{}'", req.head)));
+        }
+    }
+}
+
+fn fail_all(heads: &mut HashMap<String, HeadState>, why: &str) {
+    for state in heads.values_mut() {
+        for req in state.queue.drain_all() {
+            let _ = req.resp.send(InferResponse::err(req.id, why));
+        }
+    }
+}
+
+fn execute_batch(engine: &Engine, state: &mut HeadState, batch: Batch,
+                 scratch: &mut [f32], metrics: &Metrics) {
+    let bucket = batch.bucket;
+    let d_in = state.d_in;
+    let n = batch.requests.len();
+    // pad features into the reusable scratch buffer
+    let pad = &mut scratch[..bucket * d_in];
+    pad.fill(0.0);
+    for (i, req) in batch.requests.iter().enumerate() {
+        pad[i * d_in..(i + 1) * d_in].copy_from_slice(&req.features);
+    }
+    let artifact = format!("{}_b{}", state.model, bucket);
+    let t0 = Instant::now();
+    let result = (|| -> Result<Vec<f32>> {
+        let x_lit = literal::to_literal(&Tensor::from_f32(&[bucket, d_in], pad))?;
+        let mut inputs: Vec<&Literal> = state.weight_literals.iter().collect();
+        inputs.push(&x_lit);
+        let exe = engine.executable(&artifact)?;
+        let out = engine.execute_on(&exe, &inputs)?;
+        literal::f32s(&out[0])
+    })();
+    let exec_t = t0.elapsed();
+    metrics.exec_latency.record(exec_t);
+    metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.counters.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+    metrics.counters.padded_slots.fetch_add((bucket - n) as u64, Ordering::Relaxed);
+    match result {
+        Ok(scores) => {
+            let d_out = state.d_out;
+            for (i, req) in batch.requests.into_iter().enumerate() {
+                let latency = req.enqueued.elapsed();
+                metrics.latency.record(latency);
+                metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+                let row = scores[i * d_out..(i + 1) * d_out].to_vec();
+                let _ = req.resp.send(InferResponse::ok(req.id, row, latency));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch.requests {
+                metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(InferResponse::err(req.id, &msg));
+            }
+        }
+    }
+}

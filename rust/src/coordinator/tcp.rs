@@ -1,0 +1,165 @@
+//! TCP front-end: newline-delimited JSON protocol over the coordinator.
+//!
+//! Request:  {"head": "task0", "features": [..d_in floats..]}
+//! Response: {"id": N, "scores": [..d_out floats..]}
+//!         | {"error": "..."}
+//!
+//! One thread per connection (std::net) — request concurrency is bounded by
+//! the coordinator's admission queue, not by connection count.  This is the
+//! deployment-shaped entry point `share-kan serve --tcp ADDR` exposes; unit
+//! and integration tests drive it over localhost.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::server::Coordinator;
+use crate::util::json::{self, Json};
+
+pub struct TcpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind and start accepting.  `addr` like "127.0.0.1:0" (0 = ephemeral).
+    pub fn start(coordinator: Coordinator, addr: &str) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let stop2 = stop.clone();
+        let accepted2 = accepted.clone();
+        let join = std::thread::Builder::new()
+            .name("share-kan-tcp".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            accepted2.fetch_add(1, Ordering::Relaxed);
+                            stream.set_nonblocking(false).ok();
+                            let c = coordinator.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, c);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(TcpServer { addr: local, stop, accepted, join: Some(join) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn connections_accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, c: Coordinator) -> Result<()> {
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut writer = peer;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        let reply = match handle_line(line.trim(), &c) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        };
+        writer.write_all(json::to_string(&reply).as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn handle_line(line: &str, c: &Coordinator) -> Result<Json> {
+    if line.is_empty() {
+        anyhow::bail!("empty request");
+    }
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let head = req
+        .get("head")
+        .and_then(|j| j.as_str())
+        .unwrap_or("default")
+        .to_string();
+    let features: Vec<f32> = req
+        .get("features")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing 'features' array"))?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect();
+    anyhow::ensure!(features.iter().all(|v| v.is_finite()), "non-numeric feature");
+    let resp = c.infer(&head, features)?;
+    Ok(Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("scores", Json::Arr(resp.scores.iter().map(|&s| Json::num(s as f64)).collect())),
+    ]))
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let peer = stream.try_clone()?;
+        Ok(TcpClient { reader: BufReader::new(stream), writer: peer })
+    }
+
+    pub fn infer(&mut self, head: &str, features: &[f32]) -> Result<Vec<f32>> {
+        let req = Json::obj(vec![
+            ("head", Json::str(head)),
+            ("features", Json::Arr(features.iter().map(|&f| Json::num(f as f64)).collect())),
+        ]);
+        self.writer.write_all(json::to_string(&req).as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+        if let Some(err) = resp.get("error").and_then(|j| j.as_str()) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(resp
+            .get("scores")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing scores"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect())
+    }
+}

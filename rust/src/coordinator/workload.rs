@@ -1,0 +1,104 @@
+//! Open-loop workload generation: Poisson arrivals at a target rate, for
+//! latency-under-load measurement (closed-loop clients understate tail
+//! latency — the coordinated-omission problem).
+
+use std::time::Duration;
+
+use crate::data::rng::Pcg32;
+
+/// Poisson arrival-time generator: exponential inter-arrival gaps.
+pub struct PoissonArrivals {
+    rng: Pcg32,
+    rate_per_s: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_per_s: f64, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0);
+        PoissonArrivals { rng: Pcg32::new(seed, 201), rate_per_s }
+    }
+
+    /// Next inter-arrival gap.
+    pub fn next_gap(&mut self) -> Duration {
+        // inverse CDF of Exp(rate): -ln(U)/rate
+        let u = loop {
+            let u = self.rng.uniform() as f64;
+            if u > 1e-12 {
+                break u;
+            }
+        };
+        Duration::from_secs_f64((-u.ln()) / self.rate_per_s)
+    }
+
+    /// Absolute arrival offsets for `n` requests from t=0.
+    pub fn schedule(&mut self, n: usize) -> Vec<Duration> {
+        let mut t = Duration::ZERO;
+        (0..n)
+            .map(|_| {
+                t += self.next_gap();
+                t
+            })
+            .collect()
+    }
+}
+
+/// Bursty (ON/OFF) arrival schedule: alternating high/low rate phases —
+/// stresses the batcher's deadline path (low rate) and size path (bursts).
+pub fn bursty_schedule(n: usize, high_rps: f64, low_rps: f64, phase: Duration,
+                       seed: u64) -> Vec<Duration> {
+    let mut high = PoissonArrivals::new(high_rps, seed);
+    let mut low = PoissonArrivals::new(low_rps, seed ^ 1);
+    let mut t = Duration::ZERO;
+    let mut out = Vec::with_capacity(n);
+    let mut in_high = true;
+    let mut phase_end = phase;
+    for _ in 0..n {
+        let gap = if in_high { high.next_gap() } else { low.next_gap() };
+        t += gap;
+        while t >= phase_end {
+            in_high = !in_high;
+            phase_end += phase;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let mut p = PoissonArrivals::new(1000.0, 7);
+        let sched = p.schedule(20_000);
+        let total = sched.last().unwrap().as_secs_f64();
+        let rate = 20_000.0 / total;
+        assert!((rate - 1000.0).abs() < 50.0, "rate {rate}");
+    }
+
+    #[test]
+    fn schedule_is_monotone() {
+        let mut p = PoissonArrivals::new(50.0, 8);
+        let sched = p.schedule(100);
+        for w in sched.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn bursty_alternates_density() {
+        let sched = bursty_schedule(5000, 5000.0, 100.0, Duration::from_millis(100), 9);
+        assert!(sched.windows(2).all(|w| w[1] >= w[0]));
+        // count arrivals in the first high phase vs the following low phase
+        let in_range = |lo: f64, hi: f64| {
+            sched.iter().filter(|d| {
+                let s = d.as_secs_f64();
+                s >= lo && s < hi
+            }).count()
+        };
+        let high = in_range(0.0, 0.1);
+        let low = in_range(0.1, 0.2);
+        assert!(high > 5 * low.max(1), "high {high} low {low}");
+    }
+}

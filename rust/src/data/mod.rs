@@ -1,0 +1,10 @@
+//! Synthetic data substrate: deterministic RNG, ground-truth teacher, and
+//! the VOC-20 / COCO-shift dataset generators (DESIGN.md §2).
+
+pub mod dataset;
+pub mod rng;
+pub mod teacher;
+
+pub use dataset::{standard_splits, Dataset, Generator, Shift, Splits};
+pub use rng::Pcg32;
+pub use teacher::Teacher;

@@ -1,0 +1,160 @@
+//! Ground-truth teacher for the synthetic multi-label "detection" task.
+//!
+//! DESIGN.md §2: the paper's PASCAL-VOC detection head consumes frozen
+//! backbone features; everything it measures is a property of the KAN head.
+//! We therefore generate feature vectors and multi-label targets from a
+//! fixed random *teacher*: each class score is a sum of smooth sinusoidal
+//! univariate functions of the features (band-limited, so both KAN and MLP
+//! heads can learn it, neither has an architectural inside track), and the
+//! label fires when the score exceeds a per-class threshold calibrated to a
+//! target positive rate.
+
+use super::rng::Pcg32;
+
+/// Per-class smooth scoring function: `s_c(x) = Σ_i a_ci · sin(ω_ci·x_i + φ_ci)`.
+#[derive(Debug, Clone)]
+pub struct Teacher {
+    pub d_in: usize,
+    pub n_classes: usize,
+    /// amplitudes [n_classes][d_in]
+    amp: Vec<Vec<f32>>,
+    /// frequencies [n_classes][d_in] (band-limited: |ω| ≤ max_freq)
+    freq: Vec<Vec<f32>>,
+    /// phases [n_classes][d_in]
+    phase: Vec<Vec<f32>>,
+    /// per-class decision thresholds (calibrated by [`Teacher::calibrate`])
+    pub thresholds: Vec<f32>,
+}
+
+impl Teacher {
+    /// Deterministic teacher from a seed.  `max_freq` controls smoothness;
+    /// 2.0 keeps the functions representable on a G=10 PLI grid.
+    pub fn new(seed: u64, d_in: usize, n_classes: usize, max_freq: f32) -> Self {
+        let mut rng = Pcg32::new(seed, 17);
+        let mut amp = Vec::with_capacity(n_classes);
+        let mut freq = Vec::with_capacity(n_classes);
+        let mut phase = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            // sparse amplitudes: each class depends strongly on ~25% of dims
+            let a: Vec<f32> = (0..d_in)
+                .map(|_| {
+                    if rng.uniform() < 0.25 {
+                        rng.normal()
+                    } else {
+                        0.15 * rng.normal()
+                    }
+                })
+                .collect();
+            // bimodal spectrum: half the dims carry slow components any
+            // grid resolves, half carry fast components near max_freq that
+            // a coarse grid aliases — this pins §5.3's saturation point
+            freq.push((0..d_in)
+                .map(|_| {
+                    if rng.uniform() < 0.5 {
+                        rng.uniform_in(0.4, 1.0)
+                    } else {
+                        rng.uniform_in(0.75 * max_freq, max_freq)
+                    }
+                })
+                .collect());
+            phase.push((0..d_in)
+                .map(|_| rng.uniform_in(0.0, 2.0 * std::f32::consts::PI))
+                .collect());
+            amp.push(a);
+        }
+        let mut t = Teacher { d_in, n_classes, amp, freq, phase, thresholds: vec![0.0; n_classes] };
+        t.calibrate(seed ^ 0x5eed, 4096, 0.3);
+        t
+    }
+
+    /// Raw class scores for one feature vector.
+    ///
+    /// The univariate nonlinearities are band-limited in the *squashed*
+    /// space u = tanh(x) the KAN head interpolates over: sin(ω·π·u + φ)
+    /// with ω ≤ max_freq periods across u ∈ [-1, 1].  This pins the
+    /// spectral-saturation point the paper's §5.3 sweep probes — a G-knot
+    /// PLI grid resolves ~ (G-1)/(2π·ω) knots per radian, so small G
+    /// aliases the fast components while G = 10 captures them.
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d_in);
+        (0..self.n_classes)
+            .map(|c| {
+                let (a, w, p) = (&self.amp[c], &self.freq[c], &self.phase[c]);
+                x.iter()
+                    .enumerate()
+                    .map(|(i, &xi)| {
+                        let u = xi.tanh();
+                        a[i] * (w[i] * std::f32::consts::PI * u + p[i]).sin()
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Multi-label targets (1.0 / 0.0 per class).
+    pub fn labels(&self, x: &[f32]) -> Vec<f32> {
+        self.scores(x)
+            .iter()
+            .zip(&self.thresholds)
+            .map(|(&s, &t)| if s > t { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Set per-class thresholds so roughly `pos_rate` of standard-normal
+    /// inputs are positive (empirical quantile over `n` samples).
+    fn calibrate(&mut self, seed: u64, n: usize, pos_rate: f32) {
+        let mut rng = Pcg32::new(seed, 23);
+        let mut per_class: Vec<Vec<f32>> = vec![Vec::with_capacity(n); self.n_classes];
+        for _ in 0..n {
+            let x: Vec<f32> = (0..self.d_in).map(|_| rng.normal()).collect();
+            for (c, s) in self.scores(&x).into_iter().enumerate() {
+                per_class[c].push(s);
+            }
+        }
+        for (c, mut scores) in per_class.into_iter().enumerate() {
+            scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((1.0 - pos_rate) * (n as f32 - 1.0)).round() as usize;
+            self.thresholds[c] = scores[idx.min(n - 1)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let t1 = Teacher::new(5, 8, 4, 2.0);
+        let t2 = Teacher::new(5, 8, 4, 2.0);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.1 - 0.4).collect();
+        assert_eq!(t1.scores(&x), t2.scores(&x));
+        assert_eq!(t1.thresholds, t2.thresholds);
+    }
+
+    #[test]
+    fn positive_rate_near_target() {
+        let t = Teacher::new(11, 16, 8, 2.0);
+        let mut rng = Pcg32::seeded(99);
+        let n = 4000;
+        let mut pos = 0usize;
+        let mut total = 0usize;
+        for _ in 0..n {
+            let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+            for y in t.labels(&x) {
+                pos += y as usize;
+                total += 1;
+            }
+        }
+        let rate = pos as f32 / total as f32;
+        assert!((rate - 0.3).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn labels_are_binary_and_sized() {
+        let t = Teacher::new(1, 4, 3, 2.0);
+        let y = t.labels(&[0.1, -0.2, 0.3, 0.0]);
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

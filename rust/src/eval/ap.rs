@@ -1,0 +1,167 @@
+//! Average precision (all-points interpolation) and mAP over classes.
+//!
+//! The synthetic task is multi-label classification (DESIGN.md §2), so AP
+//! per class is computed exactly as in PASCAL-VOC-style detection scoring:
+//! rank by score, precision at each recall step, area under the
+//! interpolated precision envelope.
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// All-points-interpolated average precision for one class.
+/// `scores[i]` is the prediction for sample i, `labels[i]` in {0.0, 1.0}.
+/// Returns None when the class has no positives (excluded from mAP, as in
+/// VOC evaluation).
+pub fn average_precision(scores: &[f32], labels: &[f32]) -> Option<f64> {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l > 0.5).count();
+    if n_pos == 0 {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    // stable sort by descending score; ties keep original order
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    // precision/recall points
+    let mut tp = 0usize;
+    let mut precisions = Vec::with_capacity(scores.len());
+    let mut recalls = Vec::with_capacity(scores.len());
+    for (rank, &i) in order.iter().enumerate() {
+        if labels[i] > 0.5 {
+            tp += 1;
+        }
+        precisions.push(tp as f64 / (rank + 1) as f64);
+        recalls.push(tp as f64 / n_pos as f64);
+    }
+    // precision envelope (monotone non-increasing from the right)
+    for i in (0..precisions.len().saturating_sub(1)).rev() {
+        if precisions[i] < precisions[i + 1] {
+            precisions[i] = precisions[i + 1];
+        }
+    }
+    // integrate over recall steps
+    let mut ap = 0f64;
+    let mut prev_recall = 0f64;
+    for (p, r) in precisions.iter().zip(&recalls) {
+        if *r > prev_recall {
+            ap += p * (r - prev_recall);
+            prev_recall = *r;
+        }
+    }
+    Some(ap)
+}
+
+/// mAP over classes.  `scores`/`labels` are [n, n_classes] row-major.
+/// Returns mAP in percent (to match the paper's tables).
+pub fn mean_average_precision(scores: &[f32], labels: &[f32], n: usize, n_classes: usize) -> f64 {
+    assert_eq!(scores.len(), n * n_classes);
+    assert_eq!(labels.len(), n * n_classes);
+    let mut col_s = vec![0f32; n];
+    let mut col_l = vec![0f32; n];
+    let mut total = 0f64;
+    let mut counted = 0usize;
+    for c in 0..n_classes {
+        for i in 0..n {
+            col_s[i] = scores[i * n_classes + c];
+            col_l[i] = labels[i * n_classes + c];
+        }
+        if let Some(ap) = average_precision(&col_s, &col_l) {
+            total += ap;
+            counted += 1;
+        }
+    }
+    if counted == 0 {
+        return 0.0;
+    }
+    100.0 * total / counted as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_gives_ap_one() {
+        let scores = vec![0.9, 0.8, 0.3, 0.1];
+        let labels = vec![1.0, 1.0, 0.0, 0.0];
+        assert!((average_precision(&scores, &labels).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_ranking() {
+        // positives ranked last; with the interpolated envelope the
+        // precision at both recall steps is max(1/3, 2/4) = 0.5 -> AP = 0.5
+        let scores = vec![0.9, 0.8, 0.3, 0.2];
+        let labels = vec![0.0, 0.0, 1.0, 1.0];
+        let ap = average_precision(&scores, &labels).unwrap();
+        assert!((ap - 0.5).abs() < 1e-12, "{ap}");
+        // and it is strictly below the perfect-ranking AP
+        let perfect = average_precision(&[0.9, 0.8, 0.3, 0.2], &[1.0, 1.0, 0.0, 0.0]).unwrap();
+        assert!(ap < perfect);
+    }
+
+    #[test]
+    fn no_positives_is_none() {
+        assert!(average_precision(&[0.5, 0.2], &[0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn all_positives_is_one() {
+        assert!((average_precision(&[0.1, 0.9], &[1.0, 1.0]).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_scores_near_base_rate() {
+        // With random scores, AP ~ positive rate (here 0.5) for large n
+        use crate::data::rng::Pcg32;
+        let mut rng = Pcg32::seeded(8);
+        let n = 20_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+        let labels: Vec<f32> = (0..n).map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 }).collect();
+        let ap = average_precision(&scores, &labels).unwrap();
+        assert!((ap - 0.5).abs() < 0.03, "{ap}");
+    }
+
+    #[test]
+    fn map_in_percent_and_skips_empty_classes() {
+        // 2 classes over 4 samples; class 1 has no positives -> skipped
+        let scores = vec![
+            0.9, 0.1, //
+            0.8, 0.2, //
+            0.3, 0.3, //
+            0.1, 0.4,
+        ];
+        let labels = vec![
+            1.0, 0.0, //
+            1.0, 0.0, //
+            0.0, 0.0, //
+            0.0, 0.0,
+        ];
+        let map = mean_average_precision(&scores, &labels, 4, 2);
+        assert!((map - 100.0).abs() < 1e-9, "{map}");
+    }
+
+    #[test]
+    fn map_monotone_in_ranking_quality() {
+        use crate::data::rng::Pcg32;
+        let mut rng = Pcg32::seeded(10);
+        let n = 500;
+        let n_classes = 4;
+        let labels: Vec<f32> = (0..n * n_classes)
+            .map(|_| if rng.uniform() < 0.3 { 1.0 } else { 0.0 })
+            .collect();
+        // good scores: label + small noise; bad scores: pure noise
+        let good: Vec<f32> = labels.iter().map(|&l| l + 0.3 * rng.normal()).collect();
+        let bad: Vec<f32> = (0..n * n_classes).map(|_| rng.normal()).collect();
+        let m_good = mean_average_precision(&good, &labels, n, n_classes);
+        let m_bad = mean_average_precision(&bad, &labels, n, n_classes);
+        assert!(m_good > m_bad + 20.0, "{m_good} vs {m_bad}");
+    }
+
+    #[test]
+    fn sigmoid_properties() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(50.0) > 0.999);
+        assert!(sigmoid(-50.0) < 0.001);
+    }
+}

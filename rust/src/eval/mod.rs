@@ -1,0 +1,6 @@
+//! Evaluation metrics: multi-label mean Average Precision (mAP), the
+//! detection-classification metric used throughout the paper's tables.
+
+pub mod ap;
+
+pub use ap::{average_precision, mean_average_precision, sigmoid};

@@ -1,0 +1,178 @@
+//! §5.5: runtime efficiency & bandwidth analysis.
+//!
+//! Two parts:
+//! 1. **memsim at paper scale** — the A100 substitution: replay dense vs VQ
+//!    inference traces through the 40 MB L2 model, report hit rates, DRAM
+//!    traffic, roofline times and the "breaking the DRAM speed limit" gap.
+//! 2. **measured serving throughput** — the real coordinator + PJRT CPU
+//!    path at our scale: requests/sec and latency percentiles per variant.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::common::Workbench;
+use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use crate::data::rng::Pcg32;
+use crate::kan::spec::{KanSpec, VqSpec};
+use crate::memsim::{analyze, BandwidthAnalysis, CacheConfig, DeviceModel};
+use crate::report::Table;
+use crate::vq::{compress, Precision};
+
+pub struct BandwidthResults {
+    pub paper_scale: BandwidthAnalysis,
+    pub orin_scale: BandwidthAnalysis,
+    pub serving: Vec<ServingRow>,
+}
+
+pub struct ServingRow {
+    pub variant: String,
+    pub throughput_rps: f64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub mean_batch: f64,
+}
+
+/// Simulated §5.5 at the paper's dimensions (3.2 M edges, K = 65 536).
+fn paper_sim(measure: usize) -> BandwidthAnalysis {
+    let spec = KanSpec::paper_scale();
+    let vq = VqSpec { codebook_size: 65536 };
+    analyze(&spec, &vq, &DeviceModel::a100(), CacheConfig::a100_l2(), 1, measure, 42)
+}
+
+fn orin_sim(measure: usize) -> BandwidthAnalysis {
+    let spec = KanSpec::paper_scale();
+    let vq = VqSpec { codebook_size: 65536 };
+    analyze(&spec, &vq, &DeviceModel::orin(), CacheConfig::orin_l2(), 1, measure, 42)
+}
+
+/// Measured serving throughput through the real coordinator.
+fn serving_bench(wb: &Workbench, requests: usize) -> Result<Vec<ServingRow>> {
+    let g = wb.spec.grid_size;
+    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let (ck, _) = wb.dense_checkpoint(g)?;
+    let dense_head = HeadWeights::from_checkpoint(&ck)?;
+    let fp32_head =
+        HeadWeights::from_checkpoint(&compress(&ck, &wb.spec, k, Precision::Fp32, 1)?.to_checkpoint())?;
+    let int8_head =
+        HeadWeights::from_checkpoint(&compress(&ck, &wb.spec, k, Precision::Int8, 1)?.to_checkpoint())?;
+
+    let mut rows = Vec::new();
+    for (name, head) in [
+        ("dense_kan", dense_head),
+        ("share_kan_fp32", fp32_head),
+        ("share_kan_int8", int8_head),
+    ] {
+        let handle = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
+            queue_capacity: 4096,
+        })?;
+        let c = handle.client.clone();
+        c.add_head("h", head)?;
+        // warmup
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..32 {
+            let _ = c.infer("h", rng.normal_vec(wb.spec.d_in, 0.0, 1.0));
+        }
+        // closed-loop load from 4 client threads
+        let t0 = std::time::Instant::now();
+        let per_thread = requests / 4;
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            let d_in = wb.spec.d_in;
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(100 + t);
+                let mut pending = Vec::new();
+                for _ in 0..per_thread {
+                    if let Ok(rx) = c.try_submit("h", rng.normal_vec(d_in, 0.0, 1.0)) {
+                        pending.push(rx);
+                    }
+                    if pending.len() >= 64 {
+                        for rx in pending.drain(..) {
+                            let _ = rx.recv();
+                        }
+                    }
+                }
+                for rx in pending {
+                    let _ = rx.recv();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let m = c.metrics();
+        rows.push(ServingRow {
+            variant: name.to_string(),
+            throughput_rps: (per_thread * 4) as f64 / elapsed.as_secs_f64(),
+            p50: m.latency.percentile(0.5),
+            p95: m.latency.percentile(0.95),
+            mean_batch: m.counters.mean_batch_size(),
+        });
+        handle.shutdown();
+    }
+    Ok(rows)
+}
+
+pub fn run(wb: &Workbench, sim_batch: usize, serve_requests: usize) -> Result<BandwidthResults> {
+    Ok(BandwidthResults {
+        paper_scale: paper_sim(sim_batch),
+        orin_scale: orin_sim(sim_batch),
+        serving: serving_bench(wb, serve_requests)?,
+    })
+}
+
+fn render_analysis(a: &BandwidthAnalysis) -> String {
+    let mut t = Table::new(
+        &format!("§5.5 memsim — {} @ paper dims (batch {})", a.device, a.batch),
+        &["Variant", "L2 hit", "DRAM/sample", "roofline/sample", "bound by"],
+    );
+    for v in [&a.dense, &a.vq_fp32, &a.vq_int8] {
+        t.row(vec![
+            v.label.clone(),
+            format!("{:.1}%", 100.0 * v.l2_hit_rate),
+            super::main_results::fmt_bytes(v.dram_bytes_per_sample as usize),
+            format!("{:.3} ms", 1e3 * v.roofline.total_s / a.batch as f64),
+            v.bound_by.to_string(),
+        ]);
+    }
+    format!(
+        "{}\nnaive dense DRAM speed limit for the batch: {:.2} ms;\n\
+         VQ-int8 roofline for the batch: {:.2} ms  ({})\n\
+         DRAM-traffic reduction dense/int8: {:.0}x  (paper claims 88x runtime memory)\n",
+        t.render(),
+        1e3 * a.dense_dram_limit_s,
+        1e3 * a.vq_int8.roofline.total_s,
+        if a.vq_int8.roofline.total_s < a.dense_dram_limit_s {
+            "BEATS the dense DRAM bound -> cache-resident, as the paper argues"
+        } else {
+            "does not beat the bound"
+        },
+        a.bandwidth_reduction,
+    )
+}
+
+pub fn render(r: &BandwidthResults) -> String {
+    let mut out = render_analysis(&r.paper_scale);
+    out.push('\n');
+    out.push_str(&render_analysis(&r.orin_scale));
+    let mut t = Table::new(
+        "Measured serving throughput (real coordinator + PJRT CPU, our scale)",
+        &["Variant", "req/s", "p50", "p95", "mean batch"],
+    );
+    for row in &r.serving {
+        t.row(vec![
+            row.variant.clone(),
+            format!("{:.0}", row.throughput_rps),
+            format!("{:?}", row.p50),
+            format!("{:?}", row.p95),
+            format!("{:.1}", row.mean_batch),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(&t.render());
+    out
+}

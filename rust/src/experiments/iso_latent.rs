@@ -1,0 +1,55 @@
+//! §4.1 iso-latent scaling: DRAM traffic (and therefore bandwidth-bound
+//! latency) as grid resolution G grows, dense vs VQ.  The paper's claim:
+//! capacity (G) decouples from latency because evaluation is one lookup +
+//! lerp and the codebook stays cache-resident.
+
+use anyhow::Result;
+
+use crate::kan::spec::{KanSpec, VqSpec};
+use crate::memsim::{iso_latent_sweep, CacheConfig};
+use crate::report::{ascii_chart, Table};
+
+pub struct IsoLatentResults {
+    pub points: Vec<(usize, f64, f64)>, // (G, dense DRAM/sample, vq DRAM/sample)
+}
+
+pub fn run(gs: &[usize], batch: usize) -> Result<IsoLatentResults> {
+    let spec = KanSpec::paper_scale();
+    let vq = VqSpec { codebook_size: 65536 };
+    Ok(IsoLatentResults {
+        points: iso_latent_sweep(&spec, &vq, CacheConfig::a100_l2(), gs, batch, 42),
+    })
+}
+
+pub fn render(r: &IsoLatentResults) -> String {
+    let mut t = Table::new(
+        "§4.1 — Iso-latent scaling: steady-state DRAM bytes/sample vs grid resolution G",
+        &["G", "dense DRAM/sample", "VQ-int8 DRAM/sample", "VQ one-time codebook"],
+    );
+    for &(g, dense, vq) in &r.points {
+        t.row(vec![
+            g.to_string(),
+            super::main_results::fmt_bytes(dense as usize),
+            if vq < 1.0 {
+                "0 (fully resident)".to_string()
+            } else {
+                super::main_results::fmt_bytes(vq as usize)
+            },
+            super::main_results::fmt_bytes(2 * 65536 * g), // int8, 2 layers
+        ]);
+    }
+    let chart = ascii_chart(
+        "DRAM traffic vs G (log10 bytes)",
+        &[
+            ("dense", r.points.iter().map(|&(g, d, _)| (g as f64, d.max(1.0).log10())).collect()),
+            ("vq", r.points.iter().map(|&(g, _, v)| (g as f64, v.max(1.0).log10())).collect()),
+        ],
+        10,
+    );
+    format!(
+        "{}\n{}\ndense traffic grows ~linearly in G; VQ traffic is ~flat: capacity is free\n\
+         once the codebook is resident (choose G on accuracy alone, §5.3).\n",
+        t.render(),
+        chart
+    )
+}

@@ -1,0 +1,20 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Each module exposes `run(...)` returning structured results and
+//! `render(...)` producing the paper-shaped table/series; the `repro`
+//! binary wires them to subcommands.
+
+pub mod bandwidth;
+pub mod codebook_sweep;
+pub mod common;
+pub mod iso_latent;
+pub mod l21_analysis;
+pub mod latency_load;
+pub mod main_results;
+pub mod ood_transfer;
+pub mod pruning_cliff;
+pub mod resolution_pareto;
+pub mod spectral_evidence;
+pub mod universal_basis;
+
+pub use common::{ExpConfig, SplitSel, Workbench};

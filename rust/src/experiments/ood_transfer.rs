@@ -1,0 +1,133 @@
+//! Table 2: zero-shot transfer to the distribution-shifted "COCO-shift"
+//! split.  Paper: dense 59.54, fp32 VQ 56.00 (94 % retention), Int8 VQ
+//! 40.88 (log-Int8 outlier sensitivity dominates the gap).
+//!
+//! Faithfulness note (recorded in EXPERIMENTS.md): the paper attributes the
+//! Int8 OOD collapse to activations "falling into the coarse regions of the
+//! Log-Int8 bins" — but its log-Int8 scheme quantizes *gains* (weights),
+//! whose error is input-independent.  We report the faithful weight-only
+//! scheme AND an extension variant that log-Int8-quantizes the first-layer
+//! *activations* with train-calibrated range, which is the mechanism that
+//! actually produces the paper's OOD cliff.
+
+use anyhow::Result;
+
+use super::common::{SplitSel, Workbench};
+use crate::kan::eval::VqModel;
+use crate::report::Table;
+use crate::vq::quant::{quantize_log_int8, dequantize_log_int8_one};
+use crate::vq::{compress, Precision as P};
+
+pub struct OodResults {
+    pub dense_voc: f64,
+    pub dense_coco: f64,
+    pub fp32_voc: f64,
+    pub fp32_coco: f64,
+    pub int8_voc: f64,
+    pub int8_coco: f64,
+    /// extension: + activation log-Int8 (train-calibrated)
+    pub int8_act_voc: f64,
+    pub int8_act_coco: f64,
+}
+
+/// Wrap a VqModel with train-calibrated log-Int8 quantization of the input
+/// features (the activation-quantization extension).
+pub struct ActQuantModel {
+    pub inner: VqModel,
+    params: crate::vq::quant::LogInt8Params,
+}
+
+impl ActQuantModel {
+    /// Calibrate the activation quantizer on the training distribution.
+    pub fn calibrated(inner: VqModel, train_x: &[f32]) -> ActQuantModel {
+        let q = quantize_log_int8(train_x);
+        ActQuantModel { inner, params: q.params }
+    }
+
+    pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
+        // quantize-dequantize the features through the calibrated bins:
+        // in-range values round-trip within half a log-step; OOD magnitudes
+        // clamp to the extreme bins — the Table 2 failure mode
+        let xq: Vec<f32> = x
+            .iter()
+            .map(|&v| {
+                if v == 0.0 {
+                    return 0.0;
+                }
+                let steps = if self.params.log_step > 0.0 {
+                    ((v.abs().ln() - self.params.log_lo) / self.params.log_step).round()
+                } else {
+                    0.0
+                };
+                let mag = steps.clamp(0.0, 126.0) as i32 + 1;
+                let q = (if v < 0.0 { -mag } else { mag }) as i8;
+                dequantize_log_int8_one(q, self.params)
+            })
+            .collect();
+        self.inner.forward(&xq, b)
+    }
+}
+
+pub fn run(wb: &Workbench) -> Result<OodResults> {
+    let g = wb.spec.grid_size;
+    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let (ck, _) = wb.dense_checkpoint(g)?;
+    let dense = wb.dense_model(&ck, g)?;
+    let fp32 = compress(&ck, &wb.spec, k, P::Fp32, wb.cfg.seed)?.to_eval_model();
+    let int8 = compress(&ck, &wb.spec, k, P::Int8, wb.cfg.seed)?.to_eval_model();
+    let int8_act = ActQuantModel::calibrated(
+        compress(&ck, &wb.spec, k, P::Int8, wb.cfg.seed)?.to_eval_model(),
+        &wb.splits.train.x,
+    );
+
+    let coco = wb.split(&SplitSel::Coco);
+    let d_out = wb.spec.d_out;
+    let map_act = |m: &ActQuantModel, sel: &SplitSel| {
+        let d = wb.split(sel);
+        let scores = m.forward(&d.x, d.n);
+        crate::eval::mean_average_precision(&scores, &d.y, d.n, d_out)
+    };
+    let _ = coco;
+    Ok(OodResults {
+        dense_voc: wb.map_dense(&dense, &SplitSel::Test),
+        dense_coco: wb.map_dense(&dense, &SplitSel::Coco),
+        fp32_voc: wb.map_vq(&fp32, &SplitSel::Test),
+        fp32_coco: wb.map_vq(&fp32, &SplitSel::Coco),
+        int8_voc: wb.map_vq(&int8, &SplitSel::Test),
+        int8_coco: wb.map_vq(&int8, &SplitSel::Coco),
+        int8_act_voc: map_act(&int8_act, &SplitSel::Test),
+        int8_act_coco: map_act(&int8_act, &SplitSel::Coco),
+    })
+}
+
+pub fn render(r: &OodResults) -> String {
+    let mut t = Table::new(
+        "Table 2 — Zero-shot transfer to COCO-shift (paper: 59.54 / 56.00 / 40.88)",
+        &["Method", "Prec.", "VOC-20 mAP", "COCO-shift mAP", "retention"],
+    );
+    let retention = |voc: f64, coco: f64, base: f64| {
+        format!("{:.0}%", 100.0 * coco / base.max(1e-9)).to_string()
+            + if (voc - coco).abs() < 1e-9 { "" } else { "" }
+    };
+    t.row(vec!["Dense KAN".into(), "FP32".into(),
+               format!("{:.2}", r.dense_voc), format!("{:.2}", r.dense_coco), "100%".into()]);
+    t.row(vec!["SHARe-KAN".into(), "FP32".into(),
+               format!("{:.2}", r.fp32_voc), format!("{:.2}", r.fp32_coco),
+               retention(r.fp32_voc, r.fp32_coco, r.dense_coco)]);
+    t.row(vec!["SHARe-KAN".into(), "Int8 (weights, faithful)".into(),
+               format!("{:.2}", r.int8_voc), format!("{:.2}", r.int8_coco),
+               retention(r.int8_voc, r.int8_coco, r.dense_coco)]);
+    t.row(vec!["SHARe-KAN +act-quant".into(), "Int8 (extension)".into(),
+               format!("{:.2}", r.int8_act_voc), format!("{:.2}", r.int8_act_coco),
+               retention(r.int8_act_voc, r.int8_act_coco, r.dense_coco)]);
+    let arch_loss = r.dense_coco - r.fp32_coco;
+    let int8_loss = r.fp32_coco - r.int8_coco;
+    let act_loss = r.fp32_coco - r.int8_act_coco;
+    format!(
+        "{}\nError decomposition (paper: VQ-arch 3.5pp, Int8 15.1pp):\n\
+         \x20 VQ architecture loss:      {arch_loss:+.2} pp\n\
+         \x20 weight log-Int8 loss:      {int8_loss:+.2} pp (input-independent by construction)\n\
+         \x20 +activation log-Int8 loss: {act_loss:+.2} pp (train-calibrated bins clamp OOD magnitudes)\n",
+        t.render()
+    )
+}

@@ -1,0 +1,88 @@
+//! Figure 1: the pruning cliff.  Magnitude-prune the trained KAN head at
+//! per-edge granularity and the MLP baseline at per-weight granularity,
+//! sweep sparsity, evaluate mAP.  Paper: KAN collapses 85.23 -> 45 at 10 %
+//! sparsity and to chance at 50 %; the MLP degrades gracefully.
+
+use anyhow::Result;
+
+use super::common::{SplitSel, Workbench};
+use crate::pruning::{prune_kan_grids, prune_mlp_weights};
+use crate::report::{ascii_chart, Table};
+
+pub struct CliffPoint {
+    pub sparsity: f64,
+    pub kan_map: f64,
+    pub mlp_map: f64,
+}
+
+pub fn run(wb: &Workbench, sparsities: &[f64]) -> Result<Vec<CliffPoint>> {
+    let g = wb.spec.grid_size;
+    let (kan_ck, _) = wb.dense_checkpoint(g)?;
+    let (mlp_ck, _) = wb.mlp_checkpoint()?;
+    let kan = wb.dense_model(&kan_ck, g)?;
+    let mlp = wb.mlp_model(&mlp_ck)?;
+    let dims = wb.spec.layer_dims();
+
+    let mut out = Vec::new();
+    for &s in sparsities {
+        // KAN: per-edge group pruning on both layers
+        let (g0, _) = prune_kan_grids(&kan.grids0, dims[0].0 * dims[0].1, g, s);
+        let (g1, _) = prune_kan_grids(&kan.grids1, dims[1].0 * dims[1].1, g, s);
+        let pruned_kan = crate::kan::eval::DenseModel { grids0: g0, grids1: g1, ..kan.clone_shape() };
+        let kan_map = wb.map_dense(&pruned_kan, &SplitSel::Test);
+        // MLP: per-weight magnitude pruning
+        let pruned_mlp = crate::kan::eval::MlpModel {
+            w1: prune_mlp_weights(&mlp.w1, s),
+            w2: prune_mlp_weights(&mlp.w2, s),
+            b1: mlp.b1.clone(),
+            b2: mlp.b2.clone(),
+            d_in: mlp.d_in,
+            d_hidden: mlp.d_hidden,
+            d_out: mlp.d_out,
+        };
+        let mlp_map = wb.map_mlp(&pruned_mlp, &SplitSel::Test);
+        out.push(CliffPoint { sparsity: s, kan_map, mlp_map });
+    }
+    Ok(out)
+}
+
+/// Helper so run() can clone shapes without the grids.
+trait CloneShape {
+    fn clone_shape(&self) -> Self;
+}
+
+impl CloneShape for crate::kan::eval::DenseModel {
+    fn clone_shape(&self) -> Self {
+        crate::kan::eval::DenseModel {
+            grids0: Vec::new(),
+            grids1: Vec::new(),
+            d_in: self.d_in,
+            d_hidden: self.d_hidden,
+            d_out: self.d_out,
+            g: self.g,
+        }
+    }
+}
+
+pub fn render(points: &[CliffPoint], base_rate: f64) -> String {
+    let mut t = Table::new(
+        "Figure 1 — The pruning cliff (paper: KAN 85.23 -> ~45 @ 10%, ~0 @ 50%; MLP graceful)",
+        &["Sparsity (%)", "KAN mAP (%)", "MLP mAP (%)"],
+    );
+    for p in points {
+        t.row(vec![
+            format!("{:.0}", p.sparsity * 100.0),
+            format!("{:.2}", p.kan_map),
+            format!("{:.2}", p.mlp_map),
+        ]);
+    }
+    let chart = ascii_chart(
+        "mAP vs sparsity",
+        &[
+            ("KAN (per-edge)", points.iter().map(|p| (p.sparsity * 100.0, p.kan_map)).collect()),
+            ("MLP (per-weight)", points.iter().map(|p| (p.sparsity * 100.0, p.mlp_map)).collect()),
+        ],
+        12,
+    );
+    format!("{}\nchance-level (label base rate): {base_rate:.1}%\n\n{}", t.render(), chart)
+}

@@ -1,0 +1,240 @@
+//! Cubic B-splines + the LUTHAM tabulation pass.
+//!
+//! The paper trains with cubic B-splines (§A.1, k = 3) but *serves* with a
+//! lookup table: "evaluation is a single index lookup and linear
+//! interpolation" (§4.3).  The bridge is tabulation — sample the trained
+//! spline at G' uniform points and serve the PLI table.  This module
+//! implements the uniform cubic B-spline basis, evaluation, least-squares
+//! fitting, and the tabulation pass with its error analysis (how many PLI
+//! points reproduce a cubic spline to a given tolerance — the G' selection
+//! LUTHAM makes at export time).
+
+/// Uniform cubic B-spline over [-1, 1] with `n_coef` control points.
+///
+/// Basis: cardinal cubic B-splines on knots spaced h = 2/(n_coef-3), using
+/// the standard uniform cubic blending.  n_coef >= 4.
+#[derive(Debug, Clone)]
+pub struct CubicSpline {
+    pub coef: Vec<f32>,
+}
+
+fn blend(t: f32) -> [f32; 4] {
+    // uniform cubic B-spline segment blending functions, t in [0,1)
+    let t2 = t * t;
+    let t3 = t2 * t;
+    [
+        (1.0 - t).powi(3) / 6.0,
+        (3.0 * t3 - 6.0 * t2 + 4.0) / 6.0,
+        (-3.0 * t3 + 3.0 * t2 + 3.0 * t + 1.0) / 6.0,
+        t3 / 6.0,
+    ]
+}
+
+impl CubicSpline {
+    pub fn new(coef: Vec<f32>) -> Self {
+        assert!(coef.len() >= 4, "cubic spline needs >= 4 control points");
+        CubicSpline { coef }
+    }
+
+    /// Number of polynomial segments covering [-1, 1].
+    pub fn segments(&self) -> usize {
+        self.coef.len() - 3
+    }
+
+    /// Evaluate at u in [-1, 1] (clamped).
+    pub fn eval(&self, u: f32) -> f32 {
+        let segs = self.segments() as f32;
+        let pos = ((u.clamp(-1.0, 1.0) + 1.0) / 2.0) * segs;
+        let seg = (pos.floor() as usize).min(self.segments() - 1);
+        let t = pos - seg as f32;
+        let b = blend(t);
+        (0..4).map(|j| b[j] * self.coef[seg + j]).sum()
+    }
+
+    /// Least-squares fit to samples (u_i, y_i), u in [-1, 1], with a tiny
+    /// ridge term for stability.  Normal equations over the (small) basis.
+    pub fn fit(us: &[f32], ys: &[f32], n_coef: usize) -> CubicSpline {
+        assert_eq!(us.len(), ys.len());
+        assert!(n_coef >= 4);
+        let segs = n_coef - 3;
+        let m = n_coef;
+        let mut ata = vec![0f64; m * m];
+        let mut aty = vec![0f64; m];
+        for (&u, &y) in us.iter().zip(ys) {
+            let pos = ((u.clamp(-1.0, 1.0) + 1.0) / 2.0) * segs as f32;
+            let seg = (pos.floor() as usize).min(segs - 1);
+            let t = pos - seg as f32;
+            let b = blend(t);
+            for j in 0..4 {
+                aty[seg + j] += b[j] as f64 * y as f64;
+                for l in 0..4 {
+                    ata[(seg + j) * m + (seg + l)] += b[j] as f64 * b[l] as f64;
+                }
+            }
+        }
+        for i in 0..m {
+            ata[i * m + i] += 1e-8;
+        }
+        let coef = solve_spd(&mut ata, &mut aty, m);
+        CubicSpline::new(coef.iter().map(|&v| v as f32).collect())
+    }
+}
+
+/// Gaussian elimination with partial pivoting for the small SPD system.
+fn solve_spd(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        if d.abs() < 1e-30 {
+            continue;
+        }
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0f64; n];
+    for r in (0..n).rev() {
+        let mut acc = b[r];
+        for c in (r + 1)..n {
+            acc -= a[r * n + c] * x[c];
+        }
+        let d = a[r * n + r];
+        x[r] = if d.abs() < 1e-30 { 0.0 } else { acc / d };
+    }
+    x
+}
+
+/// LUTHAM tabulation: sample a spline (any callable) at G uniform points
+/// over [-1, 1] -> the PLI grid the runtime serves.
+pub fn tabulate<F: Fn(f32) -> f32>(f: F, g: usize) -> Vec<f32> {
+    assert!(g >= 2);
+    (0..g)
+        .map(|i| f(-1.0 + 2.0 * i as f32 / (g - 1) as f32))
+        .collect()
+}
+
+/// Evaluate a PLI grid at u (same math as kan::eval).
+pub fn pli_eval(grid: &[f32], u: f32) -> f32 {
+    let g = grid.len();
+    let pos = ((u.clamp(-1.0, 1.0) + 1.0) * (g - 1) as f32 / 2.0).clamp(0.0, (g - 1) as f32);
+    let i0 = (pos.floor() as usize).min(g - 2);
+    let f = pos - i0 as f32;
+    (1.0 - f) * grid[i0] + f * grid[i0 + 1]
+}
+
+/// Max |spline - PLI(tabulate(spline, g))| over a dense probe grid — the
+/// tabulation-error curve LUTHAM's export pass uses to pick G'.
+pub fn tabulation_error(spline: &CubicSpline, g: usize, probes: usize) -> f32 {
+    let grid = tabulate(|u| spline.eval(u), g);
+    (0..probes)
+        .map(|i| {
+            let u = -1.0 + 2.0 * i as f32 / (probes - 1) as f32;
+            (spline.eval(u) - pli_eval(&grid, u)).abs()
+        })
+        .fold(0f32, f32::max)
+}
+
+/// Smallest G whose tabulation error is below `tol` (searches doubling).
+pub fn min_grid_for_tolerance(spline: &CubicSpline, tol: f32, g_max: usize) -> usize {
+    let mut g = 2;
+    while g <= g_max {
+        if tabulation_error(spline, g, 512) <= tol {
+            return g;
+        }
+        g *= 2;
+    }
+    g_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn constant_spline_is_constant() {
+        let s = CubicSpline::new(vec![2.0; 8]);
+        for i in 0..50 {
+            let u = -1.0 + 2.0 * i as f32 / 49.0;
+            assert!((s.eval(u) - 2.0).abs() < 1e-5, "{u} -> {}", s.eval(u));
+        }
+    }
+
+    #[test]
+    fn partition_of_unity_blending() {
+        for i in 0..20 {
+            let t = i as f32 / 20.0;
+            let b = blend(t);
+            let sum: f32 = b.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(b.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn fit_recovers_smooth_function() {
+        let mut rng = Pcg32::seeded(1);
+        let us: Vec<f32> = (0..400).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let f = |u: f32| (2.0 * u).sin() + 0.5 * u;
+        let ys: Vec<f32> = us.iter().map(|&u| f(u)).collect();
+        let s = CubicSpline::fit(&us, &ys, 12);
+        for i in 0..50 {
+            let u = -0.95 + 1.9 * i as f32 / 49.0;
+            assert!((s.eval(u) - f(u)).abs() < 0.02, "u={u}: {} vs {}", s.eval(u), f(u));
+        }
+    }
+
+    #[test]
+    fn tabulation_error_decreases_with_g() {
+        let mut rng = Pcg32::seeded(2);
+        let coef = rng.normal_vec(10, 0.0, 1.0);
+        let s = CubicSpline::new(coef);
+        let e4 = tabulation_error(&s, 4, 512);
+        let e16 = tabulation_error(&s, 16, 512);
+        let e64 = tabulation_error(&s, 64, 512);
+        assert!(e16 < e4);
+        assert!(e64 < e16);
+        assert!(e64 < 0.02, "{e64}");
+    }
+
+    #[test]
+    fn min_grid_search_monotone_in_tol() {
+        let mut rng = Pcg32::seeded(3);
+        let s = CubicSpline::new(rng.normal_vec(12, 0.0, 1.0));
+        let loose = min_grid_for_tolerance(&s, 0.1, 256);
+        let tight = min_grid_for_tolerance(&s, 0.005, 256);
+        assert!(tight >= loose, "{tight} vs {loose}");
+    }
+
+    #[test]
+    fn tabulated_pli_matches_at_knots() {
+        let mut rng = Pcg32::seeded(4);
+        let s = CubicSpline::new(rng.normal_vec(9, 0.0, 1.0));
+        let g = 10;
+        let grid = tabulate(|u| s.eval(u), g);
+        for (i, &gv) in grid.iter().enumerate() {
+            let u = -1.0 + 2.0 * i as f32 / (g - 1) as f32;
+            assert!((pli_eval(&grid, u) - gv).abs() < 1e-6);
+            assert!((s.eval(u) - gv).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Versioned binary checkpoint format ("SKPT").
+//!
+//! Layout: magic `SKPT` + u32 version + u64 meta-JSON length + meta JSON +
+//! u32 tensor count + tensor records (see tensor::serialize).  Used for
+//! trained dense heads, VQ-compressed heads and optimizer state; written by
+//! the Rust training loop and consumed by the compression pipeline and the
+//! serving coordinator.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::tensor::{read_tensor, write_tensor, Tensor};
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 4] = b"SKPT";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub meta: Json,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(meta: Json) -> Self {
+        Checkpoint { meta, tensors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))
+    }
+
+    /// Total parameter bytes (the "storage" size in Table 1 terms).
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.byte_len()).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let meta = json::to_string(&self.meta);
+        w.write_all(&(meta.len() as u64).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            write_tensor(&mut w, name, t)?;
+        }
+        w.flush()
+    }
+
+    pub fn load(path: &Path) -> io::Result<Checkpoint> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "not a SKPT checkpoint"));
+        }
+        let mut ver = [0u8; 4];
+        r.read_exact(&mut ver)?;
+        let version = u32::from_le_bytes(ver);
+        if version != VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unsupported checkpoint version {version}"),
+            ));
+        }
+        let mut len8 = [0u8; 8];
+        r.read_exact(&mut len8)?;
+        let meta_len = u64::from_le_bytes(len8) as usize;
+        if meta_len > 16 << 20 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "meta too large"));
+        }
+        let mut meta_buf = vec![0u8; meta_len];
+        r.read_exact(&mut meta_buf)?;
+        let meta = json::parse(
+            std::str::from_utf8(&meta_buf)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?,
+        )
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        let mut cnt4 = [0u8; 4];
+        r.read_exact(&mut cnt4)?;
+        let count = u32::from_le_bytes(cnt4) as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let (name, t) = read_tensor(&mut r)?;
+            tensors.insert(name, t);
+        }
+        Ok(Checkpoint { meta, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sharekan-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut ck = Checkpoint::new(Json::obj(vec![
+            ("model", Json::str("dense_kan")),
+            ("grid_size", Json::num(10)),
+        ]));
+        ck.insert("grids0", Tensor::from_f32(&[2, 3, 4], &(0..24).map(|i| i as f32).collect::<Vec<_>>()));
+        ck.insert("idx", Tensor::from_i32(&[2, 2], &[0, 1, 2, 3]));
+        ck.insert("cb_q", Tensor::from_i8(&[4], &[-1, 0, 1, 127]));
+        let path = tmp("roundtrip.skpt");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.meta.get("model").unwrap().as_str(), Some("dense_kan"));
+        assert_eq!(loaded.tensors.len(), 3);
+        assert_eq!(loaded.get("grids0").unwrap().as_f32()[23], 23.0);
+        assert_eq!(loaded.get("cb_q").unwrap().as_i8(), vec![-1, 0, 1, 127]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("badmagic.skpt");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn total_bytes_accounting() {
+        let mut ck = Checkpoint::new(Json::Null);
+        ck.insert("a", Tensor::from_f32(&[10], &[0.0; 10]));
+        ck.insert("b", Tensor::from_i8(&[5], &[0; 5]));
+        assert_eq!(ck.total_bytes(), 45);
+    }
+}

@@ -1,0 +1,298 @@
+//! Pure-Rust PLI (piecewise-linear interpolation) KAN evaluator.
+//!
+//! Bit-for-bit mirror of python/compile/kernels/ref.py: tanh squash, uniform
+//! knots on [-1, 1], index + lerp, per-edge gain/bias under VQ.  Used by the
+//! pruning sweeps and ablations (no PJRT round trip per configuration) and
+//! cross-checked against the PJRT artifacts in rust/tests/.
+
+/// Dense KAN layer: x [b, n_in] (row-major), grids [n_in, n_out, g].
+/// Output [b, n_out].
+pub fn dense_layer(x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize, g: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * n_in);
+    assert_eq!(grids.len(), n_in * n_out * g);
+    let mut out = vec![0f32; b * n_out];
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let xrow = &x[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, &xi) in xrow.iter().enumerate() {
+            let u = xi.tanh();
+            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+            let i0 = (pos.floor() as usize).min(g - 2);
+            let f = pos - i0 as f32;
+            let base = i * n_out * g;
+            for j in 0..n_out {
+                let row = base + j * g + i0;
+                // lerp between adjacent knots
+                orow[j] += (1.0 - f) * grids[row] + f * grids[row + 1];
+            }
+        }
+    }
+    out
+}
+
+/// VQ layer parameters (fp32).
+pub struct VqLayerParams<'a> {
+    pub codebook: &'a [f32], // [k, g]
+    pub k: usize,
+    pub g: usize,
+    pub idx: &'a [i32],      // [n_in, n_out]
+    pub gain: &'a [f32],     // [n_in, n_out]
+    pub bias_sum: &'a [f32], // [n_out]
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+/// SHARe-KAN VQ layer: per-edge codebook row, lerp, gain, folded bias.
+pub fn vq_layer(x: &[f32], b: usize, p: &VqLayerParams) -> Vec<f32> {
+    assert_eq!(x.len(), b * p.n_in);
+    assert_eq!(p.codebook.len(), p.k * p.g);
+    assert_eq!(p.idx.len(), p.n_in * p.n_out);
+    let g = p.g;
+    let scale = (g - 1) as f32 / 2.0;
+    let mut out = vec![0f32; b * p.n_out];
+    for bi in 0..b {
+        let xrow = &x[bi * p.n_in..(bi + 1) * p.n_in];
+        let orow = &mut out[bi * p.n_out..(bi + 1) * p.n_out];
+        for (i, &xi) in xrow.iter().enumerate() {
+            let u = xi.tanh();
+            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+            let i0 = (pos.floor() as usize).min(g - 2);
+            let f = pos - i0 as f32;
+            let erow = i * p.n_out;
+            for j in 0..p.n_out {
+                let k = p.idx[erow + j] as usize;
+                debug_assert!(k < p.k, "codebook index out of range");
+                let c = k * g + i0;
+                let interp = (1.0 - f) * p.codebook[c] + f * p.codebook[c + 1];
+                orow[j] += p.gain[erow + j] * interp;
+            }
+        }
+        for j in 0..p.n_out {
+            orow[j] += p.bias_sum[j];
+        }
+    }
+    out
+}
+
+/// Log-Int8 gain dequantization — must match ref.dequant_gain_log_int8.
+pub fn dequant_gain_log_int8(q: i8, log_lo: f32, log_step: f32) -> f32 {
+    if q == 0 {
+        return 0.0;
+    }
+    let mag = (log_lo + (q.unsigned_abs() as f32 - 1.0) * log_step).exp();
+    if q < 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Linear-Int8 codebook dequantization.
+pub fn dequant_codebook_int8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Full dense model: two layers.
+pub struct DenseModel {
+    pub grids0: Vec<f32>, // [d_in, d_hidden, g]
+    pub grids1: Vec<f32>, // [d_hidden, d_out, g]
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub g: usize,
+}
+
+impl DenseModel {
+    pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
+        let h = dense_layer(x, b, &self.grids0, self.d_in, self.d_hidden, self.g);
+        dense_layer(&h, b, &self.grids1, self.d_hidden, self.d_out, self.g)
+    }
+}
+
+/// Full fp32 VQ model: two VQ layers (owned storage variant).
+pub struct VqModel {
+    pub codebook0: Vec<f32>,
+    pub idx0: Vec<i32>,
+    pub gain0: Vec<f32>,
+    pub bias_sum0: Vec<f32>,
+    pub codebook1: Vec<f32>,
+    pub idx1: Vec<i32>,
+    pub gain1: Vec<f32>,
+    pub bias_sum1: Vec<f32>,
+    pub k: usize,
+    pub g: usize,
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+}
+
+impl VqModel {
+    pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
+        let p0 = VqLayerParams {
+            codebook: &self.codebook0,
+            k: self.k,
+            g: self.g,
+            idx: &self.idx0,
+            gain: &self.gain0,
+            bias_sum: &self.bias_sum0,
+            n_in: self.d_in,
+            n_out: self.d_hidden,
+        };
+        let h = vq_layer(x, b, &p0);
+        let p1 = VqLayerParams {
+            codebook: &self.codebook1,
+            k: self.k,
+            g: self.g,
+            idx: &self.idx1,
+            gain: &self.gain1,
+            bias_sum: &self.bias_sum1,
+            n_in: self.d_hidden,
+            n_out: self.d_out,
+        };
+        vq_layer(&h, b, &p1)
+    }
+}
+
+/// MLP baseline: relu(x@w1 + b1)@w2 + b2.
+pub struct MlpModel {
+    pub w1: Vec<f32>, // [d_in, d_hidden]
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>, // [d_hidden, d_out]
+    pub b2: Vec<f32>,
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+}
+
+impl MlpModel {
+    pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
+        let mut h = vec![0f32; b * self.d_hidden];
+        for bi in 0..b {
+            for j in 0..self.d_hidden {
+                let mut acc = self.b1[j];
+                for i in 0..self.d_in {
+                    acc += x[bi * self.d_in + i] * self.w1[i * self.d_hidden + j];
+                }
+                h[bi * self.d_hidden + j] = acc.max(0.0);
+            }
+        }
+        let mut out = vec![0f32; b * self.d_out];
+        for bi in 0..b {
+            for j in 0..self.d_out {
+                let mut acc = self.b2[j];
+                for i in 0..self.d_hidden {
+                    acc += h[bi * self.d_hidden + i] * self.w2[i * self.d_out + j];
+                }
+                out[bi * self.d_out + j] = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn dense_layer_constant_grid_is_constant() {
+        // grid values all = c -> phi(x) = c regardless of x; layer sums n_in*c
+        let (b, n_in, n_out, g) = (3, 4, 5, 7);
+        let grids = vec![2.5f32; n_in * n_out * g];
+        let x: Vec<f32> = (0..b * n_in).map(|i| (i as f32 - 5.0) * 3.0).collect();
+        let out = dense_layer(&x, b, &grids, n_in, n_out, g);
+        for &v in &out {
+            assert!((v - 2.5 * n_in as f32).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn dense_layer_interpolates_linearly() {
+        // grid = knot positions themselves -> phi(x) = tanh(x)
+        let g = 11;
+        let knots: Vec<f32> = (0..g).map(|i| -1.0 + 2.0 * i as f32 / (g - 1) as f32).collect();
+        let out = dense_layer(&[0.3f32], 1, &knots, 1, 1, g);
+        assert!((out[0] - 0.3f32.tanh()).abs() < 1e-6, "{}", out[0]);
+    }
+
+    #[test]
+    fn vq_layer_identity_codebook_matches_dense() {
+        let mut rng = Pcg32::seeded(1);
+        let (b, n_in, n_out, g) = (4, 3, 6, 5);
+        let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+        // decompose each edge exactly: bias = mean, gain = std, shape row
+        let mut codebook = Vec::new();
+        let mut idx = Vec::new();
+        let mut gain = Vec::new();
+        let mut bias = vec![0f32; n_out];
+        for i in 0..n_in {
+            for j in 0..n_out {
+                let row = &grids[(i * n_out + j) * g..(i * n_out + j + 1) * g];
+                let mean = row.iter().sum::<f32>() / g as f32;
+                let std = (row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / g as f32)
+                    .sqrt()
+                    .max(1e-9);
+                codebook.extend(row.iter().map(|v| (v - mean) / std));
+                idx.push((i * n_out + j) as i32);
+                gain.push(std);
+                bias[j] += mean;
+            }
+        }
+        let x = rng.normal_vec(b * n_in, 0.0, 1.0);
+        let want = dense_layer(&x, b, &grids, n_in, n_out, g);
+        let p = VqLayerParams {
+            codebook: &codebook,
+            k: n_in * n_out,
+            g,
+            idx: &idx,
+            gain: &gain,
+            bias_sum: &bias,
+            n_in,
+            n_out,
+        };
+        let got = vq_layer(&x, b, &p);
+        for (w, gv) in want.iter().zip(&got) {
+            assert!((w - gv).abs() < 1e-4, "{w} vs {gv}");
+        }
+    }
+
+    #[test]
+    fn log_int8_dequant_properties() {
+        assert_eq!(dequant_gain_log_int8(0, -5.0, 0.05), 0.0);
+        let pos = dequant_gain_log_int8(64, -5.0, 0.05);
+        let neg = dequant_gain_log_int8(-64, -5.0, 0.05);
+        assert!((pos + neg).abs() < 1e-9);
+        assert!(dequant_gain_log_int8(127, -5.0, 0.05) > pos);
+    }
+
+    #[test]
+    fn mlp_forward_known_values() {
+        let m = MlpModel {
+            w1: vec![1.0, 0.0, 0.0, 1.0], // 2x2 identity
+            b1: vec![0.0, -1.0],
+            w2: vec![1.0, 1.0],           // 2x1 sum
+            b2: vec![0.5],
+            d_in: 2,
+            d_hidden: 2,
+            d_out: 1,
+        };
+        // x = [2, 3]: h = [relu(2), relu(3-1)] = [2,2]; out = 4.5
+        let out = m.forward(&[2.0, 3.0], 1);
+        assert!((out[0] - 4.5).abs() < 1e-6);
+        // negative pre-activation clamps
+        let out = m.forward(&[-2.0, 0.5], 1);
+        assert!((out[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extreme_inputs_are_finite() {
+        let mut rng = Pcg32::seeded(2);
+        let (n_in, n_out, g) = (3, 4, 6);
+        let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+        let x = vec![1e30f32, -1e30, 0.0];
+        let out = dense_layer(&x, 1, &grids, n_in, n_out, g);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,10 @@
+//! KAN model representation: specs, checkpoints, and the pure-Rust PLI
+//! reference evaluator (cross-checked against the PJRT path in tests).
+
+pub mod bspline;
+pub mod checkpoint;
+pub mod eval;
+pub mod spec;
+
+pub use checkpoint::Checkpoint;
+pub use spec::{KanSpec, VqSpec};

@@ -1,0 +1,107 @@
+//! Model specifications: shapes of the KAN head and its VQ-compressed form.
+//!
+//! Mirrors python/compile/config.py (the Python side is authoritative at
+//! build time via artifacts/manifest.json; `KanSpec::from_manifest` reads it
+//! back so the two can never drift).
+
+use crate::util::json::Json;
+
+/// Dense KAN head: d_in -> d_hidden -> d_out with G-point PLI grids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KanSpec {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub grid_size: usize,
+}
+
+impl Default for KanSpec {
+    fn default() -> Self {
+        KanSpec { d_in: 64, d_hidden: 128, d_out: 20, grid_size: 10 }
+    }
+}
+
+impl KanSpec {
+    pub fn layer_dims(&self) -> [(usize, usize); 2] {
+        [(self.d_in, self.d_hidden), (self.d_hidden, self.d_out)]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.layer_dims().iter().map(|(i, o)| i * o).sum()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_edges() * self.grid_size
+    }
+
+    /// Uncompressed fp32 grid bytes (the "runtime memory" of the dense head).
+    pub fn dense_bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    pub fn from_manifest(m: &Json) -> Option<KanSpec> {
+        let model = m.get("model")?;
+        Some(KanSpec {
+            d_in: model.get("d_in")?.as_usize()?,
+            d_hidden: model.get("d_hidden")?.as_usize()?,
+            d_out: model.get("d_out")?.as_usize()?,
+            grid_size: model.get("grid_size")?.as_usize()?,
+        })
+    }
+
+    /// The paper's head scale (§4.3: 3.2M edges, G=10) used for
+    /// paper-dimension accounting and memsim traces where only shapes matter.
+    pub fn paper_scale() -> KanSpec {
+        // 1600*1984 + 1984*12 ≈ 3.2M edges
+        KanSpec { d_in: 1600, d_hidden: 1984, d_out: 12, grid_size: 10 }
+    }
+}
+
+/// VQ compression spec (per-layer shared codebook).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VqSpec {
+    pub codebook_size: usize,
+}
+
+impl Default for VqSpec {
+    fn default() -> Self {
+        VqSpec { codebook_size: 512 }
+    }
+}
+
+impl VqSpec {
+    pub fn index_bits(&self) -> usize {
+        (usize::BITS - (self.codebook_size - 1).leading_zeros()) as usize
+    }
+
+    pub fn from_manifest(m: &Json) -> Option<VqSpec> {
+        Some(VqSpec { codebook_size: m.get("model")?.get("codebook_size")?.as_usize()? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_python_config() {
+        let s = KanSpec::default();
+        assert_eq!(s.num_edges(), 64 * 128 + 128 * 20);
+        assert_eq!(s.num_params(), s.num_edges() * 10);
+    }
+
+    #[test]
+    fn paper_scale_edges() {
+        let s = KanSpec::paper_scale();
+        let e = s.num_edges();
+        assert!((3_100_000..3_300_000).contains(&e), "{e}");
+    }
+
+    #[test]
+    fn index_bits() {
+        assert_eq!(VqSpec { codebook_size: 65536 }.index_bits(), 16);
+        assert_eq!(VqSpec { codebook_size: 1024 }.index_bits(), 10);
+        assert_eq!(VqSpec { codebook_size: 512 }.index_bits(), 9);
+        assert_eq!(VqSpec { codebook_size: 2 }.index_bits(), 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! SHARe-KAN: Holographic Vector Quantization for Memory-Bound Inference.
+//!
+//! Rust + JAX + Pallas (three-layer, AOT via PJRT) reproduction of the
+//! paper. See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+//!
+//! Layer map:
+//! * L3 (this crate): serving coordinator, compression pipeline, and every
+//!   substrate (cache simulator, memory planner, metrics, data, eval).
+//! * L2/L1 (python/compile): JAX models + Pallas LUTHAM kernels, AOT-lowered
+//!   once to `artifacts/*.hlo.txt`; never on the request path.
+//! * runtime: PJRT CPU client that loads and executes the artifacts.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod memplan;
+pub mod memsim;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod spectral;
+pub mod kan;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod vq;

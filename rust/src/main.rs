@@ -1,0 +1,253 @@
+//! `share-kan` — the deployment CLI: train, compress, inspect and serve
+//! SHARe-KAN heads over the AOT artifacts.
+//!
+//! Subcommands:
+//!   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 2e-2] [--seed 42]
+//!   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
+//!   inspect  --in ck.skpt
+//!   eval     --in ck.skpt [--split test|coco] [--seed 42]
+//!   serve    --head ck.skpt [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+//!   plan     [--k 512] [--int8]            (static memory plan, §4.3)
+//!
+//! Python never runs here: everything executes through the PJRT runtime
+//! over artifacts/ produced once by `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::data::{standard_splits, Pcg32};
+use share_kan::eval::mean_average_precision;
+use share_kan::kan::checkpoint::Checkpoint;
+use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::memplan::plan_vq_head;
+use share_kan::runtime::Engine;
+use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::util::cli::Args;
+use share_kan::vq::{compress, load_compressed, Precision};
+
+const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options]
+  train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]
+  compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
+  inspect  --in ck.skpt
+  eval     --in ck.skpt [--split test|coco] [--seed 42]
+  serve    --head ck.skpt [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+  plan     [--k 512] [--int8]
+common: --artifacts DIR (default ./artifacts or $SHARE_KAN_ARTIFACTS)";
+
+fn main() {
+    let args = Args::from_env();
+    if args.positional.is_empty() || args.flag("help") {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or(
+        "artifacts",
+        share_kan::runtime::default_artifacts_dir().to_str().unwrap(),
+    ))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.positional[0].as_str() {
+        "train" => cmd_train(args),
+        "compress" => cmd_compress(args),
+        "inspect" => cmd_inspect(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "plan" => cmd_plan(args),
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let spec = engine.manifest.kan_spec;
+    let g = args.get_usize("g", spec.grid_size);
+    let steps = args.get_usize("steps", 2000);
+    let seed = args.get_u64("seed", 42);
+    let data = standard_splits(seed, spec.d_in, spec.d_out, 4096, 1024, 2048, 2048);
+    let mut trainer = KanTrainer::new(&engine, g, seed)?;
+    println!("training dense KAN g={g} for {steps} steps on PJRT ({})...",
+             engine.platform());
+    let log = trainer.fit(&data.train, &TrainConfig {
+        steps,
+        base_lr: args.get_f64("lr", 2e-2) as f32,
+        seed,
+        log_every: (steps / 20).max(1),
+    })?;
+    for (s, l) in &log.losses {
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    let ck = trainer.to_checkpoint()?;
+    ck.save(&out)?;
+    println!("saved {} ({} bytes)", out.display(), ck.total_bytes());
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.get("in").context("--in required")?);
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let ck = Checkpoint::load(&input)?;
+    let spec = spec_from_meta(&ck)?;
+    let k = args.get_usize("k", 512);
+    let precision = if args.flag("int8") { Precision::Int8 } else { Precision::Fp32 };
+    let c = compress(&ck, &spec, k, precision, args.get_u64("seed", 42))?;
+    println!("compressed: K={k} precision={precision:?} R² per layer = {:?}", c.r2);
+    let cck = c.to_checkpoint();
+    cck.save(&out)?;
+    println!(
+        "saved {} ({} bytes; dense was {} bytes -> {:.1}x)",
+        out.display(),
+        cck.total_bytes(),
+        ck.total_bytes(),
+        ck.total_bytes() as f64 / cck.total_bytes() as f64
+    );
+    Ok(())
+}
+
+fn spec_from_meta(ck: &Checkpoint) -> Result<KanSpec> {
+    let get = |k: &str| ck.meta.get(k).and_then(|j| j.as_usize());
+    Ok(KanSpec {
+        d_in: get("d_in").context("meta d_in")?,
+        d_hidden: get("d_hidden").context("meta d_hidden")?,
+        d_out: get("d_out").context("meta d_out")?,
+        grid_size: get("grid_size").context("meta grid_size")?,
+    })
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.get("in").context("--in required")?);
+    let ck = Checkpoint::load(&input)?;
+    println!("meta: {}", share_kan::util::json::to_string(&ck.meta));
+    println!("{} tensors, {} bytes total:", ck.tensors.len(), ck.total_bytes());
+    for (name, t) in &ck.tensors {
+        println!("  {name:<14} {t:?}  {} bytes", t.byte_len());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.get("in").context("--in required")?);
+    let ck = Checkpoint::load(&input)?;
+    let seed = args.get_u64("seed", 42);
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let spec = engine.manifest.kan_spec;
+    let data = standard_splits(seed, spec.d_in, spec.d_out, 64, 64, 2048, 2048);
+    let (x, y, n) = match args.get_or("split", "test").as_str() {
+        "coco" => (&data.coco.x, &data.coco.y, data.coco.n),
+        _ => (&data.test.x, &data.test.y, data.test.n),
+    };
+    let model_name = ck.meta.get("model").and_then(|j| j.as_str()).unwrap_or("");
+    let scores = match model_name {
+        "dense_kan" => {
+            let g = spec_from_meta(&ck)?.grid_size;
+            share_kan::kan::eval::DenseModel {
+                grids0: ck.require("grids0")?.as_f32(),
+                grids1: ck.require("grids1")?.as_f32(),
+                d_in: spec.d_in,
+                d_hidden: spec.d_hidden,
+                d_out: spec.d_out,
+                g,
+            }
+            .forward(x, n)
+        }
+        "vq_kan_fp32" | "vq_kan_int8" => load_compressed(&ck)?.forward(x, n),
+        other => anyhow::bail!("cannot eval model '{other}'"),
+    };
+    let map = mean_average_precision(&scores, y, n, spec.d_out);
+    println!("{model_name}: mAP = {map:.2}% on {n} samples ({})",
+             args.get_or("split", "test"));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let head_path = PathBuf::from(args.get("head").context("--head required")?);
+    let ck = Checkpoint::load(&head_path)?;
+    let head = HeadWeights::from_checkpoint(&ck)?;
+    println!("serving head '{}' ({} weight bytes)", head.model(), head.weight_bytes());
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts_dir(args),
+        policy: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 128),
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
+        },
+        queue_capacity: 4096,
+    })?;
+    let c = handle.client.clone();
+    c.add_head("default", head)?;
+    if let Some(addr) = args.get("tcp") {
+        // long-running TCP mode: newline-delimited JSON until Ctrl-C
+        let server = share_kan::coordinator::TcpServer::start(c, addr)?;
+        println!("listening on {} — protocol: {{\"head\":\"default\",\"features\":[..]}}\\n",
+                 server.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    // synthetic closed-loop load
+    let n = args.get_usize("requests", 1000);
+    let engine_spec = {
+        let e = Engine::load(&artifacts_dir(args))?;
+        e.manifest.kan_spec
+    };
+    let mut rng = Pcg32::seeded(9);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        pending.push(c.try_submit("default", rng.normal_vec(engine_spec.d_in, 0.0, 1.0))?);
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                rx.recv().ok();
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().ok();
+    }
+    let dt = t0.elapsed();
+    let m = c.metrics();
+    println!("{n} requests in {dt:?} -> {:.0} req/s", n as f64 / dt.as_secs_f64());
+    println!("latency: {}", m.latency.summary());
+    println!("batches: {} (mean size {:.1}, padding {:.1}%)",
+             m.counters.batches.load(std::sync::atomic::Ordering::Relaxed),
+             m.counters.mean_batch_size(),
+             100.0 * m.counters.padding_fraction());
+    handle.shutdown();
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let spec = engine.manifest.kan_spec;
+    let vq = VqSpec { codebook_size: args.get_usize("k", engine.manifest.vq_spec.codebook_size) };
+    let precision = if args.flag("int8") { Precision::Int8 } else { Precision::Fp32 };
+    let max_batch = engine.manifest.batch_buckets.iter().copied().max().unwrap_or(1);
+    let plan = plan_vq_head(&spec, &vq, precision, max_batch);
+    plan.validate().map_err(|e| anyhow::anyhow!(e))?;
+    println!("LUTHAM static memory plan ({precision:?}, K={}, max batch {max_batch}):",
+             vq.codebook_size);
+    for b in &plan.buffers {
+        println!("  {:<18} offset {:>10}  size {:>10}", b.name, b.offset, b.size);
+    }
+    println!("total arena: {} bytes — allocated once, zero malloc on the serve path",
+             plan.total_bytes);
+    // paper-scale echo (Eq. 6)
+    let paper = plan_vq_head(&KanSpec { grid_size: 10, ..KanSpec::paper_scale() },
+                             &VqSpec { codebook_size: 65536 }, Precision::Int8, 1);
+    let cb = paper.lookup("layer0/codebook").unwrap();
+    println!("paper-scale check: per-layer Int8 codebook = {} bytes (paper Eq. 6: 655 KB)",
+             cb.size);
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn unused(_: &Path) {}

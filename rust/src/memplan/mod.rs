@@ -1,0 +1,217 @@
+//! LUTHAM static memory planning (paper §4.3).
+//!
+//! ExecuTorch-style AOT planning: every buffer the serving path needs
+//! (per-layer codebooks, index/gain/bias tables, activation ping-pong) has a
+//! compile-time-known size, so the planner lays them out in one arena at
+//! load time and the hot path performs **zero allocations** — the property
+//! the paper needs for safety-certified deployment (ISO 26262).
+
+use crate::kan::spec::{KanSpec, VqSpec};
+use crate::vq::storage::{codebook_bytes_per_layer, Precision};
+
+pub const ALIGN: usize = 256; // GPU-friendly alignment, also cache-line safe
+
+fn align_up(x: usize, a: usize) -> usize {
+    (x + a - 1) / a * a
+}
+
+/// One planned buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedBuffer {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// The static plan: named, aligned, non-overlapping offsets in one arena.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub buffers: Vec<PlannedBuffer>,
+    pub total_bytes: usize,
+}
+
+impl Plan {
+    pub fn lookup(&self, name: &str) -> Option<&PlannedBuffer> {
+        self.buffers.iter().find(|b| b.name == name)
+    }
+
+    /// Planner invariant checks (also exercised by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut sorted: Vec<&PlannedBuffer> = self.buffers.iter().collect();
+        sorted.sort_by_key(|b| b.offset);
+        let mut prev_end = 0usize;
+        for b in sorted {
+            if b.offset % ALIGN != 0 {
+                return Err(format!("{} misaligned at {}", b.name, b.offset));
+            }
+            if b.offset < prev_end {
+                return Err(format!("{} overlaps previous buffer", b.name));
+            }
+            prev_end = b.offset + b.size;
+        }
+        if prev_end > self.total_bytes {
+            return Err("total_bytes too small".into());
+        }
+        Ok(())
+    }
+}
+
+/// Sequential bump planner.
+#[derive(Debug, Default)]
+pub struct Planner {
+    buffers: Vec<PlannedBuffer>,
+    cursor: usize,
+}
+
+impl Planner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, size: usize) -> usize {
+        let offset = align_up(self.cursor, ALIGN);
+        self.buffers.push(PlannedBuffer { name: name.to_string(), offset, size });
+        self.cursor = offset + size;
+        offset
+    }
+
+    pub fn finish(self) -> Plan {
+        let total = align_up(self.cursor, ALIGN);
+        Plan { buffers: self.buffers, total_bytes: total }
+    }
+}
+
+/// Build the serving plan for a VQ head: per-layer codebook + edge tables +
+/// activation ping-pong buffers for the largest batch bucket.
+pub fn plan_vq_head(spec: &KanSpec, vq: &VqSpec, precision: Precision,
+                    max_batch: usize) -> Plan {
+    let mut p = Planner::new();
+    let dims = spec.layer_dims();
+    for (li, (n_in, n_out)) in dims.iter().enumerate() {
+        let e = n_in * n_out;
+        p.add(&format!("layer{li}/codebook"),
+              codebook_bytes_per_layer(spec.grid_size, vq, precision));
+        p.add(&format!("layer{li}/idx"), e * 4); // i32 runtime form
+        p.add(&format!("layer{li}/gain"),
+              e * if precision == Precision::Int8 { 1 } else { 4 });
+        p.add(&format!("layer{li}/bias_sum"), n_out * 4);
+    }
+    // activation ping-pong: widest layer interface
+    let widest = dims.iter().flat_map(|&(a, b)| [a, b]).max().unwrap();
+    p.add("act/ping", max_batch * widest * 4);
+    p.add("act/pong", max_batch * widest * 4);
+    p.finish()
+}
+
+/// A zero-alloc arena backing a [`Plan`]: one upfront allocation, typed
+/// views handed out per planned buffer.
+pub struct Arena {
+    data: Vec<u8>,
+    plan: Plan,
+}
+
+impl Arena {
+    pub fn allocate(plan: Plan) -> Arena {
+        let data = vec![0u8; plan.total_bytes];
+        Arena { data, plan }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn bytes_mut(&mut self, name: &str) -> Option<&mut [u8]> {
+        let b = self.plan.lookup(name)?.clone();
+        Some(&mut self.data[b.offset..b.offset + b.size])
+    }
+
+    pub fn bytes(&self, name: &str) -> Option<&[u8]> {
+        let b = self.plan.lookup(name)?;
+        Some(&self.data[b.offset..b.offset + b.size])
+    }
+
+    /// f32 view of a planned buffer (size must be 4-divisible).
+    pub fn f32_mut(&mut self, name: &str) -> Option<&mut [f32]> {
+        let b = self.plan.lookup(name)?.clone();
+        assert_eq!(b.size % 4, 0);
+        let ptr = self.data[b.offset..].as_mut_ptr() as *mut f32;
+        // SAFETY: offset is 256-aligned (≥ f32 alignment), the region is
+        // within the single owned allocation, and the borrow of self
+        // guarantees exclusivity.
+        Some(unsafe { std::slice::from_raw_parts_mut(ptr, b.size / 4) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_valid_and_aligned() {
+        let plan = plan_vq_head(&KanSpec::default(), &VqSpec::default(),
+                                Precision::Int8, 128);
+        plan.validate().unwrap();
+        for b in &plan.buffers {
+            assert_eq!(b.offset % ALIGN, 0, "{}", b.name);
+        }
+    }
+
+    #[test]
+    fn paper_codebook_accounting() {
+        // paper Eq. 6: K=65,536, G=10, Int8 -> 655 KB per layer
+        let spec = KanSpec { grid_size: 10, ..KanSpec::paper_scale() };
+        let vq = VqSpec { codebook_size: 65536 };
+        let plan = plan_vq_head(&spec, &vq, Precision::Int8, 1);
+        let cb = plan.lookup("layer0/codebook").unwrap();
+        assert_eq!(cb.size, 655_360);
+        let cb1 = plan.lookup("layer1/codebook").unwrap();
+        assert_eq!(cb1.size, 655_360);
+    }
+
+    #[test]
+    fn arena_views_are_disjoint_and_sized() {
+        let plan = plan_vq_head(&KanSpec { d_in: 4, d_hidden: 6, d_out: 2, grid_size: 5 },
+                                &VqSpec { codebook_size: 8 }, Precision::Fp32, 2);
+        let mut arena = Arena::allocate(plan);
+        {
+            let ping = arena.f32_mut("act/ping").unwrap();
+            assert_eq!(ping.len(), 2 * 6);
+            ping.fill(1.5);
+        }
+        {
+            let pong = arena.f32_mut("act/pong").unwrap();
+            assert!(pong.iter().all(|&v| v == 0.0), "pong must not alias ping");
+        }
+        assert_eq!(arena.bytes("act/ping").unwrap().len(), 2 * 6 * 4);
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let plan = Plan {
+            buffers: vec![
+                PlannedBuffer { name: "a".into(), offset: 0, size: 512 },
+                PlannedBuffer { name: "b".into(), offset: 256, size: 128 },
+            ],
+            total_bytes: 1024,
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_misalignment() {
+        let plan = Plan {
+            buffers: vec![PlannedBuffer { name: "a".into(), offset: 8, size: 16 }],
+            total_bytes: 1024,
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn int8_plan_smaller_than_fp32() {
+        let spec = KanSpec::default();
+        let vq = VqSpec::default();
+        let i8p = plan_vq_head(&spec, &vq, Precision::Int8, 32);
+        let f32p = plan_vq_head(&spec, &vq, Precision::Fp32, 32);
+        assert!(i8p.total_bytes < f32p.total_bytes);
+    }
+}

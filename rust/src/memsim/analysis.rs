@@ -1,0 +1,205 @@
+//! §5.5 reproduction: dense-vs-VQ bandwidth analysis at paper scale.
+//!
+//! Combines the cache simulation (actual DRAM fill traffic under an
+//! A100-like L2) with the roofline model to regenerate the paper's
+//! headline runtime claims: >90 % L2 residency for the VQ codebook, dense
+//! inference pinned to the DRAM speed limit, VQ inference decoupled from it.
+
+use super::cache::{Cache, CacheConfig};
+use super::dram::{dram_speed_limit_s, roofline, DeviceModel, Roofline};
+use super::trace::{trace_dense_layer, trace_vq_layer, LayerShape};
+use crate::kan::spec::{KanSpec, VqSpec};
+
+#[derive(Debug, Clone)]
+pub struct VariantReport {
+    pub label: String,
+    pub l2_hit_rate: f64,
+    pub dram_bytes_per_sample: f64,
+    pub requested_bytes_per_sample: f64,
+    pub roofline: Roofline,
+    pub bound_by: &'static str,
+}
+
+#[derive(Debug, Clone)]
+pub struct BandwidthAnalysis {
+    pub device: &'static str,
+    pub batch: usize,
+    pub dense: VariantReport,
+    pub vq_fp32: VariantReport,
+    pub vq_int8: VariantReport,
+    /// the paper's naive lower bound for the dense batch
+    pub dense_dram_limit_s: f64,
+    /// bandwidth-reduction factor dense/int8 (the "88x" figure)
+    pub bandwidth_reduction: f64,
+}
+
+fn layer_shapes(spec: &KanSpec, k: usize) -> [LayerShape; 2] {
+    let d = spec.layer_dims();
+    [
+        LayerShape { n_in: d[0].0, n_out: d[0].1, g: spec.grid_size, k },
+        LayerShape { n_in: d[1].0, n_out: d[1].1, g: spec.grid_size, k },
+    ]
+}
+
+/// Simulate `measure` batch samples (after `warmup` samples) of the full
+/// two-layer head and aggregate per-sample traffic.
+fn run_variant(
+    label: &str,
+    cache_cfg: CacheConfig,
+    dev: &DeviceModel,
+    shapes: &[LayerShape; 2],
+    warmup: usize,
+    measure: usize,
+    mode: TraceMode,
+    seed: u64,
+) -> VariantReport {
+    let mut cache = Cache::new(cache_cfg);
+    let run = |cache: &mut Cache, batch: usize, seed: u64| match mode {
+        TraceMode::Dense => {
+            let a = trace_dense_layer(cache, shapes[0], batch, seed);
+            let b = trace_dense_layer(cache, shapes[1], batch, seed ^ 1);
+            (a, b)
+        }
+        TraceMode::VqFp32 => {
+            let a = trace_vq_layer(cache, shapes[0], batch, false, seed);
+            let b = trace_vq_layer(cache, shapes[1], batch, false, seed ^ 1);
+            (a, b)
+        }
+        TraceMode::VqInt8 => {
+            let a = trace_vq_layer(cache, shapes[0], batch, true, seed);
+            let b = trace_vq_layer(cache, shapes[1], batch, true, seed ^ 1);
+            (a, b)
+        }
+    };
+    // steady-state hit rate: measure after a warmup pass
+    run(&mut cache, warmup, seed);
+    cache.reset_stats();
+    let (r0, r1) = run(&mut cache, measure, seed.wrapping_add(77));
+    let warm_stats = cache.stats;
+    // DRAM traffic accounting: from a COLD cache over the same batch, so the
+    // one-time codebook fill is included and amortized across the batch
+    // (the paper's per-batch framing; a warm-only measure reads ~0 for VQ)
+    let mut cold = Cache::new(cache_cfg);
+    run(&mut cold, measure, seed.wrapping_add(77));
+    let requested = (r0.requested_bytes + r1.requested_bytes) as f64;
+    let flops = (r0.flops + r1.flops) as f64;
+    let dram_bytes = cold.stats.fill_bytes as f64;
+    let rl = roofline(dev, flops, dram_bytes, requested);
+    VariantReport {
+        label: label.to_string(),
+        l2_hit_rate: warm_stats.hit_rate(),
+        dram_bytes_per_sample: dram_bytes / measure as f64,
+        requested_bytes_per_sample: requested / measure as f64,
+        bound_by: rl.bound_by(),
+        roofline: rl,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum TraceMode {
+    Dense,
+    VqFp32,
+    VqInt8,
+}
+
+/// Full analysis for a given head spec + codebook size on a device.
+pub fn analyze(spec: &KanSpec, vq: &VqSpec, dev: &DeviceModel, cache_cfg: CacheConfig,
+               warmup: usize, measure: usize, seed: u64) -> BandwidthAnalysis {
+    let shapes = layer_shapes(spec, vq.codebook_size);
+    let dense = run_variant("dense_kan", cache_cfg, dev, &shapes, warmup, measure,
+                            TraceMode::Dense, seed);
+    let vq_fp32 = run_variant("share_kan_fp32", cache_cfg, dev, &shapes, warmup, measure,
+                              TraceMode::VqFp32, seed);
+    let vq_int8 = run_variant("share_kan_int8", cache_cfg, dev, &shapes, warmup, measure,
+                              TraceMode::VqInt8, seed);
+    let dense_batch_bytes = dense.dram_bytes_per_sample * measure as f64;
+    BandwidthAnalysis {
+        device: dev.name,
+        batch: measure,
+        dense_dram_limit_s: dram_speed_limit_s(dev, dense_batch_bytes),
+        bandwidth_reduction: dense.dram_bytes_per_sample
+            / vq_int8.dram_bytes_per_sample.max(1.0),
+        dense,
+        vq_fp32,
+        vq_int8,
+    }
+}
+
+/// Iso-latent scaling (§4.1/§5.3): VQ DRAM traffic per sample as G grows.
+/// Dense traffic grows with G; VQ traffic stays ~flat once the codebook is
+/// resident, because capacity lives in the shared table.
+pub fn iso_latent_sweep(spec_base: &KanSpec, vq: &VqSpec, cache_cfg: CacheConfig,
+                        gs: &[usize], batch: usize, seed: u64)
+                        -> Vec<(usize, f64, f64)> {
+    gs.iter()
+        .map(|&g| {
+            let spec = KanSpec { grid_size: g, ..*spec_base };
+            let shapes = layer_shapes(&spec, vq.codebook_size);
+            let run = |mode: TraceMode| {
+                let mut cache = Cache::new(cache_cfg);
+                // warmup then measure
+                for phase in 0..2 {
+                    if phase == 1 {
+                        cache.reset_stats();
+                    }
+                    match mode {
+                        TraceMode::Dense => {
+                            trace_dense_layer(&mut cache, shapes[0], batch, seed);
+                            trace_dense_layer(&mut cache, shapes[1], batch, seed ^ 1);
+                        }
+                        _ => {
+                            trace_vq_layer(&mut cache, shapes[0], batch, true, seed);
+                            trace_vq_layer(&mut cache, shapes[1], batch, true, seed ^ 1);
+                        }
+                    }
+                }
+                cache.stats.fill_bytes as f64 / batch as f64
+            };
+            (g, run(TraceMode::Dense), run(TraceMode::VqInt8))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scaled-down head that preserves the paper's *regime*: dense grids
+    /// ≫ L2, VQ codebook ≪ L2.
+    fn regime_preserving() -> (KanSpec, VqSpec, CacheConfig) {
+        let spec = KanSpec { d_in: 128, d_hidden: 256, d_out: 20, grid_size: 10 };
+        let vq = VqSpec { codebook_size: 1024 };
+        // cache sized so dense (1.5 MB) thrashes, codebook (10 KB) resides
+        let cache = CacheConfig { size_bytes: 256 << 10, line_bytes: 128, ways: 16 };
+        (spec, vq, cache)
+    }
+
+    #[test]
+    fn vq_residency_and_bandwidth_decoupling() {
+        let (spec, vq, cache) = regime_preserving();
+        let dev = DeviceModel::a100();
+        let a = analyze(&spec, &vq, &dev, cache, 2, 8, 42);
+        assert!(a.vq_int8.l2_hit_rate > 0.90, "vq hit {}", a.vq_int8.l2_hit_rate);
+        assert!(a.dense.l2_hit_rate < a.vq_int8.l2_hit_rate);
+        assert!(a.bandwidth_reduction > 10.0, "reduction {}", a.bandwidth_reduction);
+        // dense is DRAM-bound in this regime; VQ is not
+        assert_eq!(a.dense.bound_by, "DRAM");
+        assert_ne!(a.vq_int8.bound_by, "DRAM");
+        // VQ total time beats the dense DRAM speed limit (the §5.5 claim)
+        assert!(a.vq_int8.roofline.total_s < a.dense_dram_limit_s);
+    }
+
+    #[test]
+    fn iso_latent_traffic_flat_in_g() {
+        let (spec, vq, cache) = regime_preserving();
+        let sweep = iso_latent_sweep(&spec, &vq, cache, &[5, 10, 20, 40], 4, 7);
+        let dense_5 = sweep[0].1;
+        let dense_40 = sweep[3].1;
+        let vq_5 = sweep[0].2;
+        let vq_40 = sweep[3].2;
+        // dense DRAM traffic grows ~linearly with G
+        assert!(dense_40 > 4.0 * dense_5, "{dense_40} vs {dense_5}");
+        // VQ traffic grows far slower than dense's 8x (iso-latent scaling)
+        assert!(vq_40 < 3.0 * vq_5.max(1.0), "{vq_40} vs {vq_5}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Set-associative cache with LRU replacement.
+//!
+//! Models the device's last-level cache (A100: 40 MB, Jetson Orin: 4 MB)
+//! for the §5.5 residency analysis.  Addresses are byte addresses; an
+//! access spanning multiple lines probes each line.
+
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub ways: usize,
+}
+
+impl CacheConfig {
+    /// NVIDIA A100 L2 (the paper's measurement instrument).
+    pub fn a100_l2() -> Self {
+        CacheConfig { size_bytes: 40 << 20, line_bytes: 128, ways: 16 }
+    }
+
+    /// Jetson-Orin-class embedded L2 (the paper's deployment target).
+    pub fn orin_l2() -> Self {
+        CacheConfig { size_bytes: 4 << 20, line_bytes: 128, ways: 16 }
+    }
+
+    pub fn num_sets(&self) -> usize {
+        (self.size_bytes / self.line_bytes / self.ways).max(1)
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// bytes fetched from the next level (misses × line size)
+    pub fill_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.accesses() as f64
+    }
+}
+
+/// The simulator.  Each set is a small vec of tags ordered by recency
+/// (back = most recent), which is exact LRU for the ≤16 ways we model.
+pub struct Cache {
+    cfg: CacheConfig,
+    sets: Vec<Vec<u64>>,
+    pub stats: CacheStats,
+    line_shift: u32,
+    num_sets: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        assert!(cfg.line_bytes.is_power_of_two(), "line size must be 2^n");
+        let num_sets = cfg.num_sets();
+        Cache {
+            cfg,
+            sets: vec![Vec::with_capacity(cfg.ways); num_sets],
+            stats: CacheStats::default(),
+            line_shift: cfg.line_bytes.trailing_zeros(),
+            num_sets: num_sets as u64,
+        }
+    }
+
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    /// Probe one line address (already shifted). Returns true on hit.
+    /// Set selection is modulo (supports the A100's non-power-of-two 20480
+    /// sets); the tag is the full line address for simplicity.
+    #[inline]
+    fn probe_line(&mut self, line: u64) -> bool {
+        let set_idx = (line % self.num_sets) as usize;
+        let tag = line;
+        let set = &mut self.sets[set_idx];
+        if let Some(pos) = set.iter().position(|&t| t == tag) {
+            // move to MRU position
+            let t = set.remove(pos);
+            set.push(t);
+            self.stats.hits += 1;
+            true
+        } else {
+            if set.len() == self.cfg.ways {
+                set.remove(0); // evict LRU
+            }
+            set.push(tag);
+            self.stats.misses += 1;
+            self.stats.fill_bytes += self.cfg.line_bytes as u64;
+            false
+        }
+    }
+
+    /// Access `bytes` starting at `addr`; probes every spanned line.
+    #[inline]
+    pub fn access(&mut self, addr: u64, bytes: u32) {
+        let first = addr >> self.line_shift;
+        let last = (addr + bytes.max(1) as u64 - 1) >> self.line_shift;
+        for line in first..=last {
+            self.probe_line(line);
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Resident bytes (lines currently held × line size).
+    pub fn resident_bytes(&self) -> usize {
+        self.sets.iter().map(|s| s.len()).sum::<usize>() * self.cfg.line_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cache {
+        // 4 sets x 2 ways x 64B lines = 512B
+        Cache::new(CacheConfig { size_bytes: 512, line_bytes: 64, ways: 2 })
+    }
+
+    #[test]
+    fn first_access_misses_second_hits() {
+        let mut c = tiny();
+        c.access(0, 4);
+        assert_eq!(c.stats.misses, 1);
+        c.access(32, 4); // same line
+        assert_eq!(c.stats.hits, 1);
+    }
+
+    #[test]
+    fn spanning_access_probes_both_lines() {
+        let mut c = tiny();
+        c.access(60, 8); // crosses 64B boundary
+        assert_eq!(c.stats.accesses(), 2);
+        assert_eq!(c.stats.misses, 2);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = tiny();
+        // set 0 holds lines whose index ≡ 0 mod 4: line addrs 0, 4, 8 (byte 0, 256, 512)
+        c.access(0, 1); // line 0 -> miss
+        c.access(256, 1); // line 4 -> miss (set full)
+        c.access(0, 1); // hit, line 0 becomes MRU
+        c.access(512, 1); // line 8 -> miss, evicts line 4 (LRU)
+        c.access(0, 1); // still resident -> hit
+        assert_eq!(c.stats.hits, 2);
+        c.access(256, 1); // was evicted -> miss
+        assert_eq!(c.stats.misses, 4);
+    }
+
+    #[test]
+    fn working_set_within_capacity_hits_after_warmup() {
+        let mut c = Cache::new(CacheConfig { size_bytes: 64 << 10, line_bytes: 64, ways: 8 });
+        // 32 KB working set, twice the passes
+        for pass in 0..2 {
+            for addr in (0..32 << 10).step_by(64) {
+                c.access(addr as u64, 4);
+            }
+            if pass == 0 {
+                c.reset_stats();
+            }
+        }
+        assert!(c.stats.hit_rate() > 0.999, "{}", c.stats.hit_rate());
+    }
+
+    #[test]
+    fn working_set_beyond_capacity_thrashes() {
+        let mut c = Cache::new(CacheConfig { size_bytes: 4 << 10, line_bytes: 64, ways: 4 });
+        // 64 KB streamed working set >> 4 KB cache, LRU: every pass misses
+        for pass in 0..3 {
+            for addr in (0..64 << 10).step_by(64) {
+                c.access(addr as u64, 4);
+            }
+            if pass == 0 {
+                c.reset_stats();
+            }
+        }
+        assert!(c.stats.hit_rate() < 0.01, "{}", c.stats.hit_rate());
+    }
+
+    #[test]
+    fn fill_bytes_counts_misses() {
+        let mut c = tiny();
+        c.access(0, 1);
+        c.access(64, 1);
+        c.access(0, 1);
+        assert_eq!(c.stats.fill_bytes, 128);
+    }
+
+    #[test]
+    fn resident_bytes_bounded_by_capacity() {
+        let mut c = tiny();
+        for addr in (0..10_000).step_by(64) {
+            c.access(addr, 1);
+        }
+        assert!(c.resident_bytes() <= 512);
+    }
+}

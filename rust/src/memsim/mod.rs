@@ -1,0 +1,13 @@
+//! Memory-hierarchy simulator (DESIGN.md §2 substitution for the paper's
+//! A100 + nvprof measurements): set-associative LRU cache, DRAM roofline
+//! model, inference address-trace generators and the §5.5 analysis.
+
+pub mod analysis;
+pub mod cache;
+pub mod dram;
+pub mod trace;
+
+pub use analysis::{analyze, iso_latent_sweep, BandwidthAnalysis};
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use dram::{dram_speed_limit_s, roofline, DeviceModel, Roofline};
+pub use trace::{trace_dense_layer, trace_vq_layer, LayerShape, TraceReport};

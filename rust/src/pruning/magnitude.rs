@@ -1,0 +1,131 @@
+//! Magnitude-based pruning (paper §3.1 protocol).
+//!
+//! KAN: per-edge granularity — the pruning unit is the whole G-point spline
+//! grid, scored by its group-ℓ₂ norm ‖c_ij‖₂ (paper Appendix B).  MLP: per-
+//! weight granularity, the standard baseline that degrades gracefully.
+
+/// Group-ℓ₂ norm per edge for grids [n_edges, g].
+pub fn edge_norms(grids: &[f32], n_edges: usize, g: usize) -> Vec<f32> {
+    assert_eq!(grids.len(), n_edges * g);
+    grids
+        .chunks_exact(g)
+        .map(|row| row.iter().map(|v| v * v).sum::<f32>().sqrt())
+        .collect()
+}
+
+/// Threshold that prunes exactly `target_sparsity` of the scores.
+fn sparsity_threshold(scores: &[f32], target_sparsity: f64) -> f32 {
+    if target_sparsity <= 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    let mut sorted = scores.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = ((target_sparsity * sorted.len() as f64).round() as usize).min(sorted.len());
+    if cut == 0 {
+        f32::NEG_INFINITY
+    } else {
+        sorted[cut - 1]
+    }
+}
+
+/// Zero out the lowest-norm edges to reach `target_sparsity`.
+/// Returns (pruned grids, edge mask with true = kept).
+pub fn prune_kan_grids(grids: &[f32], n_edges: usize, g: usize, target_sparsity: f64)
+                       -> (Vec<f32>, Vec<bool>) {
+    let norms = edge_norms(grids, n_edges, g);
+    let tau = sparsity_threshold(&norms, target_sparsity);
+    let mut out = grids.to_vec();
+    let mut mask = vec![true; n_edges];
+    for (e, &norm) in norms.iter().enumerate() {
+        if norm <= tau {
+            mask[e] = false;
+            out[e * g..(e + 1) * g].fill(0.0);
+        }
+    }
+    (out, mask)
+}
+
+/// Per-weight magnitude pruning for an MLP weight matrix.
+pub fn prune_mlp_weights(weights: &[f32], target_sparsity: f64) -> Vec<f32> {
+    let mags: Vec<f32> = weights.iter().map(|v| v.abs()).collect();
+    let tau = sparsity_threshold(&mags, target_sparsity);
+    weights
+        .iter()
+        .map(|&v| if v.abs() <= tau { 0.0 } else { v })
+        .collect()
+}
+
+/// Achieved sparsity of a mask/tensor (fraction pruned).
+pub fn sparsity_of(mask: &[bool]) -> f64 {
+    mask.iter().filter(|&&m| !m).count() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn zero_sparsity_is_identity() {
+        let mut rng = Pcg32::seeded(1);
+        let grids = rng.normal_vec(20 * 5, 0.0, 1.0);
+        let (out, mask) = prune_kan_grids(&grids, 20, 5, 0.0);
+        assert_eq!(out, grids);
+        assert!(mask.iter().all(|&m| m));
+    }
+
+    #[test]
+    fn hits_target_sparsity() {
+        let mut rng = Pcg32::seeded(2);
+        let grids = rng.normal_vec(1000 * 10, 0.0, 1.0);
+        for target in [0.1, 0.3, 0.5, 0.9] {
+            let (_, mask) = prune_kan_grids(&grids, 1000, 10, target);
+            let got = sparsity_of(&mask);
+            assert!((got - target).abs() < 0.01, "target {target}, got {got}");
+        }
+    }
+
+    #[test]
+    fn prunes_smallest_norms_first() {
+        // edges with known norms: edge 0 tiny, edge 2 large
+        let grids = vec![
+            0.01, 0.01, // edge 0
+            0.5, 0.5,   // edge 1
+            5.0, 5.0,   // edge 2
+            1.0, 1.0,   // edge 3
+        ];
+        let (out, mask) = prune_kan_grids(&grids, 4, 2, 0.25);
+        assert!(!mask[0]);
+        assert!(mask[1] && mask[2] && mask[3]);
+        assert_eq!(&out[0..2], &[0.0, 0.0]);
+        assert_eq!(&out[2..], &grids[2..]);
+    }
+
+    #[test]
+    fn full_sparsity_zeroes_everything() {
+        let grids = vec![1.0f32; 12];
+        let (out, mask) = prune_kan_grids(&grids, 4, 3, 1.0);
+        assert!(out.iter().all(|&v| v == 0.0));
+        assert!(mask.iter().all(|&m| !m));
+    }
+
+    #[test]
+    fn mlp_pruning_per_weight() {
+        let w = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let out = prune_mlp_weights(&w, 0.5);
+        let zeros = out.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 3);
+        // largest magnitudes survive
+        assert_eq!(out[1], -5.0);
+        assert_eq!(out[3], 3.0);
+        assert_eq!(out[5], 1.0);
+    }
+
+    #[test]
+    fn edge_norms_values() {
+        let grids = vec![3.0, 4.0, 0.0, 0.0];
+        let norms = edge_norms(&grids, 2, 2);
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert_eq!(norms[1], 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Magnitude pruning and the group-ℓ₂,₁ analysis (paper §3, Appendix B).
+//!
+//! * [`magnitude`] — per-edge group-ℓ₂ pruning for KAN grids (removing an
+//!   edge zeroes its whole G-point grid) and per-weight pruning for the MLP
+//!   baseline, driven to exact target sparsities by threshold selection.
+//! * [`group_l21`] — the proximal-shrinkage analysis showing the paper's
+//!   observation that ℓ₂,₁ compresses the norm dynamic range without
+//!   inducing structural zeros (it acts as a smoothness regularizer).
+
+pub mod group_l21;
+pub mod magnitude;
+
+pub use magnitude::{prune_kan_grids, prune_mlp_weights, edge_norms, sparsity_of};

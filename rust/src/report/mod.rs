@@ -1,0 +1,150 @@
+//! Table/figure rendering for the repro harness: aligned text tables
+//! matching the paper's rows, plus CSV dumps for plotting.
+
+use std::fmt::Write as _;
+
+/// Simple aligned text table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, "{:<w$} | ", c, w = widths[i]);
+            }
+            let _ = writeln!(out, "{}", s.trim_end());
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Crude ASCII line chart for "figure" outputs: y values over labeled xs.
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<(f64, f64)>)], height: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return out;
+    }
+    let (ymin, ymax) = all.iter().fold((f64::INFINITY, f64::NEG_INFINITY),
+                                       |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    let span = (ymax - ymin).max(1e-12);
+    let width = 64usize;
+    let (xmin, xmax) = all.iter().fold((f64::INFINITY, f64::NEG_INFINITY),
+                                       |(lo, hi), &(x, _)| (lo.min(x), hi.max(x)));
+    let xspan = (xmax - xmin).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#'];
+    let mut grid = vec![vec![' '; width + 1]; height + 1];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let col = ((x - xmin) / xspan * width as f64).round() as usize;
+            let row = height - ((y - ymin) / span * height as f64).round() as usize;
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    for (r, rowv) in grid.iter().enumerate() {
+        let yval = ymax - span * r as f64 / height as f64;
+        let _ = writeln!(out, "{yval:>10.2} |{}", rowv.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>10}  {}", "", "-".repeat(width + 1));
+    let _ = writeln!(out, "{:>10}  {:<.2}{}{:>.2}", "", xmin,
+                     " ".repeat(width.saturating_sub(8)), xmax);
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} = {}", marks[si % marks.len()], name);
+    }
+    out
+}
+
+/// Write a report file under reports/ and also return the content.
+pub fn save(name: &str, content: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all("reports")?;
+    std::fs::write(format!("reports/{name}"), content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["Method", "mAP (%)"]);
+        t.row(vec!["Dense KAN".into(), "85.23".into()]);
+        t.row(vec!["SHARe-KAN (Int8)".into(), "84.74".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| Dense KAN        | 85.23"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn wrong_arity_panics() {
+        Table::new("T", &["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x,y".into(), "z\"w".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"z\"\"w\""));
+    }
+
+    #[test]
+    fn chart_contains_series_marks() {
+        let s = ascii_chart("C", &[("dense", vec![(0.0, 1.0), (1.0, 2.0)]),
+                                   ("vq", vec![(0.0, 2.0), (1.0, 1.0)])], 8);
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("= dense"));
+    }
+}

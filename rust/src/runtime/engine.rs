@@ -1,0 +1,147 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute.
+//!
+//! One compiled executable per (model, batch-bucket) pair, cached for the
+//! lifetime of the engine (the LUTHAM zero-copy model: weights are uploaded
+//! into device buffers once at head load, not per request).
+//!
+//! The engine is **single-threaded by construction** (PJRT wrapper types
+//! are not Send/Sync); the serving coordinator owns it on a dedicated
+//! executor thread and feeds it through channels — the same engine-loop
+//! shape vLLM uses for its GPU worker.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::literal::untuple;
+use super::manifest::Manifest;
+
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// compile + execute counters for the metrics endpoint
+    pub stats: RefCell<EngineStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ns: u64,
+    pub execute_ns: u64,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling and caching on first use) the executable for an
+    /// artifact name from the manifest.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&art.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("hlo parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let mut s = self.stats.borrow_mut();
+        s.compiles += 1;
+        s.compile_ns += t0.elapsed().as_nanos() as u64;
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (serving warm start).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened tuple
+    /// of output literals.
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        self.execute_on(&exe, inputs)
+    }
+
+    /// Execute a previously fetched executable (hot path: no map lookup).
+    /// Generic over `Borrow<Literal>` so cached weight literals can be
+    /// passed by reference alongside a fresh activation literal.
+    pub fn execute_on<L: std::borrow::Borrow<Literal>>(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_ns += t0.elapsed().as_nanos() as u64;
+        untuple(lit)
+    }
+
+    /// Upload a literal to a persistent device buffer (zero-copy serving:
+    /// weights live on device; only activations move per request).
+    pub fn to_device(&self, l: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, l)
+            .map_err(|e| anyhow::anyhow!("to_device: {e:?}"))
+    }
+
+    /// Execute with pre-staged device buffers.
+    pub fn execute_buffers(&self, exe: &PjRtLoadedExecutable, inputs: &[&PjRtBuffer])
+                           -> Result<Vec<Literal>> {
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute_b::<&PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute_b: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_ns += t0.elapsed().as_nanos() as u64;
+        untuple(lit)
+    }
+}

@@ -1,0 +1,105 @@
+//! Tensor <-> PJRT Literal marshalling.
+
+use anyhow::{Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::tensor::{DType, Tensor};
+
+pub fn element_type(d: DType) -> ElementType {
+    match d {
+        DType::F32 => ElementType::F32,
+        DType::I32 => ElementType::S32,
+        DType::I8 => ElementType::S8,
+        DType::U8 => ElementType::U8,
+    }
+}
+
+/// Tensor -> Literal (copies the raw little-endian bytes).
+pub fn to_literal(t: &Tensor) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(element_type(t.dtype()), t.shape(), t.raw())
+        .map_err(|e| anyhow::anyhow!("literal create: {e:?}"))
+}
+
+/// Literal -> Tensor.  Only the dtypes the artifacts use are supported.
+pub fn from_literal(l: &Literal) -> Result<Tensor> {
+    let shape = l
+        .shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let (dims, ty): (Vec<usize>, ElementType) = match shape {
+        xla::Shape::Array(a) => (
+            a.dims().iter().map(|&d| d as usize).collect(),
+            a.ty(),
+        ),
+        other => anyhow::bail!("expected array literal, got {other:?}"),
+    };
+    match ty {
+        ElementType::F32 => {
+            let v: Vec<f32> = l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::from_f32(&dims, &v))
+        }
+        ElementType::S32 => {
+            let v: Vec<i32> = l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::from_i32(&dims, &v))
+        }
+        ElementType::S8 => {
+            let v: Vec<i8> = l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok(Tensor::from_i8(&dims, &v))
+        }
+        other => anyhow::bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> Result<Literal> {
+    to_literal(&Tensor::from_f32(&[], &[v]))
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn literal_scalar_f32(l: &Literal) -> Result<f32> {
+    l.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Flatten a tuple output literal into its elements (jax lowers with
+/// return_tuple=True, so every artifact returns a tuple).
+pub fn untuple(l: Literal) -> Result<Vec<Literal>> {
+    l.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
+}
+
+pub fn f32s(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")).context("literal f32 read")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let l = to_literal(&t).unwrap();
+        let back = from_literal(&l).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let t = Tensor::from_i8(&[4], &[-128, -1, 0, 127]);
+        let l = to_literal(&t).unwrap();
+        let back = from_literal(&l).unwrap();
+        assert_eq!(back.as_i8(), vec![-128, -1, 0, 127]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = Tensor::from_i32(&[2, 2], &[1, -2, 3, -4]);
+        let l = to_literal(&t).unwrap();
+        assert_eq!(from_literal(&l).unwrap().as_i32(), vec![1, -2, 3, -4]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = scalar_f32(3.25).unwrap();
+        assert_eq!(literal_scalar_f32(&l).unwrap(), 3.25);
+    }
+}

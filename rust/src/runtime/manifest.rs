@@ -1,0 +1,187 @@
+//! artifacts/manifest.json parsing: the contract between the Python AOT
+//! export (python/compile/aot.py) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::kan::spec::{KanSpec, VqSpec};
+use crate::tensor::DType;
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<String>,
+    pub kind: String,
+    pub model: String,
+    pub batch: usize,
+    pub grid_size: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kan_spec: KanSpec,
+    pub vq_spec: VqSpec,
+    pub batch_buckets: Vec<usize>,
+    pub g_sweep: Vec<usize>,
+    pub train_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let kan_spec = KanSpec::from_manifest(j).context("manifest model block")?;
+        let vq_spec = VqSpec::from_manifest(j).context("manifest codebook_size")?;
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .with_context(|| format!("manifest {key}"))
+        };
+        let batch_buckets = usize_arr("batch_buckets")?;
+        let g_sweep = usize_arr("g_sweep")?;
+        let train_batch = j.get("train_batch").and_then(|v| v.as_usize()).unwrap_or(16);
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .context("manifest artifacts")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let params = a
+                .get("params")
+                .and_then(|v| v.as_arr())
+                .context("artifact params")?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.get("name").and_then(|v| v.as_str()).context("param name")?.into(),
+                        shape: p
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .context("param shape")?
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect(),
+                        dtype: DType::from_name(
+                            p.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"),
+                        )
+                        .context("param dtype")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.get("file").and_then(|v| v.as_str()).context("file")?.into(),
+                    params,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(|v| v.as_arr())
+                        .map(|o| o.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                        .unwrap_or_default(),
+                    kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("fwd").into(),
+                    model: a.get("model").and_then(|v| v.as_str()).unwrap_or("").into(),
+                    batch: a.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                    grid_size: a.get("grid_size").and_then(|v| v.as_usize()),
+                },
+            );
+        }
+        Ok(Manifest { kan_spec, vq_spec, batch_buckets, g_sweep, train_batch, artifacts })
+    }
+
+    /// Artifact name for a model at a batch bucket (e.g. "vq_kan_fwd_b32").
+    pub fn fwd_artifact(&self, model: &str, bucket: usize) -> String {
+        format!("{model}_b{bucket}")
+    }
+
+    /// Smallest bucket >= n (or the largest bucket if n exceeds all).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| self.batch_buckets.iter().copied().max().unwrap_or(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        json::parse(
+            r#"{
+            "version": 1,
+            "model": {"d_in": 64, "d_hidden": 128, "d_out": 20,
+                      "grid_size": 10, "codebook_size": 512, "num_edges": 10752},
+            "batch_buckets": [1, 8, 32, 128],
+            "g_sweep": [5, 10, 20],
+            "train_batch": 16,
+            "artifacts": {
+              "mlp_fwd_b8": {
+                "file": "mlp_fwd_b8.hlo.txt",
+                "params": [{"name": "w1", "shape": [64, 128], "dtype": "float32"},
+                           {"name": "x", "shape": [8, 64], "dtype": "float32"}],
+                "outputs": ["scores"], "kind": "fwd", "model": "mlp", "batch": 8
+              }
+            }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::from_json(&mini_manifest()).unwrap();
+        assert_eq!(m.kan_spec.d_in, 64);
+        assert_eq!(m.vq_spec.codebook_size, 512);
+        assert_eq!(m.batch_buckets, vec![1, 8, 32, 128]);
+        let a = &m.artifacts["mlp_fwd_b8"];
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[0].dtype, DType::F32);
+        assert_eq!(a.batch, 8);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::from_json(&mini_manifest()).unwrap();
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(2), 8);
+        assert_eq!(m.bucket_for(8), 8);
+        assert_eq!(m.bucket_for(9), 32);
+        assert_eq!(m.bucket_for(200), 128); // clamp to max
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.artifacts.contains_key("vq_kan_fwd_b8"));
+            assert!(m.artifacts.contains_key("kan_train_step_g10"));
+            let a = &m.artifacts["vq_kan_int8_fwd_b32"];
+            assert_eq!(a.params.iter().filter(|p| p.dtype == DType::I8).count(), 4);
+        }
+    }
+}

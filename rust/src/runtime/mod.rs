@@ -1,0 +1,19 @@
+//! Runtime: PJRT CPU client wrapper that loads `artifacts/*.hlo.txt`
+//! (HLO text — see python/compile/aot.py for why not serialized protos)
+//! and executes them from the L3 hot path.
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{ArtifactSpec, Manifest, ParamSpec};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $SHARE_KAN_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SHARE_KAN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

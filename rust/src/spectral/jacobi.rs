@@ -1,0 +1,118 @@
+//! Cyclic Jacobi eigenvalue algorithm for small symmetric matrices.
+//!
+//! Classic two-sided Jacobi rotations; converges quadratically and is exact
+//! enough (f64) for the ≤128×128 Gram matrices the spectral module builds.
+
+/// Eigenvalues of a symmetric d×d matrix (row-major), unsorted.
+pub fn symmetric_eigenvalues(a: &[f64], d: usize) -> Vec<f64> {
+    assert_eq!(a.len(), d * d);
+    let mut m = a.to_vec();
+    // verify symmetry in debug builds
+    #[cfg(debug_assertions)]
+    for i in 0..d {
+        for j in 0..d {
+            debug_assert!(
+                (m[i * d + j] - m[j * d + i]).abs() <= 1e-6 * (1.0 + m[i * d + j].abs()),
+                "matrix not symmetric at ({i},{j})"
+            );
+        }
+    }
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0f64;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m[i * d + j] * m[i * d + j];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + frob(&m, d)) {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[p * d + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * d + p];
+                let aqq = m[q * d + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                // stable tangent of the rotation angle
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // apply rotation: rows/cols p and q
+                for k in 0..d {
+                    let akp = m[k * d + p];
+                    let akq = m[k * d + q];
+                    m[k * d + p] = c * akp - s * akq;
+                    m[k * d + q] = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = m[p * d + k];
+                    let aqk = m[q * d + k];
+                    m[p * d + k] = c * apk - s * aqk;
+                    m[q * d + k] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    (0..d).map(|i| m[i * d + i]).collect()
+}
+
+fn frob(m: &[f64], d: usize) -> f64 {
+    (0..d * d).map(|i| m[i] * m[i]).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = vec![
+            3.0, 0.0, 0.0, //
+            0.0, -1.0, 0.0, //
+            0.0, 0.0, 7.0,
+        ];
+        let mut e = symmetric_eigenvalues(&a, 3);
+        e.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((e[0] + 1.0).abs() < 1e-12);
+        assert!((e[1] - 3.0).abs() < 1e-12);
+        assert!((e[2] - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let mut e = symmetric_eigenvalues(&a, 2);
+        e.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((e[0] - 1.0).abs() < 1e-12, "{e:?}");
+        assert!((e[1] - 3.0).abs() < 1e-12, "{e:?}");
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved() {
+        use crate::data::rng::Pcg32;
+        let mut rng = Pcg32::seeded(5);
+        let d = 12;
+        // random symmetric matrix
+        let mut a = vec![0f64; d * d];
+        for i in 0..d {
+            for j in i..d {
+                let v = rng.normal() as f64;
+                a[i * d + j] = v;
+                a[j * d + i] = v;
+            }
+        }
+        let e = symmetric_eigenvalues(&a, d);
+        let trace: f64 = (0..d).map(|i| a[i * d + i]).sum();
+        let e_sum: f64 = e.iter().sum();
+        assert!((trace - e_sum).abs() < 1e-9 * (1.0 + trace.abs()), "{trace} vs {e_sum}");
+        let fro2: f64 = a.iter().map(|v| v * v).sum();
+        let e2: f64 = e.iter().map(|v| v * v).sum();
+        assert!((fro2 - e2).abs() < 1e-8 * (1.0 + fro2), "{fro2} vs {e2}");
+    }
+}

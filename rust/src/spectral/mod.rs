@@ -1,0 +1,147 @@
+//! Spectral analysis of spline-coefficient matrices (paper §3.2).
+//!
+//! The paper SVDs C ∈ ℝ^{E×G} (each edge's grid as a row) and reports that
+//! the spectrum decays rapidly — the "functional signal is low-rank even
+//! though the topology is dense" evidence motivating VQ.
+//!
+//! Since G is small (≤ 128), the singular values of C are the square roots
+//! of the eigenvalues of the G×G Gram matrix CᵀC, which we compute exactly
+//! with a cyclic Jacobi eigensolver — no external linear-algebra crate.
+
+pub mod jacobi;
+
+pub use jacobi::symmetric_eigenvalues;
+
+/// Singular-value spectrum of a row-major [n, d] matrix (d small).
+/// Returned in descending order.
+pub fn singular_values(data: &[f32], n: usize, d: usize) -> Vec<f64> {
+    assert_eq!(data.len(), n * d);
+    // Gram matrix G = CᵀC (d x d), accumulated in f64 for stability.
+    let mut gram = vec![0f64; d * d];
+    for row in data.chunks_exact(d) {
+        for i in 0..d {
+            let ri = row[i] as f64;
+            for j in i..d {
+                gram[i * d + j] += ri * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            gram[i * d + j] = gram[j * d + i];
+        }
+    }
+    let mut eig = symmetric_eigenvalues(&gram, d);
+    eig.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eig.into_iter().map(|l| l.max(0.0).sqrt()).collect()
+}
+
+/// Variance captured by the top-k singular values: Σ_{i<k} σᵢ² / Σ σᵢ².
+pub fn variance_captured(sv: &[f64], k: usize) -> f64 {
+    let total: f64 = sv.iter().map(|s| s * s).sum();
+    if total == 0.0 {
+        return 1.0;
+    }
+    sv.iter().take(k).map(|s| s * s).sum::<f64>() / total
+}
+
+/// Smallest k with variance_captured ≥ frac.
+pub fn effective_rank(sv: &[f64], frac: f64) -> usize {
+    for k in 1..=sv.len() {
+        if variance_captured(sv, k) >= frac {
+            return k;
+        }
+    }
+    sv.len()
+}
+
+/// Full spectral report for a layer's grids.
+#[derive(Debug, Clone)]
+pub struct SpectrumReport {
+    pub singular_values: Vec<f64>,
+    /// variance_captured at each k = 1..=d
+    pub capture_curve: Vec<f64>,
+    pub rank_90: usize,
+    pub rank_94: usize,
+    pub rank_99: usize,
+}
+
+pub fn analyze(data: &[f32], n: usize, d: usize) -> SpectrumReport {
+    let sv = singular_values(data, n, d);
+    let capture_curve = (1..=sv.len()).map(|k| variance_captured(&sv, k)).collect();
+    SpectrumReport {
+        rank_90: effective_rank(&sv, 0.90),
+        rank_94: effective_rank(&sv, 0.94),
+        rank_99: effective_rank(&sv, 0.99),
+        singular_values: sv,
+        capture_curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn rank_one_matrix() {
+        // rows all multiples of one vector -> single nonzero singular value
+        let v = [1.0f32, 2.0, 3.0];
+        let mut data = Vec::new();
+        for s in 1..=10 {
+            data.extend(v.iter().map(|&x| x * s as f32));
+        }
+        let sv = singular_values(&data, 10, 3);
+        assert!(sv[0] > 1.0);
+        assert!(sv[1] < 1e-4 * sv[0], "{sv:?}");
+        assert_eq!(effective_rank(&sv, 0.94), 1);
+    }
+
+    #[test]
+    fn identity_rows_give_equal_singular_values() {
+        // n = d rows of the identity: all singular values are 1
+        let d = 5;
+        let mut data = vec![0f32; d * d];
+        for i in 0..d {
+            data[i * d + i] = 1.0;
+        }
+        let sv = singular_values(&data, d, d);
+        for s in &sv {
+            assert!((s - 1.0).abs() < 1e-9, "{sv:?}");
+        }
+        assert_eq!(effective_rank(&sv, 0.94), 5);
+    }
+
+    #[test]
+    fn matches_frobenius_norm() {
+        // Σ σᵢ² == ||C||_F² (exact identity)
+        let mut rng = Pcg32::seeded(3);
+        let (n, d) = (200, 8);
+        let data = rng.normal_vec(n * d, 0.0, 1.5);
+        let sv = singular_values(&data, n, d);
+        let fro: f64 = data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let sum_sq: f64 = sv.iter().map(|s| s * s).sum();
+        assert!((fro - sum_sq).abs() / fro < 1e-9, "{fro} vs {sum_sq}");
+    }
+
+    #[test]
+    fn low_rank_mixture_detected() {
+        // rows drawn from 3 prototypes + small noise: rank_90 should be <= 4
+        let mut rng = Pcg32::seeded(4);
+        let d = 10;
+        let protos: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(d, 0.0, 1.0)).collect();
+        let mut data = Vec::new();
+        for _ in 0..500 {
+            let p = &protos[rng.below(3)];
+            let gain = rng.uniform_in(0.5, 2.0);
+            data.extend(p.iter().map(|&v| gain * v + 0.02 * rng.normal()));
+        }
+        let rep = analyze(&data, 500, d);
+        assert!(rep.rank_90 <= 4, "rank_90 = {}", rep.rank_90);
+        assert!(rep.capture_curve[d - 1] > 0.999);
+        // capture curve is monotone
+        for w in rep.capture_curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Minimal dense tensor used across the library.
+//!
+//! Row-major, owned storage, just enough shape algebra for checkpoints,
+//! compression and literal marshalling — not a general array library.
+
+mod serialize;
+
+pub use serialize::{read_tensor, write_tensor};
+
+use std::fmt;
+
+/// Element type tag carried by [`Tensor`] for serialization and PJRT
+/// literal construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+    U8,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::U8 => "u8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "float32" => Some(DType::F32),
+            "i32" | "int32" => Some(DType::I32),
+            "i8" | "int8" => Some(DType::I8),
+            "u8" | "uint8" => Some(DType::U8),
+            _ => None,
+        }
+    }
+}
+
+/// Untyped tensor: shape + dtype + raw little-endian bytes.
+///
+/// Typed access goes through [`Tensor::as_f32`] / [`Tensor::as_i32`] /
+/// [`Tensor::as_i8`]; constructors take typed slices.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    dtype: DType,
+    data: Vec<u8>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor<{}>{:?}", self.dtype.name(), self.shape)
+    }
+}
+
+fn num_elems(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn from_f32(shape: &[usize], data: &[f32]) -> Self {
+        assert_eq!(num_elems(shape), data.len(), "shape/data mismatch");
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data: bytes }
+    }
+
+    pub fn from_i32(shape: &[usize], data: &[i32]) -> Self {
+        assert_eq!(num_elems(shape), data.len(), "shape/data mismatch");
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::I32, data: bytes }
+    }
+
+    pub fn from_i8(shape: &[usize], data: &[i8]) -> Self {
+        assert_eq!(num_elems(shape), data.len(), "shape/data mismatch");
+        let bytes = data.iter().map(|&v| v as u8).collect();
+        Tensor { shape: shape.to_vec(), dtype: DType::I8, data: bytes }
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            dtype,
+            data: vec![0u8; num_elems(shape) * dtype.size_bytes()],
+        }
+    }
+
+    pub fn from_raw(shape: Vec<usize>, dtype: DType, data: Vec<u8>) -> Self {
+        assert_eq!(num_elems(&shape) * dtype.size_bytes(), data.len());
+        Tensor { shape, dtype, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn len(&self) -> usize {
+        num_elems(&self.shape)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32, "dtype mismatch: {:?}", self.dtype);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32, "dtype mismatch: {:?}", self.dtype);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i8(&self) -> Vec<i8> {
+        assert_eq!(self.dtype, DType::I8, "dtype mismatch: {:?}", self.dtype);
+        self.data.iter().map(|&b| b as i8).collect()
+    }
+
+    /// Reshape without copying; total element count must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(num_elems(shape), self.len(), "reshape count mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major flat index for a multi-index.
+    pub fn flat_index(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0usize;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(ix < dim, "index {ix} out of bounds for dim {i} ({dim})");
+            flat = flat * dim + ix;
+        }
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, -2.5, 3.0, 0.0, 1e-30, f32::MAX]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32(), vec![1.0, -2.5, 3.0, 0.0, 1e-30, f32::MAX]);
+    }
+
+    #[test]
+    fn i32_and_i8_roundtrip() {
+        let t = Tensor::from_i32(&[4], &[-1, 0, i32::MAX, i32::MIN]);
+        assert_eq!(t.as_i32(), vec![-1, 0, i32::MAX, i32::MIN]);
+        let t8 = Tensor::from_i8(&[3], &[-128, 0, 127]);
+        assert_eq!(t8.as_i8(), vec![-128, 0, 127]);
+        assert_eq!(t8.byte_len(), 3);
+    }
+
+    #[test]
+    fn flat_index_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4], DType::F32);
+        assert_eq!(t.flat_index(&[0, 0, 0]), 0);
+        assert_eq!(t.flat_index(&[0, 0, 3]), 3);
+        assert_eq!(t.flat_index(&[0, 1, 0]), 4);
+        assert_eq!(t.flat_index(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    #[should_panic]
+    fn flat_index_out_of_bounds() {
+        Tensor::zeros(&[2, 2], DType::F32).flat_index(&[2, 0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_f32(&[6], &[0., 1., 2., 3., 4., 5.]).reshape(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.as_f32()[5], 5.0);
+    }
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for d in [DType::F32, DType::I32, DType::I8, DType::U8] {
+            assert_eq!(DType::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_name("int32"), Some(DType::I32));
+        assert_eq!(DType::from_name("bogus"), None);
+    }
+}

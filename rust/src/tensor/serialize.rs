@@ -1,0 +1,130 @@
+//! Tensor (de)serialization primitives used by the checkpoint format.
+//!
+//! Layout per tensor record (little endian):
+//! `[name_len: u32][name: utf8][dtype: u8][rank: u32][dims: u64 * rank]
+//!  [byte_len: u64][raw data]`
+
+use std::io::{self, Read, Write};
+
+use super::{DType, Tensor};
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::I8 => 2,
+        DType::U8 => 3,
+    }
+}
+
+fn dtype_from_tag(t: u8) -> io::Result<DType> {
+    Ok(match t {
+        0 => DType::F32,
+        1 => DType::I32,
+        2 => DType::I8,
+        3 => DType::U8,
+        _ => return Err(io::Error::new(io::ErrorKind::InvalidData, "bad dtype tag")),
+    })
+}
+
+pub fn write_tensor<W: Write>(w: &mut W, name: &str, t: &Tensor) -> io::Result<()> {
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    w.write_all(&[dtype_tag(t.dtype())])?;
+    w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+    for &d in t.shape() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    w.write_all(&(t.byte_len() as u64).to_le_bytes())?;
+    w.write_all(t.raw())?;
+    Ok(())
+}
+
+fn read_exact_vec<R: Read>(r: &mut R, n: usize) -> io::Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let b = read_exact_vec(r, 4)?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let b = read_exact_vec(r, 8)?;
+    Ok(u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+pub fn read_tensor<R: Read>(r: &mut R) -> io::Result<(String, Tensor)> {
+    let name_len = read_u32(r)? as usize;
+    if name_len > 4096 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "name too long"));
+    }
+    let name = String::from_utf8(read_exact_vec(r, name_len)?)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let dtype = dtype_from_tag(tag[0])?;
+    let rank = read_u32(r)? as usize;
+    if rank > 16 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "rank too large"));
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u64(r)? as usize);
+    }
+    let byte_len = read_u64(r)? as usize;
+    let expect: usize = shape.iter().product::<usize>() * dtype.size_bytes();
+    if byte_len != expect {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "byte length mismatch"));
+    }
+    let data = read_exact_vec(r, byte_len)?;
+    Ok((name, Tensor::from_raw(shape, dtype, data)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let tensors = vec![
+            ("a".to_string(), Tensor::from_f32(&[2, 2], &[1., 2., 3., 4.])),
+            ("b/long.name-x".to_string(), Tensor::from_i32(&[3], &[-7, 0, 9])),
+            ("c".to_string(), Tensor::from_i8(&[2, 1, 2], &[-1, 2, -3, 4])),
+            ("empty".to_string(), Tensor::from_f32(&[0], &[])),
+            ("scalar".to_string(), Tensor::from_f32(&[], &[42.0])),
+        ];
+        let mut buf = Vec::new();
+        for (n, t) in &tensors {
+            write_tensor(&mut buf, n, t).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        for (n, t) in &tensors {
+            let (rn, rt) = read_tensor(&mut cur).unwrap();
+            assert_eq!(&rn, n);
+            assert_eq!(&rt, t);
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_is_error() {
+        let t = Tensor::from_f32(&[2], &[1., 2.]);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, "x", &t).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_tensor(&mut cur).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_tag_is_error() {
+        let t = Tensor::from_f32(&[1], &[1.0]);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, "x", &t).unwrap();
+        buf[4 + 1] = 99; // dtype tag right after 4-byte len + 1-byte name
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_tensor(&mut cur).is_err());
+    }
+}

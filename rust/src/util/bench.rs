@@ -1,0 +1,158 @@
+//! Lightweight benchmark harness (criterion is not vendored in the image;
+//! DESIGN.md §2).  Warmup + timed iterations + robust summary stats, plus
+//! throughput accounting.  Used by the `benches/` targets.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: measures `f` repeatedly, targeting `target_time` of
+/// sampling after `warmup` of warmup.  `f` should return something observable
+/// to keep the optimizer honest (use [`std::hint::black_box`] inside).
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            target_time: Duration::from_secs(2),
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(400),
+            max_iters: 10_000,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // estimate per-iter cost to pick sample count
+        let est_ns = (w0.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let iters = ((self.target_time.as_nanos() as f64 / est_ns) as usize)
+            .clamp(10, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_reasonable() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            target_time: Duration::from_millis(20),
+            max_iters: 1000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.min_ns <= r.p50_ns);
+        assert!(r.iters >= 10);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6, // 1 ms
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            min_ns: 1e6,
+            max_ns: 1e6,
+        };
+        let tput = r.throughput(32.0);
+        assert!((tput - 32_000.0).abs() < 1.0, "{tput}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utility substrates built in-tree because the image vendors only
+//! the `xla` dependency closure (DESIGN.md §2): JSON, benchmarking,
+//! property testing, CLI parsing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,57 @@
+//! Seeded property-test harness (proptest is not vendored in the image;
+//! DESIGN.md §2).  Runs a property over many seeded random cases and, on
+//! failure, reports the offending seed so the case is exactly reproducible.
+
+use crate::data::rng::Pcg32;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`.  The property gets
+/// a fresh RNG per case and returns `Err(msg)` on violation.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience assertions returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u32 parity", 1, 50, |rng| {
+            let v = rng.next_u32();
+            prop_assert!(v % 2 == 0 || v % 2 == 1);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", 2, 10, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,112 @@
+//! Bit-packed codebook indices (paper Eq. 3).
+//!
+//! The per-edge storage bound ⌈log₂K⌉ bits only holds if indices are packed
+//! at bit granularity; this module implements the packed representation the
+//! compressed checkpoint stores on disk (unpacked to i32 at head load, where
+//! the runtime trades 2–4 bytes/edge of RAM for O(1) access).
+
+/// Pack `values` (< 2^bits each) LSB-first into bytes.
+pub fn pack(values: &[u32], bits: usize) -> Vec<u8> {
+    assert!(bits >= 1 && bits <= 32, "bits {bits}");
+    let mut out = vec![0u8; (values.len() * bits + 7) / 8];
+    let mut bitpos = 0usize;
+    for &v in values {
+        debug_assert!(bits == 32 || v < (1u32 << bits), "value {v} exceeds {bits} bits");
+        let mut remaining = bits;
+        let mut val = v as u64;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(remaining);
+            out[byte] |= ((val & ((1u64 << take) - 1)) as u8) << off;
+            val >>= take;
+            bitpos += take;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Unpack `count` values of `bits` width from `packed`.
+pub fn unpack(packed: &[u8], bits: usize, count: usize) -> Vec<u32> {
+    assert!(bits >= 1 && bits <= 32);
+    assert!(packed.len() * 8 >= count * bits, "packed buffer too small");
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let mut val = 0u64;
+        let mut got = 0usize;
+        while got < bits {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(bits - got);
+            let chunk = ((packed[byte] >> off) as u64) & ((1u64 << take) - 1);
+            val |= chunk << got;
+            got += take;
+            bitpos += take;
+        }
+        out.push(val as u32);
+    }
+    out
+}
+
+/// Bits needed for indices into a K-entry codebook.
+pub fn bits_for(k: usize) -> usize {
+    if k <= 1 {
+        1
+    } else {
+        (usize::BITS - (k - 1).leading_zeros()) as usize
+    }
+}
+
+/// Packed byte length for `count` indices into a K-entry codebook.
+pub fn packed_len(count: usize, k: usize) -> usize {
+    (count * bits_for(k) + 7) / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_various_widths() {
+        let mut rng = Pcg32::seeded(1);
+        for bits in [1usize, 3, 7, 8, 9, 12, 16, 21, 32] {
+            let n = 257;
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let values: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+            let packed = pack(&values, bits);
+            assert_eq!(packed.len(), (n * bits + 7) / 8);
+            let got = unpack(&packed, bits, n);
+            assert_eq!(got, values, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn eq3_sizes() {
+        // K = 2^16: 16 bits/index; 3.2M edges -> 6.4 MB of indices
+        assert_eq!(bits_for(65536), 16);
+        assert_eq!(packed_len(3_200_000, 65536), 6_400_000);
+        // K = 512 -> 9 bits
+        assert_eq!(bits_for(512), 9);
+        assert_eq!(packed_len(8, 512), 9);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+    }
+
+    #[test]
+    fn packed_smaller_than_i32() {
+        let mut rng = Pcg32::seeded(2);
+        let values: Vec<u32> = (0..10_000).map(|_| rng.below(512) as u32).collect();
+        let packed = pack(&values, bits_for(512));
+        assert!(packed.len() * 8 < values.len() * 32 / 3, "{}", packed.len());
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pack(&[], 9).is_empty());
+        assert!(unpack(&[], 9, 0).is_empty());
+    }
+}

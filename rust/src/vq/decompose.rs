@@ -1,0 +1,229 @@
+//! Gain–Shape–Bias decomposition + VQ compression (paper §4.2).
+//!
+//! Training procedure from the paper, post-training and retraining-free:
+//!   1. normalize every spline grid to zero mean / unit variance:
+//!      shape_ij = (c_ij - b_ij) / g_ij  with b = mean, g = std;
+//!   2. mini-batch k-means over the shapes -> layer codebook C [K, G];
+//!   3. assign each edge to its nearest centroid: k_ij;
+//!   4. keep per-edge (g_ij, b_ij) scalars.
+//!
+//! Reconstruction quality is the coefficient of determination R² (Eq. 4).
+
+use super::kmeans::{KMeans, KMeansConfig};
+
+/// One compressed KAN layer (fp32 form).
+#[derive(Debug, Clone)]
+pub struct VqLayer {
+    pub codebook: Vec<f32>,  // [k, g]
+    pub k: usize,
+    pub g: usize,
+    pub idx: Vec<i32>,       // [n_in * n_out]
+    pub gain: Vec<f32>,      // [n_in * n_out]
+    pub bias: Vec<f32>,      // [n_in * n_out] (per-edge; fold with bias_sum())
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl VqLayer {
+    /// Per-output folded bias: bs[j] = Σ_i b_ij (layer sums over inputs, so
+    /// only the sum is needed at inference — the LUTHAM runtime trick).
+    pub fn bias_sum(&self) -> Vec<f32> {
+        let mut bs = vec![0f32; self.n_out];
+        for i in 0..self.n_in {
+            for j in 0..self.n_out {
+                bs[j] += self.bias[i * self.n_out + j];
+            }
+        }
+        bs
+    }
+
+    /// Reconstruct the dense grids: ĉ_ij = g_ij·C[k_ij] + b_ij.
+    pub fn reconstruct(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_in * self.n_out * self.g];
+        for e in 0..self.n_in * self.n_out {
+            let c = self.idx[e] as usize;
+            let row = &self.codebook[c * self.g..(c + 1) * self.g];
+            let dst = &mut out[e * self.g..(e + 1) * self.g];
+            for (d, &cv) in dst.iter_mut().zip(row) {
+                *d = self.gain[e] * cv + self.bias[e];
+            }
+        }
+        out
+    }
+}
+
+/// Decompose a dense layer's grids [n_in, n_out, g] into normalized shapes +
+/// per-edge gain/bias.  Returns (shapes [E, g], gains [E], biases [E]).
+pub fn normalize_grids(grids: &[f32], n_edges: usize, g: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(grids.len(), n_edges * g);
+    let mut shapes = vec![0f32; n_edges * g];
+    let mut gains = vec![0f32; n_edges];
+    let mut biases = vec![0f32; n_edges];
+    for e in 0..n_edges {
+        let row = &grids[e * g..(e + 1) * g];
+        let mean = row.iter().sum::<f32>() / g as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / g as f32;
+        // guard: a perfectly flat spline has zero variance; its shape is the
+        // zero vector and the gain carries no information
+        let std = var.sqrt().max(1e-8);
+        biases[e] = mean;
+        gains[e] = std;
+        let dst = &mut shapes[e * g..(e + 1) * g];
+        for (d, &v) in dst.iter_mut().zip(row) {
+            *d = (v - mean) / std;
+        }
+    }
+    (shapes, gains, biases)
+}
+
+/// Compress one dense layer with a K-entry codebook.
+pub fn compress_layer(
+    grids: &[f32],
+    n_in: usize,
+    n_out: usize,
+    g: usize,
+    k: usize,
+    seed: u64,
+) -> VqLayer {
+    let n_edges = n_in * n_out;
+    let (shapes, gains, biases) = normalize_grids(grids, n_edges, g);
+    let cfg = KMeansConfig {
+        k,
+        batch_size: 1024.min(n_edges),
+        iterations: 80,
+        seed,
+    };
+    let km = KMeans::fit(&shapes, n_edges, g, &cfg);
+    let idx = km.assign_all(&shapes, n_edges);
+    VqLayer {
+        codebook: km.centroids,
+        k: km.k,
+        g,
+        idx,
+        gain: gains,
+        bias: biases,
+        n_in,
+        n_out,
+    }
+}
+
+/// Coefficient of determination (paper Eq. 4) between original and
+/// reconstructed grids, computed against the global mean.
+pub fn r_squared(original: &[f32], reconstructed: &[f32]) -> f64 {
+    assert_eq!(original.len(), reconstructed.len());
+    let n = original.len();
+    let mean = original.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let mut ss_res = 0f64;
+    let mut ss_tot = 0f64;
+    for (&o, &r) in original.iter().zip(reconstructed) {
+        ss_res += ((o - r) as f64).powi(2);
+        ss_tot += (o as f64 - mean).powi(2);
+    }
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { f64::NEG_INFINITY };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    /// Grids drawn from a small set of true shapes — the low-rank functional
+    /// redundancy the paper's §3.2 spectral analysis reports.
+    fn redundant_grids(n_edges: usize, g: usize, n_shapes: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let protos: Vec<Vec<f32>> = (0..n_shapes)
+            .map(|_| {
+                let v = rng.normal_vec(g, 0.0, 1.0);
+                let mean = v.iter().sum::<f32>() / g as f32;
+                let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / g as f32;
+                v.iter().map(|x| (x - mean) / var.sqrt().max(1e-8)).collect()
+            })
+            .collect();
+        let mut grids = Vec::with_capacity(n_edges * g);
+        for _ in 0..n_edges {
+            let p = &protos[rng.below(n_shapes)];
+            let gain = rng.uniform_in(0.2, 3.0);
+            let bias = rng.uniform_in(-1.0, 1.0);
+            grids.extend(p.iter().map(|&v| gain * v + bias));
+        }
+        grids
+    }
+
+    #[test]
+    fn normalize_inverts() {
+        let mut rng = Pcg32::seeded(1);
+        let grids = rng.normal_vec(20 * 10, 0.5, 2.0);
+        let (shapes, gains, biases) = normalize_grids(&grids, 20, 10);
+        for e in 0..20 {
+            for gi in 0..10 {
+                let rec = gains[e] * shapes[e * 10 + gi] + biases[e];
+                assert!((rec - grids[e * 10 + gi]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_are_normalized() {
+        let mut rng = Pcg32::seeded(2);
+        let grids = rng.normal_vec(50 * 8, -1.0, 3.0);
+        let (shapes, _, _) = normalize_grids(&grids, 50, 8);
+        for e in 0..50 {
+            let row = &shapes[e * 8..(e + 1) * 8];
+            let mean = row.iter().sum::<f32>() / 8.0;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+            assert!(mean.abs() < 1e-4, "{mean}");
+            assert!((var - 1.0).abs() < 1e-3, "{var}");
+        }
+    }
+
+    #[test]
+    fn perfect_codebook_gives_r2_near_one() {
+        // 8 true shapes, K = 32 entries: k-means should recover them
+        let grids = redundant_grids(500, 10, 8, 3);
+        let layer = compress_layer(&grids, 25, 20, 10, 32, 42);
+        let rec = layer.reconstruct();
+        let r2 = r_squared(&grids, &rec);
+        assert!(r2 > 0.99, "r2 = {r2}");
+    }
+
+    #[test]
+    fn small_codebook_degrades_r2_monotonically_ish() {
+        let grids = redundant_grids(400, 10, 64, 4);
+        let r2_at = |k| {
+            let layer = compress_layer(&grids, 20, 20, 10, k, 42);
+            r_squared(&grids, &layer.reconstruct())
+        };
+        let r2_4 = r2_at(4);
+        let r2_64 = r2_at(64);
+        assert!(r2_64 > r2_4, "{r2_64} !> {r2_4}");
+        assert!(r2_64 > 0.95, "{r2_64}");
+    }
+
+    #[test]
+    fn bias_sum_folds_correctly() {
+        let layer = VqLayer {
+            codebook: vec![0.0; 4],
+            k: 1,
+            g: 4,
+            idx: vec![0; 6],
+            gain: vec![1.0; 6],
+            bias: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], // [2 in, 3 out]
+            n_in: 2,
+            n_out: 3,
+        };
+        assert_eq!(layer.bias_sum(), vec![1.0 + 4.0, 2.0 + 5.0, 3.0 + 6.0]);
+    }
+
+    #[test]
+    fn r_squared_bounds() {
+        let orig = vec![1.0f32, 2.0, 3.0, 4.0];
+        assert!((r_squared(&orig, &orig) - 1.0).abs() < 1e-12);
+        let mean_pred = vec![2.5f32; 4];
+        assert!(r_squared(&orig, &mean_pred).abs() < 1e-6); // R² = 0 at mean
+        let worse = vec![-10.0f32; 4];
+        assert!(r_squared(&orig, &worse) < 0.0);
+    }
+}

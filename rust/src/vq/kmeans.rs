@@ -1,0 +1,241 @@
+//! Mini-batch k-means with k-means++ initialization (paper §4.2 step 2).
+//!
+//! Operates on row-major `[n, d]` data (normalized spline shapes).  Handles
+//! empty clusters by reseeding to the farthest point of the current batch,
+//! so the codebook never collapses below K distinct entries while n >= K.
+
+use crate::data::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub batch_size: usize,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig { k: 512, batch_size: 1024, iterations: 60, seed: 0xC0DEB00C }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<f32>, // [k, d]
+    pub k: usize,
+    pub d: usize,
+    /// mini-batch per-centroid counts (for the decaying learning rate)
+    counts: Vec<f64>,
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl KMeans {
+    /// Wrap existing centroids (e.g. a universal codebook) for assignment.
+    pub fn from_centroids(centroids: Vec<f32>, k: usize, d: usize) -> KMeans {
+        assert_eq!(centroids.len(), k * d);
+        KMeans { centroids, k, d, counts: vec![0.0; k] }
+    }
+
+    /// k-means++ initialization over the dataset (sampled if huge).
+    pub fn init_plus_plus(data: &[f32], n: usize, d: usize, cfg: &KMeansConfig) -> KMeans {
+        assert_eq!(data.len(), n * d);
+        assert!(n > 0 && cfg.k > 0);
+        let mut rng = Pcg32::new(cfg.seed, 3);
+        let k = cfg.k.min(n);
+        // subsample candidate pool for large n (k-means++ is O(n*k) otherwise)
+        let pool: Vec<usize> = if n > 16 * 1024 {
+            (0..16 * 1024).map(|_| rng.below(n)).collect()
+        } else {
+            (0..n).collect()
+        };
+        let row = |i: usize| &data[i * d..(i + 1) * d];
+        let mut centroids = Vec::with_capacity(k * d);
+        let first = pool[rng.below(pool.len())];
+        centroids.extend_from_slice(row(first));
+        let mut dists: Vec<f32> = pool.iter().map(|&i| sq_dist(row(i), row(first))).collect();
+        for _ in 1..k {
+            let total: f32 = dists.iter().sum();
+            let pick = if total <= 0.0 {
+                pool[rng.below(pool.len())]
+            } else {
+                // sample proportional to squared distance
+                let mut target = rng.uniform() * total;
+                let mut chosen = pool[pool.len() - 1];
+                for (pi, &i) in pool.iter().enumerate() {
+                    target -= dists[pi];
+                    if target <= 0.0 {
+                        chosen = i;
+                        break;
+                    }
+                }
+                chosen
+            };
+            let start = centroids.len();
+            centroids.extend_from_slice(row(pick));
+            let new_c: Vec<f32> = centroids[start..start + d].to_vec();
+            for (pi, &i) in pool.iter().enumerate() {
+                let dnew = sq_dist(row(i), &new_c);
+                if dnew < dists[pi] {
+                    dists[pi] = dnew;
+                }
+            }
+        }
+        KMeans { centroids, k, d, counts: vec![0.0; k] }
+    }
+
+    /// Nearest centroid index for one row.
+    pub fn assign_one(&self, x: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..self.k {
+            let dist = sq_dist(x, &self.centroids[c * self.d..(c + 1) * self.d]);
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// One mini-batch update pass (Sculley 2010).
+    fn minibatch_step(&mut self, data: &[f32], n: usize, rng: &mut Pcg32, batch: usize) {
+        let d = self.d;
+        let mut chosen = Vec::with_capacity(batch);
+        for _ in 0..batch.min(n) {
+            chosen.push(rng.below(n));
+        }
+        let assignments: Vec<usize> = chosen
+            .iter()
+            .map(|&i| self.assign_one(&data[i * d..(i + 1) * d]))
+            .collect();
+        let mut batch_counts = vec![0usize; self.k];
+        for (&i, &c) in chosen.iter().zip(&assignments) {
+            self.counts[c] += 1.0;
+            batch_counts[c] += 1;
+            let lr = 1.0 / self.counts[c] as f32;
+            let cent = &mut self.centroids[c * d..(c + 1) * d];
+            let x = &data[i * d..(i + 1) * d];
+            for (cv, &xv) in cent.iter_mut().zip(x) {
+                *cv += lr * (xv - *cv);
+            }
+        }
+        // empty-cluster handling: reseed never-hit centroids to the batch
+        // point farthest from its assigned centroid
+        if self.k <= n {
+            for c in 0..self.k {
+                if self.counts[c] == 0.0 {
+                    let mut far_i = chosen[0];
+                    let mut far_d = -1.0f32;
+                    for (&i, &a) in chosen.iter().zip(&assignments) {
+                        let dist = sq_dist(
+                            &data[i * d..(i + 1) * d],
+                            &self.centroids[a * d..(a + 1) * d],
+                        );
+                        if dist > far_d {
+                            far_d = dist;
+                            far_i = i;
+                        }
+                    }
+                    self.centroids[c * d..(c + 1) * d]
+                        .copy_from_slice(&data[far_i * d..(far_i + 1) * d]);
+                    self.counts[c] = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Full training: init + `iterations` mini-batch steps.
+    pub fn fit(data: &[f32], n: usize, d: usize, cfg: &KMeansConfig) -> KMeans {
+        let mut km = Self::init_plus_plus(data, n, d, cfg);
+        let mut rng = Pcg32::new(cfg.seed ^ 0x4D49_4E49, 5); // "MINI"
+        for _ in 0..cfg.iterations {
+            km.minibatch_step(data, n, &mut rng, cfg.batch_size);
+        }
+        km
+    }
+
+    /// Assign every row; returns indices [n].
+    pub fn assign_all(&self, data: &[f32], n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|i| self.assign_one(&data[i * self.d..(i + 1) * self.d]) as i32)
+            .collect()
+    }
+
+    /// Mean squared quantization error over the dataset.
+    pub fn distortion(&self, data: &[f32], n: usize) -> f64 {
+        let mut acc = 0f64;
+        for i in 0..n {
+            let x = &data[i * self.d..(i + 1) * self.d];
+            let c = self.assign_one(x);
+            acc += sq_dist(x, &self.centroids[c * self.d..(c + 1) * self.d]) as f64;
+        }
+        acc / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[[f32; 2]], spread: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut data = Vec::new();
+        for c in centers {
+            for _ in 0..n_per {
+                data.push(c[0] + spread * rng.normal());
+                data.push(c[1] + spread * rng.normal());
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let centers = [[-10.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let data = blobs(200, &centers, 0.3, 1);
+        let cfg = KMeansConfig { k: 3, batch_size: 128, iterations: 80, seed: 2 };
+        let km = KMeans::fit(&data, 600, 2, &cfg);
+        // every true center must have a centroid within 1.0
+        for c in &centers {
+            let best = (0..3)
+                .map(|i| sq_dist(c, &km.centroids[i * 2..(i + 1) * 2]))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 1.0, "center {c:?} unmatched: {best}");
+        }
+        assert!(km.distortion(&data, 600) < 0.5);
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let data = vec![0.0f32, 0.0, 1.0, 1.0];
+        let cfg = KMeansConfig { k: 10, batch_size: 4, iterations: 5, seed: 3 };
+        let km = KMeans::fit(&data, 2, 2, &cfg);
+        assert_eq!(km.k, 2);
+    }
+
+    #[test]
+    fn assignments_in_range_and_deterministic() {
+        let data = blobs(50, &[[0.0, 0.0], [5.0, 5.0]], 1.0, 4);
+        let cfg = KMeansConfig { k: 8, batch_size: 32, iterations: 20, seed: 5 };
+        let a1 = KMeans::fit(&data, 100, 2, &cfg).assign_all(&data, 100);
+        let a2 = KMeans::fit(&data, 100, 2, &cfg).assign_all(&data, 100);
+        assert_eq!(a1, a2);
+        assert!(a1.iter().all(|&c| (c as usize) < 8));
+    }
+
+    #[test]
+    fn more_centroids_reduce_distortion() {
+        let data = blobs(100, &[[0.0, 0.0], [3.0, 1.0], [-2.0, 4.0], [5.0, -3.0]], 1.0, 6);
+        let fit = |k| {
+            let cfg = KMeansConfig { k, batch_size: 64, iterations: 60, seed: 7 };
+            KMeans::fit(&data, 400, 2, &cfg).distortion(&data, 400)
+        };
+        let d2 = fit(2);
+        let d16 = fit(16);
+        assert!(d16 < d2, "{d16} !< {d2}");
+    }
+}

@@ -1,0 +1,16 @@
+//! SHARe-KAN compression: Gain–Shape–Bias decomposition, mini-batch
+//! k-means codebooks, Int8 quantizers, storage accounting and the
+//! checkpoint-to-checkpoint pipeline (paper §4).
+
+pub mod bitpack;
+pub mod decompose;
+pub mod kmeans;
+pub mod pipeline;
+pub mod quant;
+pub mod storage;
+pub mod universal;
+
+pub use decompose::{compress_layer, normalize_grids, r_squared, VqLayer};
+pub use kmeans::{KMeans, KMeansConfig};
+pub use pipeline::{compress, load_compressed, Compressed};
+pub use storage::Precision;

@@ -1,0 +1,295 @@
+//! End-to-end compression pipeline: dense checkpoint -> SHARe-KAN checkpoint.
+//!
+//! Consumes a `dense_kan` checkpoint (grids0/grids1), runs the Gain–Shape–
+//! Bias decomposition + k-means per layer, optionally quantizes to Int8, and
+//! emits a compressed checkpoint the serving coordinator can load.
+
+use anyhow::{Context, Result};
+
+use super::decompose::{compress_layer, r_squared, VqLayer};
+use super::quant::{quantize_linear_int8, quantize_log_int8, LogInt8Params};
+use super::storage::Precision;
+use crate::kan::checkpoint::Checkpoint;
+use crate::kan::eval::VqModel;
+use crate::kan::spec::KanSpec;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Result of compressing one head.
+pub struct Compressed {
+    pub layers: Vec<VqLayer>,
+    pub r2: Vec<f64>,
+    pub precision: Precision,
+    /// Int8 payloads (present when precision == Int8)
+    pub int8: Option<Int8Payload>,
+    pub spec: KanSpec,
+    pub k: usize,
+}
+
+pub struct Int8Payload {
+    pub codebook_q: Vec<Vec<i8>>,
+    pub codebook_scale: Vec<f32>,
+    pub gain_q: Vec<Vec<i8>>,
+    pub gain_params: Vec<LogInt8Params>,
+}
+
+/// Extract the dense grids from a checkpoint.
+pub fn dense_grids(ck: &Checkpoint, spec: &KanSpec) -> Result<(Vec<f32>, Vec<f32>)> {
+    let g0 = ck.require("grids0")?.as_f32();
+    let g1 = ck.require("grids1")?.as_f32();
+    anyhow::ensure!(
+        g0.len() == spec.d_in * spec.d_hidden * spec.grid_size,
+        "grids0 size mismatch"
+    );
+    anyhow::ensure!(
+        g1.len() == spec.d_hidden * spec.d_out * spec.grid_size,
+        "grids1 size mismatch"
+    );
+    Ok((g0, g1))
+}
+
+/// Compress a trained dense head.
+pub fn compress(ck: &Checkpoint, spec: &KanSpec, k: usize, precision: Precision,
+                seed: u64) -> Result<Compressed> {
+    let (g0, g1) = dense_grids(ck, spec)?;
+    let dims = spec.layer_dims();
+    let mut layers = Vec::new();
+    let mut r2 = Vec::new();
+    for (li, (grids, (n_in, n_out))) in [(g0, dims[0]), (g1, dims[1])].into_iter().enumerate() {
+        let layer = compress_layer(&grids, n_in, n_out, spec.grid_size, k,
+                                   seed.wrapping_add(li as u64));
+        r2.push(r_squared(&grids, &layer.reconstruct()));
+        layers.push(layer);
+    }
+    let int8 = if precision == Precision::Int8 {
+        let mut cq = Vec::new();
+        let mut cs = Vec::new();
+        let mut gq = Vec::new();
+        let mut gp = Vec::new();
+        for l in &layers {
+            let c = quantize_linear_int8(&l.codebook);
+            cq.push(c.q);
+            cs.push(c.scale);
+            let g = quantize_log_int8(&l.gain);
+            gq.push(g.q);
+            gp.push(g.params);
+        }
+        // recompute R² against the *quantized* reconstruction so the Int8
+        // row reports its actual fidelity (codebook + gain quantization
+        // error on top of the VQ assignment error)
+        let (g0, g1) = dense_grids(ck, spec)?;
+        for (li, grids) in [g0, g1].into_iter().enumerate() {
+            let l = &layers[li];
+            let cb = super::quant::dequantize_linear_int8(&cq[li], cs[li]);
+            let gain = super::quant::dequantize_log_int8(&gq[li], gp[li]);
+            let q_layer = VqLayer {
+                codebook: cb,
+                gain,
+                ..l.clone()
+            };
+            r2[li] = r_squared(&grids, &q_layer.reconstruct());
+        }
+        Some(Int8Payload { codebook_q: cq, codebook_scale: cs, gain_q: gq, gain_params: gp })
+    } else {
+        None
+    };
+    Ok(Compressed { layers, r2, precision, int8, spec: *spec, k })
+}
+
+impl Compressed {
+    /// fp32 VqModel for the pure-Rust evaluator.  For Int8, dequantizes
+    /// first (numerically identical to the in-graph dequant of the HLO).
+    pub fn to_eval_model(&self) -> VqModel {
+        let l0 = &self.layers[0];
+        let l1 = &self.layers[1];
+        let (cb0, gain0, cb1, gain1) = match (&self.precision, &self.int8) {
+            (Precision::Int8, Some(p)) => (
+                super::quant::dequantize_linear_int8(&p.codebook_q[0], p.codebook_scale[0]),
+                super::quant::dequantize_log_int8(&p.gain_q[0], p.gain_params[0]),
+                super::quant::dequantize_linear_int8(&p.codebook_q[1], p.codebook_scale[1]),
+                super::quant::dequantize_log_int8(&p.gain_q[1], p.gain_params[1]),
+            ),
+            _ => (l0.codebook.clone(), l0.gain.clone(), l1.codebook.clone(), l1.gain.clone()),
+        };
+        VqModel {
+            codebook0: cb0,
+            idx0: l0.idx.clone(),
+            gain0,
+            bias_sum0: l0.bias_sum(),
+            codebook1: cb1,
+            idx1: l1.idx.clone(),
+            gain1,
+            bias_sum1: l1.bias_sum(),
+            k: l0.k.max(l1.k),
+            g: self.spec.grid_size,
+            d_in: self.spec.d_in,
+            d_hidden: self.spec.d_hidden,
+            d_out: self.spec.d_out,
+        }
+    }
+
+    /// Serialize to a compressed checkpoint.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let spec = &self.spec;
+        let mut meta = vec![
+            ("model", Json::str(match self.precision {
+                Precision::Fp32 => "vq_kan_fp32",
+                Precision::Int8 => "vq_kan_int8",
+            })),
+            ("codebook_size", Json::num(self.k as f64)),
+            ("grid_size", Json::num(spec.grid_size as f64)),
+            ("d_in", Json::num(spec.d_in as f64)),
+            ("d_hidden", Json::num(spec.d_hidden as f64)),
+            ("d_out", Json::num(spec.d_out as f64)),
+        ];
+        meta.push(("r2", Json::Arr(self.r2.iter().map(|&v| Json::num(v)).collect())));
+        let mut ck = Checkpoint::new(Json::obj(meta));
+        for (li, l) in self.layers.iter().enumerate() {
+            let dims = spec.layer_dims()[li];
+            ck.insert(&format!("idx{li}"),
+                      Tensor::from_i32(&[dims.0, dims.1], &l.idx));
+            ck.insert(&format!("bias_sum{li}"),
+                      Tensor::from_f32(&[dims.1], &l.bias_sum()));
+            match (&self.precision, &self.int8) {
+                (Precision::Int8, Some(p)) => {
+                    ck.insert(&format!("cbq{li}"),
+                              Tensor::from_i8(&[l.k, l.g], &p.codebook_q[li]));
+                    ck.insert(&format!("gq{li}"),
+                              Tensor::from_i8(&[dims.0, dims.1], &p.gain_q[li]));
+                    ck.insert(&format!("scales{li}"),
+                              Tensor::from_f32(&[3], &[
+                                  p.codebook_scale[li],
+                                  p.gain_params[li].log_lo,
+                                  p.gain_params[li].log_step,
+                              ]));
+                }
+                _ => {
+                    ck.insert(&format!("cb{li}"),
+                              Tensor::from_f32(&[l.k, l.g], &l.codebook));
+                    ck.insert(&format!("g{li}"),
+                              Tensor::from_f32(&[dims.0, dims.1], &l.gain));
+                }
+            }
+        }
+        ck
+    }
+}
+
+/// Load a compressed fp32/int8 checkpoint back into an eval model.
+pub fn load_compressed(ck: &Checkpoint) -> Result<VqModel> {
+    let meta = &ck.meta;
+    let model = meta.get("model").and_then(|j| j.as_str()).unwrap_or("");
+    let spec = KanSpec {
+        d_in: meta.get("d_in").and_then(|j| j.as_usize()).context("d_in")?,
+        d_hidden: meta.get("d_hidden").and_then(|j| j.as_usize()).context("d_hidden")?,
+        d_out: meta.get("d_out").and_then(|j| j.as_usize()).context("d_out")?,
+        grid_size: meta.get("grid_size").and_then(|j| j.as_usize()).context("grid_size")?,
+    };
+    let k = meta.get("codebook_size").and_then(|j| j.as_usize()).context("codebook_size")?;
+    let load_layer = |li: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+        match model {
+            "vq_kan_int8" => {
+                let cbq = ck.require(&format!("cbq{li}"))?.as_i8();
+                let gq = ck.require(&format!("gq{li}"))?.as_i8();
+                let s = ck.require(&format!("scales{li}"))?.as_f32();
+                let p = LogInt8Params { log_lo: s[1], log_step: s[2] };
+                Ok((
+                    super::quant::dequantize_linear_int8(&cbq, s[0]),
+                    super::quant::dequantize_log_int8(&gq, p),
+                ))
+            }
+            _ => Ok((
+                ck.require(&format!("cb{li}"))?.as_f32(),
+                ck.require(&format!("g{li}"))?.as_f32(),
+            )),
+        }
+    };
+    let (cb0, g0) = load_layer(0)?;
+    let (cb1, g1) = load_layer(1)?;
+    Ok(VqModel {
+        codebook0: cb0,
+        idx0: ck.require("idx0")?.as_i32(),
+        gain0: g0,
+        bias_sum0: ck.require("bias_sum0")?.as_f32(),
+        codebook1: cb1,
+        idx1: ck.require("idx1")?.as_i32(),
+        gain1: g1,
+        bias_sum1: ck.require("bias_sum1")?.as_f32(),
+        k,
+        g: spec.grid_size,
+        d_in: spec.d_in,
+        d_hidden: spec.d_hidden,
+        d_out: spec.d_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    fn fake_dense_checkpoint(spec: &KanSpec, seed: u64) -> Checkpoint {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("dense_kan"))]));
+        ck.insert("grids0", Tensor::from_f32(
+            &[spec.d_in, spec.d_hidden, spec.grid_size],
+            &rng.normal_vec(spec.d_in * spec.d_hidden * spec.grid_size, 0.0, 0.3)));
+        ck.insert("grids1", Tensor::from_f32(
+            &[spec.d_hidden, spec.d_out, spec.grid_size],
+            &rng.normal_vec(spec.d_hidden * spec.d_out * spec.grid_size, 0.0, 0.3)));
+        ck
+    }
+
+    #[test]
+    fn compress_roundtrip_fp32() {
+        let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 6 };
+        let ck = fake_dense_checkpoint(&spec, 1);
+        let c = compress(&ck, &spec, 32, Precision::Fp32, 42).unwrap();
+        assert_eq!(c.layers.len(), 2);
+        assert!(c.r2.iter().all(|&r| r > 0.0 && r <= 1.0), "{:?}", c.r2);
+        // checkpoint roundtrip preserves the forward function
+        let model_a = c.to_eval_model();
+        let saved = c.to_checkpoint();
+        let model_b = load_compressed(&saved).unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(3 * spec.d_in, 0.0, 1.0);
+        let ya = model_a.forward(&x, 3);
+        let yb = model_b.forward(&x, 3);
+        for (a, b) in ya.iter().zip(&yb) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn compress_roundtrip_int8() {
+        let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 6 };
+        let ck = fake_dense_checkpoint(&spec, 2);
+        let c = compress(&ck, &spec, 16, Precision::Int8, 42).unwrap();
+        assert!(c.int8.is_some());
+        let saved = c.to_checkpoint();
+        assert!(saved.get("cbq0").is_some());
+        assert!(saved.get("cb0").is_none());
+        let model = load_compressed(&saved).unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(2 * spec.d_in, 0.0, 1.0);
+        let y = model.forward(&x, 2);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn int8_checkpoint_smaller_than_fp32_and_dense() {
+        let spec = KanSpec { d_in: 16, d_hidden: 24, d_out: 8, grid_size: 10 };
+        let ck = fake_dense_checkpoint(&spec, 3);
+        let f = compress(&ck, &spec, 64, Precision::Fp32, 42).unwrap().to_checkpoint();
+        let i = compress(&ck, &spec, 64, Precision::Int8, 42).unwrap().to_checkpoint();
+        assert!(i.total_bytes() < f.total_bytes());
+        assert!(f.total_bytes() < ck.total_bytes());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let spec = KanSpec { d_in: 4, d_hidden: 4, d_out: 2, grid_size: 5 };
+        let ck = Checkpoint::new(Json::Null);
+        assert!(compress(&ck, &spec, 8, Precision::Fp32, 1).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Int8 quantizers (paper §4.2 / §4.3):
+//!
+//! * **linear Int8** for codebook coefficients — symmetric, one scale per
+//!   layer codebook: q = round(c / s), s = max|c| / 127;
+//! * **logarithmic Int8** for gains — high dynamic range: magnitudes are
+//!   log-spaced between the smallest and largest non-zero |g|, sign kept in
+//!   the sign of q, q = 0 encodes g = 0.
+//!
+//! The log-Int8 scheme is deliberately faithful to the paper *including its
+//! weakness*: out-of-range magnitudes (distribution shift) clamp to the
+//! coarse extreme bins — the Table 2 OOD-collapse mechanism.
+
+/// Symmetric linear Int8 quantization of a float slice.
+#[derive(Debug, Clone)]
+pub struct LinearInt8 {
+    pub q: Vec<i8>,
+    pub scale: f32,
+}
+
+pub fn quantize_linear_int8(x: &[f32]) -> LinearInt8 {
+    let max_abs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    let q = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    LinearInt8 { q, scale }
+}
+
+pub fn dequantize_linear_int8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Logarithmic Int8 gain quantization parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LogInt8Params {
+    pub log_lo: f32,
+    pub log_step: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct LogInt8 {
+    pub q: Vec<i8>,
+    pub params: LogInt8Params,
+}
+
+/// Quantize gains with the signed-log scheme: |q| in 1..=127 maps to
+/// exp(log_lo + (|q|-1)*log_step); q = 0 maps to exactly 0.
+pub fn quantize_log_int8(x: &[f32]) -> LogInt8 {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        let a = v.abs();
+        if a > 0.0 {
+            lo = lo.min(a);
+            hi = hi.max(a);
+        }
+    }
+    let (log_lo, log_step) = if !lo.is_finite() {
+        (0.0, 1.0) // all zeros: parameters unused
+    } else if lo == hi {
+        (lo.ln(), 1.0)
+    } else {
+        let ll = lo.ln();
+        (ll, (hi.ln() - ll) / 126.0)
+    };
+    let q = x
+        .iter()
+        .map(|&v| {
+            if v == 0.0 {
+                0i8
+            } else {
+                let steps = if log_step > 0.0 {
+                    ((v.abs().ln() - log_lo) / log_step).round()
+                } else {
+                    0.0
+                };
+                let mag = steps.clamp(0.0, 126.0) as i32 + 1; // 1..=127
+                (if v < 0.0 { -mag } else { mag }) as i8
+            }
+        })
+        .collect();
+    LogInt8 { q, params: LogInt8Params { log_lo, log_step } }
+}
+
+pub fn dequantize_log_int8_one(q: i8, p: LogInt8Params) -> f32 {
+    crate::kan::eval::dequant_gain_log_int8(q, p.log_lo, p.log_step)
+}
+
+pub fn dequantize_log_int8(q: &[i8], p: LogInt8Params) -> Vec<f32> {
+    q.iter().map(|&v| dequantize_log_int8_one(v, p)).collect()
+}
+
+/// Relative round-trip error bound of the log scheme *within* the calibrated
+/// range: half a log step.
+pub fn log_int8_rel_error_bound(p: LogInt8Params) -> f32 {
+    (p.log_step / 2.0).exp() - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn linear_roundtrip_error_bounded() {
+        let mut rng = Pcg32::seeded(1);
+        let x = rng.normal_vec(1000, 0.0, 2.0);
+        let q = quantize_linear_int8(&x);
+        let y = dequantize_linear_int8(&q.q, q.scale);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= q.scale * 0.5 + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear_all_zero() {
+        let q = quantize_linear_int8(&[0.0; 8]);
+        assert!(q.q.iter().all(|&v| v == 0));
+        assert!(dequantize_linear_int8(&q.q, q.scale).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn log_roundtrip_relative_error_in_range() {
+        let mut rng = Pcg32::seeded(2);
+        // wide dynamic range: 1e-3 .. 1e3
+        let x: Vec<f32> = (0..1000)
+            .map(|_| {
+                let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                sign * 10f32.powf(rng.uniform_in(-3.0, 3.0))
+            })
+            .collect();
+        let q = quantize_log_int8(&x);
+        let y = dequantize_log_int8(&q.q, q.params);
+        let bound = log_int8_rel_error_bound(q.params) + 1e-4;
+        for (a, b) in x.iter().zip(&y) {
+            let rel = ((a - b) / a).abs();
+            assert!(rel <= bound, "{a} vs {b}: rel {rel} > {bound}");
+            assert_eq!(a.signum(), b.signum());
+        }
+    }
+
+    #[test]
+    fn log_zero_maps_to_zero() {
+        let q = quantize_log_int8(&[0.0, 1.0, -1.0, 0.0]);
+        assert_eq!(q.q[0], 0);
+        assert_eq!(q.q[3], 0);
+        let y = dequantize_log_int8(&q.q, q.params);
+        assert_eq!(y[0], 0.0);
+        assert_eq!(y[3], 0.0);
+    }
+
+    #[test]
+    fn log_outliers_clamp_to_extreme_bins() {
+        // calibrate on a narrow range, then decode values quantized from a
+        // *wider* range: this is the Table 2 OOD failure mode in miniature
+        let narrow: Vec<f32> = (1..=100).map(|i| i as f32 * 0.01).collect();
+        let q = quantize_log_int8(&narrow);
+        // an outlier 100x beyond the calibration range would need q > 127
+        let steps = ((100.0f32).ln() - q.params.log_lo) / q.params.log_step;
+        assert!(steps > 127.0, "outlier must exceed the code range: {steps}");
+    }
+
+    #[test]
+    fn log_single_magnitude() {
+        let q = quantize_log_int8(&[2.0, -2.0, 2.0]);
+        let y = dequantize_log_int8(&q.q, q.params);
+        assert!((y[0] - 2.0).abs() < 1e-5);
+        assert!((y[1] + 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn all_zero_gains() {
+        let q = quantize_log_int8(&[0.0; 5]);
+        let y = dequantize_log_int8(&q.q, q.params);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,181 @@
+//! Universal (shared) codebooks — paper §6.2 "Universal Basis Sets" /
+//! "MESH-KAN": many task heads share ONE codebook so an expert reduces to
+//! its integer indices + gain/bias scalars, and task switching never
+//! touches the cache-resident table.
+//!
+//! Implementation: pool the normalized shapes of every head, fit one
+//! codebook, then assign each head's edges against it.  The marginal cost
+//! of head N+1 is indices + scalars only (`marginal_bytes`).
+
+use anyhow::Result;
+
+use super::decompose::{normalize_grids, r_squared, VqLayer};
+use super::kmeans::{KMeans, KMeansConfig};
+use crate::kan::checkpoint::Checkpoint;
+use crate::kan::spec::KanSpec;
+
+/// One layer-slot of a universal codebook (layer 0 and layer 1 of every
+/// head share slot-wise, matching the per-layer codebooks of §4.2).
+pub struct UniversalCodebook {
+    pub codebook: Vec<f32>, // [k, g]
+    pub k: usize,
+    pub g: usize,
+}
+
+/// A head compressed against a shared codebook: indices + scalars only.
+pub struct SharedHead {
+    pub layers: Vec<VqLayer>, // codebook fields reference-equal copies
+    pub r2: Vec<f64>,
+}
+
+impl SharedHead {
+    /// Bytes this head adds on top of the shared codebook (Eq. 3 packed).
+    pub fn marginal_bytes(&self, k: usize) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                let e = l.n_in * l.n_out;
+                super::bitpack::packed_len(e, k) + 2 * e // log-int8 gain + int8 bias
+            })
+            .sum()
+    }
+}
+
+/// Fit one codebook per layer-slot over the pooled shapes of all heads.
+pub fn fit_universal(heads: &[&Checkpoint], spec: &KanSpec, k: usize, seed: u64)
+                     -> Result<Vec<UniversalCodebook>> {
+    let g = spec.grid_size;
+    let dims = spec.layer_dims();
+    let mut out = Vec::new();
+    for (li, (n_in, n_out)) in dims.iter().enumerate() {
+        let e = n_in * n_out;
+        let mut pooled = Vec::with_capacity(heads.len() * e * g);
+        for ck in heads {
+            let grids = ck.require(&format!("grids{li}"))?.as_f32();
+            anyhow::ensure!(grids.len() == e * g, "head grids{li} shape mismatch");
+            let (shapes, _, _) = normalize_grids(&grids, e, g);
+            pooled.extend(shapes);
+        }
+        let n = heads.len() * e;
+        let cfg = KMeansConfig { k, batch_size: 2048.min(n), iterations: 80, seed };
+        let km = KMeans::fit(&pooled, n, g, &cfg);
+        out.push(UniversalCodebook { codebook: km.centroids, k: km.k, g });
+    }
+    Ok(out)
+}
+
+/// Compress one head against the shared codebooks.
+pub fn assign_head(ck: &Checkpoint, spec: &KanSpec, universal: &[UniversalCodebook])
+                   -> Result<SharedHead> {
+    let g = spec.grid_size;
+    let dims = spec.layer_dims();
+    let mut layers = Vec::new();
+    let mut r2 = Vec::new();
+    for (li, (n_in, n_out)) in dims.iter().enumerate() {
+        let e = n_in * n_out;
+        let grids = ck.require(&format!("grids{li}"))?.as_f32();
+        let (shapes, gains, biases) = normalize_grids(&grids, e, g);
+        let uc = &universal[li];
+        let km = KMeans::from_centroids(uc.codebook.clone(), uc.k, g);
+        let idx = km.assign_all(&shapes, e);
+        let layer = VqLayer {
+            codebook: uc.codebook.clone(),
+            k: uc.k,
+            g,
+            idx,
+            gain: gains,
+            bias: biases,
+            n_in: *n_in,
+            n_out: *n_out,
+        };
+        r2.push(r_squared(&grids, &layer.reconstruct()));
+        layers.push(layer);
+    }
+    Ok(SharedHead { layers, r2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::tensor::Tensor;
+    use crate::util::json::Json;
+
+    fn fake_head(spec: &KanSpec, seed: u64, protos: &[Vec<f32>]) -> Checkpoint {
+        // heads whose edges reuse a common shape pool (the universal-basis
+        // hypothesis the paper cites)
+        let mut rng = Pcg32::seeded(seed);
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("dense_kan"))]));
+        for (li, (n_in, n_out)) in spec.layer_dims().iter().enumerate() {
+            let mut grids = Vec::new();
+            for _ in 0..n_in * n_out {
+                let p = &protos[rng.below(protos.len())];
+                let gain = rng.uniform_in(0.3, 2.0);
+                let bias = rng.uniform_in(-0.5, 0.5);
+                grids.extend(p.iter().map(|&v| gain * v + bias));
+            }
+            ck.insert(&format!("grids{li}"),
+                      Tensor::from_f32(&[*n_in, *n_out, spec.grid_size], &grids));
+        }
+        ck
+    }
+
+    fn protos(n: usize, g: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let v = rng.normal_vec(g, 0.0, 1.0);
+                let m = v.iter().sum::<f32>() / g as f32;
+                let s = (v.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / g as f32)
+                    .sqrt()
+                    .max(1e-6);
+                v.iter().map(|x| (x - m) / s).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn universal_codebook_serves_multiple_heads() {
+        let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 8 };
+        let shared_protos = protos(6, 8, 9);
+        let heads: Vec<Checkpoint> = (0..4)
+            .map(|i| fake_head(&spec, 100 + i, &shared_protos))
+            .collect();
+        let refs: Vec<&Checkpoint> = heads.iter().collect();
+        let universal = fit_universal(&refs, &spec, 16, 7).unwrap();
+        for ck in &heads {
+            let sh = assign_head(ck, &spec, &universal).unwrap();
+            assert!(sh.r2.iter().all(|&r| r > 0.95),
+                    "shared codebook must capture the common basis: {:?}", sh.r2);
+        }
+    }
+
+    #[test]
+    fn marginal_cost_is_small() {
+        let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 8 };
+        let shared_protos = protos(4, 8, 11);
+        let head = fake_head(&spec, 5, &shared_protos);
+        let universal = fit_universal(&[&head], &spec, 16, 7).unwrap();
+        let sh = assign_head(&head, &spec, &universal).unwrap();
+        let marginal = sh.marginal_bytes(16);
+        let dense = spec.num_params() * 4;
+        assert!(marginal * 8 < dense, "marginal {marginal} vs dense {dense}");
+    }
+
+    #[test]
+    fn disjoint_heads_fit_worse_than_matched() {
+        // heads from DIFFERENT shape pools: the universal codebook fitted
+        // on pool A reconstructs a pool-B head worse than its own
+        let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 8 };
+        let pool_a = protos(3, 8, 21);
+        let pool_b = protos(3, 8, 22);
+        let head_a = fake_head(&spec, 1, &pool_a);
+        let head_b = fake_head(&spec, 2, &pool_b);
+        let uni_a = fit_universal(&[&head_a], &spec, 3, 7).unwrap();
+        let own = assign_head(&head_a, &spec, &uni_a).unwrap();
+        let cross = assign_head(&head_b, &spec, &uni_a).unwrap();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&own.r2) > mean(&cross.r2) + 0.02,
+                "own {:?} vs cross {:?}", own.r2, cross.r2);
+    }
+}

@@ -1,0 +1,296 @@
+//! Integration: the serving coordinator end-to-end over real artifacts.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::eval::MlpModel;
+use share_kan::tensor::Tensor;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn mlp_head(seed: u64) -> (HeadWeights, MlpModel) {
+    let (d_in, d_h, d_out) = (64, 128, 20);
+    let mut rng = Pcg32::seeded(seed);
+    let w1 = rng.normal_vec(d_in * d_h, 0.0, 0.2);
+    let b1 = rng.normal_vec(d_h, 0.0, 0.1);
+    let w2 = rng.normal_vec(d_h * d_out, 0.0, 0.2);
+    let b2 = rng.normal_vec(d_out, 0.0, 0.1);
+    let head = HeadWeights::Mlp {
+        w1: Tensor::from_f32(&[d_in, d_h], &w1),
+        b1: Tensor::from_f32(&[d_h], &b1),
+        w2: Tensor::from_f32(&[d_h, d_out], &w2),
+        b2: Tensor::from_f32(&[d_out], &b2),
+    };
+    let model = MlpModel { w1, b1, w2, b2, d_in, d_hidden: d_h, d_out };
+    (head, model)
+}
+
+#[test]
+fn serve_single_request_correctly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        queue_capacity: 64,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    let (head, model) = mlp_head(1);
+    c.add_head("default", head).unwrap();
+
+    let mut rng = Pcg32::seeded(2);
+    let x = rng.normal_vec(64, 0.0, 1.0);
+    let resp = c.infer("default", x.clone()).unwrap();
+    assert_eq!(resp.scores.len(), 20);
+    let want = model.forward(&x, 1);
+    for (a, b) in resp.scores.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn batches_many_concurrent_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
+        queue_capacity: 512,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    let (head, model) = mlp_head(3);
+    c.add_head("h", head).unwrap();
+
+    // submit 100 requests from 4 threads, verify every response
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let c = c.clone();
+        let model_inputs: Vec<Vec<f32>> = {
+            let mut rng = Pcg32::seeded(100 + t);
+            (0..25).map(|_| rng.normal_vec(64, 0.0, 1.0)).collect()
+        };
+        joins.push(std::thread::spawn(move || {
+            let mut results = Vec::new();
+            for x in model_inputs {
+                let resp = c.infer("h", x.clone()).unwrap();
+                results.push((x, resp.scores));
+            }
+            results
+        }));
+    }
+    let mut checked = 0;
+    for j in joins {
+        for (x, scores) in j.join().unwrap() {
+            let want = model.forward(&x, 1);
+            for (a, b) in scores.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4);
+            }
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 100);
+    // batching actually happened (fewer batches than requests)
+    let m = c.metrics();
+    let batches = m.counters.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches < 100, "batches = {batches}");
+    assert!(m.counters.mean_batch_size() > 1.0);
+    handle.shutdown();
+}
+
+#[test]
+fn multi_head_routing_and_hot_swap() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        queue_capacity: 64,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    let (head_a, model_a) = mlp_head(10);
+    let (head_b, model_b) = mlp_head(11);
+    c.add_head("task_a", head_a).unwrap();
+    c.add_head("task_b", head_b).unwrap();
+
+    let mut rng = Pcg32::seeded(12);
+    let x = rng.normal_vec(64, 0.0, 1.0);
+    let ra = c.infer("task_a", x.clone()).unwrap();
+    let rb = c.infer("task_b", x.clone()).unwrap();
+    let wa = model_a.forward(&x, 1);
+    let wb = model_b.forward(&x, 1);
+    assert!((ra.scores[0] - wa[0]).abs() < 1e-4);
+    assert!((rb.scores[0] - wb[0]).abs() < 1e-4);
+    assert!((ra.scores[0] - rb.scores[0]).abs() > 1e-6, "heads must differ");
+
+    // hot-swap: remove task_b, requests to it now fail fast
+    assert!(c.remove_head("task_b").unwrap());
+    assert!(c.infer("task_b", x.clone()).is_err());
+    // task_a unaffected
+    assert!(c.infer("task_a", x).is_ok());
+    handle.shutdown();
+}
+
+#[test]
+fn unknown_head_and_bad_dims_fail_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy::default(),
+        queue_capacity: 8,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    assert!(c.infer("nope", vec![0.0; 64]).is_err());
+    let (head, _) = mlp_head(4);
+    c.add_head("h", head).unwrap();
+    assert!(c.infer("h", vec![0.0; 3]).is_err()); // wrong feature dim
+    handle.shutdown();
+}
+
+#[test]
+fn responses_exactly_once_under_shutdown() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(50) },
+        queue_capacity: 512,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    let (head, _) = mlp_head(5);
+    c.add_head("h", head).unwrap();
+    // enqueue requests that will still be pending at shutdown
+    let mut rxs: Vec<mpsc::Receiver<share_kan::coordinator::InferResponse>> = Vec::new();
+    let mut rng = Pcg32::seeded(6);
+    for _ in 0..20 {
+        rxs.push(c.try_submit("h", rng.normal_vec(64, 0.0, 1.0)).unwrap());
+    }
+    handle.shutdown();
+    // every receiver resolves exactly once: either scores or an error
+    let mut resolved = 0;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(_) => resolved += 1,
+            Err(_) => panic!("request dropped without response"),
+        }
+    }
+    assert_eq!(resolved, 20);
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        queue_capacity: 64,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    let (head, model) = mlp_head(21);
+    c.add_head("default", head).unwrap();
+
+    let server = share_kan::coordinator::TcpServer::start(c, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let mut client = share_kan::coordinator::TcpClient::connect(addr).unwrap();
+    let mut rng = Pcg32::seeded(22);
+    for _ in 0..5 {
+        let x = rng.normal_vec(64, 0.0, 1.0);
+        let scores = client.infer("default", &x).unwrap();
+        let want = model.forward(&x, 1);
+        assert_eq!(scores.len(), 20);
+        for (a, b) in scores.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+    // malformed request surfaces as an error reply, connection stays usable
+    assert!(client.infer("default", &[0.0; 3]).is_err());
+    let x = rng.normal_vec(64, 0.0, 1.0);
+    assert!(client.infer("default", &x).is_ok());
+    assert!(server.connections_accepted() >= 1);
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn failure_injection_bad_head_weights() {
+    // registering heads with wrong shapes must fail at registration (not
+    // at serve time) and leave the coordinator healthy
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        policy: BatchPolicy::default(),
+        queue_capacity: 16,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    // wrong hidden width
+    let bad = HeadWeights::Mlp {
+        w1: Tensor::from_f32(&[64, 32], &vec![0.0; 64 * 32]),
+        b1: Tensor::from_f32(&[32], &vec![0.0; 32]),
+        w2: Tensor::from_f32(&[32, 20], &vec![0.0; 32 * 20]),
+        b2: Tensor::from_f32(&[20], &vec![0.0; 20]),
+    };
+    assert!(c.add_head("bad", bad).is_err());
+    // coordinator still serves good heads afterwards
+    let (good, _) = mlp_head(30);
+    c.add_head("good", good).unwrap();
+    assert!(c.infer("good", vec![0.1; 64]).is_ok());
+    handle.shutdown();
+}
+
+#[test]
+fn failure_injection_missing_artifacts_dir() {
+    let r = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: std::path::PathBuf::from("/nonexistent/artifacts"),
+        policy: BatchPolicy::default(),
+        queue_capacity: 4,
+    });
+    assert!(r.is_err(), "startup must fail cleanly without artifacts");
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir,
+        // long max_wait so requests pile up in the admission queue
+        policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_secs(5) },
+        queue_capacity: 4,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    let (head, _) = mlp_head(31);
+    c.add_head("h", head).unwrap();
+    let mut rng = Pcg32::seeded(32);
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let mut rxs = Vec::new();
+    for _ in 0..64 {
+        match c.try_submit("h", rng.normal_vec(64, 0.0, 1.0)) {
+            Ok(rx) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "bounded queue must reject under burst");
+    assert!(accepted >= 4);
+    handle.shutdown();
+    for rx in rxs {
+        // accepted requests still resolve (served or failed at shutdown)
+        assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
+    }
+}

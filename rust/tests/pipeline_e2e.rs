@@ -1,0 +1,88 @@
+//! End-to-end pipeline integration: train (HLO train-step driven from Rust)
+//! -> compress (VQ) -> evaluate (mAP) -> serve.  A miniature of
+//! examples/end_to_end.rs kept small enough for `cargo test`.
+
+use share_kan::data::{standard_splits, Splits};
+use share_kan::eval::mean_average_precision;
+use share_kan::kan::eval::DenseModel;
+use share_kan::runtime::Engine;
+use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::vq::{compress, Precision};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load(&dir).unwrap())
+}
+
+fn splits(engine: &Engine) -> Splits {
+    let spec = engine.manifest.kan_spec;
+    standard_splits(42, spec.d_in, spec.d_out, 1024, 256, 256, 256)
+}
+
+fn eval_map(model: &DenseModel, x: &[f32], y: &[f32], n: usize, c: usize) -> f64 {
+    let scores = model.forward(x, n);
+    mean_average_precision(&scores, y, n, c)
+}
+
+#[test]
+fn train_compress_eval_pipeline() {
+    let Some(eng) = engine() else { return };
+    let data = splits(&eng);
+    let spec = eng.manifest.kan_spec;
+
+    // 1) train the dense head for a short run
+    let mut trainer = KanTrainer::new(&eng, spec.grid_size, 7).unwrap();
+    let log = trainer
+        .fit(&data.train, &TrainConfig { steps: 150, base_lr: 2e-2, seed: 1, log_every: 25 })
+        .unwrap();
+    // loss must come down materially from the start
+    let first = log.losses.first().unwrap().1;
+    assert!(log.final_loss < 0.8 * first, "loss {first} -> {}", log.final_loss);
+
+    // 2) the trained model beats chance on held-out data
+    let ck = trainer.to_checkpoint().unwrap();
+    let dense = DenseModel {
+        grids0: ck.get("grids0").unwrap().as_f32(),
+        grids1: ck.get("grids1").unwrap().as_f32(),
+        d_in: spec.d_in,
+        d_hidden: spec.d_hidden,
+        d_out: spec.d_out,
+        g: spec.grid_size,
+    };
+    let base_rate = 100.0 * data.test.y.iter().sum::<f32>() as f64 / data.test.y.len() as f64;
+    let map_dense = eval_map(&dense, &data.test.x, &data.test.y, data.test.n, spec.d_out);
+    assert!(map_dense > base_rate + 10.0,
+            "dense mAP {map_dense:.1} vs base {base_rate:.1}");
+
+    // 3) VQ compression preserves accuracy within a few points
+    let k = eng.manifest.vq_spec.codebook_size;
+    let comp = compress(&ck, &spec, k, Precision::Fp32, 42).unwrap();
+    // K=512 over ~10k briefly-trained edges lands near the paper's K=1024
+    // row (R² = 0.82); functional redundancy grows with training length
+    assert!(comp.r2.iter().all(|&r| r > 0.6), "r2 {:?}", comp.r2);
+    let vq_model = comp.to_eval_model();
+    let scores = vq_model.forward(&data.test.x, data.test.n);
+    let map_vq = mean_average_precision(&scores, &data.test.y, data.test.n, spec.d_out);
+    assert!(map_vq > map_dense - 6.0, "vq mAP {map_vq:.1} vs dense {map_dense:.1}");
+
+    // 4) Int8 stays close in-domain
+    let comp8 = compress(&ck, &spec, k, Precision::Int8, 42).unwrap();
+    let vq8 = comp8.to_eval_model();
+    let scores8 = vq8.forward(&data.test.x, data.test.n);
+    let map_vq8 = mean_average_precision(&scores8, &data.test.y, data.test.n, spec.d_out);
+    assert!(map_vq8 > map_vq - 8.0, "int8 mAP {map_vq8:.1} vs fp32 vq {map_vq:.1}");
+
+    // 5) compressed checkpoints are materially smaller than the dense one
+    let dense_bytes = ck.total_bytes();
+    let vq_bytes = comp.to_checkpoint().total_bytes();
+    let vq8_bytes = comp8.to_checkpoint().total_bytes();
+    assert!(vq8_bytes < vq_bytes);
+    assert!(
+        (dense_bytes as f64 / vq8_bytes as f64) > 2.0,
+        "dense {dense_bytes} vs int8 {vq8_bytes}"
+    );
+}

@@ -1,0 +1,250 @@
+//! Property tests over coordinator/compression/memplan invariants.
+//!
+//! Built on the in-tree seeded property harness (util::prop) since proptest
+//! is not vendored in the image — every failure reports a reproducing seed.
+
+use std::time::{Duration, Instant};
+
+use share_kan::coordinator::batcher::{BatchPolicy, PendingQueue};
+use share_kan::coordinator::request::InferRequest;
+use share_kan::data::rng::Pcg32;
+use share_kan::memplan::{plan_vq_head, Planner};
+use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::prop_assert;
+use share_kan::util::prop::check;
+use share_kan::vq::quant::{
+    dequantize_linear_int8, dequantize_log_int8, log_int8_rel_error_bound,
+    quantize_linear_int8, quantize_log_int8,
+};
+use share_kan::vq::storage::Precision;
+use share_kan::vq::{compress_layer, normalize_grids, r_squared};
+
+fn req(id: u64, t: Instant) -> InferRequest {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::mem::forget(rx); // keep the channel alive for the test's lifetime
+    InferRequest { id, head: "h".into(), features: vec![0.0], enqueued: t, resp: tx }
+}
+
+#[test]
+fn prop_batcher_conservation_and_bounds() {
+    // Invariants: every pushed request appears in exactly one batch (or
+    // stays queued); batch size <= min(max_batch, bucket); bucket is the
+    // smallest bucket >= batch len; FIFO order within a head.
+    check("batcher conservation", 0xBA7C, 200, |rng| {
+        let buckets = [1usize, 8, 32, 128];
+        let max_batch = 1 + rng.below(160);
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(rng.below(5) as u64),
+        };
+        let t0 = Instant::now();
+        let mut q = PendingQueue::default();
+        let n = rng.below(300);
+        for id in 0..n as u64 {
+            q.push(req(id, t0));
+        }
+        let mut seen: Vec<u64> = Vec::new();
+        // advance time far past any deadline so every request drains
+        let late = t0 + Duration::from_secs(10);
+        while let Some(batch) = q.try_close(&policy, &buckets, late) {
+            prop_assert!(batch.requests.len() <= policy.max_batch,
+                         "batch {} > max {}", batch.requests.len(), policy.max_batch);
+            prop_assert!(batch.requests.len() <= batch.bucket,
+                         "batch {} > bucket {}", batch.requests.len(), batch.bucket);
+            let fits = buckets.iter().copied().find(|&b| b >= batch.requests.len().min(128));
+            prop_assert!(Some(batch.bucket) == fits || batch.bucket == 128,
+                         "bucket {} not minimal", batch.bucket);
+            for r in &batch.requests {
+                seen.push(r.id);
+            }
+        }
+        prop_assert!(q.is_empty(), "queue must fully drain after deadline");
+        let want: Vec<u64> = (0..n as u64).collect();
+        prop_assert!(seen == want, "requests lost/duplicated/reordered");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memplan_no_overlap_any_shape() {
+    check("memplan validity", 0x9127, 150, |rng| {
+        let spec = KanSpec {
+            d_in: 1 + rng.below(200),
+            d_hidden: 1 + rng.below(300),
+            d_out: 1 + rng.below(50),
+            grid_size: 2 + rng.below(60),
+        };
+        let vq = VqSpec { codebook_size: 1 + rng.below(70000) };
+        let precision = if rng.uniform() < 0.5 { Precision::Int8 } else { Precision::Fp32 };
+        let plan = plan_vq_head(&spec, &vq, precision, 1 + rng.below(256));
+        plan.validate().map_err(|e| format!("{spec:?} {vq:?}: {e}"))?;
+        // total covers the last buffer
+        let end = plan.buffers.iter().map(|b| b.offset + b.size).max().unwrap();
+        prop_assert!(plan.total_bytes >= end);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_arbitrary_sequences() {
+    check("planner bump sequences", 0x9128, 200, |rng| {
+        let mut p = Planner::new();
+        let n = 1 + rng.below(50);
+        let mut sizes = Vec::new();
+        for i in 0..n {
+            let size = rng.below(10_000);
+            p.add(&format!("b{i}"), size);
+            sizes.push(size);
+        }
+        let plan = p.finish();
+        plan.validate().map_err(|e| e.to_string())?;
+        prop_assert!(plan.buffers.len() == n);
+        for (b, &s) in plan.buffers.iter().zip(&sizes) {
+            prop_assert!(b.size == s);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linear_int8_roundtrip_bound() {
+    check("linear int8 bound", 0x11A, 150, |rng| {
+        let n = 1 + rng.below(500);
+        let scale = 10f32.powf(rng.uniform_in(-4.0, 4.0));
+        let x: Vec<f32> = (0..n).map(|_| scale * rng.normal()).collect();
+        let q = quantize_linear_int8(&x);
+        let y = dequantize_linear_int8(&q.q, q.scale);
+        for (a, b) in x.iter().zip(&y) {
+            prop_assert!((a - b).abs() <= q.scale * 0.5 + 1e-7 * scale,
+                         "{a} vs {b} (scale {})", q.scale);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_log_int8_in_range_bound_and_sign() {
+    check("log int8 bound", 0x11B, 150, |rng| {
+        let n = 2 + rng.below(400);
+        let x: Vec<f32> = (0..n)
+            .map(|_| {
+                let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+                sign * 10f32.powf(rng.uniform_in(-4.0, 2.0))
+            })
+            .collect();
+        let q = quantize_log_int8(&x);
+        let y = dequantize_log_int8(&q.q, q.params);
+        let bound = log_int8_rel_error_bound(q.params) + 1e-4;
+        for (a, b) in x.iter().zip(&y) {
+            prop_assert!(a.signum() == b.signum(), "sign flipped: {a} -> {b}");
+            let rel = ((a - b) / a).abs();
+            prop_assert!(rel <= bound, "rel {rel} > {bound} ({a} -> {b})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decomposition_reconstruction_identity() {
+    // normalize -> reconstruct with per-edge codebook is exact; R² == 1
+    check("gain-shape-bias identity", 0x6A1, 80, |rng| {
+        let n_edges = 1 + rng.below(80);
+        let g = 2 + rng.below(20);
+        let grids: Vec<f32> = (0..n_edges * g)
+            .map(|_| rng.normal() * 10f32.powf(rng.uniform_in(-2.0, 2.0)))
+            .collect();
+        let (shapes, gains, biases) = normalize_grids(&grids, n_edges, g);
+        for e in 0..n_edges {
+            for i in 0..g {
+                let rec = gains[e] * shapes[e * g + i] + biases[e];
+                let orig = grids[e * g + i];
+                let tol = 1e-3 * (1.0 + orig.abs());
+                prop_assert!((rec - orig).abs() <= tol, "edge {e}: {rec} vs {orig}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r_squared_le_one_and_kmeans_valid() {
+    check("compress_layer sanity", 0x6A2, 25, |rng| {
+        let n_in = 1 + rng.below(12);
+        let n_out = 1 + rng.below(12);
+        let g = 2 + rng.below(10);
+        let k = 1 + rng.below(40);
+        let grids: Vec<f32> = (0..n_in * n_out * g).map(|_| rng.normal()).collect();
+        let layer = compress_layer(&grids, n_in, n_out, g, k, rng.next_u32() as u64);
+        let r2 = r_squared(&grids, &layer.reconstruct());
+        prop_assert!(r2 <= 1.0 + 1e-9, "r2 {r2}");
+        prop_assert!(layer.idx.iter().all(|&i| (i as usize) < layer.k),
+                     "index out of range");
+        prop_assert!(layer.codebook.len() == layer.k * g);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_hits_plus_misses_equals_accesses() {
+    use share_kan::memsim::{Cache, CacheConfig};
+    check("cache accounting", 0xCAC4E, 100, |rng| {
+        let cfg = CacheConfig {
+            size_bytes: 1 << (10 + rng.below(8)),
+            line_bytes: 1 << (5 + rng.below(3)),
+            ways: 1 + rng.below(16),
+        };
+        let mut c = Cache::new(cfg);
+        let mut expected_accesses = 0u64;
+        for _ in 0..2000 {
+            let addr = (rng.next_u32() as u64) % (1 << 22);
+            let bytes = 1 + rng.below(256) as u32;
+            let first = addr >> cfg.line_bytes.trailing_zeros();
+            let last = (addr + bytes as u64 - 1) >> cfg.line_bytes.trailing_zeros();
+            expected_accesses += last - first + 1;
+            c.access(addr, bytes);
+        }
+        prop_assert!(c.stats.accesses() == expected_accesses,
+                     "{} != {}", c.stats.accesses(), expected_accesses);
+        prop_assert!(c.stats.fill_bytes == c.stats.misses * cfg.line_bytes as u64);
+        // effective capacity = sets * ways * line (== size when divisible;
+        // infeasible configs round the set count up to 1)
+        let capacity = cfg.num_sets() * cfg.ways * cfg.line_bytes;
+        prop_assert!(c.resident_bytes() <= capacity);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_map_bounded_0_100() {
+    use share_kan::eval::mean_average_precision;
+    check("mAP bounds", 0xAAAA, 100, |rng| {
+        let n = 2 + rng.below(100);
+        let c = 1 + rng.below(8);
+        let scores: Vec<f32> = (0..n * c).map(|_| rng.normal()).collect();
+        let labels: Vec<f32> = (0..n * c)
+            .map(|_| if rng.uniform() < 0.4 { 1.0 } else { 0.0 })
+            .collect();
+        let m = mean_average_precision(&scores, &labels, n, c);
+        prop_assert!((0.0..=100.0).contains(&m), "mAP {m}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spectral_frobenius_identity() {
+    use share_kan::spectral::singular_values;
+    check("spectral frobenius", 0x57EC, 40, |rng| {
+        let n = 1 + rng.below(100);
+        let d = 1 + rng.below(16);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let sv = singular_values(&data, n, d);
+        let fro: f64 = data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let ss: f64 = sv.iter().map(|s| s * s).sum();
+        prop_assert!((fro - ss).abs() <= 1e-6 * (1.0 + fro), "{fro} vs {ss}");
+        // descending order
+        for w in sv.windows(2) {
+            prop_assert!(w[0] >= w[1] - 1e-12);
+        }
+        Ok(())
+    });
+}

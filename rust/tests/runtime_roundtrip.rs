@@ -1,0 +1,201 @@
+//! Integration: PJRT artifacts vs the pure-Rust reference evaluator.
+//!
+//! These tests require `make artifacts` to have been run; they skip
+//! (not fail) when artifacts/ is absent so `cargo test` stays runnable on a
+//! fresh checkout.
+
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::eval::{DenseModel, MlpModel, VqModel};
+use share_kan::runtime::{literal, Engine};
+use share_kan::tensor::Tensor;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn mlp_fwd_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let spec = eng.manifest.kan_spec;
+    let mut rng = Pcg32::seeded(11);
+    let (d_in, d_h, d_out) = (spec.d_in, spec.d_hidden, spec.d_out);
+    let w1 = rng.normal_vec(d_in * d_h, 0.0, 0.2);
+    let b1 = rng.normal_vec(d_h, 0.0, 0.1);
+    let w2 = rng.normal_vec(d_h * d_out, 0.0, 0.2);
+    let b2 = rng.normal_vec(d_out, 0.0, 0.1);
+    let batch = 8;
+    let x = rng.normal_vec(batch * d_in, 0.0, 1.0);
+
+    let inputs = vec![
+        literal::to_literal(&Tensor::from_f32(&[d_in, d_h], &w1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[d_h], &b1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[d_h, d_out], &w2)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[d_out], &b2)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[batch, d_in], &x)).unwrap(),
+    ];
+    let out = eng.execute("mlp_fwd_b8", &inputs).unwrap();
+    let got = literal::f32s(&out[0]).unwrap();
+
+    let reference = MlpModel { w1, b1, w2, b2, d_in, d_hidden: d_h, d_out };
+    let want = reference.forward(&x, batch);
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-4, "mlp mismatch: {d}");
+}
+
+#[test]
+fn dense_kan_fwd_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let spec = eng.manifest.kan_spec;
+    let mut rng = Pcg32::seeded(12);
+    let g = spec.grid_size;
+    let grids0 = rng.normal_vec(spec.d_in * spec.d_hidden * g, 0.0, 0.3);
+    let grids1 = rng.normal_vec(spec.d_hidden * spec.d_out * g, 0.0, 0.3);
+    let batch = 8;
+    let x = rng.normal_vec(batch * spec.d_in, 0.0, 1.0);
+
+    let inputs = vec![
+        literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden, g], &grids0)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out, g], &grids1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[batch, spec.d_in], &x)).unwrap(),
+    ];
+    let out = eng.execute("dense_kan_fwd_b8", &inputs).unwrap();
+    let got = literal::f32s(&out[0]).unwrap();
+
+    let reference = DenseModel {
+        grids0,
+        grids1,
+        d_in: spec.d_in,
+        d_hidden: spec.d_hidden,
+        d_out: spec.d_out,
+        g,
+    };
+    let want = reference.forward(&x, batch);
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-3, "dense kan mismatch: {d}");
+}
+
+#[test]
+fn vq_kan_fwd_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let spec = eng.manifest.kan_spec;
+    let k = eng.manifest.vq_spec.codebook_size;
+    let g = spec.grid_size;
+    let mut rng = Pcg32::seeded(13);
+    let cb0 = rng.normal_vec(k * g, 0.0, 1.0);
+    let cb1 = rng.normal_vec(k * g, 0.0, 1.0);
+    let idx0: Vec<i32> = (0..spec.d_in * spec.d_hidden).map(|_| rng.below(k) as i32).collect();
+    let idx1: Vec<i32> = (0..spec.d_hidden * spec.d_out).map(|_| rng.below(k) as i32).collect();
+    let g0 = rng.normal_vec(spec.d_in * spec.d_hidden, 0.0, 0.5);
+    let g1 = rng.normal_vec(spec.d_hidden * spec.d_out, 0.0, 0.5);
+    let bs0 = rng.normal_vec(spec.d_hidden, 0.0, 0.2);
+    let bs1 = rng.normal_vec(spec.d_out, 0.0, 0.2);
+    let batch = 8;
+    let x = rng.normal_vec(batch * spec.d_in, 0.0, 1.0);
+
+    let inputs = vec![
+        literal::to_literal(&Tensor::from_f32(&[k, g], &cb0)).unwrap(),
+        literal::to_literal(&Tensor::from_i32(&[spec.d_in, spec.d_hidden], &idx0)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden], &g0)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden], &bs0)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[k, g], &cb1)).unwrap(),
+        literal::to_literal(&Tensor::from_i32(&[spec.d_hidden, spec.d_out], &idx1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out], &g1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_out], &bs1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[batch, spec.d_in], &x)).unwrap(),
+    ];
+    let out = eng.execute("vq_kan_fwd_b8", &inputs).unwrap();
+    let got = literal::f32s(&out[0]).unwrap();
+
+    let reference = VqModel {
+        codebook0: cb0,
+        idx0,
+        gain0: g0,
+        bias_sum0: bs0,
+        codebook1: cb1,
+        idx1,
+        gain1: g1,
+        bias_sum1: bs1,
+        k,
+        g,
+        d_in: spec.d_in,
+        d_hidden: spec.d_hidden,
+        d_out: spec.d_out,
+    };
+    let want = reference.forward(&x, batch);
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-3, "vq kan mismatch: {d}");
+}
+
+#[test]
+fn int8_vq_fwd_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let spec = eng.manifest.kan_spec;
+    let k = eng.manifest.vq_spec.codebook_size;
+    let g = spec.grid_size;
+    let mut rng = Pcg32::seeded(14);
+    let cbq0: Vec<i8> = (0..k * g).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let cbq1: Vec<i8> = (0..k * g).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let idx0: Vec<i32> = (0..spec.d_in * spec.d_hidden).map(|_| rng.below(k) as i32).collect();
+    let idx1: Vec<i32> = (0..spec.d_hidden * spec.d_out).map(|_| rng.below(k) as i32).collect();
+    let gq0: Vec<i8> = (0..spec.d_in * spec.d_hidden).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let gq1: Vec<i8> = (0..spec.d_hidden * spec.d_out).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let bs0 = rng.normal_vec(spec.d_hidden, 0.0, 0.2);
+    let bs1 = rng.normal_vec(spec.d_out, 0.0, 0.2);
+    let scales = [0.01f32, -5.0, 0.04, 0.02, -4.0, 0.05];
+    let batch = 8;
+    let x = rng.normal_vec(batch * spec.d_in, 0.0, 1.0);
+
+    let inputs = vec![
+        literal::to_literal(&Tensor::from_i8(&[k, g], &cbq0)).unwrap(),
+        literal::to_literal(&Tensor::from_i32(&[spec.d_in, spec.d_hidden], &idx0)).unwrap(),
+        literal::to_literal(&Tensor::from_i8(&[spec.d_in, spec.d_hidden], &gq0)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden], &bs0)).unwrap(),
+        literal::to_literal(&Tensor::from_i8(&[k, g], &cbq1)).unwrap(),
+        literal::to_literal(&Tensor::from_i32(&[spec.d_hidden, spec.d_out], &idx1)).unwrap(),
+        literal::to_literal(&Tensor::from_i8(&[spec.d_hidden, spec.d_out], &gq1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[spec.d_out], &bs1)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[2, 3], &scales)).unwrap(),
+        literal::to_literal(&Tensor::from_f32(&[batch, spec.d_in], &x)).unwrap(),
+    ];
+    let out = eng.execute("vq_kan_int8_fwd_b8", &inputs).unwrap();
+    let got = literal::f32s(&out[0]).unwrap();
+
+    // reference: dequantize then fp32 VQ forward
+    use share_kan::kan::eval::{dequant_codebook_int8, dequant_gain_log_int8};
+    let reference = VqModel {
+        codebook0: dequant_codebook_int8(&cbq0, scales[0]),
+        idx0,
+        gain0: gq0.iter().map(|&q| dequant_gain_log_int8(q, scales[1], scales[2])).collect(),
+        bias_sum0: bs0,
+        codebook1: dequant_codebook_int8(&cbq1, scales[3]),
+        idx1,
+        gain1: gq1.iter().map(|&q| dequant_gain_log_int8(q, scales[4], scales[5])).collect(),
+        bias_sum1: bs1,
+        k,
+        g,
+        d_in: spec.d_in,
+        d_hidden: spec.d_hidden,
+        d_out: spec.d_out,
+    };
+    let want = reference.forward(&x, batch);
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-3, "int8 vq mismatch: {d}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(eng) = engine() else { return };
+    let _ = eng.executable("mlp_fwd_b1").unwrap();
+    let _ = eng.executable("mlp_fwd_b1").unwrap();
+    assert_eq!(eng.stats.borrow().compiles, 1);
+}
