@@ -1,85 +1,66 @@
 //! Bench: the LUTHAM forward path per variant and batch bucket, through
-//! the real PJRT executables (AOT artifacts).  This is the L1/L2 hot path
-//! as the serving coordinator sees it.
+//! the execution-backend trait.  This is the hot path exactly as the
+//! serving coordinator drives it (padded batch in, scores out), on the
+//! pure-Rust native backend — build with `--features pjrt` + real xla
+//! bindings to compare against the AOT artifacts.
 //!
 //! Run: cargo bench --bench lutham_kernel
 
+use share_kan::coordinator::HeadWeights;
 use share_kan::data::rng::Pcg32;
-use share_kan::runtime::{literal, Engine};
+use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
 use share_kan::tensor::Tensor;
 use share_kan::util::bench::Bencher;
-use xla::Literal;
 
 fn main() {
-    let dir = share_kan::runtime::default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; run `make artifacts`");
-        return;
-    }
-    let eng = Engine::load(&dir).unwrap();
-    let spec = eng.manifest.kan_spec;
-    let k = eng.manifest.vq_spec.codebook_size;
-    let g = spec.grid_size;
+    let spec = BackendSpec::default();
+    let (d_in, d_h, d_out) = (spec.kan.d_in, spec.kan.d_hidden, spec.kan.d_out);
+    let g = spec.kan.grid_size;
+    let k = spec.vq.codebook_size;
+    let buckets = spec.batch_buckets.clone();
     let mut rng = Pcg32::seeded(1);
 
     // weights per variant
-    let dense: Vec<Literal> = vec![
-        literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden, g],
-            &rng.normal_vec(spec.d_in * spec.d_hidden * g, 0.0, 0.3))).unwrap(),
-        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out, g],
-            &rng.normal_vec(spec.d_hidden * spec.d_out * g, 0.0, 0.3))).unwrap(),
-    ];
-    let vq: Vec<Literal> = {
-        let e0 = spec.d_in * spec.d_hidden;
-        let e1 = spec.d_hidden * spec.d_out;
-        vec![
-            literal::to_literal(&Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0))).unwrap(),
-            literal::to_literal(&Tensor::from_i32(&[spec.d_in, spec.d_hidden],
-                &(0..e0).map(|_| rng.below(k) as i32).collect::<Vec<_>>())).unwrap(),
-            literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden],
-                &rng.normal_vec(e0, 0.0, 0.5))).unwrap(),
-            literal::to_literal(&Tensor::from_f32(&[spec.d_hidden],
-                &rng.normal_vec(spec.d_hidden, 0.0, 0.2))).unwrap(),
-            literal::to_literal(&Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0))).unwrap(),
-            literal::to_literal(&Tensor::from_i32(&[spec.d_hidden, spec.d_out],
-                &(0..e1).map(|_| rng.below(k) as i32).collect::<Vec<_>>())).unwrap(),
-            literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out],
-                &rng.normal_vec(e1, 0.0, 0.5))).unwrap(),
-            literal::to_literal(&Tensor::from_f32(&[spec.d_out],
-                &rng.normal_vec(spec.d_out, 0.0, 0.2))).unwrap(),
-        ]
+    let mlp = HeadWeights::Mlp {
+        w1: Tensor::from_f32(&[d_in, d_h], &rng.normal_vec(d_in * d_h, 0.0, 0.2)),
+        b1: Tensor::from_f32(&[d_h], &rng.normal_vec(d_h, 0.0, 0.1)),
+        w2: Tensor::from_f32(&[d_h, d_out], &rng.normal_vec(d_h * d_out, 0.0, 0.2)),
+        b2: Tensor::from_f32(&[d_out], &rng.normal_vec(d_out, 0.0, 0.1)),
     };
-    let mlp: Vec<Literal> = vec![
-        literal::to_literal(&Tensor::from_f32(&[spec.d_in, spec.d_hidden],
-            &rng.normal_vec(spec.d_in * spec.d_hidden, 0.0, 0.2))).unwrap(),
-        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden],
-            &rng.normal_vec(spec.d_hidden, 0.0, 0.1))).unwrap(),
-        literal::to_literal(&Tensor::from_f32(&[spec.d_hidden, spec.d_out],
-            &rng.normal_vec(spec.d_hidden * spec.d_out, 0.0, 0.2))).unwrap(),
-        literal::to_literal(&Tensor::from_f32(&[spec.d_out],
-            &rng.normal_vec(spec.d_out, 0.0, 0.1))).unwrap(),
-    ];
+    let dense = HeadWeights::DenseKan {
+        grids0: Tensor::from_f32(&[d_in, d_h, g], &rng.normal_vec(d_in * d_h * g, 0.0, 0.3)),
+        grids1: Tensor::from_f32(&[d_h, d_out, g], &rng.normal_vec(d_h * d_out * g, 0.0, 0.3)),
+    };
+    let vq = {
+        let e0 = d_in * d_h;
+        let e1 = d_h * d_out;
+        HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0)),
+            idx0: Tensor::from_i32(&[d_in, d_h],
+                &(0..e0).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
+            g0: Tensor::from_f32(&[d_in, d_h], &rng.normal_vec(e0, 0.0, 0.5)),
+            bs0: Tensor::from_f32(&[d_h], &rng.normal_vec(d_h, 0.0, 0.2)),
+            cb1: Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0)),
+            idx1: Tensor::from_i32(&[d_h, d_out],
+                &(0..e1).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
+            g1: Tensor::from_f32(&[d_h, d_out], &rng.normal_vec(e1, 0.0, 0.5)),
+            bs1: Tensor::from_f32(&[d_out], &rng.normal_vec(d_out, 0.0, 0.2)),
+        }
+    };
+
+    let mut backend = BackendConfig::Native(spec).build().unwrap();
+    for (name, head) in [("mlp", &mlp), ("dense_kan", &dense), ("vq_kan_fp32", &vq)] {
+        backend.register_head(name, head).unwrap();
+    }
 
     let bencher = Bencher::default();
-    println!("LUTHAM forward path (PJRT CPU, interpret-lowered Pallas kernels)");
+    println!("LUTHAM forward path ({} backend, padded batch per bucket)", backend.name());
     println!("{:-<100}", "");
-    for &bucket in &eng.manifest.batch_buckets.clone() {
-        let x = literal::to_literal(&Tensor::from_f32(
-            &[bucket, spec.d_in],
-            &rng.normal_vec(bucket * spec.d_in, 0.0, 1.0),
-        ))
-        .unwrap();
-        for (label, weights, family) in [
-            ("mlp", &mlp, "mlp_fwd"),
-            ("dense_kan", &dense, "dense_kan_fwd"),
-            ("vq_kan_fp32", &vq, "vq_kan_fwd"),
-        ] {
-            let name = format!("{family}_b{bucket}");
-            let exe = eng.executable(&name).unwrap();
-            let mut inputs: Vec<&Literal> = weights.iter().collect();
-            inputs.push(&x);
+    for &bucket in &buckets {
+        let x = rng.normal_vec(bucket * d_in, 0.0, 1.0);
+        for label in ["mlp", "dense_kan", "vq_kan_fp32"] {
             let r = bencher.run(&format!("{label} b={bucket}"), || {
-                let out = eng.execute_on(&exe, &inputs).unwrap();
+                let out = backend.execute(label, &x, bucket).unwrap();
                 std::hint::black_box(&out);
             });
             println!(

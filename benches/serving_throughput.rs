@@ -1,5 +1,6 @@
 //! Bench: end-to-end serving throughput through the coordinator (batching +
-//! routing + PJRT execution), per head variant and batching policy.
+//! routing + backend execution), per head variant and batching policy, on
+//! the native backend.
 //!
 //! Run: cargo bench --bench serving_throughput
 
@@ -7,28 +8,16 @@ use std::time::Duration;
 
 use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
 use share_kan::data::rng::Pcg32;
-use share_kan::data::standard_splits;
-use share_kan::runtime::Engine;
-use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
 fn main() {
-    let dir = share_kan::runtime::default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; run `make artifacts`");
-        return;
-    }
-    // quick-train a head so the served weights are realistic
-    let (dense_ck, spec) = {
-        let eng = Engine::load(&dir).unwrap();
-        let spec = eng.manifest.kan_spec;
-        let data = standard_splits(42, spec.d_in, spec.d_out, 512, 64, 64, 64);
-        let mut t = KanTrainer::new(&eng, spec.grid_size, 42).unwrap();
-        t.fit(&data.train, &TrainConfig { steps: 60, base_lr: 2e-2, seed: 1, log_every: 100 })
-            .unwrap();
-        (t.to_checkpoint().unwrap(), spec)
-    };
-    let k = 512;
+    let spec = KanSpec::default();
+    // synthetic dense head so the served weights have realistic shapes
+    let dense_ck = synthetic_dense(&spec, 42);
+    let k = VqSpec::default().codebook_size;
     let heads: Vec<(&str, HeadWeights)> = vec![
         ("dense_kan", HeadWeights::from_checkpoint(&dense_ck).unwrap()),
         ("vq_fp32", HeadWeights::from_checkpoint(
@@ -37,7 +26,7 @@ fn main() {
             &compress(&dense_ck, &spec, k, Precision::Int8, 1).unwrap().to_checkpoint()).unwrap()),
     ];
 
-    println!("serving throughput: 2000 closed-loop requests, 4 client threads");
+    println!("serving throughput: 2000 closed-loop requests, 4 client threads (native backend)");
     println!("{:-<100}", "");
     for (label, head) in heads {
         for (pol_label, policy) in [
@@ -46,7 +35,7 @@ fn main() {
             ("batch<=128/2ms", BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(2) }),
         ] {
             let handle = Coordinator::start(CoordinatorConfig {
-                artifacts_dir: dir.clone(),
+                backend: BackendConfig::Native(BackendSpec::default()),
                 policy,
                 queue_capacity: 4096,
             })

@@ -1,29 +1,28 @@
 //! Compression-pipeline walkthrough: dense checkpoint -> gain-shape-bias
 //! decomposition -> k-means codebooks (K sweep) -> Int8 quantization ->
-//! R² / size / static-memory-plan report.
+//! R² / size / static-memory-plan report.  Pure Rust end to end.
 //!
-//! Run: make artifacts && cargo run --release --example compression_pipeline
+//! The dense head here is synthetic (random grids), so the mAP columns sit
+//! near chance — run `share-kan train` on a pjrt build and point the sweep
+//! at a real checkpoint for meaningful accuracy numbers; R², sizes and the
+//! memory plan are exact either way.
+//!
+//! Run: cargo run --release --example compression_pipeline
 
 use share_kan::data::standard_splits;
 use share_kan::eval::mean_average_precision;
-use share_kan::kan::spec::VqSpec;
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memplan::plan_vq_head;
-use share_kan::runtime::Engine;
-use share_kan::train::{KanTrainer, TrainConfig};
 use share_kan::vq::storage::{dense_runtime, vq_size};
 use share_kan::vq::{compress, normalize_grids, Precision};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = share_kan::runtime::default_artifacts_dir();
-    let engine = Engine::load(&artifacts)?;
-    let spec = engine.manifest.kan_spec;
+    let spec = KanSpec::default();
 
-    // a trained head to compress
-    let data = standard_splits(42, spec.d_in, spec.d_out, 2048, 256, 1024, 0);
-    let mut trainer = KanTrainer::new(&engine, spec.grid_size, 42)?;
-    trainer.fit(&data.train,
-                &TrainConfig { steps: 400, base_lr: 2e-2, seed: 1, log_every: 1000 })?;
-    let dense_ck = trainer.to_checkpoint()?;
+    // a head to compress (synthetic stand-in for a trained checkpoint)
+    let dense_ck = synthetic_dense(&spec, 42);
+    let data = standard_splits(42, spec.d_in, spec.d_out, 64, 16, 1024, 0);
 
     // step 1: decomposition statistics
     let grids0 = dense_ck.require("grids0")?.as_f32();
@@ -58,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // step 3: the static memory plan for the chosen config (LUTHAM §4.3)
-    let k = engine.manifest.vq_spec.codebook_size;
+    let k = VqSpec::default().codebook_size;
     let plan = plan_vq_head(&spec, &VqSpec { codebook_size: k }, Precision::Int8, 128);
     plan.validate().map_err(|e| anyhow::anyhow!(e))?;
     println!("\nstatic memory plan (K={k}, int8, max batch 128):");

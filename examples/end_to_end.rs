@@ -1,15 +1,14 @@
-//! END-TO-END DRIVER (DESIGN.md §6): proves all three layers compose on a
-//! real small workload.
+//! END-TO-END DRIVER (DESIGN.md §6): proves the layers compose on a real
+//! small workload, entirely through the pluggable backend stack.
 //!
-//!   train (Rust loop over the AOT train-step HLO; loss curve logged)
+//!   build head (synthetic dense grids; a pjrt build can train instead)
 //!     -> compress (gain-shape-bias VQ, fp32 + int8, in Rust)
 //!     -> evaluate (mAP on held-out + distribution-shifted splits)
-//!     -> serve (batched requests through the coordinator; latency stats)
+//!     -> serve (batched requests through the coordinator on the native
+//!        backend; latency stats)
 //!     -> memsim (paper-scale cache-residency analysis)
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
-//!
-//! Run: make artifacts && cargo run --release --example end_to_end
+//! Run: cargo run --release --example end_to_end
 
 use std::time::Duration;
 
@@ -17,42 +16,26 @@ use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWe
 use share_kan::data::rng::Pcg32;
 use share_kan::data::standard_splits;
 use share_kan::eval::mean_average_precision;
+use share_kan::kan::checkpoint::synthetic_dense;
 use share_kan::kan::eval::DenseModel;
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memsim::{analyze, CacheConfig, DeviceModel};
-use share_kan::runtime::Engine;
-use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = share_kan::runtime::default_artifacts_dir();
-    let engine = Engine::load(&artifacts)?;
-    let spec = engine.manifest.kan_spec;
-    let steps = std::env::var("E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(800);
+    let spec = KanSpec::default();
 
-    println!("=== SHARe-KAN end-to-end driver ===");
-    println!("platform {}, head {}->{}->{} G={}, train batch {}",
-             engine.platform(), spec.d_in, spec.d_hidden, spec.d_out,
-             spec.grid_size, engine.manifest.train_batch);
+    println!("=== SHARe-KAN end-to-end driver (native backend) ===");
+    println!("head {}->{}->{} G={}", spec.d_in, spec.d_hidden, spec.d_out, spec.grid_size);
 
-    // ---- 1. data + training (L3 loop over L2-lowered fwd+bwd+AdamW) ----
+    // ---- 1. data + head weights ----
     let data = standard_splits(42, spec.d_in, spec.d_out, 4096, 1024, 2048, 2048);
-    let mut trainer = KanTrainer::new(&engine, spec.grid_size, 42)?;
-    let t0 = std::time::Instant::now();
-    let log = trainer.fit(&data.train, &TrainConfig {
-        steps,
-        base_lr: 2e-2,
-        seed: 1,
-        log_every: (steps / 16).max(1),
-    })?;
-    println!("\n[1] training: {steps} steps in {:?} ({:.1} steps/s); loss curve:",
-             t0.elapsed(), steps as f64 / t0.elapsed().as_secs_f64());
-    for (s, l) in &log.losses {
-        println!("    step {s:>5}  loss {l:.4}");
-    }
+    let dense_ck = synthetic_dense(&spec, 42);
+    println!("\n[1] head: synthetic dense grids ({} B); train a real one with \
+              `share-kan train` on a pjrt build", dense_ck.total_bytes());
 
     // ---- 2. evaluation of the dense head ----
-    let dense_ck = trainer.to_checkpoint()?;
     let dense = DenseModel {
         grids0: dense_ck.require("grids0")?.as_f32(),
         grids1: dense_ck.require("grids1")?.as_f32(),
@@ -69,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n[2] dense KAN: test mAP {dense_map:.2}% (chance level {base:.1}%)");
 
     // ---- 3. SHARe-KAN compression ----
-    let k = engine.manifest.vq_spec.codebook_size;
+    let k = VqSpec::default().codebook_size;
     let fp32 = compress(&dense_ck, &spec, k, Precision::Fp32, 42)?;
     let int8 = compress(&dense_ck, &spec, k, Precision::Int8, 42)?;
     let fp32_map = map_of(&fp32.to_eval_model().forward(&data.test.x, data.test.n), &data.test);
@@ -85,10 +68,9 @@ fn main() -> anyhow::Result<()> {
     let coco_int8 = map_of(&int8.to_eval_model().forward(&data.coco.x, data.coco.n), &data.coco);
     println!("    COCO-shift: dense {coco_dense:.2}% vs int8 {coco_int8:.2}%");
 
-    // ---- 4. serving ----
-    drop(engine);
+    // ---- 4. serving on the native backend ----
     let handle = Coordinator::start(CoordinatorConfig {
-        artifacts_dir: artifacts,
+        backend: BackendConfig::Native(BackendSpec::default()),
         policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
         queue_capacity: 4096,
     })?;

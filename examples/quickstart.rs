@@ -1,40 +1,31 @@
 //! Quickstart: the smallest useful tour of the public API.
 //!
-//! 1. load the PJRT engine over the AOT artifacts
-//! 2. quick-train a dense KAN head (few steps, synthetic data)
-//! 3. VQ-compress it (SHARe-KAN, Int8)
-//! 4. serve a request through the coordinator
+//! 1. build a dense KAN head (synthetic weights — training needs the
+//!    `pjrt` feature + AOT artifacts; see `share-kan train`)
+//! 2. VQ-compress it (SHARe-KAN, Int8)
+//! 3. serve a request through the coordinator on the native backend
 //!
-//! Run: make artifacts && cargo run --release --example quickstart
+//! Run: cargo run --release --example quickstart
 
 use std::time::Duration;
 
 use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
 use share_kan::data::standard_splits;
-use share_kan::runtime::Engine;
-use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = share_kan::runtime::default_artifacts_dir();
+    // 1. a dense head at the default spec (64 -> 128 -> 20, G = 10);
+    //    synthetic grids stand in for a trained head (run `share-kan
+    //    train` on a pjrt build for a real one)
+    let spec = KanSpec::default();
+    println!("head = {}->{}->{} G={}", spec.d_in, spec.d_hidden, spec.d_out, spec.grid_size);
+    let dense_ck = synthetic_dense(&spec, 42);
 
-    // 1. engine
-    let engine = Engine::load(&artifacts)?;
-    let spec = engine.manifest.kan_spec;
-    println!("engine up on {}; head = {}->{}->{} G={}",
-             engine.platform(), spec.d_in, spec.d_hidden, spec.d_out, spec.grid_size);
-
-    // 2. short training run (the real experiments train longer — see repro)
-    let data = standard_splits(42, spec.d_in, spec.d_out, 1024, 128, 256, 0);
-    let mut trainer = KanTrainer::new(&engine, spec.grid_size, 42)?;
-    let log = trainer.fit(&data.train,
-                          &TrainConfig { steps: 200, base_lr: 2e-2, seed: 1, log_every: 50 })?;
-    println!("trained 200 steps: loss {:.4} -> {:.4}",
-             log.losses.first().unwrap().1, log.final_loss);
-    let dense_ck = trainer.to_checkpoint()?;
-
-    // 3. SHARe-KAN compression (gain-shape-bias VQ + Int8)
-    let k = engine.manifest.vq_spec.codebook_size;
+    // 2. SHARe-KAN compression (gain-shape-bias VQ + Int8)
+    let k = VqSpec::default().codebook_size;
     let compressed = compress(&dense_ck, &spec, k, Precision::Int8, 42)?;
     let vq_ck = compressed.to_checkpoint();
     println!("compressed: {} B -> {} B ({:.1}x), R² = {:?}",
@@ -42,10 +33,10 @@ fn main() -> anyhow::Result<()> {
              dense_ck.total_bytes() as f64 / vq_ck.total_bytes() as f64,
              compressed.r2);
 
-    // 4. serve it
-    drop(engine); // the coordinator owns its own engine thread
+    // 3. serve it on the pure-Rust native backend (no artifacts needed)
+    let data = standard_splits(42, spec.d_in, spec.d_out, 64, 16, 256, 0);
     let handle = Coordinator::start(CoordinatorConfig {
-        artifacts_dir: artifacts,
+        backend: BackendConfig::Native(BackendSpec::default()),
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         queue_capacity: 256,
     })?;

@@ -1,46 +1,39 @@
 //! Multi-head hot-swap serving demo (paper §1 "Deployment Context" and
 //! §6.2 "Scalable Mixtures of Experts"): many lightweight compressed heads
 //! share one serving stack; heads register and retire while traffic flows.
+//! Runs entirely on the native backend — no artifacts required.
 //!
-//! Run: make artifacts && cargo run --release --example serving
+//! Run: cargo run --release --example serving
 
 use std::time::Duration;
 
 use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
 use share_kan::data::rng::Pcg32;
-use share_kan::data::standard_splits;
-use share_kan::runtime::Engine;
-use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = share_kan::runtime::default_artifacts_dir();
+    let spec = KanSpec::default();
     let n_heads = 6usize;
 
-    // Build N task heads: one shared quick-trained base, then per-task
-    // compression with different seeds (stand-ins for per-task fine-tunes).
+    // Build N task heads: one shared base, then per-task compression with
+    // different seeds (stand-ins for per-task fine-tunes; a pjrt build can
+    // train the base with `share-kan train` instead).
     println!("building {n_heads} compressed task heads...");
-    let (spec, head_cks) = {
-        let engine = Engine::load(&artifacts)?;
-        let spec = engine.manifest.kan_spec;
-        let data = standard_splits(42, spec.d_in, spec.d_out, 1024, 128, 128, 0);
-        let mut trainer = KanTrainer::new(&engine, spec.grid_size, 42)?;
-        trainer.fit(&data.train,
-                    &TrainConfig { steps: 150, base_lr: 2e-2, seed: 1, log_every: 1000 })?;
-        let dense = trainer.to_checkpoint()?;
-        let k = engine.manifest.vq_spec.codebook_size;
-        let cks: Vec<_> = (0..n_heads)
-            .map(|i| compress(&dense, &spec, k, Precision::Int8, 100 + i as u64)
-                .map(|c| c.to_checkpoint()))
-            .collect::<anyhow::Result<_>>()?;
-        (spec, cks)
-    };
+    let dense = synthetic_dense(&spec, 42);
+    let k = VqSpec::default().codebook_size;
+    let head_cks: Vec<_> = (0..n_heads)
+        .map(|i| compress(&dense, &spec, k, Precision::Int8, 100 + i as u64)
+            .map(|c| c.to_checkpoint()))
+        .collect::<anyhow::Result<_>>()?;
     let total_bytes: usize = head_cks.iter().map(|c| c.total_bytes()).sum();
     println!("{n_heads} heads, {} bytes total ({} bytes/head marginal cost)",
              total_bytes, total_bytes / n_heads);
 
     let handle = Coordinator::start(CoordinatorConfig {
-        artifacts_dir: artifacts,
+        backend: BackendConfig::Native(BackendSpec::default()),
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         queue_capacity: 2048,
     })?;

@@ -2,8 +2,9 @@
 //! dozens of compressed heads sharing the serving stack).
 //!
 //! A head is a set of weight tensors matching one forward-artifact family;
-//! the executor thread turns them into PJRT literals once at registration
-//! (LUTHAM zero-copy: weights never move again).
+//! the execution backend prepares them once at registration (PJRT literals
+//! or materialized native models — LUTHAM zero-copy: weights never move
+//! again).
 
 use anyhow::Result;
 
@@ -104,21 +105,59 @@ impl HeadWeights {
     }
 
     /// Input feature dimension, for request validation.
-    pub fn d_in(&self, spec: &KanSpec) -> usize {
-        let _ = spec;
+    pub fn d_in(&self) -> usize {
         match self {
-            HeadWeights::Mlp { w1, .. } => w1.shape()[0],
-            HeadWeights::DenseKan { grids0, .. } => grids0.shape()[0],
-            HeadWeights::VqFp32 { idx0, .. } | HeadWeights::VqInt8 { idx0, .. } => idx0.shape()[0],
+            HeadWeights::Mlp { w1, .. } => dim(w1, 0),
+            HeadWeights::DenseKan { grids0, .. } => dim(grids0, 0),
+            HeadWeights::VqFp32 { idx0, .. } | HeadWeights::VqInt8 { idx0, .. } => dim(idx0, 0),
         }
     }
 
     /// Output class count.
     pub fn d_out(&self) -> usize {
         match self {
-            HeadWeights::Mlp { b2, .. } => b2.shape()[0],
-            HeadWeights::DenseKan { grids1, .. } => grids1.shape()[1],
-            HeadWeights::VqFp32 { bs1, .. } | HeadWeights::VqInt8 { bs1, .. } => bs1.shape()[0],
+            HeadWeights::Mlp { b2, .. } => dim(b2, 0),
+            HeadWeights::DenseKan { grids1, .. } => dim(grids1, 1),
+            HeadWeights::VqFp32 { bs1, .. } | HeadWeights::VqInt8 { bs1, .. } => dim(bs1, 0),
+        }
+    }
+
+    /// Hidden width.
+    pub fn d_hidden(&self) -> usize {
+        match self {
+            HeadWeights::Mlp { w1, .. } => dim(w1, 1),
+            HeadWeights::DenseKan { grids0, .. } => dim(grids0, 1),
+            HeadWeights::VqFp32 { idx0, .. } | HeadWeights::VqInt8 { idx0, .. } => dim(idx0, 1),
+        }
+    }
+
+    /// The KAN spec these weights imply (read off the tensor shapes).  For
+    /// MLP heads the grid size is a placeholder — nothing on the serve
+    /// path consults it.  Malformed (wrong-rank) checkpoint tensors yield a
+    /// degenerate spec here and a clean shape-mismatch error from
+    /// [`HeadWeights::validate`] at registration, never a panic.
+    pub fn implied_kan_spec(&self) -> KanSpec {
+        let grid_size = match self {
+            HeadWeights::Mlp { .. } => KanSpec::default().grid_size,
+            HeadWeights::DenseKan { grids0, .. } => dim(grids0, 2),
+            HeadWeights::VqFp32 { cb0, .. } => dim(cb0, 1),
+            HeadWeights::VqInt8 { cbq0, .. } => dim(cbq0, 1),
+        };
+        KanSpec {
+            d_in: self.d_in(),
+            d_hidden: self.d_hidden(),
+            d_out: self.d_out(),
+            grid_size,
+        }
+    }
+
+    /// Codebook row count for VQ heads; the default K otherwise (validation
+    /// only consults it for VQ heads).
+    pub fn implied_codebook_size(&self) -> usize {
+        match self {
+            HeadWeights::VqFp32 { cb0, .. } => dim(cb0, 0),
+            HeadWeights::VqInt8 { cbq0, .. } => dim(cbq0, 0),
+            _ => crate::kan::spec::VqSpec::default().codebook_size,
         }
     }
 
@@ -162,6 +201,12 @@ impl HeadWeights {
             }
         }
     }
+}
+
+/// Shape dimension read that tolerates wrong-rank tensors (0 fails the
+/// later shape validation cleanly instead of panicking here).
+fn dim(t: &Tensor, i: usize) -> usize {
+    t.shape().get(i).copied().unwrap_or(0)
 }
 
 /// Pad a codebook (and clamp indices) so a head compressed with K' < K can
@@ -209,6 +254,19 @@ mod tests {
             grids1: Tensor::from_f32(&[6, 2, 5], &[0.0; 60]),
         };
         assert!(bad.validate(&spec, 8).is_err());
+    }
+
+    #[test]
+    fn malformed_rank_yields_clean_error_not_panic() {
+        // rank-2 grids0 in a dense checkpoint: spec derivation must not
+        // index out of bounds, and validation must reject it cleanly
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("dense_kan"))]));
+        ck.insert("grids0", Tensor::from_f32(&[2, 3], &[0.0; 6]));
+        ck.insert("grids1", Tensor::from_f32(&[3, 2, 4], &[0.0; 24]));
+        let h = HeadWeights::from_checkpoint(&ck).unwrap();
+        let spec = h.implied_kan_spec();
+        assert_eq!(spec.grid_size, 0);
+        assert!(h.validate(&spec, 8).is_err());
     }
 
     #[test]

@@ -56,7 +56,9 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
-    /// Approximate percentile from bucket boundaries (upper bound).
+    /// Approximate percentile from bucket boundaries (upper bound), clamped
+    /// to the recorded maximum so e.g. p50 of a single 10 µs sample reports
+    /// 10 µs rather than the 16 µs bucket boundary.
     pub fn percentile(&self, p: f64) -> Duration {
         let total = self.count();
         if total == 0 {
@@ -67,7 +69,8 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                let upper = 1u64 << (i + 1);
+                return Duration::from_micros(upper.min(self.max_us.load(Ordering::Relaxed)));
             }
         }
         self.max()
@@ -131,6 +134,26 @@ mod tests {
         assert!(h.percentile(0.5) <= h.percentile(0.95));
         assert!(h.percentile(0.95) <= h.percentile(1.0).max(h.max()));
         assert!(h.mean() >= Duration::from_micros(100));
+        // no reported percentile may exceed the recorded maximum
+        for p in [0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert!(
+                h.percentile(p) <= h.max(),
+                "p{p}: {:?} > max {:?}",
+                h.percentile(p),
+                h.max()
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_of_single_sample_is_the_sample() {
+        // regression: the bucket upper bound (16 µs) used to be reported,
+        // exceeding the recorded max of 10 µs
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(10));
+        assert_eq!(h.percentile(0.5), Duration::from_micros(10));
+        assert_eq!(h.percentile(0.99), Duration::from_micros(10));
+        assert!(h.percentile(0.5) <= h.max());
     }
 
     #[test]

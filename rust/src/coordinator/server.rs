@@ -1,17 +1,18 @@
 //! The serving coordinator: bounded admission queue -> executor thread
-//! (owns the PJRT engine) -> dynamic batcher -> bucketed execution.
+//! (owns the execution backend) -> dynamic batcher -> bucketed execution.
 //!
-//! Threading model: PJRT wrapper types are not Send/Sync, so the engine and
-//! all literals live on ONE executor thread (the vLLM engine-loop shape).
-//! Clients talk to it via a bounded sync channel (admission control /
-//! backpressure) and get responses on per-request channels.
+//! Threading model: backends are constructed *on* the executor thread from
+//! a `Send` [`BackendConfig`] (PJRT wrapper types are not Send/Sync), so
+//! the backend and all its per-head state live on ONE executor thread (the
+//! vLLM engine-loop shape).  Clients talk to it via a bounded sync channel
+//! (admission control / backpressure) and get responses on per-request
+//! channels.
 //!
-//! Zero-alloc discipline on the hot path: per-head weight literals are
-//! created once at registration; per-batch the executor reuses a padded
-//! feature scratch buffer sized by the memplan-style max bucket.
+//! Zero-alloc discipline on the hot path: per-head weights are prepared
+//! once at registration inside the backend; per-batch the executor reuses
+//! a padded feature scratch buffer sized by the largest batch bucket.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -19,17 +20,16 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use xla::Literal;
 
 use super::batcher::{Batch, BatchPolicy, PendingQueue};
 use super::heads::HeadWeights;
 use super::metrics::{Counters, LatencyHistogram};
 use super::request::{InferRequest, InferResponse};
-use crate::runtime::{literal, Engine};
-use crate::tensor::Tensor;
+use crate::runtime::{Backend, BackendConfig};
 
 pub struct CoordinatorConfig {
-    pub artifacts_dir: PathBuf,
+    /// which execution backend the executor thread constructs and owns
+    pub backend: BackendConfig,
     pub policy: BatchPolicy,
     /// bounded admission queue depth; try_submit rejects beyond this
     pub queue_capacity: usize,
@@ -38,7 +38,7 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            backend: BackendConfig::default(),
             policy: BatchPolicy::default(),
             queue_capacity: 1024,
         }
@@ -82,7 +82,7 @@ impl Coordinator {
             counters: Counters::default(),
         });
         let m2 = metrics.clone();
-        // engine must be constructed on the executor thread (not Send);
+        // the backend must be constructed on the executor thread (not Send);
         // report startup errors back through a one-shot channel
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let join = std::thread::Builder::new()
@@ -176,10 +176,9 @@ impl Drop for CoordinatorHandle {
     }
 }
 
-/// Per-head state on the executor thread.
+/// Per-head queueing state on the executor thread (execution state — weight
+/// literals, materialized models — lives inside the backend).
 struct HeadState {
-    model: &'static str,
-    weight_literals: Vec<Literal>,
     d_in: usize,
     d_out: usize,
     queue: PendingQueue,
@@ -187,22 +186,22 @@ struct HeadState {
 
 fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics>,
                  ready: mpsc::Sender<Result<(), String>>) {
-    let engine = match Engine::load(&cfg.artifacts_dir) {
-        Ok(e) => {
+    let mut backend: Box<dyn Backend> = match cfg.backend.build() {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            e
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
             return;
         }
     };
-    let buckets = engine.manifest.batch_buckets.clone();
+    let buckets = backend.spec().batch_buckets.clone();
     let max_bucket = buckets.iter().copied().max().unwrap_or(1);
-    let spec = engine.manifest.kan_spec;
+    let d_in_cap = backend.spec().kan.d_in.max(1);
     let mut heads: HashMap<String, HeadState> = HashMap::new();
     // padded feature scratch, reused across batches (zero-alloc hot loop)
-    let mut scratch: Vec<f32> = vec![0.0; max_bucket * spec.d_in.max(1)];
+    let mut scratch: Vec<f32> = vec![0.0; max_bucket * d_in_cap];
 
     let tick = Duration::from_micros(200).min(cfg.policy.max_wait.max(Duration::from_micros(50)));
     loop {
@@ -211,13 +210,12 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
         match msg {
             Ok(Msg::Shutdown) => break,
             Ok(Msg::AddHead { name, weights, resp }) => {
-                let r = register_head(&engine, &mut heads, &name, *weights);
+                let r = register_head(backend.as_mut(), &mut heads, &name, *weights);
                 let _ = resp.send(r.map_err(|e| format!("{e:#}")));
                 continue;
             }
             Ok(Msg::RemoveHead { name, resp }) => {
-                let existed = heads.remove(&name).is_some();
-                let _ = resp.send(existed);
+                let _ = resp.send(unregister_head(backend.as_mut(), &mut heads, &name));
                 continue;
             }
             Ok(Msg::Infer(req)) => {
@@ -231,11 +229,12 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
                             return;
                         }
                         Msg::AddHead { name, weights, resp } => {
-                            let r = register_head(&engine, &mut heads, &name, *weights);
+                            let r = register_head(backend.as_mut(), &mut heads, &name, *weights);
                             let _ = resp.send(r.map_err(|e| format!("{e:#}")));
                         }
                         Msg::RemoveHead { name, resp } => {
-                            let _ = resp.send(heads.remove(&name).is_some());
+                            let _ =
+                                resp.send(unregister_head(backend.as_mut(), &mut heads, &name));
                         }
                     }
                 }
@@ -245,38 +244,50 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
         }
         // 2) close + execute due batches
         let now = Instant::now();
-        for state in heads.values_mut() {
+        for (name, state) in heads.iter_mut() {
             while let Some(batch) = state.queue.try_close(&cfg.policy, &buckets, now) {
-                execute_batch(&engine, state, batch, &mut scratch, &metrics);
+                execute_batch(backend.as_mut(), name, state, batch, &mut scratch, &metrics);
             }
         }
     }
     fail_all(&mut heads, "shutdown");
 }
 
-fn register_head(engine: &Engine, heads: &mut HashMap<String, HeadState>, name: &str,
-                 weights: HeadWeights) -> Result<()> {
-    weights.validate(&engine.manifest.kan_spec, engine.manifest.vq_spec.codebook_size)?;
-    let lits = weights
-        .tensors()
-        .iter()
-        .map(|t| literal::to_literal(t))
-        .collect::<Result<Vec<_>>>()?;
-    // pre-compile every bucket for this head family (warm start)
-    for &b in &engine.manifest.batch_buckets {
-        engine.executable(&format!("{}_b{}", weights.model(), b))?;
+fn register_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadState>,
+                 name: &str, weights: HeadWeights) -> Result<()> {
+    let d_in = weights.d_in();
+    let d_out = weights.d_out();
+    backend.register_head(name, &weights)?;
+    let state = HeadState { d_in, d_out, queue: PendingQueue::default() };
+    if let Some(mut old) = heads.insert(name.to_string(), state) {
+        // hot-swap replace: fail anything still queued for the old head
+        // rather than stranding clients on a dropped channel
+        for req in old.queue.drain_all() {
+            let _ = req
+                .resp
+                .send(InferResponse::err(req.id, format!("head '{name}' replaced")));
+        }
     }
-    heads.insert(
-        name.to_string(),
-        HeadState {
-            model: weights.model(),
-            weight_literals: lits,
-            d_in: weights.d_in(&engine.manifest.kan_spec),
-            d_out: weights.d_out(),
-            queue: PendingQueue::default(),
-        },
-    );
     Ok(())
+}
+
+/// Remove a head from the backend and the routing table, failing any
+/// requests still queued for it (hot-swap retire must not strand clients
+/// on a dead channel — mirrors `fail_all` at shutdown).
+fn unregister_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadState>,
+                   name: &str) -> bool {
+    backend.remove_head(name);
+    match heads.remove(name) {
+        Some(mut state) => {
+            for req in state.queue.drain_all() {
+                let _ = req
+                    .resp
+                    .send(InferResponse::err(req.id, format!("head '{name}' removed")));
+            }
+            true
+        }
+        None => false,
+    }
 }
 
 fn route(heads: &mut HashMap<String, HeadState>, req: InferRequest) {
@@ -307,7 +318,7 @@ fn fail_all(heads: &mut HashMap<String, HeadState>, why: &str) {
     }
 }
 
-fn execute_batch(engine: &Engine, state: &mut HeadState, batch: Batch,
+fn execute_batch(backend: &mut dyn Backend, name: &str, state: &mut HeadState, batch: Batch,
                  scratch: &mut [f32], metrics: &Metrics) {
     let bucket = batch.bucket;
     let d_in = state.d_in;
@@ -318,16 +329,8 @@ fn execute_batch(engine: &Engine, state: &mut HeadState, batch: Batch,
     for (i, req) in batch.requests.iter().enumerate() {
         pad[i * d_in..(i + 1) * d_in].copy_from_slice(&req.features);
     }
-    let artifact = format!("{}_b{}", state.model, bucket);
     let t0 = Instant::now();
-    let result = (|| -> Result<Vec<f32>> {
-        let x_lit = literal::to_literal(&Tensor::from_f32(&[bucket, d_in], pad))?;
-        let mut inputs: Vec<&Literal> = state.weight_literals.iter().collect();
-        inputs.push(&x_lit);
-        let exe = engine.executable(&artifact)?;
-        let out = engine.execute_on(&exe, &inputs)?;
-        literal::f32s(&out[0])
-    })();
+    let result = backend.execute(name, pad, bucket);
     let exec_t = t0.elapsed();
     metrics.exec_latency.record(exec_t);
     metrics.counters.batches.fetch_add(1, Ordering::Relaxed);

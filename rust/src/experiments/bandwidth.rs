@@ -64,7 +64,9 @@ fn serving_bench(wb: &Workbench, requests: usize) -> Result<Vec<ServingRow>> {
         ("share_kan_int8", int8_head),
     ] {
         let handle = Coordinator::start(CoordinatorConfig {
-            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            backend: crate::runtime::BackendConfig::Pjrt {
+                artifacts_dir: crate::runtime::default_artifacts_dir(),
+            },
             policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
             queue_capacity: 4096,
         })?;

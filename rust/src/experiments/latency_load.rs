@@ -34,7 +34,9 @@ pub fn run(wb: &Workbench, rates: &[f64], n_per_rate: usize) -> Result<Vec<LoadP
     let mut out = Vec::new();
     for &rate in rates {
         let handle = Coordinator::start(CoordinatorConfig {
-            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            backend: crate::runtime::BackendConfig::Pjrt {
+                artifacts_dir: crate::runtime::default_artifacts_dir(),
+            },
             policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
             queue_capacity: 8192,
         })?;

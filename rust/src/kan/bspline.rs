@@ -153,16 +153,19 @@ pub fn tabulation_error(spline: &CubicSpline, g: usize, probes: usize) -> f32 {
         .fold(0f32, f32::max)
 }
 
-/// Smallest G whose tabulation error is below `tol` (searches doubling).
-pub fn min_grid_for_tolerance(spline: &CubicSpline, tol: f32, g_max: usize) -> usize {
+/// Smallest G whose tabulation error is below `tol` (searches doubling up
+/// to `g_max`).  Returns `None` when the tolerance was never met, so
+/// LUTHAM export can distinguish "converged at G'" from "gave up at g_max"
+/// instead of silently shipping an out-of-tolerance table.
+pub fn min_grid_for_tolerance(spline: &CubicSpline, tol: f32, g_max: usize) -> Option<usize> {
     let mut g = 2;
     while g <= g_max {
         if tabulation_error(spline, g, 512) <= tol {
-            return g;
+            return Some(g);
         }
         g *= 2;
     }
-    g_max
+    None
 }
 
 #[cfg(test)]
@@ -220,9 +223,26 @@ mod tests {
     fn min_grid_search_monotone_in_tol() {
         let mut rng = Pcg32::seeded(3);
         let s = CubicSpline::new(rng.normal_vec(12, 0.0, 1.0));
-        let loose = min_grid_for_tolerance(&s, 0.1, 256);
-        let tight = min_grid_for_tolerance(&s, 0.005, 256);
+        let loose = min_grid_for_tolerance(&s, 0.1, 256).expect("loose tol reachable");
+        let tight = min_grid_for_tolerance(&s, 0.005, 256).expect("tight tol reachable");
         assert!(tight >= loose, "{tight} vs {loose}");
+        // the returned grid actually meets the tolerance
+        assert!(tabulation_error(&s, tight, 512) <= 0.005);
+    }
+
+    #[test]
+    fn min_grid_search_reports_unreachable_tolerance() {
+        // regression: used to silently return g_max even when the tolerance
+        // was never met
+        let mut rng = Pcg32::seeded(5);
+        let s = CubicSpline::new(rng.normal_vec(12, 0.0, 1.0));
+        // a negative tolerance can never be met (error is a max of abs values)
+        assert_eq!(min_grid_for_tolerance(&s, -1.0, 256), None);
+        // a tight tolerance with a tiny g_max budget must also report failure
+        let tight = 1e-6;
+        if tabulation_error(&s, 4, 512) > tight {
+            assert_eq!(min_grid_for_tolerance(&s, tight, 4), None);
+        }
     }
 
     #[test]

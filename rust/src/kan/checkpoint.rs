@@ -11,6 +11,8 @@ use std::fs::File;
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use crate::data::rng::Pcg32;
+use crate::kan::spec::KanSpec;
 use crate::tensor::{read_tensor, write_tensor, Tensor};
 use crate::util::json::{self, Json};
 
@@ -100,6 +102,36 @@ impl Checkpoint {
         }
         Ok(Checkpoint { meta, tensors })
     }
+}
+
+/// Synthetic dense-KAN checkpoint (Gaussian grids, full meta) — the
+/// stand-in for a trained head used by examples, benches and tests when no
+/// PJRT training run is available.  Carries every meta key `spec_from_meta`
+/// consumers expect, so it is interchangeable with a trained checkpoint.
+pub fn synthetic_dense(spec: &KanSpec, seed: u64) -> Checkpoint {
+    let mut rng = Pcg32::seeded(seed);
+    let mut ck = Checkpoint::new(Json::obj(vec![
+        ("model", Json::str("dense_kan")),
+        ("grid_size", Json::num(spec.grid_size as f64)),
+        ("d_in", Json::num(spec.d_in as f64)),
+        ("d_hidden", Json::num(spec.d_hidden as f64)),
+        ("d_out", Json::num(spec.d_out as f64)),
+    ]));
+    ck.insert(
+        "grids0",
+        Tensor::from_f32(
+            &[spec.d_in, spec.d_hidden, spec.grid_size],
+            &rng.normal_vec(spec.d_in * spec.d_hidden * spec.grid_size, 0.0, 0.3),
+        ),
+    );
+    ck.insert(
+        "grids1",
+        Tensor::from_f32(
+            &[spec.d_hidden, spec.d_out, spec.grid_size],
+            &rng.normal_vec(spec.d_hidden * spec.d_out * spec.grid_size, 0.0, 0.3),
+        ),
+    );
+    ck
 }
 
 #[cfg(test)]

@@ -9,20 +9,45 @@
 //!   substrate (cache simulator, memory planner, metrics, data, eval).
 //! * L2/L1 (python/compile): JAX models + Pallas LUTHAM kernels, AOT-lowered
 //!   once to `artifacts/*.hlo.txt`; never on the request path.
-//! * runtime: PJRT CPU client that loads and executes the artifacts.
+//! * runtime: pluggable execution backends behind [`runtime::Backend`].
+//!
+//! # Execution backends
+//!
+//! The serving stack executes through the [`runtime::Backend`] trait:
+//!
+//! * **native** (default) — pure-Rust PLI lookup-table math served directly
+//!   from `VqModel`-style head weights (the same kernels as [`kan::eval`]).
+//!   Needs no artifacts, no external runtime: `cargo build --release &&
+//!   cargo test -q` is fully self-contained.
+//! * **pjrt** (cargo feature `pjrt`) — the PJRT CPU client over AOT-lowered
+//!   HLO artifacts, plus the Rust-driven training loop ([`train`]) and the
+//!   experiment harness ([`experiments`] / the `repro` binary), which step
+//!   through PJRT train-step artifacts.  The workspace vendors a type-level
+//!   xla stub so `--features pjrt` compiles everywhere; executing artifacts
+//!   requires swapping in the real xla-rs bindings and running
+//!   `make artifacts`.
+//!
+//! Cross-backend equivalence (coordinator-served outputs vs
+//! `VqModel::forward`, bit for bit) is pinned by
+//! `rust/tests/native_backend_equivalence.rs`.
 
 pub mod coordinator;
 pub mod data;
 pub mod eval;
-pub mod experiments;
+pub mod kan;
 pub mod memplan;
 pub mod memsim;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
 pub mod spectral;
-pub mod kan;
 pub mod tensor;
-pub mod train;
 pub mod util;
 pub mod vq;
+
+// Training and the experiment harness drive PJRT train-step artifacts and
+// therefore only exist behind the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+pub mod experiments;
+#[cfg(feature = "pjrt")]
+pub mod train;

@@ -1,18 +1,22 @@
-//! `share-kan` — the deployment CLI: train, compress, inspect and serve
-//! SHARe-KAN heads over the AOT artifacts.
+//! `share-kan` — the deployment CLI: train, compress, inspect, eval and
+//! serve SHARe-KAN heads.
 //!
 //! Subcommands:
 //!   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 2e-2] [--seed 42]
+//!            (requires the `pjrt` feature + AOT artifacts)
 //!   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
 //!   inspect  --in ck.skpt
 //!   eval     --in ck.skpt [--split test|coco] [--seed 42]
-//!   serve    --head ck.skpt [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
-//!   plan     [--k 512] [--int8]            (static memory plan, §4.3)
+//!   serve    --head ck.skpt [--backend native|pjrt] [--requests 1000]
+//!            [--max-batch 128] [--max-wait-ms 2] [--tcp ADDR]
+//!   plan     [--k 512] [--int8] [--max-batch 128]
 //!
-//! Python never runs here: everything executes through the PJRT runtime
-//! over artifacts/ produced once by `make artifacts`.
+//! The default build serves everything through the pure-Rust native
+//! backend — no Python, no PJRT, no artifacts/ directory.  With
+//! `--features pjrt` (and real xla bindings + `make artifacts`) the same
+//! commands can run over the AOT-lowered HLO artifacts instead.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -22,19 +26,18 @@ use share_kan::eval::mean_average_precision;
 use share_kan::kan::checkpoint::Checkpoint;
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memplan::plan_vq_head;
-use share_kan::runtime::Engine;
-use share_kan::train::{KanTrainer, TrainConfig};
+use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::util::cli::Args;
 use share_kan::vq::{compress, load_compressed, Precision};
 
 const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options]
-  train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]
+  train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]   (pjrt builds only)
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
   inspect  --in ck.skpt
   eval     --in ck.skpt [--split test|coco] [--seed 42]
-  serve    --head ck.skpt [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
-  plan     [--k 512] [--int8]
-common: --artifacts DIR (default ./artifacts or $SHARE_KAN_ARTIFACTS)";
+  serve    --head ck.skpt [--backend native|pjrt] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+  plan     [--k 512] [--int8] [--max-batch 128]
+common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
 
 fn main() {
     let args = Args::from_env();
@@ -48,6 +51,7 @@ fn main() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or(
         "artifacts",
@@ -67,7 +71,11 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use share_kan::runtime::Engine;
+    use share_kan::train::{KanTrainer, TrainConfig};
+
     let out = PathBuf::from(args.get("out").context("--out required")?);
     let engine = Engine::load(&artifacts_dir(args))?;
     let spec = engine.manifest.kan_spec;
@@ -91,6 +99,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     ck.save(&out)?;
     println!("saved {} ({} bytes)", out.display(), ck.total_bytes());
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "`train` steps through PJRT train-step artifacts; rebuild with \
+         `--features pjrt` (real xla bindings) and run `make artifacts` first"
+    )
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
@@ -139,8 +155,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.get("in").context("--in required")?);
     let ck = Checkpoint::load(&input)?;
     let seed = args.get_u64("seed", 42);
-    let engine = Engine::load(&artifacts_dir(args))?;
-    let spec = engine.manifest.kan_spec;
+    let spec = spec_from_meta(&ck)?;
     let data = standard_splits(seed, spec.d_in, spec.d_out, 64, 64, 2048, 2048);
     let (x, y, n) = match args.get_or("split", "test").as_str() {
         "coco" => (&data.coco.x, &data.coco.y, data.coco.n),
@@ -148,18 +163,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     };
     let model_name = ck.meta.get("model").and_then(|j| j.as_str()).unwrap_or("");
     let scores = match model_name {
-        "dense_kan" => {
-            let g = spec_from_meta(&ck)?.grid_size;
-            share_kan::kan::eval::DenseModel {
-                grids0: ck.require("grids0")?.as_f32(),
-                grids1: ck.require("grids1")?.as_f32(),
-                d_in: spec.d_in,
-                d_hidden: spec.d_hidden,
-                d_out: spec.d_out,
-                g,
-            }
-            .forward(x, n)
+        "dense_kan" => share_kan::kan::eval::DenseModel {
+            grids0: ck.require("grids0")?.as_f32(),
+            grids1: ck.require("grids1")?.as_f32(),
+            d_in: spec.d_in,
+            d_hidden: spec.d_hidden,
+            d_out: spec.d_out,
+            g: spec.grid_size,
         }
+        .forward(x, n),
         "vq_kan_fp32" | "vq_kan_int8" => load_compressed(&ck)?.forward(x, n),
         other => anyhow::bail!("cannot eval model '{other}'"),
     };
@@ -173,9 +185,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let head_path = PathBuf::from(args.get("head").context("--head required")?);
     let ck = Checkpoint::load(&head_path)?;
     let head = HeadWeights::from_checkpoint(&ck)?;
-    println!("serving head '{}' ({} weight bytes)", head.model(), head.weight_bytes());
+    let head_spec = BackendSpec::for_head(&head);
+    let d_in = head_spec.kan.d_in;
+    let backend = match args.get_or("backend", "native").as_str() {
+        "native" => BackendConfig::Native(head_spec),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => BackendConfig::Pjrt { artifacts_dir: artifacts_dir(args) },
+        other => anyhow::bail!(
+            "unknown backend '{other}' (native{})",
+            if cfg!(feature = "pjrt") { "|pjrt" } else { "; rebuild with --features pjrt for pjrt" }
+        ),
+    };
+    println!("serving head '{}' ({} weight bytes) on the {} backend",
+             head.model(),
+             head.weight_bytes(),
+             args.get_or("backend", "native"));
     let handle = Coordinator::start(CoordinatorConfig {
-        artifacts_dir: artifacts_dir(args),
+        backend,
         policy: BatchPolicy {
             max_batch: args.get_usize("max-batch", 128),
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
@@ -195,15 +221,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // synthetic closed-loop load
     let n = args.get_usize("requests", 1000);
-    let engine_spec = {
-        let e = Engine::load(&artifacts_dir(args))?;
-        e.manifest.kan_spec
-    };
     let mut rng = Pcg32::seeded(9);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for _ in 0..n {
-        pending.push(c.try_submit("default", rng.normal_vec(engine_spec.d_in, 0.0, 1.0))?);
+        pending.push(c.try_submit("default", rng.normal_vec(d_in, 0.0, 1.0))?);
         if pending.len() >= 256 {
             for rx in pending.drain(..) {
                 rx.recv().ok();
@@ -226,11 +248,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    let engine = Engine::load(&artifacts_dir(args))?;
-    let spec = engine.manifest.kan_spec;
-    let vq = VqSpec { codebook_size: args.get_usize("k", engine.manifest.vq_spec.codebook_size) };
+    let spec = KanSpec::default();
+    let vq = VqSpec { codebook_size: args.get_usize("k", VqSpec::default().codebook_size) };
     let precision = if args.flag("int8") { Precision::Int8 } else { Precision::Fp32 };
-    let max_batch = engine.manifest.batch_buckets.iter().copied().max().unwrap_or(1);
+    let max_batch = args.get_usize("max-batch", 128);
     let plan = plan_vq_head(&spec, &vq, precision, max_batch);
     plan.validate().map_err(|e| anyhow::anyhow!(e))?;
     println!("LUTHAM static memory plan ({precision:?}, K={}, max batch {max_batch}):",
@@ -248,6 +269,3 @@ fn cmd_plan(args: &Args) -> Result<()> {
              cb.size);
     Ok(())
 }
-
-#[allow(dead_code)]
-fn unused(_: &Path) {}

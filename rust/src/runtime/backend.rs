@@ -1,0 +1,148 @@
+//! The pluggable execution backend behind the serving coordinator.
+//!
+//! A [`Backend`] owns per-head execution state (weights uploaded, artifacts
+//! warmed, models materialized — whatever the implementation needs) and
+//! executes one padded batch at a time for a registered head.  The
+//! coordinator's executor thread is the only caller; backends therefore do
+//! not need to be `Send` — they are *constructed on* the executor thread
+//! from a [`BackendConfig`], which is the `Send` handle that crosses the
+//! thread boundary.
+//!
+//! Two implementations ship:
+//! * [`super::native::NativeBackend`] — pure-Rust PLI lookup-table math
+//!   (the same kernels as `kan::eval`), zero external dependencies; the
+//!   default, and what CI exercises.
+//! * `super::pjrt::PjrtBackend` (cargo feature `pjrt`) — the original PJRT
+//!   engine over AOT-lowered HLO artifacts.
+
+use anyhow::Result;
+
+use crate::coordinator::heads::HeadWeights;
+use crate::kan::spec::{KanSpec, VqSpec};
+
+/// The shape/batching contract a backend serves under: model dimensions,
+/// codebook size for head validation, and the batch buckets the dynamic
+/// batcher pads to.
+#[derive(Debug, Clone)]
+pub struct BackendSpec {
+    pub kan: KanSpec,
+    pub vq: VqSpec,
+    /// sorted ascending; the batcher pads each batch to the smallest
+    /// bucket that fits (AOT backends compile one executable per bucket)
+    pub batch_buckets: Vec<usize>,
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        BackendSpec {
+            kan: KanSpec::default(),
+            vq: VqSpec::default(),
+            batch_buckets: vec![1, 8, 32, 128],
+        }
+    }
+}
+
+impl BackendSpec {
+    /// Spec under which a native backend can serve exactly this head
+    /// (shapes read off the weight tensors, default batch buckets).
+    pub fn for_head(weights: &HeadWeights) -> BackendSpec {
+        BackendSpec {
+            kan: weights.implied_kan_spec(),
+            vq: VqSpec { codebook_size: weights.implied_codebook_size() },
+            batch_buckets: BackendSpec::default().batch_buckets,
+        }
+    }
+
+    pub fn with_buckets(mut self, buckets: &[usize]) -> BackendSpec {
+        self.batch_buckets = buckets.to_vec();
+        self
+    }
+}
+
+/// A serving execution backend.  See the module docs for the threading
+/// contract (single executor thread, constructed via [`BackendConfig`]).
+pub trait Backend {
+    /// Human-readable backend/platform name for logs and metrics.
+    fn name(&self) -> String;
+
+    /// The shape/batching contract this backend serves under.
+    fn spec(&self) -> &BackendSpec;
+
+    /// Register (or replace) a head: validate shapes against the spec and
+    /// perform any per-head preparation (weight upload, executable warm-up).
+    fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()>;
+
+    /// Unregister a head; returns whether it existed.
+    fn remove_head(&mut self, name: &str) -> bool;
+
+    /// Execute one padded batch for a registered head.  `x` is row-major
+    /// `[bucket, d_in]` with padding rows zeroed; returns row-major
+    /// `[bucket, d_out]` scores (padding rows are garbage the caller drops).
+    fn execute(&mut self, head: &str, x: &[f32], bucket: usize) -> Result<Vec<f32>>;
+}
+
+/// `Send` recipe for constructing a [`Backend`] on the executor thread.
+#[derive(Debug, Clone)]
+pub enum BackendConfig {
+    /// Pure-Rust PLI serving; no artifacts or external runtime required.
+    Native(BackendSpec),
+    /// PJRT engine over `artifacts/` (requires the `pjrt` feature and a
+    /// real xla runtime — the vendored stub fails cleanly at startup).
+    #[cfg(feature = "pjrt")]
+    Pjrt { artifacts_dir: std::path::PathBuf },
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig::Native(BackendSpec::default())
+    }
+}
+
+impl BackendConfig {
+    /// Construct the backend.  Must be called on the thread that will own
+    /// it (PJRT wrapper types are not `Send`).
+    pub fn build(self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendConfig::Native(spec) => Ok(Box::new(super::native::NativeBackend::new(spec))),
+            #[cfg(feature = "pjrt")]
+            BackendConfig::Pjrt { artifacts_dir } => {
+                Ok(Box::new(super::pjrt::PjrtBackend::load(&artifacts_dir)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn default_spec_matches_python_config() {
+        let s = BackendSpec::default();
+        assert_eq!(s.kan.d_in, 64);
+        assert_eq!(s.vq.codebook_size, 512);
+        assert_eq!(s.batch_buckets, vec![1, 8, 32, 128]);
+    }
+
+    #[test]
+    fn spec_for_head_reads_shapes() {
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 5, 7], &[0.0; 105]),
+            grids1: Tensor::from_f32(&[5, 2, 7], &[0.0; 70]),
+        };
+        let spec = BackendSpec::for_head(&head);
+        assert_eq!(spec.kan.d_in, 3);
+        assert_eq!(spec.kan.d_hidden, 5);
+        assert_eq!(spec.kan.d_out, 2);
+        assert_eq!(spec.kan.grid_size, 7);
+        assert!(head.validate(&spec.kan, spec.vq.codebook_size).is_ok());
+    }
+
+    #[test]
+    fn native_config_builds() {
+        let b = BackendConfig::default().build().unwrap();
+        assert_eq!(b.spec().kan.d_in, 64);
+        assert!(!b.name().is_empty());
+    }
+}

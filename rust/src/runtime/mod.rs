@@ -1,13 +1,35 @@
-//! Runtime: PJRT CPU client wrapper that loads `artifacts/*.hlo.txt`
-//! (HLO text — see python/compile/aot.py for why not serialized protos)
-//! and executes them from the L3 hot path.
+//! Runtime: pluggable execution backends for the serving stack.
+//!
+//! [`Backend`] is the contract the coordinator executes through; it is
+//! implemented by the pure-Rust [`NativeBackend`] (default: PLI
+//! lookup-table math straight from head weights, no artifacts required)
+//! and, behind the `pjrt` cargo feature, by `PjrtBackend` — the PJRT CPU
+//! client that loads `artifacts/*.hlo.txt` (HLO text — see
+//! python/compile/aot.py for why not serialized protos) and executes them.
+//!
+//! The manifest parser stays feature-independent: it is plain JSON and the
+//! native backend can serve the same batch-bucket contract the AOT export
+//! describes.
 
-pub mod engine;
-pub mod literal;
+pub mod backend;
 pub mod manifest;
+pub mod native;
 
-pub use engine::{Engine, EngineStats};
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod literal;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use backend::{Backend, BackendConfig, BackendSpec};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec};
+pub use native::{NativeBackend, NativeStats};
+
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, EngineStats};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 
 use std::path::PathBuf;
 

@@ -1,0 +1,280 @@
+//! Pure-Rust native execution backend: serves the PLI lookup-table math
+//! directly from head weights, with no external runtime and no AOT
+//! artifacts.
+//!
+//! This is the same math as `kan::eval` (and therefore bit-for-bit equal to
+//! `VqModel::forward` / `bspline::pli_eval` — asserted by
+//! `rust/tests/native_backend_equivalence.rs`): Int8 heads are dequantized
+//! once at registration with the exact `vq::quant` kernels the compression
+//! pipeline uses, so serving a compressed checkpoint through the
+//! coordinator reproduces `vq::load_compressed(..).forward(..)` exactly.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, BackendSpec};
+use crate::coordinator::heads::HeadWeights;
+use crate::kan::eval::{DenseModel, MlpModel, VqModel};
+use crate::vq::quant::{dequantize_linear_int8, dequantize_log_int8, LogInt8Params};
+
+/// Per-head materialized model.
+enum NativeHead {
+    Dense(DenseModel),
+    Mlp(MlpModel),
+    Vq(VqModel),
+}
+
+/// Execution counters (the native analogue of `EngineStats`).
+#[derive(Debug, Default, Clone)]
+pub struct NativeStats {
+    pub batches: u64,
+    pub rows: u64,
+}
+
+pub struct NativeBackend {
+    spec: BackendSpec,
+    heads: HashMap<String, NativeHead>,
+    pub stats: NativeStats,
+}
+
+impl NativeBackend {
+    pub fn new(spec: BackendSpec) -> NativeBackend {
+        NativeBackend { spec, heads: HashMap::new(), stats: NativeStats::default() }
+    }
+
+    /// Materialize the eval model for a validated head.
+    fn build_head(weights: &HeadWeights) -> Result<NativeHead> {
+        match weights {
+            HeadWeights::Mlp { w1, b1, w2, b2 } => {
+                let (d_in, d_hidden) = (w1.shape()[0], w1.shape()[1]);
+                let d_out = b2.shape()[0];
+                Ok(NativeHead::Mlp(MlpModel {
+                    w1: w1.as_f32(),
+                    b1: b1.as_f32(),
+                    w2: w2.as_f32(),
+                    b2: b2.as_f32(),
+                    d_in,
+                    d_hidden,
+                    d_out,
+                }))
+            }
+            HeadWeights::DenseKan { grids0, grids1 } => {
+                let s0 = grids0.shape();
+                Ok(NativeHead::Dense(DenseModel {
+                    grids0: grids0.as_f32(),
+                    grids1: grids1.as_f32(),
+                    d_in: s0[0],
+                    d_hidden: s0[1],
+                    d_out: grids1.shape()[1],
+                    g: s0[2],
+                }))
+            }
+            HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
+                Self::build_vq(
+                    cb0.as_f32(),
+                    idx0.as_i32(),
+                    g0.as_f32(),
+                    bs0.as_f32(),
+                    cb1.as_f32(),
+                    idx1.as_i32(),
+                    g1.as_f32(),
+                    bs1.as_f32(),
+                    cb0.shape()[0],
+                    cb0.shape()[1],
+                )
+            }
+            HeadWeights::VqInt8 { cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales } => {
+                // per-layer [codebook_scale, gain log_lo, gain log_step];
+                // identical dequantization to vq::load_compressed
+                let s = scales.as_f32();
+                anyhow::ensure!(s.len() == 6, "int8 scales tensor must hold 2x3 values");
+                let p0 = LogInt8Params { log_lo: s[1], log_step: s[2] };
+                let p1 = LogInt8Params { log_lo: s[4], log_step: s[5] };
+                Self::build_vq(
+                    dequantize_linear_int8(&cbq0.as_i8(), s[0]),
+                    idx0.as_i32(),
+                    dequantize_log_int8(&gq0.as_i8(), p0),
+                    bs0.as_f32(),
+                    dequantize_linear_int8(&cbq1.as_i8(), s[3]),
+                    idx1.as_i32(),
+                    dequantize_log_int8(&gq1.as_i8(), p1),
+                    bs1.as_f32(),
+                    cbq0.shape()[0],
+                    cbq0.shape()[1],
+                )
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_vq(
+        codebook0: Vec<f32>,
+        idx0: Vec<i32>,
+        gain0: Vec<f32>,
+        bias_sum0: Vec<f32>,
+        codebook1: Vec<f32>,
+        idx1: Vec<i32>,
+        gain1: Vec<f32>,
+        bias_sum1: Vec<f32>,
+        k: usize,
+        g: usize,
+    ) -> Result<NativeHead> {
+        // index bounds checked once here so the serve loop can stay
+        // assertion-free in release builds
+        for (name, idx) in [("idx0", &idx0), ("idx1", &idx1)] {
+            anyhow::ensure!(
+                idx.iter().all(|&i| i >= 0 && (i as usize) < k),
+                "{name} contains codebook indices outside 0..{k}"
+            );
+        }
+        let d_hidden = bias_sum0.len();
+        let d_out = bias_sum1.len();
+        anyhow::ensure!(d_hidden > 0 && d_out > 0, "empty VQ head");
+        anyhow::ensure!(idx0.len() % d_hidden == 0, "idx0 size not divisible by d_hidden");
+        anyhow::ensure!(idx1.len() % d_out == 0, "idx1 size not divisible by d_out");
+        Ok(NativeHead::Vq(VqModel {
+            d_in: idx0.len() / d_hidden,
+            d_hidden,
+            d_out,
+            k,
+            g,
+            codebook0,
+            idx0,
+            gain0,
+            bias_sum0,
+            codebook1,
+            idx1,
+            gain1,
+            bias_sum1,
+        }))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native-pli".to_string()
+    }
+
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()> {
+        weights.validate(&self.spec.kan, self.spec.vq.codebook_size)?;
+        let head = Self::build_head(weights)?;
+        self.heads.insert(name.to_string(), head);
+        Ok(())
+    }
+
+    fn remove_head(&mut self, name: &str) -> bool {
+        self.heads.remove(name).is_some()
+    }
+
+    fn execute(&mut self, head: &str, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        let h = self
+            .heads
+            .get(head)
+            .with_context(|| format!("unknown head '{head}'"))?;
+        let out = match h {
+            NativeHead::Dense(m) => {
+                anyhow::ensure!(x.len() == bucket * m.d_in, "padded batch size mismatch");
+                m.forward(x, bucket)
+            }
+            NativeHead::Mlp(m) => {
+                anyhow::ensure!(x.len() == bucket * m.d_in, "padded batch size mismatch");
+                m.forward(x, bucket)
+            }
+            NativeHead::Vq(m) => {
+                anyhow::ensure!(x.len() == bucket * m.d_in, "padded batch size mismatch");
+                m.forward(x, bucket)
+            }
+        };
+        self.stats.batches += 1;
+        self.stats.rows += bucket as u64;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::kan::spec::KanSpec;
+    use crate::tensor::Tensor;
+
+    fn small_spec() -> BackendSpec {
+        BackendSpec {
+            kan: KanSpec { d_in: 3, d_hidden: 4, d_out: 2, grid_size: 5 },
+            vq: crate::kan::spec::VqSpec { codebook_size: 6 },
+            batch_buckets: vec![1, 4],
+        }
+    }
+
+    #[test]
+    fn dense_head_matches_eval_model() {
+        let mut rng = Pcg32::seeded(1);
+        let spec = small_spec();
+        let (d_in, d_h, d_out, g) = (3, 4, 2, 5);
+        let g0 = rng.normal_vec(d_in * d_h * g, 0.0, 0.5);
+        let g1 = rng.normal_vec(d_h * d_out * g, 0.0, 0.5);
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[d_in, d_h, g], &g0),
+            grids1: Tensor::from_f32(&[d_h, d_out, g], &g1),
+        };
+        let mut b = NativeBackend::new(spec);
+        b.register_head("h", &head).unwrap();
+        let x = rng.normal_vec(4 * d_in, 0.0, 1.0);
+        let got = b.execute("h", &x, 4).unwrap();
+        let want = DenseModel { grids0: g0, grids1: g1, d_in, d_hidden: d_h, d_out, g }
+            .forward(&x, 4);
+        assert_eq!(got.len(), 4 * d_out);
+        for (a, w) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), w.to_bits(), "{a} vs {w}");
+        }
+        assert_eq!(b.stats.batches, 1);
+        assert_eq!(b.stats.rows, 4);
+    }
+
+    #[test]
+    fn rejects_heads_that_violate_spec() {
+        let mut b = NativeBackend::new(small_spec());
+        let bad = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 9], &[0.0; 108]), // wrong G
+            grids1: Tensor::from_f32(&[4, 2, 9], &[0.0; 72]),
+        };
+        assert!(b.register_head("bad", &bad).is_err());
+        assert!(b.execute("bad", &[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_codebook_indices() {
+        let spec = small_spec();
+        let (k, g) = (6, 5);
+        let head = HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[k, g], &[0.0; 30]),
+            idx0: Tensor::from_i32(&[3, 4], &[0, 1, 2, 3, 4, 5, 0, 1, 2, 3, 4, 99]),
+            g0: Tensor::from_f32(&[3, 4], &[1.0; 12]),
+            bs0: Tensor::from_f32(&[4], &[0.0; 4]),
+            cb1: Tensor::from_f32(&[k, g], &[0.0; 30]),
+            idx1: Tensor::from_i32(&[4, 2], &[0; 8]),
+            g1: Tensor::from_f32(&[4, 2], &[1.0; 8]),
+            bs1: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        let mut b = NativeBackend::new(spec);
+        assert!(b.register_head("h", &head).is_err());
+    }
+
+    #[test]
+    fn remove_head_unregisters() {
+        let mut b = NativeBackend::new(small_spec());
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
+            grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
+        };
+        b.register_head("h", &head).unwrap();
+        assert!(b.remove_head("h"));
+        assert!(!b.remove_head("h"));
+        assert!(b.execute("h", &[0.0; 3], 1).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! PJRT execution backend: the original `Engine` (AOT HLO artifacts through
+//! the PJRT CPU client) behind the [`Backend`] trait.  Only built with the
+//! `pjrt` cargo feature; with the vendored xla stub it fails cleanly at
+//! startup instead of executing.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::backend::{Backend, BackendSpec};
+use super::engine::Engine;
+use super::literal;
+use crate::coordinator::heads::HeadWeights;
+use crate::tensor::Tensor;
+
+struct PjrtHead {
+    /// artifact family prefix (e.g. "vq_kan_fwd")
+    model: &'static str,
+    /// weight literals in artifact parameter order, created once at
+    /// registration (LUTHAM zero-copy: weights never move again)
+    weight_literals: Vec<Literal>,
+}
+
+pub struct PjrtBackend {
+    engine: Engine,
+    spec: BackendSpec,
+    heads: HashMap<String, PjrtHead>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest + PJRT client.  Must run on the thread that will
+    /// own the backend (PJRT wrapper types are not `Send`).
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let engine = Engine::load(artifacts_dir)?;
+        let spec = BackendSpec {
+            kan: engine.manifest.kan_spec,
+            vq: engine.manifest.vq_spec,
+            batch_buckets: engine.manifest.batch_buckets.clone(),
+        };
+        Ok(PjrtBackend { engine, spec, heads: HashMap::new() })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt-{}", self.engine.platform())
+    }
+
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()> {
+        weights.validate(&self.spec.kan, self.spec.vq.codebook_size)?;
+        let lits = weights
+            .tensors()
+            .iter()
+            .map(|t| literal::to_literal(t))
+            .collect::<Result<Vec<_>>>()?;
+        // pre-compile every bucket for this head family (warm start)
+        for &b in &self.spec.batch_buckets {
+            self.engine.executable(&format!("{}_b{}", weights.model(), b))?;
+        }
+        self.heads.insert(
+            name.to_string(),
+            PjrtHead { model: weights.model(), weight_literals: lits },
+        );
+        Ok(())
+    }
+
+    fn remove_head(&mut self, name: &str) -> bool {
+        self.heads.remove(name).is_some()
+    }
+
+    fn execute(&mut self, head: &str, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        let state = self
+            .heads
+            .get(head)
+            .ok_or_else(|| anyhow::anyhow!("unknown head '{head}'"))?;
+        let d_in = self.spec.kan.d_in;
+        anyhow::ensure!(x.len() == bucket * d_in, "padded batch size mismatch");
+        let x_lit = literal::to_literal(&Tensor::from_f32(&[bucket, d_in], x))?;
+        let mut inputs: Vec<&Literal> = state.weight_literals.iter().collect();
+        inputs.push(&x_lit);
+        let exe = self.engine.executable(&format!("{}_b{}", state.model, bucket))?;
+        let out = self.engine.execute_on(&exe, &inputs)?;
+        literal::f32s(&out[0])
+    }
+}

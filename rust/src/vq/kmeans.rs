@@ -20,6 +20,21 @@ impl Default for KMeansConfig {
     }
 }
 
+/// Minimum consecutive starved mini-batches before a centroid is declared
+/// dead and reseeded.  The effective threshold scales with `n / batch`
+/// (see [`stale_limit`]): a live centroid owning m points misses one batch
+/// with probability ~exp(-m·batch/n), so requiring ~4·n/batch consecutive
+/// misses drives the false-reseed probability for even small live clusters
+/// (m >= 2) to exp(-8) while a truly dead centroid still gets caught well
+/// inside a normal training budget.
+const STALE_STEPS_BEFORE_RESEED: u32 = 8;
+
+/// Consecutive starved batches required before reseeding, scaled so the
+/// window covers ~4 full passes over the data.
+fn stale_limit(n: usize, batch: usize) -> u32 {
+    STALE_STEPS_BEFORE_RESEED.max((4 * n / batch.max(1)) as u32)
+}
+
 #[derive(Debug, Clone)]
 pub struct KMeans {
     pub centroids: Vec<f32>, // [k, d]
@@ -27,6 +42,8 @@ pub struct KMeans {
     pub d: usize,
     /// mini-batch per-centroid counts (for the decaying learning rate)
     counts: Vec<f64>,
+    /// consecutive mini-batches in which the centroid won zero points
+    stale: Vec<u32>,
 }
 
 fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
@@ -37,7 +54,7 @@ impl KMeans {
     /// Wrap existing centroids (e.g. a universal codebook) for assignment.
     pub fn from_centroids(centroids: Vec<f32>, k: usize, d: usize) -> KMeans {
         assert_eq!(centroids.len(), k * d);
-        KMeans { centroids, k, d, counts: vec![0.0; k] }
+        KMeans { centroids, k, d, counts: vec![0.0; k], stale: vec![0; k] }
     }
 
     /// k-means++ initialization over the dataset (sampled if huge).
@@ -84,7 +101,7 @@ impl KMeans {
                 }
             }
         }
-        KMeans { centroids, k, d, counts: vec![0.0; k] }
+        KMeans { centroids, k, d, counts: vec![0.0; k], stale: vec![0; k] }
     }
 
     /// Nearest centroid index for one row.
@@ -123,26 +140,58 @@ impl KMeans {
                 *cv += lr * (xv - *cv);
             }
         }
-        // empty-cluster handling: reseed never-hit centroids to the batch
-        // point farthest from its assigned centroid
+        // empty-cluster handling, keyed off per-batch emptiness (cumulative
+        // counts never return to zero, so a cluster whose data disappears
+        // mid-training would otherwise stay dead forever): a centroid that
+        // has never won a point, or that has starved for several
+        // consecutive mini-batches, is reseeded to a far batch point.
         if self.k <= n {
+            let limit = stale_limit(n, chosen.len());
+            let mut ranked: Option<Vec<usize>> = None;
             for c in 0..self.k {
-                if self.counts[c] == 0.0 {
-                    let mut far_i = chosen[0];
-                    let mut far_d = -1.0f32;
-                    for (&i, &a) in chosen.iter().zip(&assignments) {
-                        let dist = sq_dist(
-                            &data[i * d..(i + 1) * d],
-                            &self.centroids[a * d..(a + 1) * d],
-                        );
-                        if dist > far_d {
-                            far_d = dist;
-                            far_i = i;
+                if batch_counts[c] > 0 {
+                    self.stale[c] = 0;
+                    continue;
+                }
+                self.stale[c] = self.stale[c].saturating_add(1);
+                let dead = self.counts[c] == 0.0 || self.stale[c] >= limit;
+                if !dead {
+                    continue;
+                }
+                // rank batch points by distance to their assigned centroid
+                // (descending), computed lazily once per step; successive
+                // reseeds in the same step take distinct points so two dead
+                // centroids never collapse onto the same location
+                let order = ranked.get_or_insert_with(|| {
+                    let mut dists: Vec<(f32, usize)> = chosen
+                        .iter()
+                        .zip(&assignments)
+                        .map(|(&i, &a)| {
+                            let dist = sq_dist(
+                                &data[i * d..(i + 1) * d],
+                                &self.centroids[a * d..(a + 1) * d],
+                            );
+                            (dist, i)
+                        })
+                        .collect();
+                    dists.sort_by(|x, y| y.0.total_cmp(&x.0).then(x.1.cmp(&y.1)));
+                    let mut seen = Vec::new();
+                    let mut order = Vec::new();
+                    for (_, i) in dists {
+                        if !seen.contains(&i) {
+                            seen.push(i);
+                            order.push(i);
                         }
                     }
+                    order
+                });
+                if let Some(far_i) = order.first().copied() {
+                    order.remove(0);
                     self.centroids[c * d..(c + 1) * d]
                         .copy_from_slice(&data[far_i * d..(far_i + 1) * d]);
+                    // fresh learning rate so the reseeded centroid adapts fast
                     self.counts[c] = 1.0;
+                    self.stale[c] = 0;
                 }
             }
         }
@@ -225,6 +274,49 @@ mod tests {
         let a2 = KMeans::fit(&data, 100, 2, &cfg).assign_all(&data, 100);
         assert_eq!(a1, a2);
         assert!(a1.iter().all(|&c| (c as usize) < 8));
+    }
+
+    #[test]
+    fn starved_cluster_is_reseeded_mid_training() {
+        // Regression: reseeding used to key off the *cumulative* count, so a
+        // cluster that won points early and then lost its data was never
+        // reseeded.  Drive minibatch_step directly: centroid 1 earns mass on
+        // early batches, then the stream shifts and it must be reseeded.
+        let mut km = KMeans::from_centroids(vec![0.0, 100.0], 2, 1);
+        let mut rng = Pcg32::seeded(11);
+        let early = [0.0f32, 0.1, 99.9, 100.0, 0.2, 99.8];
+        for _ in 0..4 {
+            km.minibatch_step(&early, 6, &mut rng, 6);
+        }
+        assert!(km.counts[1] > 0.0, "centroid 1 must win points early");
+        assert!(km.centroids[1] > 90.0);
+        // data shifts: everything now lives near 0 and 10 — centroid 1 is dead
+        let late = [0.0f32, 0.2, 9.8, 10.0, 0.1, 9.9];
+        for _ in 0..(4 * STALE_STEPS_BEFORE_RESEED as usize) {
+            km.minibatch_step(&late, 6, &mut rng, 6);
+        }
+        assert!(
+            km.centroids[1] < 50.0,
+            "starved centroid never reseeded: {}",
+            km.centroids[1]
+        );
+        // and after reseeding it should settle on the far sub-cluster
+        assert!(km.distortion(&late, 6) < 1.0);
+    }
+
+    #[test]
+    fn live_clusters_are_not_reseeded_by_one_thin_batch() {
+        // a single empty batch must NOT move an established centroid
+        let mut km = KMeans::from_centroids(vec![0.0, 100.0], 2, 1);
+        let mut rng = Pcg32::seeded(12);
+        let both = [0.1f32, 99.9, 0.0, 100.0];
+        for _ in 0..3 {
+            km.minibatch_step(&both, 4, &mut rng, 4);
+        }
+        // one batch that only samples the left cluster
+        let left_only = [0.0f32, 0.1, 0.2, 0.05];
+        km.minibatch_step(&left_only, 4, &mut rng, 4);
+        assert!(km.centroids[1] > 90.0, "one starved batch moved a live centroid");
     }
 
     #[test]

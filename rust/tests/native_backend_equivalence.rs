@@ -1,0 +1,136 @@
+//! Cross-backend equivalence: a compressed checkpoint served through the
+//! coordinator on the native backend must reproduce `VqModel::forward`
+//! **bit for bit** — including on bucket-padded batches — and the PLI layer
+//! math must agree with `bspline::pli_eval` exactly.
+
+use std::time::Duration;
+
+use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::bspline::pli_eval;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{BackendConfig, BackendSpec};
+use share_kan::vq::{compress, load_compressed, Precision};
+
+/// Serve `n` requests through a native-backend coordinator (forced into one
+/// batch, padded to a bucket) and assert each response row equals the
+/// reference `VqModel::forward` output bitwise.
+fn assert_served_matches_reference(vq_ck: &Checkpoint, batch_sizes: &[usize]) {
+    let head = HeadWeights::from_checkpoint(vq_ck).unwrap();
+    let reference = load_compressed(vq_ck).unwrap();
+    let spec = BackendSpec::for_head(&head).with_buckets(&[1, 4, 8]);
+    let d_in = spec.kan.d_in;
+    let d_out = spec.kan.d_out;
+    let mut rng = Pcg32::seeded(99);
+
+    for &n in batch_sizes {
+        // max_batch == n and a generous deadline, so all n requests land in
+        // one batch padded to the smallest bucket >= n
+        let handle = Coordinator::start(CoordinatorConfig {
+            backend: BackendConfig::Native(spec.clone()),
+            policy: BatchPolicy { max_batch: n, max_wait: Duration::from_millis(200) },
+            queue_capacity: 64,
+        })
+        .unwrap();
+        let c = handle.client.clone();
+        c.add_head("h", HeadWeights::from_checkpoint(vq_ck).unwrap()).unwrap();
+
+        let xs: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d_in, 0.0, 1.0)).collect();
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| c.try_submit("h", x.clone()).unwrap())
+            .collect();
+        let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+        let want = reference.forward(&flat, n);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(resp.error.is_none(), "request failed: {:?}", resp.error);
+            assert_eq!(resp.scores.len(), d_out);
+            for (j, (got, want)) in resp.scores.iter().zip(&want[i * d_out..]).enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "batch n={n} row {i} class {j}: served {got} != reference {want}"
+                );
+            }
+        }
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn fp32_vq_head_served_bit_for_bit() {
+    let spec = KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let ck = synthetic_dense(&spec, 1);
+    let vq_ck = compress(&ck, &spec, 16, Precision::Fp32, 42).unwrap().to_checkpoint();
+    // 3, 5, 7 pad to buckets 4 and 8; 1/4/8 are exact-fit buckets
+    assert_served_matches_reference(&vq_ck, &[1, 3, 4, 5, 7, 8]);
+}
+
+#[test]
+fn int8_vq_head_served_bit_for_bit() {
+    let spec = KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let ck = synthetic_dense(&spec, 2);
+    let vq_ck = compress(&ck, &spec, 16, Precision::Int8, 42).unwrap().to_checkpoint();
+    assert_served_matches_reference(&vq_ck, &[1, 3, 8]);
+}
+
+#[test]
+fn served_scores_match_manual_pli_eval() {
+    // one request through the coordinator == the hand-rolled PLI math:
+    // out[j] = sum_i gain[i,j] * pli_eval(codebook[idx[i,j]], tanh(x_i))
+    // applied layer by layer, with the folded bias added after the sum —
+    // the exact accumulation order of kan::eval::vq_layer.
+    let spec = KanSpec { d_in: 5, d_hidden: 6, d_out: 3, grid_size: 8 };
+    let ck = synthetic_dense(&spec, 3);
+    let vq_ck = compress(&ck, &spec, 12, Precision::Fp32, 7).unwrap().to_checkpoint();
+    let m = load_compressed(&vq_ck).unwrap();
+
+    let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
+    let handle = Coordinator::start(CoordinatorConfig {
+        backend: BackendConfig::Native(BackendSpec::for_head(&head)),
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        queue_capacity: 8,
+    })
+    .unwrap();
+    let c = handle.client.clone();
+    c.add_head("h", head).unwrap();
+
+    let mut rng = Pcg32::seeded(17);
+    let x = rng.normal_vec(spec.d_in, 0.0, 1.0);
+    let resp = c.infer("h", x.clone()).unwrap();
+
+    let layer = |x: &[f32],
+                 codebook: &[f32],
+                 idx: &[i32],
+                 gain: &[f32],
+                 bias_sum: &[f32],
+                 n_in: usize,
+                 n_out: usize,
+                 g: usize| {
+        assert_eq!(x.len(), n_in);
+        let mut out = vec![0f32; n_out];
+        for (i, &xi) in x.iter().enumerate() {
+            let u = xi.tanh();
+            for (j, o) in out.iter_mut().enumerate() {
+                let k = idx[i * n_out + j] as usize;
+                let row = &codebook[k * g..(k + 1) * g];
+                *o += gain[i * n_out + j] * pli_eval(row, u);
+            }
+        }
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += bias_sum[j];
+        }
+        out
+    };
+    let h = layer(&x, &m.codebook0, &m.idx0, &m.gain0, &m.bias_sum0,
+                  m.d_in, m.d_hidden, m.g);
+    let want = layer(&h, &m.codebook1, &m.idx1, &m.gain1, &m.bias_sum1,
+                     m.d_hidden, m.d_out, m.g);
+    assert_eq!(resp.scores.len(), want.len());
+    for (got, want) in resp.scores.iter().zip(&want) {
+        assert_eq!(got.to_bits(), want.to_bits(), "{got} != {want}");
+    }
+    handle.shutdown();
+}

@@ -1,6 +1,10 @@
 //! End-to-end pipeline integration: train (HLO train-step driven from Rust)
 //! -> compress (VQ) -> evaluate (mAP) -> serve.  A miniature of
 //! examples/end_to_end.rs kept small enough for `cargo test`.
+//!
+//! Training drives PJRT train-step artifacts, so this whole file is gated
+//! on the `pjrt` feature (and skips at runtime when artifacts are absent).
+#![cfg(feature = "pjrt")]
 
 use share_kan::data::{standard_splits, Splits};
 use share_kan::eval::mean_average_precision;

@@ -1,8 +1,9 @@
 //! Integration: PJRT artifacts vs the pure-Rust reference evaluator.
 //!
-//! These tests require `make artifacts` to have been run; they skip
-//! (not fail) when artifacts/ is absent so `cargo test` stays runnable on a
-//! fresh checkout.
+//! These tests require the `pjrt` feature and `make artifacts` to have been
+//! run; they skip (not fail) when artifacts/ is absent so `cargo test`
+//! stays runnable on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::eval::{DenseModel, MlpModel, VqModel};

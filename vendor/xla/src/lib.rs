@@ -1,0 +1,169 @@
+//! API-compatible **stub** of the slice of `xla-rs` (PJRT bindings) this
+//! repository uses, so the `pjrt` cargo feature type-checks in environments
+//! without the PJRT toolchain or its AOT artifacts.
+//!
+//! Every entry point that would touch PJRT returns an error at runtime
+//! (`"xla stub: ..."`); nothing here executes HLO.  To actually run the
+//! PJRT backend, replace this path dependency with the real `xla` crate
+//! (e.g. via a `[patch]` section in the workspace manifest) and rebuild
+//! with `--features pjrt`.
+
+use std::borrow::Borrow;
+
+/// Error type matching the call sites' `{e:?}` formatting.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "xla stub: {what} unavailable (built without the real PJRT runtime; \
+         swap vendor/xla for the real xla crate to execute artifacts)"
+    )))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    S8,
+    U8,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Host-side literal value.  The stub can neither create nor read one.
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        stub("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        stub("Literal::shape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        stub("Literal::get_first_element")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_literal")
+    }
+}
