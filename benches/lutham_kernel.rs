@@ -1,18 +1,23 @@
 //! Bench: the LUTHAM forward path per variant and batch bucket, through
 //! the execution-backend trait.  This is the hot path exactly as the
 //! serving coordinator drives it (padded batch in, scores out), on the
-//! pure-Rust native backend — build with `--features pjrt` + real xla
-//! bindings to compare against the AOT artifacts.
+//! pure-Rust native backend AND the arena-resident backend (LUTHAM-planned
+//! tables, bit-packed index decode, zero-alloc `execute_into`) — build with
+//! `--features pjrt` + real xla bindings to compare against AOT artifacts.
 //!
-//! Run: cargo bench --bench lutham_kernel
+//! Results are printed AND written machine-readable to `BENCH_kernel.json`.
+//!
+//! Run: cargo bench --bench lutham_kernel [-- --smoke]
 
 use share_kan::coordinator::HeadWeights;
 use share_kan::data::rng::Pcg32;
 use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
 use share_kan::tensor::Tensor;
-use share_kan::util::bench::Bencher;
+use share_kan::util::bench::{write_results, Bencher};
+use share_kan::util::json::Json;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = BackendSpec::default();
     let (d_in, d_h, d_out) = (spec.kan.d_in, spec.kan.d_hidden, spec.kan.d_out);
     let g = spec.kan.grid_size;
@@ -48,26 +53,45 @@ fn main() {
         }
     };
 
-    let mut backend = BackendConfig::Native(spec).build().unwrap();
-    for (name, head) in [("mlp", &mlp), ("dense_kan", &dense), ("vq_kan_fp32", &vq)] {
-        backend.register_head(name, head).unwrap();
-    }
+    let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut results: Vec<Json> = Vec::new();
 
-    let bencher = Bencher::default();
-    println!("LUTHAM forward path ({} backend, padded batch per bucket)", backend.name());
-    println!("{:-<100}", "");
-    for &bucket in &buckets {
-        let x = rng.normal_vec(bucket * d_in, 0.0, 1.0);
-        for label in ["mlp", "dense_kan", "vq_kan_fp32"] {
-            let r = bencher.run(&format!("{label} b={bucket}"), || {
-                let out = backend.execute(label, &x, bucket).unwrap();
-                std::hint::black_box(&out);
-            });
-            println!(
-                "{}   {:>10.0} samples/s",
-                r.report(),
-                r.throughput(bucket as f64)
-            );
+    for (backend_label, config) in [
+        ("native", BackendConfig::Native(spec.clone())),
+        ("arena", BackendConfig::Arena(spec.clone())),
+    ] {
+        let mut backend = config.build().unwrap();
+        for (name, head) in [("mlp", &mlp), ("dense_kan", &dense), ("vq_kan_fp32", &vq)] {
+            backend.register_head(name, head).unwrap();
+        }
+        println!("LUTHAM forward path ({} backend, padded batch per bucket)", backend.name());
+        println!("{:-<100}", "");
+        // reused output buffer: the arena backend's zero-alloc contract
+        let mut out: Vec<f32> = Vec::new();
+        for &bucket in &buckets {
+            let x = rng.normal_vec(bucket * d_in, 0.0, 1.0);
+            for label in ["mlp", "dense_kan", "vq_kan_fp32"] {
+                let r = bencher.run(&format!("{backend_label}/{label} b={bucket}"), || {
+                    backend.execute_into(label, &x, bucket, &mut out).unwrap();
+                    std::hint::black_box(&out);
+                });
+                println!(
+                    "{}   {:>10.0} samples/s",
+                    r.report(),
+                    r.throughput(bucket as f64)
+                );
+                let mut j = r.to_json();
+                if let Json::Obj(ref mut m) = j {
+                    m.insert("backend".into(), Json::str(backend_label));
+                    m.insert("variant".into(), Json::str(label));
+                    m.insert("bucket".into(), Json::num(bucket as f64));
+                    m.insert("samples_per_s".into(), Json::num(r.throughput(bucket as f64)));
+                }
+                results.push(j);
+            }
         }
     }
+
+    write_results("BENCH_kernel.json", "lutham_kernel", results).unwrap();
+    println!("wrote BENCH_kernel.json");
 }

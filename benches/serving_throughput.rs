@@ -1,19 +1,99 @@
 //! Bench: end-to-end serving throughput through the coordinator (batching +
-//! routing + backend execution), per head variant and batching policy, on
-//! the native backend.
+//! routing + backend execution), per head variant, batching policy and
+//! backend (native vs arena), plus a multi-head workload comparing ONE
+//! executor against the sharded executor pool.
 //!
-//! Run: cargo bench --bench serving_throughput
+//! Results are printed AND written machine-readable to `BENCH_serving.json`
+//! so the perf trajectory is tracked across PRs.
+//!
+//! Run: cargo bench --bench serving_throughput [-- --smoke]
 
-use std::time::Duration;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
 
-use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, InferResponse,
+    PoolConfig,
+};
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::synthetic_dense;
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::runtime::{BackendConfig, BackendSpec};
+use share_kan::util::bench::write_results;
+use share_kan::util::json::Json;
 use share_kan::vq::{compress, Precision};
 
+/// One client handle over either deployment shape.
+#[derive(Clone)]
+enum Client {
+    Single(Coordinator),
+    Pool(ExecutorPool),
+}
+
+impl Client {
+    fn try_submit(&self, head: &str, features: Vec<f32>)
+                  -> anyhow::Result<Receiver<InferResponse>> {
+        match self {
+            Client::Single(c) => c.try_submit(head, features),
+            Client::Pool(p) => p.try_submit(head, features),
+        }
+    }
+
+    fn infer(&self, head: &str, features: Vec<f32>) -> anyhow::Result<InferResponse> {
+        match self {
+            Client::Single(c) => c.infer(head, features),
+            Client::Pool(p) => p.infer(head, features),
+        }
+    }
+}
+
+/// Closed-loop load: `threads` clients, round-robin across `heads`,
+/// windowed pipelining.  Returns sustained requests/second.
+fn drive(client: &Client, heads: &[String], d_in: usize, total: usize,
+         threads: usize) -> f64 {
+    // warmup: touch every head so registration costs are off the clock
+    let mut rng = Pcg32::seeded(3);
+    for head in heads {
+        for _ in 0..16 {
+            let _ = client.infer(head, rng.normal_vec(d_in, 0.0, 1.0));
+        }
+    }
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let c = client.clone();
+        let heads = heads.to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seeded(7 + t as u64);
+            let mut pending = Vec::new();
+            for i in 0..total / threads {
+                let head = &heads[(i + t) % heads.len()];
+                if let Ok(rx) = c.try_submit(head, rng.normal_vec(d_in, 0.0, 1.0)) {
+                    pending.push(rx);
+                }
+                if pending.len() >= 64 {
+                    for rx in pending.drain(..) {
+                        let _ = rx.recv();
+                    }
+                }
+            }
+            for rx in pending {
+                let _ = rx.recv();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = KanSpec::default();
     // synthetic dense head so the served weights have realistic shapes
     let dense_ck = synthetic_dense(&spec, 42);
@@ -25,66 +105,132 @@ fn main() {
         ("vq_int8", HeadWeights::from_checkpoint(
             &compress(&dense_ck, &spec, k, Precision::Int8, 1).unwrap().to_checkpoint()).unwrap()),
     ];
-
-    println!("serving throughput: 2000 closed-loop requests, 4 client threads (native backend)");
-    println!("{:-<100}", "");
-    for (label, head) in heads {
-        for (pol_label, policy) in [
+    let n_requests = if smoke { 200 } else { 2000 };
+    let policies: Vec<(&str, BatchPolicy)> = if smoke {
+        vec![("batch<=32/1ms", BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) })]
+    } else {
+        vec![
             ("batch<=8/0.5ms", BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) }),
             ("batch<=32/1ms", BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) }),
             ("batch<=128/2ms", BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(2) }),
+        ]
+    };
+    let mut results: Vec<Json> = Vec::new();
+
+    println!("serving throughput: {n_requests} closed-loop requests, 4 client threads");
+    println!("{:-<100}", "");
+    for (label, head) in &heads {
+        for (backend_label, backend) in [
+            ("native", BackendConfig::Native(BackendSpec::default())),
+            ("arena", BackendConfig::Arena(BackendSpec::default())),
         ] {
-            let handle = Coordinator::start(CoordinatorConfig {
-                backend: BackendConfig::Native(BackendSpec::default()),
-                policy,
-                queue_capacity: 4096,
-            })
-            .unwrap();
-            let c = handle.client.clone();
-            c.add_head("h", head.clone()).unwrap();
-            // warmup
-            let mut rng = Pcg32::seeded(3);
-            for _ in 0..64 {
-                let _ = c.infer("h", rng.normal_vec(spec.d_in, 0.0, 1.0));
+            for (pol_label, policy) in &policies {
+                let handle = Coordinator::start(CoordinatorConfig {
+                    backend: backend.clone(),
+                    policy: *policy,
+                    queue_capacity: 4096,
+                })
+                .unwrap();
+                let c = handle.client.clone();
+                c.add_head("h", head.clone()).unwrap();
+                let client = Client::Single(c.clone());
+                let req_s = drive(&client, &["h".to_string()], spec.d_in, n_requests, 4);
+                let m = c.metrics();
+                println!(
+                    "{label:<10} {backend_label:<7} {pol_label:<16} {req_s:>8.0} req/s   p50 {:>9?}  p95 {:>9?}  mean batch {:>5.1}  pad {:>4.1}%",
+                    m.latency.percentile(0.5),
+                    m.latency.percentile(0.95),
+                    m.counters.mean_batch_size(),
+                    100.0 * m.counters.padding_fraction(),
+                );
+                results.push(Json::obj(vec![
+                    ("name", Json::str(format!("serving/{label}/{backend_label}/{pol_label}"))),
+                    ("variant", Json::str(*label)),
+                    ("backend", Json::str(backend_label)),
+                    ("policy", Json::str(*pol_label)),
+                    ("req_per_s", Json::num(req_s)),
+                    ("p50_us", Json::num(us(m.latency.percentile(0.5)))),
+                    ("p95_us", Json::num(us(m.latency.percentile(0.95)))),
+                    ("mean_batch", Json::num(m.counters.mean_batch_size())),
+                    ("padding_fraction", Json::num(m.counters.padding_fraction())),
+                ]));
+                handle.shutdown();
             }
-            let n = 2000usize;
-            let t0 = std::time::Instant::now();
-            let mut joins = Vec::new();
-            for t in 0..4u64 {
-                let c = c.clone();
-                let d_in = spec.d_in;
-                joins.push(std::thread::spawn(move || {
-                    let mut rng = Pcg32::seeded(7 + t);
-                    let mut pending = Vec::new();
-                    for _ in 0..n / 4 {
-                        if let Ok(rx) = c.try_submit("h", rng.normal_vec(d_in, 0.0, 1.0)) {
-                            pending.push(rx);
-                        }
-                        if pending.len() >= 64 {
-                            for rx in pending.drain(..) {
-                                let _ = rx.recv();
-                            }
-                        }
-                    }
-                    for rx in pending {
-                        let _ = rx.recv();
-                    }
-                }));
-            }
-            for j in joins {
-                j.join().unwrap();
-            }
-            let dt = t0.elapsed();
-            let m = c.metrics();
-            println!(
-                "{label:<12} {pol_label:<16} {:>8.0} req/s   p50 {:>9?}  p95 {:>9?}  mean batch {:>5.1}  pad {:>4.1}%",
-                n as f64 / dt.as_secs_f64(),
-                m.latency.percentile(0.5),
-                m.latency.percentile(0.95),
-                m.counters.mean_batch_size(),
-                100.0 * m.counters.padding_fraction(),
-            );
-            handle.shutdown();
         }
     }
+
+    // ---- multi-head workload: one executor vs the sharded pool ----------
+    let n_heads = 4usize;
+    let shards = 4usize;
+    let threads = 8usize;
+    let pool_requests = if smoke { 400 } else { 4000 };
+    let head_names: Vec<String> = (0..n_heads).map(|i| format!("task{i}")).collect();
+    let multi_heads: Vec<HeadWeights> = (0..n_heads)
+        .map(|i| {
+            HeadWeights::from_checkpoint(
+                &compress(&dense_ck, &spec, k, Precision::Int8, 100 + i as u64)
+                    .unwrap()
+                    .to_checkpoint(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) };
+
+    println!("{:-<100}", "");
+    println!(
+        "multi-head workload: {n_heads} int8 heads, {pool_requests} requests, {threads} client threads (arena backend)"
+    );
+
+    let single = Coordinator::start(CoordinatorConfig {
+        backend: BackendConfig::Arena(BackendSpec::default()),
+        policy,
+        queue_capacity: 4096,
+    })
+    .unwrap();
+    for (name, head) in head_names.iter().zip(&multi_heads) {
+        single.client.add_head(name, head.clone()).unwrap();
+    }
+    let single_req_s = drive(&Client::Single(single.client.clone()), &head_names,
+                             spec.d_in, pool_requests, threads);
+    println!("single executor           {single_req_s:>8.0} req/s");
+    single.shutdown();
+
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(BackendSpec::default()),
+        policy,
+        queue_capacity: 4096,
+        num_shards: shards,
+    })
+    .unwrap();
+    for (name, head) in head_names.iter().zip(&multi_heads) {
+        pool.client.add_head(name, head.clone()).unwrap();
+    }
+    let pool_req_s = drive(&Client::Pool(pool.client.clone()), &head_names,
+                           spec.d_in, pool_requests, threads);
+    let agg = pool.client.aggregated_metrics();
+    println!(
+        "executor pool ({shards} shards)  {pool_req_s:>8.0} req/s   speedup {:>5.2}x   agg p95 {:?}",
+        pool_req_s / single_req_s.max(1e-9),
+        agg.latency.percentile(0.95),
+    );
+    pool.shutdown();
+
+    results.push(Json::obj(vec![
+        ("name", Json::str("multi_head/single_executor")),
+        ("req_per_s", Json::num(single_req_s)),
+        ("heads", Json::num(n_heads as f64)),
+        ("threads", Json::num(threads as f64)),
+    ]));
+    results.push(Json::obj(vec![
+        ("name", Json::str("multi_head/pool")),
+        ("req_per_s", Json::num(pool_req_s)),
+        ("shards", Json::num(shards as f64)),
+        ("heads", Json::num(n_heads as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("speedup_vs_single", Json::num(pool_req_s / single_req_s.max(1e-9))),
+    ]));
+
+    write_results("BENCH_serving.json", "serving_throughput", results).unwrap();
+    println!("wrote BENCH_serving.json");
 }

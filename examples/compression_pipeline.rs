@@ -58,7 +58,8 @@ fn main() -> anyhow::Result<()> {
 
     // step 3: the static memory plan for the chosen config (LUTHAM §4.3)
     let k = VqSpec::default().codebook_size;
-    let plan = plan_vq_head(&spec, &VqSpec { codebook_size: k }, Precision::Int8, 128);
+    let plan = plan_vq_head(&spec, &VqSpec { codebook_size: k }, Precision::Int8, 128)
+        .map_err(|e| anyhow::anyhow!(e))?;
     plan.validate().map_err(|e| anyhow::anyhow!(e))?;
     println!("\nstatic memory plan (K={k}, int8, max batch 128):");
     for b in &plan.buffers {

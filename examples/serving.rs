@@ -1,13 +1,16 @@
 //! Multi-head hot-swap serving demo (paper §1 "Deployment Context" and
 //! §6.2 "Scalable Mixtures of Experts"): many lightweight compressed heads
 //! share one serving stack; heads register and retire while traffic flows.
-//! Runs entirely on the native backend — no artifacts required.
+//! Serves through the **sharded executor pool** on the **arena backend** —
+//! every head's tables live in one LUTHAM-planned 256-byte-aligned arena
+//! (bit-packed indices, Int8 codebooks/gains) on its owning shard, and the
+//! per-batch hot path allocates nothing.  No artifacts required.
 //!
 //! Run: cargo run --release --example serving
 
 use std::time::Duration;
 
-use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::coordinator::{BatchPolicy, ExecutorPool, HeadWeights, PoolConfig};
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::synthetic_dense;
 use share_kan::kan::spec::{KanSpec, VqSpec};
@@ -17,6 +20,7 @@ use share_kan::vq::{compress, Precision};
 fn main() -> anyhow::Result<()> {
     let spec = KanSpec::default();
     let n_heads = 6usize;
+    let n_shards = 2usize;
 
     // Build N task heads: one shared base, then per-task compression with
     // different seeds (stand-ins for per-task fine-tunes; a pjrt build can
@@ -32,16 +36,19 @@ fn main() -> anyhow::Result<()> {
     println!("{n_heads} heads, {} bytes total ({} bytes/head marginal cost)",
              total_bytes, total_bytes / n_heads);
 
-    let handle = Coordinator::start(CoordinatorConfig {
-        backend: BackendConfig::Native(BackendSpec::default()),
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(BackendSpec::default()),
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         queue_capacity: 2048,
+        num_shards: n_shards,
     })?;
-    let client = handle.client.clone();
+    let client = pool.client.clone();
     for (i, ck) in head_cks.iter().enumerate() {
-        client.add_head(&format!("task{i}"), HeadWeights::from_checkpoint(ck)?)?;
+        let name = format!("task{i}");
+        client.add_head(&name, HeadWeights::from_checkpoint(ck)?)?;
+        println!("  {name} -> shard {} (deterministic routing)", client.shard_for(&name));
     }
-    println!("all heads registered; driving mixed traffic...");
+    println!("all heads registered across {n_shards} arena-backend shards; driving mixed traffic...");
 
     // mixed traffic across heads from 3 client threads
     let mut joins = Vec::new();
@@ -61,21 +68,23 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
-    // hot-swap while traffic flows: retire task5, register task6
+    // hot-swap while traffic flows: retire task5, register task6 — each
+    // operation only touches the owning shard
     std::thread::sleep(Duration::from_millis(300));
     client.remove_head("task5")?;
     client.add_head("task6", HeadWeights::from_checkpoint(&head_cks[0])?)?;
-    println!("hot-swapped task5 -> task6 mid-traffic");
+    println!("hot-swapped task5 -> task6 mid-traffic (shards {} -> {})",
+             client.shard_for("task5"), client.shard_for("task6"));
 
     let served: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
-    let m = client.metrics();
+    let m = client.aggregated_metrics();
     println!("served {served}/1800 (task5 removals surface as clean errors)");
-    println!("latency {}", m.latency.summary());
+    println!("latency (aggregated over shards) {}", m.latency.summary());
     println!("mean batch {:.1}", m.counters.mean_batch_size());
     // requests to the new head work
     let mut rng = Pcg32::seeded(99);
     assert!(client.infer("task6", rng.normal_vec(spec.d_in, 0.0, 1.0)).is_ok());
     println!("serving demo OK");
-    handle.shutdown();
+    pool.shutdown();
     Ok(())
 }

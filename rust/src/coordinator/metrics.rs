@@ -76,6 +76,19 @@ impl LatencyHistogram {
         self.max()
     }
 
+    /// Fold another histogram's samples into this one (shard aggregation
+    /// for the executor pool).  Bucket counts, totals and the max combine
+    /// exactly; percentiles of the merged histogram are computed over the
+    /// union of samples.
+    pub fn merge_from(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:?} p50={:?} p95={:?} p99={:?} max={:?}",
@@ -101,6 +114,20 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Fold another counter set into this one (shard aggregation).
+    pub fn merge_from(&self, other: &Counters) {
+        for (mine, theirs) in [
+            (&self.requests, &other.requests),
+            (&self.responses, &other.responses),
+            (&self.batches, &other.batches),
+            (&self.batched_items, &other.batched_items),
+            (&self.padded_slots, &other.padded_slots),
+            (&self.rejected, &other.rejected),
+        ] {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -171,6 +198,31 @@ mod tests {
         c.padded_slots.store(12, Ordering::Relaxed);
         assert_eq!(c.mean_batch_size(), 5.0);
         assert!((c.padding_fraction() - 12.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_combines_shard_histograms() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        for us in [10u64, 100, 1000] {
+            a.record(Duration::from_micros(us));
+        }
+        for us in [50u64, 5000] {
+            b.record(Duration::from_micros(us));
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max(), Duration::from_micros(5000));
+        // mean over the union: (10+100+1000+50+5000)/5 us
+        assert_eq!(a.mean(), Duration::from_micros(6160 / 5));
+        let c = Counters::default();
+        let d = Counters::default();
+        c.requests.store(3, Ordering::Relaxed);
+        d.requests.store(4, Ordering::Relaxed);
+        d.rejected.store(1, Ordering::Relaxed);
+        c.merge_from(&d);
+        assert_eq!(c.requests.load(Ordering::Relaxed), 7);
+        assert_eq!(c.rejected.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! L3 serving coordinator (the paper's deployment story): bounded admission,
-//! dynamic batching to AOT buckets, hot-swappable compressed heads, metrics.
+//! dynamic batching to AOT buckets, hot-swappable compressed heads, metrics,
+//! and a sharded executor pool ([`pool`]) for horizontal scale-out.
 
 pub mod batcher;
 pub mod heads;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod server;
 pub mod tcp;
@@ -12,6 +14,7 @@ pub mod workload;
 pub use batcher::{Batch, BatchPolicy, PendingQueue};
 pub use heads::HeadWeights;
 pub use metrics::{Counters, LatencyHistogram};
+pub use pool::{ExecutorPool, PoolConfig, PoolHandle};
 pub use request::{InferRequest, InferResponse};
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
 pub use tcp::{TcpClient, TcpServer};

@@ -1,0 +1,176 @@
+//! Sharded executor pool: N independent executor shards behind one client
+//! handle (the horizontal scale-out of the single vLLM-style engine loop,
+//! toward the ROADMAP's "heavy traffic from millions of users").
+//!
+//! Each shard is a full [`Coordinator`] — its own executor thread, its own
+//! backend instance (constructed from a cloned [`BackendConfig`]), its own
+//! admission queue and batcher.  Heads are routed to shards by a
+//! **deterministic** FNV-1a hash of the head name, so every client handle
+//! (and every restart with the same shard count) agrees on head placement;
+//! hot-swap (`add_head`/`remove_head`) is shard-aware and only touches the
+//! owning executor.  Requests inherit the owning shard's batching and
+//! backpressure; metrics aggregate across shards on demand.
+//!
+//! Because a head lives on exactly one shard, a pooled deployment is
+//! **bitwise identical** to a single executor serving the same heads
+//! (pinned by `rust/tests/pool_integration.rs`) — sharding changes only
+//! how much traffic the pool sustains, never what it computes.
+
+use anyhow::Result;
+use std::sync::mpsc::Receiver;
+
+use super::batcher::BatchPolicy;
+use super::heads::HeadWeights;
+use super::metrics::{Counters, LatencyHistogram};
+use super::request::InferResponse;
+use super::server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
+use crate::runtime::BackendConfig;
+
+pub struct PoolConfig {
+    /// backend recipe each shard builds its own instance from
+    pub backend: BackendConfig,
+    pub policy: BatchPolicy,
+    /// bounded admission queue depth **per shard**
+    pub queue_capacity: usize,
+    pub num_shards: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            backend: BackendConfig::default(),
+            policy: BatchPolicy::default(),
+            queue_capacity: 1024,
+            num_shards: 4,
+        }
+    }
+}
+
+/// Client handle over the shard set; cloneable across threads.
+#[derive(Clone)]
+pub struct ExecutorPool {
+    shards: Vec<Coordinator>,
+}
+
+/// Owner handle that joins every shard executor on drop.
+pub struct PoolHandle {
+    pub client: ExecutorPool,
+    handles: Vec<CoordinatorHandle>,
+}
+
+/// FNV-1a over the head name: stable across processes and handles, so
+/// head→shard placement is a pure function of (name, num_shards).
+fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ExecutorPool {
+    /// Start `num_shards` executor shards.  Fails (cleanly shutting down
+    /// the shards already started) if any backend fails to construct.
+    pub fn start(cfg: PoolConfig) -> Result<PoolHandle> {
+        anyhow::ensure!(cfg.num_shards >= 1, "pool needs at least one shard");
+        let mut handles = Vec::with_capacity(cfg.num_shards);
+        let mut shards = Vec::with_capacity(cfg.num_shards);
+        for _ in 0..cfg.num_shards {
+            let handle = Coordinator::start(CoordinatorConfig {
+                backend: cfg.backend.clone(),
+                policy: cfg.policy,
+                queue_capacity: cfg.queue_capacity,
+            })?;
+            shards.push(handle.client.clone());
+            handles.push(handle);
+        }
+        Ok(PoolHandle { client: ExecutorPool { shards }, handles })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard that owns `head` (deterministic routing).
+    pub fn shard_for(&self, head: &str) -> usize {
+        (fnv1a(head) % self.shards.len() as u64) as usize
+    }
+
+    /// Direct access to one shard's coordinator (tests, per-shard metrics).
+    pub fn shard(&self, i: usize) -> &Coordinator {
+        &self.shards[i]
+    }
+
+    /// Register (or hot-swap replace) a head on its owning shard.
+    pub fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
+        self.shards[self.shard_for(name)].add_head(name, weights)
+    }
+
+    /// Unregister a head from its owning shard; returns whether it existed.
+    pub fn remove_head(&self, name: &str) -> Result<bool> {
+        self.shards[self.shard_for(name)].remove_head(name)
+    }
+
+    /// Submit a request to the owning shard; per-shard backpressure.
+    pub fn try_submit(&self, head: &str, features: Vec<f32>)
+                      -> Result<Receiver<InferResponse>> {
+        self.shards[self.shard_for(head)].try_submit(head, features)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
+        self.shards[self.shard_for(head)].infer(head, features)
+    }
+
+    /// Aggregate metrics across all shards into a fresh snapshot
+    /// (histograms merged sample-exactly, counters summed).
+    pub fn aggregated_metrics(&self) -> Metrics {
+        let agg = Metrics {
+            latency: LatencyHistogram::new(),
+            exec_latency: LatencyHistogram::new(),
+            counters: Counters::default(),
+        };
+        for shard in &self.shards {
+            let m = shard.metrics();
+            agg.latency.merge_from(&m.latency);
+            agg.exec_latency.merge_from(&m.exec_latency);
+            agg.counters.merge_from(&m.counters);
+        }
+        agg
+    }
+}
+
+impl PoolHandle {
+    /// Graceful shutdown: stop and join every shard executor.
+    pub fn shutdown(self) {
+        for h in self.handles {
+            h.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_is_stable_and_spreads() {
+        // pinned values: routing must never change silently across PRs
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        // a family of head names should not all land on one shard
+        let shards = 4u64;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..32 {
+            seen.insert(fnv1a(&format!("task{i}")) % shards);
+        }
+        assert!(seen.len() > 1, "degenerate routing: {seen:?}");
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let cfg = PoolConfig { num_shards: 0, ..PoolConfig::default() };
+        assert!(ExecutorPool::start(cfg).is_err());
+    }
+}

@@ -200,8 +200,11 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
     let max_bucket = buckets.iter().copied().max().unwrap_or(1);
     let d_in_cap = backend.spec().kan.d_in.max(1);
     let mut heads: HashMap<String, HeadState> = HashMap::new();
-    // padded feature scratch, reused across batches (zero-alloc hot loop)
+    // padded feature scratch + score output, reused across batches so the
+    // batch hot loop allocates nothing (arena backends stay zero-alloc
+    // end-to-end up to the per-request response rows)
     let mut scratch: Vec<f32> = vec![0.0; max_bucket * d_in_cap];
+    let mut out_scratch: Vec<f32> = Vec::new();
 
     let tick = Duration::from_micros(200).min(cfg.policy.max_wait.max(Duration::from_micros(50)));
     loop {
@@ -246,7 +249,8 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
         let now = Instant::now();
         for (name, state) in heads.iter_mut() {
             while let Some(batch) = state.queue.try_close(&cfg.policy, &buckets, now) {
-                execute_batch(backend.as_mut(), name, state, batch, &mut scratch, &metrics);
+                execute_batch(backend.as_mut(), name, state, batch, &mut scratch,
+                              &mut out_scratch, &metrics);
             }
         }
     }
@@ -319,7 +323,7 @@ fn fail_all(heads: &mut HashMap<String, HeadState>, why: &str) {
 }
 
 fn execute_batch(backend: &mut dyn Backend, name: &str, state: &mut HeadState, batch: Batch,
-                 scratch: &mut [f32], metrics: &Metrics) {
+                 scratch: &mut [f32], out_scratch: &mut Vec<f32>, metrics: &Metrics) {
     let bucket = batch.bucket;
     let d_in = state.d_in;
     let n = batch.requests.len();
@@ -330,20 +334,20 @@ fn execute_batch(backend: &mut dyn Backend, name: &str, state: &mut HeadState, b
         pad[i * d_in..(i + 1) * d_in].copy_from_slice(&req.features);
     }
     let t0 = Instant::now();
-    let result = backend.execute(name, pad, bucket);
+    let result = backend.execute_into(name, pad, bucket, out_scratch);
     let exec_t = t0.elapsed();
     metrics.exec_latency.record(exec_t);
     metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
     metrics.counters.batched_items.fetch_add(n as u64, Ordering::Relaxed);
     metrics.counters.padded_slots.fetch_add((bucket - n) as u64, Ordering::Relaxed);
     match result {
-        Ok(scores) => {
+        Ok(()) => {
             let d_out = state.d_out;
             for (i, req) in batch.requests.into_iter().enumerate() {
                 let latency = req.enqueued.elapsed();
                 metrics.latency.record(latency);
                 metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
-                let row = scores[i * d_out..(i + 1) * d_out].to_vec();
+                let row = out_scratch[i * d_out..(i + 1) * d_out].to_vec();
                 let _ = req.resp.send(InferResponse::ok(req.id, row, latency));
             }
         }

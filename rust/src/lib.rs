@@ -31,6 +31,19 @@
 //! `VqModel::forward`, bit for bit) is pinned by
 //! `rust/tests/native_backend_equivalence.rs`.
 
+// Style lints that conflict with the deliberately explicit, paper-faithful
+// kernel idiom used throughout (index-driven loop nests that mirror the
+// CUDA/Pallas kernels, ceil-div spelled out as in Eq. 3, wide kernel
+// signatures): allowed crate-wide so the clippy CI job can stay at
+// `-D warnings` without churning the numerics code.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_div_ceil,
+    clippy::manual_range_contains,
+    clippy::too_many_arguments,
+    clippy::useless_vec
+)]
+
 pub mod coordinator;
 pub mod data;
 pub mod eval;

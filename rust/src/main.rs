@@ -7,9 +7,10 @@
 //!   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
 //!   inspect  --in ck.skpt
 //!   eval     --in ck.skpt [--split test|coco] [--seed 42]
-//!   serve    --head ck.skpt [--backend native|pjrt] [--requests 1000]
-//!            [--max-batch 128] [--max-wait-ms 2] [--tcp ADDR]
-//!   plan     [--k 512] [--int8] [--max-batch 128]
+//!   serve    --head ck.skpt [--backend native|arena|pjrt] [--shards N]
+//!            [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+//!            [--tcp ADDR]
+//!   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
 //!
 //! The default build serves everything through the pure-Rust native
 //! backend — no Python, no PJRT, no artifacts/ directory.  With
@@ -20,12 +21,14 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
-use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, PoolConfig,
+};
 use share_kan::data::{standard_splits, Pcg32};
 use share_kan::eval::mean_average_precision;
 use share_kan::kan::checkpoint::Checkpoint;
 use share_kan::kan::spec::{KanSpec, VqSpec};
-use share_kan::memplan::plan_vq_head;
+use share_kan::memplan::{plan_head, plan_vq_head};
 use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::util::cli::Args;
 use share_kan::vq::{compress, load_compressed, Precision};
@@ -35,8 +38,8 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
   inspect  --in ck.skpt
   eval     --in ck.skpt [--split test|coco] [--seed 42]
-  serve    --head ck.skpt [--backend native|pjrt] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
-  plan     [--k 512] [--int8] [--max-batch 128]
+  serve    --head ck.skpt [--backend native|arena|pjrt] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+  plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
 
 fn main() {
@@ -189,25 +192,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let d_in = head_spec.kan.d_in;
     let backend = match args.get_or("backend", "native").as_str() {
         "native" => BackendConfig::Native(head_spec),
+        "arena" => BackendConfig::Arena(head_spec),
         #[cfg(feature = "pjrt")]
         "pjrt" => BackendConfig::Pjrt { artifacts_dir: artifacts_dir(args) },
         other => anyhow::bail!(
-            "unknown backend '{other}' (native{})",
+            "unknown backend '{other}' (native|arena{})",
             if cfg!(feature = "pjrt") { "|pjrt" } else { "; rebuild with --features pjrt for pjrt" }
         ),
     };
-    println!("serving head '{}' ({} weight bytes) on the {} backend",
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 128),
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
+    };
+    let shards = args.get_usize("shards", 1);
+    println!("serving head '{}' ({} weight bytes) on the {} backend, {shards} executor shard(s)",
              head.model(),
              head.weight_bytes(),
              args.get_or("backend", "native"));
-    let handle = Coordinator::start(CoordinatorConfig {
-        backend,
-        policy: BatchPolicy {
-            max_batch: args.get_usize("max-batch", 128),
-            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
-        },
-        queue_capacity: 4096,
-    })?;
+
+    if shards > 1 {
+        anyhow::ensure!(
+            args.get("tcp").is_none(),
+            "--tcp currently serves through a single executor; drop --shards"
+        );
+        let pool = ExecutorPool::start(PoolConfig {
+            backend,
+            policy,
+            queue_capacity: 4096,
+            num_shards: shards,
+        })?;
+        let c = pool.client.clone();
+        // a single served head would hash to ONE shard under name routing
+        // and leave the rest idle, so the CLI replicates it across every
+        // shard and spreads the synthetic load round-robin (multi-head
+        // deployments use c.add_head and get deterministic name routing)
+        for s in 0..shards {
+            c.shard(s).add_head("default", head.clone())?;
+        }
+        println!("head 'default' replicated on all {shards} shards; load spread round-robin");
+        let n = args.get_usize("requests", 1000);
+        let mut rng = Pcg32::seeded(9);
+        let t0 = std::time::Instant::now();
+        let mut pending = Vec::new();
+        for i in 0..n {
+            pending.push(
+                c.shard(i % shards)
+                    .try_submit("default", rng.normal_vec(d_in, 0.0, 1.0))?,
+            );
+            if pending.len() >= 256 {
+                for rx in pending.drain(..) {
+                    rx.recv().ok();
+                }
+            }
+        }
+        for rx in pending {
+            rx.recv().ok();
+        }
+        let dt = t0.elapsed();
+        let m = c.aggregated_metrics();
+        println!("{n} requests in {dt:?} -> {:.0} req/s", n as f64 / dt.as_secs_f64());
+        println!("latency (all shards): {}", m.latency.summary());
+        pool.shutdown();
+        return Ok(());
+    }
+
+    let handle = Coordinator::start(CoordinatorConfig { backend, policy, queue_capacity: 4096 })?;
     let c = handle.client.clone();
     c.add_head("default", head)?;
     if let Some(addr) = args.get("tcp") {
@@ -248,11 +297,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
+    let max_batch = args.get_usize("max-batch", 128);
+    // --head: plan the *runtime* arena layout of an actual checkpoint (the
+    // exact layout ArenaBackend materializes: bit-packed indices et al.)
+    if let Some(path) = args.get("head") {
+        let ck = Checkpoint::load(&PathBuf::from(path))?;
+        let head = HeadWeights::from_checkpoint(&ck)?;
+        // reject malformed/adversarial checkpoints (wrong-rank tensors,
+        // inconsistent shapes) before planning, like registration does
+        head.validate(&head.implied_kan_spec(), head.implied_codebook_size())?;
+        let plan = plan_head(&head, max_batch).map_err(|e| anyhow::anyhow!(e))?;
+        plan.validate().map_err(|e| anyhow::anyhow!(e))?;
+        println!("LUTHAM arena plan for '{}' (max batch {max_batch}):", head.model());
+        for b in &plan.buffers {
+            println!("  {:<18} offset {:>10}  size {:>10}", b.name, b.offset, b.size);
+        }
+        println!("total arena: {} bytes — one 256-byte-aligned allocation, \
+                  zero malloc on the serve path", plan.total_bytes);
+        return Ok(());
+    }
     let spec = KanSpec::default();
     let vq = VqSpec { codebook_size: args.get_usize("k", VqSpec::default().codebook_size) };
     let precision = if args.flag("int8") { Precision::Int8 } else { Precision::Fp32 };
-    let max_batch = args.get_usize("max-batch", 128);
-    let plan = plan_vq_head(&spec, &vq, precision, max_batch);
+    let plan = plan_vq_head(&spec, &vq, precision, max_batch)
+        .map_err(|e| anyhow::anyhow!(e))?;
     plan.validate().map_err(|e| anyhow::anyhow!(e))?;
     println!("LUTHAM static memory plan ({precision:?}, K={}, max batch {max_batch}):",
              vq.codebook_size);
@@ -263,7 +331,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
              plan.total_bytes);
     // paper-scale echo (Eq. 6)
     let paper = plan_vq_head(&KanSpec { grid_size: 10, ..KanSpec::paper_scale() },
-                             &VqSpec { codebook_size: 65536 }, Precision::Int8, 1);
+                             &VqSpec { codebook_size: 65536 }, Precision::Int8, 1)
+        .map_err(|e| anyhow::anyhow!(e))?;
     let cb = paper.lookup("layer0/codebook").unwrap();
     println!("paper-scale check: per-layer Int8 codebook = {} bytes (paper Eq. 6: 655 KB)",
              cb.size);

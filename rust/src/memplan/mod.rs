@@ -5,14 +5,33 @@
 //! compile-time-known size, so the planner lays them out in one arena at
 //! load time and the hot path performs **zero allocations** — the property
 //! the paper needs for safety-certified deployment (ISO 26262).
+//!
+//! The plan is consumed for real by `runtime::arena::ArenaBackend`, which
+//! materializes every head table at the planner-assigned offsets of one
+//! contiguous 256-byte-aligned arena ([`Arena`]) and serves batches out of
+//! it without touching the allocator.  All planner arithmetic is checked:
+//! adversarial sizes produce a clean `Err`, never an overflow panic.
 
+use std::collections::HashMap;
+
+use crate::coordinator::heads::HeadWeights;
 use crate::kan::spec::{KanSpec, VqSpec};
 use crate::vq::storage::{codebook_bytes_per_layer, Precision};
 
 pub const ALIGN: usize = 256; // GPU-friendly alignment, also cache-line safe
 
-fn align_up(x: usize, a: usize) -> usize {
-    (x + a - 1) / a * a
+/// Round `x` up to a multiple of `a`; `None` on overflow (checked — the
+/// planner must reject adversarial sizes with an error, not wrap).
+pub fn checked_align_up(x: usize, a: usize) -> Option<usize> {
+    if a == 0 {
+        return None;
+    }
+    let rem = x % a;
+    if rem == 0 {
+        Some(x)
+    } else {
+        x.checked_add(a - rem)
+    }
 }
 
 /// One planned buffer.
@@ -24,15 +43,28 @@ pub struct PlannedBuffer {
 }
 
 /// The static plan: named, aligned, non-overlapping offsets in one arena.
+/// Name lookups go through a prebuilt offset index (the serve path resolves
+/// every buffer at head-registration time; no linear scans).
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub buffers: Vec<PlannedBuffer>,
     pub total_bytes: usize,
+    index: HashMap<String, usize>,
 }
 
 impl Plan {
+    /// Build a plan from explicit buffers, constructing the name index.
+    pub fn new(buffers: Vec<PlannedBuffer>, total_bytes: usize) -> Plan {
+        let index = buffers
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.clone(), i))
+            .collect();
+        Plan { buffers, total_bytes, index }
+    }
+
     pub fn lookup(&self, name: &str) -> Option<&PlannedBuffer> {
-        self.buffers.iter().find(|b| b.name == name)
+        self.index.get(name).map(|&i| &self.buffers[i])
     }
 
     /// Planner invariant checks (also exercised by property tests).
@@ -47,16 +79,24 @@ impl Plan {
             if b.offset < prev_end {
                 return Err(format!("{} overlaps previous buffer", b.name));
             }
-            prev_end = b.offset + b.size;
+            prev_end = b
+                .offset
+                .checked_add(b.size)
+                .ok_or_else(|| format!("{} end overflows", b.name))?;
         }
         if prev_end > self.total_bytes {
             return Err("total_bytes too small".into());
+        }
+        for (i, b) in self.buffers.iter().enumerate() {
+            if self.index.get(&b.name) != Some(&i) {
+                return Err(format!("{} missing from the offset index", b.name));
+            }
         }
         Ok(())
     }
 }
 
-/// Sequential bump planner.
+/// Sequential bump planner with checked arithmetic.
 #[derive(Debug, Default)]
 pub struct Planner {
     buffers: Vec<PlannedBuffer>,
@@ -68,51 +108,149 @@ impl Planner {
         Self::default()
     }
 
-    pub fn add(&mut self, name: &str, size: usize) -> usize {
-        let offset = align_up(self.cursor, ALIGN);
+    /// Reserve `size` bytes at the next aligned offset.  Errors (rather
+    /// than wrapping) when the arena would exceed the address space.
+    pub fn add(&mut self, name: &str, size: usize) -> Result<usize, String> {
+        let offset = checked_align_up(self.cursor, ALIGN)
+            .ok_or_else(|| format!("buffer '{name}': offset overflows usize"))?;
+        let end = offset
+            .checked_add(size)
+            .ok_or_else(|| format!("buffer '{name}': size {size} overflows the arena"))?;
+        // the final align_up in finish() must also be representable
+        checked_align_up(end, ALIGN)
+            .ok_or_else(|| format!("buffer '{name}': arena end overflows usize"))?;
         self.buffers.push(PlannedBuffer { name: name.to_string(), offset, size });
-        self.cursor = offset + size;
-        offset
+        self.cursor = end;
+        Ok(offset)
     }
 
-    pub fn finish(self) -> Plan {
-        let total = align_up(self.cursor, ALIGN);
-        Plan { buffers: self.buffers, total_bytes: total }
+    pub fn finish(self) -> Result<Plan, String> {
+        let total = checked_align_up(self.cursor, ALIGN)
+            .ok_or_else(|| "arena total overflows usize".to_string())?;
+        Ok(Plan::new(self.buffers, total))
     }
 }
 
 /// Build the serving plan for a VQ head: per-layer codebook + edge tables +
 /// activation ping-pong buffers for the largest batch bucket.
 pub fn plan_vq_head(spec: &KanSpec, vq: &VqSpec, precision: Precision,
-                    max_batch: usize) -> Plan {
+                    max_batch: usize) -> Result<Plan, String> {
     let mut p = Planner::new();
     let dims = spec.layer_dims();
     for (li, (n_in, n_out)) in dims.iter().enumerate() {
-        let e = n_in * n_out;
+        let e = n_in
+            .checked_mul(*n_out)
+            .ok_or_else(|| format!("layer{li}: edge count overflows"))?;
         p.add(&format!("layer{li}/codebook"),
-              codebook_bytes_per_layer(spec.grid_size, vq, precision));
-        p.add(&format!("layer{li}/idx"), e * 4); // i32 runtime form
+              codebook_bytes_per_layer(spec.grid_size, vq, precision))?;
+        p.add(&format!("layer{li}/idx"),
+              e.checked_mul(4).ok_or_else(|| format!("layer{li}: idx bytes overflow"))?)?;
+        let gain_coef = if precision == Precision::Int8 { 1 } else { 4 };
         p.add(&format!("layer{li}/gain"),
-              e * if precision == Precision::Int8 { 1 } else { 4 });
-        p.add(&format!("layer{li}/bias_sum"), n_out * 4);
+              e.checked_mul(gain_coef)
+                  .ok_or_else(|| format!("layer{li}: gain bytes overflow"))?)?;
+        p.add(&format!("layer{li}/bias_sum"),
+              n_out.checked_mul(4)
+                  .ok_or_else(|| format!("layer{li}: bias bytes overflow"))?)?;
     }
     // activation ping-pong: widest layer interface
     let widest = dims.iter().flat_map(|&(a, b)| [a, b]).max().unwrap();
-    p.add("act/ping", max_batch * widest * 4);
-    p.add("act/pong", max_batch * widest * 4);
+    let act = max_batch
+        .checked_mul(widest)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| "activation scratch overflows".to_string())?;
+    p.add("act/ping", act)?;
+    p.add("act/pong", act)?;
     p.finish()
 }
 
-/// A zero-alloc arena backing a [`Plan`]: one upfront allocation, typed
-/// views handed out per planned buffer.
+/// Build the *runtime* arena plan for one registered head — the layout
+/// `runtime::arena::ArenaBackend` materializes at registration:
+///
+/// * VQ heads: per-layer codebook (Int8 or fp32 coefficients as stored),
+///   **bit-packed** codebook indices (⌈log₂K⌉ bits/edge, paper Eq. 3),
+///   gains (log-Int8 bytes or fp32) and fp32 folded bias sums;
+/// * dense heads: per-layer fp32 grids;
+/// * MLP baselines: fp32 weight/bias matrices;
+/// * all heads: activation ping-pong scratch for the largest batch bucket.
+pub fn plan_head(weights: &HeadWeights, max_batch: usize) -> Result<Plan, String> {
+    let spec = weights.implied_kan_spec();
+    let dims = spec.layer_dims();
+    let mut p = Planner::new();
+    let mul2 = |a: usize, b: usize, what: &str| -> Result<usize, String> {
+        a.checked_mul(b).ok_or_else(|| format!("{what} overflows"))
+    };
+    let mul3 = |a: usize, b: usize, c: usize, what: &str| -> Result<usize, String> {
+        a.checked_mul(b)
+            .and_then(|ab| ab.checked_mul(c))
+            .ok_or_else(|| format!("{what} overflows"))
+    };
+    match weights {
+        HeadWeights::Mlp { .. } => {
+            p.add("mlp/w1", mul3(spec.d_in, spec.d_hidden, 4, "mlp/w1 bytes")?)?;
+            p.add("mlp/b1", mul2(spec.d_hidden, 4, "mlp/b1 bytes")?)?;
+            p.add("mlp/w2", mul3(spec.d_hidden, spec.d_out, 4, "mlp/w2 bytes")?)?;
+            p.add("mlp/b2", mul2(spec.d_out, 4, "mlp/b2 bytes")?)?;
+        }
+        HeadWeights::DenseKan { .. } => {
+            for (li, (n_in, n_out)) in dims.iter().enumerate() {
+                let cells = n_in
+                    .checked_mul(*n_out)
+                    .and_then(|e| e.checked_mul(spec.grid_size))
+                    .and_then(|c| c.checked_mul(4))
+                    .ok_or_else(|| format!("layer{li}: grid bytes overflow"))?;
+                p.add(&format!("layer{li}/grids"), cells)?;
+            }
+        }
+        HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. } => {
+            let k = weights.implied_codebook_size();
+            let int8 = matches!(weights, HeadWeights::VqInt8 { .. });
+            let coef = if int8 { 1 } else { 4 };
+            for (li, (n_in, n_out)) in dims.iter().enumerate() {
+                let e = mul2(*n_in, *n_out, &format!("layer{li} edge count"))?;
+                p.add(&format!("layer{li}/codebook"),
+                      mul3(k, spec.grid_size, coef, &format!("layer{li} codebook bytes"))?)?;
+                // checked equivalent of bitpack::packed_len(e, k)
+                let idx_bytes = e
+                    .checked_mul(crate::vq::bitpack::bits_for(k))
+                    .and_then(|bits| bits.checked_add(7))
+                    .ok_or_else(|| format!("layer{li}: packed idx bytes overflow"))?
+                    / 8;
+                p.add(&format!("layer{li}/idx"), idx_bytes)?;
+                p.add(&format!("layer{li}/gain"),
+                      mul2(e, if int8 { 1 } else { 4 }, &format!("layer{li} gain bytes"))?)?;
+                // folded bias sums stay fp32 (the checkpoint stores them
+                // unquantized; bit-for-bit parity with the native backend)
+                p.add(&format!("layer{li}/bias_sum"),
+                      mul2(*n_out, 4, &format!("layer{li} bias bytes"))?)?;
+            }
+        }
+    }
+    let widest = dims
+        .iter()
+        .flat_map(|&(a, b)| [a, b])
+        .max()
+        .filter(|&w| w > 0)
+        .ok_or_else(|| "head has no layers".to_string())?;
+    let act = max_batch
+        .checked_mul(widest)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| "activation scratch overflows".to_string())?;
+    p.add("act/ping", act)?;
+    p.add("act/pong", act)?;
+    p.finish()
+}
+
+/// A zero-alloc arena backing a [`Plan`]: one upfront 256-byte-aligned
+/// allocation, typed views handed out per planned buffer.
 pub struct Arena {
-    data: Vec<u8>,
+    data: AlignedBytes,
     plan: Plan,
 }
 
 impl Arena {
     pub fn allocate(plan: Plan) -> Arena {
-        let data = vec![0u8; plan.total_bytes];
+        let data = AlignedBytes::zeroed(plan.total_bytes, ALIGN);
         Arena { data, plan }
     }
 
@@ -120,25 +258,122 @@ impl Arena {
         &self.plan
     }
 
+    /// The whole arena as raw bytes.
+    pub fn raw(&self) -> &[u8] {
+        self.data.as_slice()
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [u8] {
+        self.data.as_mut_slice()
+    }
+
+    /// Split into `[0, offset)` and `[offset, total)` — the serve path uses
+    /// this to borrow read-only tables and mutable activation scratch from
+    /// the same arena simultaneously (`offset` must lie on a plan boundary).
+    pub fn split_at_mut(&mut self, offset: usize) -> (&mut [u8], &mut [u8]) {
+        self.data.as_mut_slice().split_at_mut(offset)
+    }
+
     pub fn bytes_mut(&mut self, name: &str) -> Option<&mut [u8]> {
         let b = self.plan.lookup(name)?.clone();
-        Some(&mut self.data[b.offset..b.offset + b.size])
+        Some(&mut self.data.as_mut_slice()[b.offset..b.offset + b.size])
     }
 
     pub fn bytes(&self, name: &str) -> Option<&[u8]> {
         let b = self.plan.lookup(name)?;
-        Some(&self.data[b.offset..b.offset + b.size])
+        Some(&self.data.as_slice()[b.offset..b.offset + b.size])
     }
 
     /// f32 view of a planned buffer (size must be 4-divisible).
     pub fn f32_mut(&mut self, name: &str) -> Option<&mut [f32]> {
         let b = self.plan.lookup(name)?.clone();
         assert_eq!(b.size % 4, 0);
-        let ptr = self.data[b.offset..].as_mut_ptr() as *mut f32;
-        // SAFETY: offset is 256-aligned (≥ f32 alignment), the region is
-        // within the single owned allocation, and the borrow of self
-        // guarantees exclusivity.
-        Some(unsafe { std::slice::from_raw_parts_mut(ptr, b.size / 4) })
+        let bytes = &mut self.data.as_mut_slice()[b.offset..b.offset + b.size];
+        Some(view::f32s_mut(bytes))
+    }
+}
+
+/// Typed views over arena byte ranges.  Every planned offset is 256-byte
+/// aligned and the arena base itself is 256-byte aligned, so reinterpreting
+/// a planned range as f32/i8 is always layout-sound; the debug asserts keep
+/// that invariant honest.
+pub mod view {
+    #[inline]
+    pub fn f32s(bytes: &[u8]) -> &[f32] {
+        debug_assert_eq!(bytes.len() % 4, 0);
+        debug_assert_eq!(bytes.as_ptr() as usize % 4, 0, "unaligned f32 view");
+        // SAFETY: length and alignment checked above; lifetimes tied to the
+        // input borrow; f32 has no invalid bit patterns.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
+    }
+
+    #[inline]
+    pub fn f32s_mut(bytes: &mut [u8]) -> &mut [f32] {
+        debug_assert_eq!(bytes.len() % 4, 0);
+        debug_assert_eq!(bytes.as_ptr() as usize % 4, 0, "unaligned f32 view");
+        // SAFETY: as above; the &mut borrow guarantees exclusivity.
+        unsafe {
+            std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut f32, bytes.len() / 4)
+        }
+    }
+
+    #[inline]
+    pub fn i8s(bytes: &[u8]) -> &[i8] {
+        // SAFETY: i8 and u8 share size/alignment and all bit patterns.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+    }
+}
+
+/// Owned byte buffer with an explicit allocation alignment (a plain
+/// `Vec<u8>` only guarantees alignment 1, which would make the f32 views
+/// above unsound in principle).
+struct AlignedBytes {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+    align: usize,
+}
+
+// SAFETY: AlignedBytes uniquely owns its allocation (no aliasing), so it
+// may move between threads like the Vec it replaces.
+unsafe impl Send for AlignedBytes {}
+unsafe impl Sync for AlignedBytes {}
+
+impl AlignedBytes {
+    fn zeroed(len: usize, align: usize) -> AlignedBytes {
+        assert!(align.is_power_of_two());
+        if len == 0 {
+            return AlignedBytes { ptr: std::ptr::NonNull::dangling(), len: 0, align };
+        }
+        let layout = std::alloc::Layout::from_size_align(len, align)
+            .expect("arena layout exceeds address space");
+        // SAFETY: layout has non-zero size (len > 0 checked above).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        let ptr = std::ptr::NonNull::new(raw)
+            .unwrap_or_else(|| std::alloc::handle_alloc_error(layout));
+        AlignedBytes { ptr, len, align }
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr is valid for len bytes (or dangling with len == 0).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        // SAFETY: as above; &mut self guarantees exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBytes {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `zeroed` with this exact layout.
+            unsafe {
+                let layout =
+                    std::alloc::Layout::from_size_align_unchecked(self.len, self.align);
+                std::alloc::dealloc(self.ptr.as_ptr(), layout);
+            }
+        }
     }
 }
 
@@ -149,7 +384,8 @@ mod tests {
     #[test]
     fn plan_is_valid_and_aligned() {
         let plan = plan_vq_head(&KanSpec::default(), &VqSpec::default(),
-                                Precision::Int8, 128);
+                                Precision::Int8, 128)
+            .unwrap();
         plan.validate().unwrap();
         for b in &plan.buffers {
             assert_eq!(b.offset % ALIGN, 0, "{}", b.name);
@@ -161,7 +397,7 @@ mod tests {
         // paper Eq. 6: K=65,536, G=10, Int8 -> 655 KB per layer
         let spec = KanSpec { grid_size: 10, ..KanSpec::paper_scale() };
         let vq = VqSpec { codebook_size: 65536 };
-        let plan = plan_vq_head(&spec, &vq, Precision::Int8, 1);
+        let plan = plan_vq_head(&spec, &vq, Precision::Int8, 1).unwrap();
         let cb = plan.lookup("layer0/codebook").unwrap();
         assert_eq!(cb.size, 655_360);
         let cb1 = plan.lookup("layer1/codebook").unwrap();
@@ -171,7 +407,8 @@ mod tests {
     #[test]
     fn arena_views_are_disjoint_and_sized() {
         let plan = plan_vq_head(&KanSpec { d_in: 4, d_hidden: 6, d_out: 2, grid_size: 5 },
-                                &VqSpec { codebook_size: 8 }, Precision::Fp32, 2);
+                                &VqSpec { codebook_size: 8 }, Precision::Fp32, 2)
+            .unwrap();
         let mut arena = Arena::allocate(plan);
         {
             let ping = arena.f32_mut("act/ping").unwrap();
@@ -186,23 +423,32 @@ mod tests {
     }
 
     #[test]
+    fn arena_base_is_256_aligned() {
+        let plan = plan_vq_head(&KanSpec::default(), &VqSpec::default(),
+                                Precision::Int8, 8)
+            .unwrap();
+        let arena = Arena::allocate(plan);
+        assert_eq!(arena.raw().as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
     fn validate_catches_overlap() {
-        let plan = Plan {
-            buffers: vec![
+        let plan = Plan::new(
+            vec![
                 PlannedBuffer { name: "a".into(), offset: 0, size: 512 },
                 PlannedBuffer { name: "b".into(), offset: 256, size: 128 },
             ],
-            total_bytes: 1024,
-        };
+            1024,
+        );
         assert!(plan.validate().is_err());
     }
 
     #[test]
     fn validate_catches_misalignment() {
-        let plan = Plan {
-            buffers: vec![PlannedBuffer { name: "a".into(), offset: 8, size: 16 }],
-            total_bytes: 1024,
-        };
+        let plan = Plan::new(
+            vec![PlannedBuffer { name: "a".into(), offset: 8, size: 16 }],
+            1024,
+        );
         assert!(plan.validate().is_err());
     }
 
@@ -210,8 +456,88 @@ mod tests {
     fn int8_plan_smaller_than_fp32() {
         let spec = KanSpec::default();
         let vq = VqSpec::default();
-        let i8p = plan_vq_head(&spec, &vq, Precision::Int8, 32);
-        let f32p = plan_vq_head(&spec, &vq, Precision::Fp32, 32);
+        let i8p = plan_vq_head(&spec, &vq, Precision::Int8, 32).unwrap();
+        let f32p = plan_vq_head(&spec, &vq, Precision::Fp32, 32).unwrap();
         assert!(i8p.total_bytes < f32p.total_bytes);
+    }
+
+    #[test]
+    fn checked_align_up_boundaries() {
+        assert_eq!(checked_align_up(0, 256), Some(0));
+        assert_eq!(checked_align_up(1, 256), Some(256));
+        assert_eq!(checked_align_up(256, 256), Some(256));
+        assert_eq!(checked_align_up(257, 256), Some(512));
+        assert_eq!(checked_align_up(usize::MAX, 256), None);
+        assert_eq!(checked_align_up(usize::MAX - 100, 256), None);
+        assert_eq!(checked_align_up(7, 0), None);
+    }
+
+    #[test]
+    fn planner_rejects_overflowing_sizes_cleanly() {
+        let mut p = Planner::new();
+        p.add("ok", 1024).unwrap();
+        assert!(p.add("huge", usize::MAX - 512).is_err());
+        // the planner is still usable after a rejected add
+        p.add("next", 64).unwrap();
+        let plan = p.finish().unwrap();
+        assert!(plan.lookup("huge").is_none());
+        assert_eq!(plan.buffers.len(), 2);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn lookup_uses_index_and_matches_scan() {
+        let mut p = Planner::new();
+        for i in 0..20 {
+            p.add(&format!("buf{i}"), 10 + i).unwrap();
+        }
+        let plan = p.finish().unwrap();
+        for i in 0..20 {
+            let name = format!("buf{i}");
+            let via_index = plan.lookup(&name).unwrap();
+            let via_scan = plan.buffers.iter().find(|b| b.name == name).unwrap();
+            assert_eq!(via_index, via_scan);
+        }
+        assert!(plan.lookup("nope").is_none());
+    }
+
+    #[test]
+    fn plan_head_covers_all_variants() {
+        use crate::tensor::Tensor;
+        let mlp = HeadWeights::Mlp {
+            w1: Tensor::from_f32(&[3, 4], &[0.0; 12]),
+            b1: Tensor::from_f32(&[4], &[0.0; 4]),
+            w2: Tensor::from_f32(&[4, 2], &[0.0; 8]),
+            b2: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        let plan = plan_head(&mlp, 8).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.lookup("mlp/w1").unwrap().size, 12 * 4);
+        assert_eq!(plan.lookup("act/ping").unwrap().size, 8 * 4 * 4);
+
+        let dense = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
+            grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
+        };
+        let plan = plan_head(&dense, 4).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.lookup("layer0/grids").unwrap().size, 60 * 4);
+        assert_eq!(plan.lookup("layer1/grids").unwrap().size, 40 * 4);
+
+        let vq = HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[16, 5], &[0.0; 80]),
+            idx0: Tensor::from_i32(&[3, 4], &[0; 12]),
+            g0: Tensor::from_f32(&[3, 4], &[0.0; 12]),
+            bs0: Tensor::from_f32(&[4], &[0.0; 4]),
+            cb1: Tensor::from_f32(&[16, 5], &[0.0; 80]),
+            idx1: Tensor::from_i32(&[4, 2], &[0; 8]),
+            g1: Tensor::from_f32(&[4, 2], &[0.0; 8]),
+            bs1: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        let plan = plan_head(&vq, 2).unwrap();
+        plan.validate().unwrap();
+        // K=16 -> 4 bits/index: 12 edges -> 6 bytes packed
+        assert_eq!(plan.lookup("layer0/idx").unwrap().size, 6);
+        assert_eq!(plan.lookup("layer0/codebook").unwrap().size, 16 * 5 * 4);
     }
 }

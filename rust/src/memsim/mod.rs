@@ -10,4 +10,6 @@ pub mod trace;
 pub use analysis::{analyze, iso_latent_sweep, BandwidthAnalysis};
 pub use cache::{Cache, CacheConfig, CacheStats};
 pub use dram::{dram_speed_limit_s, roofline, DeviceModel, Roofline};
-pub use trace::{trace_dense_layer, trace_vq_layer, LayerShape, TraceReport};
+pub use trace::{
+    trace_arena_vq_head, trace_dense_layer, trace_vq_layer, LayerShape, TraceReport,
+};

@@ -13,6 +13,9 @@
 
 use super::cache::{Cache, CacheStats};
 use crate::data::rng::Pcg32;
+use crate::kan::spec::KanSpec;
+use crate::memplan::Plan;
+use crate::vq::bitpack::bits_for;
 
 /// Virtual address-space regions (1 GB apart; never overlap).
 pub const REGION_CODEBOOK: u64 = 0x1_0000_0000;
@@ -21,6 +24,9 @@ pub const REGION_GAIN: u64 = 0x3_0000_0000;
 pub const REGION_GRIDS: u64 = 0x4_0000_0000;
 pub const REGION_ACT: u64 = 0x5_0000_0000;
 pub const REGION_BIAS: u64 = 0x6_0000_0000;
+/// Base of a LUTHAM arena (see [`trace_arena_vq_head`]): all per-head
+/// tables live at plan-assigned offsets from this single base.
+pub const REGION_ARENA: u64 = 0x7_0000_0000;
 
 #[derive(Debug, Clone, Copy)]
 pub struct LayerShape {
@@ -114,6 +120,73 @@ pub fn trace_vq_layer(cache: &mut Cache, shape: LayerShape, batch: usize,
     TraceReport { stats: cache.stats, requested_bytes: requested, flops }
 }
 
+/// Replay the memory-access pattern of `runtime::arena::ArenaBackend`
+/// executing a compressed VQ head over its **actual** LUTHAM plan: every
+/// address is `REGION_ARENA + planned offset`, indices are read at
+/// bit-packed granularity (⌈log₂K⌉ bits/edge, Eq. 3), gains/codebook
+/// coefficients at their resident width (1 byte Int8 / 4 bytes fp32), and
+/// layer activations bounce through the planned ping/pong scratch.  This is
+/// the §5.5 cache-residency claim checked against the real serving layout
+/// rather than an idealized region model.
+///
+/// Address positions that depend on data (codebook row per edge, grid cell
+/// per activation) are drawn from a seeded RNG exactly as in
+/// [`trace_vq_layer`].
+pub fn trace_arena_vq_head(cache: &mut Cache, plan: &Plan, spec: &KanSpec, k: usize,
+                           int8: bool, batch: usize, seed: u64) -> TraceReport {
+    let mut rng = Pcg32::new(seed, 17);
+    let g = spec.grid_size;
+    let bits = bits_for(k);
+    let coef: usize = if int8 { 1 } else { 4 };
+    let gain_bytes: usize = if int8 { 1 } else { 4 };
+    let mut requested = 0u64;
+    let mut flops = 0u64;
+    let ping = plan.lookup("act/ping").expect("plan missing act/ping").offset as u64;
+    let pong = plan.lookup("act/pong").expect("plan missing act/pong").offset as u64;
+    for (li, (n_in, n_out)) in spec.layer_dims().into_iter().enumerate() {
+        let cb = plan.lookup(&format!("layer{li}/codebook")).expect("codebook").offset as u64;
+        let idx = plan.lookup(&format!("layer{li}/idx")).expect("idx").offset as u64;
+        let gain = plan.lookup(&format!("layer{li}/gain")).expect("gain").offset as u64;
+        let bias = plan.lookup(&format!("layer{li}/bias_sum")).expect("bias").offset as u64;
+        // layer0 reads the caller's padded batch and writes ping;
+        // layer1 reads ping and writes pong
+        let src_base = if li == 0 { REGION_ACT } else { REGION_ARENA + ping };
+        let dst_base = REGION_ARENA + if li == 0 { ping } else { pong };
+        // fixed per-edge codebook assignment (load-time property)
+        let mut edge_rows = Vec::with_capacity(n_in * n_out);
+        for _ in 0..n_in * n_out {
+            edge_rows.push(rng.below(k));
+        }
+        for s in 0..batch {
+            for i in 0..n_in {
+                cache.access(src_base + ((s * n_in + i) * 4) as u64, 4);
+                requested += 4;
+                let cell = rng.below(g - 1);
+                for j in 0..n_out {
+                    let e = i * n_out + j;
+                    // bit-packed index: the bytes spanned by bits [e*bits, (e+1)*bits)
+                    let bitpos = e * bits;
+                    let span = ((bitpos % 8) + bits + 7) / 8;
+                    cache.access(REGION_ARENA + idx + (bitpos / 8) as u64, span as u32);
+                    cache.access(REGION_ARENA + gain + (e * gain_bytes) as u64,
+                                 gain_bytes as u32);
+                    let row = edge_rows[e];
+                    cache.access(REGION_ARENA + cb + ((row * g + cell) * coef) as u64,
+                                 (2 * coef) as u32); // two lerp endpoints
+                    requested += (span + gain_bytes + 2 * coef) as u64;
+                    flops += 6; // lerp + gain mul + bias add (+ dequant)
+                }
+            }
+            for j in 0..n_out {
+                cache.access(REGION_ARENA + bias + (j * 4) as u64, 4);
+                cache.access(dst_base + ((s * n_out + j) * 4) as u64, 4);
+                requested += 8;
+            }
+        }
+    }
+    TraceReport { stats: cache.stats, requested_bytes: requested, flops }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +229,41 @@ mod tests {
         cache.reset_stats();
         let rep = trace_dense_layer(&mut cache, shape, 4, 2);
         assert!(rep.stats.hit_rate() > 0.95, "hit rate {}", rep.stats.hit_rate());
+    }
+
+    #[test]
+    fn arena_trace_covers_plan_and_stays_resident() {
+        // plan the SAME layout ArenaBackend materializes (plan_head over a
+        // VqInt8 head: bit-packed idx, Int8 codebook/gains), not the
+        // i32-idx reporting layout of plan_vq_head
+        use crate::coordinator::heads::HeadWeights;
+        use crate::memplan::plan_head;
+        use crate::tensor::Tensor;
+        let spec = KanSpec { d_in: 32, d_hidden: 64, d_out: 8, grid_size: 10 };
+        let k = 256;
+        let (g, e0, e1) = (spec.grid_size, spec.d_in * spec.d_hidden, spec.d_hidden * spec.d_out);
+        let mut rng = Pcg32::seeded(5);
+        let mut idx = |e: usize| (0..e).map(|_| rng.below(k) as i32).collect::<Vec<_>>();
+        let head = HeadWeights::VqInt8 {
+            cbq0: Tensor::from_i8(&[k, g], &vec![1i8; k * g]),
+            idx0: Tensor::from_i32(&[spec.d_in, spec.d_hidden], &idx(e0)),
+            gq0: Tensor::from_i8(&[spec.d_in, spec.d_hidden], &vec![1i8; e0]),
+            bs0: Tensor::from_f32(&[spec.d_hidden], &vec![0.0; spec.d_hidden]),
+            cbq1: Tensor::from_i8(&[k, g], &vec![1i8; k * g]),
+            idx1: Tensor::from_i32(&[spec.d_hidden, spec.d_out], &idx(e1)),
+            gq1: Tensor::from_i8(&[spec.d_hidden, spec.d_out], &vec![1i8; e1]),
+            bs1: Tensor::from_f32(&[spec.d_out], &vec![0.0; spec.d_out]),
+            scales: Tensor::from_f32(&[2, 3], &[0.1, -5.0, 0.05, 0.1, -5.0, 0.05]),
+        };
+        let plan = plan_head(&head, 8).unwrap();
+        plan.validate().unwrap();
+        let mut cache = Cache::new(CacheConfig { size_bytes: 1 << 20, line_bytes: 128, ways: 16 });
+        trace_arena_vq_head(&mut cache, &plan, &spec, k, true, 2, 1);
+        cache.reset_stats();
+        let rep = trace_arena_vq_head(&mut cache, &plan, &spec, k, true, 8, 2);
+        assert!(rep.stats.hit_rate() > 0.90, "hit rate {}", rep.stats.hit_rate());
+        assert!(rep.requested_bytes > 0);
+        assert!(rep.flops > 0);
     }
 
     #[test]

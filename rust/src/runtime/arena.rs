@@ -1,0 +1,635 @@
+//! Arena-resident execution backend: LUTHAM static memory planning
+//! (paper §4.3) applied to the serving hot path for real.
+//!
+//! Where [`super::native::NativeBackend`] serves heads out of per-head
+//! `Vec`s, [`ArenaBackend`] asks `memplan::plan_head` for a static layout at
+//! registration and materializes **every** table the forward pass touches —
+//! codebooks (Int8 coefficients kept quantized), **bit-packed** VQ indices
+//! (⌈log₂K⌉ bits/edge via `vq::bitpack`, decoded in place per edge),
+//! log-Int8 gains, fp32 folded bias sums and the activation ping-pong
+//! scratch — into one contiguous 256-byte-aligned arena at the
+//! planner-assigned offsets.  After registration the per-batch hot path
+//! performs **zero heap allocations** (asserted by
+//! `rust/tests/arena_zero_alloc.rs`): activations bounce between the
+//! planned ping/pong buffers and scores land in a caller-owned output
+//! vector via [`Backend::execute_into`].
+//!
+//! Numerics are **bit-for-bit identical** to the native backend (pinned by
+//! `rust/tests/arena_backend_equivalence.rs`): the kernels below mirror the
+//! exact accumulation order of `kan::eval`, and Int8 dequantization
+//! (`q as f32 * scale`, `dequant_gain_log_int8`) yields the same f32 values
+//! whether performed once at load (native) or per access (arena).
+
+use std::collections::HashMap;
+use std::ops::Range;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, BackendSpec};
+use crate::coordinator::heads::HeadWeights;
+use crate::kan::eval::dequant_gain_log_int8;
+use crate::memplan::{plan_head, view, Arena, Plan};
+use crate::vq::bitpack::{bits_for, pack, read_packed};
+use crate::vq::quant::LogInt8Params;
+
+/// Execution counters (the arena analogue of `NativeStats`).
+#[derive(Debug, Default, Clone)]
+pub struct ArenaStats {
+    pub batches: u64,
+    pub rows: u64,
+}
+
+/// Int8 dequantization constants for one VQ layer (resident alongside the
+/// quantized tables; scalar, so they live in the head record, not the arena).
+#[derive(Debug, Clone, Copy)]
+struct LayerQuant {
+    codebook_scale: f32,
+    gain: LogInt8Params,
+}
+
+/// Planner-assigned byte ranges for one VQ layer's tables.
+#[derive(Debug, Clone)]
+struct VqLayerSlots {
+    codebook: Range<usize>,
+    idx: Range<usize>,
+    gain: Range<usize>,
+    bias: Range<usize>,
+    /// `Some` when the layer's codebook/gains are Int8-resident.
+    quant: Option<LayerQuant>,
+}
+
+/// Table ranges per head variant (all relative to the head's arena base).
+enum HeadTables {
+    Mlp { w1: Range<usize>, b1: Range<usize>, w2: Range<usize>, b2: Range<usize> },
+    Dense { grids0: Range<usize>, grids1: Range<usize> },
+    Vq { layers: [VqLayerSlots; 2], bits: usize },
+}
+
+/// One registered head: its arena plus resolved offsets (resolved once at
+/// registration so the hot path never does name lookups).
+struct ArenaHead {
+    arena: Arena,
+    tables: HeadTables,
+    d_in: usize,
+    d_hidden: usize,
+    d_out: usize,
+    g: usize,
+    max_bucket: usize,
+    /// absolute offset where the activation scratch (act/ping) begins;
+    /// everything below it is read-only tables
+    scratch_offset: usize,
+    /// act/pong start relative to `scratch_offset`
+    pong_rel: usize,
+    /// planned byte size of each activation buffer
+    act_bytes: usize,
+}
+
+pub struct ArenaBackend {
+    spec: BackendSpec,
+    heads: HashMap<String, ArenaHead>,
+    pub stats: ArenaStats,
+}
+
+impl ArenaBackend {
+    pub fn new(spec: BackendSpec) -> ArenaBackend {
+        ArenaBackend { spec, heads: HashMap::new(), stats: ArenaStats::default() }
+    }
+
+    /// The LUTHAM plan backing a registered head (the actual serve-time
+    /// layout — `memsim::trace::trace_arena_vq_head` replays it).
+    pub fn head_plan(&self, name: &str) -> Option<&Plan> {
+        self.heads.get(name).map(|h| h.arena.plan())
+    }
+
+    /// Total planned arena bytes for a registered head.
+    pub fn head_arena_bytes(&self, name: &str) -> Option<usize> {
+        self.heads.get(name).map(|h| h.arena.plan().total_bytes)
+    }
+
+    fn build_head(spec: &BackendSpec, weights: &HeadWeights) -> Result<ArenaHead> {
+        let kspec = weights.implied_kan_spec();
+        let (d_in, d_hidden, d_out, g) =
+            (kspec.d_in, kspec.d_hidden, kspec.d_out, kspec.grid_size);
+        let max_bucket = spec.batch_buckets.iter().copied().max().unwrap_or(1).max(1);
+        let plan = plan_head(weights, max_bucket)
+            .map_err(|e| anyhow::anyhow!("memplan rejected head layout: {e}"))?;
+        plan.validate().map_err(|e| anyhow::anyhow!("invalid head plan: {e}"))?;
+        let mut arena = Arena::allocate(plan);
+
+        let tables = match weights {
+            HeadWeights::Mlp { w1, b1, w2, b2 } => {
+                fill_f32(&mut arena, "mlp/w1", &w1.as_f32())?;
+                fill_f32(&mut arena, "mlp/b1", &b1.as_f32())?;
+                fill_f32(&mut arena, "mlp/w2", &w2.as_f32())?;
+                fill_f32(&mut arena, "mlp/b2", &b2.as_f32())?;
+                HeadTables::Mlp {
+                    w1: range(&arena, "mlp/w1")?,
+                    b1: range(&arena, "mlp/b1")?,
+                    w2: range(&arena, "mlp/w2")?,
+                    b2: range(&arena, "mlp/b2")?,
+                }
+            }
+            HeadWeights::DenseKan { grids0, grids1 } => {
+                anyhow::ensure!(g >= 2, "PLI lerp needs grid_size >= 2 (got {g})");
+                fill_f32(&mut arena, "layer0/grids", &grids0.as_f32())?;
+                fill_f32(&mut arena, "layer1/grids", &grids1.as_f32())?;
+                HeadTables::Dense {
+                    grids0: range(&arena, "layer0/grids")?,
+                    grids1: range(&arena, "layer1/grids")?,
+                }
+            }
+            HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
+                anyhow::ensure!(g >= 2, "PLI lerp needs grid_size >= 2 (got {g})");
+                let k = spec.vq.codebook_size;
+                let bits = bits_for(k);
+                fill_f32(&mut arena, "layer0/codebook", &cb0.as_f32())?;
+                fill_f32(&mut arena, "layer1/codebook", &cb1.as_f32())?;
+                fill_f32(&mut arena, "layer0/gain", &g0.as_f32())?;
+                fill_f32(&mut arena, "layer1/gain", &g1.as_f32())?;
+                fill_f32(&mut arena, "layer0/bias_sum", &bs0.as_f32())?;
+                fill_f32(&mut arena, "layer1/bias_sum", &bs1.as_f32())?;
+                fill_packed_idx(&mut arena, "layer0/idx", &idx0.as_i32(), k, bits)?;
+                fill_packed_idx(&mut arena, "layer1/idx", &idx1.as_i32(), k, bits)?;
+                HeadTables::Vq { layers: vq_slots(&arena, [None, None])?, bits }
+            }
+            HeadWeights::VqInt8 { cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales } => {
+                anyhow::ensure!(g >= 2, "PLI lerp needs grid_size >= 2 (got {g})");
+                let k = spec.vq.codebook_size;
+                let bits = bits_for(k);
+                // per-layer [codebook_scale, gain log_lo, gain log_step] —
+                // the same constants vq::load_compressed dequantizes with
+                let s = scales.as_f32();
+                anyhow::ensure!(s.len() == 6, "int8 scales tensor must hold 2x3 values");
+                let q0 = LayerQuant {
+                    codebook_scale: s[0],
+                    gain: LogInt8Params { log_lo: s[1], log_step: s[2] },
+                };
+                let q1 = LayerQuant {
+                    codebook_scale: s[3],
+                    gain: LogInt8Params { log_lo: s[4], log_step: s[5] },
+                };
+                fill_i8(&mut arena, "layer0/codebook", &cbq0.as_i8())?;
+                fill_i8(&mut arena, "layer1/codebook", &cbq1.as_i8())?;
+                fill_i8(&mut arena, "layer0/gain", &gq0.as_i8())?;
+                fill_i8(&mut arena, "layer1/gain", &gq1.as_i8())?;
+                fill_f32(&mut arena, "layer0/bias_sum", &bs0.as_f32())?;
+                fill_f32(&mut arena, "layer1/bias_sum", &bs1.as_f32())?;
+                fill_packed_idx(&mut arena, "layer0/idx", &idx0.as_i32(), k, bits)?;
+                fill_packed_idx(&mut arena, "layer1/idx", &idx1.as_i32(), k, bits)?;
+                HeadTables::Vq { layers: vq_slots(&arena, [Some(q0), Some(q1)])?, bits }
+            }
+        };
+
+        let ping = range(&arena, "act/ping")?;
+        let pong = range(&arena, "act/pong")?;
+        anyhow::ensure!(
+            ping.end <= pong.start,
+            "planner must place act/ping before act/pong"
+        );
+        Ok(ArenaHead {
+            tables,
+            d_in,
+            d_hidden,
+            d_out,
+            g,
+            max_bucket,
+            scratch_offset: ping.start,
+            pong_rel: pong.start - ping.start,
+            act_bytes: ping.end - ping.start,
+            arena,
+        })
+    }
+}
+
+/// Resolve a planned buffer to its absolute byte range.
+fn range(arena: &Arena, name: &str) -> Result<Range<usize>> {
+    let b = arena
+        .plan()
+        .lookup(name)
+        .with_context(|| format!("plan is missing buffer '{name}'"))?;
+    Ok(b.offset..b.offset + b.size)
+}
+
+fn fill_f32(arena: &mut Arena, name: &str, data: &[f32]) -> Result<()> {
+    let dst = arena
+        .f32_mut(name)
+        .with_context(|| format!("plan is missing buffer '{name}'"))?;
+    anyhow::ensure!(
+        dst.len() == data.len(),
+        "'{name}': planned {} f32s but head provides {}",
+        dst.len(),
+        data.len()
+    );
+    dst.copy_from_slice(data);
+    Ok(())
+}
+
+fn fill_i8(arena: &mut Arena, name: &str, data: &[i8]) -> Result<()> {
+    let dst = arena
+        .bytes_mut(name)
+        .with_context(|| format!("plan is missing buffer '{name}'"))?;
+    anyhow::ensure!(
+        dst.len() == data.len(),
+        "'{name}': planned {} bytes but head provides {}",
+        dst.len(),
+        data.len()
+    );
+    for (d, &s) in dst.iter_mut().zip(data) {
+        *d = s as u8;
+    }
+    Ok(())
+}
+
+/// Validate codebook indices and store them bit-packed (paper Eq. 3).
+fn fill_packed_idx(arena: &mut Arena, name: &str, idx: &[i32], k: usize,
+                   bits: usize) -> Result<()> {
+    anyhow::ensure!(
+        idx.iter().all(|&i| i >= 0 && (i as usize) < k),
+        "'{name}' contains codebook indices outside 0..{k}"
+    );
+    let values: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+    let packed = pack(&values, bits);
+    let dst = arena
+        .bytes_mut(name)
+        .with_context(|| format!("plan is missing buffer '{name}'"))?;
+    anyhow::ensure!(
+        dst.len() == packed.len(),
+        "'{name}': planned {} packed bytes but indices pack to {}",
+        dst.len(),
+        packed.len()
+    );
+    dst.copy_from_slice(&packed);
+    Ok(())
+}
+
+fn vq_slots(arena: &Arena, quant: [Option<LayerQuant>; 2]) -> Result<[VqLayerSlots; 2]> {
+    let mut quant = quant.into_iter();
+    let mut slot = |li: usize| -> Result<VqLayerSlots> {
+        Ok(VqLayerSlots {
+            codebook: range(arena, &format!("layer{li}/codebook"))?,
+            idx: range(arena, &format!("layer{li}/idx"))?,
+            gain: range(arena, &format!("layer{li}/gain"))?,
+            bias: range(arena, &format!("layer{li}/bias_sum"))?,
+            quant: quant.next().expect("two layers"),
+        })
+    };
+    Ok([slot(0)?, slot(1)?])
+}
+
+// ---------------------------------------------------------------------------
+// Hot-path kernels: exact mirrors of kan::eval, reading planner-assigned
+// slices and writing into caller scratch.  No allocations, identical
+// accumulation order (bit-for-bit parity is load-bearing, see module docs).
+// ---------------------------------------------------------------------------
+
+/// Per-edge table access for one VQ layer — monomorphized per precision so
+/// the inner loop carries no branch.
+trait VqTables {
+    fn gain(&self, e: usize) -> f32;
+    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32;
+}
+
+struct Fp32Vq<'a> {
+    codebook: &'a [f32],
+    gain: &'a [f32],
+    g: usize,
+}
+
+impl VqTables for Fp32Vq<'_> {
+    #[inline(always)]
+    fn gain(&self, e: usize) -> f32 {
+        self.gain[e]
+    }
+
+    #[inline(always)]
+    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32 {
+        let c = row * self.g + i0;
+        (1.0 - f) * self.codebook[c] + f * self.codebook[c + 1]
+    }
+}
+
+struct Int8Vq<'a> {
+    codebook: &'a [i8],
+    codebook_scale: f32,
+    gain: &'a [i8],
+    gain_params: LogInt8Params,
+    g: usize,
+}
+
+impl VqTables for Int8Vq<'_> {
+    #[inline(always)]
+    fn gain(&self, e: usize) -> f32 {
+        // identical f32 result to dequantize_log_int8 at load time
+        dequant_gain_log_int8(self.gain[e], self.gain_params.log_lo, self.gain_params.log_step)
+    }
+
+    #[inline(always)]
+    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32 {
+        // `q as f32 * scale` is exactly dequantize_linear_int8 per element
+        let c = row * self.g + i0;
+        (1.0 - f) * (self.codebook[c] as f32 * self.codebook_scale)
+            + f * (self.codebook[c + 1] as f32 * self.codebook_scale)
+    }
+}
+
+/// SHARe-KAN VQ layer over arena tables (mirror of `kan::eval::vq_layer`
+/// with the packed-index decode inlined).
+#[allow(clippy::too_many_arguments)]
+fn vq_layer_into<T: VqTables>(x: &[f32], b: usize, t: &T, idx: &[u8], bits: usize,
+                              bias: &[f32], n_in: usize, n_out: usize, g: usize,
+                              out: &mut [f32]) {
+    let out = &mut out[..b * n_out];
+    out.fill(0.0);
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let xrow = &x[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, &xi) in xrow.iter().enumerate() {
+            let u = xi.tanh();
+            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+            let i0 = (pos.floor() as usize).min(g - 2);
+            let f = pos - i0 as f32;
+            let erow = i * n_out;
+            for (j, o) in orow.iter_mut().enumerate() {
+                let e = erow + j;
+                let row = read_packed(idx, bits, e) as usize;
+                *o += t.gain(e) * t.lerp(row, i0, f);
+            }
+        }
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += bias[j];
+        }
+    }
+}
+
+/// Dense KAN layer over arena grids (mirror of `kan::eval::dense_layer`).
+fn dense_layer_into(x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize,
+                    g: usize, out: &mut [f32]) {
+    let out = &mut out[..b * n_out];
+    out.fill(0.0);
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let xrow = &x[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, &xi) in xrow.iter().enumerate() {
+            let u = xi.tanh();
+            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+            let i0 = (pos.floor() as usize).min(g - 2);
+            let f = pos - i0 as f32;
+            let base = i * n_out * g;
+            for (j, o) in orow.iter_mut().enumerate() {
+                let row = base + j * g + i0;
+                *o += (1.0 - f) * grids[row] + f * grids[row + 1];
+            }
+        }
+    }
+}
+
+/// MLP baseline over arena weights (mirror of `kan::eval::MlpModel`).
+#[allow(clippy::too_many_arguments)]
+fn mlp_into(x: &[f32], b: usize, w1: &[f32], b1: &[f32], w2: &[f32], b2: &[f32],
+            d_in: usize, d_hidden: usize, d_out: usize, h: &mut [f32],
+            out: &mut [f32]) {
+    let h = &mut h[..b * d_hidden];
+    let out = &mut out[..b * d_out];
+    for bi in 0..b {
+        for j in 0..d_hidden {
+            let mut acc = b1[j];
+            for i in 0..d_in {
+                acc += x[bi * d_in + i] * w1[i * d_hidden + j];
+            }
+            h[bi * d_hidden + j] = acc.max(0.0);
+        }
+    }
+    for bi in 0..b {
+        for j in 0..d_out {
+            let mut acc = b2[j];
+            for i in 0..d_hidden {
+                acc += h[bi * d_hidden + i] * w2[i * d_out + j];
+            }
+            out[bi * d_out + j] = acc;
+        }
+    }
+}
+
+impl Backend for ArenaBackend {
+    fn name(&self) -> String {
+        "arena-lutham".to_string()
+    }
+
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()> {
+        weights.validate(&self.spec.kan, self.spec.vq.codebook_size)?;
+        let head = Self::build_head(&self.spec, weights)?;
+        self.heads.insert(name.to_string(), head);
+        Ok(())
+    }
+
+    fn remove_head(&mut self, name: &str) -> bool {
+        self.heads.remove(name).is_some()
+    }
+
+    fn execute(&mut self, head: &str, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.execute_into(head, x, bucket, &mut out)?;
+        Ok(out)
+    }
+
+    /// The zero-alloc hot path: tables and scratch are disjoint planned
+    /// regions of one arena, scores land in the caller's reused vector.
+    fn execute_into(&mut self, head: &str, x: &[f32], bucket: usize,
+                    out: &mut Vec<f32>) -> Result<()> {
+        let h = self
+            .heads
+            .get_mut(head)
+            .with_context(|| format!("unknown head '{head}'"))?;
+        anyhow::ensure!(x.len() == bucket * h.d_in, "padded batch size mismatch");
+        anyhow::ensure!(
+            bucket <= h.max_bucket,
+            "bucket {bucket} exceeds planned scratch (max {})",
+            h.max_bucket
+        );
+        let (d_in, d_hidden, d_out, g) = (h.d_in, h.d_hidden, h.d_out, h.g);
+        let (tables, scratch) = h.arena.split_at_mut(h.scratch_offset);
+        let (ping_part, pong_part) = scratch.split_at_mut(h.pong_rel);
+        let ping = view::f32s_mut(&mut ping_part[..h.act_bytes]);
+        let pong = view::f32s_mut(&mut pong_part[..h.act_bytes]);
+
+        match &h.tables {
+            HeadTables::Mlp { w1, b1, w2, b2 } => {
+                mlp_into(
+                    x,
+                    bucket,
+                    view::f32s(&tables[w1.clone()]),
+                    view::f32s(&tables[b1.clone()]),
+                    view::f32s(&tables[w2.clone()]),
+                    view::f32s(&tables[b2.clone()]),
+                    d_in,
+                    d_hidden,
+                    d_out,
+                    ping,
+                    pong,
+                );
+            }
+            HeadTables::Dense { grids0, grids1 } => {
+                dense_layer_into(x, bucket, view::f32s(&tables[grids0.clone()]),
+                                 d_in, d_hidden, g, ping);
+                dense_layer_into(&ping[..bucket * d_hidden], bucket,
+                                 view::f32s(&tables[grids1.clone()]),
+                                 d_hidden, d_out, g, pong);
+            }
+            HeadTables::Vq { layers, bits } => {
+                run_vq_layer(tables, &layers[0], *bits, x, bucket,
+                             d_in, d_hidden, g, ping);
+                run_vq_layer(tables, &layers[1], *bits, &ping[..bucket * d_hidden],
+                             bucket, d_hidden, d_out, g, pong);
+            }
+        }
+
+        out.clear();
+        out.extend_from_slice(&pong[..bucket * d_out]);
+        self.stats.batches += 1;
+        self.stats.rows += bucket as u64;
+        Ok(())
+    }
+}
+
+/// Dispatch one VQ layer by precision (monomorphized kernels).
+#[allow(clippy::too_many_arguments)]
+fn run_vq_layer(tables: &[u8], l: &VqLayerSlots, bits: usize, x: &[f32], b: usize,
+                n_in: usize, n_out: usize, g: usize, out: &mut [f32]) {
+    let idx = &tables[l.idx.clone()];
+    let bias = view::f32s(&tables[l.bias.clone()]);
+    match &l.quant {
+        None => {
+            let t = Fp32Vq {
+                codebook: view::f32s(&tables[l.codebook.clone()]),
+                gain: view::f32s(&tables[l.gain.clone()]),
+                g,
+            };
+            vq_layer_into(x, b, &t, idx, bits, bias, n_in, n_out, g, out);
+        }
+        Some(q) => {
+            let t = Int8Vq {
+                codebook: view::i8s(&tables[l.codebook.clone()]),
+                codebook_scale: q.codebook_scale,
+                gain: view::i8s(&tables[l.gain.clone()]),
+                gain_params: q.gain,
+                g,
+            };
+            vq_layer_into(x, b, &t, idx, bits, bias, n_in, n_out, g, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::kan::eval::DenseModel;
+    use crate::kan::spec::KanSpec;
+    use crate::tensor::Tensor;
+
+    fn small_spec() -> BackendSpec {
+        BackendSpec {
+            kan: KanSpec { d_in: 3, d_hidden: 4, d_out: 2, grid_size: 5 },
+            vq: crate::kan::spec::VqSpec { codebook_size: 6 },
+            batch_buckets: vec![1, 4],
+        }
+    }
+
+    #[test]
+    fn dense_head_matches_eval_model() {
+        let mut rng = Pcg32::seeded(1);
+        let spec = small_spec();
+        let (d_in, d_h, d_out, g) = (3, 4, 2, 5);
+        let g0 = rng.normal_vec(d_in * d_h * g, 0.0, 0.5);
+        let g1 = rng.normal_vec(d_h * d_out * g, 0.0, 0.5);
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[d_in, d_h, g], &g0),
+            grids1: Tensor::from_f32(&[d_h, d_out, g], &g1),
+        };
+        let mut b = ArenaBackend::new(spec);
+        b.register_head("h", &head).unwrap();
+        let x = rng.normal_vec(4 * d_in, 0.0, 1.0);
+        let got = b.execute("h", &x, 4).unwrap();
+        let want = DenseModel { grids0: g0, grids1: g1, d_in, d_hidden: d_h, d_out, g }
+            .forward(&x, 4);
+        assert_eq!(got.len(), 4 * d_out);
+        for (a, w) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), w.to_bits(), "{a} vs {w}");
+        }
+        assert_eq!(b.stats.batches, 1);
+        assert_eq!(b.stats.rows, 4);
+    }
+
+    #[test]
+    fn head_plan_is_exposed_and_valid() {
+        let mut b = ArenaBackend::new(small_spec());
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
+            grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
+        };
+        b.register_head("h", &head).unwrap();
+        let plan = b.head_plan("h").unwrap();
+        plan.validate().unwrap();
+        assert!(plan.lookup("act/ping").is_some());
+        assert!(b.head_arena_bytes("h").unwrap() >= 60 * 4 + 40 * 4);
+        assert!(b.head_plan("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_heads_that_violate_spec() {
+        let mut b = ArenaBackend::new(small_spec());
+        let bad = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 9], &[0.0; 108]), // wrong G
+            grids1: Tensor::from_f32(&[4, 2, 9], &[0.0; 72]),
+        };
+        assert!(b.register_head("bad", &bad).is_err());
+        assert!(b.execute("bad", &[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_codebook_indices() {
+        let (k, g) = (6, 5);
+        let head = HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[k, g], &[0.0; 30]),
+            idx0: Tensor::from_i32(&[3, 4], &[0, 1, 2, 3, 4, 5, 0, 1, 2, 3, 4, 99]),
+            g0: Tensor::from_f32(&[3, 4], &[1.0; 12]),
+            bs0: Tensor::from_f32(&[4], &[0.0; 4]),
+            cb1: Tensor::from_f32(&[k, g], &[0.0; 30]),
+            idx1: Tensor::from_i32(&[4, 2], &[0; 8]),
+            g1: Tensor::from_f32(&[4, 2], &[1.0; 8]),
+            bs1: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        let mut b = ArenaBackend::new(small_spec());
+        assert!(b.register_head("h", &head).is_err());
+    }
+
+    #[test]
+    fn remove_head_unregisters() {
+        let mut b = ArenaBackend::new(small_spec());
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
+            grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
+        };
+        b.register_head("h", &head).unwrap();
+        assert!(b.remove_head("h"));
+        assert!(!b.remove_head("h"));
+        assert!(b.execute("h", &[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn oversized_bucket_rejected() {
+        let mut b = ArenaBackend::new(small_spec()); // buckets [1, 4]
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
+            grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
+        };
+        b.register_head("h", &head).unwrap();
+        assert!(b.execute("h", &[0.0; 3 * 8], 8).is_err());
+    }
+}

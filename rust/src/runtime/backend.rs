@@ -79,6 +79,19 @@ pub trait Backend {
     /// `[bucket, d_in]` with padding rows zeroed; returns row-major
     /// `[bucket, d_out]` scores (padding rows are garbage the caller drops).
     fn execute(&mut self, head: &str, x: &[f32], bucket: usize) -> Result<Vec<f32>>;
+
+    /// Execute one padded batch into a caller-owned output vector, so a
+    /// caller that reuses `out` across batches gives allocation-free
+    /// backends (`ArenaBackend`) a zero-alloc hot path.  The default
+    /// delegates to [`Backend::execute`]; `out` is cleared and refilled
+    /// with `[bucket, d_out]` scores.
+    fn execute_into(&mut self, head: &str, x: &[f32], bucket: usize,
+                    out: &mut Vec<f32>) -> Result<()> {
+        let scores = self.execute(head, x, bucket)?;
+        out.clear();
+        out.extend_from_slice(&scores);
+        Ok(())
+    }
 }
 
 /// `Send` recipe for constructing a [`Backend`] on the executor thread.
@@ -86,6 +99,10 @@ pub trait Backend {
 pub enum BackendConfig {
     /// Pure-Rust PLI serving; no artifacts or external runtime required.
     Native(BackendSpec),
+    /// Arena-resident serving: LUTHAM-planned tables (bit-packed indices,
+    /// Int8-resident codebooks/gains, ping-pong scratch) in one contiguous
+    /// 256-byte-aligned arena per head; zero-alloc per-batch hot path.
+    Arena(BackendSpec),
     /// PJRT engine over `artifacts/` (requires the `pjrt` feature and a
     /// real xla runtime — the vendored stub fails cleanly at startup).
     #[cfg(feature = "pjrt")]
@@ -104,6 +121,7 @@ impl BackendConfig {
     pub fn build(self) -> Result<Box<dyn Backend>> {
         match self {
             BackendConfig::Native(spec) => Ok(Box::new(super::native::NativeBackend::new(spec))),
+            BackendConfig::Arena(spec) => Ok(Box::new(super::arena::ArenaBackend::new(spec))),
             #[cfg(feature = "pjrt")]
             BackendConfig::Pjrt { artifacts_dir } => {
                 Ok(Box::new(super::pjrt::PjrtBackend::load(&artifacts_dir)?))
@@ -144,5 +162,27 @@ mod tests {
         let b = BackendConfig::default().build().unwrap();
         assert_eq!(b.spec().kan.d_in, 64);
         assert!(!b.name().is_empty());
+    }
+
+    #[test]
+    fn arena_config_builds() {
+        let b = BackendConfig::Arena(BackendSpec::default()).build().unwrap();
+        assert_eq!(b.spec().kan.d_in, 64);
+        assert_eq!(b.name(), "arena-lutham");
+    }
+
+    #[test]
+    fn default_execute_into_matches_execute() {
+        let mut b = BackendConfig::default().build().unwrap();
+        let head = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[64, 128, 10], &vec![0.25; 64 * 128 * 10]),
+            grids1: Tensor::from_f32(&[128, 20, 10], &vec![0.5; 128 * 20 * 10]),
+        };
+        b.register_head("h", &head).unwrap();
+        let x = vec![0.1f32; 64];
+        let want = b.execute("h", &x, 1).unwrap();
+        let mut out = vec![9.0f32; 3]; // stale contents must be cleared
+        b.execute_into("h", &x, 1, &mut out).unwrap();
+        assert_eq!(out, want);
     }
 }

@@ -2,15 +2,19 @@
 //!
 //! [`Backend`] is the contract the coordinator executes through; it is
 //! implemented by the pure-Rust [`NativeBackend`] (default: PLI
-//! lookup-table math straight from head weights, no artifacts required)
-//! and, behind the `pjrt` cargo feature, by `PjrtBackend` — the PJRT CPU
-//! client that loads `artifacts/*.hlo.txt` (HLO text — see
-//! python/compile/aot.py for why not serialized protos) and executes them.
+//! lookup-table math straight from head weights, no artifacts required),
+//! the [`ArenaBackend`] (same math served from one LUTHAM-planned
+//! 256-byte-aligned arena per head — bit-packed indices decoded in place,
+//! zero-alloc hot path, bit-for-bit equal to native) and, behind the
+//! `pjrt` cargo feature, by `PjrtBackend` — the PJRT CPU client that loads
+//! `artifacts/*.hlo.txt` (HLO text — see python/compile/aot.py for why not
+//! serialized protos) and executes them.
 //!
 //! The manifest parser stays feature-independent: it is plain JSON and the
 //! native backend can serve the same batch-bucket contract the AOT export
 //! describes.
 
+pub mod arena;
 pub mod backend;
 pub mod manifest;
 pub mod native;
@@ -22,6 +26,7 @@ pub mod literal;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use arena::{ArenaBackend, ArenaStats};
 pub use backend::{Backend, BackendConfig, BackendSpec};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec};
 pub use native::{NativeBackend, NativeStats};

@@ -1,8 +1,13 @@
 //! Lightweight benchmark harness (criterion is not vendored in the image;
 //! DESIGN.md §2).  Warmup + timed iterations + robust summary stats, plus
-//! throughput accounting.  Used by the `benches/` targets.
+//! throughput accounting and machine-readable JSON emission (the
+//! `BENCH_*.json` files the bench targets write so the perf trajectory is
+//! tracked across PRs).  Used by the `benches/` targets.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{to_string, Json};
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -25,6 +30,19 @@ impl BenchResult {
         items_per_iter / (self.mean_ns / 1e9)
     }
 
+    /// Machine-readable form (written into `BENCH_*.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("max_ns", Json::num(self.max_ns)),
+        ])
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<42} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
@@ -35,6 +53,18 @@ impl BenchResult {
             fmt_ns(self.p95_ns),
         )
     }
+}
+
+/// Write a bench result set as `{"bench": <name>, "results": [...]}` —
+/// the machine-readable record (`BENCH_serving.json` / `BENCH_kernel.json`)
+/// that tracks the perf trajectory across PRs.
+pub fn write_results(path: impl AsRef<Path>, bench_name: &str,
+                     results: Vec<Json>) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("bench", Json::str(bench_name)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(path, to_string(&doc))
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -139,6 +169,31 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_roundtrip_and_file_write() {
+        let r = BenchResult {
+            name: "k".into(),
+            iters: 7,
+            mean_ns: 1500.0,
+            p50_ns: 1400.0,
+            p95_ns: 1900.0,
+            min_ns: 1000.0,
+            max_ns: 2000.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("k"));
+        assert_eq!(j.get("iters").and_then(|v| v.as_usize()), Some(7));
+        let dir = std::env::temp_dir().join("share_kan_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_results(&path, "unit", vec![j]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        assert_eq!(doc.get("results").and_then(|v| v.as_arr()).map(|a| a.len()), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

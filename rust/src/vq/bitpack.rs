@@ -50,6 +50,27 @@ pub fn unpack(packed: &[u8], bits: usize, count: usize) -> Vec<u32> {
     out
 }
 
+/// Read the `i`-th `bits`-wide value out of a packed buffer without
+/// unpacking the stream — the arena backend's in-place index decode.
+/// Bitwise identical to `unpack(packed, bits, i + 1)[i]`.
+#[inline]
+pub fn read_packed(packed: &[u8], bits: usize, i: usize) -> u32 {
+    debug_assert!(bits >= 1 && bits <= 32);
+    let mut bitpos = i * bits;
+    let mut val = 0u64;
+    let mut got = 0usize;
+    while got < bits {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let take = (8 - off).min(bits - got);
+        let chunk = ((packed[byte] >> off) as u64) & ((1u64 << take) - 1);
+        val |= chunk << got;
+        got += take;
+        bitpos += take;
+    }
+    val as u32
+}
+
 /// Bits needed for indices into a K-entry codebook.
 pub fn bits_for(k: usize) -> usize {
     if k <= 1 {
@@ -102,6 +123,22 @@ mod tests {
         let values: Vec<u32> = (0..10_000).map(|_| rng.below(512) as u32).collect();
         let packed = pack(&values, bits_for(512));
         assert!(packed.len() * 8 < values.len() * 32 / 3, "{}", packed.len());
+    }
+
+    #[test]
+    fn read_packed_matches_unpack() {
+        let mut rng = Pcg32::seeded(3);
+        for bits in [1usize, 5, 8, 9, 13, 16, 24, 32] {
+            let n = 131;
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let values: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+            let packed = pack(&values, bits);
+            let unpacked = unpack(&packed, bits, n);
+            for i in 0..n {
+                assert_eq!(read_packed(&packed, bits, i), unpacked[i], "bits={bits} i={i}");
+                assert_eq!(read_packed(&packed, bits, i), values[i]);
+            }
+        }
     }
 
     #[test]

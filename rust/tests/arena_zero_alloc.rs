@@ -1,0 +1,93 @@
+//! The arena backend's acceptance contract: after head registration, the
+//! per-batch hot path (`execute_into` with a warmed, caller-reused output
+//! vector) performs **zero heap allocations** — the LUTHAM property the
+//! paper needs for safety-certified deployment (§4.3, ISO 26262).
+//!
+//! Asserted with a counting global allocator, so this file holds exactly
+//! one test (the counter is process-global; parallel tests would alias it).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use share_kan::coordinator::HeadWeights;
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
+use share_kan::vq::{compress, Precision};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+struct CountingAlloc;
+
+// SAFETY: delegates everything to System; only adds a counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn hot_path_allocates_nothing_after_registration() {
+    // a VQ Int8 head: the variant with the most table machinery (packed
+    // indices, Int8 codebook + gains) on the hot path
+    let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 5, grid_size: 8 };
+    let ck = synthetic_dense(&spec, 1);
+    let vq_ck = compress(&ck, &spec, 32, Precision::Int8, 42).unwrap().to_checkpoint();
+    let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
+    let bspec = BackendSpec::for_head(&head).with_buckets(&[1, 8]);
+    let mut backend = BackendConfig::Arena(bspec).build().unwrap();
+    backend.register_head("h", &head).unwrap();
+
+    // also cover dense and mlp heads in the same measured loop
+    let dense_spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 5, grid_size: 8 };
+    let dense_head = HeadWeights::from_checkpoint(&synthetic_dense(&dense_spec, 2)).unwrap();
+    backend.register_head("d", &dense_head).unwrap();
+
+    let mut rng = Pcg32::seeded(9);
+    let x = rng.normal_vec(8 * spec.d_in, 0.0, 1.0);
+    let mut out: Vec<f32> = Vec::new();
+    // warm the output vector's capacity (the one legal allocation site)
+    backend.execute_into("h", &x, 8, &mut out).unwrap();
+    backend.execute_into("d", &x, 8, &mut out).unwrap();
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..100 {
+        backend.execute_into("h", &x, 8, &mut out).unwrap();
+        backend.execute_into("d", &x, 8, &mut out).unwrap();
+        std::hint::black_box(&out);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        allocs, 0,
+        "arena hot path must not allocate: counted {allocs} allocations over 200 batches"
+    );
+    assert_eq!(out.len(), 8 * 5);
+}

@@ -218,10 +218,10 @@ fn failure_injection_bad_head_weights() {
     let c = handle.client.clone();
     // wrong hidden width
     let bad = HeadWeights::Mlp {
-        w1: Tensor::from_f32(&[64, 32], &vec![0.0; 64 * 32]),
-        b1: Tensor::from_f32(&[32], &vec![0.0; 32]),
-        w2: Tensor::from_f32(&[32, 20], &vec![0.0; 32 * 20]),
-        b2: Tensor::from_f32(&[20], &vec![0.0; 20]),
+        w1: Tensor::from_f32(&[64, 32], &[0.0; 64 * 32]),
+        b1: Tensor::from_f32(&[32], &[0.0; 32]),
+        w2: Tensor::from_f32(&[32, 20], &[0.0; 32 * 20]),
+        b2: Tensor::from_f32(&[20], &[0.0; 20]),
     };
     assert!(c.add_head("bad", bad).is_err());
     // coordinator still serves good heads afterwards

@@ -1,0 +1,190 @@
+//! Integration: the sharded executor pool end-to-end — deterministic
+//! head→shard routing, shard-aware hot-swap, aggregated metrics, and the
+//! load-bearing guarantee that a pooled deployment is **bitwise identical**
+//! to a single executor serving the same heads.
+
+use std::time::Duration;
+
+use share_kan::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, PoolConfig,
+};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{BackendConfig, BackendSpec};
+
+fn vq_heads(n: usize) -> Vec<(String, HeadWeights)> {
+    use share_kan::vq::{compress, Precision};
+    let spec = KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let dense = synthetic_dense(&spec, 42);
+    (0..n)
+        .map(|i| {
+            let ck = compress(&dense, &spec, 16, Precision::Int8, 100 + i as u64)
+                .unwrap()
+                .to_checkpoint();
+            (format!("task{i}"), HeadWeights::from_checkpoint(&ck).unwrap())
+        })
+        .collect()
+}
+
+fn backend_spec() -> BackendSpec {
+    let heads = vq_heads(1);
+    BackendSpec::for_head(&heads[0].1).with_buckets(&[1, 4, 8])
+}
+
+#[test]
+fn pool_matches_single_executor_bitwise() {
+    let heads = vq_heads(4);
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+
+    let single = Coordinator::start(CoordinatorConfig {
+        backend: BackendConfig::Arena(backend_spec()),
+        policy,
+        queue_capacity: 256,
+    })
+    .unwrap();
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(backend_spec()),
+        policy,
+        queue_capacity: 256,
+        num_shards: 3,
+    })
+    .unwrap();
+    for (name, head) in &heads {
+        single.client.add_head(name, head.clone()).unwrap();
+        pool.client.add_head(name, head.clone()).unwrap();
+    }
+
+    let mut rng = Pcg32::seeded(7);
+    for round in 0..20 {
+        let (name, _) = &heads[round % heads.len()];
+        let x = rng.normal_vec(6, 0.0, 1.0);
+        let a = single.client.infer(name, x.clone()).unwrap();
+        let b = pool.client.infer(name, x).unwrap();
+        assert_eq!(a.scores.len(), b.scores.len());
+        for (s, p) in a.scores.iter().zip(&b.scores) {
+            assert_eq!(s.to_bits(), p.to_bits(), "round {round} head {name}: {s} != {p}");
+        }
+    }
+    pool.shutdown();
+    single.shutdown();
+}
+
+#[test]
+fn routing_is_deterministic_and_shard_local() {
+    let heads = vq_heads(6);
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(backend_spec()),
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        queue_capacity: 128,
+        num_shards: 4,
+    })
+    .unwrap();
+    let c = &pool.client;
+    for (name, head) in &heads {
+        c.add_head(name, head.clone()).unwrap();
+    }
+    // routing is a pure function of the name: repeated queries agree, and
+    // cloned handles agree with the original
+    let c2 = c.clone();
+    for (name, _) in &heads {
+        assert_eq!(c.shard_for(name), c.shard_for(name));
+        assert_eq!(c.shard_for(name), c2.shard_for(name));
+    }
+    // traffic for a head lands only on its owning shard
+    let mut rng = Pcg32::seeded(8);
+    let (name, _) = &heads[0];
+    let owner = c.shard_for(name);
+    for _ in 0..10 {
+        c.infer(name, rng.normal_vec(6, 0.0, 1.0)).unwrap();
+    }
+    for s in 0..c.num_shards() {
+        let responses = c
+            .shard(s)
+            .metrics()
+            .counters
+            .responses
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if s == owner {
+            assert_eq!(responses, 10, "owner shard must serve all traffic");
+        } else {
+            assert_eq!(responses, 0, "shard {s} must see no traffic for '{name}'");
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn shard_aware_hot_swap_and_remove() {
+    let heads = vq_heads(3);
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(backend_spec()),
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        queue_capacity: 128,
+        num_shards: 2,
+    })
+    .unwrap();
+    let c = &pool.client;
+    for (name, head) in &heads {
+        c.add_head(name, head.clone()).unwrap();
+    }
+    let mut rng = Pcg32::seeded(9);
+    // remove one head: its requests fail fast, the others keep serving
+    assert!(c.remove_head("task1").unwrap());
+    assert!(!c.remove_head("task1").unwrap());
+    assert!(c.infer("task1", rng.normal_vec(6, 0.0, 1.0)).is_err());
+    assert!(c.infer("task0", rng.normal_vec(6, 0.0, 1.0)).is_ok());
+    assert!(c.infer("task2", rng.normal_vec(6, 0.0, 1.0)).is_ok());
+    // hot-swap re-register on the same (deterministic) shard
+    c.add_head("task1", heads[2].1.clone()).unwrap();
+    let swapped = c.infer("task1", rng.normal_vec(6, 0.0, 1.0)).unwrap();
+    assert_eq!(swapped.scores.len(), 4);
+    pool.shutdown();
+}
+
+#[test]
+fn aggregated_metrics_sum_across_shards() {
+    let heads = vq_heads(5);
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(backend_spec()),
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        queue_capacity: 128,
+        num_shards: 3,
+    })
+    .unwrap();
+    let c = &pool.client;
+    for (name, head) in &heads {
+        c.add_head(name, head.clone()).unwrap();
+    }
+    let mut rng = Pcg32::seeded(10);
+    let total = 30usize;
+    for i in 0..total {
+        let (name, _) = &heads[i % heads.len()];
+        c.infer(name, rng.normal_vec(6, 0.0, 1.0)).unwrap();
+    }
+    let agg = c.aggregated_metrics();
+    use std::sync::atomic::Ordering;
+    assert_eq!(agg.counters.responses.load(Ordering::Relaxed), total as u64);
+    assert_eq!(agg.counters.requests.load(Ordering::Relaxed), total as u64);
+    assert_eq!(agg.latency.count(), total as u64);
+    // per-shard sums match the aggregate
+    let mut per_shard = 0u64;
+    for s in 0..c.num_shards() {
+        per_shard += c.shard(s).metrics().counters.responses.load(Ordering::Relaxed);
+    }
+    assert_eq!(per_shard, total as u64);
+    pool.shutdown();
+}
+
+#[test]
+fn unknown_head_fails_cleanly_through_pool() {
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(backend_spec()),
+        policy: BatchPolicy::default(),
+        queue_capacity: 16,
+        num_shards: 2,
+    })
+    .unwrap();
+    assert!(pool.client.infer("nope", vec![0.0; 6]).is_err());
+    pool.shutdown();
+}

@@ -76,7 +76,8 @@ fn prop_memplan_no_overlap_any_shape() {
         };
         let vq = VqSpec { codebook_size: 1 + rng.below(70000) };
         let precision = if rng.uniform() < 0.5 { Precision::Int8 } else { Precision::Fp32 };
-        let plan = plan_vq_head(&spec, &vq, precision, 1 + rng.below(256));
+        let plan = plan_vq_head(&spec, &vq, precision, 1 + rng.below(256))
+            .map_err(|e| format!("{spec:?} {vq:?}: planner refused: {e}"))?;
         plan.validate().map_err(|e| format!("{spec:?} {vq:?}: {e}"))?;
         // total covers the last buffer
         let end = plan.buffers.iter().map(|b| b.offset + b.size).max().unwrap();
@@ -93,15 +94,46 @@ fn prop_planner_arbitrary_sequences() {
         let mut sizes = Vec::new();
         for i in 0..n {
             let size = rng.below(10_000);
-            p.add(&format!("b{i}"), size);
+            p.add(&format!("b{i}"), size)?;
             sizes.push(size);
         }
-        let plan = p.finish();
+        let plan = p.finish()?;
         plan.validate().map_err(|e| e.to_string())?;
         prop_assert!(plan.buffers.len() == n);
         for (b, &s) in plan.buffers.iter().zip(&sizes) {
             prop_assert!(b.size == s);
         }
+        // the offset index agrees with a linear scan for every buffer
+        for b in &plan.buffers {
+            let via_index = plan.lookup(&b.name);
+            let via_scan = plan.buffers.iter().find(|x| x.name == b.name);
+            prop_assert!(via_index == via_scan, "lookup('{}') diverged from scan", b.name);
+        }
+        prop_assert!(plan.lookup("definitely-not-planned").is_none());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_overflow_is_a_clean_error() {
+    // adversarial sizes must produce Err, never an arithmetic panic, and
+    // must leave the planner usable
+    check("planner overflow", 0x9129, 100, |rng| {
+        let mut p = Planner::new();
+        // at least one non-empty buffer so the next offset is >= ALIGN,
+        // which makes offset + huge overflow for any huge > MAX - ALIGN
+        p.add("base", 1 + rng.below(4096))?;
+        let pre = rng.below(5);
+        for i in 0..pre {
+            p.add(&format!("pre{i}"), rng.below(4096))?;
+        }
+        let huge = usize::MAX - rng.below(128);
+        prop_assert!(p.add("huge", huge).is_err(), "size {huge} must be rejected");
+        p.add("after", rng.below(4096))?;
+        let plan = p.finish()?;
+        plan.validate().map_err(|e| e.to_string())?;
+        prop_assert!(plan.lookup("huge").is_none());
+        prop_assert!(plan.lookup("after").is_some());
         Ok(())
     });
 }
