@@ -1,7 +1,10 @@
 //! Bench: end-to-end serving throughput through the coordinator (batching +
 //! routing + backend execution), per head variant, batching policy and
 //! backend (native vs arena), plus a multi-head workload comparing ONE
-//! executor against the sharded executor pool.
+//! executor against the sharded executor pool, plus a **family** workload
+//! comparing per-head private arenas against the shared-codebook family
+//! arena (paper §6) — including the byte accounting (marginal vs private
+//! head cost) and a memsim residency trace of the shared region.
 //!
 //! Results are printed AND written machine-readable to `BENCH_serving.json`
 //! so the perf trajectory is tracked across PRs.
@@ -16,11 +19,14 @@ use share_kan::coordinator::{
     PoolConfig,
 };
 use share_kan::data::rng::Pcg32;
-use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
 use share_kan::kan::spec::{KanSpec, VqSpec};
+use share_kan::memplan::plan_family;
+use share_kan::memsim::{trace_family_vq_heads, Cache, CacheConfig};
 use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::util::bench::write_results;
 use share_kan::util::json::Json;
+use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, Precision};
 
 /// One client handle over either deployment shape.
@@ -229,6 +235,107 @@ fn main() {
         ("heads", Json::num(n_heads as f64)),
         ("threads", Json::num(threads as f64)),
         ("speedup_vs_single", Json::num(pool_req_s / single_req_s.max(1e-9))),
+    ]));
+
+    // ---- family workload: per-head private arenas vs the shared-codebook
+    // ---- family arena (paper §6), same universal-basis Int8 heads --------
+    let fam_heads = if smoke { 4usize } else { 8usize };
+    let fam_requests = if smoke { 400 } else { 4000 };
+    let fam_cks: Vec<Checkpoint> = (0..fam_heads)
+        .map(|i| synthetic_dense(&spec, 500 + i as u64))
+        .collect();
+    let fam_refs: Vec<&Checkpoint> = fam_cks.iter().collect();
+    let fam_weights: Vec<HeadWeights> = compress_family(&fam_refs, &spec, k,
+                                                        Precision::Int8, 11)
+        .unwrap()
+        .iter()
+        .map(|c| HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        .collect();
+    let fam_names: Vec<String> = (0..fam_heads).map(|i| format!("fam{i}")).collect();
+
+    println!("{:-<100}", "");
+    println!(
+        "family workload: {fam_heads} int8 heads sharing ONE universal codebook, \
+         {fam_requests} requests, {threads} client threads"
+    );
+
+    let fam_rows: Vec<(&str, BackendConfig)> = vec![
+        ("per-head arenas", BackendConfig::Arena(BackendSpec::default())),
+        ("family arena   ", BackendConfig::FamilyArena(BackendSpec::default())),
+    ];
+    let mut fam_req_s = [0f64; 2];
+    for (bi, (label, backend)) in fam_rows.into_iter().enumerate() {
+        let handle = Coordinator::start(CoordinatorConfig {
+            backend,
+            policy,
+            queue_capacity: 4096,
+        })
+        .unwrap();
+        for (name, head) in fam_names.iter().zip(&fam_weights) {
+            handle.client.add_head(name, head.clone()).unwrap();
+        }
+        let req_s = drive(&Client::Single(handle.client.clone()), &fam_names,
+                          spec.d_in, fam_requests, threads);
+        fam_req_s[bi] = req_s;
+        println!("{label}          {req_s:>8.0} req/s");
+        handle.shutdown();
+    }
+
+    // byte accounting straight from the planner (the layout both backends
+    // materialize): marginal head cost must be a small fraction of a
+    // private-arena head at equal output bits
+    let fam_plan = plan_family(&spec, &VqSpec { codebook_size: k },
+                               Precision::Int8, 128)
+        .unwrap();
+    let marginal = fam_plan.head_bytes();
+    let private = fam_plan.private_head_bytes().unwrap();
+    let shared = fam_plan.shared_bytes();
+    let marginal_fraction = marginal as f64 / private as f64;
+    println!(
+        "bytes: shared {shared} B/family + marginal {marginal} B/head vs private \
+         {private} B/head -> marginal = {:.1}% of a private head",
+        100.0 * marginal_fraction
+    );
+    println!(
+        "{} heads: family {} B vs private {} B ({:.2}x smaller)",
+        fam_heads,
+        fam_plan.family_bytes(fam_heads).unwrap(),
+        private * fam_heads,
+        (private * fam_heads) as f64 / fam_plan.family_bytes(fam_heads).unwrap() as f64
+    );
+
+    // memsim: replay the family layout through an embedded-class L2 — the
+    // shared codebook region must stay resident across head switches
+    let mut cache = Cache::new(CacheConfig::orin_l2());
+    trace_family_vq_heads(&mut cache, &fam_plan, fam_heads, 1, 1);
+    cache.reset_stats();
+    let residency = trace_family_vq_heads(&mut cache, &fam_plan, fam_heads, 4, 2);
+    println!(
+        "memsim: shared-region L2 residency across {fam_heads} interleaved heads: \
+         {:.2}% hit rate",
+        100.0 * residency.stats.hit_rate()
+    );
+
+    results.push(Json::obj(vec![
+        ("name", Json::str("family/per_head_private")),
+        ("req_per_s", Json::num(fam_req_s[0])),
+        ("heads", Json::num(fam_heads as f64)),
+        ("arena_bytes_per_head", Json::num(private as f64)),
+    ]));
+    results.push(Json::obj(vec![
+        ("name", Json::str("family/shared_codebook")),
+        ("req_per_s", Json::num(fam_req_s[1])),
+        ("heads", Json::num(fam_heads as f64)),
+        ("shared_bytes", Json::num(shared as f64)),
+        ("marginal_bytes_per_head", Json::num(marginal as f64)),
+        ("private_bytes_per_head", Json::num(private as f64)),
+        ("marginal_fraction_of_private", Json::num(marginal_fraction)),
+    ]));
+    results.push(Json::obj(vec![
+        ("name", Json::str("family/shared_region_residency")),
+        ("heads", Json::num(fam_heads as f64)),
+        ("l2_hit_rate", Json::num(residency.stats.hit_rate())),
+        ("requested_bytes", Json::num(residency.requested_bytes as f64)),
     ]));
 
     write_results("BENCH_serving.json", "serving_throughput", results).unwrap();

@@ -10,9 +10,12 @@ use std::time::{Duration, Instant};
 
 use super::request::InferRequest;
 
+/// Size-or-deadline batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// Close a batch as soon as this many requests are pending.
     pub max_batch: usize,
+    /// Close a batch once its oldest request has waited this long.
     pub max_wait: Duration,
 }
 
@@ -25,12 +28,14 @@ impl Default for BatchPolicy {
 /// A closed batch ready for execution.
 #[derive(Debug)]
 pub struct Batch {
+    /// Live requests in FIFO order.
     pub requests: Vec<InferRequest>,
     /// bucket size the executor pads to
     pub bucket: usize,
 }
 
 impl Batch {
+    /// Padding rows the bucket adds beyond the live requests.
     pub fn padded_slots(&self) -> usize {
         self.bucket - self.requests.len()
     }
@@ -43,18 +48,22 @@ pub struct PendingQueue {
 }
 
 impl PendingQueue {
+    /// Enqueue one request (FIFO).
     pub fn push(&mut self, req: InferRequest) {
         self.queue.push_back(req);
     }
 
+    /// Number of pending requests.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether nothing is pending.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// How long the oldest pending request has waited, if any.
     pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
         self.queue.front().map(|r| now.duration_since(r.enqueued))
     }

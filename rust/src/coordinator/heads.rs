@@ -13,14 +13,25 @@ use crate::kan::spec::KanSpec;
 use crate::tensor::Tensor;
 
 /// Weights for one head, in artifact parameter order (x excluded).
+///
+/// Variant field naming follows the checkpoint tensors: per layer `li`,
+/// `cb{li}`/`cbq{li}` is the codebook (fp32 / Int8), `idx{li}` the edge →
+/// codebook-row assignment, `g{li}`/`gq{li}` the per-edge gains (fp32 /
+/// log-Int8), `bs{li}` the folded per-output fp32 bias sums.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // field names mirror checkpoint tensors (see above)
 pub enum HeadWeights {
+    /// MLP baseline: two fp32 weight/bias pairs.
     Mlp { w1: Tensor, b1: Tensor, w2: Tensor, b2: Tensor },
+    /// Uncompressed dense KAN: per-layer `[n_in, n_out, G]` fp32 grids.
     DenseKan { grids0: Tensor, grids1: Tensor },
+    /// SHARe-KAN compressed head, fp32 codebooks/gains.
     VqFp32 {
         cb0: Tensor, idx0: Tensor, g0: Tensor, bs0: Tensor,
         cb1: Tensor, idx1: Tensor, g1: Tensor, bs1: Tensor,
     },
+    /// SHARe-KAN compressed head, Int8 codebooks + log-Int8 gains;
+    /// `scales` holds per-layer `[codebook_scale, log_lo, log_step]`.
     VqInt8 {
         cbq0: Tensor, idx0: Tensor, gq0: Tensor, bs0: Tensor,
         cbq1: Tensor, idx1: Tensor, gq1: Tensor, bs1: Tensor,

@@ -22,6 +22,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
@@ -31,6 +32,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Record one latency sample (lock-free).
     pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(NUM_BUCKETS - 1);
@@ -40,10 +42,12 @@ impl LatencyHistogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency over all samples (zero when empty).
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -52,6 +56,7 @@ impl LatencyHistogram {
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
@@ -89,6 +94,7 @@ impl LatencyHistogram {
         self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
+    /// One-line human-readable digest (count, mean, p50/p95/p99, max).
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:?} p50={:?} p95={:?} p99={:?} max={:?}",
@@ -105,11 +111,17 @@ impl LatencyHistogram {
 /// Coordinator-level counters.
 #[derive(Debug, Default)]
 pub struct Counters {
+    /// Requests submitted (admitted or rejected).
     pub requests: AtomicU64,
+    /// Responses sent (success or error).
     pub responses: AtomicU64,
+    /// Batches executed.
     pub batches: AtomicU64,
+    /// Live rows across all executed batches.
     pub batched_items: AtomicU64,
+    /// Padding rows added by bucket rounding.
     pub padded_slots: AtomicU64,
+    /// Requests rejected by admission-queue backpressure.
     pub rejected: AtomicU64,
 }
 
@@ -128,6 +140,7 @@ impl Counters {
         }
     }
 
+    /// Mean live rows per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {

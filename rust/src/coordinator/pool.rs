@@ -26,12 +26,16 @@ use super::request::InferResponse;
 use super::server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
 use crate::runtime::BackendConfig;
 
+/// Configuration for an [`ExecutorPool`] (one entry per knob, applied to
+/// every shard identically).
 pub struct PoolConfig {
     /// backend recipe each shard builds its own instance from
     pub backend: BackendConfig,
+    /// batching policy every shard batches under
     pub policy: BatchPolicy,
     /// bounded admission queue depth **per shard**
     pub queue_capacity: usize,
+    /// number of executor shards to start
     pub num_shards: usize,
 }
 
@@ -54,6 +58,7 @@ pub struct ExecutorPool {
 
 /// Owner handle that joins every shard executor on drop.
 pub struct PoolHandle {
+    /// Cloneable client handle over the shard set.
     pub client: ExecutorPool,
     handles: Vec<CoordinatorHandle>,
 }
@@ -88,6 +93,7 @@ impl ExecutorPool {
         Ok(PoolHandle { client: ExecutorPool { shards }, handles })
     }
 
+    /// Number of executor shards behind this handle.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -105,6 +111,27 @@ impl ExecutorPool {
     /// Register (or hot-swap replace) a head on its owning shard.
     pub fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
         self.shards[self.shard_for(name)].add_head(name, weights)
+    }
+
+    /// Register every head of a **family** on its owning shard (FNV-1a
+    /// routing unchanged).  Behind a family backend
+    /// (`BackendConfig::FamilyArena`) the first head landing on a shard
+    /// materializes the family's shared codebook arena there — i.e. the
+    /// family registers **once per shard** — and every subsequent head on
+    /// that shard hot-adds at marginal (bit-packed indices + scalars)
+    /// cost.  Returns the number of distinct shards the family now spans.
+    ///
+    /// Registration stops at the first failing head (earlier heads stay
+    /// registered, exactly as individual [`ExecutorPool::add_head`] calls
+    /// would leave them).
+    pub fn add_family(&self, heads: &[(String, HeadWeights)]) -> Result<usize> {
+        let mut touched = vec![false; self.shards.len()];
+        for (name, weights) in heads {
+            let shard = self.shard_for(name);
+            self.shards[shard].add_head(name, weights.clone())?;
+            touched[shard] = true;
+        }
+        Ok(touched.iter().filter(|&&t| t).count())
     }
 
     /// Unregister a head from its owning shard; returns whether it existed.
@@ -172,5 +199,51 @@ mod tests {
     fn zero_shards_rejected() {
         let cfg = PoolConfig { num_shards: 0, ..PoolConfig::default() };
         assert!(ExecutorPool::start(cfg).is_err());
+    }
+
+    #[test]
+    fn add_family_routes_by_name_and_counts_shards() {
+        use crate::kan::checkpoint::synthetic_dense;
+        use crate::kan::spec::KanSpec;
+        use crate::runtime::BackendSpec;
+        use crate::vq::Precision;
+
+        // four family heads sharing one universal codebook, served through
+        // a family-arena pool: routing must stay pure FNV-1a and every head
+        // must answer from its owning shard
+        let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
+        let k = 8;
+        let cks: Vec<_> = (0..4).map(|i| synthetic_dense(&spec, 300 + i)).collect();
+        let refs: Vec<&crate::kan::checkpoint::Checkpoint> = cks.iter().collect();
+        let family = crate::vq::universal::compress_family(&refs, &spec, k,
+                                                           Precision::Int8, 5)
+            .unwrap();
+        let heads: Vec<(String, HeadWeights)> = family
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                (format!("task{i}"),
+                 HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+            })
+            .collect();
+
+        let bspec = BackendSpec::for_head(&heads[0].1).with_buckets(&[1, 4]);
+        let pool = ExecutorPool::start(PoolConfig {
+            backend: BackendConfig::FamilyArena(bspec),
+            policy: BatchPolicy::default(),
+            queue_capacity: 64,
+            num_shards: 2,
+        })
+        .unwrap();
+        let shards_touched = pool.client.add_family(&heads).unwrap();
+        assert!(shards_touched >= 1 && shards_touched <= 2);
+        for (name, _) in &heads {
+            let resp = pool.client.infer(name, vec![0.1; spec.d_in]).unwrap();
+            assert_eq!(resp.scores.len(), spec.d_out);
+            // deterministic routing: the owning shard is a pure function
+            assert_eq!(pool.client.shard_for(name),
+                       (fnv1a(name) % 2) as usize);
+        }
+        pool.shutdown();
     }
 }

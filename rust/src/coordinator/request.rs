@@ -6,29 +6,39 @@ use std::time::Instant;
 /// One inference request: a feature vector bound for a named task head.
 #[derive(Debug)]
 pub struct InferRequest {
+    /// Monotonic request id assigned by the client handle.
     pub id: u64,
     /// which hot-swappable head serves this request (multi-head deployment,
     /// paper §1 "Deployment Context")
     pub head: String,
+    /// `d_in` input features.
     pub features: Vec<f32>,
+    /// Admission timestamp (end-to-end latency measurement).
     pub enqueued: Instant,
+    /// Per-request response channel.
     pub resp: mpsc::Sender<InferResponse>,
 }
 
+/// Response to one [`InferRequest`]: scores or an error.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
+    /// Id of the request this answers.
     pub id: u64,
+    /// `d_out` scores (empty on error).
     pub scores: Vec<f32>,
     /// end-to-end latency (enqueue -> response send)
     pub latency: std::time::Duration,
+    /// `Some` when the request failed (unknown head, backend error, ...).
     pub error: Option<String>,
 }
 
 impl InferResponse {
+    /// Successful response.
     pub fn ok(id: u64, scores: Vec<f32>, latency: std::time::Duration) -> Self {
         InferResponse { id, scores, latency, error: None }
     }
 
+    /// Failed response.
     pub fn err(id: u64, msg: impl Into<String>) -> Self {
         InferResponse {
             id,

@@ -27,9 +27,11 @@ use super::metrics::{Counters, LatencyHistogram};
 use super::request::{InferRequest, InferResponse};
 use crate::runtime::{Backend, BackendConfig};
 
+/// Configuration for one [`Coordinator`] executor.
 pub struct CoordinatorConfig {
     /// which execution backend the executor thread constructs and owns
     pub backend: BackendConfig,
+    /// dynamic batching policy
     pub policy: BatchPolicy,
     /// bounded admission queue depth; try_submit rejects beyond this
     pub queue_capacity: usize,
@@ -45,9 +47,13 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Shared metrics snapshot handle (atomics inside; cheap to read live).
 pub struct Metrics {
+    /// End-to-end request latency (enqueue → response).
     pub latency: LatencyHistogram,
+    /// Backend execution latency per batch.
     pub exec_latency: LatencyHistogram,
+    /// Throughput / batching / backpressure counters.
     pub counters: Counters,
 }
 
@@ -68,6 +74,7 @@ pub struct Coordinator {
 
 /// Owner handle that joins the executor on drop.
 pub struct CoordinatorHandle {
+    /// Cloneable client handle for this executor.
     pub client: Coordinator,
     join: Option<JoinHandle<()>>,
 }
@@ -96,6 +103,7 @@ impl Coordinator {
         Ok(CoordinatorHandle { client, join: Some(join) })
     }
 
+    /// Live metrics for this executor.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -153,12 +161,15 @@ impl Coordinator {
         Ok(resp)
     }
 
+    /// Ask the executor to stop (non-blocking; see
+    /// [`CoordinatorHandle::shutdown`] to also join it).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
     }
 }
 
 impl CoordinatorHandle {
+    /// Graceful shutdown: stop the executor and join its thread.
     pub fn shutdown(mut self) {
         self.client.shutdown();
         if let Some(j) = self.join.take() {

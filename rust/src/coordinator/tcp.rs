@@ -19,6 +19,7 @@ use anyhow::Result;
 use super::server::Coordinator;
 use crate::util::json::{self, Json};
 
+/// Newline-delimited-JSON TCP front-end over a [`Coordinator`].
 pub struct TcpServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -59,14 +60,17 @@ impl TcpServer {
         Ok(TcpServer { addr: local, stop, accepted, join: Some(join) })
     }
 
+    /// The bound local address (resolves ephemeral port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// Connections accepted so far.
     pub fn connections_accepted(&self) -> u64 {
         self.accepted.load(Ordering::Relaxed)
     }
 
+    /// Stop accepting and join the acceptor thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(j) = self.join.take() {
@@ -135,12 +139,14 @@ pub struct TcpClient {
 }
 
 impl TcpClient {
+    /// Connect to a [`TcpServer`].
     pub fn connect(addr: std::net::SocketAddr) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr)?;
         let peer = stream.try_clone()?;
         Ok(TcpClient { reader: BufReader::new(stream), writer: peer })
     }
 
+    /// Send one request and block for its scores.
     pub fn infer(&mut self, head: &str, features: &[f32]) -> Result<Vec<f32>> {
         let req = Json::obj(vec![
             ("head", Json::str(head)),

@@ -13,6 +13,7 @@ pub struct PoissonArrivals {
 }
 
 impl PoissonArrivals {
+    /// Generator targeting `rate_per_s` mean arrivals per second.
     pub fn new(rate_per_s: f64, seed: u64) -> Self {
         assert!(rate_per_s > 0.0);
         PoissonArrivals { rng: Pcg32::new(seed, 201), rate_per_s }

@@ -43,24 +43,41 @@
     clippy::too_many_arguments,
     clippy::useless_vec
 )]
+// Public items must be documented.  The serving stack (coordinator,
+// memplan, runtime, vq) is fully documented and the warning is enforced as
+// an error by the clippy and `cargo doc` CI jobs; the remaining modules
+// carry a module-level allow until their own docs pass lands — remove an
+// `#[allow(missing_docs)]` below to opt a module in.
+#![warn(missing_docs)]
 
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod data;
+#[allow(missing_docs)]
 pub mod eval;
+#[allow(missing_docs)]
 pub mod kan;
 pub mod memplan;
+#[allow(missing_docs)]
 pub mod memsim;
+#[allow(missing_docs)]
 pub mod pruning;
+#[allow(missing_docs)]
 pub mod report;
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod spectral;
+#[allow(missing_docs)]
 pub mod tensor;
+#[allow(missing_docs)]
 pub mod util;
 pub mod vq;
 
 // Training and the experiment harness drive PJRT train-step artifacts and
 // therefore only exist behind the `pjrt` feature.
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)]
 pub mod experiments;
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)]
 pub mod train;

@@ -5,12 +5,17 @@
 //!   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 2e-2] [--seed 42]
 //!            (requires the `pjrt` feature + AOT artifacts)
 //!   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
+//!            | --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]
+//!            (family mode fits ONE universal codebook over all heads)
 //!   inspect  --in ck.skpt
 //!   eval     --in ck.skpt [--split test|coco] [--seed 42]
-//!   serve    --head ck.skpt [--backend native|arena|pjrt] [--shards N]
-//!            [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
-//!            [--tcp ADDR]
+//!   serve    --head ck.skpt [--backend native|arena|family|pjrt]
+//!            [--shards N] [--requests 1000] [--max-batch 128]
+//!            [--max-wait-ms 2] [--tcp ADDR]
+//!            | --family a.skpt,b.skpt,... [--shards N] (shared-codebook
+//!            family deployment: one codebook arena per shard)
 //!   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
+//!            | --family [--heads N] (shared vs marginal byte accounting)
 //!
 //! The default build serves everything through the pure-Rust native
 //! backend — no Python, no PJRT, no artifacts/ directory.  With
@@ -28,18 +33,22 @@ use share_kan::data::{standard_splits, Pcg32};
 use share_kan::eval::mean_average_precision;
 use share_kan::kan::checkpoint::Checkpoint;
 use share_kan::kan::spec::{KanSpec, VqSpec};
-use share_kan::memplan::{plan_head, plan_vq_head};
+use share_kan::memplan::{plan_family, plan_head, plan_vq_head};
 use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::util::cli::Args;
+use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
 
 const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options]
   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]   (pjrt builds only)
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
+           --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
   inspect  --in ck.skpt
   eval     --in ck.skpt [--split test|coco] [--seed 42]
-  serve    --head ck.skpt [--backend native|arena|pjrt] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+  serve    --head ck.skpt [--backend native|arena|family|pjrt] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+           --family a.skpt,b.skpt,... [--shards N]   (shared-codebook family deployment)
   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
+           --family [--heads N] [--k 512] [--int8]   (family arena: shared vs marginal bytes)
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
 
 fn main() {
@@ -113,6 +122,9 @@ fn cmd_train(_args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
+    if let Some(list) = args.get("family") {
+        return cmd_compress_family(args, list);
+    }
     let input = PathBuf::from(args.get("in").context("--in required")?);
     let out = PathBuf::from(args.get("out").context("--out required")?);
     let ck = Checkpoint::load(&input)?;
@@ -130,6 +142,63 @@ fn cmd_compress(args: &Args) -> Result<()> {
         ck.total_bytes(),
         ck.total_bytes() as f64 / cck.total_bytes() as f64
     );
+    Ok(())
+}
+
+/// `compress --family a.skpt,b.skpt,... --out-dir DIR [--k] [--int8]`:
+/// fit ONE universal codebook over the pooled shapes of every head (paper
+/// §6) and write one compressed checkpoint per head, all carrying
+/// bitwise-identical codebook tensors — the precondition `serve --family`
+/// and the family arena backend dedup on.
+fn cmd_compress_family(args: &Args, list: &str) -> Result<()> {
+    let paths: Vec<PathBuf> = list
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from)
+        .collect();
+    anyhow::ensure!(paths.len() >= 2, "--family needs at least two checkpoints");
+    let mut stems = std::collections::BTreeSet::new();
+    for p in &paths {
+        let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("head");
+        anyhow::ensure!(
+            stems.insert(stem.to_string()),
+            "duplicate checkpoint stem '{stem}': output names must be distinct"
+        );
+    }
+    let mut cks = Vec::with_capacity(paths.len());
+    for p in &paths {
+        cks.push(Checkpoint::load(p)?);
+    }
+    let spec = spec_from_meta(&cks[0])?;
+    for ck in &cks[1..] {
+        anyhow::ensure!(spec_from_meta(ck)? == spec,
+                        "family heads must share one KanSpec");
+    }
+    let k = args.get_usize("k", 512);
+    let precision = if args.flag("int8") { Precision::Int8 } else { Precision::Fp32 };
+    let seed = args.get_u64("seed", 42);
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    let family = compress_family(&refs, &spec, k, precision, seed)?;
+    let out_dir = PathBuf::from(args.get_or("out-dir", "family"));
+    std::fs::create_dir_all(&out_dir)?;
+    println!("universal codebook fitted over {} heads (K={k}, {precision:?}):",
+             paths.len());
+    for (path, c) in paths.iter().zip(&family) {
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("head");
+        let out = out_dir.join(format!("{stem}.family.skpt"));
+        let cck = c.to_checkpoint();
+        cck.save(&out)?;
+        println!("  {} -> {} ({} bytes; R² per layer = {:?})",
+                 path.display(), out.display(), cck.total_bytes(), c.r2);
+    }
+    let max_batch = args.get_usize("max-batch", 128);
+    let fam = plan_family(&spec, &VqSpec { codebook_size: k }, precision, max_batch)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("serve-time accounting: shared arena {} B/shard, marginal {} B/head \
+              (private-arena head: {} B)",
+             fam.shared_bytes(),
+             fam.head_bytes(),
+             fam.private_head_bytes().map_err(|e| anyhow::anyhow!(e))?);
     Ok(())
 }
 
@@ -185,6 +254,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(list) = args.get("family") {
+        return cmd_serve_family(args, list);
+    }
     let head_path = PathBuf::from(args.get("head").context("--head required")?);
     let ck = Checkpoint::load(&head_path)?;
     let head = HeadWeights::from_checkpoint(&ck)?;
@@ -193,10 +265,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = match args.get_or("backend", "native").as_str() {
         "native" => BackendConfig::Native(head_spec),
         "arena" => BackendConfig::Arena(head_spec),
+        "family" => BackendConfig::FamilyArena(head_spec),
         #[cfg(feature = "pjrt")]
         "pjrt" => BackendConfig::Pjrt { artifacts_dir: artifacts_dir(args) },
         other => anyhow::bail!(
-            "unknown backend '{other}' (native|arena{})",
+            "unknown backend '{other}' (native|arena|family{})",
             if cfg!(feature = "pjrt") { "|pjrt" } else { "; rebuild with --features pjrt for pjrt" }
         ),
     };
@@ -296,7 +369,114 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --family a.skpt,b.skpt,... [--shards N]`: pooled family-arena
+/// deployment.  Every head routes to its FNV-1a shard; the first head on a
+/// shard materializes the family's shared codebook arena there, every
+/// later head hot-adds at marginal (indices + scalars) cost.  Synthetic
+/// closed-loop load round-robins across the heads.
+fn cmd_serve_family(args: &Args, list: &str) -> Result<()> {
+    let paths: Vec<PathBuf> = list
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from)
+        .collect();
+    anyhow::ensure!(!paths.is_empty(), "--family needs at least one checkpoint");
+    anyhow::ensure!(
+        args.get("tcp").is_none(),
+        "--tcp currently serves through `serve --head`; drop --family"
+    );
+    let mut heads: Vec<(String, HeadWeights)> = Vec::new();
+    for p in &paths {
+        let ck = Checkpoint::load(p)?;
+        let w = HeadWeights::from_checkpoint(&ck)?;
+        anyhow::ensure!(
+            matches!(w, HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. }),
+            "--family expects VQ-compressed checkpoints (got '{}' from {}); \
+             run `share-kan compress --family ...` first",
+            w.model(),
+            p.display()
+        );
+        let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("head").to_string();
+        anyhow::ensure!(
+            !heads.iter().any(|(n, _)| n == &stem),
+            "duplicate head name '{stem}': file stems route requests and must be distinct"
+        );
+        heads.push((stem, w));
+    }
+    // the batch-bucket ladder tops out at --max-batch, so the scratch the
+    // backend actually allocates and the accounting printed below agree
+    let max_batch = args.get_usize("max-batch", 128).max(1);
+    let mut buckets: Vec<usize> = BackendSpec::default()
+        .batch_buckets
+        .into_iter()
+        .filter(|&b| b < max_batch)
+        .collect();
+    buckets.push(max_batch);
+    let spec = BackendSpec::for_head(&heads[0].1).with_buckets(&buckets);
+    let d_in = spec.kan.d_in;
+    let precision = if matches!(heads[0].1, HeadWeights::VqInt8 { .. }) {
+        Precision::Int8
+    } else {
+        Precision::Fp32
+    };
+    let fam = plan_family(&spec.kan, &spec.vq, precision, max_batch)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "family of {} heads: shared {} B/shard + marginal {} B/head \
+         (private-arena head: {} B)",
+        heads.len(),
+        fam.shared_bytes(),
+        fam.head_bytes(),
+        fam.private_head_bytes().map_err(|e| anyhow::anyhow!(e))?
+    );
+    let policy = BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
+    };
+    let shards = args.get_usize("shards", 1);
+    let n = args.get_usize("requests", 1000);
+    let backend = BackendConfig::FamilyArena(spec);
+
+    // one pool covers both shapes: a single shard is just a 1-shard pool
+    let pool = ExecutorPool::start(PoolConfig {
+        backend,
+        policy,
+        queue_capacity: 4096,
+        num_shards: shards.max(1),
+    })?;
+    let touched = pool.client.add_family(&heads)?;
+    println!("{} heads registered across {touched} of {} shard(s) — one shared \
+              codebook arena per touched shard",
+             heads.len(),
+             pool.client.num_shards());
+    let c = pool.client.clone();
+    let mut rng = Pcg32::seeded(9);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let head = &heads[i % heads.len()].0;
+        pending.push(c.try_submit(head, rng.normal_vec(d_in, 0.0, 1.0))?);
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                rx.recv().ok();
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().ok();
+    }
+    let dt = t0.elapsed();
+    let m = c.aggregated_metrics();
+    println!("{n} requests in {dt:?} -> {:.0} req/s", n as f64 / dt.as_secs_f64());
+    println!("latency (all shards): {}", m.latency.summary());
+    pool.shutdown();
+    Ok(())
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
+    if args.flag("family") || args.get("family").is_some() {
+        return cmd_plan_family(args);
+    }
     let max_batch = args.get_usize("max-batch", 128);
     // --head: plan the *runtime* arena layout of an actual checkpoint (the
     // exact layout ArenaBackend materializes: bit-packed indices et al.)
@@ -336,5 +516,45 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let cb = paper.lookup("layer0/codebook").unwrap();
     println!("paper-scale check: per-layer Int8 codebook = {} bytes (paper Eq. 6: 655 KB)",
              cb.size);
+    Ok(())
+}
+
+/// `plan --family [--heads N] [--k] [--int8] [--max-batch]`: print the
+/// family-arena layout (shared region + per-head region) and the
+/// shared-vs-marginal byte accounting (paper §6: head N+1 costs only
+/// packed indices + scalars).
+fn cmd_plan_family(args: &Args) -> Result<()> {
+    let spec = KanSpec::default();
+    let vq = VqSpec { codebook_size: args.get_usize("k", VqSpec::default().codebook_size) };
+    let precision = if args.flag("int8") { Precision::Int8 } else { Precision::Fp32 };
+    let max_batch = args.get_usize("max-batch", 128);
+    let n_heads = args.get_usize("heads", 8);
+    let fam = plan_family(&spec, &vq, precision, max_batch)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    fam.shared.validate().map_err(|e| anyhow::anyhow!(e))?;
+    fam.head.validate().map_err(|e| anyhow::anyhow!(e))?;
+    println!("LUTHAM family arena plan ({precision:?}, K={}, max batch {max_batch}):",
+             vq.codebook_size);
+    println!("shared region — materialized once per family per shard:");
+    for b in &fam.shared.buffers {
+        println!("  {:<18} offset {:>10}  size {:>10}", b.name, b.offset, b.size);
+    }
+    println!("  shared total: {} bytes", fam.shared_bytes());
+    println!("per-head region — one per registered head:");
+    for b in &fam.head.buffers {
+        println!("  {:<18} offset {:>10}  size {:>10}", b.name, b.offset, b.size);
+    }
+    println!("  marginal total: {} bytes/head", fam.head_bytes());
+    let private = fam.private_head_bytes().map_err(|e| anyhow::anyhow!(e))?;
+    let family_total = fam.family_bytes(n_heads).context("family bytes overflow")?;
+    let private_total = private.checked_mul(n_heads).context("private bytes overflow")?;
+    println!("accounting for {n_heads} heads:");
+    println!("  private arenas: {n_heads} x {private} = {private_total} bytes");
+    println!("  family arena:   {} + {n_heads} x {} = {family_total} bytes ({:.2}x smaller)",
+             fam.shared_bytes(),
+             fam.head_bytes(),
+             private_total as f64 / family_total as f64);
+    println!("  marginal head cost: {:.1}% of a private-arena head",
+             100.0 * fam.head_bytes() as f64 / private as f64);
     Ok(())
 }

@@ -16,9 +16,12 @@ use std::collections::HashMap;
 
 use crate::coordinator::heads::HeadWeights;
 use crate::kan::spec::{KanSpec, VqSpec};
+use crate::vq::bitpack::bits_for;
 use crate::vq::storage::{codebook_bytes_per_layer, Precision};
 
-pub const ALIGN: usize = 256; // GPU-friendly alignment, also cache-line safe
+/// Alignment of every planned buffer and of the arena base itself:
+/// GPU-friendly (256 B transaction granularity) and cache-line safe.
+pub const ALIGN: usize = 256;
 
 /// Round `x` up to a multiple of `a`; `None` on overflow (checked — the
 /// planner must reject adversarial sizes with an error, not wrap).
@@ -37,8 +40,12 @@ pub fn checked_align_up(x: usize, a: usize) -> Option<usize> {
 /// One planned buffer.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlannedBuffer {
+    /// Stable name the runtime resolves offsets by (e.g. `layer0/idx`).
     pub name: String,
+    /// Byte offset from the arena base; always a multiple of [`ALIGN`].
     pub offset: usize,
+    /// Payload size in bytes (unpadded; the *next* buffer starts at the
+    /// aligned end of this one).
     pub size: usize,
 }
 
@@ -47,7 +54,9 @@ pub struct PlannedBuffer {
 /// every buffer at head-registration time; no linear scans).
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// Planned buffers in planning order.
     pub buffers: Vec<PlannedBuffer>,
+    /// Total arena bytes (aligned end of the last buffer).
     pub total_bytes: usize,
     index: HashMap<String, usize>,
 }
@@ -63,8 +72,15 @@ impl Plan {
         Plan { buffers, total_bytes, index }
     }
 
+    /// Resolve a buffer by name through the prebuilt offset index.
     pub fn lookup(&self, name: &str) -> Option<&PlannedBuffer> {
         self.index.get(name).map(|&i| &self.buffers[i])
+    }
+
+    /// Sum of payload bytes over all buffers (excludes alignment padding,
+    /// so this is the exact byte count the tables occupy).
+    pub fn payload_bytes(&self) -> usize {
+        self.buffers.iter().map(|b| b.size).sum()
     }
 
     /// Planner invariant checks (also exercised by property tests).
@@ -104,6 +120,7 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// Fresh planner with an empty layout and cursor at offset 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -124,6 +141,7 @@ impl Planner {
         Ok(offset)
     }
 
+    /// Seal the layout into a [`Plan`] (total rounded up to [`ALIGN`]).
     pub fn finish(self) -> Result<Plan, String> {
         let total = checked_align_up(self.cursor, ALIGN)
             .ok_or_else(|| "arena total overflows usize".to_string())?;
@@ -203,30 +221,154 @@ pub fn plan_head(weights: &HeadWeights, max_batch: usize) -> Result<Plan, String
             }
         }
         HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. } => {
-            let k = weights.implied_codebook_size();
-            let int8 = matches!(weights, HeadWeights::VqInt8 { .. });
-            let coef = if int8 { 1 } else { 4 };
-            for (li, (n_in, n_out)) in dims.iter().enumerate() {
-                let e = mul2(*n_in, *n_out, &format!("layer{li} edge count"))?;
-                p.add(&format!("layer{li}/codebook"),
-                      mul3(k, spec.grid_size, coef, &format!("layer{li} codebook bytes"))?)?;
-                // checked equivalent of bitpack::packed_len(e, k)
-                let idx_bytes = e
-                    .checked_mul(crate::vq::bitpack::bits_for(k))
-                    .and_then(|bits| bits.checked_add(7))
-                    .ok_or_else(|| format!("layer{li}: packed idx bytes overflow"))?
-                    / 8;
-                p.add(&format!("layer{li}/idx"), idx_bytes)?;
-                p.add(&format!("layer{li}/gain"),
-                      mul2(e, if int8 { 1 } else { 4 }, &format!("layer{li} gain bytes"))?)?;
-                // folded bias sums stay fp32 (the checkpoint stores them
-                // unquantized; bit-for-bit parity with the native backend)
-                p.add(&format!("layer{li}/bias_sum"),
-                      mul2(*n_out, 4, &format!("layer{li} bias bytes"))?)?;
-            }
+            // ONE authoritative copy of the VQ arena layout (also behind
+            // FamilyPlan::private_head_bytes, so the family-vs-private
+            // accounting can never drift from what the arena materializes)
+            let precision = if matches!(weights, HeadWeights::VqInt8 { .. }) {
+                Precision::Int8
+            } else {
+                Precision::Fp32
+            };
+            return plan_vq_arena_head(
+                &spec,
+                &VqSpec { codebook_size: weights.implied_codebook_size() },
+                precision,
+                max_batch,
+            );
         }
     }
-    let widest = dims
+    add_act_scratch(&mut p, &spec, max_batch)?;
+    p.finish()
+}
+
+/// Layout of a **head family** served from one shared codebook (paper §6
+/// "Universal Basis"): a single shared region holding the per-layer-slot
+/// codebooks plus the activation ping/pong scratch, and a small per-head
+/// region template holding only what is unique to a head — bit-packed
+/// codebook indices, gains and folded fp32 bias sums.
+///
+/// The activation scratch lives in the *shared* region (not per head)
+/// because a backend executes on exactly one coordinator thread, so heads
+/// of a family can reuse one ping/pong pair; this is what drives the
+/// marginal cost of head N+1 down to indices + scalars.
+#[derive(Debug, Clone)]
+pub struct FamilyPlan {
+    /// Shared region: `layer{0,1}/codebook` + `act/ping` + `act/pong`.
+    /// Materialized once per family (per executor shard).
+    pub shared: Plan,
+    /// Per-head region template: `layer{0,1}/{idx,gain,bias_sum}`.
+    /// Every head of the family uses this identical layout.
+    pub head: Plan,
+    /// Largest batch bucket the shared scratch is sized for.
+    pub max_batch: usize,
+    spec: KanSpec,
+    vq: VqSpec,
+    precision: Precision,
+}
+
+impl FamilyPlan {
+    /// Head shape the family was planned for.
+    pub fn kan_spec(&self) -> &KanSpec {
+        &self.spec
+    }
+
+    /// Codebook spec (K) the family was planned for.
+    pub fn vq_spec(&self) -> &VqSpec {
+        &self.vq
+    }
+
+    /// Resident precision of codebooks and gains.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Bytes of the shared region (codebooks + activation scratch).
+    pub fn shared_bytes(&self) -> usize {
+        self.shared.total_bytes
+    }
+
+    /// Marginal arena bytes each additional head costs (aligned).
+    pub fn head_bytes(&self) -> usize {
+        self.head.total_bytes
+    }
+
+    /// Exact per-head payload bytes (packed indices + gains + fp32 bias
+    /// sums, no alignment padding) — the quantity
+    /// `vq::universal::SharedHead::marginal_bytes` reports.
+    pub fn head_payload_bytes(&self) -> usize {
+        self.head.payload_bytes()
+    }
+
+    /// Total family arena bytes for `n_heads` heads; `None` on overflow.
+    pub fn family_bytes(&self, n_heads: usize) -> Option<usize> {
+        self.head
+            .total_bytes
+            .checked_mul(n_heads)
+            .and_then(|h| h.checked_add(self.shared.total_bytes))
+    }
+
+    /// Arena bytes the same head would cost as a **private** head (its own
+    /// codebooks + tables + scratch).  Built in the exact buffer order of
+    /// [`plan_head`], so for a well-formed VQ head of this family's shape
+    /// the two agree byte-for-byte.
+    pub fn private_head_bytes(&self) -> Result<usize, String> {
+        let plan = plan_vq_arena_head(&self.spec, &self.vq, self.precision, self.max_batch)?;
+        Ok(plan.total_bytes)
+    }
+}
+
+/// Plan the arena of a single private VQ head (codebook + packed indices +
+/// gains + fp32 folded bias sums + scratch) from shapes alone.  This is the
+/// ONE copy of the VQ arena layout: [`plan_head`]'s VQ branch delegates
+/// here, and [`FamilyPlan::private_head_bytes`] uses it for
+/// family-vs-private accounting, so the two can never drift.
+fn plan_vq_arena_head(spec: &KanSpec, vq: &VqSpec, precision: Precision,
+                      max_batch: usize) -> Result<Plan, String> {
+    let k = vq.codebook_size;
+    let coef = if precision == Precision::Int8 { 1 } else { 4 };
+    let mut p = Planner::new();
+    for (li, (n_in, n_out)) in spec.layer_dims().iter().enumerate() {
+        p.add(&format!("layer{li}/codebook"),
+              k.checked_mul(spec.grid_size)
+                  .and_then(|c| c.checked_mul(coef))
+                  .ok_or_else(|| format!("layer{li}: codebook bytes overflow"))?)?;
+        add_marginal_tables(&mut p, li, *n_in, *n_out, k, coef)?;
+    }
+    add_act_scratch(&mut p, spec, max_batch)?;
+    p.finish()
+}
+
+/// Reserve one layer's per-head marginal tables — ⌈log₂K⌉-bit packed
+/// indices, gains (Int8 or fp32 per `coef`), fp32 folded bias sums —
+/// shared by the private-head and family planners.
+fn add_marginal_tables(p: &mut Planner, li: usize, n_in: usize, n_out: usize,
+                       k: usize, coef: usize) -> Result<(), String> {
+    let e = n_in
+        .checked_mul(n_out)
+        .ok_or_else(|| format!("layer{li}: edge count overflows"))?;
+    p.add(&format!("layer{li}/idx"), checked_packed_len(e, k, li)?)?;
+    p.add(&format!("layer{li}/gain"),
+          e.checked_mul(coef)
+              .ok_or_else(|| format!("layer{li}: gain bytes overflow"))?)?;
+    p.add(&format!("layer{li}/bias_sum"),
+          n_out.checked_mul(4)
+              .ok_or_else(|| format!("layer{li}: bias bytes overflow"))?)?;
+    Ok(())
+}
+
+/// Checked equivalent of `bitpack::packed_len(e, k)`.
+fn checked_packed_len(e: usize, k: usize, li: usize) -> Result<usize, String> {
+    Ok(e.checked_mul(bits_for(k))
+        .and_then(|bits| bits.checked_add(7))
+        .ok_or_else(|| format!("layer{li}: packed idx bytes overflow"))?
+        / 8)
+}
+
+/// Reserve the activation ping/pong pair for the widest layer interface.
+fn add_act_scratch(p: &mut Planner, spec: &KanSpec, max_batch: usize)
+                   -> Result<(), String> {
+    let widest = spec
+        .layer_dims()
         .iter()
         .flat_map(|&(a, b)| [a, b])
         .max()
@@ -238,7 +380,59 @@ pub fn plan_head(weights: &HeadWeights, max_batch: usize) -> Result<Plan, String
         .ok_or_else(|| "activation scratch overflows".to_string())?;
     p.add("act/ping", act)?;
     p.add("act/pong", act)?;
-    p.finish()
+    Ok(())
+}
+
+/// Plan a **family arena**: one shared region (per-layer-slot codebooks +
+/// activation scratch, materialized once per family per shard) and a
+/// per-head region template (bit-packed indices, gains, fp32 bias sums) —
+/// the serving layout of `runtime::arena::FamilyArenaBackend`.
+///
+/// `precision` selects the resident width of codebooks and gains (Int8 or
+/// fp32); indices are always ⌈log₂K⌉-bit packed and bias sums always fp32.
+///
+/// ```
+/// use share_kan::kan::spec::{KanSpec, VqSpec};
+/// use share_kan::memplan::plan_family;
+/// use share_kan::vq::Precision;
+///
+/// let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 8 };
+/// let fam = plan_family(&spec, &VqSpec { codebook_size: 16 },
+///                       Precision::Int8, 4).unwrap();
+/// // the shared region holds one codebook per layer slot ...
+/// assert!(fam.shared.lookup("layer0/codebook").is_some());
+/// assert!(fam.shared.lookup("act/ping").is_some());
+/// // ... so head N+1 costs only packed indices + scalars:
+/// assert!(fam.head_bytes() < fam.private_head_bytes().unwrap());
+/// ```
+pub fn plan_family(spec: &KanSpec, vq: &VqSpec, precision: Precision,
+                   max_batch: usize) -> Result<FamilyPlan, String> {
+    let k = vq.codebook_size;
+    let coef = if precision == Precision::Int8 { 1 } else { 4 };
+    let dims = spec.layer_dims();
+
+    let mut shared = Planner::new();
+    for (li, _) in dims.iter().enumerate() {
+        shared.add(&format!("layer{li}/codebook"),
+                   k.checked_mul(spec.grid_size)
+                       .and_then(|c| c.checked_mul(coef))
+                       .ok_or_else(|| format!("layer{li}: codebook bytes overflow"))?)?;
+    }
+    add_act_scratch(&mut shared, spec, max_batch)?;
+
+    let mut head = Planner::new();
+    for (li, (n_in, n_out)) in dims.iter().enumerate() {
+        add_marginal_tables(&mut head, li, *n_in, *n_out, k, coef)?;
+    }
+
+    Ok(FamilyPlan {
+        shared: shared.finish()?,
+        head: head.finish()?,
+        max_batch,
+        spec: *spec,
+        vq: *vq,
+        precision,
+    })
 }
 
 /// A zero-alloc arena backing a [`Plan`]: one upfront 256-byte-aligned
@@ -249,11 +443,13 @@ pub struct Arena {
 }
 
 impl Arena {
+    /// Allocate one zeroed, 256-byte-aligned block covering the whole plan.
     pub fn allocate(plan: Plan) -> Arena {
         let data = AlignedBytes::zeroed(plan.total_bytes, ALIGN);
         Arena { data, plan }
     }
 
+    /// The plan this arena was allocated for.
     pub fn plan(&self) -> &Plan {
         &self.plan
     }
@@ -263,6 +459,7 @@ impl Arena {
         self.data.as_slice()
     }
 
+    /// The whole arena as mutable raw bytes (table materialization).
     pub fn raw_mut(&mut self) -> &mut [u8] {
         self.data.as_mut_slice()
     }
@@ -274,11 +471,13 @@ impl Arena {
         self.data.as_mut_slice().split_at_mut(offset)
     }
 
+    /// Mutable byte view of a planned buffer (`None` if unplanned).
     pub fn bytes_mut(&mut self, name: &str) -> Option<&mut [u8]> {
         let b = self.plan.lookup(name)?.clone();
         Some(&mut self.data.as_mut_slice()[b.offset..b.offset + b.size])
     }
 
+    /// Shared byte view of a planned buffer (`None` if unplanned).
     pub fn bytes(&self, name: &str) -> Option<&[u8]> {
         let b = self.plan.lookup(name)?;
         Some(&self.data.as_slice()[b.offset..b.offset + b.size])
@@ -298,6 +497,7 @@ impl Arena {
 /// a planned range as f32/i8 is always layout-sound; the debug asserts keep
 /// that invariant honest.
 pub mod view {
+    /// Reinterpret an aligned, 4-divisible byte range as `&[f32]`.
     #[inline]
     pub fn f32s(bytes: &[u8]) -> &[f32] {
         debug_assert_eq!(bytes.len() % 4, 0);
@@ -307,6 +507,7 @@ pub mod view {
         unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
     }
 
+    /// Reinterpret an aligned, 4-divisible byte range as `&mut [f32]`.
     #[inline]
     pub fn f32s_mut(bytes: &mut [u8]) -> &mut [f32] {
         debug_assert_eq!(bytes.len() % 4, 0);
@@ -317,6 +518,7 @@ pub mod view {
         }
     }
 
+    /// Reinterpret a byte range as `&[i8]` (always layout-sound).
     #[inline]
     pub fn i8s(bytes: &[u8]) -> &[i8] {
         // SAFETY: i8 and u8 share size/alignment and all bit patterns.
@@ -499,6 +701,80 @@ mod tests {
             assert_eq!(via_index, via_scan);
         }
         assert!(plan.lookup("nope").is_none());
+    }
+
+    #[test]
+    fn family_plan_regions_are_valid_and_disjoint_by_name() {
+        let spec = KanSpec::default();
+        let vq = VqSpec::default();
+        let fam = plan_family(&spec, &vq, Precision::Int8, 128).unwrap();
+        fam.shared.validate().unwrap();
+        fam.head.validate().unwrap();
+        // shared region: codebooks + scratch only
+        assert!(fam.shared.lookup("layer0/codebook").is_some());
+        assert!(fam.shared.lookup("layer1/codebook").is_some());
+        assert!(fam.shared.lookup("act/ping").is_some());
+        assert!(fam.shared.lookup("layer0/idx").is_none());
+        // per-head region: indices + scalars only
+        assert!(fam.head.lookup("layer0/idx").is_some());
+        assert!(fam.head.lookup("layer0/gain").is_some());
+        assert!(fam.head.lookup("layer0/bias_sum").is_some());
+        assert!(fam.head.lookup("layer0/codebook").is_none());
+        assert!(fam.head.lookup("act/ping").is_none());
+    }
+
+    #[test]
+    fn family_marginal_head_is_small_fraction_of_private() {
+        // the §6 claim at the default serving shape: an extra head of the
+        // family costs < 15% of a private arena head at equal output bits
+        let spec = KanSpec::default();
+        let vq = VqSpec::default();
+        let fam = plan_family(&spec, &vq, Precision::Int8, 128).unwrap();
+        let marginal = fam.head_bytes();
+        let private = fam.private_head_bytes().unwrap();
+        assert!(
+            (marginal as f64) < 0.15 * private as f64,
+            "marginal {marginal} vs private {private}"
+        );
+        // 8 heads: family total well under 8 private arenas
+        let family_total = fam.family_bytes(8).unwrap();
+        assert!(family_total < 8 * private, "{family_total} vs {}", 8 * private);
+    }
+
+    #[test]
+    fn family_private_accounting_matches_plan_head() {
+        // the shape-level private plan must agree with the weight-level
+        // plan_head for a real head of the same family shape
+        use crate::tensor::Tensor;
+        let spec = KanSpec { d_in: 3, d_hidden: 4, d_out: 2, grid_size: 5 };
+        let vq = VqSpec { codebook_size: 16 };
+        let head = HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[16, 5], &[0.0; 80]),
+            idx0: Tensor::from_i32(&[3, 4], &[0; 12]),
+            g0: Tensor::from_f32(&[3, 4], &[0.0; 12]),
+            bs0: Tensor::from_f32(&[4], &[0.0; 4]),
+            cb1: Tensor::from_f32(&[16, 5], &[0.0; 80]),
+            idx1: Tensor::from_i32(&[4, 2], &[0; 8]),
+            g1: Tensor::from_f32(&[4, 2], &[0.0; 8]),
+            bs1: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        let fam = plan_family(&spec, &vq, Precision::Fp32, 2).unwrap();
+        let via_weights = plan_head(&head, 2).unwrap();
+        assert_eq!(fam.private_head_bytes().unwrap(), via_weights.total_bytes);
+        // shared + head regions cover exactly the private buffer set
+        let fam_names: usize = fam.shared.buffers.len() + fam.head.buffers.len();
+        assert_eq!(fam_names, via_weights.buffers.len());
+    }
+
+    #[test]
+    fn family_plan_rejects_overflow_cleanly() {
+        let spec = KanSpec {
+            d_in: usize::MAX / 2,
+            d_hidden: 3,
+            d_out: 2,
+            grid_size: 10,
+        };
+        assert!(plan_family(&spec, &VqSpec::default(), Precision::Int8, 128).is_err());
     }
 
     #[test]

@@ -11,5 +11,6 @@ pub use analysis::{analyze, iso_latent_sweep, BandwidthAnalysis};
 pub use cache::{Cache, CacheConfig, CacheStats};
 pub use dram::{dram_speed_limit_s, roofline, DeviceModel, Roofline};
 pub use trace::{
-    trace_arena_vq_head, trace_dense_layer, trace_vq_layer, LayerShape, TraceReport,
+    trace_arena_vq_head, trace_dense_layer, trace_family_vq_heads, trace_vq_layer,
+    LayerShape, TraceReport,
 };

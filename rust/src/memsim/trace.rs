@@ -14,8 +14,9 @@
 use super::cache::{Cache, CacheStats};
 use crate::data::rng::Pcg32;
 use crate::kan::spec::KanSpec;
-use crate::memplan::Plan;
+use crate::memplan::{FamilyPlan, Plan};
 use crate::vq::bitpack::bits_for;
+use crate::vq::storage::Precision;
 
 /// Virtual address-space regions (1 GB apart; never overlap).
 pub const REGION_CODEBOOK: u64 = 0x1_0000_0000;
@@ -144,43 +145,156 @@ pub fn trace_arena_vq_head(cache: &mut Cache, plan: &Plan, spec: &KanSpec, k: us
     let ping = plan.lookup("act/ping").expect("plan missing act/ping").offset as u64;
     let pong = plan.lookup("act/pong").expect("plan missing act/pong").offset as u64;
     for (li, (n_in, n_out)) in spec.layer_dims().into_iter().enumerate() {
-        let cb = plan.lookup(&format!("layer{li}/codebook")).expect("codebook").offset as u64;
-        let idx = plan.lookup(&format!("layer{li}/idx")).expect("idx").offset as u64;
-        let gain = plan.lookup(&format!("layer{li}/gain")).expect("gain").offset as u64;
-        let bias = plan.lookup(&format!("layer{li}/bias_sum")).expect("bias").offset as u64;
         // layer0 reads the caller's padded batch and writes ping;
         // layer1 reads ping and writes pong
-        let src_base = if li == 0 { REGION_ACT } else { REGION_ARENA + ping };
-        let dst_base = REGION_ARENA + if li == 0 { ping } else { pong };
+        let t = VqLayerTrace {
+            cb: REGION_ARENA
+                + plan.lookup(&format!("layer{li}/codebook")).expect("codebook").offset as u64,
+            idx: REGION_ARENA
+                + plan.lookup(&format!("layer{li}/idx")).expect("idx").offset as u64,
+            gain: REGION_ARENA
+                + plan.lookup(&format!("layer{li}/gain")).expect("gain").offset as u64,
+            bias: REGION_ARENA
+                + plan.lookup(&format!("layer{li}/bias_sum")).expect("bias").offset as u64,
+            src: if li == 0 { REGION_ACT } else { REGION_ARENA + ping },
+            dst: REGION_ARENA + if li == 0 { ping } else { pong },
+            n_in,
+            n_out,
+            g,
+            bits,
+            coef,
+            gain_bytes,
+        };
         // fixed per-edge codebook assignment (load-time property)
         let mut edge_rows = Vec::with_capacity(n_in * n_out);
         for _ in 0..n_in * n_out {
             edge_rows.push(rng.below(k));
         }
         for s in 0..batch {
-            for i in 0..n_in {
-                cache.access(src_base + ((s * n_in + i) * 4) as u64, 4);
-                requested += 4;
-                let cell = rng.below(g - 1);
-                for j in 0..n_out {
-                    let e = i * n_out + j;
-                    // bit-packed index: the bytes spanned by bits [e*bits, (e+1)*bits)
-                    let bitpos = e * bits;
-                    let span = ((bitpos % 8) + bits + 7) / 8;
-                    cache.access(REGION_ARENA + idx + (bitpos / 8) as u64, span as u32);
-                    cache.access(REGION_ARENA + gain + (e * gain_bytes) as u64,
-                                 gain_bytes as u32);
-                    let row = edge_rows[e];
-                    cache.access(REGION_ARENA + cb + ((row * g + cell) * coef) as u64,
-                                 (2 * coef) as u32); // two lerp endpoints
-                    requested += (span + gain_bytes + 2 * coef) as u64;
-                    flops += 6; // lerp + gain mul + bias add (+ dequant)
-                }
-            }
-            for j in 0..n_out {
-                cache.access(REGION_ARENA + bias + (j * 4) as u64, 4);
-                cache.access(dst_base + ((s * n_out + j) * 4) as u64, 4);
-                requested += 8;
+            trace_vq_layer_sample(cache, &t, &edge_rows, s, &mut rng,
+                                  &mut requested, &mut flops);
+        }
+    }
+    TraceReport { stats: cache.stats, requested_bytes: requested, flops }
+}
+
+/// One VQ layer's resolved trace addresses + shape constants.
+struct VqLayerTrace {
+    cb: u64,
+    idx: u64,
+    gain: u64,
+    bias: u64,
+    src: u64,
+    dst: u64,
+    n_in: usize,
+    n_out: usize,
+    g: usize,
+    bits: usize,
+    coef: usize,
+    gain_bytes: usize,
+}
+
+/// Replay ONE sample through one VQ layer at resolved arena addresses —
+/// the shared access-pattern core of [`trace_arena_vq_head`] and
+/// [`trace_family_vq_heads`], so the modeled pattern (bit-span index
+/// reads, gain reads, two-endpoint codebook lerp, bias/dst traffic) can
+/// never diverge between the per-head and family residency rows.
+fn trace_vq_layer_sample(cache: &mut Cache, t: &VqLayerTrace, edge_rows: &[usize],
+                         s: usize, rng: &mut Pcg32, requested: &mut u64,
+                         flops: &mut u64) {
+    for i in 0..t.n_in {
+        cache.access(t.src + ((s * t.n_in + i) * 4) as u64, 4);
+        *requested += 4;
+        let cell = rng.below(t.g - 1);
+        for j in 0..t.n_out {
+            let e = i * t.n_out + j;
+            // bit-packed index: the bytes spanned by bits [e*bits, (e+1)*bits)
+            let bitpos = e * t.bits;
+            let span = ((bitpos % 8) + t.bits + 7) / 8;
+            cache.access(t.idx + (bitpos / 8) as u64, span as u32);
+            cache.access(t.gain + (e * t.gain_bytes) as u64, t.gain_bytes as u32);
+            let row = edge_rows[e];
+            cache.access(t.cb + ((row * t.g + cell) * t.coef) as u64,
+                         (2 * t.coef) as u32); // two lerp endpoints
+            *requested += (span + t.gain_bytes + 2 * t.coef) as u64;
+            *flops += 6; // lerp + gain mul + bias add (+ dequant)
+        }
+    }
+    for j in 0..t.n_out {
+        cache.access(t.bias + (j * 4) as u64, 4);
+        cache.access(t.dst + ((s * t.n_out + j) * 4) as u64, 4);
+        *requested += 8;
+    }
+}
+
+/// Replay the memory-access pattern of `runtime::arena::FamilyArenaBackend`
+/// serving **`n_heads` heads of one family** from the shared codebook
+/// region of a [`FamilyPlan`]: the shared arena (codebooks + activation
+/// ping/pong) sits at `REGION_ARENA`, and head `i`'s marginal region
+/// (bit-packed indices, gains, bias sums) at its planner-assigned offsets
+/// after the shared region plus `i` head strides.
+///
+/// Samples interleave heads round-robin — the adversarial task-switching
+/// order — so the residency the report shows is the §6 claim for real:
+/// switching heads never evicts the shared codebook, because every head
+/// hits the **same** cache lines for it.
+pub fn trace_family_vq_heads(cache: &mut Cache, family: &FamilyPlan, n_heads: usize,
+                             batch: usize, seed: u64) -> TraceReport {
+    // shape/precision come from the plan itself, so the trace can never be
+    // run with parameters inconsistent with the planned buffer sizes
+    let spec = *family.kan_spec();
+    let k = family.vq_spec().codebook_size;
+    let int8 = family.precision() == Precision::Int8;
+    let mut rng = Pcg32::new(seed, 19);
+    let g = spec.grid_size;
+    let bits = bits_for(k);
+    let coef: usize = if int8 { 1 } else { 4 };
+    let gain_bytes: usize = if int8 { 1 } else { 4 };
+    let mut requested = 0u64;
+    let mut flops = 0u64;
+    let shared = &family.shared;
+    let head_stride = family.head.total_bytes as u64;
+    let heads_base = REGION_ARENA + shared.total_bytes as u64;
+    let ping = shared.lookup("act/ping").expect("plan missing act/ping").offset as u64;
+    let pong = shared.lookup("act/pong").expect("plan missing act/pong").offset as u64;
+    // load-time-fixed per-head, per-layer codebook assignment
+    let dims = spec.layer_dims();
+    let mut edge_rows: Vec<Vec<usize>> = Vec::with_capacity(n_heads * dims.len());
+    for _h in 0..n_heads {
+        for (n_in, n_out) in dims.iter() {
+            edge_rows.push((0..n_in * n_out).map(|_| rng.below(k)).collect());
+        }
+    }
+    for s in 0..batch {
+        for h in 0..n_heads {
+            let head_base = heads_base + h as u64 * head_stride;
+            for (li, (n_in, n_out)) in dims.into_iter().enumerate() {
+                // codebooks + ping/pong live in the SHARED region; only the
+                // idx/gain/bias tables are at the head's own base
+                let t = VqLayerTrace {
+                    cb: REGION_ARENA
+                        + shared.lookup(&format!("layer{li}/codebook")).expect("codebook").offset
+                            as u64,
+                    idx: head_base
+                        + family.head.lookup(&format!("layer{li}/idx")).expect("idx").offset
+                            as u64,
+                    gain: head_base
+                        + family.head.lookup(&format!("layer{li}/gain")).expect("gain").offset
+                            as u64,
+                    bias: head_base
+                        + family.head.lookup(&format!("layer{li}/bias_sum")).expect("bias").offset
+                            as u64,
+                    src: if li == 0 { REGION_ACT } else { REGION_ARENA + ping },
+                    dst: REGION_ARENA + if li == 0 { ping } else { pong },
+                    n_in,
+                    n_out,
+                    g,
+                    bits,
+                    coef,
+                    gain_bytes,
+                };
+                trace_vq_layer_sample(cache, &t, &edge_rows[h * dims.len() + li], s,
+                                      &mut rng, &mut requested, &mut flops);
             }
         }
     }
@@ -261,6 +375,28 @@ mod tests {
         trace_arena_vq_head(&mut cache, &plan, &spec, k, true, 2, 1);
         cache.reset_stats();
         let rep = trace_arena_vq_head(&mut cache, &plan, &spec, k, true, 8, 2);
+        assert!(rep.stats.hit_rate() > 0.90, "hit rate {}", rep.stats.hit_rate());
+        assert!(rep.requested_bytes > 0);
+        assert!(rep.flops > 0);
+    }
+
+    #[test]
+    fn family_trace_keeps_shared_codebook_resident_across_heads() {
+        // 8 heads interleaved round-robin against ONE shared codebook
+        // region: task switching must not evict it (§6), so steady-state
+        // residency stays high even in a small cache
+        use crate::kan::spec::VqSpec;
+        use crate::memplan::plan_family;
+        let spec = KanSpec { d_in: 32, d_hidden: 64, d_out: 8, grid_size: 10 };
+        let k = 256;
+        let fam = plan_family(&spec, &VqSpec { codebook_size: k },
+                              Precision::Int8, 8)
+            .unwrap();
+        let mut cache =
+            Cache::new(CacheConfig { size_bytes: 1 << 20, line_bytes: 128, ways: 16 });
+        trace_family_vq_heads(&mut cache, &fam, 8, 1, 1);
+        cache.reset_stats();
+        let rep = trace_family_vq_heads(&mut cache, &fam, 8, 4, 2);
         assert!(rep.stats.hit_rate() > 0.90, "hit rate {}", rep.stats.hit_rate());
         assert!(rep.requested_bytes > 0);
         assert!(rep.flops > 0);

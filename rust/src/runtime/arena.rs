@@ -19,6 +19,19 @@
 //! exact accumulation order of `kan::eval`, and Int8 dequantization
 //! (`q as f32 * scale`, `dequant_gain_log_int8`) yields the same f32 values
 //! whether performed once at load (native) or per access (arena).
+//!
+//! # Family arenas (paper §6 "Universal Basis")
+//!
+//! [`FamilyArenaBackend`] extends the same machinery to **many heads that
+//! share one codebook**: the per-layer-slot codebooks (and the activation
+//! scratch, which a single-threaded executor can reuse across heads) are
+//! materialized once into a shared arena laid out by
+//! [`crate::memplan::plan_family`], and each registered head adds only a
+//! small private arena of bit-packed indices, gains and fp32 bias sums.
+//! Head N+1 therefore costs marginal (indices + scalars) bytes instead of
+//! a full private arena, while the hot path stays zero-alloc and
+//! bit-for-bit equal to the per-head [`ArenaBackend`] (pinned by
+//! `rust/tests/family_arena_equivalence.rs`).
 
 use std::collections::HashMap;
 use std::ops::Range;
@@ -28,14 +41,17 @@ use anyhow::{Context, Result};
 use super::backend::{Backend, BackendSpec};
 use crate::coordinator::heads::HeadWeights;
 use crate::kan::eval::dequant_gain_log_int8;
-use crate::memplan::{plan_head, view, Arena, Plan};
+use crate::memplan::{plan_family, plan_head, view, Arena, Plan};
 use crate::vq::bitpack::{bits_for, pack, read_packed};
 use crate::vq::quant::LogInt8Params;
+use crate::vq::storage::Precision;
 
 /// Execution counters (the arena analogue of `NativeStats`).
 #[derive(Debug, Default, Clone)]
 pub struct ArenaStats {
+    /// Padded batches executed.
     pub batches: u64,
+    /// Total rows executed (bucket slots, padding included).
     pub rows: u64,
 }
 
@@ -84,13 +100,17 @@ struct ArenaHead {
     act_bytes: usize,
 }
 
+/// Arena-resident execution backend: one LUTHAM-planned private arena per
+/// registered head, zero-alloc `execute_into` hot path (see module docs).
 pub struct ArenaBackend {
     spec: BackendSpec,
     heads: HashMap<String, ArenaHead>,
+    /// Execution counters.
     pub stats: ArenaStats,
 }
 
 impl ArenaBackend {
+    /// Backend with no heads registered yet.
     pub fn new(spec: BackendSpec) -> ArenaBackend {
         ArenaBackend { spec, heads: HashMap::new(), stats: ArenaStats::default() }
     }
@@ -482,10 +502,11 @@ impl Backend for ArenaBackend {
                                  d_hidden, d_out, g, pong);
             }
             HeadTables::Vq { layers, bits } => {
-                run_vq_layer(tables, &layers[0], *bits, x, bucket,
+                run_vq_layer(&layer_refs(tables, &layers[0]), *bits, x, bucket,
                              d_in, d_hidden, g, ping);
-                run_vq_layer(tables, &layers[1], *bits, &ping[..bucket * d_hidden],
-                             bucket, d_hidden, d_out, g, pong);
+                run_vq_layer(&layer_refs(tables, &layers[1]), *bits,
+                             &ping[..bucket * d_hidden], bucket, d_hidden, d_out, g,
+                             pong);
             }
         }
 
@@ -497,31 +518,467 @@ impl Backend for ArenaBackend {
     }
 }
 
+/// Borrowed byte slices for one VQ layer's tables.  The codebook slice may
+/// live in a *different* arena from the per-head slices: the per-head
+/// [`ArenaBackend`] resolves all four from one arena, while
+/// [`FamilyArenaBackend`] reads the codebook from the family's shared
+/// region and everything else from the head's own marginal region.
+struct VqLayerRefs<'a> {
+    codebook: &'a [u8],
+    idx: &'a [u8],
+    gain: &'a [u8],
+    bias: &'a [f32],
+    quant: Option<LayerQuant>,
+}
+
+/// Resolve one private head's layer slots against its single arena.
+fn layer_refs<'a>(tables: &'a [u8], l: &VqLayerSlots) -> VqLayerRefs<'a> {
+    VqLayerRefs {
+        codebook: &tables[l.codebook.clone()],
+        idx: &tables[l.idx.clone()],
+        gain: &tables[l.gain.clone()],
+        bias: view::f32s(&tables[l.bias.clone()]),
+        quant: l.quant,
+    }
+}
+
 /// Dispatch one VQ layer by precision (monomorphized kernels).
 #[allow(clippy::too_many_arguments)]
-fn run_vq_layer(tables: &[u8], l: &VqLayerSlots, bits: usize, x: &[f32], b: usize,
+fn run_vq_layer(l: &VqLayerRefs<'_>, bits: usize, x: &[f32], b: usize,
                 n_in: usize, n_out: usize, g: usize, out: &mut [f32]) {
-    let idx = &tables[l.idx.clone()];
-    let bias = view::f32s(&tables[l.bias.clone()]);
     match &l.quant {
         None => {
             let t = Fp32Vq {
-                codebook: view::f32s(&tables[l.codebook.clone()]),
-                gain: view::f32s(&tables[l.gain.clone()]),
+                codebook: view::f32s(l.codebook),
+                gain: view::f32s(l.gain),
                 g,
             };
-            vq_layer_into(x, b, &t, idx, bits, bias, n_in, n_out, g, out);
+            vq_layer_into(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
         }
         Some(q) => {
             let t = Int8Vq {
-                codebook: view::i8s(&tables[l.codebook.clone()]),
+                codebook: view::i8s(l.codebook),
                 codebook_scale: q.codebook_scale,
-                gain: view::i8s(&tables[l.gain.clone()]),
+                gain: view::i8s(l.gain),
                 gain_params: q.gain,
                 g,
             };
-            vq_layer_into(x, b, &t, idx, bits, bias, n_in, n_out, g, out);
+            vq_layer_into(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Family arenas: many heads, one cache-resident codebook (paper §6).
+// ---------------------------------------------------------------------------
+
+/// Family-level shared state: the per-layer-slot codebooks plus the single
+/// activation ping/pong scratch every head of the family reuses (sound
+/// because a backend executes on exactly one coordinator thread).
+struct FamilyShared {
+    arena: Arena,
+    /// absolute byte ranges of the two shared layer-slot codebooks
+    codebook: [Range<usize>; 2],
+    /// `Some` when the shared codebooks are Int8-resident (per-layer linear
+    /// dequant scale — shared; gain dequant params stay per head)
+    codebook_scale: Option<[f32; 2]>,
+    /// ⌈log₂K⌉ — packed index width shared by every head of the family
+    bits: usize,
+    max_bucket: usize,
+    /// absolute offset where act/ping begins; below it: read-only codebooks
+    scratch_offset: usize,
+    /// act/pong start relative to `scratch_offset`
+    pong_rel: usize,
+    /// planned byte size of each activation buffer
+    act_bytes: usize,
+    /// per-head region template every hot-added head is laid out with
+    head_plan: Plan,
+}
+
+/// Planner-assigned byte ranges of one head's marginal tables.
+struct FamilySlots {
+    idx: Range<usize>,
+    gain: Range<usize>,
+    bias: Range<usize>,
+}
+
+/// One family head: its marginal arena (bit-packed indices, gains, fp32
+/// bias sums) plus the dequant constants pairing it with the shared tables.
+struct FamilyHead {
+    arena: Arena,
+    layers: [FamilySlots; 2],
+    quant: [Option<LayerQuant>; 2],
+}
+
+/// The per-head plan template + packed index width of a family, whether
+/// the shared region is already committed or still pending its first head.
+fn shared_template(pending: &Option<FamilyShared>, committed: &Option<FamilyShared>)
+                   -> (Plan, usize) {
+    let sh = pending
+        .as_ref()
+        .or(committed.as_ref())
+        .expect("prepare_shared established or verified the family");
+    (sh.head_plan.clone(), sh.bits)
+}
+
+/// Resolve the marginal-table ranges of one family head's arena.
+fn family_slots(arena: &Arena) -> Result<[FamilySlots; 2]> {
+    let slot = |li: usize| -> Result<FamilySlots> {
+        Ok(FamilySlots {
+            idx: range(arena, &format!("layer{li}/idx"))?,
+            gain: range(arena, &format!("layer{li}/gain"))?,
+            bias: range(arena, &format!("layer{li}/bias_sum"))?,
+        })
+    };
+    Ok([slot(0)?, slot(1)?])
+}
+
+/// Arena backend for a **head family** served from one shared codebook
+/// (paper §6 "Universal Basis"): the per-layer-slot codebooks and the
+/// activation ping/pong scratch are materialized once into a shared arena
+/// laid out by [`plan_family`]; every registered VQ head adds only a small
+/// marginal arena of bit-packed indices, gains and fp32 bias sums.
+///
+/// The first VQ head registered establishes the shared tables; each later
+/// head must carry a **bitwise-identical** codebook (the universal basis —
+/// see `vq::universal::compress_family`) and hot-adds at marginal cost.
+/// Dense and MLP heads have nothing to share and fall back to private
+/// per-head arenas, exactly like [`ArenaBackend`].
+///
+/// Outputs are bit-for-bit identical to serving each head from its own
+/// private [`ArenaBackend`] arena (pinned by
+/// `rust/tests/family_arena_equivalence.rs`), and the per-batch hot path
+/// performs zero heap allocations.
+pub struct FamilyArenaBackend {
+    spec: BackendSpec,
+    shared: Option<FamilyShared>,
+    heads: HashMap<String, FamilyHead>,
+    /// dense/MLP heads are served from private per-head arenas
+    private: ArenaBackend,
+    /// Execution counters (family and private paths combined).
+    pub stats: ArenaStats,
+}
+
+impl FamilyArenaBackend {
+    /// Backend with no family established yet: the first VQ head registered
+    /// materializes the shared codebook tables.
+    pub fn new(spec: BackendSpec) -> FamilyArenaBackend {
+        FamilyArenaBackend {
+            private: ArenaBackend::new(spec.clone()),
+            spec,
+            shared: None,
+            heads: HashMap::new(),
+            stats: ArenaStats::default(),
+        }
+    }
+
+    /// The shared-region plan, once a family head has established it.
+    pub fn shared_plan(&self) -> Option<&Plan> {
+        self.shared.as_ref().map(|s| s.arena.plan())
+    }
+
+    /// Bytes of the shared region (codebooks + activation scratch).
+    pub fn shared_bytes(&self) -> Option<usize> {
+        self.shared.as_ref().map(|s| s.arena.plan().total_bytes)
+    }
+
+    /// Arena bytes one registered head costs on top of the shared region:
+    /// family heads report their marginal (indices + scalars) arena;
+    /// private dense/MLP heads report their full private arena.
+    pub fn head_marginal_bytes(&self, name: &str) -> Option<usize> {
+        self.heads
+            .get(name)
+            .map(|h| h.arena.plan().total_bytes)
+            .or_else(|| self.private.head_arena_bytes(name))
+    }
+
+    /// Number of heads currently served from the shared codebook.
+    pub fn family_head_count(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Allocate the shared region per [`plan_family`] (codebooks unfilled).
+    fn alloc_shared(&self, precision: Precision) -> Result<FamilyShared> {
+        let max_bucket = self.spec.batch_buckets.iter().copied().max().unwrap_or(1).max(1);
+        let fam = plan_family(&self.spec.kan, &self.spec.vq, precision, max_bucket)
+            .map_err(|e| anyhow::anyhow!("memplan rejected family layout: {e}"))?;
+        fam.shared
+            .validate()
+            .map_err(|e| anyhow::anyhow!("invalid shared plan: {e}"))?;
+        fam.head
+            .validate()
+            .map_err(|e| anyhow::anyhow!("invalid per-head plan: {e}"))?;
+        let arena = Arena::allocate(fam.shared.clone());
+        let codebook = [range(&arena, "layer0/codebook")?, range(&arena, "layer1/codebook")?];
+        let ping = range(&arena, "act/ping")?;
+        let pong = range(&arena, "act/pong")?;
+        anyhow::ensure!(
+            ping.end <= pong.start,
+            "planner must place act/ping before act/pong"
+        );
+        Ok(FamilyShared {
+            codebook,
+            codebook_scale: None,
+            bits: bits_for(self.spec.vq.codebook_size),
+            max_bucket,
+            scratch_offset: ping.start,
+            pong_rel: pong.start - ping.start,
+            act_bytes: ping.end - ping.start,
+            head_plan: fam.head.clone(),
+            arena,
+        })
+    }
+
+    /// Verify the candidate fp32 codebooks against the established family,
+    /// or — for the family's first head — build (but do NOT commit) the
+    /// shared region.  The caller commits the returned `Some(..)` only
+    /// after the whole head constructs, so a head that fails later (e.g.
+    /// out-of-range indices) cannot poison the family with its codebook.
+    fn prepare_shared_fp32(&self, cb: [&[f32]; 2]) -> Result<Option<FamilyShared>> {
+        if let Some(sh) = &self.shared {
+            anyhow::ensure!(
+                sh.codebook_scale.is_none(),
+                "family holds Int8 codebooks; cannot register an fp32 head"
+            );
+            for (li, cand) in cb.iter().enumerate() {
+                let resident = view::f32s(&sh.arena.raw()[sh.codebook[li].clone()]);
+                anyhow::ensure!(
+                    resident.len() == cand.len()
+                        && resident
+                            .iter()
+                            .zip(cand.iter())
+                            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "layer{li} codebook differs from the family's shared codebook \
+                     (heads of one family must share a universal basis)"
+                );
+            }
+            return Ok(None);
+        }
+        let mut sh = self.alloc_shared(Precision::Fp32)?;
+        fill_f32(&mut sh.arena, "layer0/codebook", cb[0])?;
+        fill_f32(&mut sh.arena, "layer1/codebook", cb[1])?;
+        Ok(Some(sh))
+    }
+
+    /// Int8 twin of [`FamilyArenaBackend::prepare_shared_fp32`]: also pins
+    /// the shared per-layer codebook dequant scales.
+    fn prepare_shared_int8(&self, cb: [&[i8]; 2], scale: [f32; 2])
+                           -> Result<Option<FamilyShared>> {
+        if let Some(sh) = &self.shared {
+            let resident_scale = sh.codebook_scale.ok_or_else(|| {
+                anyhow::anyhow!("family holds fp32 codebooks; cannot register an Int8 head")
+            })?;
+            anyhow::ensure!(
+                resident_scale[0].to_bits() == scale[0].to_bits()
+                    && resident_scale[1].to_bits() == scale[1].to_bits(),
+                "codebook dequant scale differs from the family's shared codebook"
+            );
+            for (li, cand) in cb.iter().enumerate() {
+                let resident = view::i8s(&sh.arena.raw()[sh.codebook[li].clone()]);
+                anyhow::ensure!(
+                    resident.len() == cand.len()
+                        && resident.iter().zip(cand.iter()).all(|(a, b)| a == b),
+                    "layer{li} codebook differs from the family's shared codebook \
+                     (heads of one family must share a universal basis)"
+                );
+            }
+            return Ok(None);
+        }
+        let mut sh = self.alloc_shared(Precision::Int8)?;
+        fill_i8(&mut sh.arena, "layer0/codebook", cb[0])?;
+        fill_i8(&mut sh.arena, "layer1/codebook", cb[1])?;
+        sh.codebook_scale = Some(scale);
+        Ok(Some(sh))
+    }
+
+    /// Build the marginal arena for one VQ head of the family.  For the
+    /// family's first head the shared tables are prepared up front but
+    /// committed only after the whole head constructs — a head that fails
+    /// mid-build (bad indices, size mismatch) leaves the family untouched.
+    fn build_family_head(&mut self, weights: &HeadWeights) -> Result<FamilyHead> {
+        let g = self.spec.kan.grid_size;
+        anyhow::ensure!(g >= 2, "PLI lerp needs grid_size >= 2 (got {g})");
+        let k = self.spec.vq.codebook_size;
+        let (pending, head, quant);
+        match weights {
+            HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
+                pending = self.prepare_shared_fp32([&cb0.as_f32(), &cb1.as_f32()])?;
+                let (head_plan, bits) = shared_template(&pending, &self.shared);
+                let mut arena = Arena::allocate(head_plan);
+                fill_f32(&mut arena, "layer0/gain", &g0.as_f32())?;
+                fill_f32(&mut arena, "layer1/gain", &g1.as_f32())?;
+                fill_f32(&mut arena, "layer0/bias_sum", &bs0.as_f32())?;
+                fill_f32(&mut arena, "layer1/bias_sum", &bs1.as_f32())?;
+                fill_packed_idx(&mut arena, "layer0/idx", &idx0.as_i32(), k, bits)?;
+                fill_packed_idx(&mut arena, "layer1/idx", &idx1.as_i32(), k, bits)?;
+                head = arena;
+                quant = [None, None];
+            }
+            HeadWeights::VqInt8 { cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales } => {
+                let s = scales.as_f32();
+                anyhow::ensure!(s.len() == 6, "int8 scales tensor must hold 2x3 values");
+                pending = self.prepare_shared_int8([&cbq0.as_i8(), &cbq1.as_i8()],
+                                                   [s[0], s[3]])?;
+                let (head_plan, bits) = shared_template(&pending, &self.shared);
+                let mut arena = Arena::allocate(head_plan);
+                fill_i8(&mut arena, "layer0/gain", &gq0.as_i8())?;
+                fill_i8(&mut arena, "layer1/gain", &gq1.as_i8())?;
+                fill_f32(&mut arena, "layer0/bias_sum", &bs0.as_f32())?;
+                fill_f32(&mut arena, "layer1/bias_sum", &bs1.as_f32())?;
+                fill_packed_idx(&mut arena, "layer0/idx", &idx0.as_i32(), k, bits)?;
+                fill_packed_idx(&mut arena, "layer1/idx", &idx1.as_i32(), k, bits)?;
+                head = arena;
+                quant = [
+                    Some(LayerQuant {
+                        codebook_scale: s[0],
+                        gain: LogInt8Params { log_lo: s[1], log_step: s[2] },
+                    }),
+                    Some(LayerQuant {
+                        codebook_scale: s[3],
+                        gain: LogInt8Params { log_lo: s[4], log_step: s[5] },
+                    }),
+                ];
+            }
+            _ => anyhow::bail!("family arenas share VQ heads only"),
+        }
+        let layers = family_slots(&head)?;
+        // the head built completely — NOW the first head may commit the
+        // family's shared tables
+        if let Some(sh) = pending {
+            self.shared = Some(sh);
+        }
+        Ok(FamilyHead { arena: head, layers, quant })
+    }
+}
+
+impl Backend for FamilyArenaBackend {
+    fn name(&self) -> String {
+        "family-arena".to_string()
+    }
+
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()> {
+        weights.validate(&self.spec.kan, self.spec.vq.codebook_size)?;
+        match weights {
+            HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. } => {
+                // hot-swapping the family's SOLE head may replace the
+                // universal basis itself (a family retrain): build against
+                // a released basis and restore the old one if the new head
+                // fails, so the old head keeps serving
+                let sole = self.heads.len() == 1 && self.heads.contains_key(name);
+                let head = if sole {
+                    let saved = self.shared.take();
+                    match self.build_family_head(weights) {
+                        Ok(h) => h,
+                        Err(e) => {
+                            self.shared = saved;
+                            return Err(e);
+                        }
+                    }
+                } else {
+                    self.build_family_head(weights)?
+                };
+                // hot-swap may change a head's variant: retire any private
+                // incarnation of the same name
+                self.private.remove_head(name);
+                self.heads.insert(name.to_string(), head);
+            }
+            _ => {
+                self.private.register_head(name, weights)?;
+                // hot-swapping the last family head to a dense/MLP variant
+                // also empties the family: release the shared basis, same
+                // as remove_head
+                if self.heads.remove(name).is_some() && self.heads.is_empty() {
+                    self.shared = None;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn remove_head(&mut self, name: &str) -> bool {
+        let family = self.heads.remove(name).is_some();
+        let private = self.private.remove_head(name);
+        if family && self.heads.is_empty() {
+            // last family head retired: release the shared tables so a
+            // re-trained family (new universal basis) can hot-swap in and
+            // the codebook arena bytes are reclaimed
+            self.shared = None;
+        }
+        family || private
+    }
+
+    fn execute(&mut self, head: &str, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.execute_into(head, x, bucket, &mut out)?;
+        Ok(out)
+    }
+
+    /// The zero-alloc family hot path: codebooks and activation scratch are
+    /// borrowed from the shared arena, indices/gains/bias sums from the
+    /// head's own marginal arena; scores land in the caller's reused vector.
+    fn execute_into(&mut self, head: &str, x: &[f32], bucket: usize,
+                    out: &mut Vec<f32>) -> Result<()> {
+        let h = match self.heads.get(head) {
+            Some(h) => h,
+            None => {
+                // dense/MLP heads (and unknown names, which error there)
+                // are served from the private per-head arenas
+                self.private.execute_into(head, x, bucket, out)?;
+                self.stats.batches += 1;
+                self.stats.rows += bucket as u64;
+                return Ok(());
+            }
+        };
+        let sh = self
+            .shared
+            .as_mut()
+            .expect("family heads imply established shared tables");
+        let (d_in, d_hidden, d_out, g) = (
+            self.spec.kan.d_in,
+            self.spec.kan.d_hidden,
+            self.spec.kan.d_out,
+            self.spec.kan.grid_size,
+        );
+        anyhow::ensure!(x.len() == bucket * d_in, "padded batch size mismatch");
+        anyhow::ensure!(
+            bucket <= sh.max_bucket,
+            "bucket {bucket} exceeds planned scratch (max {})",
+            sh.max_bucket
+        );
+        let bits = sh.bits;
+        let (tables, scratch) = sh.arena.split_at_mut(sh.scratch_offset);
+        let (ping_part, pong_part) = scratch.split_at_mut(sh.pong_rel);
+        let ping = view::f32s_mut(&mut ping_part[..sh.act_bytes]);
+        let pong = view::f32s_mut(&mut pong_part[..sh.act_bytes]);
+        let ht = h.arena.raw();
+
+        let refs0 = VqLayerRefs {
+            codebook: &tables[sh.codebook[0].clone()],
+            idx: &ht[h.layers[0].idx.clone()],
+            gain: &ht[h.layers[0].gain.clone()],
+            bias: view::f32s(&ht[h.layers[0].bias.clone()]),
+            quant: h.quant[0],
+        };
+        run_vq_layer(&refs0, bits, x, bucket, d_in, d_hidden, g, ping);
+        let refs1 = VqLayerRefs {
+            codebook: &tables[sh.codebook[1].clone()],
+            idx: &ht[h.layers[1].idx.clone()],
+            gain: &ht[h.layers[1].gain.clone()],
+            bias: view::f32s(&ht[h.layers[1].bias.clone()]),
+            quant: h.quant[1],
+        };
+        run_vq_layer(&refs1, bits, &ping[..bucket * d_hidden], bucket, d_hidden,
+                     d_out, g, pong);
+
+        out.clear();
+        out.extend_from_slice(&pong[..bucket * d_out]);
+        self.stats.batches += 1;
+        self.stats.rows += bucket as u64;
+        Ok(())
     }
 }
 
@@ -631,5 +1088,192 @@ mod tests {
         };
         b.register_head("h", &head).unwrap();
         assert!(b.execute("h", &[0.0; 3 * 8], 8).is_err());
+    }
+
+    /// A VqFp32 head of `small_spec` shape sharing the given codebook in
+    /// both layer slots (per-head indices/gains/biases from `seed`).
+    fn family_fp32_head(seed: u64, cb: &[f32]) -> HeadWeights {
+        let mut rng = Pcg32::seeded(seed);
+        let idx0: Vec<i32> = (0..12).map(|_| rng.below(6) as i32).collect();
+        let idx1: Vec<i32> = (0..8).map(|_| rng.below(6) as i32).collect();
+        HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[6, 5], cb),
+            idx0: Tensor::from_i32(&[3, 4], &idx0),
+            g0: Tensor::from_f32(&[3, 4], &rng.normal_vec(12, 0.0, 1.0)),
+            bs0: Tensor::from_f32(&[4], &rng.normal_vec(4, 0.0, 0.5)),
+            cb1: Tensor::from_f32(&[6, 5], cb),
+            idx1: Tensor::from_i32(&[4, 2], &idx1),
+            g1: Tensor::from_f32(&[4, 2], &rng.normal_vec(8, 0.0, 1.0)),
+            bs1: Tensor::from_f32(&[2], &rng.normal_vec(2, 0.0, 0.5)),
+        }
+    }
+
+    #[test]
+    fn family_backend_matches_private_arena() {
+        let mut rng = Pcg32::seeded(77);
+        let cb = rng.normal_vec(6 * 5, 0.0, 1.0);
+        let spec = small_spec();
+        let mut fam = FamilyArenaBackend::new(spec.clone());
+        let mut prv = ArenaBackend::new(spec);
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            let head = family_fp32_head(100 + i as u64, &cb);
+            fam.register_head(name, &head).unwrap();
+            prv.register_head(name, &head).unwrap();
+        }
+        assert_eq!(fam.family_head_count(), 3);
+        let x = rng.normal_vec(4 * 3, 0.0, 1.0);
+        for name in ["a", "b", "c"] {
+            let got = fam.execute(name, &x, 4).unwrap();
+            let want = prv.execute(name, &x, 4).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}: {a} vs {b}");
+            }
+        }
+        // each extra head is a fraction of its private-arena cost
+        let marginal = fam.head_marginal_bytes("b").unwrap();
+        let private = prv.head_arena_bytes("b").unwrap();
+        assert!(marginal < private, "{marginal} vs {private}");
+        assert!(fam.shared_bytes().unwrap() > 0);
+        assert!(fam.shared_plan().unwrap().lookup("layer0/codebook").is_some());
+    }
+
+    #[test]
+    fn family_rejects_divergent_codebook() {
+        let mut rng = Pcg32::seeded(78);
+        let cb = rng.normal_vec(30, 0.0, 1.0);
+        let mut other = cb.clone();
+        other[7] += 0.25;
+        let mut fam = FamilyArenaBackend::new(small_spec());
+        fam.register_head("a", &family_fp32_head(1, &cb)).unwrap();
+        let err = fam.register_head("b", &family_fp32_head(2, &other)).unwrap_err();
+        assert!(format!("{err:#}").contains("universal basis"), "{err:#}");
+        // the family still serves its established head
+        assert!(fam.execute("a", &[0.0; 3], 1).is_ok());
+        assert!(fam.execute("b", &[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn family_serves_dense_heads_from_private_arenas() {
+        let mut rng = Pcg32::seeded(79);
+        let g0 = rng.normal_vec(3 * 4 * 5, 0.0, 0.5);
+        let g1 = rng.normal_vec(4 * 2 * 5, 0.0, 0.5);
+        let dense = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &g0),
+            grids1: Tensor::from_f32(&[4, 2, 5], &g1),
+        };
+        let mut fam = FamilyArenaBackend::new(small_spec());
+        fam.register_head("d", &dense).unwrap();
+        assert_eq!(fam.family_head_count(), 0);
+        assert!(fam.shared_bytes().is_none());
+        let x = rng.normal_vec(4 * 3, 0.0, 1.0);
+        let got = fam.execute("d", &x, 4).unwrap();
+        let want = DenseModel { grids0: g0, grids1: g1, d_in: 3, d_hidden: 4, d_out: 2, g: 5 }
+            .forward(&x, 4);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert!(fam.remove_head("d"));
+        assert!(!fam.remove_head("d"));
+    }
+
+    #[test]
+    fn removing_the_last_family_head_releases_the_shared_basis() {
+        // hot-swap a re-trained family: once every head of family A is
+        // retired, the shared codebook must be released so family B (a
+        // DIFFERENT universal basis) can register on the same backend
+        let mut rng = Pcg32::seeded(82);
+        let cb_a = rng.normal_vec(30, 0.0, 1.0);
+        let cb_b = rng.normal_vec(30, 0.0, 1.0);
+        let mut fam = FamilyArenaBackend::new(small_spec());
+        fam.register_head("a0", &family_fp32_head(1, &cb_a)).unwrap();
+        fam.register_head("a1", &family_fp32_head(2, &cb_a)).unwrap();
+        // family A established: basis B is rejected
+        assert!(fam.register_head("b0", &family_fp32_head(3, &cb_b)).is_err());
+        assert!(fam.remove_head("a0"));
+        assert!(fam.shared_bytes().is_some(), "a1 still serves from the basis");
+        assert!(fam.remove_head("a1"));
+        assert!(fam.shared_bytes().is_none(), "last head releases the basis");
+        fam.register_head("b0", &family_fp32_head(3, &cb_b)).unwrap();
+        assert!(fam.execute("b0", &[0.0; 3], 1).is_ok());
+
+        // hot-swapping the last family head to a dense variant must release
+        // the basis too (register_head path, not remove_head)
+        let dense = HeadWeights::DenseKan {
+            grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
+            grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
+        };
+        fam.register_head("b0", &dense).unwrap();
+        assert_eq!(fam.family_head_count(), 0);
+        assert!(fam.shared_bytes().is_none(), "dense swap releases the basis");
+        fam.register_head("c0", &family_fp32_head(4, &cb_a)).unwrap();
+        assert!(fam.execute("c0", &[0.0; 3], 1).is_ok());
+    }
+
+    #[test]
+    fn sole_family_head_hot_swaps_to_a_retrained_basis() {
+        let mut rng = Pcg32::seeded(83);
+        let cb_a = rng.normal_vec(30, 0.0, 1.0);
+        let cb_b = rng.normal_vec(30, 0.0, 1.0);
+        let mut fam = FamilyArenaBackend::new(small_spec());
+        fam.register_head("a", &family_fp32_head(1, &cb_a)).unwrap();
+        // sole head: a retrained universal basis hot-swaps in place
+        fam.register_head("a", &family_fp32_head(2, &cb_b)).unwrap();
+        assert!(fam.execute("a", &[0.0; 3], 1).is_ok());
+        // a failed swap restores the serving basis and head
+        let bad = HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[6, 5], &rng.normal_vec(30, 0.0, 1.0)),
+            idx0: Tensor::from_i32(&[3, 4], &[0, 1, 2, 3, 4, 5, 0, 1, 2, 3, 4, 99]),
+            g0: Tensor::from_f32(&[3, 4], &[1.0; 12]),
+            bs0: Tensor::from_f32(&[4], &[0.0; 4]),
+            cb1: Tensor::from_f32(&[6, 5], &rng.normal_vec(30, 0.0, 1.0)),
+            idx1: Tensor::from_i32(&[4, 2], &[0; 8]),
+            g1: Tensor::from_f32(&[4, 2], &[1.0; 8]),
+            bs1: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        assert!(fam.register_head("a", &bad).is_err());
+        assert!(fam.execute("a", &[0.0; 3], 1).is_ok(), "old head must keep serving");
+        // with a second head registered the basis is load-bearing: swapping
+        // one head to a different basis is rejected
+        fam.register_head("a2", &family_fp32_head(3, &cb_b)).unwrap();
+        assert!(fam.register_head("a", &family_fp32_head(4, &cb_a)).is_err());
+        assert!(fam.execute("a2", &[0.0; 3], 1).is_ok());
+    }
+
+    #[test]
+    fn failed_first_head_does_not_poison_the_family() {
+        // regression: a head whose codebook passes shape validation but
+        // whose indices are out of range must NOT commit its codebook as
+        // the family's shared basis
+        let mut rng = Pcg32::seeded(81);
+        let bad_cb = rng.normal_vec(30, 0.0, 1.0);
+        let bad = HeadWeights::VqFp32 {
+            cb0: Tensor::from_f32(&[6, 5], &bad_cb),
+            idx0: Tensor::from_i32(&[3, 4], &[0, 1, 2, 3, 4, 5, 0, 1, 2, 3, 4, 99]),
+            g0: Tensor::from_f32(&[3, 4], &[1.0; 12]),
+            bs0: Tensor::from_f32(&[4], &[0.0; 4]),
+            cb1: Tensor::from_f32(&[6, 5], &bad_cb),
+            idx1: Tensor::from_i32(&[4, 2], &[0; 8]),
+            g1: Tensor::from_f32(&[4, 2], &[1.0; 8]),
+            bs1: Tensor::from_f32(&[2], &[0.0; 2]),
+        };
+        let mut fam = FamilyArenaBackend::new(small_spec());
+        assert!(fam.register_head("bad", &bad).is_err());
+        assert!(fam.shared_bytes().is_none(), "failed head must not commit shared tables");
+        // a legitimate family with a DIFFERENT codebook still registers
+        let good_cb = rng.normal_vec(30, 0.0, 1.0);
+        fam.register_head("good", &family_fp32_head(6, &good_cb)).unwrap();
+        assert_eq!(fam.family_head_count(), 1);
+        assert!(fam.execute("good", &[0.0; 3], 1).is_ok());
+    }
+
+    #[test]
+    fn family_bucket_and_unknown_head_errors() {
+        let mut rng = Pcg32::seeded(80);
+        let cb = rng.normal_vec(30, 0.0, 1.0);
+        let mut fam = FamilyArenaBackend::new(small_spec()); // buckets [1, 4]
+        fam.register_head("a", &family_fp32_head(5, &cb)).unwrap();
+        assert!(fam.execute("a", &[0.0; 3 * 8], 8).is_err());
+        assert!(fam.execute("nope", &[0.0; 3], 1).is_err());
     }
 }

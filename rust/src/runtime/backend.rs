@@ -25,7 +25,9 @@ use crate::kan::spec::{KanSpec, VqSpec};
 /// batcher pads to.
 #[derive(Debug, Clone)]
 pub struct BackendSpec {
+    /// Head shape every registered head must match.
     pub kan: KanSpec,
+    /// Codebook size VQ heads are validated against.
     pub vq: VqSpec,
     /// sorted ascending; the batcher pads each batch to the smallest
     /// bucket that fits (AOT backends compile one executable per bucket)
@@ -53,6 +55,7 @@ impl BackendSpec {
         }
     }
 
+    /// Replace the batch buckets (builder style).
     pub fn with_buckets(mut self, buckets: &[usize]) -> BackendSpec {
         self.batch_buckets = buckets.to_vec();
         self
@@ -85,6 +88,24 @@ pub trait Backend {
     /// backends (`ArenaBackend`) a zero-alloc hot path.  The default
     /// delegates to [`Backend::execute`]; `out` is cleared and refilled
     /// with `[bucket, d_out]` scores.
+    ///
+    /// ```
+    /// use share_kan::coordinator::HeadWeights;
+    /// use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
+    /// use share_kan::tensor::Tensor;
+    ///
+    /// let head = HeadWeights::DenseKan {
+    ///     grids0: Tensor::from_f32(&[2, 3, 4], &[0.1; 24]),
+    ///     grids1: Tensor::from_f32(&[3, 2, 4], &[0.2; 24]),
+    /// };
+    /// let mut backend = BackendConfig::Arena(BackendSpec::for_head(&head))
+    ///     .build()
+    ///     .unwrap();
+    /// backend.register_head("demo", &head).unwrap();
+    /// let mut out = Vec::new(); // reused across batches -> zero-alloc serving
+    /// backend.execute_into("demo", &[0.5, -0.5], 1, &mut out).unwrap();
+    /// assert_eq!(out.len(), 2); // row-major [bucket, d_out]
+    /// ```
     fn execute_into(&mut self, head: &str, x: &[f32], bucket: usize,
                     out: &mut Vec<f32>) -> Result<()> {
         let scores = self.execute(head, x, bucket)?;
@@ -103,6 +124,12 @@ pub enum BackendConfig {
     /// Int8-resident codebooks/gains, ping-pong scratch) in one contiguous
     /// 256-byte-aligned arena per head; zero-alloc per-batch hot path.
     Arena(BackendSpec),
+    /// Family-arena serving (paper §6 universal basis): all VQ heads share
+    /// ONE cache-resident codebook arena (+ activation scratch); each head
+    /// adds only bit-packed indices, gains and bias sums.  Heads must carry
+    /// bitwise-identical codebooks (see `vq::universal::compress_family`);
+    /// dense/MLP heads fall back to private arenas.
+    FamilyArena(BackendSpec),
     /// PJRT engine over `artifacts/` (requires the `pjrt` feature and a
     /// real xla runtime — the vendored stub fails cleanly at startup).
     #[cfg(feature = "pjrt")]
@@ -122,6 +149,9 @@ impl BackendConfig {
         match self {
             BackendConfig::Native(spec) => Ok(Box::new(super::native::NativeBackend::new(spec))),
             BackendConfig::Arena(spec) => Ok(Box::new(super::arena::ArenaBackend::new(spec))),
+            BackendConfig::FamilyArena(spec) => {
+                Ok(Box::new(super::arena::FamilyArenaBackend::new(spec)))
+            }
             #[cfg(feature = "pjrt")]
             BackendConfig::Pjrt { artifacts_dir } => {
                 Ok(Box::new(super::pjrt::PjrtBackend::load(&artifacts_dir)?))
@@ -169,6 +199,13 @@ mod tests {
         let b = BackendConfig::Arena(BackendSpec::default()).build().unwrap();
         assert_eq!(b.spec().kan.d_in, 64);
         assert_eq!(b.name(), "arena-lutham");
+    }
+
+    #[test]
+    fn family_arena_config_builds() {
+        let b = BackendConfig::FamilyArena(BackendSpec::default()).build().unwrap();
+        assert_eq!(b.spec().kan.d_in, 64);
+        assert_eq!(b.name(), "family-arena");
     }
 
     #[test]

@@ -10,36 +10,58 @@ use crate::kan::spec::{KanSpec, VqSpec};
 use crate::tensor::DType;
 use crate::util::json::{self, Json};
 
+/// One artifact input parameter (name, shape, dtype) in call order.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name as exported by the AOT lowering.
     pub name: String,
+    /// Row-major shape.
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: DType,
 }
 
+/// One AOT-lowered artifact (an HLO module specialized to a batch bucket).
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact key, e.g. `vq_kan_fwd_b32`.
     pub name: String,
+    /// HLO text file name inside the artifacts directory.
     pub file: String,
+    /// Input parameters in call order (the padded batch `x` included).
     pub params: Vec<ParamSpec>,
+    /// Output names.
     pub outputs: Vec<String>,
+    /// Artifact kind (`fwd`, `train_step`, ...).
     pub kind: String,
+    /// Model family tag (`mlp`, `dense_kan`, `vq_kan`, ...).
     pub model: String,
+    /// Batch bucket the artifact was compiled for (0 if not batched).
     pub batch: usize,
+    /// Grid size for sweep artifacts (`None` for the default G).
     pub grid_size: Option<usize>,
 }
 
+/// Parsed `artifacts/manifest.json`: model shapes, batch buckets and the
+/// artifact table.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Head shape all artifacts were lowered for.
     pub kan_spec: KanSpec,
+    /// VQ codebook spec the artifacts expect.
     pub vq_spec: VqSpec,
+    /// Batch buckets with one compiled executable each.
     pub batch_buckets: Vec<usize>,
+    /// Grid sizes covered by the G-sweep artifacts.
     pub g_sweep: Vec<usize>,
+    /// Batch size the train-step artifacts expect.
     pub train_batch: usize,
+    /// Artifact table keyed by artifact name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -48,6 +70,7 @@ impl Manifest {
         Self::from_json(&j)
     }
 
+    /// Parse a manifest from already-loaded JSON.
     pub fn from_json(j: &Json) -> Result<Manifest> {
         let kan_spec = KanSpec::from_manifest(j).context("manifest model block")?;
         let vq_spec = VqSpec::from_manifest(j).context("manifest codebook_size")?;

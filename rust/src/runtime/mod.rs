@@ -5,7 +5,10 @@
 //! lookup-table math straight from head weights, no artifacts required),
 //! the [`ArenaBackend`] (same math served from one LUTHAM-planned
 //! 256-byte-aligned arena per head — bit-packed indices decoded in place,
-//! zero-alloc hot path, bit-for-bit equal to native) and, behind the
+//! zero-alloc hot path, bit-for-bit equal to native), the
+//! [`FamilyArenaBackend`] (many heads of one family served from ONE shared
+//! cache-resident codebook arena; head N+1 costs only indices + scalars)
+//! and, behind the
 //! `pjrt` cargo feature, by `PjrtBackend` — the PJRT CPU client that loads
 //! `artifacts/*.hlo.txt` (HLO text — see python/compile/aot.py for why not
 //! serialized protos) and executes them.
@@ -20,13 +23,16 @@ pub mod manifest;
 pub mod native;
 
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)]
 pub mod engine;
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)]
 pub mod literal;
 #[cfg(feature = "pjrt")]
+#[allow(missing_docs)]
 pub mod pjrt;
 
-pub use arena::{ArenaBackend, ArenaStats};
+pub use arena::{ArenaBackend, ArenaStats, FamilyArenaBackend};
 pub use backend::{Backend, BackendConfig, BackendSpec};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec};
 pub use native::{NativeBackend, NativeStats};

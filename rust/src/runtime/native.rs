@@ -28,17 +28,23 @@ enum NativeHead {
 /// Execution counters (the native analogue of `EngineStats`).
 #[derive(Debug, Default, Clone)]
 pub struct NativeStats {
+    /// Padded batches executed.
     pub batches: u64,
+    /// Total rows executed (bucket slots, padding included).
     pub rows: u64,
 }
 
+/// Pure-Rust execution backend serving PLI math straight from head weights
+/// (see module docs).
 pub struct NativeBackend {
     spec: BackendSpec,
     heads: HashMap<String, NativeHead>,
+    /// Execution counters.
     pub stats: NativeStats,
 }
 
 impl NativeBackend {
+    /// Backend with no heads registered yet.
     pub fn new(spec: BackendSpec) -> NativeBackend {
         NativeBackend { spec, heads: HashMap::new(), stats: NativeStats::default() }
     }

@@ -14,13 +14,21 @@ use super::kmeans::{KMeans, KMeansConfig};
 /// One compressed KAN layer (fp32 form).
 #[derive(Debug, Clone)]
 pub struct VqLayer {
-    pub codebook: Vec<f32>,  // [k, g]
+    /// Row-major `[k, g]` codebook of normalized shapes.
+    pub codebook: Vec<f32>,
+    /// Codebook rows.
     pub k: usize,
+    /// Grid points per row.
     pub g: usize,
-    pub idx: Vec<i32>,       // [n_in * n_out]
-    pub gain: Vec<f32>,      // [n_in * n_out]
-    pub bias: Vec<f32>,      // [n_in * n_out] (per-edge; fold with bias_sum())
+    /// Per-edge codebook assignment, `[n_in * n_out]`.
+    pub idx: Vec<i32>,
+    /// Per-edge gains, `[n_in * n_out]`.
+    pub gain: Vec<f32>,
+    /// Per-edge biases, `[n_in * n_out]` (fold with [`VqLayer::bias_sum`]).
+    pub bias: Vec<f32>,
+    /// Layer input width.
     pub n_in: usize,
+    /// Layer output width.
     pub n_out: usize,
 }
 

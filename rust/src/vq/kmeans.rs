@@ -6,11 +6,16 @@
 
 use crate::data::rng::Pcg32;
 
+/// Mini-batch k-means hyperparameters.
 #[derive(Debug, Clone)]
 pub struct KMeansConfig {
+    /// Number of centroids (codebook size).
     pub k: usize,
+    /// Rows sampled per mini-batch step.
     pub batch_size: usize,
+    /// Mini-batch steps to run.
     pub iterations: usize,
+    /// RNG seed (init + batch sampling).
     pub seed: u64,
 }
 
@@ -35,10 +40,14 @@ fn stale_limit(n: usize, batch: usize) -> u32 {
     STALE_STEPS_BEFORE_RESEED.max((4 * n / batch.max(1)) as u32)
 }
 
+/// A (possibly still-training) k-means model over `[n, d]` row data.
 #[derive(Debug, Clone)]
 pub struct KMeans {
-    pub centroids: Vec<f32>, // [k, d]
+    /// Row-major `[k, d]` centroid matrix.
+    pub centroids: Vec<f32>,
+    /// Number of centroids.
     pub k: usize,
+    /// Row dimensionality.
     pub d: usize,
     /// mini-batch per-centroid counts (for the decaying learning rate)
     counts: Vec<f64>,

@@ -17,19 +17,30 @@ use crate::util::json::Json;
 
 /// Result of compressing one head.
 pub struct Compressed {
+    /// Per-layer VQ decomposition (fp32 form).
     pub layers: Vec<VqLayer>,
+    /// Per-layer reconstruction R² (against the quantized reconstruction
+    /// when `precision == Int8`).
     pub r2: Vec<f64>,
+    /// Storage precision of codebooks/gains.
     pub precision: Precision,
     /// Int8 payloads (present when precision == Int8)
     pub int8: Option<Int8Payload>,
+    /// Head shape this compression was run for.
     pub spec: KanSpec,
+    /// Configured codebook size.
     pub k: usize,
 }
 
+/// Quantized per-layer payloads of an Int8 compression.
 pub struct Int8Payload {
+    /// Per-layer Int8 codebooks.
     pub codebook_q: Vec<Vec<i8>>,
+    /// Per-layer linear codebook dequant scales.
     pub codebook_scale: Vec<f32>,
+    /// Per-layer log-Int8 gain codes.
     pub gain_q: Vec<Vec<i8>>,
+    /// Per-layer log-Int8 gain dequant parameters.
     pub gain_params: Vec<LogInt8Params>,
 }
 

@@ -13,10 +13,13 @@
 /// Symmetric linear Int8 quantization of a float slice.
 #[derive(Debug, Clone)]
 pub struct LinearInt8 {
+    /// Quantized codes.
     pub q: Vec<i8>,
+    /// Dequant scale: `x ≈ q as f32 * scale`.
     pub scale: f32,
 }
 
+/// Quantize with one symmetric scale: `q = round(x / s)`, `s = max|x|/127`.
 pub fn quantize_linear_int8(x: &[f32]) -> LinearInt8 {
     let max_abs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
     let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
@@ -27,6 +30,7 @@ pub fn quantize_linear_int8(x: &[f32]) -> LinearInt8 {
     LinearInt8 { q, scale }
 }
 
+/// Invert [`quantize_linear_int8`]: `x = q as f32 * scale` per element.
 pub fn dequantize_linear_int8(q: &[i8], scale: f32) -> Vec<f32> {
     q.iter().map(|&v| v as f32 * scale).collect()
 }
@@ -34,13 +38,18 @@ pub fn dequantize_linear_int8(q: &[i8], scale: f32) -> Vec<f32> {
 /// Logarithmic Int8 gain quantization parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct LogInt8Params {
+    /// ln of the smallest calibrated non-zero magnitude.
     pub log_lo: f32,
+    /// ln-space step between adjacent code magnitudes.
     pub log_step: f32,
 }
 
+/// Result of the signed-log gain quantization.
 #[derive(Debug, Clone)]
 pub struct LogInt8 {
+    /// Signed codes; `|q|` in 1..=127, 0 encodes exactly 0.
     pub q: Vec<i8>,
+    /// Dequantization parameters.
     pub params: LogInt8Params,
 }
 
@@ -83,10 +92,12 @@ pub fn quantize_log_int8(x: &[f32]) -> LogInt8 {
     LogInt8 { q, params: LogInt8Params { log_lo, log_step } }
 }
 
+/// Invert [`quantize_log_int8`] for one code.
 pub fn dequantize_log_int8_one(q: i8, p: LogInt8Params) -> f32 {
     crate::kan::eval::dequant_gain_log_int8(q, p.log_lo, p.log_step)
 }
 
+/// Invert [`quantize_log_int8`] for a slice of codes.
 pub fn dequantize_log_int8(q: &[i8], p: LogInt8Params) -> Vec<f32> {
     q.iter().map(|&v| dequantize_log_int8_one(v, p)).collect()
 }

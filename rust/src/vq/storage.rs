@@ -10,23 +10,32 @@
 
 use crate::kan::spec::{KanSpec, VqSpec};
 
+/// Storage precision of codebook coefficients and gains.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
+    /// 4-byte float coefficients and gains.
     Fp32,
+    /// Linear-Int8 coefficients + log-Int8 gains (paper §4.2).
     Int8,
 }
 
 /// Byte accounting for one model variant.
 #[derive(Debug, Clone)]
 pub struct SizeReport {
+    /// Variant label (e.g. `share_kan_int8`).
     pub label: String,
+    /// Codebook bytes (all layers).
     pub codebook_bytes: usize,
+    /// Bit-packed index bytes (Eq. 3).
     pub index_bytes: usize,
+    /// Gain + bias bytes.
     pub gain_bias_bytes: usize,
+    /// Sum of all components.
     pub total_bytes: usize,
 }
 
 impl SizeReport {
+    /// Total in (decimal) megabytes.
     pub fn mb(&self) -> f64 {
         self.total_bytes as f64 / 1e6
     }

@@ -5,37 +5,60 @@
 //!
 //! Implementation: pool the normalized shapes of every head, fit one
 //! codebook, then assign each head's edges against it.  The marginal cost
-//! of head N+1 is indices + scalars only (`marginal_bytes`).
+//! of head N+1 is indices + scalars only (`marginal_bytes`), and
+//! [`compress_family`] emits one servable checkpoint per head — all
+//! carrying **bitwise-identical** codebook tensors, which is what the
+//! family serving stack (`memplan::plan_family`,
+//! `runtime::arena::FamilyArenaBackend`) dedups into one cache-resident
+//! arena.
 
 use anyhow::Result;
 
 use super::decompose::{normalize_grids, r_squared, VqLayer};
 use super::kmeans::{KMeans, KMeansConfig};
+use super::pipeline::{Compressed, Int8Payload};
+use super::quant::{
+    dequantize_linear_int8, dequantize_log_int8, quantize_linear_int8, quantize_log_int8,
+};
+use super::storage::Precision;
 use crate::kan::checkpoint::Checkpoint;
 use crate::kan::spec::KanSpec;
 
 /// One layer-slot of a universal codebook (layer 0 and layer 1 of every
 /// head share slot-wise, matching the per-layer codebooks of §4.2).
 pub struct UniversalCodebook {
-    pub codebook: Vec<f32>, // [k, g]
+    /// Row-major `[k, g]` centroid matrix.
+    pub codebook: Vec<f32>,
+    /// Number of codebook rows.
     pub k: usize,
+    /// Grid points per row.
     pub g: usize,
 }
 
 /// A head compressed against a shared codebook: indices + scalars only.
 pub struct SharedHead {
-    pub layers: Vec<VqLayer>, // codebook fields reference-equal copies
+    /// Per-layer assignments; the `codebook` fields are copies of the
+    /// universal codebook (identical across every head of the family).
+    pub layers: Vec<VqLayer>,
+    /// Per-layer reconstruction R² against the shared basis.
     pub r2: Vec<f64>,
 }
 
 impl SharedHead {
-    /// Bytes this head adds on top of the shared codebook (Eq. 3 packed).
+    /// Bytes this head adds on top of the shared codebook in the paper's
+    /// **Int8 serving configuration**: ⌈log₂K⌉-bit packed indices (Eq. 3)
+    /// + log-Int8 gains (1 byte/edge) + **fp32 folded bias sums** (4 bytes
+    /// per *output*, not per edge — the runtime folds per-edge biases into
+    /// per-output sums at compression time).  Matches
+    /// `memplan::plan_family(.., Precision::Int8, ..)`'s per-head region
+    /// payload byte for byte; an fp32-resident family additionally pays
+    /// 3 more bytes per edge of gain.
     pub fn marginal_bytes(&self, k: usize) -> usize {
         self.layers
             .iter()
             .map(|l| {
                 let e = l.n_in * l.n_out;
-                super::bitpack::packed_len(e, k) + 2 * e // log-int8 gain + int8 bias
+                super::bitpack::packed_len(e, k) + e + 4 * l.n_out
             })
             .sum()
     }
@@ -92,6 +115,73 @@ pub fn assign_head(ck: &Checkpoint, spec: &KanSpec, universal: &[UniversalCodebo
         layers.push(layer);
     }
     Ok(SharedHead { layers, r2 })
+}
+
+/// Compress a whole head family against ONE universal codebook and return
+/// a servable [`Compressed`] per head (paper §6 wired into the deployment
+/// pipeline).
+///
+/// Every returned head carries **bitwise-identical** codebook tensors —
+/// and, under Int8, identical codebook dequant scales (the quantizer is a
+/// deterministic function of the shared codebook) — so
+/// `runtime::arena::FamilyArenaBackend` accepts them as one family and
+/// stores the codebook once.  Gains/biases stay per head; under Int8 the
+/// per-head R² is recomputed against the quantized reconstruction exactly
+/// as [`super::pipeline::compress`] does.
+pub fn compress_family(heads: &[&Checkpoint], spec: &KanSpec, k: usize,
+                       precision: Precision, seed: u64) -> Result<Vec<Compressed>> {
+    anyhow::ensure!(!heads.is_empty(), "family needs at least one head");
+    let universal = fit_universal(heads, spec, k, seed)?;
+    // quantize the shared codebook ONCE per layer slot, outside the head
+    // loop: every head carries bitwise-identical cbq + scale by
+    // construction (and N-1 redundant O(K·G) quantization passes are saved)
+    let shared_q: Option<Vec<crate::vq::quant::LinearInt8>> =
+        if precision == Precision::Int8 {
+            Some(universal.iter().map(|u| quantize_linear_int8(&u.codebook)).collect())
+        } else {
+            None
+        };
+    // ... and dequantized once: the per-head Int8 R² recompute below needs
+    // the fp32 view of the same shared table
+    let shared_deq: Vec<Vec<f32>> = match &shared_q {
+        Some(sq) => sq.iter().map(|c| dequantize_linear_int8(&c.q, c.scale)).collect(),
+        None => Vec::new(),
+    };
+    let mut out = Vec::with_capacity(heads.len());
+    for ck in heads {
+        let sh = assign_head(ck, spec, &universal)?;
+        let layers = sh.layers;
+        let mut r2 = sh.r2;
+        let int8 = if let Some(sq) = &shared_q {
+            let mut cq = Vec::new();
+            let mut cs = Vec::new();
+            let mut gq = Vec::new();
+            let mut gp = Vec::new();
+            for (li, l) in layers.iter().enumerate() {
+                cq.push(sq[li].q.clone());
+                cs.push(sq[li].scale);
+                let gn = quantize_log_int8(&l.gain);
+                gq.push(gn.q);
+                gp.push(gn.params);
+            }
+            // report the Int8 rows' actual fidelity (assignment error +
+            // codebook/gain quantization error), mirroring pipeline::compress
+            for (li, l) in layers.iter().enumerate() {
+                let grids = ck.require(&format!("grids{li}"))?.as_f32();
+                let q_layer = VqLayer {
+                    codebook: shared_deq[li].clone(),
+                    gain: dequantize_log_int8(&gq[li], gp[li]),
+                    ..l.clone()
+                };
+                r2[li] = r_squared(&grids, &q_layer.reconstruct());
+            }
+            Some(Int8Payload { codebook_q: cq, codebook_scale: cs, gain_q: gq, gain_params: gp })
+        } else {
+            None
+        };
+        out.push(Compressed { layers, r2, precision, int8, spec: *spec, k });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -160,6 +250,69 @@ mod tests {
         let marginal = sh.marginal_bytes(16);
         let dense = spec.num_params() * 4;
         assert!(marginal * 8 < dense, "marginal {marginal} vs dense {dense}");
+    }
+
+    #[test]
+    fn marginal_bytes_matches_family_plan_payload() {
+        // regression (PR 3): marginal_bytes used to count per-edge int8
+        // biases, but the arena stores per-OUTPUT fp32 bias sums — the two
+        // accountings diverge on any head with n_in > 4.  Pin it to the
+        // actual per-head region the family planner lays out.
+        use crate::kan::spec::VqSpec;
+        use crate::memplan::plan_family;
+        let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 8 };
+        let k = 16;
+        let shared_protos = protos(4, 8, 11);
+        let head = fake_head(&spec, 5, &shared_protos);
+        let universal = fit_universal(&[&head], &spec, k, 7).unwrap();
+        let sh = assign_head(&head, &spec, &universal).unwrap();
+        let fam = plan_family(&spec, &VqSpec { codebook_size: k },
+                              Precision::Int8, 1)
+            .unwrap();
+        assert_eq!(sh.marginal_bytes(k), fam.head_payload_bytes());
+        // and the fp32 bias sums dominate neither: still far below an
+        // int8-bias-per-edge MIScount would claim for wide heads
+        assert!(sh.marginal_bytes(k) < fam.private_head_bytes().unwrap());
+    }
+
+    #[test]
+    fn compress_family_shares_one_codebook_bitwise() {
+        let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 4, grid_size: 8 };
+        let shared_protos = protos(6, 8, 9);
+        let heads: Vec<Checkpoint> = (0..3)
+            .map(|i| fake_head(&spec, 200 + i, &shared_protos))
+            .collect();
+        let refs: Vec<&Checkpoint> = heads.iter().collect();
+        for precision in [Precision::Fp32, Precision::Int8] {
+            let family = compress_family(&refs, &spec, 16, precision, 7).unwrap();
+            assert_eq!(family.len(), 3);
+            let cks: Vec<_> = family.iter().map(|c| c.to_checkpoint()).collect();
+            for li in 0..2 {
+                let (cb_name, scale_name) = match precision {
+                    Precision::Fp32 => (format!("cb{li}"), None),
+                    Precision::Int8 => (format!("cbq{li}"), Some(format!("scales{li}"))),
+                };
+                let first = cks[0].require(&cb_name).unwrap();
+                for ck in &cks[1..] {
+                    let other = ck.require(&cb_name).unwrap();
+                    assert_eq!(first.shape(), other.shape());
+                    assert_eq!(first.raw(), other.raw(),
+                               "{cb_name} must be bitwise-shared");
+                }
+                if let Some(sn) = scale_name {
+                    // codebook scale (slot 0) shared; gain params per head
+                    let s0 = cks[0].require(&sn).unwrap().as_f32();
+                    for ck in &cks[1..] {
+                        let s = ck.require(&sn).unwrap().as_f32();
+                        assert_eq!(s0[0].to_bits(), s[0].to_bits());
+                    }
+                }
+            }
+            // quality: the shared basis still reconstructs each head well
+            for c in &family {
+                assert!(c.r2.iter().all(|&r| r > 0.8), "{:?}", c.r2);
+            }
+        }
     }
 
     #[test]

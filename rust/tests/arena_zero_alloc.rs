@@ -3,11 +3,11 @@
 //! vector) performs **zero heap allocations** — the LUTHAM property the
 //! paper needs for safety-certified deployment (§4.3, ISO 26262).
 //!
-//! Asserted with a counting global allocator, so this file holds exactly
-//! one test (the counter is process-global; parallel tests would alias it).
+//! Asserted with the shared counting allocator from `tests/common/mod.rs`;
+//! the counter is process-global, so this file holds exactly one test
+//! (parallel tests would alias it).
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+mod common;
 
 use share_kan::coordinator::HeadWeights;
 use share_kan::data::rng::Pcg32;
@@ -16,41 +16,8 @@ use share_kan::kan::spec::KanSpec;
 use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-static COUNTING: AtomicBool = AtomicBool::new(false);
-
-struct CountingAlloc;
-
-// SAFETY: delegates everything to System; only adds a counter.
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        if COUNTING.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        if COUNTING.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        if COUNTING.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
 #[global_allocator]
-static ALLOCATOR: CountingAlloc = CountingAlloc;
+static ALLOCATOR: common::CountingAlloc = common::CountingAlloc;
 
 #[test]
 fn hot_path_allocates_nothing_after_registration() {
@@ -76,15 +43,13 @@ fn hot_path_allocates_nothing_after_registration() {
     backend.execute_into("h", &x, 8, &mut out).unwrap();
     backend.execute_into("d", &x, 8, &mut out).unwrap();
 
-    ALLOCS.store(0, Ordering::SeqCst);
-    COUNTING.store(true, Ordering::SeqCst);
-    for _ in 0..100 {
-        backend.execute_into("h", &x, 8, &mut out).unwrap();
-        backend.execute_into("d", &x, 8, &mut out).unwrap();
-        std::hint::black_box(&out);
-    }
-    COUNTING.store(false, Ordering::SeqCst);
-    let allocs = ALLOCS.load(Ordering::SeqCst);
+    let allocs = common::count_allocs(|| {
+        for _ in 0..100 {
+            backend.execute_into("h", &x, 8, &mut out).unwrap();
+            backend.execute_into("d", &x, 8, &mut out).unwrap();
+            std::hint::black_box(&out);
+        }
+    });
     assert_eq!(
         allocs, 0,
         "arena hot path must not allocate: counted {allocs} allocations over 200 batches"

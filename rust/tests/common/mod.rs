@@ -1,0 +1,66 @@
+//! Shared test support: a counting global allocator for zero-alloc
+//! assertions (used by `arena_zero_alloc.rs` and
+//! `family_arena_equivalence.rs`).
+//!
+//! Each test binary that does `mod common;` gets its **own** instance of
+//! these process-global statics and must register the allocator itself:
+//!
+//! ```ignore
+//! mod common;
+//! #[global_allocator]
+//! static ALLOCATOR: common::CountingAlloc = common::CountingAlloc;
+//! ```
+//!
+//! The counter is process-global, so within one binary only one test may
+//! have a counting window open at a time — callers serialize (a single
+//! test per file, or a file-wide mutex).
+
+#![allow(dead_code)] // each consumer binary uses a subset of these helpers
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+pub static COUNTING: AtomicBool = AtomicBool::new(false);
+
+/// Delegates everything to [`System`]; adds a gated allocation counter.
+pub struct CountingAlloc;
+
+// SAFETY: delegates everything to System; only adds a counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Run `f` with allocation counting enabled and return how many heap
+/// allocations it performed.  Only meaningful when the binary registered
+/// [`CountingAlloc`] as its `#[global_allocator]`.
+pub fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    f();
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}

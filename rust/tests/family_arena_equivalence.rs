@@ -1,0 +1,141 @@
+//! Family-arena acceptance suite (PR 3 tentpole): serving a head through
+//! the shared-codebook [`FamilyArenaBackend`] must be **bit-for-bit**
+//! identical to serving the same head from its own private `ArenaBackend`
+//! arena — across Dense and VQ (fp32 / Int8) heads, on bucket-padded
+//! batches — and the family hot path must stay **zero-alloc** (counted by
+//! the shared allocator from `tests/common/mod.rs`).
+//!
+//! The counting allocator is process-global, so every test in this file
+//! takes a file-wide lock; only the zero-alloc test opens a counting
+//! window inside it.
+
+mod common;
+
+use std::sync::Mutex;
+
+use share_kan::coordinator::HeadWeights;
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
+use share_kan::vq::universal::compress_family;
+use share_kan::vq::Precision;
+
+#[global_allocator]
+static ALLOCATOR: common::CountingAlloc = common::CountingAlloc;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `n` heads of one family: independently-trained synthetic dense heads
+/// compressed against ONE universal codebook (the real §6 pipeline).
+fn family_heads(spec: &KanSpec, k: usize, precision: Precision, n: usize,
+                seed: u64) -> Vec<HeadWeights> {
+    let cks: Vec<Checkpoint> = (0..n)
+        .map(|i| synthetic_dense(spec, seed + i as u64))
+        .collect();
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    compress_family(&refs, spec, k, precision, seed)
+        .unwrap()
+        .iter()
+        .map(|c| HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        .collect()
+}
+
+/// Register every head on a private-arena backend and a family backend and
+/// require bitwise-identical scores on bucket-padded batches.
+fn assert_family_matches_private(heads: &[HeadWeights], seed: u64) {
+    let spec = BackendSpec::for_head(&heads[0]).with_buckets(&[1, 4, 8]);
+    let d_in = spec.kan.d_in;
+    let mut private = BackendConfig::Arena(spec.clone()).build().unwrap();
+    let mut family = BackendConfig::FamilyArena(spec).build().unwrap();
+    for (i, h) in heads.iter().enumerate() {
+        private.register_head(&format!("task{i}"), h).unwrap();
+        family.register_head(&format!("task{i}"), h).unwrap();
+    }
+    let mut rng = Pcg32::seeded(seed);
+    for &(nrows, bucket) in &[(1usize, 1usize), (3, 4), (4, 4), (5, 8), (8, 8)] {
+        for i in 0..heads.len() {
+            let name = format!("task{i}");
+            // nrows live rows padded to the bucket, as the batcher does
+            let mut x = vec![0.0f32; bucket * d_in];
+            for v in x.iter_mut().take(nrows * d_in) {
+                *v = rng.normal();
+            }
+            let want = private.execute(&name, &x, bucket).unwrap();
+            let got = family.execute(&name, &x, bucket).unwrap();
+            assert_eq!(got.len(), want.len(), "{name} n={nrows} bucket={bucket}");
+            for (e, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{name} n={nrows} bucket={bucket} elem {e}: family {a} != private {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn vq_int8_family_bit_for_bit() {
+    let _g = lock();
+    let spec = KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let heads = family_heads(&spec, 16, Precision::Int8, 4, 40);
+    assert_family_matches_private(&heads, 17);
+}
+
+#[test]
+fn vq_fp32_family_bit_for_bit() {
+    let _g = lock();
+    let spec = KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let heads = family_heads(&spec, 16, Precision::Fp32, 3, 60);
+    assert_family_matches_private(&heads, 18);
+}
+
+#[test]
+fn dense_heads_bit_for_bit_through_family_backend() {
+    // dense heads have nothing to share: the family backend serves them
+    // from private arenas, still bit-for-bit equal to ArenaBackend
+    let _g = lock();
+    let spec = KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let head = HeadWeights::from_checkpoint(&synthetic_dense(&spec, 50)).unwrap();
+    assert_family_matches_private(&[head], 19);
+}
+
+#[test]
+fn family_hot_path_allocates_nothing_after_registration() {
+    let _g = lock();
+    let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 5, grid_size: 8 };
+    let heads = family_heads(&spec, 32, Precision::Int8, 3, 80);
+    let bspec = BackendSpec::for_head(&heads[0]).with_buckets(&[1, 8]);
+    let mut backend = BackendConfig::FamilyArena(bspec).build().unwrap();
+    let names: Vec<String> = (0..heads.len()).map(|i| format!("task{i}")).collect();
+    for (name, head) in names.iter().zip(&heads) {
+        backend.register_head(name, head).unwrap();
+    }
+
+    let mut rng = Pcg32::seeded(9);
+    let x = rng.normal_vec(8 * spec.d_in, 0.0, 1.0);
+    let mut out: Vec<f32> = Vec::new();
+    // warm the output vector's capacity (the one legal allocation site)
+    for name in &names {
+        backend.execute_into(name, &x, 8, &mut out).unwrap();
+    }
+
+    let allocs = common::count_allocs(|| {
+        for _ in 0..100 {
+            for name in &names {
+                backend.execute_into(name, &x, 8, &mut out).unwrap();
+            }
+            std::hint::black_box(&out);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "family hot path must not allocate: counted {allocs} allocations over 300 batches"
+    );
+    assert_eq!(out.len(), 8 * 5);
+}
