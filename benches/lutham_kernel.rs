@@ -2,8 +2,11 @@
 //! the execution-backend trait.  This is the hot path exactly as the
 //! serving coordinator drives it (padded batch in, scores out), on the
 //! pure-Rust native backend AND the arena-resident backend (LUTHAM-planned
-//! tables, bit-packed index decode, zero-alloc `execute_into`) — build with
-//! `--features pjrt` + real xla bindings to compare against AOT artifacts.
+//! tables, bit-packed index decode, zero-alloc `execute_into`) — the arena
+//! backend is measured under **every kernel dispatch** the host supports
+//! (forced scalar, plus AVX2+FMA / NEON SIMD where detected), so
+//! `BENCH_kernel.json` carries machine-readable scalar-vs-SIMD rows per
+//! precision and shape and the speedup is tracked across PRs.
 //!
 //! Results are printed AND written machine-readable to `BENCH_kernel.json`.
 //!
@@ -11,10 +14,12 @@
 
 use share_kan::coordinator::HeadWeights;
 use share_kan::data::rng::Pcg32;
-use share_kan::runtime::{Backend, BackendConfig, BackendSpec};
+use share_kan::runtime::{detect_simd, Backend, BackendConfig, BackendSpec, KernelMode};
 use share_kan::tensor::Tensor;
 use share_kan::util::bench::{write_results, Bencher};
 use share_kan::util::json::Json;
+
+const VARIANTS: [&str; 4] = ["mlp", "dense_kan", "vq_kan_fp32", "vq_kan_int8"];
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -36,45 +41,87 @@ fn main() {
         grids0: Tensor::from_f32(&[d_in, d_h, g], &rng.normal_vec(d_in * d_h * g, 0.0, 0.3)),
         grids1: Tensor::from_f32(&[d_h, d_out, g], &rng.normal_vec(d_h * d_out * g, 0.0, 0.3)),
     };
-    let vq = {
-        let e0 = d_in * d_h;
-        let e1 = d_h * d_out;
-        HeadWeights::VqFp32 {
-            cb0: Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0)),
-            idx0: Tensor::from_i32(&[d_in, d_h],
-                &(0..e0).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
-            g0: Tensor::from_f32(&[d_in, d_h], &rng.normal_vec(e0, 0.0, 0.5)),
-            bs0: Tensor::from_f32(&[d_h], &rng.normal_vec(d_h, 0.0, 0.2)),
-            cb1: Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0)),
-            idx1: Tensor::from_i32(&[d_h, d_out],
-                &(0..e1).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
-            g1: Tensor::from_f32(&[d_h, d_out], &rng.normal_vec(e1, 0.0, 0.5)),
-            bs1: Tensor::from_f32(&[d_out], &rng.normal_vec(d_out, 0.0, 0.2)),
-        }
+    let e0 = d_in * d_h;
+    let e1 = d_h * d_out;
+    let vq = HeadWeights::VqFp32 {
+        cb0: Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0)),
+        idx0: Tensor::from_i32(&[d_in, d_h],
+            &(0..e0).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
+        g0: Tensor::from_f32(&[d_in, d_h], &rng.normal_vec(e0, 0.0, 0.5)),
+        bs0: Tensor::from_f32(&[d_h], &rng.normal_vec(d_h, 0.0, 0.2)),
+        cb1: Tensor::from_f32(&[k, g], &rng.normal_vec(k * g, 0.0, 1.0)),
+        idx1: Tensor::from_i32(&[d_h, d_out],
+            &(0..e1).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
+        g1: Tensor::from_f32(&[d_h, d_out], &rng.normal_vec(e1, 0.0, 0.5)),
+        bs1: Tensor::from_f32(&[d_out], &rng.normal_vec(d_out, 0.0, 0.2)),
     };
+    // Int8 twin, built directly (k-means at the default shape would dwarf
+    // the bench): random quantized tables + representative dequant scales
+    fn i8_vec(rng: &mut Pcg32, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+    let cbq0 = i8_vec(&mut rng, k * g);
+    let cbq1 = i8_vec(&mut rng, k * g);
+    let gq0 = i8_vec(&mut rng, e0);
+    let gq1 = i8_vec(&mut rng, e1);
+    let vq8 = HeadWeights::VqInt8 {
+        cbq0: Tensor::from_i8(&[k, g], &cbq0),
+        idx0: Tensor::from_i32(&[d_in, d_h],
+            &(0..e0).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
+        gq0: Tensor::from_i8(&[d_in, d_h], &gq0),
+        bs0: Tensor::from_f32(&[d_h], &rng.normal_vec(d_h, 0.0, 0.2)),
+        cbq1: Tensor::from_i8(&[k, g], &cbq1),
+        idx1: Tensor::from_i32(&[d_h, d_out],
+            &(0..e1).map(|_| rng.below(k) as i32).collect::<Vec<_>>()),
+        gq1: Tensor::from_i8(&[d_h, d_out], &gq1),
+        // per-layer [codebook_scale, gain log_lo, gain log_step]
+        scales: Tensor::from_f32(&[2, 3], &[0.011, -4.5, 0.05, 0.013, -4.7, 0.05]),
+        bs1: Tensor::from_f32(&[d_out], &rng.normal_vec(d_out, 0.0, 0.2)),
+    };
+    let heads: Vec<(&str, &HeadWeights)> =
+        vec![("mlp", &mlp), ("dense_kan", &dense), ("vq_kan_fp32", &vq), ("vq_kan_int8", &vq8)];
+
+    // one backend row per (backend, kernel): native is the scalar
+    // reference; the arena backend runs forced-scalar and, where the host
+    // supports it, forced-SIMD
+    let mut configs: Vec<(&'static str, String, BackendConfig)> = vec![
+        ("native", "reference".to_string(), BackendConfig::Native(spec.clone())),
+        ("arena", "scalar".to_string(),
+         BackendConfig::Arena(spec.clone().with_kernel(KernelMode::Scalar))),
+    ];
+    match detect_simd() {
+        Some(simd) => configs.push((
+            "arena",
+            simd.name().to_string(),
+            BackendConfig::Arena(spec.clone().with_kernel(KernelMode::Simd)),
+        )),
+        None => println!("note: no SIMD tier detected on this host; \
+                          scalar-vs-simd rows will be absent"),
+    }
 
     let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
     let mut results: Vec<Json> = Vec::new();
+    // (variant, bucket, kernel) -> mean ns, for the speedup table
+    let mut means: Vec<(String, usize, String, f64)> = Vec::new();
 
-    for (backend_label, config) in [
-        ("native", BackendConfig::Native(spec.clone())),
-        ("arena", BackendConfig::Arena(spec.clone())),
-    ] {
-        let mut backend = config.build().unwrap();
-        for (name, head) in [("mlp", &mlp), ("dense_kan", &dense), ("vq_kan_fp32", &vq)] {
+    for (backend_label, kernel_label, config) in &configs {
+        let mut backend = config.clone().build().unwrap();
+        for (name, head) in &heads {
             backend.register_head(name, head).unwrap();
         }
-        println!("LUTHAM forward path ({} backend, padded batch per bucket)", backend.name());
+        println!("LUTHAM forward path ({} backend, kernel {kernel_label}, padded batch per bucket)",
+                 backend.name());
         println!("{:-<100}", "");
         // reused output buffer: the arena backend's zero-alloc contract
         let mut out: Vec<f32> = Vec::new();
         for &bucket in &buckets {
             let x = rng.normal_vec(bucket * d_in, 0.0, 1.0);
-            for label in ["mlp", "dense_kan", "vq_kan_fp32"] {
-                let r = bencher.run(&format!("{backend_label}/{label} b={bucket}"), || {
-                    backend.execute_into(label, &x, bucket, &mut out).unwrap();
-                    std::hint::black_box(&out);
-                });
+            for label in VARIANTS {
+                let r = bencher
+                    .run(&format!("{backend_label}/{kernel_label}/{label} b={bucket}"), || {
+                        backend.execute_into(label, &x, bucket, &mut out).unwrap();
+                        std::hint::black_box(&out);
+                    });
                 println!(
                     "{}   {:>10.0} samples/s",
                     r.report(),
@@ -82,12 +129,48 @@ fn main() {
                 );
                 let mut j = r.to_json();
                 if let Json::Obj(ref mut m) = j {
-                    m.insert("backend".into(), Json::str(backend_label));
+                    m.insert("backend".into(), Json::str(*backend_label));
+                    m.insert("kernel".into(), Json::str(kernel_label.clone()));
                     m.insert("variant".into(), Json::str(label));
                     m.insert("bucket".into(), Json::num(bucket as f64));
                     m.insert("samples_per_s".into(), Json::num(r.throughput(bucket as f64)));
                 }
                 results.push(j);
+                if *backend_label == "arena" {
+                    means.push((label.to_string(), bucket, kernel_label.clone(), r.mean_ns));
+                }
+            }
+        }
+    }
+
+    // scalar-vs-SIMD speedup rows (machine-readable; the VQ inner loop at
+    // the default shape is the tentpole target: >= 2x single-thread)
+    let simd_label = detect_simd().map(|s| s.name().to_string());
+    if let Some(simd) = simd_label {
+        println!("arena kernel speedup (scalar -> {simd})");
+        println!("{:-<100}", "");
+        for label in VARIANTS {
+            for &bucket in &buckets {
+                let find = |kernel: &str| {
+                    means
+                        .iter()
+                        .find(|(v, b, ker, _)| v == label && *b == bucket && ker == kernel)
+                        .map(|(_, _, _, ns)| *ns)
+                };
+                if let (Some(scalar_ns), Some(simd_ns)) = (find("scalar"), find(&simd)) {
+                    let speedup = scalar_ns / simd_ns;
+                    println!("  {label:<14} b={bucket:<4} {speedup:>6.2}x");
+                    results.push(Json::obj(vec![
+                        ("name", Json::str(format!("speedup/{label} b={bucket}"))),
+                        ("backend", Json::str("arena")),
+                        ("variant", Json::str(label)),
+                        ("bucket", Json::num(bucket as f64)),
+                        ("kernel", Json::str(simd.clone())),
+                        ("scalar_mean_ns", Json::num(scalar_ns)),
+                        ("simd_mean_ns", Json::num(simd_ns)),
+                        ("speedup_vs_scalar", Json::num(speedup)),
+                    ]));
+                }
             }
         }
     }

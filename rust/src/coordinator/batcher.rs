@@ -68,8 +68,11 @@ impl PendingQueue {
         self.queue.front().map(|r| now.duration_since(r.enqueued))
     }
 
-    /// Close a batch if the policy says so.  `buckets` must be sorted
-    /// ascending.  FIFO order is preserved.
+    /// Close a batch if the policy says so.  `buckets` must be non-empty
+    /// and sorted strictly ascending — validated **once** at backend
+    /// construction by `runtime::BackendSpec::validate`, so a misconfigured
+    /// deployment errors at startup instead of panicking here per request.
+    /// FIFO order is preserved.
     pub fn try_close(&mut self, policy: &BatchPolicy, buckets: &[usize], now: Instant)
                      -> Option<Batch> {
         if self.queue.is_empty() {
@@ -85,8 +88,13 @@ impl PendingQueue {
         }
         let take = self.queue.len().min(policy.max_batch);
         // pick the smallest bucket >= take, clamping to the largest bucket;
-        // if the batch exceeds the largest bucket, split at the bucket size
-        let max_bucket = *buckets.last().expect("no buckets");
+        // if the batch exceeds the largest bucket, split at the bucket size.
+        // An empty ladder is rejected at construction; if a caller bypassed
+        // that, refuse to close rather than panic on the request path.
+        let max_bucket = match buckets.last() {
+            Some(&b) => b,
+            None => return None,
+        };
         let take = take.min(max_bucket);
         let bucket = buckets.iter().copied().find(|&b| b >= take).unwrap_or(max_bucket);
         let requests: Vec<InferRequest> = self.queue.drain(..take).collect();
@@ -175,6 +183,19 @@ mod tests {
         let b = q.try_close(&policy, BUCKETS, now).unwrap();
         assert_eq!(b.bucket, 32);
         assert_eq!(b.padded_slots(), 0);
+    }
+
+    #[test]
+    fn empty_bucket_list_never_panics() {
+        // regression: this used to `expect("no buckets")`; the config error
+        // is caught at backend construction (BackendSpec::validate), and
+        // the batcher itself must stay panic-free even if bypassed
+        let mut q = PendingQueue::default();
+        let now = Instant::now();
+        q.push(req(1, now));
+        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::ZERO };
+        assert!(q.try_close(&policy, &[], now + Duration::from_millis(1)).is_none());
+        assert_eq!(q.len(), 1, "request stays queued rather than being lost");
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //!   inspect  --in ck.skpt
 //!   eval     --in ck.skpt [--split test|coco] [--seed 42]
 //!   serve    --head ck.skpt [--backend native|arena|family|pjrt]
-//!            [--shards N] [--requests 1000] [--max-batch 128]
-//!            [--max-wait-ms 2] [--tcp ADDR]
+//!            [--kernel auto|scalar|simd] [--shards N] [--requests 1000]
+//!            [--max-batch 128] [--max-wait-ms 2] [--tcp ADDR]
 //!            | --family a.skpt,b.skpt,... [--shards N] (shared-codebook
 //!            family deployment: one codebook arena per shard)
 //!   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
@@ -34,7 +34,7 @@ use share_kan::eval::mean_average_precision;
 use share_kan::kan::checkpoint::Checkpoint;
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memplan::{plan_family, plan_head, plan_vq_head};
-use share_kan::runtime::{BackendConfig, BackendSpec};
+use share_kan::runtime::{BackendConfig, BackendSpec, KernelMode};
 use share_kan::util::cli::Args;
 use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
@@ -45,8 +45,8 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options
            --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
   inspect  --in ck.skpt
   eval     --in ck.skpt [--split test|coco] [--seed 42]
-  serve    --head ck.skpt [--backend native|arena|family|pjrt] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
-           --family a.skpt,b.skpt,... [--shards N]   (shared-codebook family deployment)
+  serve    --head ck.skpt [--backend native|arena|family|pjrt] [--kernel auto|scalar|simd] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+           --family a.skpt,b.skpt,... [--kernel auto|scalar|simd] [--shards N]   (shared-codebook family deployment)
   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
            --family [--heads N] [--k 512] [--int8]   (family arena: shared vs marginal bytes)
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
@@ -202,6 +202,15 @@ fn cmd_compress_family(args: &Args, list: &str) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--kernel {auto,scalar,simd}` override for the arena-backend
+/// compute kernels (the native backend ignores it — it is the scalar
+/// reference implementation).
+fn kernel_mode(args: &Args) -> Result<KernelMode> {
+    args.get_or("kernel", "auto")
+        .parse::<KernelMode>()
+        .map_err(|e| anyhow::anyhow!("--kernel: {e}"))
+}
+
 fn spec_from_meta(ck: &Checkpoint) -> Result<KanSpec> {
     let get = |k: &str| ck.meta.get(k).and_then(|j| j.as_usize());
     Ok(KanSpec {
@@ -260,7 +269,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let head_path = PathBuf::from(args.get("head").context("--head required")?);
     let ck = Checkpoint::load(&head_path)?;
     let head = HeadWeights::from_checkpoint(&ck)?;
-    let head_spec = BackendSpec::for_head(&head);
+    let kernel = kernel_mode(args)?;
+    let head_spec = BackendSpec::for_head(&head).with_kernel(kernel);
     let d_in = head_spec.kan.d_in;
     let backend = match args.get_or("backend", "native").as_str() {
         "native" => BackendConfig::Native(head_spec),
@@ -282,6 +292,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
              head.model(),
              head.weight_bytes(),
              args.get_or("backend", "native"));
+    // the kernel knob drives the arena backends only (native is the scalar
+    // reference, pjrt executes AOT artifacts) — resolve on the CLI thread
+    // for those so the operator sees what the executor will dispatch, and
+    // don't let a forced `--kernel simd` abort a backend that ignores it
+    if matches!(args.get_or("backend", "native").as_str(), "arena" | "family") {
+        println!("kernel dispatch: {} -> {}", kernel, kernel.resolve()?.name());
+    }
 
     if shards > 1 {
         anyhow::ensure!(
@@ -412,8 +429,12 @@ fn cmd_serve_family(args: &Args, list: &str) -> Result<()> {
         .filter(|&b| b < max_batch)
         .collect();
     buckets.push(max_batch);
-    let spec = BackendSpec::for_head(&heads[0].1).with_buckets(&buckets);
+    let kernel = kernel_mode(args)?;
+    let spec = BackendSpec::for_head(&heads[0].1)
+        .with_buckets(&buckets)
+        .with_kernel(kernel);
     let d_in = spec.kan.d_in;
+    println!("kernel dispatch: {} -> {}", kernel, kernel.resolve()?.name());
     let precision = if matches!(heads[0].1, HeadWeights::VqInt8 { .. }) {
         Precision::Int8
     } else {

@@ -15,10 +15,14 @@
 //! vector via [`Backend::execute_into`].
 //!
 //! Numerics are **bit-for-bit identical** to the native backend (pinned by
-//! `rust/tests/arena_backend_equivalence.rs`): the kernels below mirror the
-//! exact accumulation order of `kan::eval`, and Int8 dequantization
-//! (`q as f32 * scale`, `dequant_gain_log_int8`) yields the same f32 values
-//! whether performed once at load (native) or per access (arena).
+//! `rust/tests/arena_backend_equivalence.rs`): the kernels in
+//! [`super::kernels`] mirror the exact accumulation order of `kan::eval`,
+//! and Int8 dequantization (`q as f32 * scale`, `dequant_gain_log_int8`)
+//! yields the same f32 values whether performed once at load (native) or
+//! per access (arena).  Kernel dispatch (scalar vs AVX2/NEON SIMD) is
+//! resolved once at backend construction from
+//! [`crate::runtime::kernels::KernelMode`] in the [`BackendSpec`]; every
+//! dispatch produces identical bits (see the `runtime::kernels` docs).
 //!
 //! # Family arenas (paper §6 "Universal Basis")
 //!
@@ -39,10 +43,12 @@ use std::ops::Range;
 use anyhow::{Context, Result};
 
 use super::backend::{Backend, BackendSpec};
+use super::kernels::{
+    run_dense_layer, run_mlp, run_vq_layer, KernelKind, LayerQuant, VqLayerRefs,
+};
 use crate::coordinator::heads::HeadWeights;
-use crate::kan::eval::dequant_gain_log_int8;
 use crate::memplan::{plan_family, plan_head, view, Arena, Plan};
-use crate::vq::bitpack::{bits_for, pack, read_packed};
+use crate::vq::bitpack::{bits_for, pack};
 use crate::vq::quant::LogInt8Params;
 use crate::vq::storage::Precision;
 
@@ -53,14 +59,6 @@ pub struct ArenaStats {
     pub batches: u64,
     /// Total rows executed (bucket slots, padding included).
     pub rows: u64,
-}
-
-/// Int8 dequantization constants for one VQ layer (resident alongside the
-/// quantized tables; scalar, so they live in the head record, not the arena).
-#[derive(Debug, Clone, Copy)]
-struct LayerQuant {
-    codebook_scale: f32,
-    gain: LogInt8Params,
 }
 
 /// Planner-assigned byte ranges for one VQ layer's tables.
@@ -105,14 +103,25 @@ struct ArenaHead {
 pub struct ArenaBackend {
     spec: BackendSpec,
     heads: HashMap<String, ArenaHead>,
+    /// Kernel implementation resolved once at construction
+    /// (`spec.kernel` + runtime CPU feature detection).
+    kernel: KernelKind,
     /// Execution counters.
     pub stats: ArenaStats,
 }
 
 impl ArenaBackend {
-    /// Backend with no heads registered yet.
-    pub fn new(spec: BackendSpec) -> ArenaBackend {
-        ArenaBackend { spec, heads: HashMap::new(), stats: ArenaStats::default() }
+    /// Backend with no heads registered yet.  Fails if the spec's kernel
+    /// mode cannot be satisfied on this host (e.g. `simd` forced on a CPU
+    /// with neither AVX2+FMA nor NEON).
+    pub fn new(spec: BackendSpec) -> Result<ArenaBackend> {
+        let kernel = spec.kernel.resolve()?;
+        Ok(ArenaBackend { spec, heads: HashMap::new(), kernel, stats: ArenaStats::default() })
+    }
+
+    /// The kernel implementation this backend dispatches to.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// The LUTHAM plan backing a registered head (the actual serve-time
@@ -180,14 +189,8 @@ impl ArenaBackend {
                 // the same constants vq::load_compressed dequantizes with
                 let s = scales.as_f32();
                 anyhow::ensure!(s.len() == 6, "int8 scales tensor must hold 2x3 values");
-                let q0 = LayerQuant {
-                    codebook_scale: s[0],
-                    gain: LogInt8Params { log_lo: s[1], log_step: s[2] },
-                };
-                let q1 = LayerQuant {
-                    codebook_scale: s[3],
-                    gain: LogInt8Params { log_lo: s[4], log_step: s[5] },
-                };
+                let q0 = LayerQuant::new(s[0], LogInt8Params { log_lo: s[1], log_step: s[2] });
+                let q1 = LayerQuant::new(s[3], LogInt8Params { log_lo: s[4], log_step: s[5] });
                 fill_i8(&mut arena, "layer0/codebook", &cbq0.as_i8())?;
                 fill_i8(&mut arena, "layer1/codebook", &cbq1.as_i8())?;
                 fill_i8(&mut arena, "layer0/gain", &gq0.as_i8())?;
@@ -296,142 +299,6 @@ fn vq_slots(arena: &Arena, quant: [Option<LayerQuant>; 2]) -> Result<[VqLayerSlo
     Ok([slot(0)?, slot(1)?])
 }
 
-// ---------------------------------------------------------------------------
-// Hot-path kernels: exact mirrors of kan::eval, reading planner-assigned
-// slices and writing into caller scratch.  No allocations, identical
-// accumulation order (bit-for-bit parity is load-bearing, see module docs).
-// ---------------------------------------------------------------------------
-
-/// Per-edge table access for one VQ layer — monomorphized per precision so
-/// the inner loop carries no branch.
-trait VqTables {
-    fn gain(&self, e: usize) -> f32;
-    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32;
-}
-
-struct Fp32Vq<'a> {
-    codebook: &'a [f32],
-    gain: &'a [f32],
-    g: usize,
-}
-
-impl VqTables for Fp32Vq<'_> {
-    #[inline(always)]
-    fn gain(&self, e: usize) -> f32 {
-        self.gain[e]
-    }
-
-    #[inline(always)]
-    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32 {
-        let c = row * self.g + i0;
-        (1.0 - f) * self.codebook[c] + f * self.codebook[c + 1]
-    }
-}
-
-struct Int8Vq<'a> {
-    codebook: &'a [i8],
-    codebook_scale: f32,
-    gain: &'a [i8],
-    gain_params: LogInt8Params,
-    g: usize,
-}
-
-impl VqTables for Int8Vq<'_> {
-    #[inline(always)]
-    fn gain(&self, e: usize) -> f32 {
-        // identical f32 result to dequantize_log_int8 at load time
-        dequant_gain_log_int8(self.gain[e], self.gain_params.log_lo, self.gain_params.log_step)
-    }
-
-    #[inline(always)]
-    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32 {
-        // `q as f32 * scale` is exactly dequantize_linear_int8 per element
-        let c = row * self.g + i0;
-        (1.0 - f) * (self.codebook[c] as f32 * self.codebook_scale)
-            + f * (self.codebook[c + 1] as f32 * self.codebook_scale)
-    }
-}
-
-/// SHARe-KAN VQ layer over arena tables (mirror of `kan::eval::vq_layer`
-/// with the packed-index decode inlined).
-#[allow(clippy::too_many_arguments)]
-fn vq_layer_into<T: VqTables>(x: &[f32], b: usize, t: &T, idx: &[u8], bits: usize,
-                              bias: &[f32], n_in: usize, n_out: usize, g: usize,
-                              out: &mut [f32]) {
-    let out = &mut out[..b * n_out];
-    out.fill(0.0);
-    let scale = (g - 1) as f32 / 2.0;
-    for bi in 0..b {
-        let xrow = &x[bi * n_in..(bi + 1) * n_in];
-        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-        for (i, &xi) in xrow.iter().enumerate() {
-            let u = xi.tanh();
-            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-            let i0 = (pos.floor() as usize).min(g - 2);
-            let f = pos - i0 as f32;
-            let erow = i * n_out;
-            for (j, o) in orow.iter_mut().enumerate() {
-                let e = erow + j;
-                let row = read_packed(idx, bits, e) as usize;
-                *o += t.gain(e) * t.lerp(row, i0, f);
-            }
-        }
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o += bias[j];
-        }
-    }
-}
-
-/// Dense KAN layer over arena grids (mirror of `kan::eval::dense_layer`).
-fn dense_layer_into(x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize,
-                    g: usize, out: &mut [f32]) {
-    let out = &mut out[..b * n_out];
-    out.fill(0.0);
-    let scale = (g - 1) as f32 / 2.0;
-    for bi in 0..b {
-        let xrow = &x[bi * n_in..(bi + 1) * n_in];
-        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-        for (i, &xi) in xrow.iter().enumerate() {
-            let u = xi.tanh();
-            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-            let i0 = (pos.floor() as usize).min(g - 2);
-            let f = pos - i0 as f32;
-            let base = i * n_out * g;
-            for (j, o) in orow.iter_mut().enumerate() {
-                let row = base + j * g + i0;
-                *o += (1.0 - f) * grids[row] + f * grids[row + 1];
-            }
-        }
-    }
-}
-
-/// MLP baseline over arena weights (mirror of `kan::eval::MlpModel`).
-#[allow(clippy::too_many_arguments)]
-fn mlp_into(x: &[f32], b: usize, w1: &[f32], b1: &[f32], w2: &[f32], b2: &[f32],
-            d_in: usize, d_hidden: usize, d_out: usize, h: &mut [f32],
-            out: &mut [f32]) {
-    let h = &mut h[..b * d_hidden];
-    let out = &mut out[..b * d_out];
-    for bi in 0..b {
-        for j in 0..d_hidden {
-            let mut acc = b1[j];
-            for i in 0..d_in {
-                acc += x[bi * d_in + i] * w1[i * d_hidden + j];
-            }
-            h[bi * d_hidden + j] = acc.max(0.0);
-        }
-    }
-    for bi in 0..b {
-        for j in 0..d_out {
-            let mut acc = b2[j];
-            for i in 0..d_hidden {
-                acc += h[bi * d_hidden + i] * w2[i * d_out + j];
-            }
-            out[bi * d_out + j] = acc;
-        }
-    }
-}
-
 impl Backend for ArenaBackend {
     fn name(&self) -> String {
         "arena-lutham".to_string()
@@ -462,6 +329,7 @@ impl Backend for ArenaBackend {
     /// regions of one arena, scores land in the caller's reused vector.
     fn execute_into(&mut self, head: &str, x: &[f32], bucket: usize,
                     out: &mut Vec<f32>) -> Result<()> {
+        let kind = self.kernel;
         let h = self
             .heads
             .get_mut(head)
@@ -480,7 +348,8 @@ impl Backend for ArenaBackend {
 
         match &h.tables {
             HeadTables::Mlp { w1, b1, w2, b2 } => {
-                mlp_into(
+                run_mlp(
+                    kind,
                     x,
                     bucket,
                     view::f32s(&tables[w1.clone()]),
@@ -495,16 +364,16 @@ impl Backend for ArenaBackend {
                 );
             }
             HeadTables::Dense { grids0, grids1 } => {
-                dense_layer_into(x, bucket, view::f32s(&tables[grids0.clone()]),
-                                 d_in, d_hidden, g, ping);
-                dense_layer_into(&ping[..bucket * d_hidden], bucket,
-                                 view::f32s(&tables[grids1.clone()]),
-                                 d_hidden, d_out, g, pong);
+                run_dense_layer(kind, x, bucket, view::f32s(&tables[grids0.clone()]),
+                                d_in, d_hidden, g, ping);
+                run_dense_layer(kind, &ping[..bucket * d_hidden], bucket,
+                                view::f32s(&tables[grids1.clone()]),
+                                d_hidden, d_out, g, pong);
             }
             HeadTables::Vq { layers, bits } => {
-                run_vq_layer(&layer_refs(tables, &layers[0]), *bits, x, bucket,
+                run_vq_layer(kind, &layer_refs(tables, &layers[0]), *bits, x, bucket,
                              d_in, d_hidden, g, ping);
-                run_vq_layer(&layer_refs(tables, &layers[1]), *bits,
+                run_vq_layer(kind, &layer_refs(tables, &layers[1]), *bits,
                              &ping[..bucket * d_hidden], bucket, d_hidden, d_out, g,
                              pong);
             }
@@ -518,53 +387,15 @@ impl Backend for ArenaBackend {
     }
 }
 
-/// Borrowed byte slices for one VQ layer's tables.  The codebook slice may
-/// live in a *different* arena from the per-head slices: the per-head
-/// [`ArenaBackend`] resolves all four from one arena, while
-/// [`FamilyArenaBackend`] reads the codebook from the family's shared
-/// region and everything else from the head's own marginal region.
-struct VqLayerRefs<'a> {
-    codebook: &'a [u8],
-    idx: &'a [u8],
-    gain: &'a [u8],
-    bias: &'a [f32],
-    quant: Option<LayerQuant>,
-}
-
-/// Resolve one private head's layer slots against its single arena.
-fn layer_refs<'a>(tables: &'a [u8], l: &VqLayerSlots) -> VqLayerRefs<'a> {
+/// Resolve one private head's layer slots against its single arena (the
+/// kernel-facing [`VqLayerRefs`] borrows; see `runtime::kernels`).
+fn layer_refs<'a>(tables: &'a [u8], l: &'a VqLayerSlots) -> VqLayerRefs<'a> {
     VqLayerRefs {
         codebook: &tables[l.codebook.clone()],
         idx: &tables[l.idx.clone()],
         gain: &tables[l.gain.clone()],
         bias: view::f32s(&tables[l.bias.clone()]),
-        quant: l.quant,
-    }
-}
-
-/// Dispatch one VQ layer by precision (monomorphized kernels).
-#[allow(clippy::too_many_arguments)]
-fn run_vq_layer(l: &VqLayerRefs<'_>, bits: usize, x: &[f32], b: usize,
-                n_in: usize, n_out: usize, g: usize, out: &mut [f32]) {
-    match &l.quant {
-        None => {
-            let t = Fp32Vq {
-                codebook: view::f32s(l.codebook),
-                gain: view::f32s(l.gain),
-                g,
-            };
-            vq_layer_into(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
-        }
-        Some(q) => {
-            let t = Int8Vq {
-                codebook: view::i8s(l.codebook),
-                codebook_scale: q.codebook_scale,
-                gain: view::i8s(l.gain),
-                gain_params: q.gain,
-                g,
-            };
-            vq_layer_into(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
-        }
+        quant: l.quant.as_ref(),
     }
 }
 
@@ -653,7 +484,9 @@ pub struct FamilyArenaBackend {
     spec: BackendSpec,
     shared: Option<FamilyShared>,
     heads: HashMap<String, FamilyHead>,
-    /// dense/MLP heads are served from private per-head arenas
+    /// dense/MLP heads are served from private per-head arenas; also the
+    /// single owner of the resolved kernel dispatch (see
+    /// [`FamilyArenaBackend::kernel`])
     private: ArenaBackend,
     /// Execution counters (family and private paths combined).
     pub stats: ArenaStats,
@@ -661,15 +494,23 @@ pub struct FamilyArenaBackend {
 
 impl FamilyArenaBackend {
     /// Backend with no family established yet: the first VQ head registered
-    /// materializes the shared codebook tables.
-    pub fn new(spec: BackendSpec) -> FamilyArenaBackend {
-        FamilyArenaBackend {
-            private: ArenaBackend::new(spec.clone()),
+    /// materializes the shared codebook tables.  Fails if the spec's kernel
+    /// mode cannot be satisfied on this host.
+    pub fn new(spec: BackendSpec) -> Result<FamilyArenaBackend> {
+        Ok(FamilyArenaBackend {
+            private: ArenaBackend::new(spec.clone())?,
             spec,
             shared: None,
             heads: HashMap::new(),
             stats: ArenaStats::default(),
-        }
+        })
+    }
+
+    /// The kernel implementation this backend dispatches to (resolved once
+    /// when the private fallback backend was constructed — one owner, so
+    /// family and private paths can never disagree).
+    pub fn kernel(&self) -> KernelKind {
+        self.private.kernel()
     }
 
     /// The shared-region plan, once a family head has established it.
@@ -829,14 +670,8 @@ impl FamilyArenaBackend {
                 fill_packed_idx(&mut arena, "layer1/idx", &idx1.as_i32(), k, bits)?;
                 head = arena;
                 quant = [
-                    Some(LayerQuant {
-                        codebook_scale: s[0],
-                        gain: LogInt8Params { log_lo: s[1], log_step: s[2] },
-                    }),
-                    Some(LayerQuant {
-                        codebook_scale: s[3],
-                        gain: LogInt8Params { log_lo: s[4], log_step: s[5] },
-                    }),
+                    Some(LayerQuant::new(s[0], LogInt8Params { log_lo: s[1], log_step: s[2] })),
+                    Some(LayerQuant::new(s[3], LogInt8Params { log_lo: s[4], log_step: s[5] })),
                 ];
             }
             _ => anyhow::bail!("family arenas share VQ heads only"),
@@ -922,6 +757,7 @@ impl Backend for FamilyArenaBackend {
     /// head's own marginal arena; scores land in the caller's reused vector.
     fn execute_into(&mut self, head: &str, x: &[f32], bucket: usize,
                     out: &mut Vec<f32>) -> Result<()> {
+        let kind = self.private.kernel();
         let h = match self.heads.get(head) {
             Some(h) => h,
             None => {
@@ -961,17 +797,17 @@ impl Backend for FamilyArenaBackend {
             idx: &ht[h.layers[0].idx.clone()],
             gain: &ht[h.layers[0].gain.clone()],
             bias: view::f32s(&ht[h.layers[0].bias.clone()]),
-            quant: h.quant[0],
+            quant: h.quant[0].as_ref(),
         };
-        run_vq_layer(&refs0, bits, x, bucket, d_in, d_hidden, g, ping);
+        run_vq_layer(kind, &refs0, bits, x, bucket, d_in, d_hidden, g, ping);
         let refs1 = VqLayerRefs {
             codebook: &tables[sh.codebook[1].clone()],
             idx: &ht[h.layers[1].idx.clone()],
             gain: &ht[h.layers[1].gain.clone()],
             bias: view::f32s(&ht[h.layers[1].bias.clone()]),
-            quant: h.quant[1],
+            quant: h.quant[1].as_ref(),
         };
-        run_vq_layer(&refs1, bits, &ping[..bucket * d_hidden], bucket, d_hidden,
+        run_vq_layer(kind, &refs1, bits, &ping[..bucket * d_hidden], bucket, d_hidden,
                      d_out, g, pong);
 
         out.clear();
@@ -995,6 +831,7 @@ mod tests {
             kan: KanSpec { d_in: 3, d_hidden: 4, d_out: 2, grid_size: 5 },
             vq: crate::kan::spec::VqSpec { codebook_size: 6 },
             batch_buckets: vec![1, 4],
+            kernel: Default::default(),
         }
     }
 
@@ -1009,7 +846,7 @@ mod tests {
             grids0: Tensor::from_f32(&[d_in, d_h, g], &g0),
             grids1: Tensor::from_f32(&[d_h, d_out, g], &g1),
         };
-        let mut b = ArenaBackend::new(spec);
+        let mut b = ArenaBackend::new(spec).unwrap();
         b.register_head("h", &head).unwrap();
         let x = rng.normal_vec(4 * d_in, 0.0, 1.0);
         let got = b.execute("h", &x, 4).unwrap();
@@ -1025,7 +862,7 @@ mod tests {
 
     #[test]
     fn head_plan_is_exposed_and_valid() {
-        let mut b = ArenaBackend::new(small_spec());
+        let mut b = ArenaBackend::new(small_spec()).unwrap();
         let head = HeadWeights::DenseKan {
             grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
             grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
@@ -1040,7 +877,7 @@ mod tests {
 
     #[test]
     fn rejects_heads_that_violate_spec() {
-        let mut b = ArenaBackend::new(small_spec());
+        let mut b = ArenaBackend::new(small_spec()).unwrap();
         let bad = HeadWeights::DenseKan {
             grids0: Tensor::from_f32(&[3, 4, 9], &[0.0; 108]), // wrong G
             grids1: Tensor::from_f32(&[4, 2, 9], &[0.0; 72]),
@@ -1062,13 +899,13 @@ mod tests {
             g1: Tensor::from_f32(&[4, 2], &[1.0; 8]),
             bs1: Tensor::from_f32(&[2], &[0.0; 2]),
         };
-        let mut b = ArenaBackend::new(small_spec());
+        let mut b = ArenaBackend::new(small_spec()).unwrap();
         assert!(b.register_head("h", &head).is_err());
     }
 
     #[test]
     fn remove_head_unregisters() {
-        let mut b = ArenaBackend::new(small_spec());
+        let mut b = ArenaBackend::new(small_spec()).unwrap();
         let head = HeadWeights::DenseKan {
             grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
             grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
@@ -1081,7 +918,7 @@ mod tests {
 
     #[test]
     fn oversized_bucket_rejected() {
-        let mut b = ArenaBackend::new(small_spec()); // buckets [1, 4]
+        let mut b = ArenaBackend::new(small_spec()).unwrap(); // buckets [1, 4]
         let head = HeadWeights::DenseKan {
             grids0: Tensor::from_f32(&[3, 4, 5], &[0.0; 60]),
             grids1: Tensor::from_f32(&[4, 2, 5], &[0.0; 40]),
@@ -1113,8 +950,8 @@ mod tests {
         let mut rng = Pcg32::seeded(77);
         let cb = rng.normal_vec(6 * 5, 0.0, 1.0);
         let spec = small_spec();
-        let mut fam = FamilyArenaBackend::new(spec.clone());
-        let mut prv = ArenaBackend::new(spec);
+        let mut fam = FamilyArenaBackend::new(spec.clone()).unwrap();
+        let mut prv = ArenaBackend::new(spec).unwrap();
         for (i, name) in ["a", "b", "c"].iter().enumerate() {
             let head = family_fp32_head(100 + i as u64, &cb);
             fam.register_head(name, &head).unwrap();
@@ -1144,7 +981,7 @@ mod tests {
         let cb = rng.normal_vec(30, 0.0, 1.0);
         let mut other = cb.clone();
         other[7] += 0.25;
-        let mut fam = FamilyArenaBackend::new(small_spec());
+        let mut fam = FamilyArenaBackend::new(small_spec()).unwrap();
         fam.register_head("a", &family_fp32_head(1, &cb)).unwrap();
         let err = fam.register_head("b", &family_fp32_head(2, &other)).unwrap_err();
         assert!(format!("{err:#}").contains("universal basis"), "{err:#}");
@@ -1162,7 +999,7 @@ mod tests {
             grids0: Tensor::from_f32(&[3, 4, 5], &g0),
             grids1: Tensor::from_f32(&[4, 2, 5], &g1),
         };
-        let mut fam = FamilyArenaBackend::new(small_spec());
+        let mut fam = FamilyArenaBackend::new(small_spec()).unwrap();
         fam.register_head("d", &dense).unwrap();
         assert_eq!(fam.family_head_count(), 0);
         assert!(fam.shared_bytes().is_none());
@@ -1185,7 +1022,7 @@ mod tests {
         let mut rng = Pcg32::seeded(82);
         let cb_a = rng.normal_vec(30, 0.0, 1.0);
         let cb_b = rng.normal_vec(30, 0.0, 1.0);
-        let mut fam = FamilyArenaBackend::new(small_spec());
+        let mut fam = FamilyArenaBackend::new(small_spec()).unwrap();
         fam.register_head("a0", &family_fp32_head(1, &cb_a)).unwrap();
         fam.register_head("a1", &family_fp32_head(2, &cb_a)).unwrap();
         // family A established: basis B is rejected
@@ -1215,7 +1052,7 @@ mod tests {
         let mut rng = Pcg32::seeded(83);
         let cb_a = rng.normal_vec(30, 0.0, 1.0);
         let cb_b = rng.normal_vec(30, 0.0, 1.0);
-        let mut fam = FamilyArenaBackend::new(small_spec());
+        let mut fam = FamilyArenaBackend::new(small_spec()).unwrap();
         fam.register_head("a", &family_fp32_head(1, &cb_a)).unwrap();
         // sole head: a retrained universal basis hot-swaps in place
         fam.register_head("a", &family_fp32_head(2, &cb_b)).unwrap();
@@ -1257,7 +1094,7 @@ mod tests {
             g1: Tensor::from_f32(&[4, 2], &[1.0; 8]),
             bs1: Tensor::from_f32(&[2], &[0.0; 2]),
         };
-        let mut fam = FamilyArenaBackend::new(small_spec());
+        let mut fam = FamilyArenaBackend::new(small_spec()).unwrap();
         assert!(fam.register_head("bad", &bad).is_err());
         assert!(fam.shared_bytes().is_none(), "failed head must not commit shared tables");
         // a legitimate family with a DIFFERENT codebook still registers
@@ -1271,7 +1108,7 @@ mod tests {
     fn family_bucket_and_unknown_head_errors() {
         let mut rng = Pcg32::seeded(80);
         let cb = rng.normal_vec(30, 0.0, 1.0);
-        let mut fam = FamilyArenaBackend::new(small_spec()); // buckets [1, 4]
+        let mut fam = FamilyArenaBackend::new(small_spec()).unwrap(); // buckets [1, 4]
         fam.register_head("a", &family_fp32_head(5, &cb)).unwrap();
         assert!(fam.execute("a", &[0.0; 3 * 8], 8).is_err());
         assert!(fam.execute("nope", &[0.0; 3], 1).is_err());

@@ -17,6 +17,7 @@
 
 use anyhow::Result;
 
+use super::kernels::KernelMode;
 use crate::coordinator::heads::HeadWeights;
 use crate::kan::spec::{KanSpec, VqSpec};
 
@@ -32,6 +33,10 @@ pub struct BackendSpec {
     /// sorted ascending; the batcher pads each batch to the smallest
     /// bucket that fits (AOT backends compile one executable per bucket)
     pub batch_buckets: Vec<usize>,
+    /// Kernel dispatch policy for the arena backends (`--kernel` knob):
+    /// `Auto` detects SIMD at construction, `Scalar`/`Simd` force a tier.
+    /// The native backend ignores this — it *is* the scalar reference.
+    pub kernel: KernelMode,
 }
 
 impl Default for BackendSpec {
@@ -40,6 +45,7 @@ impl Default for BackendSpec {
             kan: KanSpec::default(),
             vq: VqSpec::default(),
             batch_buckets: vec![1, 8, 32, 128],
+            kernel: KernelMode::Auto,
         }
     }
 }
@@ -51,7 +57,7 @@ impl BackendSpec {
         BackendSpec {
             kan: weights.implied_kan_spec(),
             vq: VqSpec { codebook_size: weights.implied_codebook_size() },
-            batch_buckets: BackendSpec::default().batch_buckets,
+            ..BackendSpec::default()
         }
     }
 
@@ -59,6 +65,36 @@ impl BackendSpec {
     pub fn with_buckets(mut self, buckets: &[usize]) -> BackendSpec {
         self.batch_buckets = buckets.to_vec();
         self
+    }
+
+    /// Replace the kernel dispatch policy (builder style).
+    pub fn with_kernel(mut self, kernel: KernelMode) -> BackendSpec {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Validate the batching contract: the bucket ladder must be non-empty
+    /// and strictly ascending (no zeros, no duplicates).  Checked **once at
+    /// backend construction** ([`BackendConfig::build`]) so a
+    /// misconfigured deployment fails on startup with a clear error instead
+    /// of panicking inside the batcher at request time.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.batch_buckets.is_empty(),
+            "batch_buckets must not be empty (the batcher needs at least one bucket)"
+        );
+        anyhow::ensure!(
+            self.batch_buckets[0] >= 1,
+            "batch_buckets must be >= 1 (got {:?})",
+            self.batch_buckets
+        );
+        anyhow::ensure!(
+            self.batch_buckets.windows(2).all(|w| w[0] < w[1]),
+            "batch_buckets must be sorted strictly ascending with no duplicates \
+             (got {:?})",
+            self.batch_buckets
+        );
+        Ok(())
     }
 }
 
@@ -145,16 +181,31 @@ impl Default for BackendConfig {
 impl BackendConfig {
     /// Construct the backend.  Must be called on the thread that will own
     /// it (PJRT wrapper types are not `Send`).
+    ///
+    /// This is where deployment configuration is validated **once**: a bad
+    /// bucket ladder ([`BackendSpec::validate`]) or an unsatisfiable forced
+    /// kernel mode is a construction error here — surfaced through
+    /// `Coordinator::start` / `ExecutorPool::start` — never a panic on the
+    /// request path.
     pub fn build(self) -> Result<Box<dyn Backend>> {
         match self {
-            BackendConfig::Native(spec) => Ok(Box::new(super::native::NativeBackend::new(spec))),
-            BackendConfig::Arena(spec) => Ok(Box::new(super::arena::ArenaBackend::new(spec))),
+            BackendConfig::Native(spec) => {
+                spec.validate()?;
+                Ok(Box::new(super::native::NativeBackend::new(spec)))
+            }
+            BackendConfig::Arena(spec) => {
+                spec.validate()?;
+                Ok(Box::new(super::arena::ArenaBackend::new(spec)?))
+            }
             BackendConfig::FamilyArena(spec) => {
-                Ok(Box::new(super::arena::FamilyArenaBackend::new(spec)))
+                spec.validate()?;
+                Ok(Box::new(super::arena::FamilyArenaBackend::new(spec)?))
             }
             #[cfg(feature = "pjrt")]
             BackendConfig::Pjrt { artifacts_dir } => {
-                Ok(Box::new(super::pjrt::PjrtBackend::load(&artifacts_dir)?))
+                let backend = super::pjrt::PjrtBackend::load(&artifacts_dir)?;
+                backend.spec().validate()?;
+                Ok(Box::new(backend))
             }
         }
     }
@@ -206,6 +257,39 @@ mod tests {
         let b = BackendConfig::FamilyArena(BackendSpec::default()).build().unwrap();
         assert_eq!(b.spec().kan.d_in, 64);
         assert_eq!(b.name(), "family-arena");
+    }
+
+    #[test]
+    fn bucket_misconfiguration_is_a_construction_error() {
+        // regression: an empty/unsorted/duplicated bucket ladder used to
+        // surface as `expect("no buckets")` inside the batcher at request
+        // time; it must be a clean error when the backend is constructed
+        let empty = BackendSpec::default().with_buckets(&[]);
+        let unsorted = BackendSpec::default().with_buckets(&[8, 1, 32]);
+        let dup = BackendSpec::default().with_buckets(&[1, 8, 8, 32]);
+        let zero = BackendSpec::default().with_buckets(&[0, 8]);
+        for bad in [empty, unsorted, dup, zero] {
+            assert!(bad.validate().is_err(), "{:?}", bad.batch_buckets);
+            let err = BackendConfig::Native(bad.clone())
+                .build()
+                .err()
+                .expect("misconfigured buckets must fail to build");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("batch_buckets"), "{msg}");
+            assert!(BackendConfig::Arena(bad.clone()).build().is_err());
+            assert!(BackendConfig::FamilyArena(bad).build().is_err());
+        }
+        assert!(BackendSpec::default().validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_mode_defaults_to_auto_and_builds() {
+        use super::super::kernels::KernelMode;
+        assert_eq!(BackendSpec::default().kernel, KernelMode::Auto);
+        // forced-scalar arena backends construct everywhere
+        let spec = BackendSpec::default().with_kernel(KernelMode::Scalar);
+        assert!(BackendConfig::Arena(spec.clone()).build().is_ok());
+        assert!(BackendConfig::FamilyArena(spec).build().is_ok());
     }
 
     #[test]

@@ -1,0 +1,1157 @@
+//! Hot-path compute kernels behind the arena backends, with runtime SIMD
+//! dispatch.
+//!
+//! The paper's thesis is that SHARe-KAN inference is **memory-bound** once
+//! the tables are cache-resident (§5) — which makes the compute inner loop
+//! the remaining ceiling.  This module owns that inner loop: the scalar
+//! reference kernels (extracted verbatim from `runtime::arena`, exact
+//! mirrors of [`crate::kan::eval`]) plus SIMD variants for x86_64
+//! (AVX2+FMA) and aarch64 (NEON) selected by **runtime feature detection**
+//! with a forced-override knob (`--kernel {auto,scalar,simd}` on the CLI,
+//! `SHARE_KAN_KERNEL` in the environment).
+//!
+//! # Bit-for-bit parity is load-bearing
+//!
+//! The whole backend-equivalence chain (`VqModel::forward == native ==
+//! arena == family`, see `docs/ARCHITECTURE.md`) is pinned bitwise, so the
+//! SIMD kernels must produce **exactly** the scalar results:
+//!
+//! * Vectorization runs across the **output dimension `j`**.  Each output
+//!   `out[j]` accumulates its per-input contributions in the same order
+//!   (`i = 0..n_in`) whether `j` lives in a SIMD lane or a scalar loop —
+//!   lanes never share an accumulator, so no reassociation happens.
+//! * Only unfused per-lane `mul`/`add` intrinsics are used (never fused
+//!   multiply-add): Rust scalar code does not contract `a * b + c`, and a
+//!   fused op rounds once where the scalar path rounds twice.  FMA is still
+//!   part of the detected feature set (the AVX2+FMA tier matches how the
+//!   fleet is provisioned) but the kernels only rely on AVX2 semantics.
+//! * The per-input prelude (`tanh`, grid position, `i0`, `f`) stays scalar
+//!   and off the `j` lanes; recomputing it per tile yields the identical
+//!   f32 values, so tiling cannot perturb the lanes' inputs.
+//! * Int8 gains dequantize through a 256-entry f32 table built at head
+//!   registration with [`crate::kan::eval::dequant_gain_log_int8`] — a
+//!   table *lookup* of the identical f32 value the scalar path computes
+//!   per access (`exp` does not vectorize bit-exactly; a LUT does).
+//!
+//! # Packed-index pre-decode
+//!
+//! The scalar VQ kernel decodes one ⌈log₂K⌉-bit index per `(i, j)` edge
+//! per batch row via [`crate::vq::bitpack::read_packed`].  The SIMD kernels
+//! instead pre-decode each input-row's indices into a fixed **stack**
+//! buffer ([`crate::vq::bitpack::decode_packed`], bitwise-identical output)
+//! in tiles of [`J_TILE`], and run the input-feature loop outermost so each
+//! tile is decoded **once per layer call** — the indices depend only on
+//! `(i, j)`, never on the batch row — amortizing the bit arithmetic across
+//! both the `j` loop and the batch, and feeding the gather lanes directly.
+//! (Per-output accumulation order is unchanged by the loop interchange:
+//! `i` still ascends for every accumulator, bias still lands last.)  No
+//! heap allocation: the hot path stays zero-alloc (asserted by
+//! `rust/tests/arena_zero_alloc.rs` / `family_arena_equivalence.rs` under
+//! forced-SIMD dispatch).
+
+use anyhow::Result;
+
+use crate::kan::eval::dequant_gain_log_int8;
+use crate::memplan::view;
+use crate::vq::bitpack::read_packed;
+use crate::vq::quant::LogInt8Params;
+
+/// Environment variable consulted when the kernel mode is [`KernelMode::Auto`]:
+/// set `SHARE_KAN_KERNEL=scalar` (or `simd`) to force a dispatch without
+/// touching CLI flags — how CI keeps the scalar fallback path exercised.
+pub const KERNEL_ENV: &str = "SHARE_KAN_KERNEL";
+
+/// Requested kernel dispatch policy (the `--kernel` knob).
+///
+/// This is the *request*; [`KernelMode::resolve`] turns it into the
+/// [`KernelKind`] actually executed, via runtime CPU feature detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Detect at runtime: SIMD when the host supports it, else scalar.
+    /// May be overridden by the [`KERNEL_ENV`] environment variable.
+    #[default]
+    Auto,
+    /// Force the scalar reference kernels.
+    Scalar,
+    /// Force SIMD; backend construction fails if the host supports neither
+    /// AVX2+FMA nor NEON.
+    Simd,
+}
+
+impl std::str::FromStr for KernelMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<KernelMode, String> {
+        match s {
+            "auto" => Ok(KernelMode::Auto),
+            "scalar" => Ok(KernelMode::Scalar),
+            "simd" => Ok(KernelMode::Simd),
+            other => Err(format!("unknown kernel mode '{other}' (expected auto|scalar|simd)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+        })
+    }
+}
+
+impl KernelMode {
+    /// Apply the [`KERNEL_ENV`] override: an explicit `Scalar`/`Simd` (set
+    /// programmatically, e.g. by the equivalence tests) always wins; `Auto`
+    /// defers to the environment when the variable is set.
+    fn with_env(self) -> std::result::Result<KernelMode, String> {
+        if self != KernelMode::Auto {
+            return Ok(self);
+        }
+        match std::env::var(KERNEL_ENV) {
+            Ok(v) => v.parse().map_err(|e| format!("{KERNEL_ENV}: {e}")),
+            Err(_) => Ok(KernelMode::Auto),
+        }
+    }
+
+    /// Resolve the requested mode against the host CPU.  `Auto` picks the
+    /// best supported tier (after consulting [`KERNEL_ENV`]); `Simd` errors
+    /// on hosts with no supported SIMD extension so a forced override never
+    /// silently degrades.
+    pub fn resolve(self) -> Result<KernelKind> {
+        match self.with_env().map_err(anyhow::Error::msg)? {
+            KernelMode::Auto => Ok(detect_simd().unwrap_or(KernelKind::Scalar)),
+            KernelMode::Scalar => Ok(KernelKind::Scalar),
+            KernelMode::Simd => detect_simd().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "kernel mode 'simd' was forced, but this host supports neither \
+                     AVX2+FMA (x86_64) nor NEON (aarch64)"
+                )
+            }),
+        }
+    }
+}
+
+/// The kernel implementation actually dispatched to (resolved once at
+/// backend construction; see [`KernelMode::resolve`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Scalar reference kernels (exact mirrors of [`crate::kan::eval`]).
+    Scalar,
+    /// 8-lane f32 kernels over AVX2 gathers (x86_64; FMA detected but
+    /// deliberately unused — see the module docs on parity).
+    #[cfg(target_arch = "x86_64")]
+    Avx2Fma,
+    /// 4-lane f32 kernels over NEON (aarch64).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl KernelKind {
+    /// Stable lowercase label for logs, metrics and `BENCH_kernel.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2Fma => "avx2+fma",
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => "neon",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Runtime CPU feature detection: the SIMD tier this host can execute, or
+/// `None` when only the scalar kernels are available.
+pub fn detect_simd() -> Option<KernelKind> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Some(KernelKind::Avx2Fma);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(KernelKind::Neon);
+        }
+    }
+    None
+}
+
+/// Stack-buffer tile width for the packed-index pre-decode: one input-row's
+/// indices are decoded [`J_TILE`] outputs at a time into a `[u32; J_TILE]`
+/// on the stack (never the heap — the hot path is zero-alloc).  Sized to
+/// cover the default layer width (`d_hidden = 128`) in ONE tile, so at the
+/// default serving shape the scalar per-`(i, bi)` prelude (`tanh`, clamp,
+/// floor) runs exactly once, like the scalar kernel's.
+pub const J_TILE: usize = 128;
+
+/// Int8 dequantization constants for one VQ layer, resident alongside the
+/// quantized tables (scalar per layer, so they live in the head record, not
+/// the arena).  `gain_lut[b]` caches `dequant_gain_log_int8(b as i8, ..)`
+/// for every possible gain byte: the SIMD kernels gather from it, and the
+/// entries are bit-identical to the per-access dequant the scalar kernel
+/// performs.
+#[derive(Debug, Clone)]
+pub(crate) struct LayerQuant {
+    pub(crate) codebook_scale: f32,
+    pub(crate) gain: LogInt8Params,
+    pub(crate) gain_lut: Box<[f32; 256]>,
+}
+
+impl LayerQuant {
+    /// Build the per-layer dequant record (including the gain LUT) from the
+    /// same constants `vq::load_compressed` dequantizes with.
+    pub(crate) fn new(codebook_scale: f32, gain: LogInt8Params) -> LayerQuant {
+        let mut lut = Box::new([0.0f32; 256]);
+        for b in 0..=255u8 {
+            lut[b as usize] = dequant_gain_log_int8(b as i8, gain.log_lo, gain.log_step);
+        }
+        LayerQuant { codebook_scale, gain, gain_lut: lut }
+    }
+}
+
+/// Borrowed byte slices for one VQ layer's tables.  The codebook slice may
+/// live in a *different* arena from the per-head slices: the per-head
+/// `ArenaBackend` resolves all four from one arena, while
+/// `FamilyArenaBackend` reads the codebook from the family's shared region
+/// and everything else from the head's own marginal region.
+pub(crate) struct VqLayerRefs<'a> {
+    pub(crate) codebook: &'a [u8],
+    pub(crate) idx: &'a [u8],
+    pub(crate) gain: &'a [u8],
+    pub(crate) bias: &'a [f32],
+    pub(crate) quant: Option<&'a LayerQuant>,
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels: exact mirrors of kan::eval, reading
+// planner-assigned slices and writing into caller scratch.  No allocations,
+// identical accumulation order (bit-for-bit parity is load-bearing).
+// ---------------------------------------------------------------------------
+
+/// Per-edge table access for one VQ layer — monomorphized per precision so
+/// the inner loop carries no branch.
+trait VqTables {
+    fn gain(&self, e: usize) -> f32;
+    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32;
+}
+
+struct Fp32Vq<'a> {
+    codebook: &'a [f32],
+    gain: &'a [f32],
+    g: usize,
+}
+
+impl VqTables for Fp32Vq<'_> {
+    #[inline(always)]
+    fn gain(&self, e: usize) -> f32 {
+        self.gain[e]
+    }
+
+    #[inline(always)]
+    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32 {
+        let c = row * self.g + i0;
+        (1.0 - f) * self.codebook[c] + f * self.codebook[c + 1]
+    }
+}
+
+struct Int8Vq<'a> {
+    codebook: &'a [i8],
+    codebook_scale: f32,
+    gain: &'a [i8],
+    gain_params: LogInt8Params,
+    g: usize,
+}
+
+impl VqTables for Int8Vq<'_> {
+    #[inline(always)]
+    fn gain(&self, e: usize) -> f32 {
+        // identical f32 result to dequantize_log_int8 at load time
+        dequant_gain_log_int8(self.gain[e], self.gain_params.log_lo, self.gain_params.log_step)
+    }
+
+    #[inline(always)]
+    fn lerp(&self, row: usize, i0: usize, f: f32) -> f32 {
+        // `q as f32 * scale` is exactly dequantize_linear_int8 per element
+        let c = row * self.g + i0;
+        (1.0 - f) * (self.codebook[c] as f32 * self.codebook_scale)
+            + f * (self.codebook[c + 1] as f32 * self.codebook_scale)
+    }
+}
+
+/// SHARe-KAN VQ layer over arena tables (mirror of `kan::eval::vq_layer`
+/// with the packed-index decode inlined).
+fn vq_layer_scalar<T: VqTables>(x: &[f32], b: usize, t: &T, idx: &[u8], bits: usize,
+                                bias: &[f32], n_in: usize, n_out: usize, g: usize,
+                                out: &mut [f32]) {
+    let out = &mut out[..b * n_out];
+    out.fill(0.0);
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let xrow = &x[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, &xi) in xrow.iter().enumerate() {
+            let u = xi.tanh();
+            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+            let i0 = (pos.floor() as usize).min(g - 2);
+            let f = pos - i0 as f32;
+            let erow = i * n_out;
+            for (j, o) in orow.iter_mut().enumerate() {
+                let e = erow + j;
+                let row = read_packed(idx, bits, e) as usize;
+                *o += t.gain(e) * t.lerp(row, i0, f);
+            }
+        }
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += bias[j];
+        }
+    }
+}
+
+/// Dense KAN layer over arena grids (mirror of `kan::eval::dense_layer`).
+fn dense_layer_scalar(x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize,
+                      g: usize, out: &mut [f32]) {
+    let out = &mut out[..b * n_out];
+    out.fill(0.0);
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let xrow = &x[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, &xi) in xrow.iter().enumerate() {
+            let u = xi.tanh();
+            let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+            let i0 = (pos.floor() as usize).min(g - 2);
+            let f = pos - i0 as f32;
+            let base = i * n_out * g;
+            for (j, o) in orow.iter_mut().enumerate() {
+                let row = base + j * g + i0;
+                *o += (1.0 - f) * grids[row] + f * grids[row + 1];
+            }
+        }
+    }
+}
+
+/// MLP baseline over arena weights (mirror of `kan::eval::MlpModel`).
+fn mlp_scalar(x: &[f32], b: usize, w1: &[f32], b1: &[f32], w2: &[f32], b2: &[f32],
+              d_in: usize, d_hidden: usize, d_out: usize, h: &mut [f32],
+              out: &mut [f32]) {
+    let h = &mut h[..b * d_hidden];
+    let out = &mut out[..b * d_out];
+    for bi in 0..b {
+        for j in 0..d_hidden {
+            let mut acc = b1[j];
+            for i in 0..d_in {
+                acc += x[bi * d_in + i] * w1[i * d_hidden + j];
+            }
+            h[bi * d_hidden + j] = acc.max(0.0);
+        }
+    }
+    for bi in 0..b {
+        for j in 0..d_out {
+            let mut acc = b2[j];
+            for i in 0..d_hidden {
+                acc += h[bi * d_hidden + i] * w2[i * d_out + j];
+            }
+            out[bi * d_out + j] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch: one entry point per kernel, branching on the resolved
+// KernelKind (chosen once at backend construction, never per edge).
+// ---------------------------------------------------------------------------
+
+/// Whether gather-based SIMD can address this table with i32 offsets (it
+/// always can in practice — this guards the cast on absurd table sizes).
+#[cfg(target_arch = "x86_64")]
+fn fits_i32(len: usize) -> bool {
+    len <= i32::MAX as usize
+}
+
+/// Execute one VQ layer with the resolved kernel (monomorphized per
+/// precision).  SIMD falls back to scalar on tables too large for 32-bit
+/// gather offsets; outputs are bit-for-bit identical either way.
+pub(crate) fn run_vq_layer(kind: KernelKind, l: &VqLayerRefs<'_>, bits: usize,
+                           x: &[f32], b: usize, n_in: usize, n_out: usize,
+                           g: usize, out: &mut [f32]) {
+    match l.quant {
+        None => {
+            let codebook = view::f32s(l.codebook);
+            let gain = view::f32s(l.gain);
+            match kind {
+                KernelKind::Scalar => {
+                    let t = Fp32Vq { codebook, gain, g };
+                    vq_layer_scalar(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
+                }
+                #[cfg(target_arch = "x86_64")]
+                KernelKind::Avx2Fma => {
+                    if fits_i32(codebook.len()) {
+                        // SAFETY: construction resolved Avx2Fma only after
+                        // runtime detection of avx2+fma; index stream was
+                        // validated < K at registration (fill_packed_idx).
+                        unsafe {
+                            avx2::vq_layer_fp32(x, b, codebook, gain, l.idx, bits,
+                                                l.bias, n_in, n_out, g, out);
+                        }
+                    } else {
+                        let t = Fp32Vq { codebook, gain, g };
+                        vq_layer_scalar(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
+                    }
+                }
+                #[cfg(target_arch = "aarch64")]
+                KernelKind::Neon => {
+                    // SAFETY: construction resolved Neon only after runtime
+                    // detection; index stream validated < K at registration.
+                    unsafe {
+                        neon::vq_layer_fp32(x, b, codebook, gain, l.idx, bits,
+                                            l.bias, n_in, n_out, g, out);
+                    }
+                }
+            }
+        }
+        Some(q) => {
+            let codebook = view::i8s(l.codebook);
+            let gain = view::i8s(l.gain);
+            match kind {
+                KernelKind::Scalar => {
+                    let t = Int8Vq {
+                        codebook,
+                        codebook_scale: q.codebook_scale,
+                        gain,
+                        gain_params: q.gain,
+                        g,
+                    };
+                    vq_layer_scalar(x, b, &t, l.idx, bits, l.bias, n_in, n_out, g, out);
+                }
+                #[cfg(target_arch = "x86_64")]
+                KernelKind::Avx2Fma => {
+                    // SAFETY: as above (detection at construction; validated
+                    // index stream; LUT has all 256 byte values).
+                    unsafe {
+                        avx2::vq_layer_int8(x, b, codebook, q.codebook_scale, gain,
+                                            &q.gain_lut, l.idx, bits, l.bias, n_in,
+                                            n_out, g, out);
+                    }
+                }
+                #[cfg(target_arch = "aarch64")]
+                KernelKind::Neon => {
+                    // SAFETY: as above.
+                    unsafe {
+                        neon::vq_layer_int8(x, b, codebook, q.codebook_scale, gain,
+                                            &q.gain_lut, l.idx, bits, l.bias, n_in,
+                                            n_out, g, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute one dense KAN layer with the resolved kernel.
+pub(crate) fn run_dense_layer(kind: KernelKind, x: &[f32], b: usize, grids: &[f32],
+                              n_in: usize, n_out: usize, g: usize, out: &mut [f32]) {
+    match kind {
+        KernelKind::Scalar => dense_layer_scalar(x, b, grids, n_in, n_out, g, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2Fma => {
+            if fits_i32(grids.len()) {
+                // SAFETY: detection at construction; grid offsets are
+                // in-bounds by layer shape (i < n_in, j < n_out, i0 <= g-2).
+                unsafe { avx2::dense_layer(x, b, grids, n_in, n_out, g, out) }
+            } else {
+                dense_layer_scalar(x, b, grids, n_in, n_out, g, out)
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            // SAFETY: detection at construction; offsets in-bounds by shape.
+            unsafe { neon::dense_layer(x, b, grids, n_in, n_out, g, out) }
+        }
+    }
+}
+
+/// Execute the MLP baseline with the resolved kernel.  (NEON serves the MLP
+/// through the scalar kernel — the VQ and dense PLI loops are the paper's
+/// hot path; the MLP exists as a baseline.)
+pub(crate) fn run_mlp(kind: KernelKind, x: &[f32], b: usize, w1: &[f32], b1: &[f32],
+                      w2: &[f32], b2: &[f32], d_in: usize, d_hidden: usize,
+                      d_out: usize, h: &mut [f32], out: &mut [f32]) {
+    match kind {
+        KernelKind::Scalar => {
+            mlp_scalar(x, b, w1, b1, w2, b2, d_in, d_hidden, d_out, h, out)
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2Fma => {
+            // SAFETY: detection at construction; all loads are in-bounds by
+            // the row-major weight shapes.
+            unsafe { avx2::mlp(x, b, w1, b1, w2, b2, d_in, d_hidden, d_out, h, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            mlp_scalar(x, b, w1, b1, w2, b2, d_in, d_hidden, d_out, h, out)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX2 kernels, 8 f32 lanes across the output dimension j.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::J_TILE;
+    use crate::vq::bitpack::decode_packed;
+
+    const LANES: usize = 8;
+
+    /// fp32 VQ layer: pre-decoded index tiles feed `vpgatherdps` codebook
+    /// lookups; per-lane unfused mul/add reproduces the scalar rounding.
+    ///
+    /// The loop nest runs `i` (input feature) outermost and the batch row
+    /// innermost, so each index tile is decoded **once per layer call**
+    /// instead of once per batch row (the decoded rows depend only on `i`
+    /// and `j`).  Every accumulator `out[bi][j]` still receives its
+    /// contributions in ascending-`i` order with the bias added last —
+    /// the exact scalar accumulation sequence, bit for bit.
+    ///
+    /// # Safety
+    /// Caller must guarantee avx2 (+fma) are available, every packed index
+    /// decodes to `< codebook.len() / g`, and `codebook.len()` fits in i32.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn vq_layer_fp32(x: &[f32], b: usize, codebook: &[f32],
+                                       gain: &[f32], idx: &[u8], bits: usize,
+                                       bias: &[f32], n_in: usize, n_out: usize,
+                                       g: usize, out: &mut [f32]) {
+        let out = &mut out[..b * n_out];
+        out.fill(0.0);
+        let scale = (g - 1) as f32 / 2.0;
+        let mut rows = [0u32; J_TILE];
+        let gsplat = _mm256_set1_epi32(g as i32);
+        for i in 0..n_in {
+            let erow = i * n_out;
+            let mut j0 = 0usize;
+            while j0 < n_out {
+                let tile = (n_out - j0).min(J_TILE);
+                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                for bi in 0..b {
+                    let u = x[bi * n_in + i].tanh();
+                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                    let i0 = (pos.floor() as usize).min(g - 2);
+                    let f = pos - i0 as f32;
+                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                    let wf = _mm256_set1_ps(f);
+                    let w1 = _mm256_set1_ps(1.0 - f);
+                    let i0splat = _mm256_set1_epi32(i0 as i32);
+                    let mut v = 0usize;
+                    while v + LANES <= tile {
+                        let j = j0 + v;
+                        let rvec =
+                            _mm256_loadu_si256(rows.as_ptr().add(v) as *const __m256i);
+                        let offs =
+                            _mm256_add_epi32(_mm256_mullo_epi32(rvec, gsplat), i0splat);
+                        let c0 = _mm256_i32gather_ps::<4>(codebook.as_ptr(), offs);
+                        let c1 = _mm256_i32gather_ps::<4>(codebook.as_ptr().add(1), offs);
+                        let lerp =
+                            _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
+                        let gv = _mm256_loadu_ps(gain.as_ptr().add(erow + j));
+                        let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
+                        _mm256_storeu_ps(
+                            orow.as_mut_ptr().add(j),
+                            _mm256_add_ps(acc, _mm256_mul_ps(gv, lerp)),
+                        );
+                        v += LANES;
+                    }
+                    // scalar tail: same math, same rounding as the lanes
+                    for t in v..tile {
+                        let j = j0 + t;
+                        let c = rows[t] as usize * g + i0;
+                        let interp = (1.0 - f) * codebook[c] + f * codebook[c + 1];
+                        orow[j] += gain[erow + j] * interp;
+                    }
+                }
+                j0 += tile;
+            }
+        }
+        // bias last, exactly as the scalar kernel adds it per row
+        for bi in 0..b {
+            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += bias[j];
+            }
+        }
+    }
+
+    /// Int8 VQ layer: quantized codebook entries are widened lane-wise (an
+    /// exact i8→f32 conversion) and dequantized with the same op order as
+    /// the scalar kernel; gains gather from the 256-entry dequant LUT.
+    /// Same `i`-outermost loop nest as [`vq_layer_fp32`]: tiles decode once
+    /// per layer call, accumulation order per output is unchanged.
+    ///
+    /// # Safety
+    /// Caller must guarantee avx2 (+fma) are available and every packed
+    /// index decodes to `< codebook.len() / g`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn vq_layer_int8(x: &[f32], b: usize, codebook: &[i8],
+                                       cb_scale: f32, gain: &[i8],
+                                       gain_lut: &[f32; 256], idx: &[u8], bits: usize,
+                                       bias: &[f32], n_in: usize, n_out: usize,
+                                       g: usize, out: &mut [f32]) {
+        let out = &mut out[..b * n_out];
+        out.fill(0.0);
+        let scale = (g - 1) as f32 / 2.0;
+        let mut rows = [0u32; J_TILE];
+        let svec = _mm256_set1_ps(cb_scale);
+        for i in 0..n_in {
+            let erow = i * n_out;
+            let mut j0 = 0usize;
+            while j0 < n_out {
+                let tile = (n_out - j0).min(J_TILE);
+                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                for bi in 0..b {
+                    let u = x[bi * n_in + i].tanh();
+                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                    let i0 = (pos.floor() as usize).min(g - 2);
+                    let f = pos - i0 as f32;
+                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                    let wf = _mm256_set1_ps(f);
+                    let w1 = _mm256_set1_ps(1.0 - f);
+                    let mut v = 0usize;
+                    while v + LANES <= tile {
+                        let j = j0 + v;
+                        let mut q0 = [0f32; LANES];
+                        let mut q1 = [0f32; LANES];
+                        for l in 0..LANES {
+                            let c = rows[v + l] as usize * g + i0;
+                            q0[l] = codebook[c] as f32;
+                            q1[l] = codebook[c + 1] as f32;
+                        }
+                        let c0 = _mm256_mul_ps(_mm256_loadu_ps(q0.as_ptr()), svec);
+                        let c1 = _mm256_mul_ps(_mm256_loadu_ps(q1.as_ptr()), svec);
+                        let lerp =
+                            _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
+                        let gq =
+                            _mm_loadl_epi64(gain.as_ptr().add(erow + j) as *const __m128i);
+                        let gidx = _mm256_cvtepu8_epi32(gq);
+                        let gv = _mm256_i32gather_ps::<4>(gain_lut.as_ptr(), gidx);
+                        let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
+                        _mm256_storeu_ps(
+                            orow.as_mut_ptr().add(j),
+                            _mm256_add_ps(acc, _mm256_mul_ps(gv, lerp)),
+                        );
+                        v += LANES;
+                    }
+                    for t in v..tile {
+                        let j = j0 + t;
+                        let c = rows[t] as usize * g + i0;
+                        let interp = (1.0 - f) * (codebook[c] as f32 * cb_scale)
+                            + f * (codebook[c + 1] as f32 * cb_scale);
+                        // LUT entries are bit-identical to per-access dequant
+                        let gval = gain_lut[gain[erow + j] as u8 as usize];
+                        orow[j] += gval * interp;
+                    }
+                }
+                j0 += tile;
+            }
+        }
+        for bi in 0..b {
+            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += bias[j];
+            }
+        }
+    }
+
+    /// Dense KAN layer: per-lane grid offsets `base + j*g + i0` feed the
+    /// gather; unfused lerp as in the scalar kernel.
+    ///
+    /// # Safety
+    /// Caller must guarantee avx2 (+fma) are available and `grids.len()`
+    /// fits in i32 (offsets are in-bounds by the layer shape).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dense_layer(x: &[f32], b: usize, grids: &[f32], n_in: usize,
+                                     n_out: usize, g: usize, out: &mut [f32]) {
+        let out = &mut out[..b * n_out];
+        out.fill(0.0);
+        let scale = (g - 1) as f32 / 2.0;
+        let lane_idx: [i32; LANES] = [0, 1, 2, 3, 4, 5, 6, 7];
+        let lanes = _mm256_loadu_si256(lane_idx.as_ptr() as *const __m256i);
+        let gsplat = _mm256_set1_epi32(g as i32);
+        for bi in 0..b {
+            let xrow = &x[bi * n_in..(bi + 1) * n_in];
+            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+            for (i, &xi) in xrow.iter().enumerate() {
+                let u = xi.tanh();
+                let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                let i0 = (pos.floor() as usize).min(g - 2);
+                let f = pos - i0 as f32;
+                let base = i * n_out * g;
+                let wf = _mm256_set1_ps(f);
+                let w1 = _mm256_set1_ps(1.0 - f);
+                let bsplat = _mm256_set1_epi32((base + i0) as i32);
+                let mut j = 0usize;
+                while j + LANES <= n_out {
+                    let jv = _mm256_add_epi32(_mm256_set1_epi32(j as i32), lanes);
+                    let offs = _mm256_add_epi32(_mm256_mullo_epi32(jv, gsplat), bsplat);
+                    let c0 = _mm256_i32gather_ps::<4>(grids.as_ptr(), offs);
+                    let c1 = _mm256_i32gather_ps::<4>(grids.as_ptr().add(1), offs);
+                    let lerp =
+                        _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
+                    let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
+                    _mm256_storeu_ps(orow.as_mut_ptr().add(j), _mm256_add_ps(acc, lerp));
+                    j += LANES;
+                }
+                for j2 in j..n_out {
+                    let row = base + j2 * g + i0;
+                    orow[j2] += (1.0 - f) * grids[row] + f * grids[row + 1];
+                }
+            }
+        }
+    }
+
+    /// MLP baseline: broadcast-x times contiguous weight rows, 8 outputs at
+    /// a time; unfused mul/add keeps scalar accumulation rounding.
+    ///
+    /// # Safety
+    /// Caller must guarantee avx2 (+fma) are available; loads are in-bounds
+    /// by the row-major `[d_in, d_hidden]` / `[d_hidden, d_out]` shapes.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn mlp(x: &[f32], b: usize, w1: &[f32], b1: &[f32], w2: &[f32],
+                             b2: &[f32], d_in: usize, d_hidden: usize, d_out: usize,
+                             h: &mut [f32], out: &mut [f32]) {
+        let h = &mut h[..b * d_hidden];
+        let out = &mut out[..b * d_out];
+        let zero = _mm256_setzero_ps();
+        for bi in 0..b {
+            let mut j = 0usize;
+            while j + LANES <= d_hidden {
+                let mut acc = _mm256_loadu_ps(b1.as_ptr().add(j));
+                for i in 0..d_in {
+                    let xv = _mm256_set1_ps(x[bi * d_in + i]);
+                    let wv = _mm256_loadu_ps(w1.as_ptr().add(i * d_hidden + j));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                }
+                // maxps(acc, 0): returns 0 when acc is NaN, exactly like
+                // the scalar kernel's acc.max(0.0)
+                _mm256_storeu_ps(h.as_mut_ptr().add(bi * d_hidden + j),
+                                 _mm256_max_ps(acc, zero));
+                j += LANES;
+            }
+            for j2 in j..d_hidden {
+                let mut acc = b1[j2];
+                for i in 0..d_in {
+                    acc += x[bi * d_in + i] * w1[i * d_hidden + j2];
+                }
+                h[bi * d_hidden + j2] = acc.max(0.0);
+            }
+        }
+        for bi in 0..b {
+            let mut j = 0usize;
+            while j + LANES <= d_out {
+                let mut acc = _mm256_loadu_ps(b2.as_ptr().add(j));
+                for i in 0..d_hidden {
+                    let xv = _mm256_set1_ps(h[bi * d_hidden + i]);
+                    let wv = _mm256_loadu_ps(w2.as_ptr().add(i * d_out + j));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(bi * d_out + j), acc);
+                j += LANES;
+            }
+            for j2 in j..d_out {
+                let mut acc = b2[j2];
+                for i in 0..d_hidden {
+                    acc += h[bi * d_hidden + i] * w2[i * d_out + j2];
+                }
+                out[bi * d_out + j2] = acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON kernels, 4 f32 lanes across the output dimension j.  NEON
+// has no gather, so lanes are assembled through small stack arrays; the
+// arithmetic is the same unfused mul/add sequence as the scalar kernel.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::J_TILE;
+    use crate::vq::bitpack::decode_packed;
+
+    const LANES: usize = 4;
+
+    /// fp32 VQ layer (see the AVX2 twin for the structure).
+    ///
+    /// # Safety
+    /// Caller must guarantee NEON is available and every packed index
+    /// decodes to `< codebook.len() / g`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vq_layer_fp32(x: &[f32], b: usize, codebook: &[f32],
+                                       gain: &[f32], idx: &[u8], bits: usize,
+                                       bias: &[f32], n_in: usize, n_out: usize,
+                                       g: usize, out: &mut [f32]) {
+        let out = &mut out[..b * n_out];
+        out.fill(0.0);
+        let scale = (g - 1) as f32 / 2.0;
+        let mut rows = [0u32; J_TILE];
+        for i in 0..n_in {
+            let erow = i * n_out;
+            let mut j0 = 0usize;
+            while j0 < n_out {
+                let tile = (n_out - j0).min(J_TILE);
+                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                for bi in 0..b {
+                    let u = x[bi * n_in + i].tanh();
+                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                    let i0 = (pos.floor() as usize).min(g - 2);
+                    let f = pos - i0 as f32;
+                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                    let wf = vdupq_n_f32(f);
+                    let w1 = vdupq_n_f32(1.0 - f);
+                    let mut v = 0usize;
+                    while v + LANES <= tile {
+                        let j = j0 + v;
+                        let mut a0 = [0f32; LANES];
+                        let mut a1 = [0f32; LANES];
+                        for l in 0..LANES {
+                            let c = rows[v + l] as usize * g + i0;
+                            a0[l] = codebook[c];
+                            a1[l] = codebook[c + 1];
+                        }
+                        let lerp = vaddq_f32(vmulq_f32(w1, vld1q_f32(a0.as_ptr())),
+                                             vmulq_f32(wf, vld1q_f32(a1.as_ptr())));
+                        let gv = vld1q_f32(gain.as_ptr().add(erow + j));
+                        let acc = vld1q_f32(orow.as_ptr().add(j));
+                        vst1q_f32(orow.as_mut_ptr().add(j),
+                                  vaddq_f32(acc, vmulq_f32(gv, lerp)));
+                        v += LANES;
+                    }
+                    for t in v..tile {
+                        let j = j0 + t;
+                        let c = rows[t] as usize * g + i0;
+                        let interp = (1.0 - f) * codebook[c] + f * codebook[c + 1];
+                        orow[j] += gain[erow + j] * interp;
+                    }
+                }
+                j0 += tile;
+            }
+        }
+        // bias last, exactly as the scalar kernel adds it per row
+        for bi in 0..b {
+            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += bias[j];
+            }
+        }
+    }
+
+    /// Int8 VQ layer (see the AVX2 twin for the structure).
+    ///
+    /// # Safety
+    /// Caller must guarantee NEON is available and every packed index
+    /// decodes to `< codebook.len() / g`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vq_layer_int8(x: &[f32], b: usize, codebook: &[i8],
+                                       cb_scale: f32, gain: &[i8],
+                                       gain_lut: &[f32; 256], idx: &[u8], bits: usize,
+                                       bias: &[f32], n_in: usize, n_out: usize,
+                                       g: usize, out: &mut [f32]) {
+        let out = &mut out[..b * n_out];
+        out.fill(0.0);
+        let scale = (g - 1) as f32 / 2.0;
+        let mut rows = [0u32; J_TILE];
+        let svec = vdupq_n_f32(cb_scale);
+        for i in 0..n_in {
+            let erow = i * n_out;
+            let mut j0 = 0usize;
+            while j0 < n_out {
+                let tile = (n_out - j0).min(J_TILE);
+                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                for bi in 0..b {
+                    let u = x[bi * n_in + i].tanh();
+                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                    let i0 = (pos.floor() as usize).min(g - 2);
+                    let f = pos - i0 as f32;
+                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                    let wf = vdupq_n_f32(f);
+                    let w1 = vdupq_n_f32(1.0 - f);
+                    let mut v = 0usize;
+                    while v + LANES <= tile {
+                        let j = j0 + v;
+                        let mut q0 = [0f32; LANES];
+                        let mut q1 = [0f32; LANES];
+                        let mut gq = [0f32; LANES];
+                        for l in 0..LANES {
+                            let c = rows[v + l] as usize * g + i0;
+                            q0[l] = codebook[c] as f32;
+                            q1[l] = codebook[c + 1] as f32;
+                            gq[l] = gain_lut[gain[erow + j + l] as u8 as usize];
+                        }
+                        let c0 = vmulq_f32(vld1q_f32(q0.as_ptr()), svec);
+                        let c1 = vmulq_f32(vld1q_f32(q1.as_ptr()), svec);
+                        let lerp = vaddq_f32(vmulq_f32(w1, c0), vmulq_f32(wf, c1));
+                        let gv = vld1q_f32(gq.as_ptr());
+                        let acc = vld1q_f32(orow.as_ptr().add(j));
+                        vst1q_f32(orow.as_mut_ptr().add(j),
+                                  vaddq_f32(acc, vmulq_f32(gv, lerp)));
+                        v += LANES;
+                    }
+                    for t in v..tile {
+                        let j = j0 + t;
+                        let c = rows[t] as usize * g + i0;
+                        let interp = (1.0 - f) * (codebook[c] as f32 * cb_scale)
+                            + f * (codebook[c + 1] as f32 * cb_scale);
+                        let gval = gain_lut[gain[erow + j] as u8 as usize];
+                        orow[j] += gval * interp;
+                    }
+                }
+                j0 += tile;
+            }
+        }
+        for bi in 0..b {
+            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += bias[j];
+            }
+        }
+    }
+
+    /// Dense KAN layer (see the AVX2 twin for the structure).
+    ///
+    /// # Safety
+    /// Caller must guarantee NEON is available; offsets are in-bounds by
+    /// the layer shape.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dense_layer(x: &[f32], b: usize, grids: &[f32], n_in: usize,
+                                     n_out: usize, g: usize, out: &mut [f32]) {
+        let out = &mut out[..b * n_out];
+        out.fill(0.0);
+        let scale = (g - 1) as f32 / 2.0;
+        for bi in 0..b {
+            let xrow = &x[bi * n_in..(bi + 1) * n_in];
+            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+            for (i, &xi) in xrow.iter().enumerate() {
+                let u = xi.tanh();
+                let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                let i0 = (pos.floor() as usize).min(g - 2);
+                let f = pos - i0 as f32;
+                let base = i * n_out * g;
+                let wf = vdupq_n_f32(f);
+                let w1 = vdupq_n_f32(1.0 - f);
+                let mut j = 0usize;
+                while j + LANES <= n_out {
+                    let mut a0 = [0f32; LANES];
+                    let mut a1 = [0f32; LANES];
+                    for l in 0..LANES {
+                        let row = base + (j + l) * g + i0;
+                        a0[l] = grids[row];
+                        a1[l] = grids[row + 1];
+                    }
+                    let lerp = vaddq_f32(vmulq_f32(w1, vld1q_f32(a0.as_ptr())),
+                                         vmulq_f32(wf, vld1q_f32(a1.as_ptr())));
+                    let acc = vld1q_f32(orow.as_ptr().add(j));
+                    vst1q_f32(orow.as_mut_ptr().add(j), vaddq_f32(acc, lerp));
+                    j += LANES;
+                }
+                for j2 in j..n_out {
+                    let row = base + j2 * g + i0;
+                    orow[j2] += (1.0 - f) * grids[row] + f * grids[row + 1];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::vq::bitpack::{bits_for, pack};
+
+    fn packed_indices(rng: &mut Pcg32, edges: usize, k: usize) -> (Vec<u8>, usize) {
+        let bits = bits_for(k);
+        let values: Vec<u32> = (0..edges).map(|_| rng.below(k) as u32).collect();
+        (pack(&values, bits), bits)
+    }
+
+    #[test]
+    fn mode_parsing_round_trips() {
+        for mode in [KernelMode::Auto, KernelMode::Scalar, KernelMode::Simd] {
+            assert_eq!(mode.to_string().parse::<KernelMode>().unwrap(), mode);
+        }
+        assert!("avx512".parse::<KernelMode>().is_err());
+    }
+
+    #[test]
+    fn scalar_mode_resolves_everywhere() {
+        assert_eq!(KernelMode::Scalar.resolve().unwrap(), KernelKind::Scalar);
+    }
+
+    #[test]
+    fn auto_resolves_to_detection() {
+        // covariant with the host: auto == detected simd tier, or scalar
+        let resolved = KernelMode::Auto.resolve().unwrap();
+        match detect_simd() {
+            Some(simd) => assert!(resolved == simd || resolved == KernelKind::Scalar),
+            None => assert_eq!(resolved, KernelKind::Scalar),
+        }
+    }
+
+    #[test]
+    fn simd_mode_errors_or_resolves_per_host() {
+        match detect_simd() {
+            Some(simd) => assert_eq!(KernelMode::Simd.resolve().unwrap(), simd),
+            None => assert!(KernelMode::Simd.resolve().is_err()),
+        }
+    }
+
+    #[test]
+    fn gain_lut_matches_per_access_dequant() {
+        let q = LayerQuant::new(0.01, LogInt8Params { log_lo: -5.0, log_step: 0.05 });
+        for b in 0..=255u8 {
+            let want = dequant_gain_log_int8(b as i8, -5.0, 0.05);
+            assert_eq!(q.gain_lut[b as usize].to_bits(), want.to_bits(), "byte {b}");
+        }
+    }
+
+    /// SIMD vq kernel == scalar vq kernel, bit for bit, on awkward shapes
+    /// (n_out not a multiple of the lane count, tiles > J_TILE).
+    #[test]
+    fn simd_vq_fp32_matches_scalar_bitwise() {
+        let kind = match detect_simd() {
+            Some(k) => k,
+            None => return, // host has no SIMD tier; nothing to compare
+        };
+        let mut rng = Pcg32::seeded(11);
+        for &(n_in, n_out, g, k, b) in
+            &[(3usize, 5usize, 5usize, 6usize, 2usize), (4, 67, 7, 12, 3), (2, 130, 6, 9, 1)]
+        {
+            let codebook = rng.normal_vec(k * g, 0.0, 1.0);
+            let gain = rng.normal_vec(n_in * n_out, 0.0, 0.7);
+            let bias = rng.normal_vec(n_out, 0.0, 0.3);
+            let (idx, bits) = packed_indices(&mut rng, n_in * n_out, k);
+            let x = rng.normal_vec(b * n_in, 0.0, 1.2);
+            let mut want = vec![0f32; b * n_out];
+            let mut got = vec![0f32; b * n_out];
+            let cb_bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(codebook.as_ptr() as *const u8, codebook.len() * 4)
+            };
+            let gain_bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(gain.as_ptr() as *const u8, gain.len() * 4)
+            };
+            let refs = VqLayerRefs {
+                codebook: cb_bytes,
+                idx: &idx,
+                gain: gain_bytes,
+                bias: &bias,
+                quant: None,
+            };
+            run_vq_layer(KernelKind::Scalar, &refs, bits, &x, b, n_in, n_out, g, &mut want);
+            run_vq_layer(kind, &refs, bits, &x, b, n_in, n_out, g, &mut got);
+            for (e, (a, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "shape ({n_in},{n_out},{g},{k},{b}) elem {e}: {a} != {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_vq_int8_matches_scalar_bitwise() {
+        let kind = match detect_simd() {
+            Some(k) => k,
+            None => return, // host has no SIMD tier; nothing to compare
+        };
+        let mut rng = Pcg32::seeded(12);
+        for &(n_in, n_out, g, k, b) in &[(3usize, 5usize, 5usize, 6usize, 2usize), (4, 67, 7, 12, 3)] {
+            let codebook: Vec<i8> =
+                (0..k * g).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let gain: Vec<i8> =
+                (0..n_in * n_out).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let bias = rng.normal_vec(n_out, 0.0, 0.3);
+            let (idx, bits) = packed_indices(&mut rng, n_in * n_out, k);
+            let x = rng.normal_vec(b * n_in, 0.0, 1.2);
+            let quant = LayerQuant::new(0.037,
+                                        LogInt8Params { log_lo: -4.0, log_step: 0.06 });
+            let mut want = vec![0f32; b * n_out];
+            let mut got = vec![0f32; b * n_out];
+            let cb_bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(codebook.as_ptr() as *const u8, codebook.len())
+            };
+            let gain_bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(gain.as_ptr() as *const u8, gain.len())
+            };
+            let refs = VqLayerRefs {
+                codebook: cb_bytes,
+                idx: &idx,
+                gain: gain_bytes,
+                bias: &bias,
+                quant: Some(&quant),
+            };
+            run_vq_layer(KernelKind::Scalar, &refs, bits, &x, b, n_in, n_out, g, &mut want);
+            run_vq_layer(kind, &refs, bits, &x, b, n_in, n_out, g, &mut got);
+            for (e, (a, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "shape ({n_in},{n_out},{g},{k},{b}) elem {e}: {a} != {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dense_matches_scalar_bitwise() {
+        let kind = match detect_simd() {
+            Some(k) => k,
+            None => return, // host has no SIMD tier; nothing to compare
+        };
+        let mut rng = Pcg32::seeded(13);
+        for &(n_in, n_out, g, b) in &[(3usize, 5usize, 5usize, 2usize), (4, 67, 7, 3)] {
+            let grids = rng.normal_vec(n_in * n_out * g, 0.0, 0.8);
+            let x = rng.normal_vec(b * n_in, 0.0, 1.2);
+            let mut want = vec![0f32; b * n_out];
+            let mut got = vec![0f32; b * n_out];
+            run_dense_layer(KernelKind::Scalar, &x, b, &grids, n_in, n_out, g, &mut want);
+            run_dense_layer(kind, &x, b, &grids, n_in, n_out, g, &mut got);
+            for (e, (a, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "shape ({n_in},{n_out},{g},{b}) elem {e}: {a} != {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_mlp_matches_scalar_bitwise() {
+        let kind = match detect_simd() {
+            Some(k) => k,
+            None => return, // host has no SIMD tier; nothing to compare
+        };
+        let mut rng = Pcg32::seeded(14);
+        for &(d_in, d_h, d_out, b) in &[(3usize, 5usize, 2usize, 2usize), (5, 19, 11, 3)] {
+            let w1 = rng.normal_vec(d_in * d_h, 0.0, 0.4);
+            let b1 = rng.normal_vec(d_h, 0.0, 0.2);
+            let w2 = rng.normal_vec(d_h * d_out, 0.0, 0.4);
+            let b2 = rng.normal_vec(d_out, 0.0, 0.2);
+            let x = rng.normal_vec(b * d_in, 0.0, 1.0);
+            let (mut hw, mut ow) = (vec![0f32; b * d_h], vec![0f32; b * d_out]);
+            let (mut hg, mut og) = (vec![0f32; b * d_h], vec![0f32; b * d_out]);
+            run_mlp(KernelKind::Scalar, &x, b, &w1, &b1, &w2, &b2, d_in, d_h, d_out,
+                    &mut hw, &mut ow);
+            run_mlp(kind, &x, b, &w1, &b1, &w2, &b2, d_in, d_h, d_out, &mut hg, &mut og);
+            for (e, (a, w)) in og.iter().zip(&ow).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "shape ({d_in},{d_h},{d_out},{b}) elem {e}: {a} != {w}");
+            }
+        }
+    }
+}

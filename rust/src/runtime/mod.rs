@@ -16,9 +16,15 @@
 //! The manifest parser stays feature-independent: it is plain JSON and the
 //! native backend can serve the same batch-bucket contract the AOT export
 //! describes.
+//!
+//! The arena backends execute through [`kernels`] — scalar reference
+//! kernels plus AVX2/NEON SIMD variants selected by runtime feature
+//! detection ([`KernelMode`] in the [`BackendSpec`], `--kernel` on the
+//! CLI), bit-for-bit identical across dispatches.
 
 pub mod arena;
 pub mod backend;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 
@@ -34,6 +40,7 @@ pub mod pjrt;
 
 pub use arena::{ArenaBackend, ArenaStats, FamilyArenaBackend};
 pub use backend::{Backend, BackendConfig, BackendSpec};
+pub use kernels::{detect_simd, KernelKind, KernelMode};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec};
 pub use native::{NativeBackend, NativeStats};
 

@@ -214,6 +214,7 @@ mod tests {
             kan: KanSpec { d_in: 3, d_hidden: 4, d_out: 2, grid_size: 5 },
             vq: crate::kan::spec::VqSpec { codebook_size: 6 },
             batch_buckets: vec![1, 4],
+            kernel: Default::default(),
         }
     }
 

@@ -38,6 +38,8 @@ impl PjrtBackend {
             kan: engine.manifest.kan_spec,
             vq: engine.manifest.vq_spec,
             batch_buckets: engine.manifest.batch_buckets.clone(),
+            // PJRT executes AOT artifacts; the kernel knob is arena-only
+            kernel: Default::default(),
         };
         Ok(PjrtBackend { engine, spec, heads: HashMap::new() })
     }

@@ -6,12 +6,23 @@
 //! the runtime trades 2–4 bytes/edge of RAM for O(1) access).
 
 /// Pack `values` (< 2^bits each) LSB-first into bytes.
+///
+/// # Panics
+/// Panics if any value does not fit in `bits` — **unconditionally**, in
+/// release builds too.  This used to be a `debug_assert!`, which meant a
+/// release build would silently OR an oversized index into its neighbors
+/// and corrupt the rest of the packed stream; a packed-index store must
+/// fail loudly instead (regression-tested by `oversized_value_rejected`).
 pub fn pack(values: &[u32], bits: usize) -> Vec<u8> {
     assert!(bits >= 1 && bits <= 32, "bits {bits}");
     let mut out = vec![0u8; (values.len() * bits + 7) / 8];
     let mut bitpos = 0usize;
     for &v in values {
-        debug_assert!(bits == 32 || v < (1u32 << bits), "value {v} exceeds {bits} bits");
+        assert!(
+            bits == 32 || v < (1u32 << bits),
+            "bitpack: value {v} does not fit in {bits} bits; packing it would \
+             corrupt neighboring codes"
+        );
         let mut remaining = bits;
         let mut val = v as u64;
         while remaining > 0 {
@@ -69,6 +80,34 @@ pub fn read_packed(packed: &[u8], bits: usize, i: usize) -> u32 {
         bitpos += take;
     }
     val as u32
+}
+
+/// Decode `out.len()` consecutive `bits`-wide values starting at element
+/// `start` into a caller-provided buffer — the streaming form of
+/// [`read_packed`] the SIMD kernels use to pre-decode one input-row's
+/// indices into a stack tile (no allocation, no per-element byte/offset
+/// recomputation on the fast path).
+///
+/// Bitwise identical to `read_packed(packed, bits, start + n)` for every
+/// `n` (property-tested in `rust/tests/proptests.rs`): the LSB-first bit
+/// stream is read as a little-endian 64-bit window where 8 bytes are
+/// available, falling back to the per-byte assembly near the tail.
+#[inline]
+pub fn decode_packed(packed: &[u8], bits: usize, start: usize, out: &mut [u32]) {
+    assert!(bits >= 1 && bits <= 32, "bits {bits}");
+    let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+    let mut bitpos = start * bits;
+    for (n, o) in out.iter_mut().enumerate() {
+        let byte = bitpos / 8;
+        *o = if byte + 8 <= packed.len() {
+            // off <= 7 and bits <= 32, so the value lies within the window
+            let w = u64::from_le_bytes(packed[byte..byte + 8].try_into().unwrap());
+            ((w >> (bitpos % 8)) & mask) as u32
+        } else {
+            read_packed(packed, bits, start + n)
+        };
+        bitpos += bits;
+    }
 }
 
 /// Bits needed for indices into a K-entry codebook.
@@ -145,5 +184,51 @@ mod tests {
     fn empty_input() {
         assert!(pack(&[], 9).is_empty());
         assert!(unpack(&[], 9, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit in 9 bits")]
+    fn oversized_value_rejected() {
+        // must hold in release builds too: pack's range check is a hard
+        // assert!, not a debug_assert! (the CI release-test job runs this)
+        pack(&[0, 511, 512], 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit in 1 bits")]
+    fn oversized_value_rejected_at_minimum_width() {
+        pack(&[2], 1);
+    }
+
+    #[test]
+    fn bits_32_accepts_all_values() {
+        let values = [0u32, 1, u32::MAX, 0x8000_0000];
+        let packed = pack(&values, 32);
+        assert_eq!(unpack(&packed, 32, values.len()), values);
+    }
+
+    #[test]
+    fn decode_packed_matches_read_packed_including_tails() {
+        let mut rng = Pcg32::seeded(4);
+        for bits in [1usize, 3, 7, 8, 9, 12, 16, 21, 24, 31, 32] {
+            let n = 97; // odd count -> unaligned tail for most widths
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let values: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+            let packed = pack(&values, bits);
+            // whole-stream decode
+            let mut out = vec![0u32; n];
+            decode_packed(&packed, bits, 0, &mut out);
+            assert_eq!(out, values, "bits={bits}");
+            // windowed decodes at every start, as the kernel tiles do
+            for start in [0usize, 1, 7, n / 2, n - 1, n] {
+                let len = (n - start).min(9);
+                let mut win = vec![0u32; len];
+                decode_packed(&packed, bits, start, &mut win);
+                for (k, &got) in win.iter().enumerate() {
+                    assert_eq!(got, read_packed(&packed, bits, start + k),
+                               "bits={bits} start={start} k={k}");
+                }
+            }
+        }
     }
 }

@@ -5,6 +5,9 @@
 //! indices decoded in place, Int8 coefficients dequantized per access)
 //! changes the memory layout and nothing else.
 
+mod common;
+
+use common::kernel_modes;
 use share_kan::coordinator::HeadWeights;
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::synthetic_dense;
@@ -15,31 +18,35 @@ use share_kan::vq::{compress, load_compressed, Precision};
 
 /// Execute the same padded batches on a freshly-built native and arena
 /// backend and require bitwise-identical scores (padding rows included —
-/// both backends compute the same math on the zeroed padding).
+/// both backends compute the same math on the zeroed padding).  The arena
+/// backend is exercised under every kernel dispatch the host supports;
+/// the native backend is the scalar reference and ignores the knob.
 fn assert_backends_agree(head: &HeadWeights, seed: u64) {
-    let spec = BackendSpec::for_head(head).with_buckets(&[1, 4, 8]);
-    let d_in = spec.kan.d_in;
-    let mut native = BackendConfig::Native(spec.clone()).build().unwrap();
-    let mut arena = BackendConfig::Arena(spec).build().unwrap();
-    native.register_head("h", head).unwrap();
-    arena.register_head("h", head).unwrap();
+    for mode in kernel_modes() {
+        let spec = BackendSpec::for_head(head).with_buckets(&[1, 4, 8]).with_kernel(mode);
+        let d_in = spec.kan.d_in;
+        let mut native = BackendConfig::Native(spec.clone()).build().unwrap();
+        let mut arena = BackendConfig::Arena(spec).build().unwrap();
+        native.register_head("h", head).unwrap();
+        arena.register_head("h", head).unwrap();
 
-    let mut rng = Pcg32::seeded(seed);
-    for &(n, bucket) in &[(1usize, 1usize), (3, 4), (4, 4), (5, 8), (8, 8)] {
-        // n live rows padded up to the bucket with zeros, as the batcher does
-        let mut x = vec![0.0f32; bucket * d_in];
-        for v in x.iter_mut().take(n * d_in) {
-            *v = rng.normal();
-        }
-        let want = native.execute("h", &x, bucket).unwrap();
-        let got = arena.execute("h", &x, bucket).unwrap();
-        assert_eq!(got.len(), want.len(), "n={n} bucket={bucket}");
-        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
-            assert_eq!(
-                a.to_bits(),
-                b.to_bits(),
-                "n={n} bucket={bucket} elem {i}: arena {a} != native {b}"
-            );
+        let mut rng = Pcg32::seeded(seed);
+        for &(n, bucket) in &[(1usize, 1usize), (3, 4), (4, 4), (5, 8), (8, 8)] {
+            // n live rows padded up to the bucket with zeros, as the batcher does
+            let mut x = vec![0.0f32; bucket * d_in];
+            for v in x.iter_mut().take(n * d_in) {
+                *v = rng.normal();
+            }
+            let want = native.execute("h", &x, bucket).unwrap();
+            let got = arena.execute("h", &x, bucket).unwrap();
+            assert_eq!(got.len(), want.len(), "n={n} bucket={bucket}");
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "kernel {mode:?} n={n} bucket={bucket} elem {i}: arena {a} != native {b}"
+                );
+            }
         }
     }
 }
@@ -90,16 +97,18 @@ fn arena_matches_vq_model_reference() {
     let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
     let reference = load_compressed(&vq_ck).unwrap();
 
-    let bspec = BackendSpec::for_head(&head).with_buckets(&[1, 4]);
-    let mut arena = BackendConfig::Arena(bspec).build().unwrap();
-    arena.register_head("h", &head).unwrap();
+    for mode in kernel_modes() {
+        let bspec = BackendSpec::for_head(&head).with_buckets(&[1, 4]).with_kernel(mode);
+        let mut arena = BackendConfig::Arena(bspec).build().unwrap();
+        arena.register_head("h", &head).unwrap();
 
-    let mut rng = Pcg32::seeded(15);
-    let x = rng.normal_vec(4 * spec.d_in, 0.0, 1.0);
-    let want = reference.forward(&x, 4);
-    let got = arena.execute("h", &x, 4).unwrap();
-    for (a, b) in got.iter().zip(&want) {
-        assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        let mut rng = Pcg32::seeded(15);
+        let x = rng.normal_vec(4 * spec.d_in, 0.0, 1.0);
+        let want = reference.forward(&x, 4);
+        let got = arena.execute("h", &x, 4).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "kernel {mode:?}: {a} != {b}");
+        }
     }
 }
 

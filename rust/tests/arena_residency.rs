@@ -23,7 +23,7 @@ fn compressed_head_arena_is_l2_resident() {
 
     // register it so the arena backend builds the serve-time plan
     let bspec = BackendSpec::for_head(&head).with_buckets(&[1, 8]);
-    let mut backend = ArenaBackend::new(bspec);
+    let mut backend = ArenaBackend::new(bspec).unwrap();
     backend.register_head("h", &head).unwrap();
     let plan = backend.head_plan("h").unwrap();
     plan.validate().unwrap();

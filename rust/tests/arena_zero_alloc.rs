@@ -22,37 +22,43 @@ static ALLOCATOR: common::CountingAlloc = common::CountingAlloc;
 #[test]
 fn hot_path_allocates_nothing_after_registration() {
     // a VQ Int8 head: the variant with the most table machinery (packed
-    // indices, Int8 codebook + gains) on the hot path
+    // indices, Int8 codebook + gains) on the hot path.  Measured under
+    // every kernel dispatch: the SIMD pre-decode tiles live on the stack,
+    // so forced SIMD must be just as allocation-free as scalar.
     let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 5, grid_size: 8 };
     let ck = synthetic_dense(&spec, 1);
     let vq_ck = compress(&ck, &spec, 32, Precision::Int8, 42).unwrap().to_checkpoint();
     let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
-    let bspec = BackendSpec::for_head(&head).with_buckets(&[1, 8]);
-    let mut backend = BackendConfig::Arena(bspec).build().unwrap();
-    backend.register_head("h", &head).unwrap();
 
     // also cover dense and mlp heads in the same measured loop
     let dense_spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 5, grid_size: 8 };
     let dense_head = HeadWeights::from_checkpoint(&synthetic_dense(&dense_spec, 2)).unwrap();
-    backend.register_head("d", &dense_head).unwrap();
 
-    let mut rng = Pcg32::seeded(9);
-    let x = rng.normal_vec(8 * spec.d_in, 0.0, 1.0);
-    let mut out: Vec<f32> = Vec::new();
-    // warm the output vector's capacity (the one legal allocation site)
-    backend.execute_into("h", &x, 8, &mut out).unwrap();
-    backend.execute_into("d", &x, 8, &mut out).unwrap();
+    for mode in common::kernel_modes() {
+        let bspec = BackendSpec::for_head(&head).with_buckets(&[1, 8]).with_kernel(mode);
+        let mut backend = BackendConfig::Arena(bspec).build().unwrap();
+        backend.register_head("h", &head).unwrap();
+        backend.register_head("d", &dense_head).unwrap();
 
-    let allocs = common::count_allocs(|| {
-        for _ in 0..100 {
-            backend.execute_into("h", &x, 8, &mut out).unwrap();
-            backend.execute_into("d", &x, 8, &mut out).unwrap();
-            std::hint::black_box(&out);
-        }
-    });
-    assert_eq!(
-        allocs, 0,
-        "arena hot path must not allocate: counted {allocs} allocations over 200 batches"
-    );
-    assert_eq!(out.len(), 8 * 5);
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(8 * spec.d_in, 0.0, 1.0);
+        let mut out: Vec<f32> = Vec::new();
+        // warm the output vector's capacity (the one legal allocation site)
+        backend.execute_into("h", &x, 8, &mut out).unwrap();
+        backend.execute_into("d", &x, 8, &mut out).unwrap();
+
+        let allocs = common::count_allocs(|| {
+            for _ in 0..100 {
+                backend.execute_into("h", &x, 8, &mut out).unwrap();
+                backend.execute_into("d", &x, 8, &mut out).unwrap();
+                std::hint::black_box(&out);
+            }
+        });
+        assert_eq!(
+            allocs, 0,
+            "arena hot path (kernel {mode:?}) must not allocate: \
+             counted {allocs} allocations over 200 batches"
+        );
+        assert_eq!(out.len(), 8 * 5);
+    }
 }

@@ -1,6 +1,7 @@
 //! Shared test support: a counting global allocator for zero-alloc
 //! assertions (used by `arena_zero_alloc.rs` and
-//! `family_arena_equivalence.rs`).
+//! `family_arena_equivalence.rs`) and the kernel-dispatch mode
+//! enumeration the SIMD-invariance suites iterate over.
 //!
 //! Each test binary that does `mod common;` gets its **own** instance of
 //! these process-global statics and must register the allocator itself:
@@ -19,6 +20,19 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use share_kan::runtime::{detect_simd, KernelMode};
+
+/// Every kernel dispatch this host can execute: forced scalar always,
+/// forced SIMD when the CPU supports a tier.  The dispatch-invariance
+/// suites (equivalence, zero-alloc, pool) run under each returned mode.
+pub fn kernel_modes() -> Vec<KernelMode> {
+    let mut modes = vec![KernelMode::Scalar];
+    if detect_simd().is_some() {
+        modes.push(KernelMode::Simd);
+    }
+    modes
+}
 
 pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
 pub static COUNTING: AtomicBool = AtomicBool::new(false);

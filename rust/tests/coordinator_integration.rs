@@ -21,6 +21,23 @@ fn native_cfg(policy: BatchPolicy, queue_capacity: usize) -> CoordinatorConfig {
     }
 }
 
+#[test]
+fn misconfigured_buckets_fail_at_startup_not_at_request_time() {
+    // regression: an empty or unsorted bucket ladder used to pass startup
+    // and panic inside the batcher (`expect("no buckets")`) once the first
+    // request tried to close a batch; it must be a startup error
+    for buckets in [&[][..], &[8, 1][..], &[1, 8, 8][..], &[0, 4][..]] {
+        let spec = BackendSpec::default().with_buckets(buckets);
+        let r = Coordinator::start(CoordinatorConfig {
+            backend: BackendConfig::Native(spec),
+            policy: BatchPolicy::default(),
+            queue_capacity: 16,
+        });
+        let err = format!("{:#}", r.err().expect("startup must fail"));
+        assert!(err.contains("batch_buckets"), "buckets {buckets:?}: {err}");
+    }
+}
+
 fn mlp_head(seed: u64) -> (HeadWeights, MlpModel) {
     let (d_in, d_h, d_out) = (64, 128, 20);
     let mut rng = Pcg32::seeded(seed);

@@ -13,6 +13,7 @@ mod common;
 
 use std::sync::Mutex;
 
+use common::kernel_modes;
 use share_kan::coordinator::HeadWeights;
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
@@ -46,34 +47,38 @@ fn family_heads(spec: &KanSpec, k: usize, precision: Precision, n: usize,
 }
 
 /// Register every head on a private-arena backend and a family backend and
-/// require bitwise-identical scores on bucket-padded batches.
+/// require bitwise-identical scores on bucket-padded batches, under every
+/// kernel dispatch the host supports.
 fn assert_family_matches_private(heads: &[HeadWeights], seed: u64) {
-    let spec = BackendSpec::for_head(&heads[0]).with_buckets(&[1, 4, 8]);
-    let d_in = spec.kan.d_in;
-    let mut private = BackendConfig::Arena(spec.clone()).build().unwrap();
-    let mut family = BackendConfig::FamilyArena(spec).build().unwrap();
-    for (i, h) in heads.iter().enumerate() {
-        private.register_head(&format!("task{i}"), h).unwrap();
-        family.register_head(&format!("task{i}"), h).unwrap();
-    }
-    let mut rng = Pcg32::seeded(seed);
-    for &(nrows, bucket) in &[(1usize, 1usize), (3, 4), (4, 4), (5, 8), (8, 8)] {
-        for i in 0..heads.len() {
-            let name = format!("task{i}");
-            // nrows live rows padded to the bucket, as the batcher does
-            let mut x = vec![0.0f32; bucket * d_in];
-            for v in x.iter_mut().take(nrows * d_in) {
-                *v = rng.normal();
-            }
-            let want = private.execute(&name, &x, bucket).unwrap();
-            let got = family.execute(&name, &x, bucket).unwrap();
-            assert_eq!(got.len(), want.len(), "{name} n={nrows} bucket={bucket}");
-            for (e, (a, b)) in got.iter().zip(&want).enumerate() {
-                assert_eq!(
-                    a.to_bits(),
-                    b.to_bits(),
-                    "{name} n={nrows} bucket={bucket} elem {e}: family {a} != private {b}"
-                );
+    for mode in kernel_modes() {
+        let spec = BackendSpec::for_head(&heads[0]).with_buckets(&[1, 4, 8]).with_kernel(mode);
+        let d_in = spec.kan.d_in;
+        let mut private = BackendConfig::Arena(spec.clone()).build().unwrap();
+        let mut family = BackendConfig::FamilyArena(spec).build().unwrap();
+        for (i, h) in heads.iter().enumerate() {
+            private.register_head(&format!("task{i}"), h).unwrap();
+            family.register_head(&format!("task{i}"), h).unwrap();
+        }
+        let mut rng = Pcg32::seeded(seed);
+        for &(nrows, bucket) in &[(1usize, 1usize), (3, 4), (4, 4), (5, 8), (8, 8)] {
+            for i in 0..heads.len() {
+                let name = format!("task{i}");
+                // nrows live rows padded to the bucket, as the batcher does
+                let mut x = vec![0.0f32; bucket * d_in];
+                for v in x.iter_mut().take(nrows * d_in) {
+                    *v = rng.normal();
+                }
+                let want = private.execute(&name, &x, bucket).unwrap();
+                let got = family.execute(&name, &x, bucket).unwrap();
+                assert_eq!(got.len(), want.len(), "{name} n={nrows} bucket={bucket}");
+                for (e, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "kernel {mode:?} {name} n={nrows} bucket={bucket} elem {e}: \
+                         family {a} != private {b}"
+                    );
+                }
             }
         }
     }
@@ -107,35 +112,40 @@ fn dense_heads_bit_for_bit_through_family_backend() {
 
 #[test]
 fn family_hot_path_allocates_nothing_after_registration() {
+    // the zero-alloc contract must hold under every kernel dispatch —
+    // the SIMD kernels pre-decode into *stack* tiles, never the heap
     let _g = lock();
     let spec = KanSpec { d_in: 8, d_hidden: 12, d_out: 5, grid_size: 8 };
     let heads = family_heads(&spec, 32, Precision::Int8, 3, 80);
-    let bspec = BackendSpec::for_head(&heads[0]).with_buckets(&[1, 8]);
-    let mut backend = BackendConfig::FamilyArena(bspec).build().unwrap();
-    let names: Vec<String> = (0..heads.len()).map(|i| format!("task{i}")).collect();
-    for (name, head) in names.iter().zip(&heads) {
-        backend.register_head(name, head).unwrap();
-    }
-
-    let mut rng = Pcg32::seeded(9);
-    let x = rng.normal_vec(8 * spec.d_in, 0.0, 1.0);
-    let mut out: Vec<f32> = Vec::new();
-    // warm the output vector's capacity (the one legal allocation site)
-    for name in &names {
-        backend.execute_into(name, &x, 8, &mut out).unwrap();
-    }
-
-    let allocs = common::count_allocs(|| {
-        for _ in 0..100 {
-            for name in &names {
-                backend.execute_into(name, &x, 8, &mut out).unwrap();
-            }
-            std::hint::black_box(&out);
+    for mode in kernel_modes() {
+        let bspec = BackendSpec::for_head(&heads[0]).with_buckets(&[1, 8]).with_kernel(mode);
+        let mut backend = BackendConfig::FamilyArena(bspec).build().unwrap();
+        let names: Vec<String> = (0..heads.len()).map(|i| format!("task{i}")).collect();
+        for (name, head) in names.iter().zip(&heads) {
+            backend.register_head(name, head).unwrap();
         }
-    });
-    assert_eq!(
-        allocs, 0,
-        "family hot path must not allocate: counted {allocs} allocations over 300 batches"
-    );
-    assert_eq!(out.len(), 8 * 5);
+
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(8 * spec.d_in, 0.0, 1.0);
+        let mut out: Vec<f32> = Vec::new();
+        // warm the output vector's capacity (the one legal allocation site)
+        for name in &names {
+            backend.execute_into(name, &x, 8, &mut out).unwrap();
+        }
+
+        let allocs = common::count_allocs(|| {
+            for _ in 0..100 {
+                for name in &names {
+                    backend.execute_into(name, &x, 8, &mut out).unwrap();
+                }
+                std::hint::black_box(&out);
+            }
+        });
+        assert_eq!(
+            allocs, 0,
+            "family hot path (kernel {mode:?}) must not allocate: \
+             counted {allocs} allocations over 300 batches"
+        );
+        assert_eq!(out.len(), 8 * 5);
+    }
 }

@@ -1,0 +1,170 @@
+//! Adversarial-input pinning for the hot-path kernels: NaN, ±inf and huge
+//! magnitudes flow through `tanh` → `clamp` → grid interpolation with
+//! *unspecified-looking* but in fact deterministic results, and kernel
+//! dispatch must never diverge on them.  This file pins the scalar
+//! behavior (against the native reference backend, bit for bit) and then
+//! asserts the SIMD path reproduces the identical bits, so `--kernel`
+//! can never change what a malicious or buggy client observes.
+//!
+//! The pinned semantics:
+//! * `±inf` and huge finite magnitudes saturate through `tanh` to ±1 and
+//!   land on the outer grid knots — outputs stay **finite**.
+//! * a `NaN` anywhere in a row poisons **every** output of that row (each
+//!   output accumulates a `NaN` contribution from that input's edge), for
+//!   both VQ and dense kernels.
+//! * rows without NaN are unaffected by a NaN elsewhere in the batch.
+
+use share_kan::coordinator::HeadWeights;
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{detect_simd, Backend, BackendConfig, BackendSpec, KernelMode};
+use share_kan::vq::{compress, Precision};
+
+const BUCKET: usize = 8;
+
+fn small_spec() -> KanSpec {
+    KanSpec { d_in: 6, d_hidden: 9, d_out: 4, grid_size: 7 }
+}
+
+/// One padded batch of adversarial rows (row-major `[BUCKET, d_in]`).
+/// Rows 0 and 5 contain NaN; every other row is NaN-free.
+fn adversarial_batch(d_in: usize) -> Vec<f32> {
+    let mixed = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1e30, -1e30, 0.0];
+    let mut x = Vec::with_capacity(BUCKET * d_in);
+    for row in 0..BUCKET {
+        for i in 0..d_in {
+            x.push(match row {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => 1e30,
+                4 => -1e30,
+                5 => mixed[i % mixed.len()],
+                6 => f32::MIN_POSITIVE * if i % 2 == 0 { 1.0 } else { -1.0 },
+                _ => 0.0,
+            });
+        }
+    }
+    x
+}
+
+fn nan_rows() -> [bool; BUCKET] {
+    [true, false, false, false, false, true, false, false]
+}
+
+/// Scalar arena output == native reference output, bit for bit, plus the
+/// pinned NaN/finiteness semantics.  Returns the pinned scalar scores.
+fn pin_scalar_behavior(head: &HeadWeights) -> Vec<f32> {
+    let spec = BackendSpec::for_head(head)
+        .with_buckets(&[1, BUCKET])
+        .with_kernel(KernelMode::Scalar);
+    let d_in = spec.kan.d_in;
+    let d_out = spec.kan.d_out;
+    let mut native = BackendConfig::Native(spec.clone()).build().unwrap();
+    let mut arena = BackendConfig::Arena(spec).build().unwrap();
+    native.register_head("h", head).unwrap();
+    arena.register_head("h", head).unwrap();
+
+    let x = adversarial_batch(d_in);
+    let want = native.execute("h", &x, BUCKET).unwrap();
+    let got = arena.execute("h", &x, BUCKET).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), w.to_bits(),
+                   "elem {i}: scalar arena {a} != native reference {w}");
+    }
+    for (row, poisoned) in nan_rows().iter().enumerate() {
+        let orow = &got[row * d_out..(row + 1) * d_out];
+        if *poisoned {
+            assert!(orow.iter().all(|v| v.is_nan()),
+                    "row {row} holds NaN inputs; every output must be NaN: {orow:?}");
+        } else {
+            assert!(orow.iter().all(|v| v.is_finite()),
+                    "row {row} is NaN-free (±inf/huge saturate via tanh); \
+                     outputs must be finite: {orow:?}");
+        }
+    }
+    got
+}
+
+/// Forced-SIMD arena output must match the pinned scalar bits exactly —
+/// including NaN payloads — so dispatch can never diverge on adversarial
+/// inputs.  No-op on hosts without a SIMD tier.
+fn assert_simd_matches(head: &HeadWeights, scalar_scores: &[f32]) {
+    if detect_simd().is_none() {
+        return;
+    }
+    let spec = BackendSpec::for_head(head)
+        .with_buckets(&[1, BUCKET])
+        .with_kernel(KernelMode::Simd);
+    let d_in = spec.kan.d_in;
+    let mut arena = BackendConfig::Arena(spec).build().unwrap();
+    arena.register_head("h", head).unwrap();
+    let x = adversarial_batch(d_in);
+    let got = arena.execute("h", &x, BUCKET).unwrap();
+    assert_eq!(got.len(), scalar_scores.len());
+    for (i, (a, w)) in got.iter().zip(scalar_scores).enumerate() {
+        assert_eq!(a.to_bits(), w.to_bits(),
+                   "elem {i}: simd {a} != pinned scalar {w} (bits {:#010x} vs {:#010x})",
+                   a.to_bits(), w.to_bits());
+    }
+}
+
+#[test]
+fn vq_fp32_edge_cases_pinned_and_dispatch_invariant() {
+    let spec = small_spec();
+    let ck = synthetic_dense(&spec, 21);
+    let vq_ck = compress(&ck, &spec, 16, Precision::Fp32, 42).unwrap().to_checkpoint();
+    let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
+    let pinned = pin_scalar_behavior(&head);
+    assert_simd_matches(&head, &pinned);
+}
+
+#[test]
+fn vq_int8_edge_cases_pinned_and_dispatch_invariant() {
+    let spec = small_spec();
+    let ck = synthetic_dense(&spec, 22);
+    let vq_ck = compress(&ck, &spec, 16, Precision::Int8, 42).unwrap().to_checkpoint();
+    let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
+    let pinned = pin_scalar_behavior(&head);
+    assert_simd_matches(&head, &pinned);
+}
+
+#[test]
+fn dense_edge_cases_pinned_and_dispatch_invariant() {
+    let spec = small_spec();
+    let head = HeadWeights::from_checkpoint(&synthetic_dense(&spec, 23)).unwrap();
+    let pinned = pin_scalar_behavior(&head);
+    assert_simd_matches(&head, &pinned);
+}
+
+#[test]
+fn nan_free_rows_are_identical_with_and_without_adversarial_neighbors() {
+    // a NaN row must not leak into other rows of the same padded batch
+    let spec = small_spec();
+    let ck = synthetic_dense(&spec, 24);
+    let vq_ck = compress(&ck, &spec, 16, Precision::Fp32, 42).unwrap().to_checkpoint();
+    let head = HeadWeights::from_checkpoint(&vq_ck).unwrap();
+    let bspec = BackendSpec::for_head(&head)
+        .with_buckets(&[1, BUCKET])
+        .with_kernel(KernelMode::Scalar);
+    let d_in = bspec.kan.d_in;
+    let d_out = bspec.kan.d_out;
+    let mut arena = BackendConfig::Arena(bspec).build().unwrap();
+    arena.register_head("h", &head).unwrap();
+
+    let mut rng = Pcg32::seeded(25);
+    let clean_row = rng.normal_vec(d_in, 0.0, 1.0);
+    // batch A: clean row surrounded by zeros; batch B: surrounded by NaN/inf
+    let mut a = vec![0.0f32; BUCKET * d_in];
+    let mut b = adversarial_batch(d_in);
+    a[7 * d_in..8 * d_in].copy_from_slice(&clean_row);
+    b[7 * d_in..8 * d_in].copy_from_slice(&clean_row);
+    let ra = arena.execute("h", &a, BUCKET).unwrap();
+    let rb = arena.execute("h", &b, BUCKET).unwrap();
+    for (i, (va, vb)) in ra[7 * d_out..8 * d_out].iter().zip(&rb[7 * d_out..8 * d_out]).enumerate()
+    {
+        assert_eq!(va.to_bits(), vb.to_bits(), "clean row elem {i}: {va} != {vb}");
+    }
+}

@@ -3,6 +3,8 @@
 //! load-bearing guarantee that a pooled deployment is **bitwise identical**
 //! to a single executor serving the same heads.
 
+mod common;
+
 use std::time::Duration;
 
 use share_kan::coordinator::{
@@ -68,6 +70,50 @@ fn pool_matches_single_executor_bitwise() {
     }
     pool.shutdown();
     single.shutdown();
+}
+
+#[test]
+fn pool_dispatches_forced_kernel_modes_bitwise_equal() {
+    // the pool construction path carries the kernel knob through
+    // BackendConfig::build on every shard: a forced-scalar pool and (where
+    // the host supports it) a forced-SIMD pool must agree bit for bit
+    let heads = vq_heads(3);
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) };
+    let modes = common::kernel_modes();
+    let pools: Vec<_> = modes
+        .iter()
+        .map(|&mode| {
+            ExecutorPool::start(PoolConfig {
+                backend: BackendConfig::Arena(backend_spec().with_kernel(mode)),
+                policy,
+                queue_capacity: 128,
+                num_shards: 2,
+            })
+            .unwrap()
+        })
+        .collect();
+    for p in &pools {
+        for (name, head) in &heads {
+            p.client.add_head(name, head.clone()).unwrap();
+        }
+    }
+    let mut rng = Pcg32::seeded(11);
+    for round in 0..12 {
+        let (name, _) = &heads[round % heads.len()];
+        let x = rng.normal_vec(6, 0.0, 1.0);
+        let want = pools[0].client.infer(name, x.clone()).unwrap();
+        for (p, mode) in pools.iter().zip(&modes).skip(1) {
+            let got = p.client.infer(name, x.clone()).unwrap();
+            assert_eq!(got.scores.len(), want.scores.len());
+            for (a, w) in got.scores.iter().zip(&want.scores) {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "round {round} head {name} mode {mode:?}: {a} != {w}");
+            }
+        }
+    }
+    for p in pools {
+        p.shutdown();
+    }
 }
 
 #[test]

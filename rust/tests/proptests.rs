@@ -66,6 +66,41 @@ fn prop_batcher_conservation_and_bounds() {
 }
 
 #[test]
+fn prop_bitpack_roundtrip_all_widths() {
+    // pack → unpack is the identity, and both random-access decoders
+    // (read_packed, decode_packed) agree with it at every element — over
+    // random widths 1..=32 and counts that leave unaligned tail bits
+    use share_kan::vq::bitpack::{decode_packed, pack, read_packed, unpack};
+    check("bitpack roundtrip", 0xB175, 150, |rng| {
+        let bits = 1 + rng.below(32);
+        let n = rng.below(200);
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let values: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+        let packed = pack(&values, bits);
+        prop_assert!(packed.len() == (n * bits + 7) / 8,
+                     "packed {} bytes for n={n} bits={bits}", packed.len());
+        let unpacked = unpack(&packed, bits, n);
+        prop_assert!(unpacked == values, "unpack mismatch at bits={bits} n={n}");
+        // random-access and streaming decode agree with the stream decode
+        if n > 0 {
+            let start = rng.below(n);
+            let len = 1 + rng.below(n - start);
+            let mut window = vec![0u32; len];
+            decode_packed(&packed, bits, start, &mut window);
+            for (k, &w) in window.iter().enumerate() {
+                let i = start + k;
+                prop_assert!(w == values[i],
+                             "decode_packed[{i}] = {w} != {} (bits={bits})", values[i]);
+                let r = read_packed(&packed, bits, i);
+                prop_assert!(r == values[i],
+                             "read_packed[{i}] = {r} != {} (bits={bits})", values[i]);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_memplan_no_overlap_any_shape() {
     check("memplan validity", 0x9127, 150, |rng| {
         let spec = KanSpec {
