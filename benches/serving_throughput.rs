@@ -4,7 +4,10 @@
 //! executor against the sharded executor pool, plus a **family** workload
 //! comparing per-head private arenas against the shared-codebook family
 //! arena (paper §6) — including the byte accounting (marginal vs private
-//! head cost) and a memsim residency trace of the shared region.
+//! head cost) and a memsim residency trace of the shared region — plus a
+//! **placement** workload comparing hash spread against family
+//! co-location (total resident bytes + throughput, single- and
+//! multi-family pools through the `serving::DeploymentSpec` API).
 //!
 //! Results are printed AND written machine-readable to `BENCH_serving.json`
 //! so the perf trajectory is tracked across PRs.
@@ -15,8 +18,8 @@ use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
 use share_kan::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, InferResponse,
-    PoolConfig,
+    BackendKind, BatchPolicy, Coordinator, CoordinatorConfig, DeploymentSpec, ExecutorPool,
+    HeadWeights, InferResponse, Placement, PoolConfig,
 };
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
@@ -207,10 +210,11 @@ fn main() {
         policy,
         queue_capacity: 4096,
         num_shards: shards,
+        placement: Placement::Hash,
     })
     .unwrap();
     for (name, head) in head_names.iter().zip(&multi_heads) {
-        pool.client.add_head(name, head.clone()).unwrap();
+        pool.client.register_head(name, None, head.clone()).unwrap();
     }
     let pool_req_s = drive(&Client::Pool(pool.client.clone()), &head_names,
                            spec.d_in, pool_requests, threads);
@@ -337,6 +341,114 @@ fn main() {
         ("l2_hit_rate", Json::num(residency.stats.hit_rate())),
         ("requested_bytes", Json::num(residency.requested_bytes as f64)),
     ]));
+
+    // ---- placement workload: hash spread vs family co-location ----------
+    // (a) one family on a 4-shard family-arena pool: hash materializes the
+    //     shared codebook region on ~every shard, co-location on
+    //     ceil(heads/budget) shards — same bits, fewer resident bytes
+    let place_shards = 4usize;
+    let budget = 4usize;
+    println!("{:-<100}", "");
+    println!(
+        "placement workload: {fam_heads} int8 universal-basis heads, {place_shards} shards, \
+         hash vs family-co-locate:{budget}"
+    );
+    for (label, placement) in [
+        ("hash            ", Placement::Hash),
+        ("family-co-locate", Placement::FamilyCoLocate { heads_per_shard: budget }),
+    ] {
+        let mut dspec = DeploymentSpec::new(BackendKind::FamilyArena)
+            .with_shards(place_shards)
+            .with_placement(placement)
+            .with_max_batch(policy.max_batch)
+            .with_max_wait(policy.max_wait);
+        let members: Vec<(String, HeadWeights)> = fam_names
+            .iter()
+            .cloned()
+            .zip(fam_weights.iter().cloned())
+            .collect();
+        dspec = dspec.family("fam", members);
+        let dep = dspec.deploy().unwrap();
+        let report = dep.report();
+        let req_s = drive(&Client::Pool(dep.client().clone()), &fam_names, spec.d_in,
+                          fam_requests, threads);
+        let fam_row = &report.families[0];
+        println!(
+            "{label}  {req_s:>8.0} req/s   shared region on {} of {place_shards} shards   \
+             resident {} B",
+            fam_row.shards_occupied, report.resident_bytes
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::str(format!("placement/one_family/{}", label.trim()))),
+            ("req_per_s", Json::num(req_s)),
+            ("heads", Json::num(fam_heads as f64)),
+            ("shards", Json::num(place_shards as f64)),
+            ("shards_occupied", Json::num(fam_row.shards_occupied as f64)),
+            ("shared_bytes", Json::num(fam_row.shared_bytes as f64)),
+            ("resident_bytes", Json::num(report.resident_bytes as f64)),
+        ]));
+        dep.shutdown();
+    }
+
+    // (b) MULTI-family pool: under hash the two universal bases collide on
+    //     shards, which the family backend rejects outright — so the hash
+    //     row serves private per-head arenas (today's only deployable
+    //     shape), while co-location keeps the families on disjoint shards
+    //     and serves both from shared codebooks
+    let fam_b_cks: Vec<Checkpoint> = (0..fam_heads)
+        .map(|i| synthetic_dense(&spec, 900 + i as u64))
+        .collect();
+    let fam_b_refs: Vec<&Checkpoint> = fam_b_cks.iter().collect();
+    let fam_b_weights: Vec<HeadWeights> = compress_family(&fam_b_refs, &spec, k,
+                                                          Precision::Int8, 13)
+        .unwrap()
+        .iter()
+        .map(|c| HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        .collect();
+    let fam_b_names: Vec<String> = (0..fam_heads).map(|i| format!("gam{i}")).collect();
+    let all_names: Vec<String> =
+        fam_names.iter().chain(fam_b_names.iter()).cloned().collect();
+    println!(
+        "multi-family: 2 x {fam_heads} heads — hash must fall back to private arenas \
+         (one universal basis per shard), co-locate serves both families shared"
+    );
+    for (label, backend, placement) in [
+        ("hash/private-arenas   ", BackendKind::Arena, Placement::Hash),
+        ("co-locate/family-arena", BackendKind::FamilyArena,
+         Placement::FamilyCoLocate { heads_per_shard: budget }),
+    ] {
+        let a: Vec<(String, HeadWeights)> = fam_names
+            .iter()
+            .cloned()
+            .zip(fam_weights.iter().cloned())
+            .collect();
+        let b: Vec<(String, HeadWeights)> = fam_b_names
+            .iter()
+            .cloned()
+            .zip(fam_b_weights.iter().cloned())
+            .collect();
+        let dep = DeploymentSpec::new(backend)
+            .with_shards(place_shards)
+            .with_placement(placement)
+            .with_max_batch(policy.max_batch)
+            .with_max_wait(policy.max_wait)
+            .family("fam", a)
+            .family("gam", b)
+            .deploy()
+            .unwrap();
+        let report = dep.report();
+        let req_s = drive(&Client::Pool(dep.client().clone()), &all_names, spec.d_in,
+                          fam_requests, threads);
+        println!("{label}  {req_s:>8.0} req/s   resident {} B", report.resident_bytes);
+        results.push(Json::obj(vec![
+            ("name", Json::str(format!("placement/multi_family/{}", label.trim()))),
+            ("req_per_s", Json::num(req_s)),
+            ("heads", Json::num(2.0 * fam_heads as f64)),
+            ("shards", Json::num(place_shards as f64)),
+            ("resident_bytes", Json::num(report.resident_bytes as f64)),
+        ]));
+        dep.shutdown();
+    }
 
     write_results("BENCH_serving.json", "serving_throughput", results).unwrap();
     println!("wrote BENCH_serving.json");

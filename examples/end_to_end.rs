@@ -12,7 +12,7 @@
 
 use std::time::Duration;
 
-use share_kan::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, HeadWeights};
+use share_kan::coordinator::{BackendKind, DeploymentSpec, HeadWeights};
 use share_kan::data::rng::Pcg32;
 use share_kan::data::standard_splits;
 use share_kan::eval::mean_average_precision;
@@ -20,7 +20,6 @@ use share_kan::kan::checkpoint::synthetic_dense;
 use share_kan::kan::eval::DenseModel;
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memsim::{analyze, CacheConfig, DeviceModel};
-use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
 fn main() -> anyhow::Result<()> {
@@ -68,14 +67,13 @@ fn main() -> anyhow::Result<()> {
     let coco_int8 = map_of(&int8.to_eval_model().forward(&data.coco.x, data.coco.n), &data.coco);
     println!("    COCO-shift: dense {coco_dense:.2}% vs int8 {coco_int8:.2}%");
 
-    // ---- 4. serving on the native backend ----
-    let handle = Coordinator::start(CoordinatorConfig {
-        backend: BackendConfig::Native(BackendSpec::default()),
-        policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
-        queue_capacity: 4096,
-    })?;
-    let client = handle.client.clone();
-    client.add_head("int8", HeadWeights::from_checkpoint(&int8_ck)?)?;
+    // ---- 4. serving on the native backend (declarative deployment) ----
+    let dep = DeploymentSpec::new(BackendKind::Native)
+        .with_max_batch(128)
+        .with_max_wait(Duration::from_millis(1))
+        .head("int8", HeadWeights::from_checkpoint(&int8_ck)?)
+        .deploy()?;
+    let client = dep.client().clone();
     let n_req = 2000usize;
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
@@ -104,13 +102,13 @@ fn main() -> anyhow::Result<()> {
         j.join().unwrap();
     }
     let dt = t0.elapsed();
-    let m = client.metrics();
+    let m = client.aggregated_metrics();
     println!("\n[4] serving: {n_req} requests in {dt:?} -> {:.0} req/s",
              n_req as f64 / dt.as_secs_f64());
     println!("    latency {}", m.latency.summary());
     println!("    mean batch {:.1}, padding {:.1}%",
              m.counters.mean_batch_size(), 100.0 * m.counters.padding_fraction());
-    handle.shutdown();
+    dep.shutdown();
 
     // ---- 5. paper-scale cache-residency analysis ----
     let a = analyze(&KanSpec::paper_scale(), &VqSpec { codebook_size: 65536 },

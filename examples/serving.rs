@@ -1,20 +1,21 @@
 //! Multi-head hot-swap serving demo (paper §1 "Deployment Context" and
 //! §6.2 "Scalable Mixtures of Experts"): many lightweight compressed heads
 //! share one serving stack; heads register and retire while traffic flows.
-//! Serves through the **sharded executor pool** on the **arena backend** —
-//! every head's tables live in one LUTHAM-planned 256-byte-aligned arena
-//! (bit-packed indices, Int8 codebooks/gains) on its owning shard, and the
-//! per-batch hot path allocates nothing.  No artifacts required.
+//! Deployed through the declarative **`serving::DeploymentSpec`** API onto
+//! the sharded executor pool with the **arena backend** — every head's
+//! tables live in one LUTHAM-planned 256-byte-aligned arena (bit-packed
+//! indices, Int8 codebooks/gains) on the shard the placement policy
+//! assigned, and the per-batch hot path allocates nothing.  No artifacts
+//! required.
 //!
 //! Run: cargo run --release --example serving
 
 use std::time::Duration;
 
-use share_kan::coordinator::{BatchPolicy, ExecutorPool, HeadWeights, PoolConfig};
+use share_kan::coordinator::{BackendKind, DeploymentSpec, HeadWeights};
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::synthetic_dense;
 use share_kan::kan::spec::{KanSpec, VqSpec};
-use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::vq::{compress, Precision};
 
 fn main() -> anyhow::Result<()> {
@@ -36,18 +37,19 @@ fn main() -> anyhow::Result<()> {
     println!("{n_heads} heads, {} bytes total ({} bytes/head marginal cost)",
              total_bytes, total_bytes / n_heads);
 
-    let pool = ExecutorPool::start(PoolConfig {
-        backend: BackendConfig::Arena(BackendSpec::default()),
-        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
-        queue_capacity: 2048,
-        num_shards: n_shards,
-    })?;
-    let client = pool.client.clone();
+    // one declarative spec instead of pool wiring: backend + shards +
+    // batching + heads in a single validated value
+    let mut deploy_spec = DeploymentSpec::new(BackendKind::Arena)
+        .with_shards(n_shards)
+        .with_max_batch(32)
+        .with_max_wait(Duration::from_millis(1))
+        .with_queue_capacity(2048);
     for (i, ck) in head_cks.iter().enumerate() {
-        let name = format!("task{i}");
-        client.add_head(&name, HeadWeights::from_checkpoint(ck)?)?;
-        println!("  {name} -> shard {} (deterministic routing)", client.shard_for(&name));
+        deploy_spec = deploy_spec.head(&format!("task{i}"), HeadWeights::from_checkpoint(ck)?);
     }
+    let mut dep = deploy_spec.deploy()?;
+    println!("{}", dep.report().summary());
+    let client = dep.client().clone();
     println!("all heads registered across {n_shards} arena-backend shards; driving mixed traffic...");
 
     // mixed traffic across heads from 3 client threads
@@ -69,12 +71,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     // hot-swap while traffic flows: retire task5, register task6 — each
-    // operation only touches the owning shard
+    // operation only touches the owning shard, and the routing table makes
+    // the remove/re-add sequence well-defined under any placement policy
     std::thread::sleep(Duration::from_millis(300));
-    client.remove_head("task5")?;
-    client.add_head("task6", HeadWeights::from_checkpoint(&head_cks[0])?)?;
-    println!("hot-swapped task5 -> task6 mid-traffic (shards {} -> {})",
-             client.shard_for("task5"), client.shard_for("task6"));
+    dep.remove_head("task5")?;
+    let swapped_to = dep.add_head("task6", None, HeadWeights::from_checkpoint(&head_cks[0])?)?;
+    println!("hot-swapped task5 -> task6 mid-traffic (task6 placed on shard {swapped_to})");
 
     let served: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
     let m = client.aggregated_metrics();
@@ -85,6 +87,6 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Pcg32::seeded(99);
     assert!(client.infer("task6", rng.normal_vec(spec.d_in, 0.0, 1.0)).is_ok());
     println!("serving demo OK");
-    pool.shutdown();
+    dep.shutdown();
     Ok(())
 }

@@ -140,6 +140,16 @@ impl Counters {
         }
     }
 
+    /// Live queue depth: requests admitted but not yet answered
+    /// (`requests - rejected - responses`, saturating).  What the
+    /// `LeastLoaded` placement policy balances new registrations by.
+    pub fn inflight(&self) -> u64 {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let done = self.responses.load(Ordering::Relaxed)
+            + self.rejected.load(Ordering::Relaxed);
+        requests.saturating_sub(done)
+    }
+
     /// Mean live rows per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);

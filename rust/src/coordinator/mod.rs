@@ -1,6 +1,8 @@
 //! L3 serving coordinator (the paper's deployment story): bounded admission,
 //! dynamic batching to AOT buckets, hot-swappable compressed heads, metrics,
-//! and a sharded executor pool ([`pool`]) for horizontal scale-out.
+//! a sharded executor pool ([`pool`]) for horizontal scale-out, and the
+//! declarative deployment API ([`serving`]: [`DeploymentSpec`] +
+//! pluggable shard-placement policies).
 
 pub mod batcher;
 pub mod heads;
@@ -8,13 +10,18 @@ pub mod metrics;
 pub mod pool;
 pub mod request;
 pub mod server;
+pub mod serving;
 pub mod tcp;
 pub mod workload;
 
 pub use batcher::{Batch, BatchPolicy, PendingQueue};
 pub use heads::HeadWeights;
 pub use metrics::{Counters, LatencyHistogram};
-pub use pool::{ExecutorPool, PoolConfig, PoolHandle};
+pub use pool::{ExecutorPool, HeadPlacement, PoolConfig, PoolHandle, PoolMetrics};
 pub use request::{InferRequest, InferResponse};
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
-pub use tcp::{TcpClient, TcpServer};
+pub use serving::{
+    BackendKind, Deployment, DeploymentReport, DeploymentSpec, FamilyCoLocate, FamilyResidency,
+    HashPlacement, LeastLoaded, Placement, PlacementPolicy, ShardLoad,
+};
+pub use tcp::{ClientError, TcpClient, TcpServer};

@@ -4,26 +4,37 @@
 //!
 //! Each shard is a full [`Coordinator`] — its own executor thread, its own
 //! backend instance (constructed from a cloned [`BackendConfig`]), its own
-//! admission queue and batcher.  Heads are routed to shards by a
-//! **deterministic** FNV-1a hash of the head name, so every client handle
-//! (and every restart with the same shard count) agrees on head placement;
-//! hot-swap (`add_head`/`remove_head`) is shard-aware and only touches the
-//! owning executor.  Requests inherit the owning shard's batching and
-//! backpressure; metrics aggregate across shards on demand.
+//! admission queue and batcher.  Head→shard placement is decided **once at
+//! registration** by a pluggable [`PlacementPolicy`] (default:
+//! [`super::serving::HashPlacement`], FNV-1a over the head name — bitwise
+//! identical to the pool's historical routing) and recorded in a routing
+//! table shared by every client handle; request routing is a table lookup,
+//! never a per-request hash.  That is what makes placement policies
+//! hot-swap-safe: `remove_head` drops the table entry, and a later
+//! re-registration is placed afresh by whatever policy the pool runs.
+//!
+//! Requests inherit the owning shard's batching and backpressure; metrics
+//! aggregate across shards on demand ([`ExecutorPool::aggregated_metrics`])
+//! or with a per-shard breakdown ([`ExecutorPool::metrics_breakdown`]).
 //!
 //! Because a head lives on exactly one shard, a pooled deployment is
-//! **bitwise identical** to a single executor serving the same heads
-//! (pinned by `rust/tests/pool_integration.rs`) — sharding changes only
-//! how much traffic the pool sustains, never what it computes.
+//! **bitwise identical** to a single executor serving the same heads under
+//! *any* placement policy (pinned by `rust/tests/pool_integration.rs` and
+//! `rust/tests/placement.rs`) — placement changes only how much traffic the
+//! pool sustains and how many times shared regions are materialized, never
+//! what it computes.
 
 use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
 
 use super::batcher::BatchPolicy;
 use super::heads::HeadWeights;
-use super::metrics::{Counters, LatencyHistogram};
 use super::request::InferResponse;
 use super::server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
+use super::serving::placement::{hash_shard, Placement, PlacementPolicy, ShardLoad};
 use crate::runtime::BackendConfig;
 
 /// Configuration for an [`ExecutorPool`] (one entry per knob, applied to
@@ -37,6 +48,9 @@ pub struct PoolConfig {
     pub queue_capacity: usize,
     /// number of executor shards to start
     pub num_shards: usize,
+    /// shard-placement policy new head registrations are decided by
+    /// (default: [`Placement::Hash`], the historical FNV-1a routing)
+    pub placement: Placement,
 }
 
 impl Default for PoolConfig {
@@ -46,14 +60,51 @@ impl Default for PoolConfig {
             policy: BatchPolicy::default(),
             queue_capacity: 1024,
             num_shards: 4,
+            placement: Placement::Hash,
         }
     }
 }
 
-/// Client handle over the shard set; cloneable across threads.
+/// Routing-table entry: where a registered head lives.
+#[derive(Debug, Clone)]
+struct RouteEntry {
+    /// owning shard; `None` means the head is replicated on every shard
+    /// and requests round-robin across them
+    shard: Option<usize>,
+    /// family tag the head was registered under, if any
+    family: Option<String>,
+}
+
+/// One head's placement, as recorded in the pool routing table (snapshot
+/// for reports, tests and the `--deployment` accounting echo).
+#[derive(Debug, Clone)]
+pub struct HeadPlacement {
+    /// Head name requests route by.
+    pub head: String,
+    /// Owning shard; `None` for replicated heads (one copy per shard).
+    pub shard: Option<usize>,
+    /// Family the head was registered under, if any.
+    pub family: Option<String>,
+}
+
+/// Merged + per-shard metrics snapshot (see
+/// [`ExecutorPool::metrics_breakdown`]).
+pub struct PoolMetrics {
+    /// All shards folded together (histograms merged sample-exactly,
+    /// counters summed).
+    pub merged: Metrics,
+    /// One snapshot per shard, indexed by shard id.
+    pub per_shard: Vec<Metrics>,
+}
+
+/// Client handle over the shard set; cloneable across threads.  All clones
+/// share one routing table, so placement decisions are visible everywhere.
 #[derive(Clone)]
 pub struct ExecutorPool {
     shards: Vec<Coordinator>,
+    placement: Arc<dyn PlacementPolicy>,
+    routing: Arc<RwLock<HashMap<String, RouteEntry>>>,
+    round_robin: Arc<AtomicUsize>,
 }
 
 /// Owner handle that joins every shard executor on drop.
@@ -63,21 +114,19 @@ pub struct PoolHandle {
     handles: Vec<CoordinatorHandle>,
 }
 
-/// FNV-1a over the head name: stable across processes and handles, so
-/// head→shard placement is a pure function of (name, num_shards).
-fn fnv1a(name: &str) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
 impl ExecutorPool {
-    /// Start `num_shards` executor shards.  Fails (cleanly shutting down
-    /// the shards already started) if any backend fails to construct.
+    /// Start `num_shards` executor shards with the configured placement
+    /// policy.  Fails (cleanly shutting down the shards already started)
+    /// if any backend fails to construct.
     pub fn start(cfg: PoolConfig) -> Result<PoolHandle> {
+        let policy = cfg.placement.build();
+        Self::start_with_policy(cfg, policy)
+    }
+
+    /// Start the pool with a caller-supplied [`PlacementPolicy`]
+    /// implementation (the extension seam; `cfg.placement` is ignored).
+    pub fn start_with_policy(cfg: PoolConfig, placement: Arc<dyn PlacementPolicy>)
+                             -> Result<PoolHandle> {
         anyhow::ensure!(cfg.num_shards >= 1, "pool needs at least one shard");
         let mut handles = Vec::with_capacity(cfg.num_shards);
         let mut shards = Vec::with_capacity(cfg.num_shards);
@@ -90,7 +139,13 @@ impl ExecutorPool {
             shards.push(handle.client.clone());
             handles.push(handle);
         }
-        Ok(PoolHandle { client: ExecutorPool { shards }, handles })
+        let client = ExecutorPool {
+            shards,
+            placement,
+            routing: Arc::new(RwLock::new(HashMap::new())),
+            round_robin: Arc::new(AtomicUsize::new(0)),
+        };
+        Ok(PoolHandle { client, handles })
     }
 
     /// Number of executor shards behind this handle.
@@ -98,9 +153,29 @@ impl ExecutorPool {
         self.shards.len()
     }
 
-    /// The shard that owns `head` (deterministic routing).
+    /// Name of the placement policy this pool registers heads under.
+    pub fn placement_name(&self) -> &'static str {
+        self.placement.name()
+    }
+
+    /// The shard requests for `head` currently route to: the routing-table
+    /// entry for placed heads, the FNV-1a [`hash_shard`] fallback for
+    /// heads never registered through this pool.  For replicated heads
+    /// this reports the shard the *next* round-robin submission would hit.
     pub fn shard_for(&self, head: &str) -> usize {
-        (fnv1a(head) % self.shards.len() as u64) as usize
+        match self.read_routing().get(head) {
+            Some(RouteEntry { shard: Some(s), .. }) => *s,
+            Some(RouteEntry { shard: None, .. }) => {
+                self.round_robin.load(Ordering::Relaxed) % self.shards.len()
+            }
+            None => hash_shard(head, self.shards.len()),
+        }
+    }
+
+    /// The owning shard recorded in the routing table, if `head` is
+    /// registered and not replicated.
+    pub fn route_of(&self, head: &str) -> Option<usize> {
+        self.read_routing().get(head).and_then(|e| e.shard)
     }
 
     /// Direct access to one shard's coordinator (tests, per-shard metrics).
@@ -108,63 +183,287 @@ impl ExecutorPool {
         &self.shards[i]
     }
 
-    /// Register (or hot-swap replace) a head on its owning shard.
-    pub fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
-        self.shards[self.shard_for(name)].add_head(name, weights)
+    /// Register (or hot-swap replace) a head, placing it by this pool's
+    /// [`PlacementPolicy`]; returns the owning shard.
+    ///
+    /// Placement happens **once**: re-registering an existing head
+    /// replaces it in place on its recorded shard (hot-swap never migrates
+    /// live traffic); `remove_head` + `register_head` places afresh.
+    /// `family` tags the head for family-aware policies and for the
+    /// per-family accounting in deployment reports.
+    pub fn register_head(&self, name: &str, family: Option<&str>, weights: HeadWeights)
+                         -> Result<usize> {
+        // Phase 1 — decide and RESERVE under the table lock, so concurrent
+        // registrations of the same name agree on the shard.  The lock is
+        // NOT held across the blocking shard call below: materializing a
+        // large head must never stall request routing on the other shards.
+        let (shard, reserved) = {
+            let mut routing = self.write_routing();
+            match routing.get(name) {
+                Some(RouteEntry { shard: Some(s), .. }) => (*s, false),
+                Some(RouteEntry { shard: None, .. }) => anyhow::bail!(
+                    "head '{name}' is replicated on every shard; remove it before \
+                     re-registering"
+                ),
+                None => {
+                    let loads = self.shard_loads(&routing, family);
+                    let s = self.placement.place(name, family, &loads);
+                    anyhow::ensure!(
+                        s < self.shards.len(),
+                        "placement policy '{}' returned shard {s} for '{name}' but the pool \
+                         has {} shards",
+                        self.placement.name(),
+                        self.shards.len()
+                    );
+                    // reserve now: requests racing the registration route to
+                    // the owning shard (and get a clean "unknown head" until
+                    // the head is live — exactly the legacy hash behavior)
+                    routing.insert(
+                        name.to_string(),
+                        RouteEntry { shard: Some(s), family: family.map(str::to_string) },
+                    );
+                    (s, true)
+                }
+            }
+        };
+        // Phase 2 — blocking registration on the owning shard, lock released.
+        match self.shards[shard].add_head(name, weights) {
+            Ok(()) => {
+                // hot-swap may re-tag the family; commit the final entry
+                let mut routing = self.write_routing();
+                routing.insert(
+                    name.to_string(),
+                    RouteEntry { shard: Some(shard), family: family.map(str::to_string) },
+                );
+                Ok(shard)
+            }
+            Err(e) => {
+                if reserved {
+                    // roll back our reservation (only if it is still ours)
+                    let mut routing = self.write_routing();
+                    if matches!(routing.get(name),
+                                Some(RouteEntry { shard: Some(s), .. }) if *s == shard)
+                    {
+                        routing.remove(name);
+                    }
+                }
+                Err(e)
+            }
+        }
     }
 
-    /// Register every head of a **family** on its owning shard (FNV-1a
-    /// routing unchanged).  Behind a family backend
-    /// (`BackendConfig::FamilyArena`) the first head landing on a shard
-    /// materializes the family's shared codebook arena there — i.e. the
-    /// family registers **once per shard** — and every subsequent head on
-    /// that shard hot-adds at marginal (bit-packed indices + scalars)
-    /// cost.  Returns the number of distinct shards the family now spans.
+    /// Register every head of a **family** under the family tag, letting
+    /// the placement policy co-locate (or spread) them.  Behind a family
+    /// backend ([`BackendConfig::FamilyArena`]) the first head landing on
+    /// a shard materializes the family's shared codebook arena there, and
+    /// every subsequent head on that shard hot-adds at marginal
+    /// (bit-packed indices + scalars) cost.  Returns the number of
+    /// distinct shards now hosting the family.
     ///
     /// Registration stops at the first failing head (earlier heads stay
-    /// registered, exactly as individual [`ExecutorPool::add_head`] calls
-    /// would leave them).
-    pub fn add_family(&self, heads: &[(String, HeadWeights)]) -> Result<usize> {
-        let mut touched = vec![false; self.shards.len()];
+    /// registered, exactly as individual [`ExecutorPool::register_head`]
+    /// calls would leave them).
+    pub fn register_family(&self, family: &str, heads: &[(String, HeadWeights)])
+                           -> Result<usize> {
         for (name, weights) in heads {
-            let shard = self.shard_for(name);
-            self.shards[shard].add_head(name, weights.clone())?;
-            touched[shard] = true;
+            self.register_head(name, Some(family), weights.clone())?;
         }
-        Ok(touched.iter().filter(|&&t| t).count())
+        Ok(self.shards_hosting_family(family))
     }
 
-    /// Unregister a head from its owning shard; returns whether it existed.
+    /// Register one head on **every** shard; requests for it round-robin
+    /// across shards (the single-head multi-shard deployment shape, where
+    /// name routing would leave all but one shard idle).
+    pub fn register_replicated(&self, name: &str, weights: HeadWeights) -> Result<()> {
+        // reserve under the lock (round-robin routing starts immediately;
+        // shards answer "unknown head" until their copy is live), then
+        // register copies with the lock released
+        {
+            let mut routing = self.write_routing();
+            if let Some(RouteEntry { shard: Some(_), .. }) = routing.get(name) {
+                anyhow::bail!(
+                    "head '{name}' is placed on one shard; remove it before replicating"
+                );
+            }
+            routing.insert(name.to_string(), RouteEntry { shard: None, family: None });
+        }
+        for (i, shard) in self.shards.iter().enumerate() {
+            if let Err(e) = shard.add_head(name, weights.clone()) {
+                // all-shards is this method's invariant: roll back the
+                // copies already registered and the routing entry, so a
+                // partial replication never leaks unremovable arena copies
+                for earlier in &self.shards[..i] {
+                    let _ = earlier.remove_head(name);
+                }
+                self.write_routing().remove(name);
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Register (or hot-swap replace) a head on its FNV-1a-hashed shard.
+    #[deprecated(note = "use `register_head` (placement-policy aware) or deploy through \
+                         `coordinator::serving::DeploymentSpec`")]
+    pub fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
+        self.register_head(name, None, weights).map(|_| ())
+    }
+
+    /// Register every head of a family without a family tag of its own.
+    #[deprecated(note = "use `register_family` or `DeploymentSpec::family` so placement \
+                         policies see the family structure")]
+    pub fn add_family(&self, heads: &[(String, HeadWeights)]) -> Result<usize> {
+        self.register_family("family", heads)
+    }
+
+    /// Unregister a head; returns whether it existed.  Replicated heads
+    /// are removed from every shard; heads never registered through this
+    /// pool fall back to their hash shard (legacy behavior).
     pub fn remove_head(&self, name: &str) -> Result<bool> {
-        self.shards[self.shard_for(name)].remove_head(name)
+        // detach from routing first (lock released before the shard RPCs,
+        // which block on the executors)
+        let entry = self.write_routing().remove(name);
+        match entry {
+            Some(RouteEntry { shard: Some(s), .. }) => self.shards[s].remove_head(name),
+            Some(RouteEntry { shard: None, .. }) => {
+                let mut existed = false;
+                for shard in &self.shards {
+                    existed |= shard.remove_head(name)?;
+                }
+                Ok(existed)
+            }
+            None => self.shards[hash_shard(name, self.shards.len())].remove_head(name),
+        }
     }
 
     /// Submit a request to the owning shard; per-shard backpressure.
     pub fn try_submit(&self, head: &str, features: Vec<f32>)
                       -> Result<Receiver<InferResponse>> {
-        self.shards[self.shard_for(head)].try_submit(head, features)
+        self.shards[self.route(head)].try_submit(head, features)
     }
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
-        self.shards[self.shard_for(head)].infer(head, features)
+        self.shards[self.route(head)].infer(head, features)
     }
 
     /// Aggregate metrics across all shards into a fresh snapshot
     /// (histograms merged sample-exactly, counters summed).
     pub fn aggregated_metrics(&self) -> Metrics {
-        let agg = Metrics {
-            latency: LatencyHistogram::new(),
-            exec_latency: LatencyHistogram::new(),
-            counters: Counters::default(),
-        };
+        let agg = Metrics::new();
         for shard in &self.shards {
-            let m = shard.metrics();
-            agg.latency.merge_from(&m.latency);
-            agg.exec_latency.merge_from(&m.exec_latency);
-            agg.counters.merge_from(&m.counters);
+            agg.merge_from(shard.metrics());
         }
         agg
+    }
+
+    /// Merged metrics **plus** the per-shard breakdown the merge folds —
+    /// what load-aware placement decides over, and what the
+    /// `serve --deployment` accounting echo prints.  The per-shard sums
+    /// equal the merged view exactly (unit-tested below).
+    pub fn metrics_breakdown(&self) -> PoolMetrics {
+        let per_shard: Vec<Metrics> = self
+            .shards
+            .iter()
+            .map(|shard| {
+                let snap = Metrics::new();
+                snap.merge_from(shard.metrics());
+                snap
+            })
+            .collect();
+        let merged = Metrics::new();
+        for m in &per_shard {
+            merged.merge_from(m);
+        }
+        PoolMetrics { merged, per_shard }
+    }
+
+    /// Snapshot of the routing table, sorted by head name.
+    pub fn placements(&self) -> Vec<HeadPlacement> {
+        let routing = self.read_routing();
+        let mut out: Vec<HeadPlacement> = routing
+            .iter()
+            .map(|(head, e)| HeadPlacement {
+                head: head.clone(),
+                shard: e.shard,
+                family: e.family.clone(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.head.cmp(&b.head));
+        out
+    }
+
+    /// Number of distinct shards hosting heads tagged with `family` —
+    /// i.e. how many times that family's shared codebook region is
+    /// materialized under a family backend.
+    pub fn shards_hosting_family(&self, family: &str) -> usize {
+        let routing = self.read_routing();
+        let mut touched = vec![false; self.shards.len()];
+        for e in routing.values() {
+            if e.family.as_deref() == Some(family) {
+                if let Some(s) = e.shard {
+                    touched[s] = true;
+                }
+            }
+        }
+        touched.iter().filter(|&&t| t).count()
+    }
+
+    /// Submit-time shard resolution: routing-table lookup, round-robin for
+    /// replicated heads, hash fallback for unknown heads (which the owning
+    /// shard answers with a clean "unknown head" error).
+    fn route(&self, head: &str) -> usize {
+        match self.read_routing().get(head) {
+            Some(RouteEntry { shard: Some(s), .. }) => *s,
+            Some(RouteEntry { shard: None, .. }) => {
+                self.round_robin.fetch_add(1, Ordering::Relaxed) % self.shards.len()
+            }
+            None => hash_shard(head, self.shards.len()),
+        }
+    }
+
+    /// Per-shard load snapshot for the placement policy: head counts come
+    /// from the routing table (held locked by the caller), queue depth
+    /// from live shard counters.
+    fn shard_loads(&self, routing: &HashMap<String, RouteEntry>, family: Option<&str>)
+                   -> Vec<ShardLoad> {
+        let mut loads: Vec<ShardLoad> = (0..self.shards.len())
+            .map(|shard| ShardLoad {
+                shard,
+                heads: 0,
+                family_heads: 0,
+                foreign_family_heads: 0,
+                inflight: self.shards[shard].metrics().counters.inflight(),
+            })
+            .collect();
+        for e in routing.values() {
+            match e.shard {
+                Some(s) => {
+                    loads[s].heads += 1;
+                    if e.family.is_some() {
+                        if family.is_some() && e.family.as_deref() == family {
+                            loads[s].family_heads += 1;
+                        } else {
+                            loads[s].foreign_family_heads += 1;
+                        }
+                    }
+                }
+                None => {
+                    for l in loads.iter_mut() {
+                        l.heads += 1;
+                    }
+                }
+            }
+        }
+        loads
+    }
+
+    fn read_routing(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, RouteEntry>> {
+        self.routing.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write_routing(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, RouteEntry>> {
+        self.routing.write().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -182,35 +481,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn fnv1a_is_stable_and_spreads() {
-        // pinned values: routing must never change silently across PRs
-        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
-        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
-        // a family of head names should not all land on one shard
-        let shards = 4u64;
-        let mut seen = std::collections::HashSet::new();
-        for i in 0..32 {
-            seen.insert(fnv1a(&format!("task{i}")) % shards);
-        }
-        assert!(seen.len() > 1, "degenerate routing: {seen:?}");
-    }
-
-    #[test]
     fn zero_shards_rejected() {
         let cfg = PoolConfig { num_shards: 0, ..PoolConfig::default() };
         assert!(ExecutorPool::start(cfg).is_err());
     }
 
-    #[test]
-    fn add_family_routes_by_name_and_counts_shards() {
+    fn family_pool(num_shards: usize, placement: Placement)
+                   -> (PoolHandle, Vec<(String, HeadWeights)>, usize) {
         use crate::kan::checkpoint::synthetic_dense;
         use crate::kan::spec::KanSpec;
         use crate::runtime::BackendSpec;
         use crate::vq::Precision;
 
-        // four family heads sharing one universal codebook, served through
-        // a family-arena pool: routing must stay pure FNV-1a and every head
-        // must answer from its owning shard
         let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
         let k = 8;
         let cks: Vec<_> = (0..4).map(|i| synthetic_dense(&spec, 300 + i)).collect();
@@ -226,24 +508,108 @@ mod tests {
                  HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
             })
             .collect();
-
         let bspec = BackendSpec::for_head(&heads[0].1).with_buckets(&[1, 4]);
         let pool = ExecutorPool::start(PoolConfig {
             backend: BackendConfig::FamilyArena(bspec),
             policy: BatchPolicy::default(),
             queue_capacity: 64,
-            num_shards: 2,
+            num_shards,
+            placement,
         })
         .unwrap();
-        let shards_touched = pool.client.add_family(&heads).unwrap();
+        (pool, heads, spec.d_in)
+    }
+
+    #[test]
+    fn register_family_routes_by_hash_and_counts_shards() {
+        // four family heads sharing one universal codebook, served through
+        // a family-arena pool under the default hash policy: routing must
+        // stay pure FNV-1a and every head must answer from its owning shard
+        let (pool, heads, d_in) = family_pool(2, Placement::Hash);
+        let shards_touched = pool.client.register_family("demo", &heads).unwrap();
         assert!(shards_touched >= 1 && shards_touched <= 2);
+        assert_eq!(shards_touched, pool.client.shards_hosting_family("demo"));
         for (name, _) in &heads {
-            let resp = pool.client.infer(name, vec![0.1; spec.d_in]).unwrap();
-            assert_eq!(resp.scores.len(), spec.d_out);
-            // deterministic routing: the owning shard is a pure function
-            assert_eq!(pool.client.shard_for(name),
-                       (fnv1a(name) % 2) as usize);
+            let resp = pool.client.infer(name, vec![0.1; d_in]).unwrap();
+            assert_eq!(resp.scores.len(), 3);
+            // hash placement: the owning shard is a pure function of the name
+            assert_eq!(pool.client.shard_for(name), hash_shard(name, 2));
+            assert_eq!(pool.client.route_of(name), Some(hash_shard(name, 2)));
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn deprecated_add_head_matches_register_head_hash_placement() {
+        // the shim must keep routing bitwise-identical to the new path
+        let (pool, heads, d_in) = family_pool(2, Placement::Hash);
+        let (name, w) = &heads[0];
+        #[allow(deprecated)]
+        pool.client.add_head(name, w.clone()).unwrap();
+        assert_eq!(pool.client.route_of(name), Some(hash_shard(name, 2)));
+        assert!(pool.client.infer(name, vec![0.1; d_in]).is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn co_locate_pins_family_to_fewer_shards_than_hash() {
+        // 4 universal-basis heads named task0..3 hash onto BOTH shards of a
+        // 2-shard pool; family-co-locate with budget 4 pins them onto one
+        let (pool, heads, _) = family_pool(2, Placement::FamilyCoLocate { heads_per_shard: 4 });
+        let occupied = pool.client.register_family("demo", &heads).unwrap();
+        assert_eq!(occupied, 1, "{:?}", pool.client.placements());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn replicated_head_round_robins_and_removes_everywhere() {
+        let (pool, heads, d_in) = family_pool(2, Placement::Hash);
+        let (_, w) = &heads[0];
+        pool.client.register_replicated("default", w.clone()).unwrap();
+        assert_eq!(pool.client.route_of("default"), None);
+        for _ in 0..4 {
+            assert!(pool.client.infer("default", vec![0.1; d_in]).is_ok());
+        }
+        // both shards served traffic (round-robin over 4 requests)
+        for s in 0..2 {
+            let served = pool
+                .client
+                .shard(s)
+                .metrics()
+                .counters
+                .responses
+                .load(std::sync::atomic::Ordering::Relaxed);
+            assert!(served > 0, "shard {s} idle under replication");
+        }
+        assert!(pool.client.remove_head("default").unwrap());
+        assert!(pool.client.infer("default", vec![0.1; d_in]).is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn metrics_breakdown_sums_to_merged_view() {
+        let (pool, heads, d_in) = family_pool(2, Placement::Hash);
+        pool.client.register_family("demo", &heads).unwrap();
+        for (name, _) in &heads {
+            for _ in 0..3 {
+                pool.client.infer(name, vec![0.2; d_in]).unwrap();
+            }
+        }
+        let pm = pool.client.metrics_breakdown();
+        assert_eq!(pm.per_shard.len(), 2);
+        use std::sync::atomic::Ordering;
+        let shard_sum: u64 = pm
+            .per_shard
+            .iter()
+            .map(|m| m.counters.responses.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(shard_sum, pm.merged.counters.responses.load(Ordering::Relaxed));
+        assert_eq!(shard_sum, 12);
+        let latency_sum: u64 = pm.per_shard.iter().map(|m| m.latency.count()).sum();
+        assert_eq!(latency_sum, pm.merged.latency.count());
+        // and the merged breakdown equals the legacy aggregate
+        let agg = pool.client.aggregated_metrics();
+        assert_eq!(agg.counters.responses.load(Ordering::Relaxed), shard_sum);
         pool.shutdown();
     }
 }

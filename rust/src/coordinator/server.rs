@@ -57,6 +57,32 @@ pub struct Metrics {
     pub counters: Counters,
 }
 
+impl Metrics {
+    /// Empty metrics set (all histograms and counters at zero).
+    pub fn new() -> Metrics {
+        Metrics {
+            latency: LatencyHistogram::new(),
+            exec_latency: LatencyHistogram::new(),
+            counters: Counters::default(),
+        }
+    }
+
+    /// Fold another metrics set into this one (histograms merged
+    /// sample-exactly, counters summed) — shard aggregation for the
+    /// executor pool.
+    pub fn merge_from(&self, other: &Metrics) {
+        self.latency.merge_from(&other.latency);
+        self.exec_latency.merge_from(&other.exec_latency);
+        self.counters.merge_from(&other.counters);
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
 enum Msg {
     Infer(InferRequest),
     AddHead { name: String, weights: Box<HeadWeights>, resp: mpsc::Sender<Result<(), String>> },
@@ -83,11 +109,7 @@ impl Coordinator {
     /// Start the executor thread and return (owner handle, client).
     pub fn start(cfg: CoordinatorConfig) -> Result<CoordinatorHandle> {
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_capacity);
-        let metrics = Arc::new(Metrics {
-            latency: LatencyHistogram::new(),
-            exec_latency: LatencyHistogram::new(),
-            counters: Counters::default(),
-        });
+        let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
         // the backend must be constructed on the executor thread (not Send);
         // report startup errors back through a one-shot channel
@@ -224,31 +246,33 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
         match msg {
             Ok(Msg::Shutdown) => break,
             Ok(Msg::AddHead { name, weights, resp }) => {
-                let r = register_head(backend.as_mut(), &mut heads, &name, *weights);
+                let r = register_head(backend.as_mut(), &mut heads, &name, *weights, &metrics);
                 let _ = resp.send(r.map_err(|e| format!("{e:#}")));
                 continue;
             }
             Ok(Msg::RemoveHead { name, resp }) => {
-                let _ = resp.send(unregister_head(backend.as_mut(), &mut heads, &name));
+                let _ =
+                    resp.send(unregister_head(backend.as_mut(), &mut heads, &name, &metrics));
                 continue;
             }
             Ok(Msg::Infer(req)) => {
-                route(&mut heads, req);
+                route(&mut heads, req, &metrics);
                 // opportunistically drain everything already queued
                 while let Ok(m) = rx.try_recv() {
                     match m {
-                        Msg::Infer(r) => route(&mut heads, r),
+                        Msg::Infer(r) => route(&mut heads, r, &metrics),
                         Msg::Shutdown => {
-                            fail_all(&mut heads, "shutdown");
+                            fail_all(&mut heads, "shutdown", &metrics);
                             return;
                         }
                         Msg::AddHead { name, weights, resp } => {
-                            let r = register_head(backend.as_mut(), &mut heads, &name, *weights);
+                            let r = register_head(backend.as_mut(), &mut heads, &name, *weights,
+                                                  &metrics);
                             let _ = resp.send(r.map_err(|e| format!("{e:#}")));
                         }
                         Msg::RemoveHead { name, resp } => {
-                            let _ =
-                                resp.send(unregister_head(backend.as_mut(), &mut heads, &name));
+                            let _ = resp.send(unregister_head(backend.as_mut(), &mut heads,
+                                                              &name, &metrics));
                         }
                     }
                 }
@@ -265,11 +289,20 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
             }
         }
     }
-    fail_all(&mut heads, "shutdown");
+    fail_all(&mut heads, "shutdown", &metrics);
+}
+
+/// Send an error reply AND count it: every admitted request must show up
+/// in `Counters::responses` exactly once (success or error), or the
+/// derived `Counters::inflight` queue depth never drains and load-aware
+/// placement is skewed forever.
+fn respond_err(req: InferRequest, msg: impl Into<String>, metrics: &Metrics) {
+    metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+    let _ = req.resp.send(InferResponse::err(req.id, msg));
 }
 
 fn register_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadState>,
-                 name: &str, weights: HeadWeights) -> Result<()> {
+                 name: &str, weights: HeadWeights, metrics: &Metrics) -> Result<()> {
     let d_in = weights.d_in();
     let d_out = weights.d_out();
     backend.register_head(name, &weights)?;
@@ -278,9 +311,7 @@ fn register_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadStat
         // hot-swap replace: fail anything still queued for the old head
         // rather than stranding clients on a dropped channel
         for req in old.queue.drain_all() {
-            let _ = req
-                .resp
-                .send(InferResponse::err(req.id, format!("head '{name}' replaced")));
+            respond_err(req, format!("head '{name}' replaced"), metrics);
         }
     }
     Ok(())
@@ -290,14 +321,12 @@ fn register_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadStat
 /// requests still queued for it (hot-swap retire must not strand clients
 /// on a dead channel — mirrors `fail_all` at shutdown).
 fn unregister_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadState>,
-                   name: &str) -> bool {
+                   name: &str, metrics: &Metrics) -> bool {
     backend.remove_head(name);
     match heads.remove(name) {
         Some(mut state) => {
             for req in state.queue.drain_all() {
-                let _ = req
-                    .resp
-                    .send(InferResponse::err(req.id, format!("head '{name}' removed")));
+                respond_err(req, format!("head '{name}' removed"), metrics);
             }
             true
         }
@@ -305,30 +334,27 @@ fn unregister_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadSt
     }
 }
 
-fn route(heads: &mut HashMap<String, HeadState>, req: InferRequest) {
+fn route(heads: &mut HashMap<String, HeadState>, req: InferRequest, metrics: &Metrics) {
     match heads.get_mut(&req.head) {
         Some(state) => {
             if req.features.len() != state.d_in {
-                let _ = req.resp.send(InferResponse::err(
-                    req.id,
-                    format!("feature dim {} != {}", req.features.len(), state.d_in),
-                ));
+                let msg = format!("feature dim {} != {}", req.features.len(), state.d_in);
+                respond_err(req, msg, metrics);
                 return;
             }
             state.queue.push(req);
         }
         None => {
-            let _ = req
-                .resp
-                .send(InferResponse::err(req.id, format!("unknown head '{}'", req.head)));
+            let msg = format!("unknown head '{}'", req.head);
+            respond_err(req, msg, metrics);
         }
     }
 }
 
-fn fail_all(heads: &mut HashMap<String, HeadState>, why: &str) {
+fn fail_all(heads: &mut HashMap<String, HeadState>, why: &str, metrics: &Metrics) {
     for state in heads.values_mut() {
         for req in state.queue.drain_all() {
-            let _ = req.resp.send(InferResponse::err(req.id, why));
+            respond_err(req, why, metrics);
         }
     }
 }

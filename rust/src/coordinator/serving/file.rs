@@ -1,0 +1,321 @@
+//! Deployment-file loader: parse a TOML or JSON file into a
+//! [`DeploymentSpec`] (the `share-kan serve --deployment <file>` surface).
+//!
+//! Schema (TOML form; the JSON form is the same tree):
+//!
+//! ```text
+//! [deployment]
+//! backend = "family"            # native|arena|family|pjrt
+//!                               # default: family if any [[family]], else native
+//! kernel = "auto"               # auto|scalar|simd
+//! shards = 4
+//! placement = "family-co-locate"  # hash|family-co-locate[:N]|least-loaded
+//! heads_per_shard = 2           # co-locate budget (overrides the :N form)
+//! max_batch = 32
+//! max_wait_ms = 2
+//! queue_capacity = 4096
+//! buckets = [1, 8, 32]          # optional; default ladder capped at max_batch
+//!
+//! [spec]                        # shape/seed for synthetic heads (CI, demos)
+//! d_in = 8
+//! d_hidden = 12
+//! d_out = 4
+//! grid_size = 6
+//! k = 16                        # codebook size for synthetic compression
+//! seed = 42
+//!
+//! [[head]]
+//! name = "solo"                 # default: checkpoint file stem
+//! path = "heads/solo.skpt"      # relative to the deployment file
+//! replicate = false             # true: one copy per shard, round-robin
+//!
+//! [[head]]
+//! name = "syn_dense"
+//! synthetic = "dense"           # dense|int8|fp32 — no checkpoint needed
+//! seed = 7
+//!
+//! [[family]]
+//! name = "demo"
+//! paths = ["family/a.skpt", "family/b.skpt"]   # head names = file stems
+//!
+//! [[family]]
+//! name = "syn"
+//! synthetic = 4                 # 4 universal-codebook heads syn0..syn3
+//! precision = "int8"            # int8|fp32
+//! seed = 42
+//! ```
+//!
+//! `synthetic` heads/families are generated in-process
+//! ([`synthetic_dense`] + the compression pipeline), so a deployment file
+//! can be exercised end-to-end — CI runs the shipped
+//! `examples/deployment.toml` through `serve --deployment` this way —
+//! without any trained checkpoints on disk.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::super::heads::HeadWeights;
+use super::placement::Placement;
+use super::{BackendKind, DeploymentSpec};
+use crate::kan::checkpoint::{synthetic_dense, Checkpoint};
+use crate::kan::spec::{KanSpec, VqSpec};
+use crate::util::json::Json;
+use crate::util::{json, toml};
+use crate::vq::universal::compress_family;
+use crate::vq::{compress, Precision};
+
+/// Load a deployment file (`.json` parses as JSON, everything else as
+/// TOML) into a [`DeploymentSpec`].
+pub(super) fn load(path: &Path) -> Result<DeploymentSpec> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading deployment file {}", path.display()))?;
+    let is_json = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .map(|e| e.eq_ignore_ascii_case("json"))
+        .unwrap_or(false);
+    let parsed = if is_json { json::parse(&text) } else { toml::parse(&text) };
+    let doc = parsed.map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    from_doc(&doc, path.parent().unwrap_or_else(|| Path::new(".")))
+        .with_context(|| format!("deployment file {}", path.display()))
+}
+
+fn from_doc(doc: &Json, base: &Path) -> Result<DeploymentSpec> {
+    let empty = Json::Obj(BTreeMap::new());
+    let dep = doc.get("deployment").unwrap_or(&empty);
+    let families = doc.get("family").and_then(|j| j.as_arr()).unwrap_or(&[]);
+    let heads = doc.get("head").and_then(|j| j.as_arr()).unwrap_or(&[]);
+    anyhow::ensure!(
+        !(families.is_empty() && heads.is_empty()),
+        "no [[head]] or [[family]] entries"
+    );
+
+    let backend = match get_str(dep, "backend")? {
+        Some(s) => s
+            .parse::<BackendKind>()
+            .map_err(|e| anyhow::anyhow!("deployment.backend: {e}"))?,
+        None if !families.is_empty() => BackendKind::FamilyArena,
+        None => BackendKind::Native,
+    };
+    let mut spec = DeploymentSpec::new(backend);
+    if let Some(s) = get_str(dep, "kernel")? {
+        spec.kernel = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("deployment.kernel: {e}"))?;
+    }
+    if let Some(n) = get_usize(dep, "shards")? {
+        spec.shards = n;
+    }
+    let placement_key = get_str(dep, "placement")?;
+    if let Some(s) = placement_key {
+        spec.placement = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("deployment.placement: {e}"))?;
+    }
+    if let Some(budget) = get_usize(dep, "heads_per_shard")? {
+        anyhow::ensure!(budget >= 1, "deployment.heads_per_shard must be >= 1");
+        // the budget re-tunes co-location (and selects it when no
+        // placement was named); pairing it with a different explicit
+        // policy is an error, never a silent override
+        spec.placement = match spec.placement {
+            Placement::FamilyCoLocate { .. } => {
+                Placement::FamilyCoLocate { heads_per_shard: budget }
+            }
+            _ if placement_key.is_none() => {
+                Placement::FamilyCoLocate { heads_per_shard: budget }
+            }
+            other => anyhow::bail!(
+                "deployment.heads_per_shard is a family-co-locate budget and conflicts \
+                 with placement '{other}'"
+            ),
+        };
+    }
+    if let Some(n) = get_usize(dep, "max_batch")? {
+        spec.max_batch = n;
+    }
+    if let Some(ms) = get_usize(dep, "max_wait_ms")? {
+        spec.max_wait = std::time::Duration::from_millis(ms as u64);
+    }
+    if let Some(n) = get_usize(dep, "queue_capacity")? {
+        spec.queue_capacity = n;
+    }
+    if let Some(arr) = dep.get("buckets") {
+        let arr = arr
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("deployment.buckets must be an array"))?;
+        let mut buckets = Vec::with_capacity(arr.len());
+        for v in arr {
+            buckets.push(
+                v.as_f64()
+                    .filter(|n| n.fract() == 0.0 && *n >= 1.0)
+                    .map(|n| n as usize)
+                    .ok_or_else(|| anyhow::anyhow!("deployment.buckets: integer >= 1"))?,
+            );
+        }
+        spec.buckets = Some(buckets);
+    }
+    #[cfg(feature = "pjrt")]
+    if let Some(dir) = get_str(dep, "artifacts_dir")? {
+        spec.artifacts_dir = Some(resolve(base, dir));
+    }
+
+    // shape + seeds for synthetic sources
+    let shape = doc.get("spec").unwrap_or(&empty);
+    let defaults = KanSpec::default();
+    let kan = KanSpec {
+        d_in: get_usize(shape, "d_in")?.unwrap_or(defaults.d_in),
+        d_hidden: get_usize(shape, "d_hidden")?.unwrap_or(defaults.d_hidden),
+        d_out: get_usize(shape, "d_out")?.unwrap_or(defaults.d_out),
+        grid_size: get_usize(shape, "grid_size")?.unwrap_or(defaults.grid_size),
+    };
+    let default_k = get_usize(shape, "k")?.unwrap_or(VqSpec::default().codebook_size);
+    let default_seed = get_usize(shape, "seed")?.unwrap_or(42) as u64;
+
+    for (i, h) in heads.iter().enumerate() {
+        let path = get_str(h, "path")?;
+        let name = match (get_str(h, "name")?, path) {
+            (Some(n), _) => n.to_string(),
+            (None, Some(p)) => stem(Path::new(p)),
+            (None, None) => anyhow::bail!("head #{}: needs 'name' or 'path'", i + 1),
+        };
+        let replicate = get_bool(h, "replicate")?.unwrap_or(false);
+        let weights = match (path, get_str(h, "synthetic")?) {
+            (Some(p), None) => {
+                if replicate {
+                    // path heads load lazily at deploy; replication needs
+                    // the weights entry shape, so load here too
+                    let ck = Checkpoint::load(&resolve(base, p))
+                        .with_context(|| format!("head '{name}'"))?;
+                    Some(HeadWeights::from_checkpoint(&ck)?)
+                } else {
+                    spec = spec.head_from_file(&name, resolve(base, p));
+                    None
+                }
+            }
+            (None, Some(kind)) => {
+                let seed = get_usize(h, "seed")?.map(|s| s as u64).unwrap_or(default_seed);
+                let k = get_usize(h, "k")?.unwrap_or(default_k);
+                Some(synthetic_head(&kan, kind, k, seed)
+                    .with_context(|| format!("head '{name}'"))?)
+            }
+            (Some(_), Some(_)) => {
+                anyhow::bail!("head '{name}': 'path' and 'synthetic' are exclusive")
+            }
+            (None, None) => anyhow::bail!("head '{name}': needs 'path' or 'synthetic'"),
+        };
+        if let Some(w) = weights {
+            spec = if replicate { spec.replicated_head(&name, w) } else { spec.head(&name, w) };
+        }
+    }
+
+    for (i, fam) in families.iter().enumerate() {
+        let name = get_str(fam, "name")?
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("family #{}: needs 'name'", i + 1))?;
+        let paths = fam.get("paths").and_then(|j| j.as_arr());
+        let synthetic = get_usize(fam, "synthetic")?;
+        match (paths, synthetic) {
+            (Some(arr), None) => {
+                anyhow::ensure!(!arr.is_empty(), "family '{name}': empty 'paths'");
+                let mut resolved = Vec::with_capacity(arr.len());
+                for p in arr {
+                    let p = p
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("family '{name}': paths are strings"))?;
+                    resolved.push(resolve(base, p));
+                }
+                spec = spec.family_from_files(&name, &resolved);
+            }
+            (None, Some(n)) => {
+                anyhow::ensure!(n >= 1, "family '{name}': synthetic count must be >= 1");
+                let seed =
+                    get_usize(fam, "seed")?.map(|s| s as u64).unwrap_or(default_seed);
+                let k = get_usize(fam, "k")?.unwrap_or(default_k);
+                let precision = parse_precision(get_str(fam, "precision")?)?;
+                let cks: Vec<Checkpoint> =
+                    (0..n).map(|i| synthetic_dense(&kan, seed + i as u64)).collect();
+                let refs: Vec<&Checkpoint> = cks.iter().collect();
+                let compressed = compress_family(&refs, &kan, k, precision, seed)
+                    .with_context(|| format!("family '{name}': synthetic compression"))?;
+                let mut members = Vec::with_capacity(n);
+                for (i, c) in compressed.iter().enumerate() {
+                    members.push((format!("{name}{i}"),
+                                  HeadWeights::from_checkpoint(&c.to_checkpoint())?));
+                }
+                spec = spec.family(&name, members);
+            }
+            (Some(_), Some(_)) => {
+                anyhow::bail!("family '{name}': 'paths' and 'synthetic' are exclusive")
+            }
+            (None, None) => anyhow::bail!("family '{name}': needs 'paths' or 'synthetic'"),
+        }
+    }
+
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Generate one synthetic head: `dense` grids, or a VQ-compressed
+/// (`int8`/`fp32`) head derived from them.
+fn synthetic_head(kan: &KanSpec, kind: &str, k: usize, seed: u64) -> Result<HeadWeights> {
+    let dense = synthetic_dense(kan, seed);
+    let ck = match kind {
+        "dense" => dense,
+        "int8" => compress(&dense, kan, k, Precision::Int8, seed)?.to_checkpoint(),
+        "fp32" => compress(&dense, kan, k, Precision::Fp32, seed)?.to_checkpoint(),
+        other => anyhow::bail!("unknown synthetic kind '{other}' (expected dense|int8|fp32)"),
+    };
+    HeadWeights::from_checkpoint(&ck)
+}
+
+fn parse_precision(s: Option<&str>) -> Result<Precision> {
+    match s {
+        None | Some("int8") => Ok(Precision::Int8),
+        Some("fp32") => Ok(Precision::Fp32),
+        Some(other) => anyhow::bail!("unknown precision '{other}' (expected int8|fp32)"),
+    }
+}
+
+fn resolve(base: &Path, p: &str) -> PathBuf {
+    let path = Path::new(p);
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        base.join(path)
+    }
+}
+
+fn stem(p: &Path) -> String {
+    p.file_stem().and_then(|s| s.to_str()).unwrap_or("head").to_string()
+}
+
+fn get_str<'a>(obj: &'a Json, key: &str) -> Result<Option<&'a str>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a string")),
+    }
+}
+
+fn get_usize(obj: &Json, key: &str) -> Result<Option<usize>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .map(|n| Some(n as usize))
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn get_bool(obj: &Json, key: &str) -> Result<Option<bool>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(anyhow::anyhow!("'{key}' must be a boolean")),
+    }
+}

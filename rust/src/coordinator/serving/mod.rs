@@ -1,0 +1,807 @@
+//! Declarative deployment API: describe **what** to serve (heads,
+//! families, backend, kernel, batching, shard count, placement) in one
+//! validated [`DeploymentSpec`], then compile it into a running
+//! [`Deployment`].
+//!
+//! This is the paper's deployment story as an API seam.  The serving stack
+//! used to smear deployment intent across ad-hoc CLI flags and three
+//! overlapping registration entry points; a spec gathers it into one value
+//! that can be built programmatically (builder methods below) or loaded
+//! from a TOML/JSON deployment file ([`DeploymentSpec::from_file`], the
+//! `share-kan serve --deployment <file>` surface).
+//!
+//! **Where** each head lands is the other half of the redesign: the
+//! [`placement`] module defines the [`PlacementPolicy`] seam and the three
+//! shipped policies ([`HashPlacement`], [`FamilyCoLocate`],
+//! [`LeastLoaded`]).  Placement matters because the family backend
+//! materializes a family's shared codebook region once **per occupied
+//! shard** (paper §6 universal basis): hash routing spreads a family over
+//! every shard and pays the shared region N times, while co-location pays
+//! it `ceil(heads/budget)` times — and keeps distinct families on disjoint
+//! shards, which the family backend requires outright.
+//!
+//! ```text
+//! DeploymentSpec::new(BackendKind::FamilyArena)
+//!     .with_shards(4)
+//!     .with_placement(Placement::FamilyCoLocate { heads_per_shard: 4 })
+//!     .family("demo", heads)          // Vec<(String, HeadWeights)>
+//!     .deploy()?                      // -> Deployment (a running pool)
+//!     .report()                       // placements + byte accounting
+//! ```
+
+pub mod placement;
+
+pub mod file;
+
+pub use placement::{
+    hash_shard, FamilyCoLocate, HashPlacement, LeastLoaded, Placement, PlacementPolicy,
+    ShardLoad, DEFAULT_HEADS_PER_SHARD,
+};
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::batcher::BatchPolicy;
+use super::heads::HeadWeights;
+use super::pool::{ExecutorPool, HeadPlacement, PoolConfig, PoolHandle, PoolMetrics};
+use crate::kan::checkpoint::Checkpoint;
+use crate::memplan::{plan_family, plan_head};
+use crate::runtime::{BackendConfig, BackendSpec, KernelMode};
+use crate::vq::Precision;
+
+/// Which execution backend a deployment serves through (the
+/// [`BackendConfig`] selector, minus per-deployment shape details that the
+/// spec derives from its first head).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust PLI serving straight from head weights.
+    Native,
+    /// Arena-resident serving: one LUTHAM-planned arena per head.
+    Arena,
+    /// Family-arena serving: one shared codebook arena per shard, marginal
+    /// per-head tables (paper §6 universal basis).
+    FamilyArena,
+    /// PJRT engine over AOT artifacts (requires the `pjrt` feature).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<BackendKind, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "arena" => Ok(BackendKind::Arena),
+            "family" => Ok(BackendKind::FamilyArena),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Ok(BackendKind::Pjrt),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => Err("backend 'pjrt' requires a build with --features pjrt".into()),
+            other => Err(format!(
+                "unknown backend '{other}' (expected native|arena|family{})",
+                if cfg!(feature = "pjrt") { "|pjrt" } else { "" }
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Arena => "arena",
+            BackendKind::FamilyArena => "family",
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Where one head's weights come from.
+enum HeadSource {
+    /// In-memory weights (library callers, benches, tests).
+    Weights(HeadWeights),
+    /// Checkpoint file loaded at [`DeploymentSpec::deploy`] time.
+    Path(PathBuf),
+}
+
+/// One head in a deployment spec.
+struct HeadEntry {
+    name: String,
+    family: Option<String>,
+    replicate: bool,
+    source: HeadSource,
+}
+
+/// Declarative description of one serving deployment: heads + families +
+/// backend/kernel/batching/shard-count/placement in a single validated
+/// value.  Build with [`DeploymentSpec::new`] + the `with_*`/head/family
+/// methods, or load from a TOML/JSON file with
+/// [`DeploymentSpec::from_file`]; compile into a running pool with
+/// [`DeploymentSpec::deploy`].
+pub struct DeploymentSpec {
+    /// Execution backend every shard constructs.
+    pub backend: BackendKind,
+    /// Kernel dispatch policy for the arena backends (`--kernel` knob).
+    pub kernel: KernelMode,
+    /// Number of executor shards.
+    pub shards: usize,
+    /// Shard-placement policy for head registration.
+    pub placement: Placement,
+    /// Dynamic-batching cap; also tops the default bucket ladder.
+    pub max_batch: usize,
+    /// Dynamic-batching wait bound.
+    pub max_wait: Duration,
+    /// Bounded admission queue depth per shard.
+    pub queue_capacity: usize,
+    /// Explicit batch-bucket ladder; `None` derives the default ladder
+    /// capped at [`DeploymentSpec::max_batch`] (see [`bucket_ladder`]).
+    pub buckets: Option<Vec<usize>>,
+    /// PJRT artifacts directory (defaults to the runtime's default dir).
+    #[cfg(feature = "pjrt")]
+    pub artifacts_dir: Option<PathBuf>,
+    heads: Vec<HeadEntry>,
+}
+
+/// The default batch-bucket ladder capped at `max_batch`: the standard
+/// buckets below the cap, then the cap itself as the top bucket — so the
+/// scratch a backend allocates and the batching policy agree.
+pub fn bucket_ladder(max_batch: usize) -> Vec<usize> {
+    let max_batch = max_batch.max(1);
+    let mut buckets: Vec<usize> = BackendSpec::default()
+        .batch_buckets
+        .into_iter()
+        .filter(|&b| b < max_batch)
+        .collect();
+    buckets.push(max_batch);
+    buckets
+}
+
+impl DeploymentSpec {
+    /// A spec with serving defaults: 1 shard, hash placement, `Auto`
+    /// kernel dispatch, batches up to 128 rows / 2 ms, queue depth 4096.
+    pub fn new(backend: BackendKind) -> DeploymentSpec {
+        DeploymentSpec {
+            backend,
+            kernel: KernelMode::Auto,
+            shards: 1,
+            placement: Placement::Hash,
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 4096,
+            buckets: None,
+            #[cfg(feature = "pjrt")]
+            artifacts_dir: None,
+            heads: Vec::new(),
+        }
+    }
+
+    /// Set the shard count (builder style).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Set the kernel dispatch policy (builder style).
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Set the placement policy (builder style).
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Set the dynamic-batching cap (builder style).
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Set the dynamic-batching wait bound (builder style).
+    pub fn with_max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Set the per-shard admission queue depth (builder style).
+    pub fn with_queue_capacity(mut self, queue_capacity: usize) -> Self {
+        self.queue_capacity = queue_capacity;
+        self
+    }
+
+    /// Set an explicit batch-bucket ladder (builder style).
+    pub fn with_buckets(mut self, buckets: &[usize]) -> Self {
+        self.buckets = Some(buckets.to_vec());
+        self
+    }
+
+    /// Add one standalone head from in-memory weights.
+    pub fn head(mut self, name: &str, weights: HeadWeights) -> Self {
+        self.heads.push(HeadEntry {
+            name: name.to_string(),
+            family: None,
+            replicate: false,
+            source: HeadSource::Weights(weights),
+        });
+        self
+    }
+
+    /// Add one standalone head loaded from a checkpoint file at deploy
+    /// time.
+    pub fn head_from_file(mut self, name: &str, path: impl Into<PathBuf>) -> Self {
+        self.heads.push(HeadEntry {
+            name: name.to_string(),
+            family: None,
+            replicate: false,
+            source: HeadSource::Path(path.into()),
+        });
+        self
+    }
+
+    /// Add one head **replicated on every shard** (requests round-robin
+    /// across shards — the single-head multi-shard deployment shape).
+    pub fn replicated_head(mut self, name: &str, weights: HeadWeights) -> Self {
+        self.heads.push(HeadEntry {
+            name: name.to_string(),
+            family: None,
+            replicate: true,
+            source: HeadSource::Weights(weights),
+        });
+        self
+    }
+
+    /// Add a family of heads (shared universal codebook) from in-memory
+    /// weights; family-aware policies co-locate them.
+    pub fn family(mut self, family: &str, heads: Vec<(String, HeadWeights)>) -> Self {
+        for (name, weights) in heads {
+            self.heads.push(HeadEntry {
+                name,
+                family: Some(family.to_string()),
+                replicate: false,
+                source: HeadSource::Weights(weights),
+            });
+        }
+        self
+    }
+
+    /// Add a family of heads loaded from checkpoint files at deploy time;
+    /// head names are the file stems.
+    pub fn family_from_files(mut self, family: &str, paths: &[PathBuf]) -> Self {
+        for path in paths {
+            let stem = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("head")
+                .to_string();
+            self.heads.push(HeadEntry {
+                name: stem,
+                family: Some(family.to_string()),
+                replicate: false,
+                source: HeadSource::Path(path.clone()),
+            });
+        }
+        self
+    }
+
+    /// Load a spec from a TOML or JSON deployment file (`.json` parses as
+    /// JSON, everything else as TOML).  Relative checkpoint paths resolve
+    /// against the file's directory; see README for the schema and a
+    /// sample.
+    pub fn from_file(path: &Path) -> Result<DeploymentSpec> {
+        file::load(path)
+    }
+
+    /// Names of the heads this spec deploys, in registration order.
+    pub fn head_names(&self) -> Vec<String> {
+        self.heads.iter().map(|h| h.name.clone()).collect()
+    }
+
+    /// Structural validation (no file I/O): shard/batch/queue bounds,
+    /// unique head names, replication/family exclusivity.  Called by
+    /// [`DeploymentSpec::deploy`]; backend-level validation (bucket
+    /// ladder, kernel support, head shapes) happens at construction and
+    /// registration.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shards >= 1, "deployment needs at least one shard");
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
+        anyhow::ensure!(!self.heads.is_empty(), "deployment has no heads");
+        let mut names = BTreeSet::new();
+        for h in &self.heads {
+            anyhow::ensure!(!h.name.is_empty(), "head names must be non-empty");
+            anyhow::ensure!(
+                names.insert(h.name.as_str()),
+                "duplicate head name '{}': head names route requests and must be distinct",
+                h.name
+            );
+            anyhow::ensure!(
+                !(h.replicate && h.family.is_some()),
+                "head '{}': replicated heads cannot belong to a family",
+                h.name
+            );
+        }
+        if let Placement::FamilyCoLocate { heads_per_shard } = self.placement {
+            anyhow::ensure!(heads_per_shard >= 1,
+                            "family-co-locate budget must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Dry-run the placement policy over this spec without starting any
+    /// executors or loading any checkpoints: the shard each head would
+    /// land on, in registration order (what `share-kan plan --deployment`
+    /// prints).  Mirrors the pool's live placement exactly for a fresh
+    /// deployment (zero traffic, same registration order).
+    pub fn simulate_placements(&self) -> Result<Vec<HeadPlacement>> {
+        self.validate()?;
+        let policy = self.placement.build();
+        let mut heads_on: Vec<usize> = vec![0; self.shards];
+        // family name -> per-shard head counts
+        let mut fam_on: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut out = Vec::with_capacity(self.heads.len());
+        for h in &self.heads {
+            if h.replicate {
+                for c in heads_on.iter_mut() {
+                    *c += 1;
+                }
+                out.push(HeadPlacement { head: h.name.clone(), shard: None, family: None });
+                continue;
+            }
+            let loads: Vec<ShardLoad> = (0..self.shards)
+                .map(|shard| {
+                    let family_heads = h
+                        .family
+                        .as_deref()
+                        .and_then(|f| fam_on.get(f))
+                        .map(|v| v[shard])
+                        .unwrap_or(0);
+                    let all_family_heads: usize =
+                        fam_on.values().map(|v| v[shard]).sum();
+                    ShardLoad {
+                        shard,
+                        heads: heads_on[shard],
+                        family_heads,
+                        foreign_family_heads: all_family_heads - family_heads,
+                        inflight: 0,
+                    }
+                })
+                .collect();
+            let shard = policy.place(&h.name, h.family.as_deref(), &loads);
+            anyhow::ensure!(
+                shard < self.shards,
+                "placement policy '{}' returned shard {shard} for '{}' but the spec has \
+                 {} shards",
+                policy.name(),
+                h.name,
+                self.shards
+            );
+            heads_on[shard] += 1;
+            if let Some(f) = h.family.as_deref() {
+                fam_on.entry(f).or_insert_with(|| vec![0; self.shards])[shard] += 1;
+            }
+            out.push(HeadPlacement {
+                head: h.name.clone(),
+                shard: Some(shard),
+                family: h.family.clone(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Compile the spec into a running [`Deployment`]: validate, load
+    /// checkpoint-file heads, derive the [`BackendSpec`] from the first
+    /// head, start the executor pool under the configured placement
+    /// policy, and register every head.
+    pub fn deploy(self) -> Result<Deployment> {
+        self.validate()?;
+        // resolve weight sources (checkpoint files load here, once)
+        let mut resolved: Vec<(HeadEntry, HeadWeights)> = Vec::with_capacity(self.heads.len());
+        for entry in self.heads.into_iter() {
+            let weights = match &entry.source {
+                HeadSource::Weights(w) => w.clone(),
+                HeadSource::Path(p) => {
+                    let ck = Checkpoint::load(p)
+                        .with_context(|| format!("loading head '{}' from {}",
+                                                 entry.name, p.display()))?;
+                    HeadWeights::from_checkpoint(&ck)
+                        .with_context(|| format!("head '{}' ({})", entry.name, p.display()))?
+                }
+            };
+            resolved.push((entry, weights));
+        }
+
+        let buckets = match &self.buckets {
+            Some(b) => b.clone(),
+            None => bucket_ladder(self.max_batch),
+        };
+        let max_bucket = buckets.iter().copied().max().unwrap_or(self.max_batch);
+        let spec = BackendSpec::for_head(&resolved[0].1)
+            .with_buckets(&buckets)
+            .with_kernel(self.kernel);
+        let backend = match self.backend {
+            BackendKind::Native => BackendConfig::Native(spec),
+            BackendKind::Arena => BackendConfig::Arena(spec),
+            BackendKind::FamilyArena => BackendConfig::FamilyArena(spec),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => BackendConfig::Pjrt {
+                artifacts_dir: self
+                    .artifacts_dir
+                    .clone()
+                    .unwrap_or_else(crate::runtime::default_artifacts_dir),
+            },
+        };
+        let handle = ExecutorPool::start(PoolConfig {
+            backend,
+            policy: BatchPolicy { max_batch: self.max_batch, max_wait: self.max_wait },
+            queue_capacity: self.queue_capacity,
+            num_shards: self.shards,
+            placement: self.placement,
+        })?;
+
+        let d_in = resolved[0].1.d_in();
+        let mut deployment = Deployment {
+            handle,
+            backend: self.backend,
+            placement: self.placement,
+            max_bucket,
+            d_in,
+            heads_meta: Vec::new(),
+            family_accounting: BTreeMap::new(),
+        };
+        for (entry, weights) in resolved {
+            if entry.replicate {
+                deployment.add_replicated_head(&entry.name, weights)?;
+            } else {
+                deployment.add_head(&entry.name, entry.family.as_deref(), weights)?;
+            }
+        }
+        Ok(deployment)
+    }
+}
+
+/// Per-head byte accounting captured at registration (weights are consumed
+/// by the backend, so the numbers are recorded up front).
+struct HeadMeta {
+    name: String,
+    family: Option<String>,
+    replicate: bool,
+    /// `true` when the head's resident bytes are covered by its family's
+    /// shared+marginal accounting instead of [`HeadMeta::private_bytes`].
+    family_accounted: bool,
+    /// Resident bytes of one copy of this head outside family accounting:
+    /// its arena plan on the arena backends, raw weight bytes otherwise.
+    private_bytes: usize,
+}
+
+/// Shared/marginal byte accounting for one family (from
+/// [`plan_family`], the layout the family backend materializes).
+struct FamilyBytes {
+    shared: usize,
+    marginal: usize,
+    private: usize,
+    heads: usize,
+}
+
+/// A running deployment: the executor pool plus the registration-time
+/// metadata that makes placement and residency reportable.  Dropping (or
+/// [`Deployment::shutdown`]) joins every shard executor.
+pub struct Deployment {
+    handle: PoolHandle,
+    backend: BackendKind,
+    placement: Placement,
+    max_bucket: usize,
+    d_in: usize,
+    heads_meta: Vec<HeadMeta>,
+    family_accounting: BTreeMap<String, FamilyBytes>,
+}
+
+impl Deployment {
+    /// Cloneable client handle over the deployment's shard set (submit
+    /// requests, read metrics, inspect placements).
+    pub fn client(&self) -> &ExecutorPool {
+        &self.handle.client
+    }
+
+    /// Which backend the deployment serves through.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// Input feature dimension of the deployed heads (for request
+    /// generation; all heads of a deployment share one shape).
+    pub fn input_dim(&self) -> usize {
+        self.d_in
+    }
+
+    /// The placement policy heads register under.
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Register (or hot-swap replace) a head through the deployment's
+    /// placement policy; returns the owning shard and keeps the byte
+    /// accounting in the deployment report current.
+    pub fn add_head(&mut self, name: &str, family: Option<&str>,
+                    weights: HeadWeights) -> Result<usize> {
+        // accounting is derived from shapes BEFORE the weights move into
+        // the pool (no weight-payload clone), committed only on success
+        let pending = self.prepare_meta(name, family, false, &weights);
+        let shard = self.handle.client.register_head(name, family, weights)?;
+        self.commit_meta(pending);
+        Ok(shard)
+    }
+
+    /// Register a head on every shard (round-robin routing); see
+    /// [`ExecutorPool::register_replicated`].
+    pub fn add_replicated_head(&mut self, name: &str, weights: HeadWeights) -> Result<()> {
+        let pending = self.prepare_meta(name, None, true, &weights);
+        self.handle.client.register_replicated(name, weights)?;
+        self.commit_meta(pending);
+        Ok(())
+    }
+
+    /// Unregister a head; returns whether it existed.
+    pub fn remove_head(&mut self, name: &str) -> Result<bool> {
+        let existed = self.handle.client.remove_head(name)?;
+        self.forget_meta(name);
+        Ok(existed)
+    }
+
+    /// Drop the accounting record for `name` (if any), keeping the
+    /// per-family head counts consistent.
+    fn forget_meta(&mut self, name: &str) {
+        if let Some(i) = self.heads_meta.iter().position(|m| m.name == name) {
+            let meta = self.heads_meta.remove(i);
+            if let (true, Some(f)) = (meta.family_accounted, meta.family.as_deref()) {
+                if let Some(acc) = self.family_accounting.get_mut(f) {
+                    acc.heads = acc.heads.saturating_sub(1);
+                    if acc.heads == 0 {
+                        self.family_accounting.remove(f);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Merged + per-shard metrics (see [`ExecutorPool::metrics_breakdown`]).
+    pub fn metrics(&self) -> PoolMetrics {
+        self.handle.client.metrics_breakdown()
+    }
+
+    /// Snapshot report: where every head lives, how many shards each
+    /// family's shared codebook region is materialized on, and the total
+    /// resident bytes the deployment costs under the current placement.
+    pub fn report(&self) -> DeploymentReport {
+        let client = &self.handle.client;
+        let placements = client.placements();
+        let num_shards = client.num_shards();
+        let mut occupied: BTreeSet<usize> = BTreeSet::new();
+        let mut any_replicated = false;
+        for p in &placements {
+            match p.shard {
+                Some(s) => {
+                    occupied.insert(s);
+                }
+                None => any_replicated = true,
+            }
+        }
+        let shards_occupied = if any_replicated { num_shards } else { occupied.len() };
+
+        let mut families = Vec::new();
+        let mut resident_bytes = 0usize;
+        for (name, acc) in &self.family_accounting {
+            let fam_shards = client.shards_hosting_family(name);
+            let resident = acc
+                .shared
+                .saturating_mul(fam_shards)
+                .saturating_add(acc.marginal.saturating_mul(acc.heads));
+            resident_bytes = resident_bytes.saturating_add(resident);
+            families.push(FamilyResidency {
+                family: name.clone(),
+                heads: acc.heads,
+                shards_occupied: fam_shards,
+                shared_bytes: acc.shared,
+                marginal_bytes: acc.marginal,
+                resident_bytes: resident,
+                private_bytes_per_head: acc.private,
+            });
+        }
+        for meta in &self.heads_meta {
+            if meta.family_accounted {
+                continue;
+            }
+            let copies = if meta.replicate { num_shards } else { 1 };
+            resident_bytes = resident_bytes.saturating_add(
+                meta.private_bytes.saturating_mul(copies));
+        }
+        DeploymentReport {
+            backend: self.backend,
+            policy: self.placement.to_string(),
+            num_shards,
+            shards_occupied,
+            placements,
+            families,
+            resident_bytes,
+        }
+    }
+
+    /// Graceful shutdown: stop and join every shard executor.
+    pub fn shutdown(self) {
+        self.handle.shutdown()
+    }
+
+    /// Derive registration-time byte accounting for one head from shapes
+    /// alone (no mutation — committed by [`Deployment::commit_meta`] only
+    /// after the registration succeeds).  Family VQ heads on the family
+    /// backend are accounted through [`plan_family`] (shared region paid
+    /// per occupied shard, marginal bytes per head); everything else is
+    /// accounted privately (arena plan bytes on the arena backends, raw
+    /// weight bytes elsewhere).
+    fn prepare_meta(&self, name: &str, family: Option<&str>, replicate: bool,
+                    weights: &HeadWeights) -> PendingMeta {
+        let family_bytes = if self.backend == BackendKind::FamilyArena && family.is_some() {
+            family_bytes_for(weights, self.max_bucket)
+        } else {
+            None
+        };
+        let private_bytes = match self.backend {
+            BackendKind::Arena | BackendKind::FamilyArena => {
+                plan_head(weights, self.max_bucket)
+                    .map(|p| p.total_bytes)
+                    .unwrap_or_else(|_| weights.weight_bytes())
+            }
+            _ => weights.weight_bytes(),
+        };
+        PendingMeta {
+            meta: HeadMeta {
+                name: name.to_string(),
+                family: family.map(str::to_string),
+                replicate,
+                family_accounted: family_bytes.is_some(),
+                private_bytes,
+            },
+            family_bytes,
+        }
+    }
+
+    /// Commit prepared accounting after a successful registration.  Drops
+    /// any stale record for the same head first (hot-swap replace must
+    /// never double-count); carries the family plan bytes so the sole
+    /// head of a family can be hot-swapped without losing its accounting.
+    fn commit_meta(&mut self, pending: PendingMeta) {
+        let PendingMeta { meta, family_bytes } = pending;
+        self.forget_meta(&meta.name);
+        if meta.family_accounted {
+            if let (Some(bytes), Some(f)) = (family_bytes, meta.family.clone()) {
+                let acc = self.family_accounting.entry(f).or_insert(bytes);
+                acc.heads += 1;
+            }
+        }
+        self.heads_meta.push(meta);
+    }
+}
+
+/// Accounting computed by [`Deployment::prepare_meta`], applied by
+/// [`Deployment::commit_meta`] once registration succeeds.
+struct PendingMeta {
+    meta: HeadMeta,
+    family_bytes: Option<FamilyBytes>,
+}
+
+/// Shared/marginal/private plan bytes for a VQ head's family shape, from
+/// [`plan_family`]; `None` for non-VQ heads or unplannable shapes.
+fn family_bytes_for(weights: &HeadWeights, max_bucket: usize) -> Option<FamilyBytes> {
+    let precision = match weights {
+        HeadWeights::VqInt8 { .. } => Precision::Int8,
+        HeadWeights::VqFp32 { .. } => Precision::Fp32,
+        _ => return None,
+    };
+    let kan = weights.implied_kan_spec();
+    let vq = crate::kan::spec::VqSpec { codebook_size: weights.implied_codebook_size() };
+    plan_family(&kan, &vq, precision, max_bucket).ok().map(|fam| FamilyBytes {
+        shared: fam.shared_bytes(),
+        marginal: fam.head_bytes(),
+        private: fam.private_head_bytes().unwrap_or(0),
+        heads: 0,
+    })
+}
+
+/// Shared-region residency accounting for one family in a
+/// [`DeploymentReport`].
+#[derive(Debug, Clone)]
+pub struct FamilyResidency {
+    /// Family name.
+    pub family: String,
+    /// Registered heads of the family.
+    pub heads: usize,
+    /// Distinct shards hosting the family — how many times the shared
+    /// codebook region is materialized.
+    pub shards_occupied: usize,
+    /// Bytes of the shared region (codebooks + activation scratch), paid
+    /// once per occupied shard.
+    pub shared_bytes: usize,
+    /// Marginal arena bytes per head (packed indices + gains + bias sums).
+    pub marginal_bytes: usize,
+    /// Total resident bytes:
+    /// `shared_bytes * shards_occupied + marginal_bytes * heads`.
+    pub resident_bytes: usize,
+    /// What one head would cost as a private arena (for comparison).
+    pub private_bytes_per_head: usize,
+}
+
+/// Placement + residency snapshot of a running [`Deployment`] (what
+/// `serve --deployment` echoes and the placement benches record).
+#[derive(Debug, Clone)]
+pub struct DeploymentReport {
+    /// Backend the deployment serves through.
+    pub backend: BackendKind,
+    /// Placement policy (display form, e.g. `family-co-locate:4`).
+    pub policy: String,
+    /// Executor shards in the pool.
+    pub num_shards: usize,
+    /// Shards hosting at least one head.
+    pub shards_occupied: usize,
+    /// Routing-table snapshot, sorted by head name.
+    pub placements: Vec<HeadPlacement>,
+    /// Per-family shared-region accounting (family backend, VQ heads).
+    pub families: Vec<FamilyResidency>,
+    /// Total resident bytes across all shards: family accounting for
+    /// family-backed VQ heads, per-head arena/weight bytes otherwise.
+    pub resident_bytes: usize,
+}
+
+impl DeploymentReport {
+    /// Multi-line human-readable digest (the `serve --deployment` echo).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "deployment: {} head(s) on the {} backend, {} shard(s) ({} occupied), \
+             placement {}",
+            self.placements.len(),
+            self.backend,
+            self.num_shards,
+            self.shards_occupied,
+            self.policy
+        );
+        for p in &self.placements {
+            match p.shard {
+                Some(shard) => {
+                    let fam = p
+                        .family
+                        .as_deref()
+                        .map(|f| format!(" (family {f})"))
+                        .unwrap_or_default();
+                    let _ = writeln!(s, "  {:<18} -> shard {shard}{fam}", p.head);
+                }
+                None => {
+                    let _ = writeln!(s, "  {:<18} -> replicated on all shards", p.head);
+                }
+            }
+        }
+        for f in &self.families {
+            let _ = writeln!(
+                s,
+                "  family {}: shared {} B x {} shard(s) + marginal {} B x {} head(s) = \
+                 {} B resident (private-arena head: {} B)",
+                f.family,
+                f.shared_bytes,
+                f.shards_occupied,
+                f.marginal_bytes,
+                f.heads,
+                f.resident_bytes,
+                f.private_bytes_per_head
+            );
+        }
+        let _ = write!(s, "  total resident: {} bytes", self.resident_bytes);
+        s
+    }
+}

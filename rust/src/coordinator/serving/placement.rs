@@ -1,0 +1,389 @@
+//! Pluggable shard-placement policies: **where** a head lands in the
+//! executor pool is a first-class deployment decision.
+//!
+//! The paper's memory win depends on the shared codebook region staying
+//! cache-resident (§6 universal basis), but placement decides how many
+//! times that region is *paid*: a family spread across every shard
+//! materializes the shared arena once per shard, while a co-located family
+//! pays it once per occupied shard.  The [`PlacementPolicy`] trait is the
+//! seam those decisions plug into; [`super::super::pool::ExecutorPool`]
+//! consults the policy once at registration and records the decision in a
+//! routing table, so request routing never re-derives it.
+//!
+//! Three policies ship:
+//!
+//! * [`HashPlacement`] — FNV-1a over the head name (the pool's historical
+//!   default).  Routing is **bitwise-unchanged** from the pre-policy pool:
+//!   the placed shard equals [`hash_shard`] for every head.
+//! * [`FamilyCoLocate`] — pins all heads of a family onto the fewest
+//!   shards that satisfy a per-shard head budget, so a family's shared
+//!   codebook region is materialized on as few shards as possible (and
+//!   distinct families land on disjoint shards while capacity allows —
+//!   which the family-arena backend requires, since one shard holds one
+//!   universal basis).
+//! * [`LeastLoaded`] — routes new head registrations to the shard with the
+//!   lowest live load (in-flight requests, then registered head count),
+//!   read off the pool's per-shard [`super::super::server::Metrics`].
+//!
+//! Every policy only chooses *which shard executes* a head; each shard
+//! computes identically, so pooled outputs stay **bit-for-bit equal** to a
+//! single coordinator under any policy (pinned by
+//! `rust/tests/placement.rs`).
+
+use std::sync::Arc;
+
+/// FNV-1a over a head name: stable across processes and handles, so
+/// hash placement is a pure function of `(name, num_shards)`.  Pinned by
+/// unit tests below — the routing of existing deployments must never
+/// change silently.
+pub(crate) fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shard [`HashPlacement`] assigns `head` to on a `num_shards`-shard
+/// pool (and the shard unregistered heads fall back to at request time).
+pub fn hash_shard(head: &str, num_shards: usize) -> usize {
+    (fnv1a(head) % num_shards.max(1) as u64) as usize
+}
+
+/// Live snapshot of one shard at placement time, built by the pool from
+/// its routing table and per-shard metrics.
+#[derive(Debug, Clone)]
+pub struct ShardLoad {
+    /// Shard index.
+    pub shard: usize,
+    /// Heads currently registered on this shard (replicated heads count
+    /// once per shard).
+    pub heads: usize,
+    /// Heads of the family being placed that already live on this shard
+    /// (0 when the head being placed has no family).
+    pub family_heads: usize,
+    /// Heads on this shard belonging to a *different* family than the one
+    /// being placed (0 for familyless heads on a familyless shard).
+    pub foreign_family_heads: usize,
+    /// Live queue depth: requests admitted but not yet answered.
+    pub inflight: u64,
+}
+
+/// A shard-placement policy: given the head being registered (and its
+/// family, when deployed as part of one) plus a live per-shard load
+/// snapshot, pick the shard that will own it.
+///
+/// Called by the pool **once per registration** under the routing-table
+/// lock; the decision is recorded and request routing is a table lookup,
+/// which is what makes policies hot-swap-safe (`remove_head` + re-add
+/// under a different policy is well-defined: the old entry is dropped, the
+/// new policy places afresh).
+pub trait PlacementPolicy: Send + Sync {
+    /// Short policy name for logs, reports and the `--placement` echo.
+    fn name(&self) -> &'static str;
+
+    /// Choose the owning shard for `head`.  `loads` has one entry per
+    /// shard, indexed by shard id; implementations must return an index
+    /// `< loads.len()`.
+    fn place(&self, head: &str, family: Option<&str>, loads: &[ShardLoad]) -> usize;
+}
+
+/// FNV-1a hash placement — the pool's historical default, bitwise-unchanged:
+/// the placed shard equals [`hash_shard`] for every head, ignoring load
+/// and family structure entirely.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashPlacement;
+
+impl PlacementPolicy for HashPlacement {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn place(&self, head: &str, _family: Option<&str>, loads: &[ShardLoad]) -> usize {
+        hash_shard(head, loads.len())
+    }
+}
+
+/// Pin all heads of a family onto the fewest shards that satisfy a
+/// per-shard head budget.
+///
+/// A shard already hosting the family (with budget room) is filled before
+/// a new shard is opened, so the family's shared codebook region is
+/// materialized `ceil(heads / heads_per_shard)` times instead of once per
+/// pool shard.  When a new shard must be opened, shards hosting *other*
+/// families are avoided while any alternative exists — the family-arena
+/// backend holds one universal basis per shard, so distinct families must
+/// stay disjoint to deploy at all.  Familyless heads fall back to
+/// [`hash_shard`] (stable single-head routing).
+///
+/// The budget is a soft target: if every shard hosting the family is full,
+/// the least-foreign, least-populated shard takes the overflow rather than
+/// failing registration.
+#[derive(Debug, Clone, Copy)]
+pub struct FamilyCoLocate {
+    /// How many heads of one family a shard absorbs before the policy
+    /// opens the next shard (clamped to at least 1).
+    pub heads_per_shard: usize,
+}
+
+/// Default [`FamilyCoLocate::heads_per_shard`] budget used by
+/// [`Placement::FamilyCoLocate`] when a deployment file or `--placement`
+/// flag names the policy without a budget.
+pub const DEFAULT_HEADS_PER_SHARD: usize = 4;
+
+impl Default for FamilyCoLocate {
+    fn default() -> Self {
+        FamilyCoLocate { heads_per_shard: DEFAULT_HEADS_PER_SHARD }
+    }
+}
+
+impl PlacementPolicy for FamilyCoLocate {
+    fn name(&self) -> &'static str {
+        "family-co-locate"
+    }
+
+    fn place(&self, head: &str, family: Option<&str>, loads: &[ShardLoad]) -> usize {
+        if family.is_none() {
+            return hash_shard(head, loads.len());
+        }
+        let budget = self.heads_per_shard.max(1);
+        // fill the fullest shard already hosting the family that still has
+        // budget room (fewest shards overall); ties break to the lowest id
+        if let Some(l) = loads
+            .iter()
+            .filter(|l| l.family_heads > 0 && l.family_heads < budget)
+            .max_by(|a, b| a.family_heads.cmp(&b.family_heads).then(b.shard.cmp(&a.shard)))
+        {
+            return l.shard;
+        }
+        // open a new shard: avoid shards hosting other families, then
+        // prefer the emptiest; ties break to the lowest id
+        loads
+            .iter()
+            .min_by(|a, b| {
+                (a.foreign_family_heads, a.heads, a.shard)
+                    .cmp(&(b.foreign_family_heads, b.heads, b.shard))
+            })
+            .map(|l| l.shard)
+            .unwrap_or(0)
+    }
+}
+
+/// Route each new head registration to the shard with the lowest live load:
+/// fewest in-flight requests, then fewest registered heads, then lowest
+/// shard id.  Pure load balancing — ignores family structure.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLoaded;
+
+impl PlacementPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn place(&self, _head: &str, _family: Option<&str>, loads: &[ShardLoad]) -> usize {
+        loads
+            .iter()
+            .min_by(|a, b| (a.inflight, a.heads, a.shard).cmp(&(b.inflight, b.heads, b.shard)))
+            .map(|l| l.shard)
+            .unwrap_or(0)
+    }
+}
+
+/// Declarative placement selector: the serializable form carried by
+/// [`super::DeploymentSpec`], `PoolConfig` and deployment files, compiled
+/// into a live policy by [`Placement::build`].
+///
+/// Parse (`FromStr`) accepts `hash`, `least-loaded`, `family-co-locate`
+/// (default budget) and `family-co-locate:N` (explicit per-shard budget).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// [`HashPlacement`] — the default; bitwise-identical to the
+    /// pre-policy pool routing.
+    #[default]
+    Hash,
+    /// [`FamilyCoLocate`] with the given per-shard head budget.
+    FamilyCoLocate {
+        /// see [`FamilyCoLocate::heads_per_shard`]
+        heads_per_shard: usize,
+    },
+    /// [`LeastLoaded`].
+    LeastLoaded,
+}
+
+impl Placement {
+    /// Compile the selector into a live policy instance.
+    pub fn build(self) -> Arc<dyn PlacementPolicy> {
+        match self {
+            Placement::Hash => Arc::new(HashPlacement),
+            Placement::FamilyCoLocate { heads_per_shard } => {
+                Arc::new(FamilyCoLocate { heads_per_shard })
+            }
+            Placement::LeastLoaded => Arc::new(LeastLoaded),
+        }
+    }
+}
+
+impl std::str::FromStr for Placement {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Placement, String> {
+        if let Some(rest) = s.strip_prefix("family-co-locate") {
+            let heads_per_shard = match rest.strip_prefix(':') {
+                None if rest.is_empty() => DEFAULT_HEADS_PER_SHARD,
+                Some(n) => n
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| format!("family-co-locate budget must be >= 1, got '{n}'"))?,
+                _ => return Err(placement_parse_err(s)),
+            };
+            return Ok(Placement::FamilyCoLocate { heads_per_shard });
+        }
+        match s {
+            "hash" => Ok(Placement::Hash),
+            "least-loaded" => Ok(Placement::LeastLoaded),
+            _ => Err(placement_parse_err(s)),
+        }
+    }
+}
+
+fn placement_parse_err(s: &str) -> String {
+    format!("unknown placement '{s}' (expected hash|family-co-locate[:N]|least-loaded)")
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Placement::Hash => f.write_str("hash"),
+            Placement::FamilyCoLocate { heads_per_shard } => {
+                write!(f, "family-co-locate:{heads_per_shard}")
+            }
+            Placement::LeastLoaded => f.write_str("least-loaded"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(n: usize) -> Vec<ShardLoad> {
+        (0..n)
+            .map(|shard| ShardLoad {
+                shard,
+                heads: 0,
+                family_heads: 0,
+                foreign_family_heads: 0,
+                inflight: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_spreads() {
+        // pinned values: routing must never change silently across PRs
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        // a family of head names should not all land on one shard
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..32 {
+            seen.insert(hash_shard(&format!("task{i}"), 4));
+        }
+        assert!(seen.len() > 1, "degenerate routing: {seen:?}");
+    }
+
+    #[test]
+    fn hash_placement_matches_hash_shard() {
+        let l = loads(5);
+        for name in ["", "a", "task0", "some/long.head-name"] {
+            assert_eq!(HashPlacement.place(name, None, &l), hash_shard(name, 5));
+            assert_eq!(HashPlacement.place(name, Some("fam"), &l), hash_shard(name, 5));
+        }
+    }
+
+    #[test]
+    fn family_co_locate_fills_before_opening() {
+        let policy = FamilyCoLocate { heads_per_shard: 2 };
+        let mut l = loads(4);
+        // first head of the family opens the emptiest shard (0)
+        assert_eq!(policy.place("f0", Some("f"), &l), 0);
+        l[0].heads += 1;
+        l[0].family_heads += 1;
+        // second head fills shard 0 up to the budget
+        assert_eq!(policy.place("f1", Some("f"), &l), 0);
+        l[0].heads += 1;
+        l[0].family_heads += 1;
+        // budget reached: the third head opens a fresh shard
+        assert_eq!(policy.place("f2", Some("f"), &l), 1);
+    }
+
+    #[test]
+    fn family_co_locate_avoids_foreign_families() {
+        let policy = FamilyCoLocate { heads_per_shard: 4 };
+        let mut l = loads(3);
+        // shard 0 hosts another family; a new family must open shard 1
+        l[0].heads = 2;
+        l[0].foreign_family_heads = 2;
+        assert_eq!(policy.place("g0", Some("g"), &l), 1);
+    }
+
+    #[test]
+    fn family_co_locate_overflows_softly() {
+        let policy = FamilyCoLocate { heads_per_shard: 1 };
+        let mut l = loads(2);
+        // both shards already hold one head of the family (budget full):
+        // the overflow lands on the emptiest shard instead of failing
+        for s in 0..2 {
+            l[s].heads = 1;
+            l[s].family_heads = 1;
+        }
+        l[1].heads = 2;
+        assert_eq!(policy.place("f4", Some("f"), &l), 0);
+    }
+
+    #[test]
+    fn family_co_locate_without_family_hashes() {
+        let policy = FamilyCoLocate::default();
+        let l = loads(4);
+        assert_eq!(policy.place("solo", None, &l), hash_shard("solo", 4));
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_then_empty() {
+        let mut l = loads(3);
+        l[0].inflight = 5;
+        l[1].inflight = 1;
+        l[2].inflight = 1;
+        l[1].heads = 3;
+        l[2].heads = 1;
+        assert_eq!(LeastLoaded.place("h", None, &l), 2);
+        l[2].inflight = 9;
+        assert_eq!(LeastLoaded.place("h", None, &l), 1);
+    }
+
+    #[test]
+    fn placement_parses_and_displays() {
+        assert_eq!("hash".parse::<Placement>().unwrap(), Placement::Hash);
+        assert_eq!("least-loaded".parse::<Placement>().unwrap(), Placement::LeastLoaded);
+        assert_eq!(
+            "family-co-locate".parse::<Placement>().unwrap(),
+            Placement::FamilyCoLocate { heads_per_shard: DEFAULT_HEADS_PER_SHARD }
+        );
+        assert_eq!(
+            "family-co-locate:7".parse::<Placement>().unwrap(),
+            Placement::FamilyCoLocate { heads_per_shard: 7 }
+        );
+        assert!("family-co-locate:0".parse::<Placement>().is_err());
+        assert!("family-co-locate:x".parse::<Placement>().is_err());
+        assert!("round-robin".parse::<Placement>().is_err());
+        for p in [
+            Placement::Hash,
+            Placement::LeastLoaded,
+            Placement::FamilyCoLocate { heads_per_shard: 3 },
+        ] {
+            assert_eq!(p.to_string().parse::<Placement>().unwrap(), p);
+        }
+        assert_eq!(Placement::default().build().name(), "hash");
+    }
+}

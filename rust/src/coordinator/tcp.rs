@@ -7,7 +7,15 @@
 //! One thread per connection (std::net) — request concurrency is bounded by
 //! the coordinator's admission queue, not by connection count.  This is the
 //! deployment-shaped entry point `share-kan serve --tcp ADDR` exposes; unit
-//! and integration tests drive it over localhost.
+//! and integration tests drive it over localhost.  A server fronts either a
+//! single executor ([`TcpServer::start`]) or a sharded pool
+//! ([`TcpServer::start_pool`] — what `serve --deployment --tcp` uses), so
+//! routing-table placement applies to network traffic too.
+//!
+//! On the client side, failures are **typed** ([`ClientError`]): an
+//! application-level error the server reports (unknown head, shape
+//! mismatch, backend failure) is [`ClientError::Server`] carrying the
+//! server's message, distinct from protocol violations and socket I/O.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,10 +24,29 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::pool::ExecutorPool;
+use super::request::InferResponse;
 use super::server::Coordinator;
 use crate::util::json::{self, Json};
 
-/// Newline-delimited-JSON TCP front-end over a [`Coordinator`].
+/// What a [`TcpServer`] fronts: one executor or a sharded pool.
+#[derive(Clone)]
+enum TcpTarget {
+    Single(Coordinator),
+    Pool(ExecutorPool),
+}
+
+impl TcpTarget {
+    fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
+        match self {
+            TcpTarget::Single(c) => c.infer(head, features),
+            TcpTarget::Pool(p) => p.infer(head, features),
+        }
+    }
+}
+
+/// Newline-delimited-JSON TCP front-end over a [`Coordinator`] or an
+/// [`ExecutorPool`].
 pub struct TcpServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -28,8 +55,20 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind and start accepting.  `addr` like "127.0.0.1:0" (0 = ephemeral).
+    /// Bind and start accepting over a single executor.  `addr` like
+    /// "127.0.0.1:0" (0 = ephemeral).
     pub fn start(coordinator: Coordinator, addr: &str) -> Result<TcpServer> {
+        Self::start_target(TcpTarget::Single(coordinator), addr)
+    }
+
+    /// Bind and start accepting over a sharded executor pool: requests
+    /// route by the pool's placement table, so a TCP deployment serves
+    /// any shard count.
+    pub fn start_pool(pool: ExecutorPool, addr: &str) -> Result<TcpServer> {
+        Self::start_target(TcpTarget::Pool(pool), addr)
+    }
+
+    fn start_target(target: TcpTarget, addr: &str) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -45,9 +84,9 @@ impl TcpServer {
                         Ok((stream, _)) => {
                             accepted2.fetch_add(1, Ordering::Relaxed);
                             stream.set_nonblocking(false).ok();
-                            let c = coordinator.clone();
+                            let t = target.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, c);
+                                let _ = handle_conn(stream, t);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -88,7 +127,7 @@ impl Drop for TcpServer {
     }
 }
 
-fn handle_conn(stream: TcpStream, c: Coordinator) -> Result<()> {
+fn handle_conn(stream: TcpStream, target: TcpTarget) -> Result<()> {
     let peer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut writer = peer;
@@ -98,7 +137,7 @@ fn handle_conn(stream: TcpStream, c: Coordinator) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // connection closed
         }
-        let reply = match handle_line(line.trim(), &c) {
+        let reply = match handle_line(line.trim(), &target) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
         };
@@ -107,7 +146,7 @@ fn handle_conn(stream: TcpStream, c: Coordinator) -> Result<()> {
     }
 }
 
-fn handle_line(line: &str, c: &Coordinator) -> Result<Json> {
+fn handle_line(line: &str, target: &TcpTarget) -> Result<Json> {
     if line.is_empty() {
         anyhow::bail!("empty request");
     }
@@ -125,11 +164,50 @@ fn handle_line(line: &str, c: &Coordinator) -> Result<Json> {
         .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
         .collect();
     anyhow::ensure!(features.iter().all(|v| v.is_finite()), "non-numeric feature");
-    let resp = c.infer(&head, features)?;
+    let resp = target.infer(&head, features)?;
     Ok(Json::obj(vec![
         ("id", Json::num(resp.id as f64)),
         ("scores", Json::Arr(resp.scores.iter().map(|&s| Json::num(s as f64)).collect())),
     ]))
+}
+
+/// Typed client-side failure from [`TcpClient::infer`].
+#[derive(Debug)]
+pub enum ClientError {
+    /// The server processed the request and replied with an
+    /// application-level error (unknown head, feature-dim mismatch,
+    /// backend failure, bad request) — the payload is the server's
+    /// message, i.e. the [`InferResponse`] error surfaced end-to-end.
+    Server(String),
+    /// The reply violated the protocol (unparseable JSON, missing fields).
+    Protocol(String),
+    /// Socket I/O failed (connection reset, refused, timed out).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Server(msg) => write!(f, "server error: {msg}"),
+            ClientError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
 }
 
 /// Minimal blocking client for tests/examples.
@@ -146,8 +224,12 @@ impl TcpClient {
         Ok(TcpClient { reader: BufReader::new(stream), writer: peer })
     }
 
-    /// Send one request and block for its scores.
-    pub fn infer(&mut self, head: &str, features: &[f32]) -> Result<Vec<f32>> {
+    /// Send one request and block for its scores.  Server-side
+    /// [`InferResponse`] errors surface as [`ClientError::Server`] with
+    /// the server's message; transport and reply-shape failures are
+    /// [`ClientError::Io`] / [`ClientError::Protocol`].
+    pub fn infer(&mut self, head: &str, features: &[f32])
+                 -> std::result::Result<Vec<f32>, ClientError> {
         let req = Json::obj(vec![
             ("head", Json::str(head)),
             ("features", Json::Arr(features.iter().map(|&f| Json::num(f as f64)).collect())),
@@ -155,17 +237,22 @@ impl TcpClient {
         self.writer.write_all(json::to_string(&req).as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let resp = json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
-        if let Some(err) = resp.get("error").and_then(|j| j.as_str()) {
-            anyhow::bail!("server error: {err}");
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(ClientError::Protocol("connection closed before reply".into()));
         }
-        Ok(resp
-            .get("scores")
+        let resp = json::parse(line.trim())
+            .map_err(|e| ClientError::Protocol(format!("bad reply: {e}")))?;
+        if let Some(err) = resp.get("error").and_then(|j| j.as_str()) {
+            return Err(ClientError::Server(err.to_string()));
+        }
+        resp.get("scores")
             .and_then(|j| j.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("missing scores"))?
-            .iter()
-            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
-            .collect())
+            .ok_or_else(|| ClientError::Protocol("missing scores".into()))
+            .map(|scores| {
+                scores
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                    .collect()
+            })
     }
 }

@@ -9,32 +9,39 @@
 //!            (family mode fits ONE universal codebook over all heads)
 //!   inspect  --in ck.skpt
 //!   eval     --in ck.skpt [--split test|coco] [--seed 42]
-//!   serve    --head ck.skpt [--backend native|arena|family|pjrt]
+//!   serve    --deployment deploy.toml [--tcp ADDR] [--requests 1000]
+//!            (file-driven deployment: heads/families/backend/placement in
+//!            one TOML or JSON file; CLI flags override)
+//!            | --head ck.skpt [--backend native|arena|family|pjrt]
 //!            [--kernel auto|scalar|simd] [--shards N] [--requests 1000]
 //!            [--max-batch 128] [--max-wait-ms 2] [--tcp ADDR]
-//!            | --family a.skpt,b.skpt,... [--shards N] (shared-codebook
-//!            family deployment: one codebook arena per shard)
+//!            | --family a.skpt,b.skpt,... [--shards N]
+//!            [--placement hash|family-co-locate[:N]|least-loaded]
+//!            (shared-codebook family deployment: one codebook arena per
+//!            OCCUPIED shard — co-location controls how many that is)
 //!   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
-//!            | --family [--heads N] (shared vs marginal byte accounting)
+//!            | --family [--heads N] [--shards N] (shared vs marginal and
+//!            placement byte accounting) | --deployment deploy.toml
+//!            (placement dry-run, no executors started)
 //!
 //! The default build serves everything through the pure-Rust native
 //! backend — no Python, no PJRT, no artifacts/ directory.  With
 //! `--features pjrt` (and real xla bindings + `make artifacts`) the same
 //! commands can run over the AOT-lowered HLO artifacts instead.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 use share_kan::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, PoolConfig,
+    BackendKind, DeploymentSpec, ExecutorPool, HeadWeights, Placement, TcpServer,
 };
 use share_kan::data::{standard_splits, Pcg32};
 use share_kan::eval::mean_average_precision;
 use share_kan::kan::checkpoint::Checkpoint;
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memplan::{plan_family, plan_head, plan_vq_head};
-use share_kan::runtime::{BackendConfig, BackendSpec, KernelMode};
+use share_kan::runtime::KernelMode;
 use share_kan::util::cli::Args;
 use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
@@ -45,10 +52,12 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options
            --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
   inspect  --in ck.skpt
   eval     --in ck.skpt [--split test|coco] [--seed 42]
-  serve    --head ck.skpt [--backend native|arena|family|pjrt] [--kernel auto|scalar|simd] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
-           --family a.skpt,b.skpt,... [--kernel auto|scalar|simd] [--shards N]   (shared-codebook family deployment)
+  serve    --deployment deploy.toml [--tcp ADDR] [--requests 1000] [--shards N] [--placement P]   (file-driven deployment)
+           --head ck.skpt [--backend native|arena|family|pjrt] [--kernel auto|scalar|simd] [--shards N] [--tcp ADDR] [--requests 1000] [--max-batch 128] [--max-wait-ms 2]
+           --family a.skpt,b.skpt,... [--kernel auto|scalar|simd] [--shards N] [--placement hash|family-co-locate[:N]|least-loaded]
   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
-           --family [--heads N] [--k 512] [--int8]   (family arena: shared vs marginal bytes)
+           --family [--heads N] [--k 512] [--int8] [--shards N] [--heads-per-shard N]   (family arena + placement accounting)
+           --deployment deploy.toml   (placement dry-run)
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
 
 fn main() {
@@ -211,6 +220,39 @@ fn kernel_mode(args: &Args) -> Result<KernelMode> {
         .map_err(|e| anyhow::anyhow!("--kernel: {e}"))
 }
 
+/// Parse `--placement {hash,family-co-locate[:N],least-loaded}` plus the
+/// optional `--heads-per-shard N` co-location budget.  The budget re-tunes
+/// an (explicit or implied) co-locate policy and selects co-location when
+/// no `--placement` was given; combining it with a different explicit
+/// policy is an error, never a silent override.
+fn placement_arg(args: &Args) -> Result<Placement> {
+    let explicit = args.get("placement");
+    let placement = match explicit {
+        Some(s) => s
+            .parse::<Placement>()
+            .map_err(|e| anyhow::anyhow!("--placement: {e}"))?,
+        None => Placement::Hash,
+    };
+    let b = match args.get("heads-per-shard") {
+        Some(b) => b,
+        None => return Ok(placement),
+    };
+    let budget: usize = b
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--heads-per-shard expects an integer, got '{b}'"))?;
+    anyhow::ensure!(budget >= 1, "--heads-per-shard must be >= 1");
+    match placement {
+        Placement::FamilyCoLocate { .. } => {
+            Ok(Placement::FamilyCoLocate { heads_per_shard: budget })
+        }
+        _ if explicit.is_none() => Ok(Placement::FamilyCoLocate { heads_per_shard: budget }),
+        other => anyhow::bail!(
+            "--heads-per-shard is a family-co-locate budget and conflicts with \
+             --placement {other}"
+        ),
+    }
+}
+
 fn spec_from_meta(ck: &Checkpoint) -> Result<KanSpec> {
     let get = |k: &str| ck.meta.get(k).and_then(|j| j.as_usize());
     Ok(KanSpec {
@@ -262,109 +304,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    if let Some(list) = args.get("family") {
-        return cmd_serve_family(args, list);
-    }
-    let head_path = PathBuf::from(args.get("head").context("--head required")?);
-    let ck = Checkpoint::load(&head_path)?;
-    let head = HeadWeights::from_checkpoint(&ck)?;
-    let kernel = kernel_mode(args)?;
-    let head_spec = BackendSpec::for_head(&head).with_kernel(kernel);
-    let d_in = head_spec.kan.d_in;
-    let backend = match args.get_or("backend", "native").as_str() {
-        "native" => BackendConfig::Native(head_spec),
-        "arena" => BackendConfig::Arena(head_spec),
-        "family" => BackendConfig::FamilyArena(head_spec),
-        #[cfg(feature = "pjrt")]
-        "pjrt" => BackendConfig::Pjrt { artifacts_dir: artifacts_dir(args) },
-        other => anyhow::bail!(
-            "unknown backend '{other}' (native|arena|family{})",
-            if cfg!(feature = "pjrt") { "|pjrt" } else { "; rebuild with --features pjrt for pjrt" }
-        ),
-    };
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 128),
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
-    };
-    let shards = args.get_usize("shards", 1);
-    println!("serving head '{}' ({} weight bytes) on the {} backend, {shards} executor shard(s)",
-             head.model(),
-             head.weight_bytes(),
-             args.get_or("backend", "native"));
-    // the kernel knob drives the arena backends only (native is the scalar
-    // reference, pjrt executes AOT artifacts) — resolve on the CLI thread
-    // for those so the operator sees what the executor will dispatch, and
-    // don't let a forced `--kernel simd` abort a backend that ignores it
-    if matches!(args.get_or("backend", "native").as_str(), "arena" | "family") {
-        println!("kernel dispatch: {} -> {}", kernel, kernel.resolve()?.name());
-    }
-
-    if shards > 1 {
-        anyhow::ensure!(
-            args.get("tcp").is_none(),
-            "--tcp currently serves through a single executor; drop --shards"
-        );
-        let pool = ExecutorPool::start(PoolConfig {
-            backend,
-            policy,
-            queue_capacity: 4096,
-            num_shards: shards,
-        })?;
-        let c = pool.client.clone();
-        // a single served head would hash to ONE shard under name routing
-        // and leave the rest idle, so the CLI replicates it across every
-        // shard and spreads the synthetic load round-robin (multi-head
-        // deployments use c.add_head and get deterministic name routing)
-        for s in 0..shards {
-            c.shard(s).add_head("default", head.clone())?;
-        }
-        println!("head 'default' replicated on all {shards} shards; load spread round-robin");
-        let n = args.get_usize("requests", 1000);
-        let mut rng = Pcg32::seeded(9);
-        let t0 = std::time::Instant::now();
-        let mut pending = Vec::new();
-        for i in 0..n {
-            pending.push(
-                c.shard(i % shards)
-                    .try_submit("default", rng.normal_vec(d_in, 0.0, 1.0))?,
-            );
-            if pending.len() >= 256 {
-                for rx in pending.drain(..) {
-                    rx.recv().ok();
-                }
-            }
-        }
-        for rx in pending {
-            rx.recv().ok();
-        }
-        let dt = t0.elapsed();
-        let m = c.aggregated_metrics();
-        println!("{n} requests in {dt:?} -> {:.0} req/s", n as f64 / dt.as_secs_f64());
-        println!("latency (all shards): {}", m.latency.summary());
-        pool.shutdown();
-        return Ok(());
-    }
-
-    let handle = Coordinator::start(CoordinatorConfig { backend, policy, queue_capacity: 4096 })?;
-    let c = handle.client.clone();
-    c.add_head("default", head)?;
-    if let Some(addr) = args.get("tcp") {
-        // long-running TCP mode: newline-delimited JSON until Ctrl-C
-        let server = share_kan::coordinator::TcpServer::start(c, addr)?;
-        println!("listening on {} — protocol: {{\"head\":\"default\",\"features\":[..]}}\\n",
-                 server.addr());
-        loop {
-            std::thread::sleep(Duration::from_secs(3600));
-        }
-    }
-    // synthetic closed-loop load
-    let n = args.get_usize("requests", 1000);
+/// Synthetic closed-loop load through a pool client, round-robin across
+/// `heads`; prints throughput + aggregated metrics.
+fn drive_load(client: &ExecutorPool, heads: &[String], d_in: usize, n: usize) -> Result<()> {
     let mut rng = Pcg32::seeded(9);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
-    for _ in 0..n {
-        pending.push(c.try_submit("default", rng.normal_vec(d_in, 0.0, 1.0))?);
+    for i in 0..n {
+        let head = &heads[i % heads.len()];
+        pending.push(client.try_submit(head, rng.normal_vec(d_in, 0.0, 1.0))?);
         if pending.len() >= 256 {
             for rx in pending.drain(..) {
                 rx.recv().ok();
@@ -375,22 +323,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rx.recv().ok();
     }
     let dt = t0.elapsed();
-    let m = c.metrics();
+    let m = client.aggregated_metrics();
     println!("{n} requests in {dt:?} -> {:.0} req/s", n as f64 / dt.as_secs_f64());
-    println!("latency: {}", m.latency.summary());
+    println!("latency (all shards): {}", m.latency.summary());
     println!("batches: {} (mean size {:.1}, padding {:.1}%)",
              m.counters.batches.load(std::sync::atomic::Ordering::Relaxed),
              m.counters.mean_batch_size(),
              100.0 * m.counters.padding_fraction());
-    handle.shutdown();
     Ok(())
 }
 
-/// `serve --family a.skpt,b.skpt,... [--shards N]`: pooled family-arena
-/// deployment.  Every head routes to its FNV-1a shard; the first head on a
-/// shard materializes the family's shared codebook arena there, every
-/// later head hot-adds at marginal (indices + scalars) cost.  Synthetic
-/// closed-loop load round-robins across the heads.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(file) = args.get("deployment") {
+        return cmd_serve_deployment(args, file);
+    }
+    if let Some(list) = args.get("family") {
+        return cmd_serve_family(args, list);
+    }
+    let head_path = PathBuf::from(args.get("head").context("--head required")?);
+    let ck = Checkpoint::load(&head_path)?;
+    let head = HeadWeights::from_checkpoint(&ck)?;
+    let kernel = kernel_mode(args)?;
+    let d_in = head.d_in();
+    let backend: BackendKind = args
+        .get_or("backend", "native")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--backend: {e}"))?;
+    let shards = args.get_usize("shards", 1);
+    let mut spec = DeploymentSpec::new(backend)
+        .with_kernel(kernel)
+        .with_shards(shards)
+        .with_placement(placement_arg(args)?)
+        .with_max_batch(args.get_usize("max-batch", 128))
+        .with_max_wait(Duration::from_millis(args.get_u64("max-wait-ms", 2)));
+    #[cfg(feature = "pjrt")]
+    if backend == BackendKind::Pjrt {
+        spec.artifacts_dir = Some(artifacts_dir(args));
+    }
+    println!("serving head '{}' ({} weight bytes) on the {backend} backend, \
+              {shards} executor shard(s)",
+             head.model(),
+             head.weight_bytes());
+    // the kernel knob drives the arena backends only (native is the scalar
+    // reference, pjrt executes AOT artifacts) — resolve on the CLI thread
+    // for those so the operator sees what the executor will dispatch, and
+    // don't let a forced `--kernel simd` abort a backend that ignores it
+    if matches!(backend, BackendKind::Arena | BackendKind::FamilyArena) {
+        println!("kernel dispatch: {} -> {}", kernel, kernel.resolve()?.name());
+    }
+    // a single served head would hash to ONE shard under name routing and
+    // leave the rest idle, so multi-shard single-head deployments replicate
+    // it across every shard and the pool round-robins requests
+    spec = if shards > 1 {
+        println!("head 'default' replicated on all {shards} shards; requests round-robin");
+        spec.replicated_head("default", head)
+    } else {
+        spec.head("default", head)
+    };
+    let dep = spec.deploy()?;
+
+    if let Some(addr) = args.get("tcp") {
+        // long-running TCP mode: newline-delimited JSON until Ctrl-C
+        let server = TcpServer::start_pool(dep.client().clone(), addr)?;
+        println!("listening on {} — protocol: {{\"head\":\"default\",\"features\":[..]}}\\n",
+                 server.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    // synthetic closed-loop load
+    let n = args.get_usize("requests", 1000);
+    drive_load(dep.client(), &["default".to_string()], d_in, n)?;
+    dep.shutdown();
+    Ok(())
+}
+
+/// `serve --family a.skpt,b.skpt,... [--shards N] [--placement P]`: pooled
+/// family-arena deployment.  Every head routes by the placement policy
+/// (default: FNV-1a hash); the first head on a shard materializes the
+/// family's shared codebook arena there, every later head hot-adds at
+/// marginal (indices + scalars) cost — `--placement family-co-locate`
+/// pins the family onto the fewest shards so the shared region is paid
+/// once per occupied shard.  Synthetic closed-loop load round-robins
+/// across the heads.
 fn cmd_serve_family(args: &Args, list: &str) -> Result<()> {
     let paths: Vec<PathBuf> = list
         .split(',')
@@ -398,10 +413,6 @@ fn cmd_serve_family(args: &Args, list: &str) -> Result<()> {
         .map(PathBuf::from)
         .collect();
     anyhow::ensure!(!paths.is_empty(), "--family needs at least one checkpoint");
-    anyhow::ensure!(
-        args.get("tcp").is_none(),
-        "--tcp currently serves through `serve --head`; drop --family"
-    );
     let mut heads: Vec<(String, HeadWeights)> = Vec::new();
     for p in &paths {
         let ck = Checkpoint::load(p)?;
@@ -420,81 +431,82 @@ fn cmd_serve_family(args: &Args, list: &str) -> Result<()> {
         );
         heads.push((stem, w));
     }
-    // the batch-bucket ladder tops out at --max-batch, so the scratch the
-    // backend actually allocates and the accounting printed below agree
-    let max_batch = args.get_usize("max-batch", 128).max(1);
-    let mut buckets: Vec<usize> = BackendSpec::default()
-        .batch_buckets
-        .into_iter()
-        .filter(|&b| b < max_batch)
-        .collect();
-    buckets.push(max_batch);
     let kernel = kernel_mode(args)?;
-    let spec = BackendSpec::for_head(&heads[0].1)
-        .with_buckets(&buckets)
-        .with_kernel(kernel);
-    let d_in = spec.kan.d_in;
     println!("kernel dispatch: {} -> {}", kernel, kernel.resolve()?.name());
-    let precision = if matches!(heads[0].1, HeadWeights::VqInt8 { .. }) {
-        Precision::Int8
-    } else {
-        Precision::Fp32
-    };
-    let fam = plan_family(&spec.kan, &spec.vq, precision, max_batch)
-        .map_err(|e| anyhow::anyhow!(e))?;
-    println!(
-        "family of {} heads: shared {} B/shard + marginal {} B/head \
-         (private-arena head: {} B)",
-        heads.len(),
-        fam.shared_bytes(),
-        fam.head_bytes(),
-        fam.private_head_bytes().map_err(|e| anyhow::anyhow!(e))?
-    );
-    let policy = BatchPolicy {
-        max_batch,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)),
-    };
-    let shards = args.get_usize("shards", 1);
-    let n = args.get_usize("requests", 1000);
-    let backend = BackendConfig::FamilyArena(spec);
+    let d_in = heads[0].1.d_in();
+    let names: Vec<String> = heads.iter().map(|(n, _)| n.clone()).collect();
+    let spec = DeploymentSpec::new(BackendKind::FamilyArena)
+        .with_kernel(kernel)
+        .with_shards(args.get_usize("shards", 1))
+        .with_placement(placement_arg(args)?)
+        .with_max_batch(args.get_usize("max-batch", 128).max(1))
+        .with_max_wait(Duration::from_millis(args.get_u64("max-wait-ms", 2)))
+        .family("family", heads);
+    let dep = spec.deploy()?;
+    println!("{}", dep.report().summary());
 
-    // one pool covers both shapes: a single shard is just a 1-shard pool
-    let pool = ExecutorPool::start(PoolConfig {
-        backend,
-        policy,
-        queue_capacity: 4096,
-        num_shards: shards.max(1),
-    })?;
-    let touched = pool.client.add_family(&heads)?;
-    println!("{} heads registered across {touched} of {} shard(s) — one shared \
-              codebook arena per touched shard",
-             heads.len(),
-             pool.client.num_shards());
-    let c = pool.client.clone();
-    let mut rng = Pcg32::seeded(9);
-    let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
-    for i in 0..n {
-        let head = &heads[i % heads.len()].0;
-        pending.push(c.try_submit(head, rng.normal_vec(d_in, 0.0, 1.0))?);
-        if pending.len() >= 256 {
-            for rx in pending.drain(..) {
-                rx.recv().ok();
-            }
+    if let Some(addr) = args.get("tcp") {
+        let server = TcpServer::start_pool(dep.client().clone(), addr)?;
+        println!("listening on {} — protocol: {{\"head\":\"<stem>\",\"features\":[..]}}\\n",
+                 server.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
         }
     }
-    for rx in pending {
-        rx.recv().ok();
+    let n = args.get_usize("requests", 1000);
+    drive_load(dep.client(), &names, d_in, n)?;
+    dep.shutdown();
+    Ok(())
+}
+
+/// `serve --deployment deploy.toml`: the whole deployment — heads,
+/// families, backend, kernel, batching, shard count, placement — read from
+/// one TOML/JSON file ([`DeploymentSpec::from_file`]); `--shards`,
+/// `--kernel`, `--placement`/`--heads-per-shard` override the file.
+fn cmd_serve_deployment(args: &Args, file: &str) -> Result<()> {
+    let mut spec = DeploymentSpec::from_file(Path::new(file))?;
+    if let Some(s) = args.get("shards") {
+        spec.shards = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--shards expects an integer, got '{s}'"))?;
     }
-    let dt = t0.elapsed();
-    let m = c.aggregated_metrics();
-    println!("{n} requests in {dt:?} -> {:.0} req/s", n as f64 / dt.as_secs_f64());
-    println!("latency (all shards): {}", m.latency.summary());
-    pool.shutdown();
+    if args.get("kernel").is_some() {
+        spec.kernel = kernel_mode(args)?;
+    }
+    if args.get("placement").is_some() || args.get("heads-per-shard").is_some() {
+        spec.placement = placement_arg(args)?;
+    }
+    let names = spec.head_names();
+    let dep = spec.deploy()?;
+    println!("{}", dep.report().summary());
+
+    if let Some(addr) = args.get("tcp") {
+        let server = TcpServer::start_pool(dep.client().clone(), addr)?;
+        println!("listening on {} — protocol: {{\"head\":\"<name>\",\"features\":[..]}}\\n",
+                 server.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let n = args.get_usize("requests", 1000);
+    drive_load(dep.client(), &names, dep.input_dim(), n)?;
+    // per-shard breakdown: the observability the LeastLoaded policy (and
+    // the operator) decides over
+    let pm = dep.metrics();
+    for (s, m) in pm.per_shard.iter().enumerate() {
+        println!("  shard {s}: {} responses, p95 {:?}, mean batch {:.1}",
+                 m.counters.responses.load(std::sync::atomic::Ordering::Relaxed),
+                 m.latency.percentile(0.95),
+                 m.counters.mean_batch_size());
+    }
+    dep.shutdown();
     Ok(())
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
+    if let Some(file) = args.get("deployment") {
+        return cmd_plan_deployment(Path::new(file));
+    }
     if args.flag("family") || args.get("family").is_some() {
         return cmd_plan_family(args);
     }
@@ -540,10 +552,54 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `plan --family [--heads N] [--k] [--int8] [--max-batch]`: print the
-/// family-arena layout (shared region + per-head region) and the
+/// `plan --deployment deploy.toml`: dry-run the file's placement policy
+/// over its heads — which shard each head would land on, and how many
+/// shards each family's shared region would be materialized on — without
+/// starting a single executor thread.
+fn cmd_plan_deployment(path: &Path) -> Result<()> {
+    let spec = DeploymentSpec::from_file(path)?;
+    let placements = spec.simulate_placements()?;
+    println!("placement dry-run: {} head(s), {} shard(s), policy {}",
+             placements.len(),
+             spec.shards,
+             spec.placement);
+    let mut occupied = std::collections::BTreeSet::new();
+    let mut family_shards: std::collections::BTreeMap<String, std::collections::BTreeSet<usize>> =
+        std::collections::BTreeMap::new();
+    let mut replicated = false;
+    for p in &placements {
+        match p.shard {
+            Some(s) => {
+                occupied.insert(s);
+                let fam = match &p.family {
+                    Some(f) => {
+                        family_shards.entry(f.clone()).or_default().insert(s);
+                        format!(" (family {f})")
+                    }
+                    None => String::new(),
+                };
+                println!("  {:<18} -> shard {s}{fam}", p.head);
+            }
+            None => {
+                replicated = true;
+                println!("  {:<18} -> replicated on all shards", p.head);
+            }
+        }
+    }
+    let shards_occupied = if replicated { spec.shards } else { occupied.len() };
+    println!("{} of {} shard(s) occupied", shards_occupied, spec.shards);
+    for (fam, shards) in &family_shards {
+        println!("  family {fam}: shared codebook region materialized on {} shard(s)",
+                 shards.len());
+    }
+    Ok(())
+}
+
+/// `plan --family [--heads N] [--k] [--int8] [--max-batch] [--shards N]`:
+/// print the family-arena layout (shared region + per-head region), the
 /// shared-vs-marginal byte accounting (paper §6: head N+1 costs only
-/// packed indices + scalars).
+/// packed indices + scalars), and — with `--shards` — the placement
+/// accounting: shared-region bytes under hash spread vs co-location.
 fn cmd_plan_family(args: &Args) -> Result<()> {
     let spec = KanSpec::default();
     let vq = VqSpec { codebook_size: args.get_usize("k", VqSpec::default().codebook_size) };
@@ -556,7 +612,7 @@ fn cmd_plan_family(args: &Args) -> Result<()> {
     fam.head.validate().map_err(|e| anyhow::anyhow!(e))?;
     println!("LUTHAM family arena plan ({precision:?}, K={}, max batch {max_batch}):",
              vq.codebook_size);
-    println!("shared region — materialized once per family per shard:");
+    println!("shared region — materialized once per family per OCCUPIED shard:");
     for b in &fam.shared.buffers {
         println!("  {:<18} offset {:>10}  size {:>10}", b.name, b.offset, b.size);
     }
@@ -577,5 +633,26 @@ fn cmd_plan_family(args: &Args) -> Result<()> {
              private_total as f64 / family_total as f64);
     println!("  marginal head cost: {:.1}% of a private-arena head",
              100.0 * fam.head_bytes() as f64 / private as f64);
+    // placement accounting: how many times the shared region is paid on a
+    // sharded pool (hash spread worst case vs family co-location)
+    if let Some(sh) = args.get("shards") {
+        let shards: usize = sh
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--shards expects an integer, got '{sh}'"))?;
+        anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+        let budget = args
+            .get_usize("heads-per-shard",
+                       share_kan::coordinator::serving::DEFAULT_HEADS_PER_SHARD)
+            .max(1);
+        let hash_occ = shards.min(n_heads);
+        let full_shards = n_heads / budget + usize::from(n_heads % budget != 0);
+        let colo_occ = shards.min(full_shards);
+        let shared = fam.shared_bytes();
+        println!("placement accounting on {shards} shard(s):");
+        println!("  hash (worst case):          shared region x {hash_occ} = {} bytes",
+                 shared * hash_occ);
+        println!("  family-co-locate:{budget} (budget): shared region x {colo_occ} = {} bytes",
+                 shared * colo_occ);
+    }
     Ok(())
 }

@@ -1,0 +1,362 @@
+//! Minimal TOML subset parser for deployment files.
+//!
+//! Substrate note (DESIGN.md §2): the build image has no network access to
+//! crates.io, so — like [`super::json`] — the library carries its own tiny
+//! TOML reader.  It parses into the same [`Json`] value tree the JSON
+//! parser produces, so `serve --deployment file.{toml,json}` shares one
+//! schema reader.
+//!
+//! Supported subset (enough for deployment files, documented in README):
+//!
+//! * `[table]` and nested `[a.b]` headers
+//! * `[[array-of-tables]]` headers (and nested `[[a.b]]`)
+//! * `key = value` with bare (`a-z A-Z 0-9 _ -`) or `"quoted"` keys
+//! * values: basic `"strings"` (with `\" \\ \n \t \r` escapes), integers,
+//!   floats, booleans, and single-line arrays of those
+//! * `#` comments and blank lines
+//!
+//! Not supported (parse error, never silent misreads): dotted keys, inline
+//! tables `{..}`, multi-line arrays/strings, literal `'strings'`, dates.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Parse a TOML document (subset above) into a [`Json`] object tree.
+pub fn parse(input: &str) -> Result<Json, String> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // path of the table subsequent `key = value` lines land in; the final
+    // flag records whether it was opened as an array-of-tables element
+    let mut current: Vec<String> = Vec::new();
+    let mut current_is_array = false;
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[").and_then(|r| r.strip_suffix("]]")) {
+            current = parse_path(inner).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            current_is_array = true;
+            // open the new array element eagerly so empty tables exist
+            table_at(&mut root, &current, true)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            current = parse_path(inner).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            current_is_array = false;
+            table_at(&mut root, &current, false)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        } else if let Some((key, value)) = line.split_once('=') {
+            let key = parse_key(key.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let value =
+                parse_value(value.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let table = if current.is_empty() {
+                &mut root
+            } else {
+                // re-navigating never re-opens an array element: [[t]] was
+                // pushed when the header was read, so this lands in it
+                table_at_existing(&mut root, &current, current_is_array)
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?
+            };
+            if table.insert(key.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key '{key}'", lineno + 1));
+            }
+        } else {
+            return Err(format!("line {}: expected `[table]`, `[[table]]` or `key = value`",
+                               lineno + 1));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Drop a trailing `#` comment, respecting `"..."` strings.
+fn strip_comment(line: &str) -> Result<&str, String> {
+    let bytes = line.as_bytes();
+    let mut in_string = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match b {
+            b'\\' if in_string => escaped = true,
+            b'"' => in_string = !in_string,
+            b'#' if !in_string => return Ok(&line[..i]),
+            _ => {}
+        }
+    }
+    if in_string {
+        return Err("unterminated string".into());
+    }
+    Ok(line)
+}
+
+/// `a.b.c` header path into its parts (each part a bare or quoted key).
+fn parse_path(s: &str) -> Result<Vec<String>, String> {
+    let mut parts = Vec::new();
+    for part in s.split('.') {
+        parts.push(parse_key(part.trim())?);
+    }
+    Ok(parts)
+}
+
+fn parse_key(s: &str) -> Result<String, String> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        if inner.is_empty() {
+            return Err("empty quoted key".into());
+        }
+        return Ok(inner.to_string());
+    }
+    if !s.is_empty()
+        && s.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+    {
+        Ok(s.to_string())
+    } else {
+        Err(format!("invalid key '{s}'"))
+    }
+}
+
+/// Navigate to (creating as needed) the table at `path`; with
+/// `push_array`, the final segment is an array-of-tables and a fresh
+/// element is appended.
+fn table_at<'a>(root: &'a mut BTreeMap<String, Json>, path: &[String], push_array: bool)
+                -> Result<&'a mut BTreeMap<String, Json>, String> {
+    navigate(root, path, push_array, true)
+}
+
+/// Navigate to the table at `path` without appending array elements (used
+/// for `key = value` lines after the header already opened the table).
+fn table_at_existing<'a>(root: &'a mut BTreeMap<String, Json>, path: &[String],
+                         last_is_array: bool)
+                         -> Result<&'a mut BTreeMap<String, Json>, String> {
+    navigate(root, path, last_is_array, false)
+}
+
+fn navigate<'a>(root: &'a mut BTreeMap<String, Json>, path: &[String], last_is_array: bool,
+                push_new_element: bool)
+                -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for (i, part) in path.iter().enumerate() {
+        let is_last = i + 1 == path.len();
+        let make_array = is_last && last_is_array;
+        let slot = cur.entry(part.clone()).or_insert_with(|| {
+            if make_array {
+                Json::Arr(Vec::new())
+            } else {
+                Json::Obj(BTreeMap::new())
+            }
+        });
+        cur = match slot {
+            Json::Obj(m) => {
+                if make_array {
+                    return Err(format!("'{part}' is a table, not an array of tables"));
+                }
+                m
+            }
+            Json::Arr(v) => {
+                if is_last && !last_is_array && push_new_element {
+                    // a `[t]` header over an existing `[[t]]` would silently
+                    // merge into the last element — reject instead (the
+                    // module contract: parse error, never silent misreads)
+                    return Err(format!(
+                        "'{part}' is an array of tables; use [[{part}]]"
+                    ));
+                }
+                if make_array && push_new_element {
+                    v.push(Json::Obj(BTreeMap::new()));
+                }
+                match v.last_mut() {
+                    Some(Json::Obj(m)) => m,
+                    _ => return Err(format!("'{part}' is not an array of tables")),
+                }
+            }
+            _ => return Err(format!("'{part}' is a value, not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if s.starts_with('"') {
+        return parse_string(s).map(Json::Str);
+    }
+    if s.starts_with('[') {
+        return parse_array(s);
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("unsupported value '{s}' (expected string, number, bool or array)"))
+}
+
+fn parse_string(s: &str) -> Result<String, String> {
+    let inner = s
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .ok_or_else(|| format!("unterminated string '{s}'"))?;
+    let mut out = String::new();
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '"' {
+            return Err(format!("stray '\"' inside string '{s}'"));
+        }
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            other => return Err(format!("unsupported escape '\\{}'",
+                                        other.map(String::from).unwrap_or_default())),
+        }
+    }
+    Ok(out)
+}
+
+/// Single-line array of scalar values (strings, numbers, booleans).
+fn parse_array(s: &str) -> Result<Json, String> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .ok_or_else(|| format!("unterminated array '{s}'"))?;
+    let mut items = Vec::new();
+    for piece in split_top_level(inner)? {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        if piece.starts_with('[') {
+            return Err("nested arrays are not supported".into());
+        }
+        items.push(parse_value(piece)?);
+    }
+    Ok(Json::Arr(items))
+}
+
+/// Split on commas outside string quotes.
+fn split_top_level(s: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_string = false;
+    let mut escaped = false;
+    for c in s.chars() {
+        if escaped {
+            cur.push(c);
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_string => {
+                cur.push(c);
+                escaped = true;
+            }
+            '"' => {
+                cur.push(c);
+                in_string = !in_string;
+            }
+            ',' if !in_string => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_string {
+        return Err("unterminated string in array".into());
+    }
+    out.push(cur);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_deployment_shaped_document() {
+        let doc = parse(
+            r#"
+# a deployment file
+[deployment]
+backend = "family"
+shards = 4
+placement = "family-co-locate"
+heads_per_shard = 2
+max_wait_ms = 2
+buckets = [1, 8, 32]
+
+[[family]]
+name = "demo"
+synthetic = 4
+seed = 42
+
+[[family]]
+name = "other"
+paths = ["a.skpt", "b.skpt"]  # trailing comment
+"#,
+        )
+        .unwrap();
+        let dep = doc.get("deployment").unwrap();
+        assert_eq!(dep.get("backend").unwrap().as_str(), Some("family"));
+        assert_eq!(dep.get("shards").unwrap().as_usize(), Some(4));
+        assert_eq!(dep.get("heads_per_shard").unwrap().as_usize(), Some(2));
+        let buckets = dep.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[2].as_usize(), Some(32));
+        let fams = doc.get("family").unwrap().as_arr().unwrap();
+        assert_eq!(fams.len(), 2);
+        assert_eq!(fams[0].get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(fams[0].get("synthetic").unwrap().as_usize(), Some(4));
+        let paths = fams[1].get("paths").unwrap().as_arr().unwrap();
+        assert_eq!(paths[1].as_str(), Some("b.skpt"));
+    }
+
+    #[test]
+    fn scalars_and_escapes() {
+        let doc = parse("a = \"x \\\"y\\\" #z\"\nb = -1.5\nc = true\nd = \"\"").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_str(), Some("x \"y\" #z"));
+        assert_eq!(doc.get("b").unwrap().as_f64(), Some(-1.5));
+        assert_eq!(doc.get("c"), Some(&Json::Bool(true)));
+        assert_eq!(doc.get("d").unwrap().as_str(), Some(""));
+    }
+
+    #[test]
+    fn nested_table_headers() {
+        let doc = parse("[a.b]\nx = 1\n[a.c]\ny = 2").unwrap();
+        let a = doc.get("a").unwrap();
+        assert_eq!(a.get("b").unwrap().get("x").unwrap().as_usize(), Some(1));
+        assert_eq!(a.get("c").unwrap().get("y").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn rejects_out_of_subset_and_malformed() {
+        assert!(parse("a = {x = 1}").is_err(), "inline tables");
+        assert!(parse("a = 'literal'").is_err(), "literal strings");
+        assert!(parse("a = [[1], [2]]").is_err(), "nested arrays");
+        assert!(parse("just words").is_err());
+        assert!(parse("a = \"unterminated").is_err());
+        assert!(parse("[t]\na = 1\na = 2").is_err(), "duplicate key");
+        assert!(parse("[t]\nx = 1\n[[t]]\ny = 2").is_err(), "table redeclared as array");
+        assert!(parse("[[t]]\nx = 1\n[t]\ny = 2").is_err(),
+                "array of tables redeclared as table (silent merge)");
+        assert!(parse("a = 1979-05-27").is_err(), "dates unsupported");
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        assert_eq!(parse("").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(parse("# nothing\n\n").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+}

@@ -228,6 +228,46 @@ fn tcp_server_roundtrip() {
 }
 
 #[test]
+fn tcp_client_surfaces_server_errors_as_typed_errors() {
+    use share_kan::coordinator::ClientError;
+
+    // server-side InferResponse errors must reach the client as
+    // ClientError::Server carrying the server's message — not as a bare
+    // protocol failure — and the connection must stay usable after one
+    let handle = Coordinator::start(native_cfg(
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        64,
+    ))
+    .unwrap();
+    let c = handle.client.clone();
+    let (head, _) = mlp_head(23);
+    c.add_head("default", head).unwrap();
+    let server = share_kan::coordinator::TcpServer::start(c, "127.0.0.1:0").unwrap();
+    let mut client = share_kan::coordinator::TcpClient::connect(server.addr()).unwrap();
+
+    match client.infer("nope", &[0.0; 64]) {
+        Err(ClientError::Server(msg)) => {
+            assert!(msg.contains("unknown head"), "server message lost: {msg}")
+        }
+        other => panic!("expected ClientError::Server, got {other:?}"),
+    }
+    match client.infer("default", &[0.0; 3]) {
+        Err(ClientError::Server(msg)) => {
+            assert!(msg.contains("feature dim"), "server message lost: {msg}")
+        }
+        other => panic!("expected ClientError::Server, got {other:?}"),
+    }
+    // typed errors format with their class for operators/logs
+    let display = format!("{}", ClientError::Server("boom".into()));
+    assert!(display.contains("server error"), "{display}");
+    // connection still usable after server-side errors
+    let mut rng = Pcg32::seeded(24);
+    assert!(client.infer("default", &rng.normal_vec(64, 0.0, 1.0)).is_ok());
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
 fn failure_injection_bad_head_weights() {
     // registering heads with wrong shapes must fail at registration (not
     // at serve time) and leave the coordinator healthy

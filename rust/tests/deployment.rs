@@ -1,0 +1,284 @@
+//! Integration: the declarative deployment API end-to-end — spec
+//! validation, TOML/JSON file-driven deployments (synthetic heads and
+//! checkpoint paths), dry-run-vs-live placement agreement, the per-shard
+//! metrics breakdown, and TCP serving through a pooled deployment with
+//! typed client errors.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+
+use share_kan::coordinator::{
+    BackendKind, ClientError, DeploymentSpec, HeadWeights, Placement, TcpClient, TcpServer,
+};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::spec::KanSpec;
+use share_kan::vq::universal::compress_family;
+use share_kan::vq::Precision;
+
+const SPEC: KanSpec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
+
+fn family_heads(n: usize, seed: u64) -> Vec<(String, HeadWeights)> {
+    let cks: Vec<Checkpoint> =
+        (0..n).map(|i| synthetic_dense(&SPEC, seed + i as u64)).collect();
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    compress_family(&refs, &SPEC, 8, Precision::Int8, seed)
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            (format!("h{i}"), HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        })
+        .collect()
+}
+
+/// Fresh scratch directory under the target dir (std-only tempdir).
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "share-kan-deployment-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn spec_validation_rejects_malformed_deployments() {
+    let heads = family_heads(2, 100);
+    // no heads
+    assert!(DeploymentSpec::new(BackendKind::Native).deploy().is_err());
+    // zero shards
+    let err = DeploymentSpec::new(BackendKind::Native)
+        .with_shards(0)
+        .head("a", heads[0].1.clone())
+        .validate()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shard"), "{err:#}");
+    // duplicate head names
+    let err = DeploymentSpec::new(BackendKind::Native)
+        .head("a", heads[0].1.clone())
+        .head("a", heads[1].1.clone())
+        .validate()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    // max_batch 0
+    assert!(DeploymentSpec::new(BackendKind::Native)
+        .with_max_batch(0)
+        .head("a", heads[0].1.clone())
+        .validate()
+        .is_err());
+    // a bad explicit bucket ladder fails at deploy (backend construction)
+    assert!(DeploymentSpec::new(BackendKind::Arena)
+        .with_buckets(&[8, 1])
+        .head("a", heads[0].1.clone())
+        .deploy()
+        .is_err());
+}
+
+#[test]
+fn builder_deployment_serves_and_reports() {
+    let heads = family_heads(4, 200);
+    let spec = DeploymentSpec::new(BackendKind::FamilyArena)
+        .with_shards(2)
+        .with_placement(Placement::FamilyCoLocate { heads_per_shard: 4 })
+        .with_max_batch(4)
+        .with_buckets(&[1, 4])
+        .family("fam", heads.clone());
+    // dry-run and live placement must agree for a fresh deployment
+    let simulated = spec.simulate_placements().unwrap();
+    let dep = spec.deploy().unwrap();
+    let report = dep.report();
+    assert_eq!(simulated.len(), report.placements.len());
+    for sim in &simulated {
+        let live = report
+            .placements
+            .iter()
+            .find(|p| p.head == sim.head)
+            .expect("head placed");
+        assert_eq!(live.shard, sim.shard, "head {}", sim.head);
+        assert_eq!(live.family.as_deref(), Some("fam"));
+    }
+    // co-located: one occupied shard, accounted resident bytes
+    assert_eq!(report.families.len(), 1);
+    assert_eq!(report.families[0].shards_occupied, 1);
+    assert_eq!(
+        report.resident_bytes,
+        report.families[0].shared_bytes + report.families[0].marginal_bytes * heads.len()
+    );
+    assert!(report.summary().contains("family fam"));
+    // serves every head
+    let mut rng = Pcg32::seeded(4);
+    for (name, _) in &heads {
+        let resp = dep.client().infer(name, rng.normal_vec(SPEC.d_in, 0.0, 1.0)).unwrap();
+        assert_eq!(resp.scores.len(), SPEC.d_out);
+    }
+    // per-shard breakdown sums to the merged view
+    let pm = dep.metrics();
+    assert_eq!(pm.per_shard.len(), 2);
+    let per_shard_sum: u64 = pm
+        .per_shard
+        .iter()
+        .map(|m| m.counters.responses.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(per_shard_sum, pm.merged.counters.responses.load(Ordering::Relaxed));
+    assert_eq!(per_shard_sum, heads.len() as u64);
+    dep.shutdown();
+}
+
+#[test]
+fn toml_file_deployment_with_synthetic_family_round_trips() {
+    let dir = scratch_dir("toml");
+    let file = dir.join("deploy.toml");
+    std::fs::write(
+        &file,
+        r#"
+[deployment]
+backend = "family"
+shards = 4
+placement = "family-co-locate"
+heads_per_shard = 2
+max_batch = 4
+max_wait_ms = 1
+buckets = [1, 4]
+
+[spec]
+d_in = 6
+d_hidden = 8
+d_out = 3
+grid_size = 6
+k = 8
+seed = 11
+
+[[family]]
+name = "fa"
+synthetic = 3
+precision = "int8"
+
+[[family]]
+name = "fb"
+synthetic = 3
+precision = "int8"
+seed = 77
+"#,
+    )
+    .unwrap();
+    let spec = DeploymentSpec::from_file(&file).unwrap();
+    assert_eq!(spec.backend, BackendKind::FamilyArena);
+    assert_eq!(spec.shards, 4);
+    assert_eq!(spec.placement, Placement::FamilyCoLocate { heads_per_shard: 2 });
+    assert_eq!(spec.head_names(),
+               vec!["fa0", "fa1", "fa2", "fb0", "fb1", "fb2"]);
+    let dep = spec.deploy().unwrap();
+    let report = dep.report();
+    // two families, disjoint shard sets (the family backend holds one
+    // universal basis per shard), each on ceil(3/2) = 2 shards
+    assert_eq!(report.families.len(), 2);
+    for fam in &report.families {
+        assert_eq!(fam.heads, 3);
+        assert_eq!(fam.shards_occupied, 2, "{}", report.summary());
+    }
+    let mut fam_shards: Vec<std::collections::BTreeSet<usize>> = vec![Default::default(); 2];
+    for p in &report.placements {
+        let idx = usize::from(p.family.as_deref() == Some("fb"));
+        fam_shards[idx].insert(p.shard.unwrap());
+    }
+    assert!(fam_shards[0].is_disjoint(&fam_shards[1]), "{}", report.summary());
+    // every synthetic head answers
+    let mut rng = Pcg32::seeded(5);
+    for name in ["fa0", "fa1", "fa2", "fb0", "fb1", "fb2"] {
+        let resp = dep.client().infer(name, rng.normal_vec(6, 0.0, 1.0)).unwrap();
+        assert_eq!(resp.scores.len(), 3);
+    }
+    dep.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn json_file_deployment_with_checkpoint_paths_round_trips() {
+    // write real compressed checkpoints, then deploy them by path from a
+    // JSON deployment file (paths resolve relative to the file)
+    let dir = scratch_dir("json");
+    let cks: Vec<Checkpoint> = (0..2).map(|i| synthetic_dense(&SPEC, 300 + i)).collect();
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    let family = compress_family(&refs, &SPEC, 8, Precision::Int8, 300).unwrap();
+    for (i, c) in family.iter().enumerate() {
+        c.to_checkpoint().save(&dir.join(format!("m{i}.skpt"))).unwrap();
+    }
+    let file = dir.join("deploy.json");
+    std::fs::write(
+        &file,
+        r#"{
+  "deployment": {"backend": "family", "shards": 2, "max_batch": 4, "buckets": [1, 4],
+                 "placement": "family-co-locate", "heads_per_shard": 4},
+  "family": [{"name": "m", "paths": ["m0.skpt", "m1.skpt"]}]
+}"#,
+    )
+    .unwrap();
+    let spec = DeploymentSpec::from_file(&file).unwrap();
+    assert_eq!(spec.head_names(), vec!["m0", "m1"]);
+    let dep = spec.deploy().unwrap();
+    assert_eq!(dep.report().families[0].shards_occupied, 1);
+    let mut rng = Pcg32::seeded(6);
+    for name in ["m0", "m1"] {
+        assert!(dep.client().infer(name, rng.normal_vec(6, 0.0, 1.0)).is_ok());
+    }
+    dep.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn file_errors_are_clean() {
+    let dir = scratch_dir("err");
+    // missing file
+    assert!(DeploymentSpec::from_file(&dir.join("nope.toml")).is_err());
+    // no heads at all
+    let empty = dir.join("empty.toml");
+    std::fs::write(&empty, "[deployment]\nshards = 2\n").unwrap();
+    let err = DeploymentSpec::from_file(&empty).unwrap_err();
+    assert!(format!("{err:#}").contains("[[head]]"), "{err:#}");
+    // unknown placement
+    let bad = dir.join("bad.toml");
+    std::fs::write(&bad,
+                   "[deployment]\nplacement = \"round-robin\"\n[[family]]\nname = \"f\"\nsynthetic = 2\n")
+        .unwrap();
+    let err = DeploymentSpec::from_file(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("placement"), "{err:#}");
+    // missing checkpoint path fails at deploy with the path in the error
+    let missing = dir.join("missing.toml");
+    std::fs::write(&missing, "[[head]]\nname = \"a\"\npath = \"gone.skpt\"\n").unwrap();
+    let spec = DeploymentSpec::from_file(&missing).unwrap();
+    let err = spec.deploy().unwrap_err();
+    assert!(format!("{err:#}").contains("gone.skpt"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tcp_over_pooled_deployment_with_typed_errors() {
+    // a sharded deployment behind the TCP front-end: placement-table
+    // routing applies to network traffic, and server-side failures reach
+    // the client as ClientError::Server with the server's message
+    let heads = family_heads(3, 400);
+    let dep = DeploymentSpec::new(BackendKind::FamilyArena)
+        .with_shards(2)
+        .with_max_batch(4)
+        .with_buckets(&[1, 4])
+        .family("fam", heads)
+        .deploy()
+        .unwrap();
+    let server = TcpServer::start_pool(dep.client().clone(), "127.0.0.1:0").unwrap();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let mut rng = Pcg32::seeded(8);
+    for name in ["h0", "h1", "h2"] {
+        let scores = client.infer(name, &rng.normal_vec(6, 0.0, 1.0)).unwrap();
+        assert_eq!(scores.len(), 3);
+    }
+    match client.infer("nope", &[0.0; 6]) {
+        Err(ClientError::Server(msg)) => assert!(msg.contains("unknown head"), "{msg}"),
+        other => panic!("expected typed server error, got {other:?}"),
+    }
+    // the connection survives a server-side error
+    assert!(client.infer("h0", &rng.normal_vec(6, 0.0, 1.0)).is_ok());
+    server.shutdown();
+    dep.shutdown();
+}

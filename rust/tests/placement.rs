@@ -1,0 +1,253 @@
+//! Placement-policy integration suite — the load-bearing guarantees of the
+//! `serving` redesign:
+//!
+//! 1. `HashPlacement` routing is **bitwise-identical** to the historical
+//!    private FNV-1a path (independent reference implementation below).
+//! 2. A pooled deployment stays **bit-for-bit equal** to a single
+//!    coordinator under all three shipped policies, on forced-scalar AND
+//!    forced-SIMD kernel dispatch.
+//! 3. `FamilyCoLocate` on a 4-shard pool materializes one family's shared
+//!    codebook region on FEWER shards than `HashPlacement` — asserted
+//!    through the deployment report's plan-backed byte accounting.
+//! 4. `remove_head` + re-register is well-defined: the routing table (not
+//!    a per-request hash) owns placement, so a head can legally move.
+
+mod common;
+
+use std::time::Duration;
+
+use share_kan::coordinator::serving::hash_shard;
+use share_kan::coordinator::{
+    BackendKind, BatchPolicy, Coordinator, CoordinatorConfig, DeploymentSpec, ExecutorPool,
+    HeadWeights, Placement, PoolConfig,
+};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::spec::KanSpec;
+use share_kan::memplan::plan_family;
+use share_kan::runtime::{BackendConfig, BackendSpec, KernelMode};
+use share_kan::vq::universal::compress_family;
+use share_kan::vq::Precision;
+
+const SPEC: KanSpec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
+const K: usize = 8;
+
+/// `n` heads of one universal-codebook family (task0..task{n-1}).
+fn family_heads(n: usize) -> Vec<(String, HeadWeights)> {
+    let cks: Vec<Checkpoint> = (0..n).map(|i| synthetic_dense(&SPEC, 300 + i as u64)).collect();
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    compress_family(&refs, &SPEC, K, Precision::Int8, 5)
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            (format!("task{i}"), HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        })
+        .collect()
+}
+
+fn backend_spec(kernel: KernelMode) -> BackendSpec {
+    let heads = family_heads(1);
+    BackendSpec::for_head(&heads[0].1)
+        .with_buckets(&[1, 4, 8])
+        .with_kernel(kernel)
+}
+
+/// Independent FNV-1a reference (deliberately NOT the library's): pins the
+/// historical routing constants the hash policy must reproduce forever.
+fn fnv1a_reference(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[test]
+fn hash_placement_is_bitwise_identical_to_fnv1a() {
+    // property: for arbitrary names and shard counts, the public
+    // hash_shard (== HashPlacement routing and the unregistered-head
+    // fallback) equals the independent FNV-1a reference
+    let mut rng = Pcg32::seeded(71);
+    for trial in 0..500 {
+        let len = (rng.next_u32() % 24) as usize;
+        let name: String = (0..len)
+            .map(|_| (b'!' + (rng.next_u32() % 90) as u8) as char)
+            .collect();
+        let shards = 1 + (rng.next_u32() % 16) as usize;
+        assert_eq!(
+            hash_shard(&name, shards),
+            (fnv1a_reference(&name) % shards as u64) as usize,
+            "trial {trial}: name {name:?} shards {shards}"
+        );
+    }
+    // and the live pool routes unregistered names by exactly this hash
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(backend_spec(KernelMode::Auto)),
+        policy: BatchPolicy::default(),
+        queue_capacity: 16,
+        num_shards: 3,
+        placement: Placement::Hash,
+    })
+    .unwrap();
+    for name in ["task0", "some-head", "x"] {
+        assert_eq!(pool.client.shard_for(name),
+                   (fnv1a_reference(name) % 3) as usize);
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn all_policies_match_single_coordinator_bitwise() {
+    // the acceptance bar: pool == single executor, bit for bit, under
+    // hash / family-co-locate / least-loaded placement, on every kernel
+    // dispatch this host supports (forced scalar always, forced SIMD
+    // where available)
+    let heads = family_heads(6);
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let policies = [
+        Placement::Hash,
+        Placement::FamilyCoLocate { heads_per_shard: 3 },
+        Placement::LeastLoaded,
+    ];
+    for &mode in &common::kernel_modes() {
+        let single = Coordinator::start(CoordinatorConfig {
+            backend: BackendConfig::FamilyArena(backend_spec(mode)),
+            policy,
+            queue_capacity: 256,
+        })
+        .unwrap();
+        for (name, head) in &heads {
+            single.client.add_head(name, head.clone()).unwrap();
+        }
+        for placement in policies {
+            let pool = ExecutorPool::start(PoolConfig {
+                backend: BackendConfig::FamilyArena(backend_spec(mode)),
+                policy,
+                queue_capacity: 256,
+                num_shards: 4,
+                placement,
+            })
+            .unwrap();
+            pool.client.register_family("fam", &heads).unwrap();
+            let mut rng = Pcg32::seeded(7);
+            for round in 0..18 {
+                let (name, _) = &heads[round % heads.len()];
+                let x = rng.normal_vec(SPEC.d_in, 0.0, 1.0);
+                let a = single.client.infer(name, x.clone()).unwrap();
+                let b = pool.client.infer(name, x).unwrap();
+                assert_eq!(a.scores.len(), b.scores.len());
+                for (s, p) in a.scores.iter().zip(&b.scores) {
+                    assert_eq!(
+                        s.to_bits(),
+                        p.to_bits(),
+                        "mode {mode:?} placement {placement:?} round {round} head {name}: \
+                         {s} != {p}"
+                    );
+                }
+            }
+            pool.shutdown();
+        }
+        single.shutdown();
+    }
+}
+
+#[test]
+fn co_locate_materializes_shared_region_on_fewer_shards_than_hash() {
+    // 6 family heads on a 4-shard family-arena pool.  task0..5 FNV-hash
+    // onto all four shards (premise asserted below), so hash placement
+    // pays the shared codebook region four times; family-co-locate with a
+    // budget of 3 pins the family onto ceil(6/3) = 2 shards.
+    let heads = family_heads(6);
+    let hash_spread: std::collections::BTreeSet<usize> =
+        heads.iter().map(|(n, _)| hash_shard(n, 4)).collect();
+    assert_eq!(hash_spread.len(), 4, "premise: task0..5 spread over all 4 shards");
+
+    let deploy = |placement: Placement| {
+        DeploymentSpec::new(BackendKind::FamilyArena)
+            .with_shards(4)
+            .with_placement(placement)
+            .with_max_batch(8)
+            .with_buckets(&[1, 4, 8])
+            .family("fam", heads.clone())
+            .deploy()
+            .unwrap()
+    };
+
+    let hash_dep = deploy(Placement::Hash);
+    let colo_dep = deploy(Placement::FamilyCoLocate { heads_per_shard: 3 });
+    let hash_report = hash_dep.report();
+    let colo_report = colo_dep.report();
+    let hash_fam = &hash_report.families[0];
+    let colo_fam = &colo_report.families[0];
+
+    assert_eq!(hash_fam.shards_occupied, 4);
+    assert_eq!(colo_fam.shards_occupied, 2);
+    assert!(colo_fam.shards_occupied < hash_fam.shards_occupied);
+
+    // the accounting is plan-backed: resident = shared x occupied +
+    // marginal x heads, with shared/marginal from memplan::plan_family
+    let fam_plan = plan_family(&SPEC, &share_kan::kan::spec::VqSpec { codebook_size: K },
+                               Precision::Int8, 8)
+        .unwrap();
+    for (report_fam, occ) in [(hash_fam, 4usize), (colo_fam, 2usize)] {
+        assert_eq!(report_fam.shared_bytes, fam_plan.shared_bytes());
+        assert_eq!(report_fam.marginal_bytes, fam_plan.head_bytes());
+        assert_eq!(
+            report_fam.resident_bytes,
+            fam_plan.shared_bytes() * occ + fam_plan.head_bytes() * heads.len()
+        );
+    }
+    assert!(colo_report.resident_bytes < hash_report.resident_bytes);
+
+    // both deployments still answer identically for every head
+    let mut rng = Pcg32::seeded(9);
+    for (name, _) in &heads {
+        let x = rng.normal_vec(SPEC.d_in, 0.0, 1.0);
+        let a = hash_dep.client().infer(name, x.clone()).unwrap();
+        let b = colo_dep.client().infer(name, x).unwrap();
+        for (s, p) in a.scores.iter().zip(&b.scores) {
+            assert_eq!(s.to_bits(), p.to_bits());
+        }
+    }
+    hash_dep.shutdown();
+    colo_dep.shutdown();
+}
+
+#[test]
+fn remove_and_readd_places_afresh_under_new_policy_semantics() {
+    // the routing table owns placement: re-registering an existing head
+    // hot-swaps in place; remove + register places afresh — so results
+    // keep flowing at every step
+    let heads = family_heads(4);
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::FamilyArena(backend_spec(KernelMode::Auto)),
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        queue_capacity: 64,
+        num_shards: 4,
+        placement: Placement::FamilyCoLocate { heads_per_shard: 4 },
+    })
+    .unwrap();
+    let c = &pool.client;
+    c.register_family("fam", &heads).unwrap();
+    // budget 4: the whole family sits on one shard
+    assert_eq!(c.shards_hosting_family("fam"), 1);
+    let owner = c.route_of("task0").unwrap();
+
+    // hot-swap replace keeps the shard (no live-traffic migration)
+    let swapped = c.register_head("task0", Some("fam"), heads[1].1.clone()).unwrap();
+    assert_eq!(swapped, owner);
+
+    // remove + re-register without the family tag: fresh placement falls
+    // back to the hash shard (co-locate routes familyless heads by hash)
+    assert!(c.remove_head("task0").unwrap());
+    let new_shard = c.register_head("task0", None, heads[0].1.clone()).unwrap();
+    assert_eq!(new_shard, hash_shard("task0", 4));
+
+    let mut rng = Pcg32::seeded(3);
+    for (name, _) in &heads {
+        assert!(c.infer(name, rng.normal_vec(SPEC.d_in, 0.0, 1.0)).is_ok());
+    }
+    pool.shutdown();
+}

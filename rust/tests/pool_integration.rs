@@ -8,7 +8,8 @@ mod common;
 use std::time::Duration;
 
 use share_kan::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, PoolConfig,
+    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, HeadWeights, Placement,
+    PoolConfig,
 };
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::synthetic_dense;
@@ -50,11 +51,12 @@ fn pool_matches_single_executor_bitwise() {
         policy,
         queue_capacity: 256,
         num_shards: 3,
+        placement: Placement::Hash,
     })
     .unwrap();
     for (name, head) in &heads {
         single.client.add_head(name, head.clone()).unwrap();
-        pool.client.add_head(name, head.clone()).unwrap();
+        pool.client.register_head(name, None, head.clone()).unwrap();
     }
 
     let mut rng = Pcg32::seeded(7);
@@ -88,13 +90,14 @@ fn pool_dispatches_forced_kernel_modes_bitwise_equal() {
                 policy,
                 queue_capacity: 128,
                 num_shards: 2,
+                placement: Placement::Hash,
             })
             .unwrap()
         })
         .collect();
     for p in &pools {
         for (name, head) in &heads {
-            p.client.add_head(name, head.clone()).unwrap();
+            p.client.register_head(name, None, head.clone()).unwrap();
         }
     }
     let mut rng = Pcg32::seeded(11);
@@ -124,11 +127,12 @@ fn routing_is_deterministic_and_shard_local() {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
         queue_capacity: 128,
         num_shards: 4,
+        placement: Placement::Hash,
     })
     .unwrap();
     let c = &pool.client;
     for (name, head) in &heads {
-        c.add_head(name, head.clone()).unwrap();
+        c.register_head(name, None, head.clone()).unwrap();
     }
     // routing is a pure function of the name: repeated queries agree, and
     // cloned handles agree with the original
@@ -168,11 +172,12 @@ fn shard_aware_hot_swap_and_remove() {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
         queue_capacity: 128,
         num_shards: 2,
+        placement: Placement::Hash,
     })
     .unwrap();
     let c = &pool.client;
     for (name, head) in &heads {
-        c.add_head(name, head.clone()).unwrap();
+        c.register_head(name, None, head.clone()).unwrap();
     }
     let mut rng = Pcg32::seeded(9);
     // remove one head: its requests fail fast, the others keep serving
@@ -182,7 +187,7 @@ fn shard_aware_hot_swap_and_remove() {
     assert!(c.infer("task0", rng.normal_vec(6, 0.0, 1.0)).is_ok());
     assert!(c.infer("task2", rng.normal_vec(6, 0.0, 1.0)).is_ok());
     // hot-swap re-register on the same (deterministic) shard
-    c.add_head("task1", heads[2].1.clone()).unwrap();
+    c.register_head("task1", None, heads[2].1.clone()).unwrap();
     let swapped = c.infer("task1", rng.normal_vec(6, 0.0, 1.0)).unwrap();
     assert_eq!(swapped.scores.len(), 4);
     pool.shutdown();
@@ -196,11 +201,12 @@ fn aggregated_metrics_sum_across_shards() {
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
         queue_capacity: 128,
         num_shards: 3,
+        placement: Placement::Hash,
     })
     .unwrap();
     let c = &pool.client;
     for (name, head) in &heads {
-        c.add_head(name, head.clone()).unwrap();
+        c.register_head(name, None, head.clone()).unwrap();
     }
     let mut rng = Pcg32::seeded(10);
     let total = 30usize;
@@ -229,6 +235,7 @@ fn unknown_head_fails_cleanly_through_pool() {
         policy: BatchPolicy::default(),
         queue_capacity: 16,
         num_shards: 2,
+        placement: Placement::Hash,
     })
     .unwrap();
     assert!(pool.client.infer("nope", vec![0.0; 6]).is_err());

@@ -315,3 +315,42 @@ fn prop_spectral_frobenius_identity() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_hash_placement_matches_legacy_fnv1a_routing() {
+    use share_kan::coordinator::serving::{hash_shard, HashPlacement, PlacementPolicy, ShardLoad};
+
+    // the default placement policy must stay bitwise-identical to the
+    // pool's historical private FNV-1a hash, for any name and shard count
+    fn fnv1a_reference(name: &str) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+    check("hash placement == fnv1a", 0xF1A5, 300, |rng| {
+        let len = rng.below(32);
+        let name: String = (0..len)
+            .map(|_| char::from(b' ' + (rng.below(95) as u8)))
+            .collect();
+        let shards = 1 + rng.below(32);
+        let want = (fnv1a_reference(&name) % shards as u64) as usize;
+        prop_assert!(hash_shard(&name, shards) == want,
+                     "hash_shard({name:?}, {shards})");
+        let loads: Vec<ShardLoad> = (0..shards)
+            .map(|shard| ShardLoad {
+                shard,
+                heads: rng.below(8),
+                family_heads: 0,
+                foreign_family_heads: 0,
+                inflight: rng.below(100) as u64,
+            })
+            .collect();
+        // load and family context must not influence hash placement
+        prop_assert!(HashPlacement.place(&name, Some("fam"), &loads) == want,
+                     "HashPlacement ignores load/family");
+        Ok(())
+    });
+}
