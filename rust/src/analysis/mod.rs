@@ -1,0 +1,749 @@
+//! Static plan verification: prove arena layouts safe before they run.
+//!
+//! LUTHAM's premise (paper §4.3) is that memory is planned *statically* —
+//! so layout bugs should be caught statically too, not by a segfault under
+//! traffic.  This module checks every [`Plan`], [`FamilyPlan`] and compiled
+//! deployment before a single byte is allocated:
+//!
+//! * **Disjointness + coverage** — planned regions never overlap, and
+//!   together they tile the arena exactly (each buffer starts at the
+//!   aligned end of its predecessor; the arena total is the aligned end of
+//!   the last buffer).
+//! * **Alignment** — every base offset is a multiple of
+//!   [`memplan::ALIGN`](crate::memplan::ALIGN) (256 B).
+//! * **Index width sufficiency** — each `layer{li}/idx` region holds
+//!   exactly ⌈log₂K⌉ bits per edge (paper Eq. 3): no narrower (corrupted
+//!   decode) and no wider (the ladder's storage bound would be violated).
+//! * **Scratch non-aliasing** — the activation ping/pong pair never
+//!   intersects a weight region (an overlap involving `act/*` is reported
+//!   as [`FindingKind::ScratchAliasing`], not a generic overlap).
+//! * **Accounting reconciliation** — shared-vs-marginal family totals
+//!   recompute from first principles (`shared + n·head`) and the
+//!   shared ∪ head buffer set partitions the private-head layout.
+//! * **Checked arithmetic** — every offset/size sum is `checked_*`; an
+//!   overflow is a finding, never a wrap.
+//!
+//! The verifier is exposed three ways: construction-time enforcement in
+//! the arena backends (a failed proof is a typed build error — see
+//! [`Arena::try_allocate`](crate::memplan::Arena::try_allocate)), the
+//! `share-kan verify --deployment` CLI pass (machine-readable JSON
+//! findings), and the debug/`shadow-bounds` shadow bounds-checker
+//! ([`check_access`]) that tags every arena access with its owning region.
+
+use std::fmt;
+
+use crate::coordinator::heads::HeadWeights;
+use crate::kan::spec::KanSpec;
+use crate::memplan::{checked_align_up, FamilyPlan, Plan, ALIGN};
+use crate::util::json::Json;
+use crate::vq::bitpack::bits_for;
+use crate::vq::storage::Precision;
+
+/// Classification of one verifier finding; `name()` strings are stable and
+/// appear verbatim in the JSON report (and in the mutation-test suite).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingKind {
+    /// Two planned regions intersect (neither is activation scratch).
+    Overlap,
+    /// A base offset is not a multiple of the arena alignment.
+    Misalignment,
+    /// The layout leaves a hole: a buffer does not start at the aligned
+    /// end of its predecessor, or the arena total exceeds the aligned end
+    /// of the last buffer.
+    CoverageGap,
+    /// A buffer extends past the declared arena total.
+    OutOfArena,
+    /// The activation ping/pong scratch intersects another region.
+    ScratchAliasing,
+    /// A packed-index region is too small for ⌈log₂K⌉ bits per edge.
+    IndexWidthInsufficient,
+    /// A packed-index region is wider than the ladder allows (> ⌈log₂K⌉
+    /// bits per edge).
+    IndexWidthExcessive,
+    /// Shared-vs-marginal family totals do not reconcile with the
+    /// recomputed expectation.
+    AccountingMismatch,
+    /// Offset/size arithmetic overflows `usize`.
+    ArithmeticOverflow,
+    /// An expected buffer is absent from the plan.
+    MissingBuffer,
+    /// The plan carries a buffer the layout does not call for.
+    UnexpectedBuffer,
+    /// A buffer exists but its size differs from the expectation.
+    SizeMismatch,
+    /// The plan's name → offset index disagrees with its buffer list.
+    IndexDesync,
+}
+
+impl FindingKind {
+    /// Stable machine-readable name (used in the JSON findings report).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FindingKind::Overlap => "overlap",
+            FindingKind::Misalignment => "misalignment",
+            FindingKind::CoverageGap => "coverage-gap",
+            FindingKind::OutOfArena => "out-of-arena",
+            FindingKind::ScratchAliasing => "scratch-aliasing",
+            FindingKind::IndexWidthInsufficient => "index-width-insufficient",
+            FindingKind::IndexWidthExcessive => "index-width-excessive",
+            FindingKind::AccountingMismatch => "accounting-mismatch",
+            FindingKind::ArithmeticOverflow => "arithmetic-overflow",
+            FindingKind::MissingBuffer => "missing-buffer",
+            FindingKind::UnexpectedBuffer => "unexpected-buffer",
+            FindingKind::SizeMismatch => "size-mismatch",
+            FindingKind::IndexDesync => "index-desync",
+        }
+    }
+}
+
+/// One verifier finding: what failed, where, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Failure class (stable name via [`FindingKind::name`]).
+    pub kind: FindingKind,
+    /// The buffer / region / quantity the finding is about.
+    pub subject: String,
+    /// Human-readable explanation with the offending numbers.
+    pub detail: String,
+}
+
+/// The result of one verification pass: zero findings means the layout is
+/// proven safe under the checks listed in the module docs.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    label: String,
+    findings: Vec<Finding>,
+}
+
+impl VerifyReport {
+    /// Fresh report for the subject named by `label`.
+    pub fn new(label: &str) -> VerifyReport {
+        VerifyReport { label: label.to_string(), findings: Vec::new() }
+    }
+
+    /// What this report verified (e.g. a head name or `family/shared`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Record one finding.
+    pub fn push(&mut self, kind: FindingKind, subject: impl Into<String>,
+                detail: impl Into<String>) {
+        self.findings.push(Finding { kind, subject: subject.into(), detail: detail.into() });
+    }
+
+    /// Absorb another report's findings, prefixing subjects with its label.
+    pub fn merge(&mut self, other: VerifyReport) {
+        for f in other.findings {
+            self.findings.push(Finding {
+                kind: f.kind,
+                subject: format!("{}:{}", other.label, f.subject),
+                detail: f.detail,
+            });
+        }
+    }
+
+    /// True when the pass produced no findings.
+    pub fn is_ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// All findings, in discovery order.
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+
+    /// True if any finding has the given kind (mutation-test helper).
+    pub fn has(&self, kind: FindingKind) -> bool {
+        self.findings.iter().any(|f| f.kind == kind)
+    }
+
+    /// Machine-readable report:
+    /// `{"label", "ok", "findings": [{"kind", "subject", "detail"}]}`.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("kind", Json::str(f.kind.name())),
+                    ("subject", Json::str(f.subject.clone())),
+                    ("detail", Json::str(f.detail.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("ok", Json::Bool(self.is_ok())),
+            ("findings", Json::Arr(findings)),
+        ])
+    }
+
+    /// Convert into a typed error carrying the findings (`Ok(())` when the
+    /// pass was clean) — the construction-time enforcement seam.
+    pub fn into_result(self) -> Result<(), VerifyError> {
+        if self.is_ok() {
+            Ok(())
+        } else {
+            Err(VerifyError { label: self.label, findings: self.findings })
+        }
+    }
+}
+
+/// Typed error produced when a verification pass has findings: building a
+/// backend from a corrupted plan fails with this — never a panic.
+#[derive(Debug, Clone)]
+pub struct VerifyError {
+    label: String,
+    findings: Vec<Finding>,
+}
+
+impl VerifyError {
+    /// What failed verification.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The findings that failed the proof.
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "plan verification failed for '{}': {} finding(s)",
+               self.label, self.findings.len())?;
+        for finding in &self.findings {
+            write!(f, "; [{}] {}: {}", finding.kind.name(), finding.subject,
+                   finding.detail)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// True when a buffer name denotes activation ping/pong scratch.
+fn is_scratch(name: &str) -> bool {
+    name.starts_with("act/")
+}
+
+/// Structural layout proof for one plan: alignment, disjointness, exact
+/// coverage, arena bounds, checked end arithmetic and name-index
+/// consistency.  Width/inventory checks need shape context — see
+/// [`verify_head_plan`] / [`verify_family_plan`].
+pub fn verify_plan(label: &str, plan: &Plan) -> VerifyReport {
+    let mut r = VerifyReport::new(label);
+    check_layout(&mut r, plan);
+    r
+}
+
+fn check_layout(r: &mut VerifyReport, plan: &Plan) {
+    // name -> offset index must agree with the buffer list (duplicates or
+    // a stale index would make lookup() resolve to the wrong region)
+    for b in &plan.buffers {
+        if plan.lookup(&b.name) != Some(b) {
+            r.push(FindingKind::IndexDesync, &b.name,
+                   "offset index does not resolve to this buffer".to_string());
+        }
+    }
+
+    let mut sorted: Vec<&crate::memplan::PlannedBuffer> = plan.buffers.iter().collect();
+    sorted.sort_by_key(|b| (b.offset, b.size));
+    let mut prev_end = 0usize; // exact end of the previous buffer
+    let mut prev_name: Option<&str> = None;
+    for b in &sorted {
+        if b.offset % ALIGN != 0 {
+            r.push(FindingKind::Misalignment, &b.name,
+                   format!("offset {} is not {ALIGN}-byte aligned", b.offset));
+        }
+        if let Some(prev) = prev_name {
+            if b.offset < prev_end {
+                let kind = if is_scratch(&b.name) || is_scratch(prev) {
+                    FindingKind::ScratchAliasing
+                } else {
+                    FindingKind::Overlap
+                };
+                r.push(kind, &b.name,
+                       format!("[{}, {}) intersects '{prev}' ending at {prev_end}",
+                               b.offset, b.offset.saturating_add(b.size)));
+            } else {
+                match checked_align_up(prev_end, ALIGN) {
+                    Some(expected) if b.offset > expected => {
+                        r.push(FindingKind::CoverageGap, &b.name,
+                               format!("starts at {} but '{prev}' ends (aligned) at \
+                                        {expected}: {} uncovered bytes",
+                                       b.offset, b.offset - expected));
+                    }
+                    Some(_) => {}
+                    None => {
+                        r.push(FindingKind::ArithmeticOverflow, &b.name,
+                               "aligned end of predecessor overflows usize".to_string());
+                    }
+                }
+            }
+        } else if b.offset > 0 {
+            r.push(FindingKind::CoverageGap, &b.name,
+                   format!("first buffer starts at {}, leaving [0, {}) uncovered",
+                           b.offset, b.offset));
+        }
+        match b.offset.checked_add(b.size) {
+            Some(end) => {
+                if end > plan.total_bytes {
+                    r.push(FindingKind::OutOfArena, &b.name,
+                           format!("ends at {end} past arena total {}", plan.total_bytes));
+                }
+                prev_end = prev_end.max(end);
+            }
+            None => {
+                r.push(FindingKind::ArithmeticOverflow, &b.name,
+                       format!("offset {} + size {} overflows usize", b.offset, b.size));
+                prev_end = usize::MAX;
+            }
+        }
+        prev_name = Some(&b.name);
+    }
+    match checked_align_up(prev_end, ALIGN) {
+        Some(expected_total) => {
+            if plan.total_bytes > expected_total {
+                r.push(FindingKind::CoverageGap, "total_bytes",
+                       format!("arena total {} exceeds aligned end of last buffer \
+                                {expected_total}: trailing bytes unaccounted",
+                               plan.total_bytes));
+            }
+            // total < last end is reported per-buffer as OutOfArena above
+        }
+        None => {
+            r.push(FindingKind::ArithmeticOverflow, "total_bytes",
+                   "aligned end of last buffer overflows usize".to_string());
+        }
+    }
+}
+
+/// The buffer inventory (name → exact payload size) a layout is expected
+/// to carry, with all arithmetic checked.  `Err` carries an
+/// [`FindingKind::ArithmeticOverflow`] finding.
+fn expected_head_buffers(weights: &HeadWeights,
+                         max_batch: usize) -> Result<Vec<(String, usize)>, Finding> {
+    let spec = weights.implied_kan_spec();
+    let overflow = |subject: &str| Finding {
+        kind: FindingKind::ArithmeticOverflow,
+        subject: subject.to_string(),
+        detail: "expected size overflows usize".to_string(),
+    };
+    let mut out = Vec::new();
+    match weights {
+        HeadWeights::Mlp { .. } => {
+            let w1 = spec.d_in.checked_mul(spec.d_hidden).and_then(|n| n.checked_mul(4))
+                .ok_or_else(|| overflow("mlp/w1"))?;
+            let w2 = spec.d_hidden.checked_mul(spec.d_out).and_then(|n| n.checked_mul(4))
+                .ok_or_else(|| overflow("mlp/w2"))?;
+            out.push(("mlp/w1".to_string(), w1));
+            out.push(("mlp/b1".to_string(),
+                      spec.d_hidden.checked_mul(4).ok_or_else(|| overflow("mlp/b1"))?));
+            out.push(("mlp/w2".to_string(), w2));
+            out.push(("mlp/b2".to_string(),
+                      spec.d_out.checked_mul(4).ok_or_else(|| overflow("mlp/b2"))?));
+        }
+        HeadWeights::DenseKan { .. } => {
+            for (li, (n_in, n_out)) in spec.layer_dims().iter().enumerate() {
+                let cells = n_in.checked_mul(*n_out)
+                    .and_then(|e| e.checked_mul(spec.grid_size))
+                    .and_then(|c| c.checked_mul(4))
+                    .ok_or_else(|| overflow(&format!("layer{li}/grids")))?;
+                out.push((format!("layer{li}/grids"), cells));
+            }
+        }
+        HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. } => {
+            let precision = if matches!(weights, HeadWeights::VqInt8 { .. }) {
+                Precision::Int8
+            } else {
+                Precision::Fp32
+            };
+            let k = weights.implied_codebook_size();
+            for layer in expected_vq_layers(&spec, k, precision)? {
+                out.extend(layer);
+            }
+        }
+    }
+    out.extend(expected_scratch(&spec, max_batch)?);
+    Ok(out)
+}
+
+/// Per-layer VQ buffer inventory: codebook + packed indices + gains + fp32
+/// bias sums, in planner order.
+fn expected_vq_layers(spec: &KanSpec, k: usize,
+                      precision: Precision) -> Result<Vec<Vec<(String, usize)>>, Finding> {
+    let coef = if precision == Precision::Int8 { 1 } else { 4 };
+    let overflow = |subject: String| Finding {
+        kind: FindingKind::ArithmeticOverflow,
+        subject,
+        detail: "expected size overflows usize".to_string(),
+    };
+    let mut out = Vec::new();
+    for (li, (n_in, n_out)) in spec.layer_dims().iter().enumerate() {
+        let cb = k.checked_mul(spec.grid_size).and_then(|c| c.checked_mul(coef))
+            .ok_or_else(|| overflow(format!("layer{li}/codebook")))?;
+        let mut layer = vec![(format!("layer{li}/codebook"), cb)];
+        layer.extend(expected_marginal_tables(li, *n_in, *n_out, k, coef)?);
+        out.push(layer);
+    }
+    Ok(out)
+}
+
+/// One layer's marginal tables (packed idx, gains, bias sums) — the exact
+/// quantities `memplan::add_marginal_tables` reserves.
+fn expected_marginal_tables(li: usize, n_in: usize, n_out: usize, k: usize,
+                            coef: usize) -> Result<Vec<(String, usize)>, Finding> {
+    let overflow = |subject: String| Finding {
+        kind: FindingKind::ArithmeticOverflow,
+        subject,
+        detail: "expected size overflows usize".to_string(),
+    };
+    let e = n_in.checked_mul(n_out)
+        .ok_or_else(|| overflow(format!("layer{li}/idx")))?;
+    let idx = e.checked_mul(bits_for(k)).and_then(|bits| bits.checked_add(7))
+        .ok_or_else(|| overflow(format!("layer{li}/idx")))?
+        / 8;
+    Ok(vec![
+        (format!("layer{li}/idx"), idx),
+        (format!("layer{li}/gain"),
+         e.checked_mul(coef).ok_or_else(|| overflow(format!("layer{li}/gain")))?),
+        (format!("layer{li}/bias_sum"),
+         n_out.checked_mul(4).ok_or_else(|| overflow(format!("layer{li}/bias_sum")))?),
+    ])
+}
+
+/// The activation ping/pong pair sized for the widest layer interface.
+fn expected_scratch(spec: &KanSpec,
+                    max_batch: usize) -> Result<Vec<(String, usize)>, Finding> {
+    let widest = spec.layer_dims().iter().flat_map(|&(a, b)| [a, b]).max().unwrap_or(0);
+    let act = max_batch.checked_mul(widest).and_then(|n| n.checked_mul(4))
+        .ok_or(Finding {
+            kind: FindingKind::ArithmeticOverflow,
+            subject: "act/ping".to_string(),
+            detail: "activation scratch size overflows usize".to_string(),
+        })?;
+    Ok(vec![("act/ping".to_string(), act), ("act/pong".to_string(), act)])
+}
+
+/// Compare a plan's buffers against an expected inventory: absent buffers,
+/// unexpected extras, size mismatches, and — for `*/idx` regions — packed
+/// index widths narrower/wider than ⌈log₂K⌉ bits per edge.
+fn check_inventory(r: &mut VerifyReport, plan: &Plan, expected: &[(String, usize)]) {
+    for (name, want) in expected {
+        match plan.lookup(name) {
+            None => {
+                r.push(FindingKind::MissingBuffer, name,
+                       format!("layout requires this buffer ({want} bytes)"));
+            }
+            Some(b) if b.size != *want => {
+                let kind = if name.ends_with("/idx") {
+                    if b.size < *want {
+                        FindingKind::IndexWidthInsufficient
+                    } else {
+                        FindingKind::IndexWidthExcessive
+                    }
+                } else {
+                    FindingKind::SizeMismatch
+                };
+                r.push(kind, name,
+                       format!("planned {} bytes, layout requires {want}", b.size));
+            }
+            Some(_) => {}
+        }
+    }
+    for b in &plan.buffers {
+        if !expected.iter().any(|(name, _)| name == &b.name) {
+            r.push(FindingKind::UnexpectedBuffer, &b.name,
+                   format!("{} bytes not called for by the layout", b.size));
+        }
+    }
+}
+
+/// Full proof for a single private head's plan: structural layout checks
+/// plus the per-variant buffer inventory (including packed-index width
+/// sufficiency for VQ heads) for the given weights and batch bucket.
+pub fn verify_head_plan(label: &str, plan: &Plan, weights: &HeadWeights,
+                        max_batch: usize) -> VerifyReport {
+    let mut r = VerifyReport::new(label);
+    check_layout(&mut r, plan);
+    match expected_head_buffers(weights, max_batch) {
+        Ok(expected) => check_inventory(&mut r, plan, &expected),
+        Err(f) => r.findings.push(f),
+    }
+    r
+}
+
+/// Full proof for a family layout: structural checks on both regions, the
+/// shared/marginal buffer inventories, and accounting reconciliation —
+/// `family_bytes(n) == shared + n·head` for sample head counts, the
+/// marginal payload recomputed from shapes, and shared ∪ head partitioning
+/// the private-head buffer set exactly.
+pub fn verify_family_plan(label: &str, fam: &FamilyPlan) -> VerifyReport {
+    let mut r = VerifyReport::new(label);
+    r.merge(verify_plan("shared", &fam.shared));
+    r.merge(verify_plan("head", &fam.head));
+
+    let spec = *fam.kan_spec();
+    let k = fam.vq_spec().codebook_size;
+    let coef = if fam.precision() == Precision::Int8 { 1 } else { 4 };
+
+    // shared region inventory: one codebook per layer slot + the scratch
+    let mut shared_expected: Vec<(String, usize)> = Vec::new();
+    let mut head_expected: Vec<(String, usize)> = Vec::new();
+    let mut shapes_ok = true;
+    match expected_vq_layers(&spec, k, fam.precision()) {
+        Ok(layers) => {
+            for layer in layers {
+                for (name, size) in layer {
+                    if name.ends_with("/codebook") {
+                        shared_expected.push((name, size));
+                    } else {
+                        head_expected.push((name, size));
+                    }
+                }
+            }
+        }
+        Err(f) => {
+            r.findings.push(f);
+            shapes_ok = false;
+        }
+    }
+    match expected_scratch(&spec, fam.max_batch) {
+        Ok(scratch) => shared_expected.extend(scratch),
+        Err(f) => {
+            r.findings.push(f);
+            shapes_ok = false;
+        }
+    }
+    if shapes_ok {
+        let mut shared_r = VerifyReport::new("shared");
+        check_inventory(&mut shared_r, &fam.shared, &shared_expected);
+        r.merge(shared_r);
+        let mut head_r = VerifyReport::new("head");
+        check_inventory(&mut head_r, &fam.head, &head_expected);
+        r.merge(head_r);
+
+        // marginal payload must equal the per-head tables byte-for-byte
+        let want_payload: usize = head_expected.iter().map(|(_, s)| s).sum();
+        if fam.head_payload_bytes() != want_payload {
+            r.push(FindingKind::AccountingMismatch, "head_payload_bytes",
+                   format!("reports {} but the marginal tables sum to {want_payload}",
+                           fam.head_payload_bytes()));
+        }
+    }
+
+    // family totals recompute from first principles: shared + n·head
+    for n in [0usize, 1, 2, 8] {
+        let want = fam.head.total_bytes.checked_mul(n)
+            .and_then(|h| h.checked_add(fam.shared.total_bytes));
+        match (fam.family_bytes(n), want) {
+            (got, want) if got == want => {}
+            (got, want) => {
+                r.push(FindingKind::AccountingMismatch, "family_bytes",
+                       format!("family_bytes({n}) = {got:?}, recomputed \
+                                shared + {n}*head = {want:?}"));
+            }
+        }
+    }
+
+    // shared ∪ head must partition the private-head layout exactly
+    match fam.private_head_plan() {
+        Ok(private) => {
+            for b in &private.buffers {
+                let in_shared = fam.shared.lookup(&b.name).map(|s| s.size);
+                let in_head = fam.head.lookup(&b.name).map(|s| s.size);
+                match (in_shared, in_head) {
+                    (Some(_), Some(_)) => {
+                        r.push(FindingKind::AccountingMismatch, &b.name,
+                               "buffer appears in both shared and head regions"
+                                   .to_string());
+                    }
+                    (None, None) => {
+                        r.push(FindingKind::AccountingMismatch, &b.name,
+                               "private-head buffer missing from both family regions"
+                                   .to_string());
+                    }
+                    (Some(size), None) | (None, Some(size)) => {
+                        if size != b.size {
+                            r.push(FindingKind::AccountingMismatch, &b.name,
+                                   format!("family region plans {size} bytes, private \
+                                            head plans {}", b.size));
+                        }
+                    }
+                }
+            }
+            let family_buffers = fam.shared.buffers.len() + fam.head.buffers.len();
+            if family_buffers != private.buffers.len() {
+                r.push(FindingKind::AccountingMismatch, "buffer count",
+                       format!("shared + head carry {family_buffers} buffers, the \
+                                private head {}", private.buffers.len()));
+            }
+        }
+        Err(e) => {
+            r.push(FindingKind::ArithmeticOverflow, "private_head_plan",
+                   format!("private-head accounting unavailable: {e}"));
+        }
+    }
+    r
+}
+
+/// Shadow bounds check for one arena access (debug / `shadow-bounds`
+/// builds): the byte range `[offset, offset + len)` claimed on behalf of
+/// the planned buffer `name` must lie inside that region and intersect no
+/// other region.  Allocation-free on the success path — the zero-alloc
+/// serving guarantee holds with the checker enabled.
+///
+/// Returns the offending region pair on a violation so the caller can
+/// report which access crossed into which region.
+pub fn check_access(plan: &Plan, name: &str, offset: usize,
+                    len: usize) -> Result<(), Finding> {
+    let owner = match plan.lookup(name) {
+        Some(b) => b,
+        None => {
+            return Err(Finding {
+                kind: FindingKind::MissingBuffer,
+                subject: name.to_string(),
+                detail: format!("access [{offset}, {}) tagged with an unplanned region",
+                                offset.saturating_add(len)),
+            })
+        }
+    };
+    let end = match offset.checked_add(len) {
+        Some(end) => end,
+        None => {
+            return Err(Finding {
+                kind: FindingKind::ArithmeticOverflow,
+                subject: name.to_string(),
+                detail: format!("access offset {offset} + len {len} overflows usize"),
+            })
+        }
+    };
+    let owner_end = owner.offset.saturating_add(owner.size);
+    if offset < owner.offset || end > owner_end {
+        return Err(Finding {
+            kind: FindingKind::OutOfArena,
+            subject: name.to_string(),
+            detail: format!("access [{offset}, {end}) escapes its owning region \
+                             [{}, {owner_end})", owner.offset),
+        });
+    }
+    for other in &plan.buffers {
+        if other.name == *name {
+            continue;
+        }
+        let other_end = other.offset.saturating_add(other.size);
+        if offset < other_end && other.offset < end {
+            return Err(Finding {
+                kind: if is_scratch(name) || is_scratch(&other.name) {
+                    FindingKind::ScratchAliasing
+                } else {
+                    FindingKind::Overlap
+                },
+                subject: name.to_string(),
+                detail: format!("access [{offset}, {end}) crosses into region '{}' \
+                                 [{}, {other_end})", other.name, other.offset),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::spec::VqSpec;
+    use crate::memplan::{plan_family, PlannedBuffer};
+
+    fn demo_family() -> FamilyPlan {
+        plan_family(&KanSpec::default(), &VqSpec::default(), Precision::Int8, 16).unwrap()
+    }
+
+    #[test]
+    fn clean_family_passes() {
+        let fam = demo_family();
+        let r = verify_family_plan("fam", &fam);
+        assert!(r.is_ok(), "{:?}", r.findings());
+    }
+
+    #[test]
+    fn layout_flags_each_structural_class() {
+        // misaligned base
+        let p = Plan::new(vec![PlannedBuffer { name: "a".into(), offset: 8, size: 16 }], 256);
+        assert!(verify_plan("t", &p).has(FindingKind::Misalignment));
+        // overlap (weight-on-weight)
+        let p = Plan::new(
+            vec![
+                PlannedBuffer { name: "a".into(), offset: 0, size: 512 },
+                PlannedBuffer { name: "b".into(), offset: 256, size: 128 },
+            ],
+            1024,
+        );
+        assert!(verify_plan("t", &p).has(FindingKind::Overlap));
+        // scratch aliasing classifies separately
+        let p = Plan::new(
+            vec![
+                PlannedBuffer { name: "layer0/codebook".into(), offset: 0, size: 512 },
+                PlannedBuffer { name: "act/ping".into(), offset: 256, size: 128 },
+            ],
+            1024,
+        );
+        let r = verify_plan("t", &p);
+        assert!(r.has(FindingKind::ScratchAliasing) && !r.has(FindingKind::Overlap));
+        // hole in coverage
+        let p = Plan::new(
+            vec![
+                PlannedBuffer { name: "a".into(), offset: 0, size: 16 },
+                PlannedBuffer { name: "b".into(), offset: 512, size: 16 },
+            ],
+            768,
+        );
+        assert!(verify_plan("t", &p).has(FindingKind::CoverageGap));
+        // buffer past arena total
+        let p = Plan::new(vec![PlannedBuffer { name: "a".into(), offset: 0, size: 300 }], 256);
+        assert!(verify_plan("t", &p).has(FindingKind::OutOfArena));
+        // end arithmetic overflow
+        let p = Plan::new(
+            vec![PlannedBuffer { name: "a".into(), offset: 0, size: usize::MAX }],
+            256,
+        );
+        assert!(verify_plan("t", &p).has(FindingKind::ArithmeticOverflow));
+    }
+
+    #[test]
+    fn shadow_check_accepts_in_region_and_rejects_cross_region() {
+        let fam = demo_family();
+        let plan = &fam.shared;
+        let cb = plan.lookup("layer0/codebook").unwrap().clone();
+        assert!(check_access(plan, "layer0/codebook", cb.offset, cb.size).is_ok());
+        assert!(check_access(plan, "layer0/codebook", cb.offset + 1, cb.size.min(4)).is_ok());
+        // escaping the owning region is flagged even without touching data
+        let e = check_access(plan, "layer0/codebook", cb.offset, cb.size + ALIGN)
+            .unwrap_err();
+        assert_eq!(e.kind, FindingKind::OutOfArena);
+        // a range claimed for one region but lying in another
+        let ping = plan.lookup("act/ping").unwrap().clone();
+        let e = check_access(plan, "layer0/codebook", ping.offset, 4).unwrap_err();
+        assert_eq!(e.kind, FindingKind::OutOfArena);
+        // unknown owner
+        assert!(check_access(plan, "nope", 0, 4).is_err());
+    }
+
+    #[test]
+    fn report_json_is_machine_readable() {
+        let p = Plan::new(vec![PlannedBuffer { name: "a".into(), offset: 8, size: 16 }], 256);
+        let r = verify_plan("demo", &p);
+        let j = r.to_json();
+        assert_eq!(j.get("label").and_then(|l| l.as_str()), Some("demo"));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        let findings = j.get("findings").and_then(|f| f.as_arr()).unwrap();
+        assert_eq!(findings[0].get("kind").and_then(|k| k.as_str()),
+                   Some("misalignment"));
+        // and the typed-error path carries the same findings
+        let err = r.into_result().unwrap_err();
+        assert_eq!(err.findings().len(), findings.len());
+        assert!(err.to_string().contains("misalignment"));
+    }
+}

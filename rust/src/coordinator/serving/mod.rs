@@ -395,6 +395,131 @@ impl DeploymentSpec {
         Ok(out)
     }
 
+    /// The largest batch bucket the deployed backends size scratch for —
+    /// the `max_batch` every arena plan is derived with (mirrors the
+    /// derivation inside [`DeploymentSpec::deploy`]).
+    fn max_bucket(&self) -> usize {
+        match &self.buckets {
+            Some(b) => b.iter().copied().max().unwrap_or(self.max_batch),
+            None => bucket_ladder(self.max_batch)
+                .into_iter()
+                .max()
+                .unwrap_or(self.max_batch),
+        }
+    }
+
+    /// Statically verify every arena layout this spec would materialize,
+    /// **before** starting a single executor: each head's private arena
+    /// plan is checked for disjointness, coverage, 256-byte alignment,
+    /// packed-index widths and inventory against its weights
+    /// ([`crate::analysis::verify_head_plan`]); each family's shared +
+    /// marginal layout additionally has its byte accounting reconciled
+    /// ([`crate::analysis::verify_family_plan`]).  Checkpoint-file heads
+    /// are loaded (the only I/O).  Returns the merged findings report —
+    /// `Err` only for I/O / malformed-file failures, never for layout
+    /// findings; call [`crate::analysis::VerifyReport::into_result`] to
+    /// turn findings into a typed error (the `share-kan verify` surface).
+    pub fn verify(&self) -> Result<crate::analysis::VerifyReport> {
+        use crate::analysis::{verify_family_plan, verify_head_plan, FindingKind, VerifyReport};
+        self.validate()?;
+        let max_bucket = self.max_bucket();
+        let mut report = VerifyReport::new("deployment");
+        let mut verified_families: BTreeSet<&str> = BTreeSet::new();
+        for entry in &self.heads {
+            let weights = load_weights(entry)?;
+            // family-backed VQ heads execute from the family layout
+            // (shared codebooks + per-head marginal tables), proven once
+            // per family; everything else from its private arena plan
+            if self.backend == BackendKind::FamilyArena
+                && entry.family.is_some()
+                && matches!(weights,
+                            HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. })
+            {
+                let fam_name = entry.family.as_deref().unwrap_or_default();
+                if verified_families.insert(fam_name) {
+                    let precision = match weights {
+                        HeadWeights::VqInt8 { .. } => Precision::Int8,
+                        _ => Precision::Fp32,
+                    };
+                    let kan = weights.implied_kan_spec();
+                    let vq = crate::kan::spec::VqSpec {
+                        codebook_size: weights.implied_codebook_size(),
+                    };
+                    match plan_family(&kan, &vq, precision, max_bucket) {
+                        Ok(fam) => report.merge(verify_family_plan(
+                            &format!("family '{fam_name}'"), &fam)),
+                        Err(e) => report.push(FindingKind::ArithmeticOverflow,
+                                              format!("family '{fam_name}'"),
+                                              e),
+                    }
+                }
+                continue;
+            }
+            match plan_head(&weights, max_bucket) {
+                Ok(plan) => report.merge(verify_head_plan(
+                    &format!("head '{}'", entry.name), &plan, &weights, max_bucket)),
+                Err(e) => report.push(FindingKind::ArithmeticOverflow,
+                                      format!("head '{}'", entry.name),
+                                      e),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Static mirror of [`Deployment::report`]'s resident-byte total: the
+    /// exact bytes a fresh deployment of this spec would report, computed
+    /// from [`DeploymentSpec::simulate_placements`] and the same per-head
+    /// accounting [`Deployment`] records at registration — family-backed
+    /// VQ heads pay `shared * occupied_shards + marginal * heads`,
+    /// everything else pays its private arena/weight bytes per copy.  The
+    /// reconciliation test pins this against the live report bit for bit.
+    pub fn expected_resident_bytes(&self) -> Result<usize> {
+        let placements = self.simulate_placements()?;
+        let max_bucket = self.max_bucket();
+        let mut fam_shards: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+        let mut fam_heads: BTreeMap<String, usize> = BTreeMap::new();
+        let mut fam_bytes: BTreeMap<String, FamilyBytes> = BTreeMap::new();
+        let mut total = 0usize;
+        for (entry, placement) in self.heads.iter().zip(&placements) {
+            let weights = load_weights(entry)?;
+            let family_bytes = if self.backend == BackendKind::FamilyArena
+                && entry.family.is_some()
+            {
+                family_bytes_for(&weights, max_bucket)
+            } else {
+                None
+            };
+            if let (Some(fb), Some(f)) = (family_bytes, entry.family.as_ref()) {
+                fam_bytes.entry(f.clone()).or_insert(fb);
+                *fam_heads.entry(f.clone()).or_insert(0) += 1;
+                if let Some(s) = placement.shard {
+                    fam_shards.entry(f.clone()).or_default().insert(s);
+                }
+                continue;
+            }
+            let private = match self.backend {
+                BackendKind::Arena | BackendKind::FamilyArena => {
+                    plan_head(&weights, max_bucket)
+                        .map(|p| p.total_bytes)
+                        .unwrap_or_else(|_| weights.weight_bytes())
+                }
+                _ => weights.weight_bytes(),
+            };
+            let copies = if entry.replicate { self.shards } else { 1 };
+            total = total.saturating_add(private.saturating_mul(copies));
+        }
+        for (f, fb) in &fam_bytes {
+            let shards = fam_shards.get(f).map(|s| s.len()).unwrap_or(0);
+            let heads = fam_heads.get(f).copied().unwrap_or(0);
+            total = total.saturating_add(
+                fb.shared
+                    .saturating_mul(shards)
+                    .saturating_add(fb.marginal.saturating_mul(heads)),
+            );
+        }
+        Ok(total)
+    }
+
     /// Compile the spec into a running [`Deployment`]: validate, load
     /// checkpoint-file heads, derive the [`BackendSpec`] from the first
     /// head, start the executor pool under the configured placement
@@ -404,16 +529,7 @@ impl DeploymentSpec {
         // resolve weight sources (checkpoint files load here, once)
         let mut resolved: Vec<(HeadEntry, HeadWeights)> = Vec::with_capacity(self.heads.len());
         for entry in self.heads.into_iter() {
-            let weights = match &entry.source {
-                HeadSource::Weights(w) => w.clone(),
-                HeadSource::Path(p) => {
-                    let ck = Checkpoint::load(p)
-                        .with_context(|| format!("loading head '{}' from {}",
-                                                 entry.name, p.display()))?;
-                    HeadWeights::from_checkpoint(&ck)
-                        .with_context(|| format!("head '{}' ({})", entry.name, p.display()))?
-                }
-            };
+            let weights = load_weights(&entry)?;
             resolved.push((entry, weights));
         }
 
@@ -693,6 +809,22 @@ impl Deployment {
 struct PendingMeta {
     meta: HeadMeta,
     family_bytes: Option<FamilyBytes>,
+}
+
+/// Resolve one head entry's weights: in-memory weights clone, checkpoint
+/// files load from disk (shared by [`DeploymentSpec::deploy`] and the
+/// static [`DeploymentSpec::verify`] path so both see identical weights).
+fn load_weights(entry: &HeadEntry) -> Result<HeadWeights> {
+    match &entry.source {
+        HeadSource::Weights(w) => Ok(w.clone()),
+        HeadSource::Path(p) => {
+            let ck = Checkpoint::load(p).with_context(|| {
+                format!("loading head '{}' from {}", entry.name, p.display())
+            })?;
+            HeadWeights::from_checkpoint(&ck)
+                .with_context(|| format!("head '{}' ({})", entry.name, p.display()))
+        }
+    }
 }
 
 /// Shared/marginal/private plan bytes for a VQ head's family shape, from

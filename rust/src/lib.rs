@@ -50,6 +50,7 @@
 // `#[allow(missing_docs)]` below to opt a module in.
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod coordinator;
 #[allow(missing_docs)]
 pub mod data;

@@ -23,6 +23,11 @@
 //!            | --family [--heads N] [--shards N] (shared vs marginal and
 //!            placement byte accounting) | --deployment deploy.toml
 //!            (placement dry-run, no executors started)
+//!   verify   --deployment deploy.toml
+//!            (static plan verification: prove every arena layout the
+//!            deployment would materialize — disjoint, aligned, covered,
+//!            index widths exact, family accounting reconciled — and emit
+//!            machine-readable JSON findings; exit 1 on any finding)
 //!
 //! The default build serves everything through the pure-Rust native
 //! backend — no Python, no PJRT, no artifacts/ directory.  With
@@ -46,7 +51,7 @@ use share_kan::util::cli::Args;
 use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
 
-const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options]
+const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify> [options]
   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]   (pjrt builds only)
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
            --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
@@ -58,6 +63,7 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan> [options
   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
            --family [--heads N] [--k 512] [--int8] [--shards N] [--heads-per-shard N]   (family arena + placement accounting)
            --deployment deploy.toml   (placement dry-run)
+  verify   --deployment deploy.toml   (static plan verification; JSON findings, exit 1 on any)
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
 
 fn main() {
@@ -88,6 +94,7 @@ fn run(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "plan" => cmd_plan(args),
+        "verify" => cmd_verify(args),
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -500,6 +507,23 @@ fn cmd_serve_deployment(args: &Args, file: &str) -> Result<()> {
                  m.counters.mean_batch_size());
     }
     dep.shutdown();
+    Ok(())
+}
+
+/// `verify --deployment deploy.toml`: statically prove every arena layout
+/// the deployment would materialize — no executors started, no arena
+/// allocated.  Each head's plan is checked for region disjointness, total
+/// coverage, 256-byte alignment, exact packed-index widths and inventory
+/// against its weights; family layouts additionally reconcile their
+/// shared-vs-marginal byte accounting.  Output is one machine-readable
+/// JSON object (`{"label","ok","findings":[{kind,subject,detail}..]}`);
+/// the process exits 1 when any finding is present.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let file = args.get("deployment").context("--deployment required")?;
+    let spec = DeploymentSpec::from_file(Path::new(file))?;
+    let report = spec.verify()?;
+    println!("{}", share_kan::util::json::to_string(&report.to_json()));
+    report.into_result()?;
     Ok(())
 }
 

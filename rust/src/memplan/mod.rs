@@ -312,8 +312,16 @@ impl FamilyPlan {
     /// [`plan_head`], so for a well-formed VQ head of this family's shape
     /// the two agree byte-for-byte.
     pub fn private_head_bytes(&self) -> Result<usize, String> {
-        let plan = plan_vq_arena_head(&self.spec, &self.vq, self.precision, self.max_batch)?;
-        Ok(plan.total_bytes)
+        Ok(self.private_head_plan()?.total_bytes)
+    }
+
+    /// The full **private** plan for a head of this family's shape (its own
+    /// codebooks + marginal tables + scratch) — what [`plan_head`] would
+    /// produce for such a head.  The static verifier
+    /// (`analysis::verify_family_plan`) uses it to prove that the shared
+    /// and per-head regions partition the private layout exactly.
+    pub fn private_head_plan(&self) -> Result<Plan, String> {
+        plan_vq_arena_head(&self.spec, &self.vq, self.precision, self.max_batch)
     }
 }
 
@@ -449,6 +457,17 @@ impl Arena {
         Arena { data, plan }
     }
 
+    /// Verify the plan's layout proof (`analysis::verify_plan`: alignment,
+    /// disjointness, coverage, bounds, checked arithmetic) and allocate
+    /// only if it holds.  A corrupted plan is a typed
+    /// [`VerifyError`](crate::analysis::VerifyError) — a build error,
+    /// never a runtime panic.  The arena backends construct exclusively
+    /// through this seam.
+    pub fn try_allocate(plan: Plan) -> Result<Arena, crate::analysis::VerifyError> {
+        crate::analysis::verify_plan("arena", &plan).into_result()?;
+        Ok(Arena::allocate(plan))
+    }
+
     /// The plan this arena was allocated for.
     pub fn plan(&self) -> &Plan {
         &self.plan
@@ -538,6 +557,9 @@ struct AlignedBytes {
 // SAFETY: AlignedBytes uniquely owns its allocation (no aliasing), so it
 // may move between threads like the Vec it replaces.
 unsafe impl Send for AlignedBytes {}
+// SAFETY: shared access only hands out `&[u8]` views of the owned block
+// (interior mutability is never used), so `&AlignedBytes` is safe to share
+// across threads, again like the Vec it replaces.
 unsafe impl Sync for AlignedBytes {}
 
 impl AlignedBytes {

@@ -142,8 +142,14 @@ impl ArenaBackend {
         let max_bucket = spec.batch_buckets.iter().copied().max().unwrap_or(1).max(1);
         let plan = plan_head(weights, max_bucket)
             .map_err(|e| anyhow::anyhow!("memplan rejected head layout: {e}"))?;
-        plan.validate().map_err(|e| anyhow::anyhow!("invalid head plan: {e}"))?;
-        let mut arena = Arena::allocate(plan);
+        // construction-time proof: layout structure + per-variant buffer
+        // inventory (incl. packed-index widths).  A corrupted plan is a
+        // typed build error here — it never reaches the kernels.
+        crate::analysis::verify_head_plan("head", &plan, weights, max_bucket)
+            .into_result()
+            .context("head plan failed static verification")?;
+        let mut arena = Arena::try_allocate(plan)
+            .context("head plan failed static verification")?;
 
         let tables = match weights {
             HeadWeights::Mlp { w1, b1, w2, b2 } => {
@@ -221,6 +227,24 @@ impl ArenaBackend {
             act_bytes: ping.end - ping.start,
             arena,
         })
+    }
+}
+
+/// Debug / `shadow-bounds` shadow bounds-checker: every table and scratch
+/// range the hot path is about to borrow is tagged with its owning planned
+/// region and re-proven in-bounds via `analysis::check_access` (inside the
+/// owner, intersecting no other region).  Allocation-free on the success
+/// path, so the zero-alloc guarantee holds with the checker enabled; a
+/// violation means the construction-time proof was bypassed and panics
+/// with the finding.
+#[cfg(any(debug_assertions, feature = "shadow-bounds"))]
+fn shadow_check(plan: &Plan, accesses: &[(&str, &Range<usize>)]) {
+    for (name, r) in accesses {
+        if let Err(f) = crate::analysis::check_access(plan, name, r.start,
+                                                      r.end.saturating_sub(r.start)) {
+            panic!("shadow bounds-checker: [{}] {}: {}", f.kind.name(), f.subject,
+                   f.detail);
+        }
     }
 }
 
@@ -341,6 +365,34 @@ impl Backend for ArenaBackend {
             h.max_bucket
         );
         let (d_in, d_hidden, d_out, g) = (h.d_in, h.d_hidden, h.d_out, h.g);
+        #[cfg(any(debug_assertions, feature = "shadow-bounds"))]
+        {
+            let plan = h.arena.plan();
+            let ping = h.scratch_offset..h.scratch_offset + h.act_bytes;
+            let pong_start = h.scratch_offset + h.pong_rel;
+            let pong = pong_start..pong_start + h.act_bytes;
+            match &h.tables {
+                HeadTables::Mlp { w1, b1, w2, b2 } => shadow_check(plan, &[
+                    ("mlp/w1", w1), ("mlp/b1", b1), ("mlp/w2", w2), ("mlp/b2", b2),
+                    ("act/ping", &ping), ("act/pong", &pong),
+                ]),
+                HeadTables::Dense { grids0, grids1 } => shadow_check(plan, &[
+                    ("layer0/grids", grids0), ("layer1/grids", grids1),
+                    ("act/ping", &ping), ("act/pong", &pong),
+                ]),
+                HeadTables::Vq { layers, .. } => shadow_check(plan, &[
+                    ("layer0/codebook", &layers[0].codebook),
+                    ("layer0/idx", &layers[0].idx),
+                    ("layer0/gain", &layers[0].gain),
+                    ("layer0/bias_sum", &layers[0].bias),
+                    ("layer1/codebook", &layers[1].codebook),
+                    ("layer1/idx", &layers[1].idx),
+                    ("layer1/gain", &layers[1].gain),
+                    ("layer1/bias_sum", &layers[1].bias),
+                    ("act/ping", &ping), ("act/pong", &pong),
+                ]),
+            }
+        }
         let (tables, scratch) = h.arena.split_at_mut(h.scratch_offset);
         let (ping_part, pong_part) = scratch.split_at_mut(h.pong_rel);
         let ping = view::f32s_mut(&mut ping_part[..h.act_bytes]);
@@ -543,13 +595,13 @@ impl FamilyArenaBackend {
         let max_bucket = self.spec.batch_buckets.iter().copied().max().unwrap_or(1).max(1);
         let fam = plan_family(&self.spec.kan, &self.spec.vq, precision, max_bucket)
             .map_err(|e| anyhow::anyhow!("memplan rejected family layout: {e}"))?;
-        fam.shared
-            .validate()
-            .map_err(|e| anyhow::anyhow!("invalid shared plan: {e}"))?;
-        fam.head
-            .validate()
-            .map_err(|e| anyhow::anyhow!("invalid per-head plan: {e}"))?;
-        let arena = Arena::allocate(fam.shared.clone());
+        // construction-time proof over both regions: structure, shared /
+        // marginal inventories and the family accounting reconciliation.
+        crate::analysis::verify_family_plan("family", &fam)
+            .into_result()
+            .context("family plan failed static verification")?;
+        let arena = Arena::try_allocate(fam.shared.clone())
+            .context("shared plan failed static verification")?;
         let codebook = [range(&arena, "layer0/codebook")?, range(&arena, "layer1/codebook")?];
         let ping = range(&arena, "act/ping")?;
         let pong = range(&arena, "act/pong")?;
@@ -645,7 +697,8 @@ impl FamilyArenaBackend {
             HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
                 pending = self.prepare_shared_fp32([&cb0.as_f32(), &cb1.as_f32()])?;
                 let (head_plan, bits) = shared_template(&pending, &self.shared);
-                let mut arena = Arena::allocate(head_plan);
+                let mut arena = Arena::try_allocate(head_plan)
+                    .context("per-head plan failed static verification")?;
                 fill_f32(&mut arena, "layer0/gain", &g0.as_f32())?;
                 fill_f32(&mut arena, "layer1/gain", &g1.as_f32())?;
                 fill_f32(&mut arena, "layer0/bias_sum", &bs0.as_f32())?;
@@ -661,7 +714,8 @@ impl FamilyArenaBackend {
                 pending = self.prepare_shared_int8([&cbq0.as_i8(), &cbq1.as_i8()],
                                                    [s[0], s[3]])?;
                 let (head_plan, bits) = shared_template(&pending, &self.shared);
-                let mut arena = Arena::allocate(head_plan);
+                let mut arena = Arena::try_allocate(head_plan)
+                    .context("per-head plan failed static verification")?;
                 fill_i8(&mut arena, "layer0/gain", &gq0.as_i8())?;
                 fill_i8(&mut arena, "layer1/gain", &gq1.as_i8())?;
                 fill_f32(&mut arena, "layer0/bias_sum", &bs0.as_f32())?;
@@ -786,6 +840,25 @@ impl Backend for FamilyArenaBackend {
             sh.max_bucket
         );
         let bits = sh.bits;
+        #[cfg(any(debug_assertions, feature = "shadow-bounds"))]
+        {
+            let ping = sh.scratch_offset..sh.scratch_offset + sh.act_bytes;
+            let pong_start = sh.scratch_offset + sh.pong_rel;
+            let pong = pong_start..pong_start + sh.act_bytes;
+            shadow_check(sh.arena.plan(), &[
+                ("layer0/codebook", &sh.codebook[0]),
+                ("layer1/codebook", &sh.codebook[1]),
+                ("act/ping", &ping), ("act/pong", &pong),
+            ]);
+            shadow_check(h.arena.plan(), &[
+                ("layer0/idx", &h.layers[0].idx),
+                ("layer0/gain", &h.layers[0].gain),
+                ("layer0/bias_sum", &h.layers[0].bias),
+                ("layer1/idx", &h.layers[1].idx),
+                ("layer1/gain", &h.layers[1].gain),
+                ("layer1/bias_sum", &h.layers[1].bias),
+            ]);
+        }
         let (tables, scratch) = sh.arena.split_at_mut(sh.scratch_offset);
         let (ping_part, pong_part) = scratch.split_at_mut(sh.pong_rel);
         let ping = view::f32s_mut(&mut ping_part[..sh.act_bytes]);

@@ -533,61 +533,67 @@ mod avx2 {
                                        gain: &[f32], idx: &[u8], bits: usize,
                                        bias: &[f32], n_in: usize, n_out: usize,
                                        g: usize, out: &mut [f32]) {
-        let out = &mut out[..b * n_out];
-        out.fill(0.0);
-        let scale = (g - 1) as f32 / 2.0;
-        let mut rows = [0u32; J_TILE];
-        let gsplat = _mm256_set1_epi32(g as i32);
-        for i in 0..n_in {
-            let erow = i * n_out;
-            let mut j0 = 0usize;
-            while j0 < n_out {
-                let tile = (n_out - j0).min(J_TILE);
-                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
-                for bi in 0..b {
-                    let u = x[bi * n_in + i].tanh();
-                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-                    let i0 = (pos.floor() as usize).min(g - 2);
-                    let f = pos - i0 as f32;
-                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-                    let wf = _mm256_set1_ps(f);
-                    let w1 = _mm256_set1_ps(1.0 - f);
-                    let i0splat = _mm256_set1_epi32(i0 as i32);
-                    let mut v = 0usize;
-                    while v + LANES <= tile {
-                        let j = j0 + v;
-                        let rvec =
-                            _mm256_loadu_si256(rows.as_ptr().add(v) as *const __m256i);
-                        let offs =
-                            _mm256_add_epi32(_mm256_mullo_epi32(rvec, gsplat), i0splat);
-                        let c0 = _mm256_i32gather_ps::<4>(codebook.as_ptr(), offs);
-                        let c1 = _mm256_i32gather_ps::<4>(codebook.as_ptr().add(1), offs);
-                        let lerp =
-                            _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
-                        let gv = _mm256_loadu_ps(gain.as_ptr().add(erow + j));
-                        let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
-                        _mm256_storeu_ps(
-                            orow.as_mut_ptr().add(j),
-                            _mm256_add_ps(acc, _mm256_mul_ps(gv, lerp)),
-                        );
-                        v += LANES;
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let out = &mut out[..b * n_out];
+            out.fill(0.0);
+            let scale = (g - 1) as f32 / 2.0;
+            let mut rows = [0u32; J_TILE];
+            let gsplat = _mm256_set1_epi32(g as i32);
+            for i in 0..n_in {
+                let erow = i * n_out;
+                let mut j0 = 0usize;
+                while j0 < n_out {
+                    let tile = (n_out - j0).min(J_TILE);
+                    decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                    for bi in 0..b {
+                        let u = x[bi * n_in + i].tanh();
+                        let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                        let i0 = (pos.floor() as usize).min(g - 2);
+                        let f = pos - i0 as f32;
+                        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                        let wf = _mm256_set1_ps(f);
+                        let w1 = _mm256_set1_ps(1.0 - f);
+                        let i0splat = _mm256_set1_epi32(i0 as i32);
+                        let mut v = 0usize;
+                        while v + LANES <= tile {
+                            let j = j0 + v;
+                            let rvec =
+                                _mm256_loadu_si256(rows.as_ptr().add(v) as *const __m256i);
+                            let offs =
+                                _mm256_add_epi32(_mm256_mullo_epi32(rvec, gsplat), i0splat);
+                            let c0 = _mm256_i32gather_ps::<4>(codebook.as_ptr(), offs);
+                            let c1 = _mm256_i32gather_ps::<4>(codebook.as_ptr().add(1), offs);
+                            let lerp =
+                                _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
+                            let gv = _mm256_loadu_ps(gain.as_ptr().add(erow + j));
+                            let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
+                            _mm256_storeu_ps(
+                                orow.as_mut_ptr().add(j),
+                                _mm256_add_ps(acc, _mm256_mul_ps(gv, lerp)),
+                            );
+                            v += LANES;
+                        }
+                        // scalar tail: same math, same rounding as the lanes
+                        for t in v..tile {
+                            let j = j0 + t;
+                            let c = rows[t] as usize * g + i0;
+                            let interp = (1.0 - f) * codebook[c] + f * codebook[c + 1];
+                            orow[j] += gain[erow + j] * interp;
+                        }
                     }
-                    // scalar tail: same math, same rounding as the lanes
-                    for t in v..tile {
-                        let j = j0 + t;
-                        let c = rows[t] as usize * g + i0;
-                        let interp = (1.0 - f) * codebook[c] + f * codebook[c + 1];
-                        orow[j] += gain[erow + j] * interp;
-                    }
+                    j0 += tile;
                 }
-                j0 += tile;
             }
-        }
-        // bias last, exactly as the scalar kernel adds it per row
-        for bi in 0..b {
-            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += bias[j];
+            // bias last, exactly as the scalar kernel adds it per row
+            for bi in 0..b {
+                let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += bias[j];
+                }
             }
         }
     }
@@ -607,67 +613,73 @@ mod avx2 {
                                        gain_lut: &[f32; 256], idx: &[u8], bits: usize,
                                        bias: &[f32], n_in: usize, n_out: usize,
                                        g: usize, out: &mut [f32]) {
-        let out = &mut out[..b * n_out];
-        out.fill(0.0);
-        let scale = (g - 1) as f32 / 2.0;
-        let mut rows = [0u32; J_TILE];
-        let svec = _mm256_set1_ps(cb_scale);
-        for i in 0..n_in {
-            let erow = i * n_out;
-            let mut j0 = 0usize;
-            while j0 < n_out {
-                let tile = (n_out - j0).min(J_TILE);
-                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
-                for bi in 0..b {
-                    let u = x[bi * n_in + i].tanh();
-                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-                    let i0 = (pos.floor() as usize).min(g - 2);
-                    let f = pos - i0 as f32;
-                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-                    let wf = _mm256_set1_ps(f);
-                    let w1 = _mm256_set1_ps(1.0 - f);
-                    let mut v = 0usize;
-                    while v + LANES <= tile {
-                        let j = j0 + v;
-                        let mut q0 = [0f32; LANES];
-                        let mut q1 = [0f32; LANES];
-                        for l in 0..LANES {
-                            let c = rows[v + l] as usize * g + i0;
-                            q0[l] = codebook[c] as f32;
-                            q1[l] = codebook[c + 1] as f32;
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let out = &mut out[..b * n_out];
+            out.fill(0.0);
+            let scale = (g - 1) as f32 / 2.0;
+            let mut rows = [0u32; J_TILE];
+            let svec = _mm256_set1_ps(cb_scale);
+            for i in 0..n_in {
+                let erow = i * n_out;
+                let mut j0 = 0usize;
+                while j0 < n_out {
+                    let tile = (n_out - j0).min(J_TILE);
+                    decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                    for bi in 0..b {
+                        let u = x[bi * n_in + i].tanh();
+                        let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                        let i0 = (pos.floor() as usize).min(g - 2);
+                        let f = pos - i0 as f32;
+                        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                        let wf = _mm256_set1_ps(f);
+                        let w1 = _mm256_set1_ps(1.0 - f);
+                        let mut v = 0usize;
+                        while v + LANES <= tile {
+                            let j = j0 + v;
+                            let mut q0 = [0f32; LANES];
+                            let mut q1 = [0f32; LANES];
+                            for l in 0..LANES {
+                                let c = rows[v + l] as usize * g + i0;
+                                q0[l] = codebook[c] as f32;
+                                q1[l] = codebook[c + 1] as f32;
+                            }
+                            let c0 = _mm256_mul_ps(_mm256_loadu_ps(q0.as_ptr()), svec);
+                            let c1 = _mm256_mul_ps(_mm256_loadu_ps(q1.as_ptr()), svec);
+                            let lerp =
+                                _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
+                            let gq =
+                                _mm_loadl_epi64(gain.as_ptr().add(erow + j) as *const __m128i);
+                            let gidx = _mm256_cvtepu8_epi32(gq);
+                            let gv = _mm256_i32gather_ps::<4>(gain_lut.as_ptr(), gidx);
+                            let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
+                            _mm256_storeu_ps(
+                                orow.as_mut_ptr().add(j),
+                                _mm256_add_ps(acc, _mm256_mul_ps(gv, lerp)),
+                            );
+                            v += LANES;
                         }
-                        let c0 = _mm256_mul_ps(_mm256_loadu_ps(q0.as_ptr()), svec);
-                        let c1 = _mm256_mul_ps(_mm256_loadu_ps(q1.as_ptr()), svec);
-                        let lerp =
-                            _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
-                        let gq =
-                            _mm_loadl_epi64(gain.as_ptr().add(erow + j) as *const __m128i);
-                        let gidx = _mm256_cvtepu8_epi32(gq);
-                        let gv = _mm256_i32gather_ps::<4>(gain_lut.as_ptr(), gidx);
-                        let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
-                        _mm256_storeu_ps(
-                            orow.as_mut_ptr().add(j),
-                            _mm256_add_ps(acc, _mm256_mul_ps(gv, lerp)),
-                        );
-                        v += LANES;
+                        for t in v..tile {
+                            let j = j0 + t;
+                            let c = rows[t] as usize * g + i0;
+                            let interp = (1.0 - f) * (codebook[c] as f32 * cb_scale)
+                                + f * (codebook[c + 1] as f32 * cb_scale);
+                            // LUT entries are bit-identical to per-access dequant
+                            let gval = gain_lut[gain[erow + j] as u8 as usize];
+                            orow[j] += gval * interp;
+                        }
                     }
-                    for t in v..tile {
-                        let j = j0 + t;
-                        let c = rows[t] as usize * g + i0;
-                        let interp = (1.0 - f) * (codebook[c] as f32 * cb_scale)
-                            + f * (codebook[c + 1] as f32 * cb_scale);
-                        // LUT entries are bit-identical to per-access dequant
-                        let gval = gain_lut[gain[erow + j] as u8 as usize];
-                        orow[j] += gval * interp;
-                    }
+                    j0 += tile;
                 }
-                j0 += tile;
             }
-        }
-        for bi in 0..b {
-            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += bias[j];
+            for bi in 0..b {
+                let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += bias[j];
+                }
             }
         }
     }
@@ -681,39 +693,45 @@ mod avx2 {
     #[target_feature(enable = "avx2", enable = "fma")]
     pub(super) unsafe fn dense_layer(x: &[f32], b: usize, grids: &[f32], n_in: usize,
                                      n_out: usize, g: usize, out: &mut [f32]) {
-        let out = &mut out[..b * n_out];
-        out.fill(0.0);
-        let scale = (g - 1) as f32 / 2.0;
-        let lane_idx: [i32; LANES] = [0, 1, 2, 3, 4, 5, 6, 7];
-        let lanes = _mm256_loadu_si256(lane_idx.as_ptr() as *const __m256i);
-        let gsplat = _mm256_set1_epi32(g as i32);
-        for bi in 0..b {
-            let xrow = &x[bi * n_in..(bi + 1) * n_in];
-            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-            for (i, &xi) in xrow.iter().enumerate() {
-                let u = xi.tanh();
-                let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-                let i0 = (pos.floor() as usize).min(g - 2);
-                let f = pos - i0 as f32;
-                let base = i * n_out * g;
-                let wf = _mm256_set1_ps(f);
-                let w1 = _mm256_set1_ps(1.0 - f);
-                let bsplat = _mm256_set1_epi32((base + i0) as i32);
-                let mut j = 0usize;
-                while j + LANES <= n_out {
-                    let jv = _mm256_add_epi32(_mm256_set1_epi32(j as i32), lanes);
-                    let offs = _mm256_add_epi32(_mm256_mullo_epi32(jv, gsplat), bsplat);
-                    let c0 = _mm256_i32gather_ps::<4>(grids.as_ptr(), offs);
-                    let c1 = _mm256_i32gather_ps::<4>(grids.as_ptr().add(1), offs);
-                    let lerp =
-                        _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
-                    let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
-                    _mm256_storeu_ps(orow.as_mut_ptr().add(j), _mm256_add_ps(acc, lerp));
-                    j += LANES;
-                }
-                for j2 in j..n_out {
-                    let row = base + j2 * g + i0;
-                    orow[j2] += (1.0 - f) * grids[row] + f * grids[row + 1];
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let out = &mut out[..b * n_out];
+            out.fill(0.0);
+            let scale = (g - 1) as f32 / 2.0;
+            let lane_idx: [i32; LANES] = [0, 1, 2, 3, 4, 5, 6, 7];
+            let lanes = _mm256_loadu_si256(lane_idx.as_ptr() as *const __m256i);
+            let gsplat = _mm256_set1_epi32(g as i32);
+            for bi in 0..b {
+                let xrow = &x[bi * n_in..(bi + 1) * n_in];
+                let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                for (i, &xi) in xrow.iter().enumerate() {
+                    let u = xi.tanh();
+                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                    let i0 = (pos.floor() as usize).min(g - 2);
+                    let f = pos - i0 as f32;
+                    let base = i * n_out * g;
+                    let wf = _mm256_set1_ps(f);
+                    let w1 = _mm256_set1_ps(1.0 - f);
+                    let bsplat = _mm256_set1_epi32((base + i0) as i32);
+                    let mut j = 0usize;
+                    while j + LANES <= n_out {
+                        let jv = _mm256_add_epi32(_mm256_set1_epi32(j as i32), lanes);
+                        let offs = _mm256_add_epi32(_mm256_mullo_epi32(jv, gsplat), bsplat);
+                        let c0 = _mm256_i32gather_ps::<4>(grids.as_ptr(), offs);
+                        let c1 = _mm256_i32gather_ps::<4>(grids.as_ptr().add(1), offs);
+                        let lerp =
+                            _mm256_add_ps(_mm256_mul_ps(w1, c0), _mm256_mul_ps(wf, c1));
+                        let acc = _mm256_loadu_ps(orow.as_ptr().add(j));
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(j), _mm256_add_ps(acc, lerp));
+                        j += LANES;
+                    }
+                    for j2 in j..n_out {
+                        let row = base + j2 * g + i0;
+                        orow[j2] += (1.0 - f) * grids[row] + f * grids[row + 1];
+                    }
                 }
             }
         }
@@ -729,50 +747,56 @@ mod avx2 {
     pub(super) unsafe fn mlp(x: &[f32], b: usize, w1: &[f32], b1: &[f32], w2: &[f32],
                              b2: &[f32], d_in: usize, d_hidden: usize, d_out: usize,
                              h: &mut [f32], out: &mut [f32]) {
-        let h = &mut h[..b * d_hidden];
-        let out = &mut out[..b * d_out];
-        let zero = _mm256_setzero_ps();
-        for bi in 0..b {
-            let mut j = 0usize;
-            while j + LANES <= d_hidden {
-                let mut acc = _mm256_loadu_ps(b1.as_ptr().add(j));
-                for i in 0..d_in {
-                    let xv = _mm256_set1_ps(x[bi * d_in + i]);
-                    let wv = _mm256_loadu_ps(w1.as_ptr().add(i * d_hidden + j));
-                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let h = &mut h[..b * d_hidden];
+            let out = &mut out[..b * d_out];
+            let zero = _mm256_setzero_ps();
+            for bi in 0..b {
+                let mut j = 0usize;
+                while j + LANES <= d_hidden {
+                    let mut acc = _mm256_loadu_ps(b1.as_ptr().add(j));
+                    for i in 0..d_in {
+                        let xv = _mm256_set1_ps(x[bi * d_in + i]);
+                        let wv = _mm256_loadu_ps(w1.as_ptr().add(i * d_hidden + j));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                    }
+                    // maxps(acc, 0): returns 0 when acc is NaN, exactly like
+                    // the scalar kernel's acc.max(0.0)
+                    _mm256_storeu_ps(h.as_mut_ptr().add(bi * d_hidden + j),
+                                     _mm256_max_ps(acc, zero));
+                    j += LANES;
                 }
-                // maxps(acc, 0): returns 0 when acc is NaN, exactly like
-                // the scalar kernel's acc.max(0.0)
-                _mm256_storeu_ps(h.as_mut_ptr().add(bi * d_hidden + j),
-                                 _mm256_max_ps(acc, zero));
-                j += LANES;
+                for j2 in j..d_hidden {
+                    let mut acc = b1[j2];
+                    for i in 0..d_in {
+                        acc += x[bi * d_in + i] * w1[i * d_hidden + j2];
+                    }
+                    h[bi * d_hidden + j2] = acc.max(0.0);
+                }
             }
-            for j2 in j..d_hidden {
-                let mut acc = b1[j2];
-                for i in 0..d_in {
-                    acc += x[bi * d_in + i] * w1[i * d_hidden + j2];
+            for bi in 0..b {
+                let mut j = 0usize;
+                while j + LANES <= d_out {
+                    let mut acc = _mm256_loadu_ps(b2.as_ptr().add(j));
+                    for i in 0..d_hidden {
+                        let xv = _mm256_set1_ps(h[bi * d_hidden + i]);
+                        let wv = _mm256_loadu_ps(w2.as_ptr().add(i * d_out + j));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                    }
+                    _mm256_storeu_ps(out.as_mut_ptr().add(bi * d_out + j), acc);
+                    j += LANES;
                 }
-                h[bi * d_hidden + j2] = acc.max(0.0);
-            }
-        }
-        for bi in 0..b {
-            let mut j = 0usize;
-            while j + LANES <= d_out {
-                let mut acc = _mm256_loadu_ps(b2.as_ptr().add(j));
-                for i in 0..d_hidden {
-                    let xv = _mm256_set1_ps(h[bi * d_hidden + i]);
-                    let wv = _mm256_loadu_ps(w2.as_ptr().add(i * d_out + j));
-                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                for j2 in j..d_out {
+                    let mut acc = b2[j2];
+                    for i in 0..d_hidden {
+                        acc += h[bi * d_hidden + i] * w2[i * d_out + j2];
+                    }
+                    out[bi * d_out + j2] = acc;
                 }
-                _mm256_storeu_ps(out.as_mut_ptr().add(bi * d_out + j), acc);
-                j += LANES;
-            }
-            for j2 in j..d_out {
-                let mut acc = b2[j2];
-                for i in 0..d_hidden {
-                    acc += h[bi * d_hidden + i] * w2[i * d_out + j2];
-                }
-                out[bi * d_out + j2] = acc;
             }
         }
     }
@@ -803,57 +827,63 @@ mod neon {
                                        gain: &[f32], idx: &[u8], bits: usize,
                                        bias: &[f32], n_in: usize, n_out: usize,
                                        g: usize, out: &mut [f32]) {
-        let out = &mut out[..b * n_out];
-        out.fill(0.0);
-        let scale = (g - 1) as f32 / 2.0;
-        let mut rows = [0u32; J_TILE];
-        for i in 0..n_in {
-            let erow = i * n_out;
-            let mut j0 = 0usize;
-            while j0 < n_out {
-                let tile = (n_out - j0).min(J_TILE);
-                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
-                for bi in 0..b {
-                    let u = x[bi * n_in + i].tanh();
-                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-                    let i0 = (pos.floor() as usize).min(g - 2);
-                    let f = pos - i0 as f32;
-                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-                    let wf = vdupq_n_f32(f);
-                    let w1 = vdupq_n_f32(1.0 - f);
-                    let mut v = 0usize;
-                    while v + LANES <= tile {
-                        let j = j0 + v;
-                        let mut a0 = [0f32; LANES];
-                        let mut a1 = [0f32; LANES];
-                        for l in 0..LANES {
-                            let c = rows[v + l] as usize * g + i0;
-                            a0[l] = codebook[c];
-                            a1[l] = codebook[c + 1];
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let out = &mut out[..b * n_out];
+            out.fill(0.0);
+            let scale = (g - 1) as f32 / 2.0;
+            let mut rows = [0u32; J_TILE];
+            for i in 0..n_in {
+                let erow = i * n_out;
+                let mut j0 = 0usize;
+                while j0 < n_out {
+                    let tile = (n_out - j0).min(J_TILE);
+                    decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                    for bi in 0..b {
+                        let u = x[bi * n_in + i].tanh();
+                        let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                        let i0 = (pos.floor() as usize).min(g - 2);
+                        let f = pos - i0 as f32;
+                        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                        let wf = vdupq_n_f32(f);
+                        let w1 = vdupq_n_f32(1.0 - f);
+                        let mut v = 0usize;
+                        while v + LANES <= tile {
+                            let j = j0 + v;
+                            let mut a0 = [0f32; LANES];
+                            let mut a1 = [0f32; LANES];
+                            for l in 0..LANES {
+                                let c = rows[v + l] as usize * g + i0;
+                                a0[l] = codebook[c];
+                                a1[l] = codebook[c + 1];
+                            }
+                            let lerp = vaddq_f32(vmulq_f32(w1, vld1q_f32(a0.as_ptr())),
+                                                 vmulq_f32(wf, vld1q_f32(a1.as_ptr())));
+                            let gv = vld1q_f32(gain.as_ptr().add(erow + j));
+                            let acc = vld1q_f32(orow.as_ptr().add(j));
+                            vst1q_f32(orow.as_mut_ptr().add(j),
+                                      vaddq_f32(acc, vmulq_f32(gv, lerp)));
+                            v += LANES;
                         }
-                        let lerp = vaddq_f32(vmulq_f32(w1, vld1q_f32(a0.as_ptr())),
-                                             vmulq_f32(wf, vld1q_f32(a1.as_ptr())));
-                        let gv = vld1q_f32(gain.as_ptr().add(erow + j));
-                        let acc = vld1q_f32(orow.as_ptr().add(j));
-                        vst1q_f32(orow.as_mut_ptr().add(j),
-                                  vaddq_f32(acc, vmulq_f32(gv, lerp)));
-                        v += LANES;
+                        for t in v..tile {
+                            let j = j0 + t;
+                            let c = rows[t] as usize * g + i0;
+                            let interp = (1.0 - f) * codebook[c] + f * codebook[c + 1];
+                            orow[j] += gain[erow + j] * interp;
+                        }
                     }
-                    for t in v..tile {
-                        let j = j0 + t;
-                        let c = rows[t] as usize * g + i0;
-                        let interp = (1.0 - f) * codebook[c] + f * codebook[c + 1];
-                        orow[j] += gain[erow + j] * interp;
-                    }
+                    j0 += tile;
                 }
-                j0 += tile;
             }
-        }
-        // bias last, exactly as the scalar kernel adds it per row
-        for bi in 0..b {
-            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += bias[j];
+            // bias last, exactly as the scalar kernel adds it per row
+            for bi in 0..b {
+                let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += bias[j];
+                }
             }
         }
     }
@@ -869,62 +899,68 @@ mod neon {
                                        gain_lut: &[f32; 256], idx: &[u8], bits: usize,
                                        bias: &[f32], n_in: usize, n_out: usize,
                                        g: usize, out: &mut [f32]) {
-        let out = &mut out[..b * n_out];
-        out.fill(0.0);
-        let scale = (g - 1) as f32 / 2.0;
-        let mut rows = [0u32; J_TILE];
-        let svec = vdupq_n_f32(cb_scale);
-        for i in 0..n_in {
-            let erow = i * n_out;
-            let mut j0 = 0usize;
-            while j0 < n_out {
-                let tile = (n_out - j0).min(J_TILE);
-                decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
-                for bi in 0..b {
-                    let u = x[bi * n_in + i].tanh();
-                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-                    let i0 = (pos.floor() as usize).min(g - 2);
-                    let f = pos - i0 as f32;
-                    let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-                    let wf = vdupq_n_f32(f);
-                    let w1 = vdupq_n_f32(1.0 - f);
-                    let mut v = 0usize;
-                    while v + LANES <= tile {
-                        let j = j0 + v;
-                        let mut q0 = [0f32; LANES];
-                        let mut q1 = [0f32; LANES];
-                        let mut gq = [0f32; LANES];
-                        for l in 0..LANES {
-                            let c = rows[v + l] as usize * g + i0;
-                            q0[l] = codebook[c] as f32;
-                            q1[l] = codebook[c + 1] as f32;
-                            gq[l] = gain_lut[gain[erow + j + l] as u8 as usize];
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let out = &mut out[..b * n_out];
+            out.fill(0.0);
+            let scale = (g - 1) as f32 / 2.0;
+            let mut rows = [0u32; J_TILE];
+            let svec = vdupq_n_f32(cb_scale);
+            for i in 0..n_in {
+                let erow = i * n_out;
+                let mut j0 = 0usize;
+                while j0 < n_out {
+                    let tile = (n_out - j0).min(J_TILE);
+                    decode_packed(idx, bits, erow + j0, &mut rows[..tile]);
+                    for bi in 0..b {
+                        let u = x[bi * n_in + i].tanh();
+                        let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                        let i0 = (pos.floor() as usize).min(g - 2);
+                        let f = pos - i0 as f32;
+                        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                        let wf = vdupq_n_f32(f);
+                        let w1 = vdupq_n_f32(1.0 - f);
+                        let mut v = 0usize;
+                        while v + LANES <= tile {
+                            let j = j0 + v;
+                            let mut q0 = [0f32; LANES];
+                            let mut q1 = [0f32; LANES];
+                            let mut gq = [0f32; LANES];
+                            for l in 0..LANES {
+                                let c = rows[v + l] as usize * g + i0;
+                                q0[l] = codebook[c] as f32;
+                                q1[l] = codebook[c + 1] as f32;
+                                gq[l] = gain_lut[gain[erow + j + l] as u8 as usize];
+                            }
+                            let c0 = vmulq_f32(vld1q_f32(q0.as_ptr()), svec);
+                            let c1 = vmulq_f32(vld1q_f32(q1.as_ptr()), svec);
+                            let lerp = vaddq_f32(vmulq_f32(w1, c0), vmulq_f32(wf, c1));
+                            let gv = vld1q_f32(gq.as_ptr());
+                            let acc = vld1q_f32(orow.as_ptr().add(j));
+                            vst1q_f32(orow.as_mut_ptr().add(j),
+                                      vaddq_f32(acc, vmulq_f32(gv, lerp)));
+                            v += LANES;
                         }
-                        let c0 = vmulq_f32(vld1q_f32(q0.as_ptr()), svec);
-                        let c1 = vmulq_f32(vld1q_f32(q1.as_ptr()), svec);
-                        let lerp = vaddq_f32(vmulq_f32(w1, c0), vmulq_f32(wf, c1));
-                        let gv = vld1q_f32(gq.as_ptr());
-                        let acc = vld1q_f32(orow.as_ptr().add(j));
-                        vst1q_f32(orow.as_mut_ptr().add(j),
-                                  vaddq_f32(acc, vmulq_f32(gv, lerp)));
-                        v += LANES;
+                        for t in v..tile {
+                            let j = j0 + t;
+                            let c = rows[t] as usize * g + i0;
+                            let interp = (1.0 - f) * (codebook[c] as f32 * cb_scale)
+                                + f * (codebook[c + 1] as f32 * cb_scale);
+                            let gval = gain_lut[gain[erow + j] as u8 as usize];
+                            orow[j] += gval * interp;
+                        }
                     }
-                    for t in v..tile {
-                        let j = j0 + t;
-                        let c = rows[t] as usize * g + i0;
-                        let interp = (1.0 - f) * (codebook[c] as f32 * cb_scale)
-                            + f * (codebook[c + 1] as f32 * cb_scale);
-                        let gval = gain_lut[gain[erow + j] as u8 as usize];
-                        orow[j] += gval * interp;
-                    }
+                    j0 += tile;
                 }
-                j0 += tile;
             }
-        }
-        for bi in 0..b {
-            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += bias[j];
+            for bi in 0..b {
+                let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o += bias[j];
+                }
             }
         }
     }
@@ -937,38 +973,44 @@ mod neon {
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dense_layer(x: &[f32], b: usize, grids: &[f32], n_in: usize,
                                      n_out: usize, g: usize, out: &mut [f32]) {
-        let out = &mut out[..b * n_out];
-        out.fill(0.0);
-        let scale = (g - 1) as f32 / 2.0;
-        for bi in 0..b {
-            let xrow = &x[bi * n_in..(bi + 1) * n_in];
-            let orow = &mut out[bi * n_out..(bi + 1) * n_out];
-            for (i, &xi) in xrow.iter().enumerate() {
-                let u = xi.tanh();
-                let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
-                let i0 = (pos.floor() as usize).min(g - 2);
-                let f = pos - i0 as f32;
-                let base = i * n_out * g;
-                let wf = vdupq_n_f32(f);
-                let w1 = vdupq_n_f32(1.0 - f);
-                let mut j = 0usize;
-                while j + LANES <= n_out {
-                    let mut a0 = [0f32; LANES];
-                    let mut a1 = [0f32; LANES];
-                    for l in 0..LANES {
-                        let row = base + (j + l) * g + i0;
-                        a0[l] = grids[row];
-                        a1[l] = grids[row + 1];
+        // SAFETY: the fn-level `# Safety` contract above is the caller's
+        // obligation (feature availability, in-bounds packed indices and
+        // shapes); given it, every raw pointer below stays inside the
+        // borrowed slices.
+        unsafe {
+            let out = &mut out[..b * n_out];
+            out.fill(0.0);
+            let scale = (g - 1) as f32 / 2.0;
+            for bi in 0..b {
+                let xrow = &x[bi * n_in..(bi + 1) * n_in];
+                let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+                for (i, &xi) in xrow.iter().enumerate() {
+                    let u = xi.tanh();
+                    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+                    let i0 = (pos.floor() as usize).min(g - 2);
+                    let f = pos - i0 as f32;
+                    let base = i * n_out * g;
+                    let wf = vdupq_n_f32(f);
+                    let w1 = vdupq_n_f32(1.0 - f);
+                    let mut j = 0usize;
+                    while j + LANES <= n_out {
+                        let mut a0 = [0f32; LANES];
+                        let mut a1 = [0f32; LANES];
+                        for l in 0..LANES {
+                            let row = base + (j + l) * g + i0;
+                            a0[l] = grids[row];
+                            a1[l] = grids[row + 1];
+                        }
+                        let lerp = vaddq_f32(vmulq_f32(w1, vld1q_f32(a0.as_ptr())),
+                                             vmulq_f32(wf, vld1q_f32(a1.as_ptr())));
+                        let acc = vld1q_f32(orow.as_ptr().add(j));
+                        vst1q_f32(orow.as_mut_ptr().add(j), vaddq_f32(acc, lerp));
+                        j += LANES;
                     }
-                    let lerp = vaddq_f32(vmulq_f32(w1, vld1q_f32(a0.as_ptr())),
-                                         vmulq_f32(wf, vld1q_f32(a1.as_ptr())));
-                    let acc = vld1q_f32(orow.as_ptr().add(j));
-                    vst1q_f32(orow.as_mut_ptr().add(j), vaddq_f32(acc, lerp));
-                    j += LANES;
-                }
-                for j2 in j..n_out {
-                    let row = base + j2 * g + i0;
-                    orow[j2] += (1.0 - f) * grids[row] + f * grids[row + 1];
+                    for j2 in j..n_out {
+                        let row = base + j2 * g + i0;
+                        orow[j2] += (1.0 - f) * grids[row] + f * grids[row + 1];
+                    }
                 }
             }
         }
@@ -1046,9 +1088,13 @@ mod tests {
             let x = rng.normal_vec(b * n_in, 0.0, 1.2);
             let mut want = vec![0f32; b * n_out];
             let mut got = vec![0f32; b * n_out];
+            // SAFETY: f32 data reinterpreted as raw bytes: the byte length
+            // matches exactly, u8 has alignment 1, and the borrow of `codebook`
+            // outlives the view.
             let cb_bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(codebook.as_ptr() as *const u8, codebook.len() * 4)
             };
+            // SAFETY: as above — exact-length byte view of the f32 gains.
             let gain_bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(gain.as_ptr() as *const u8, gain.len() * 4)
             };
@@ -1087,9 +1133,12 @@ mod tests {
                                         LogInt8Params { log_lo: -4.0, log_step: 0.06 });
             let mut want = vec![0f32; b * n_out];
             let mut got = vec![0f32; b * n_out];
+            // SAFETY: i8 data reinterpreted as raw bytes: same length, u8 has
+            // alignment 1, and the borrow of `codebook` outlives the view.
             let cb_bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(codebook.as_ptr() as *const u8, codebook.len())
             };
+            // SAFETY: as above — exact-length byte view of the i8 gains.
             let gain_bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(gain.as_ptr() as *const u8, gain.len())
             };

@@ -29,6 +29,13 @@ pub fn parse(input: &str) -> Result<Json, String> {
     // flag records whether it was opened as an array-of-tables element
     let mut current: Vec<String> = Vec::new();
     let mut current_is_array = false;
+    // every `[table]` path declared by an explicit header: a second
+    // `[table]` header for the same path would silently merge its keys
+    // into the first — reject instead (parse error, never silent
+    // misreads).  `[[t]]` repetition stays legal (it appends elements),
+    // and a parent created implicitly by `[a.b]` may still be declared
+    // explicitly once later.
+    let mut declared: std::collections::BTreeSet<Vec<String>> = std::collections::BTreeSet::new();
     for (lineno, raw) in input.lines().enumerate() {
         let line = strip_comment(raw).map_err(|e| format!("line {}: {e}", lineno + 1))?;
         let line = line.trim();
@@ -44,6 +51,11 @@ pub fn parse(input: &str) -> Result<Json, String> {
         } else if let Some(inner) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
             current = parse_path(inner).map_err(|e| format!("line {}: {e}", lineno + 1))?;
             current_is_array = false;
+            if !declared.insert(current.clone()) {
+                return Err(format!("line {}: table '[{}]' declared twice",
+                                   lineno + 1,
+                                   current.join(".")));
+            }
             table_at(&mut root, &current, false)
                 .map_err(|e| format!("line {}: {e}", lineno + 1))?;
         } else if let Some((key, value)) = line.split_once('=') {
@@ -352,6 +364,23 @@ paths = ["a.skpt", "b.skpt"]  # trailing comment
         assert!(parse("[[t]]\nx = 1\n[t]\ny = 2").is_err(),
                 "array of tables redeclared as table (silent merge)");
         assert!(parse("a = 1979-05-27").is_err(), "dates unsupported");
+    }
+
+    #[test]
+    fn rejects_redeclared_table_headers() {
+        // a second `[t]` used to silently merge its keys into the first
+        let err = parse("[t]\na = 1\n[s]\nb = 2\n[t]\nc = 3").unwrap_err();
+        assert!(err.contains("declared twice"), "{err}");
+        // nested paths count as distinct declarations of the same table
+        assert!(parse("[a.b]\nx = 1\n[a.b]\ny = 2").is_err());
+        // but [[t]] repetition appends elements and stays legal ...
+        assert!(parse("[[t]]\nx = 1\n[[t]]\nx = 2").is_ok());
+        // ... and a parent implicitly created by [a.b] may still be
+        // declared explicitly once afterwards
+        let doc = parse("[a.b]\nx = 1\n[a]\ny = 2").unwrap();
+        assert_eq!(doc.get("a").unwrap().get("y").unwrap().as_usize(), Some(2));
+        assert_eq!(doc.get("a").unwrap().get("b").unwrap().get("x").unwrap().as_usize(),
+                   Some(1));
     }
 
     #[test]

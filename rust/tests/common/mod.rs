@@ -46,25 +46,33 @@ unsafe impl GlobalAlloc for CountingAlloc {
         if COUNTING.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
-        System.alloc(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc`'s contract; the exact
+        // arguments are forwarded to System.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
-        System.alloc_zeroed(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc_zeroed`'s contract; the
+        // exact arguments are forwarded to System.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller upholds `GlobalAlloc::realloc`'s contract; the exact
+        // arguments are forwarded to System.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: caller upholds `GlobalAlloc::dealloc`'s contract; the exact
+        // arguments are forwarded to System.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

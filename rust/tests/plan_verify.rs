@@ -1,0 +1,214 @@
+//! Mutation suite for the static plan verifier (`share_kan::analysis`):
+//! corrupt a real LUTHAM plan one structural property at a time — overlap
+//! two regions, misalign a base, shrink/grow a packed-index width, alias
+//! the activation scratch into a codebook, skew the family accounting —
+//! and assert the verifier reports exactly the right finding kind, and
+//! that building an arena from a corrupted plan fails with a **typed**
+//! error, never a panic.
+//!
+//! Also pins the deployment-level reconciliation: the static byte
+//! accounting `DeploymentSpec::expected_resident_bytes` computes before
+//! any executor starts must match the live `Deployment::report()` total
+//! bit for bit.
+
+use share_kan::analysis::{verify_family_plan, verify_head_plan, FindingKind};
+use share_kan::coordinator::{BackendKind, DeploymentSpec, HeadWeights, Placement};
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::spec::KanSpec;
+use share_kan::memplan::{plan_family, plan_head, Arena, Plan, PlannedBuffer};
+use share_kan::vq::universal::compress_family;
+use share_kan::vq::Precision;
+
+const SPEC: KanSpec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
+const K: usize = 8;
+const MAX_BATCH: usize = 8;
+
+/// One VQ-compressed head with the test shape (universal-codebook
+/// pipeline, so the same weights also work as a family member).
+fn vq_heads(n: usize, seed: u64) -> Vec<HeadWeights> {
+    let cks: Vec<Checkpoint> =
+        (0..n).map(|i| synthetic_dense(&SPEC, seed + i as u64)).collect();
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    compress_family(&refs, &SPEC, K, Precision::Int8, seed)
+        .unwrap()
+        .iter()
+        .map(|c| HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        .collect()
+}
+
+/// The head's real arena plan (the layout `ArenaBackend` materializes).
+fn head_plan(weights: &HeadWeights) -> Plan {
+    plan_head(weights, MAX_BATCH).unwrap()
+}
+
+/// Rebuild a plan with one buffer's offset/size rewritten (the name→offset
+/// index is rebuilt, so mutations test the layout checks, not the index).
+fn mutate(plan: &Plan, name: &str, f: impl Fn(&mut PlannedBuffer)) -> Plan {
+    let mut buffers = plan.buffers.clone();
+    let b = buffers.iter_mut().find(|b| b.name == name).unwrap();
+    f(b);
+    Plan::new(buffers, plan.total_bytes)
+}
+
+#[test]
+fn pristine_plans_prove_clean() {
+    let heads = vq_heads(1, 40);
+    let plan = head_plan(&heads[0]);
+    let r = verify_head_plan("head", &plan, &heads[0], MAX_BATCH);
+    assert!(r.is_ok(), "{:?}", r.findings());
+
+    let fam = plan_family(&SPEC, &share_kan::kan::spec::VqSpec { codebook_size: K },
+                          Precision::Int8, MAX_BATCH)
+        .unwrap();
+    let r = verify_family_plan("family", &fam);
+    assert!(r.is_ok(), "{:?}", r.findings());
+}
+
+#[test]
+fn overlapping_regions_are_flagged_as_overlap() {
+    let heads = vq_heads(1, 41);
+    let plan = head_plan(&heads[0]);
+    // drop layer1/codebook onto layer0/codebook: two weight regions collide
+    let base = plan.lookup("layer0/codebook").unwrap().offset;
+    let bad = mutate(&plan, "layer1/codebook", |b| b.offset = base);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::Overlap), "{:?}", r.findings());
+}
+
+#[test]
+fn misaligned_base_is_flagged_as_misalignment() {
+    let heads = vq_heads(1, 42);
+    let plan = head_plan(&heads[0]);
+    let bad = mutate(&plan, "layer0/gain", |b| b.offset += 8);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::Misalignment), "{:?}", r.findings());
+}
+
+#[test]
+fn shrunken_index_region_is_flagged_as_insufficient_width() {
+    let heads = vq_heads(1, 43);
+    let plan = head_plan(&heads[0]);
+    // one byte short of ceil(E * ceil(log2 K) / 8): indices would truncate
+    let bad = mutate(&plan, "layer0/idx", |b| b.size -= 1);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::IndexWidthInsufficient), "{:?}", r.findings());
+    assert!(!r.has(FindingKind::IndexWidthExcessive));
+
+    // and the dual: a wider-than-ceil(log2 K) region violates the storage
+    // bound the compression ratio is quoted against
+    let bad = mutate(&plan, "layer0/idx", |b| b.size += 64);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::IndexWidthExcessive), "{:?}", r.findings());
+    assert!(!r.has(FindingKind::IndexWidthInsufficient));
+}
+
+#[test]
+fn scratch_aliasing_classifies_separately_from_overlap() {
+    let heads = vq_heads(1, 44);
+    let plan = head_plan(&heads[0]);
+    // alias the activation ping buffer into the layer-0 codebook
+    let base = plan.lookup("layer0/codebook").unwrap().offset;
+    let bad = mutate(&plan, "act/ping", |b| b.offset = base);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::ScratchAliasing), "{:?}", r.findings());
+}
+
+#[test]
+fn dropped_and_foreign_buffers_are_flagged() {
+    let heads = vq_heads(1, 45);
+    let plan = head_plan(&heads[0]);
+    let mut buffers = plan.buffers.clone();
+    buffers.retain(|b| b.name != "layer1/bias_sum");
+    let bad = Plan::new(buffers, plan.total_bytes);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::MissingBuffer), "{:?}", r.findings());
+
+    let mut buffers = plan.buffers.clone();
+    buffers.push(PlannedBuffer {
+        name: "layer9/ghost".to_string(),
+        offset: plan.total_bytes,
+        size: 64,
+    });
+    let bad = Plan::new(buffers, plan.total_bytes + 256);
+    let r = verify_head_plan("head", &bad, &heads[0], MAX_BATCH);
+    assert!(r.has(FindingKind::UnexpectedBuffer), "{:?}", r.findings());
+}
+
+#[test]
+fn family_accounting_skew_is_flagged_as_mismatch() {
+    let mut fam = plan_family(&SPEC, &share_kan::kan::spec::VqSpec { codebook_size: K },
+                              Precision::Int8, MAX_BATCH)
+        .unwrap();
+    // grow the marginal gain table: the recomputed per-head payload, the
+    // inventory, and the shared ∪ head partition all stop reconciling
+    let mut buffers = fam.head.buffers.clone();
+    let b = buffers.iter_mut().find(|b| b.name == "layer0/gain").unwrap();
+    b.size += 64;
+    fam.head = Plan::new(buffers, fam.head.total_bytes + 256);
+    let r = verify_family_plan("family", &fam);
+    assert!(r.has(FindingKind::AccountingMismatch), "{:?}", r.findings());
+}
+
+#[test]
+fn corrupted_plan_fails_arena_build_with_typed_error() {
+    let heads = vq_heads(1, 46);
+    let plan = head_plan(&heads[0]);
+    let base = plan.lookup("layer0/codebook").unwrap().offset;
+    let bad = mutate(&plan, "layer0/idx", |b| b.offset = base);
+    // no panic: the corrupted layout is refused with the findings attached
+    let err = Arena::try_allocate(bad).unwrap_err();
+    assert!(!err.findings().is_empty());
+    assert!(err.findings().iter().any(|f| f.kind == FindingKind::Overlap),
+            "{err}");
+    // and the typed error threads through anyhow (the backend build path)
+    let as_anyhow: anyhow::Result<Arena> = Arena::try_allocate(
+        mutate(&plan, "layer0/idx", |b| b.offset = base))
+        .map_err(anyhow::Error::from);
+    let msg = format!("{:#}", as_anyhow.unwrap_err());
+    assert!(msg.contains("plan verification failed"), "{msg}");
+
+    // the pristine plan still allocates
+    let arena = Arena::try_allocate(plan).unwrap();
+    assert!(arena.plan().total_bytes > 0);
+}
+
+#[test]
+fn deployment_verify_passes_and_accounting_reconciles_with_live_report() {
+    let heads = vq_heads(3, 47);
+    let named: Vec<(String, HeadWeights)> = heads
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| (format!("h{i}"), h))
+        .collect();
+    let spec = DeploymentSpec::new(BackendKind::FamilyArena)
+        .with_shards(2)
+        .with_placement(Placement::FamilyCoLocate { heads_per_shard: 2 })
+        .with_max_batch(MAX_BATCH)
+        .family("fam", named);
+
+    // static pass: every layout the deployment would materialize is proven
+    let report = spec.verify().unwrap();
+    assert!(report.is_ok(), "{:?}", report.findings());
+
+    // static accounting mirrors the live report bit for bit
+    let expected = spec.expected_resident_bytes().unwrap();
+    let dep = spec.deploy().unwrap();
+    assert_eq!(dep.report().resident_bytes, expected);
+    dep.shutdown();
+}
+
+#[test]
+fn deployment_reconciliation_holds_for_private_arena_heads_too() {
+    let heads = vq_heads(2, 48);
+    let spec = DeploymentSpec::new(BackendKind::Arena)
+        .with_shards(2)
+        .with_max_batch(MAX_BATCH)
+        .head("a", heads[0].clone())
+        .head("b", heads[1].clone());
+    let report = spec.verify().unwrap();
+    assert!(report.is_ok(), "{:?}", report.findings());
+    let expected = spec.expected_resident_bytes().unwrap();
+    let dep = spec.deploy().unwrap();
+    assert_eq!(dep.report().resident_bytes, expected);
+    dep.shutdown();
+}
