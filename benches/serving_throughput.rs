@@ -7,7 +7,9 @@
 //! head cost) and a memsim residency trace of the shared region — plus a
 //! **placement** workload comparing hash spread against family
 //! co-location (total resident bytes + throughput, single- and
-//! multi-family pools through the `serving::DeploymentSpec` API).
+//! multi-family pools through the `serving::DeploymentSpec` API) — plus a
+//! per-stage latency breakdown (queue wait / batch wait / exec p50+p99)
+//! and a traced-vs-untraced row bounding span-tracing overhead at 2%.
 //!
 //! Results are printed AND written machine-readable to `BENCH_serving.json`
 //! so the perf trajectory is tracked across PRs.
@@ -26,6 +28,7 @@ use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
 use share_kan::kan::spec::{KanSpec, VqSpec};
 use share_kan::memplan::plan_family;
 use share_kan::memsim::{trace_family_vq_heads, Cache, CacheConfig};
+use share_kan::obs::TraceConfig;
 use share_kan::runtime::{BackendConfig, BackendSpec};
 use share_kan::util::bench::write_results;
 use share_kan::util::json::Json;
@@ -138,6 +141,7 @@ fn main() {
                     backend: backend.clone(),
                     policy: *policy,
                     queue_capacity: 4096,
+                    ..Default::default()
                 })
                 .unwrap();
                 let c = handle.client.clone();
@@ -195,6 +199,7 @@ fn main() {
         backend: BackendConfig::Arena(BackendSpec::default()),
         policy,
         queue_capacity: 4096,
+        ..Default::default()
     })
     .unwrap();
     for (name, head) in head_names.iter().zip(&multi_heads) {
@@ -211,6 +216,7 @@ fn main() {
         queue_capacity: 4096,
         num_shards: shards,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     for (name, head) in head_names.iter().zip(&multi_heads) {
@@ -224,6 +230,7 @@ fn main() {
         pool_req_s / single_req_s.max(1e-9),
         agg.latency.percentile(0.95),
     );
+    let pm = pool.client.metrics_breakdown();
     pool.shutdown();
 
     results.push(Json::obj(vec![
@@ -239,6 +246,76 @@ fn main() {
         ("heads", Json::num(n_heads as f64)),
         ("threads", Json::num(threads as f64)),
         ("speedup_vs_single", Json::num(pool_req_s / single_req_s.max(1e-9))),
+    ]));
+
+    // per-stage breakdown from the coherent pool snapshot: where a request
+    // spends its life (admission queue vs batcher vs backend execution)
+    println!("pool per-stage latency (merged across {shards} shards):");
+    for (stage, h) in [
+        ("queue_wait", &pm.merged.queue_wait),
+        ("batch_wait", &pm.merged.batch_wait),
+        ("exec", &pm.merged.exec_latency),
+    ] {
+        println!(
+            "  {stage:<11} p50 {:>8.0}us  p99 {:>8.0}us  ({} samples)",
+            h.percentile_us(0.5),
+            h.percentile_us(0.99),
+            h.count
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::str(format!("multi_head/pool/stage/{stage}"))),
+            ("stage", Json::str(stage)),
+            ("p50_us", Json::num(h.percentile_us(0.5))),
+            ("p99_us", Json::num(h.percentile_us(0.99))),
+            ("samples", Json::num(h.count as f64)),
+        ]));
+    }
+
+    // ---- tracing overhead: the identical pooled load with span tracing
+    // ---- off vs sampled (1-in-8) — sampling must cost < 2% throughput ----
+    let trials = if smoke { 1 } else { 3 };
+    let mut trace_req_s = [0f64; 2];
+    for (ti, sample_every) in [0u64, 8].into_iter().enumerate() {
+        // best-of-N to keep scheduler noise out of the comparison
+        for _ in 0..trials {
+            let pool = ExecutorPool::start(PoolConfig {
+                backend: BackendConfig::Arena(BackendSpec::default()),
+                policy,
+                queue_capacity: 4096,
+                num_shards: shards,
+                placement: Placement::Hash,
+                trace: TraceConfig { sample_every, ..Default::default() },
+            })
+            .unwrap();
+            for (name, head) in head_names.iter().zip(&multi_heads) {
+                pool.client.register_head(name, None, head.clone()).unwrap();
+            }
+            let req_s = drive(&Client::Pool(pool.client.clone()), &head_names,
+                              spec.d_in, pool_requests, threads);
+            trace_req_s[ti] = trace_req_s[ti].max(req_s);
+            pool.shutdown();
+        }
+    }
+    let overhead = 1.0 - trace_req_s[1] / trace_req_s[0].max(1e-9);
+    println!(
+        "tracing overhead: untraced {:>8.0} req/s vs sampled(1/8) {:>8.0} req/s -> {:+.2}%",
+        trace_req_s[0],
+        trace_req_s[1],
+        100.0 * overhead
+    );
+    if !smoke {
+        assert!(
+            overhead < 0.02,
+            "span-tracing overhead {:.2}% exceeds the 2% budget",
+            100.0 * overhead
+        );
+    }
+    results.push(Json::obj(vec![
+        ("name", Json::str("multi_head/pool/tracing_overhead")),
+        ("untraced_req_per_s", Json::num(trace_req_s[0])),
+        ("traced_req_per_s", Json::num(trace_req_s[1])),
+        ("sample_every", Json::num(8.0)),
+        ("overhead_fraction", Json::num(overhead)),
     ]));
 
     // ---- family workload: per-head private arenas vs the shared-codebook
@@ -273,6 +350,7 @@ fn main() {
             backend,
             policy,
             queue_capacity: 4096,
+            ..Default::default()
         })
         .unwrap();
         for (name, head) in fam_names.iter().zip(&fam_weights) {

@@ -7,7 +7,6 @@
 //! Run: cargo run --release --example deployment
 
 use std::path::Path;
-use std::sync::atomic::Ordering;
 
 use share_kan::coordinator::DeploymentSpec;
 use share_kan::data::rng::Pcg32;
@@ -47,10 +46,10 @@ fn main() -> anyhow::Result<()> {
     let pm = client.metrics_breakdown();
     for (s, m) in pm.per_shard.iter().enumerate() {
         println!("shard {s}: {} responses, p95 {:?}",
-                 m.counters.responses.load(Ordering::Relaxed),
+                 m.counters.responses,
                  m.latency.percentile(0.95));
     }
-    assert_eq!(pm.merged.counters.responses.load(Ordering::Relaxed), 240);
+    assert_eq!(pm.merged.counters.responses, 240);
     dep.shutdown();
     println!("deployment demo OK");
     Ok(())

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         backend: BackendConfig::Native(BackendSpec::default()),
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         queue_capacity: 256,
+        ..Default::default()
     })?;
     let client = handle.client.clone();
     client.add_head("demo", HeadWeights::from_checkpoint(&vq_ck)?)?;

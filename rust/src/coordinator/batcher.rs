@@ -114,7 +114,15 @@ mod tests {
 
     fn req(id: u64, enqueued: Instant) -> InferRequest {
         let (tx, _rx) = mpsc::channel();
-        InferRequest { id, head: "h".into(), features: vec![0.0], enqueued, resp: tx }
+        InferRequest {
+            id,
+            head: "h".into(),
+            features: vec![0.0],
+            enqueued,
+            routed: enqueued,
+            traced: false,
+            resp: tx,
+        }
     }
 
     const BUCKETS: &[usize] = &[1, 8, 32, 128];

@@ -1,7 +1,14 @@
 //! Serving metrics: latency histogram (log-spaced buckets) + counters.
+//!
+//! The live types here are lock-free atomics updated on the hot path;
+//! coherent plain-value captures of them are the snapshot types in
+//! [`crate::obs::registry`] ([`HistogramSnapshot`] / [`CountersSnapshot`]),
+//! produced by [`LatencyHistogram::snapshot`] / [`Counters::snapshot`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::obs::{CountersSnapshot, HistogramSnapshot};
 
 /// Lock-free latency histogram with log2 buckets from 1 µs to ~17 min.
 #[derive(Debug)]
@@ -61,24 +68,38 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
-    /// Approximate percentile from bucket boundaries (upper bound), clamped
-    /// to the recorded maximum so e.g. p50 of a single 10 µs sample reports
-    /// 10 µs rather than the 16 µs bucket boundary.
+    /// Percentile with intra-bucket linear interpolation, clamped to the
+    /// recorded maximum (so e.g. p50 of a single 10 µs sample reports
+    /// 10 µs, and percentiles of dense distributions no longer snap to
+    /// power-of-two bucket boundaries).  Delegates to
+    /// [`HistogramSnapshot::percentile_us`] over a coherent capture.
     pub fn percentile(&self, p: f64) -> Duration {
-        let total = self.count();
-        if total == 0 {
-            return Duration::ZERO;
-        }
-        let target = (p * total as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                let upper = 1u64 << (i + 1);
-                return Duration::from_micros(upper.min(self.max_us.load(Ordering::Relaxed)));
+        self.snapshot().percentile(p)
+    }
+
+    /// Coherent plain-value capture.  A short stable-read loop retries
+    /// while racing writers move the totals between passes; if writers
+    /// never quiesce, the bucket sum (incremented first in
+    /// [`LatencyHistogram::record`]) is taken as the authoritative count,
+    /// so the returned snapshot is always internally consistent
+    /// (`count == Σ buckets`).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        for _ in 0..4 {
+            let c0 = self.count.load(Ordering::Acquire);
+            let buckets: Vec<u64> =
+                self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+            let sum_us = self.sum_us.load(Ordering::Relaxed);
+            let max_us = self.max_us.load(Ordering::Relaxed);
+            let bucket_sum: u64 = buckets.iter().sum();
+            if bucket_sum == c0 && self.count.load(Ordering::Acquire) == c0 {
+                return HistogramSnapshot { buckets, count: c0, sum_us, max_us };
             }
         }
-        self.max()
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let sum_us = self.sum_us.load(Ordering::Relaxed);
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let count = buckets.iter().sum();
+        HistogramSnapshot { buckets, count, sum_us, max_us }
     }
 
     /// Fold another histogram's samples into this one (shard aggregation
@@ -123,6 +144,11 @@ pub struct Counters {
     pub padded_slots: AtomicU64,
     /// Requests rejected by admission-queue backpressure.
     pub rejected: AtomicU64,
+    /// Batches executed by the scalar kernel tier (the native reference
+    /// backend counts here — it *is* the scalar tier).
+    pub scalar_batches: AtomicU64,
+    /// Batches executed by a SIMD kernel tier (AVX2+FMA / NEON).
+    pub simd_batches: AtomicU64,
 }
 
 impl Counters {
@@ -135,8 +161,39 @@ impl Counters {
             (&self.batched_items, &other.batched_items),
             (&self.padded_slots, &other.padded_slots),
             (&self.rejected, &other.rejected),
+            (&self.scalar_batches, &other.scalar_batches),
+            (&self.simd_batches, &other.simd_batches),
         ] {
             mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// Coherent plain-value capture.
+    ///
+    /// Reads are ordered against request causality: `responses`/`rejected`
+    /// are read BEFORE `requests`, so any response we count had its
+    /// request increment happen first, and the captured set satisfies
+    /// `requests ≥ responses + rejected` (the derived
+    /// [`CountersSnapshot::inflight`] can never underflow).  A final clamp
+    /// enforces the invariant even under relaxed-memory reorderings.
+    pub fn snapshot(&self) -> CountersSnapshot {
+        let responses = self.responses.load(Ordering::Acquire);
+        let rejected = self.rejected.load(Ordering::Acquire);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched_items = self.batched_items.load(Ordering::Relaxed);
+        let padded_slots = self.padded_slots.load(Ordering::Relaxed);
+        let scalar_batches = self.scalar_batches.load(Ordering::Relaxed);
+        let simd_batches = self.simd_batches.load(Ordering::Relaxed);
+        let requests = self.requests.load(Ordering::Acquire).max(responses + rejected);
+        CountersSnapshot {
+            requests,
+            responses,
+            batches,
+            batched_items,
+            padded_slots,
+            rejected,
+            scalar_batches,
+            simd_batches,
         }
     }
 
@@ -246,6 +303,111 @@ mod tests {
         c.merge_from(&d);
         assert_eq!(c.requests.load(Ordering::Relaxed), 7);
         assert_eq!(c.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn percentile_interpolates_against_exact_reference() {
+        // satellite: log2 buckets used to snap p50/p99 to power-of-two
+        // boundaries; with intra-bucket interpolation the reported value
+        // must track the exact order-statistic within 1%
+        let h = LatencyHistogram::new();
+        let samples: Vec<u64> = (1024..2048).collect(); // fills one bucket
+        for &us in &samples {
+            h.record(Duration::from_micros(us));
+        }
+        for p in [0.10, 0.50, 0.90, 0.99] {
+            let exact_rank = ((p * samples.len() as f64).ceil() as usize).max(1) - 1;
+            let exact = samples[exact_rank] as f64;
+            let got = h.percentile(p).as_micros() as f64;
+            assert!(
+                (got - exact).abs() / exact < 0.01,
+                "p{p}: interpolated {got} vs exact {exact}"
+            );
+        }
+        // the old behaviour would have reported the 2048 µs boundary for
+        // every percentile above; pin that p50 is now strictly below p99
+        assert!(h.percentile(0.5) < h.percentile(0.99));
+    }
+
+    #[test]
+    fn snapshot_is_internally_consistent() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 50, 100, 500] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.count, s.buckets.iter().sum::<u64>());
+        assert_eq!(s.sum_us, 680);
+        assert_eq!(s.max_us, 500);
+        assert_eq!(h.percentile(0.5), s.percentile(0.5));
+    }
+
+    #[test]
+    fn counters_snapshot_never_underflows_inflight_under_load() {
+        // satellite regression: reading each atomic independently
+        // mid-traffic could observe responses > requests, making derived
+        // views (inflight, sums vs merged) disagree.  Hammer the counters
+        // from writer threads while snapshotting and assert every capture
+        // is internally consistent.
+        let c = std::sync::Arc::new(Counters::default());
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for _ in 0..3 {
+            let c = c.clone();
+            let stop = stop.clone();
+            writers.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    c.requests.fetch_add(1, Ordering::Relaxed);
+                    c.responses.fetch_add(1, Ordering::Release);
+                }
+            }));
+        }
+        for _ in 0..2000 {
+            let s = c.snapshot();
+            assert!(
+                s.requests >= s.responses + s.rejected,
+                "incoherent snapshot: requests {} < responses {} + rejected {}",
+                s.requests,
+                s.responses,
+                s.rejected
+            );
+            let _ = s.inflight(); // must not panic / wrap
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn histogram_snapshot_consistent_under_concurrent_records() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for t in 0..3u64 {
+            let h = h.clone();
+            let stop = stop.clone();
+            writers.push(std::thread::spawn(move || {
+                let mut us = t + 1;
+                while !stop.load(Ordering::Relaxed) {
+                    h.record(Duration::from_micros(us));
+                    us = us % 10_000 + 1;
+                }
+            }));
+        }
+        for _ in 0..500 {
+            let s = h.snapshot();
+            assert_eq!(
+                s.count,
+                s.buckets.iter().sum::<u64>(),
+                "snapshot count must equal its own bucket sum"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
     }
 
     #[test]

@@ -22,6 +22,6 @@ pub use request::{InferRequest, InferResponse};
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
 pub use serving::{
     BackendKind, Deployment, DeploymentReport, DeploymentSpec, FamilyCoLocate, FamilyResidency,
-    HashPlacement, LeastLoaded, Placement, PlacementPolicy, ShardLoad,
+    HashPlacement, LeastLoaded, Placement, PlacementPolicy, ShardLoad, StatsHandle,
 };
 pub use tcp::{ClientError, TcpClient, TcpServer};

@@ -35,7 +35,8 @@ use super::heads::HeadWeights;
 use super::request::InferResponse;
 use super::server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
 use super::serving::placement::{hash_shard, Placement, PlacementPolicy, ShardLoad};
-use crate::runtime::BackendConfig;
+use crate::obs::{MetricsSnapshot, StatsSnapshot, TraceConfig, TraceSummary, Tracer};
+use crate::runtime::{BackendConfig, BackendSpec};
 
 /// Configuration for an [`ExecutorPool`] (one entry per knob, applied to
 /// every shard identically).
@@ -51,6 +52,9 @@ pub struct PoolConfig {
     /// shard-placement policy new head registrations are decided by
     /// (default: [`Placement::Hash`], the historical FNV-1a routing)
     pub placement: Placement,
+    /// span-tracing knobs; ONE tracer ring is shared by every shard so a
+    /// snapshot yields a globally ordered event stream (default: off)
+    pub trace: TraceConfig,
 }
 
 impl Default for PoolConfig {
@@ -61,7 +65,26 @@ impl Default for PoolConfig {
             queue_capacity: 1024,
             num_shards: 4,
             placement: Placement::Hash,
+            trace: TraceConfig::default(),
         }
+    }
+}
+
+/// Stable labels for the stats surface: backend kind plus the kernel tier
+/// the backend spec would resolve to on this host.
+fn backend_labels(cfg: &BackendConfig) -> (String, String) {
+    fn kernel_label(spec: &BackendSpec) -> String {
+        match spec.kernel.resolve() {
+            Ok(k) => k.name().to_string(),
+            Err(_) => "unresolved".to_string(),
+        }
+    }
+    match cfg {
+        BackendConfig::Native(_) => ("native".into(), "scalar".into()),
+        BackendConfig::Arena(spec) => ("arena".into(), kernel_label(spec)),
+        BackendConfig::FamilyArena(spec) => ("family".into(), kernel_label(spec)),
+        #[cfg(feature = "pjrt")]
+        BackendConfig::Pjrt { .. } => ("pjrt".into(), "pjrt".into()),
     }
 }
 
@@ -87,14 +110,17 @@ pub struct HeadPlacement {
     pub family: Option<String>,
 }
 
-/// Merged + per-shard metrics snapshot (see
-/// [`ExecutorPool::metrics_breakdown`]).
+/// Merged + per-shard metrics capture (see
+/// [`ExecutorPool::metrics_breakdown`]).  Both views are **coherent
+/// plain-value snapshots**: each shard is captured once, and `merged` is
+/// the exact arithmetic fold of `per_shard` — the per-shard sums can never
+/// disagree with the merged view, even mid-traffic.
 pub struct PoolMetrics {
-    /// All shards folded together (histograms merged sample-exactly,
-    /// counters summed).
-    pub merged: Metrics,
-    /// One snapshot per shard, indexed by shard id.
-    pub per_shard: Vec<Metrics>,
+    /// All shards folded together (bucket-exact histogram sums, counter
+    /// sums).
+    pub merged: MetricsSnapshot,
+    /// One capture per shard, indexed by shard id.
+    pub per_shard: Vec<MetricsSnapshot>,
 }
 
 /// Client handle over the shard set; cloneable across threads.  All clones
@@ -105,6 +131,9 @@ pub struct ExecutorPool {
     placement: Arc<dyn PlacementPolicy>,
     routing: Arc<RwLock<HashMap<String, RouteEntry>>>,
     round_robin: Arc<AtomicUsize>,
+    tracer: Arc<Tracer>,
+    backend_label: String,
+    kernel_label: String,
 }
 
 /// Owner handle that joins every shard executor on drop.
@@ -128,13 +157,17 @@ impl ExecutorPool {
     pub fn start_with_policy(cfg: PoolConfig, placement: Arc<dyn PlacementPolicy>)
                              -> Result<PoolHandle> {
         anyhow::ensure!(cfg.num_shards >= 1, "pool needs at least one shard");
+        let (backend_label, kernel_label) = backend_labels(&cfg.backend);
+        let tracer = Tracer::from_config(cfg.trace);
         let mut handles = Vec::with_capacity(cfg.num_shards);
         let mut shards = Vec::with_capacity(cfg.num_shards);
-        for _ in 0..cfg.num_shards {
+        for shard in 0..cfg.num_shards {
             let handle = Coordinator::start(CoordinatorConfig {
                 backend: cfg.backend.clone(),
                 policy: cfg.policy,
                 queue_capacity: cfg.queue_capacity,
+                tracer: tracer.clone(),
+                shard: shard as u32,
             })?;
             shards.push(handle.client.clone());
             handles.push(handle);
@@ -144,6 +177,9 @@ impl ExecutorPool {
             placement,
             routing: Arc::new(RwLock::new(HashMap::new())),
             round_robin: Arc::new(AtomicUsize::new(0)),
+            tracer,
+            backend_label,
+            kernel_label,
         };
         Ok(PoolHandle { client, handles })
     }
@@ -359,23 +395,49 @@ impl ExecutorPool {
 
     /// Merged metrics **plus** the per-shard breakdown the merge folds —
     /// what load-aware placement decides over, and what the
-    /// `serve --deployment` accounting echo prints.  The per-shard sums
-    /// equal the merged view exactly (unit-tested below).
+    /// `serve --deployment` accounting echo prints.
+    ///
+    /// Each shard is captured ONCE into a coherent [`MetricsSnapshot`] and
+    /// the merged view is the exact arithmetic fold of those captures, so
+    /// per-shard sums always equal the merged totals — the old
+    /// implementation re-read the live atomics per view and could disagree
+    /// with itself mid-traffic (regression-tested below and in
+    /// `rust/tests/pool_integration.rs`).
     pub fn metrics_breakdown(&self) -> PoolMetrics {
-        let per_shard: Vec<Metrics> = self
-            .shards
-            .iter()
-            .map(|shard| {
-                let snap = Metrics::new();
-                snap.merge_from(shard.metrics());
-                snap
-            })
-            .collect();
-        let merged = Metrics::new();
+        let per_shard: Vec<MetricsSnapshot> =
+            self.shards.iter().map(|shard| shard.metrics().snapshot()).collect();
+        let mut merged = MetricsSnapshot::default();
         for m in &per_shard {
-            merged.merge_from(m);
+            merged.add(m);
         }
         PoolMetrics { merged, per_shard }
+    }
+
+    /// The span tracer shared by every shard of this pool.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Full stats-registry capture for the exposition surface (TCP `STATS`
+    /// verb, `share-kan stats`).  Deployment-level gauges are zero here;
+    /// `serving::Deployment` layers them on via its own stats handle.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        let pm = self.metrics_breakdown();
+        StatsSnapshot {
+            backend: self.backend_label.clone(),
+            policy: self.placement.name().to_string(),
+            kernel: self.kernel_label.clone(),
+            num_shards: self.shards.len(),
+            merged: pm.merged,
+            per_shard: pm.per_shard,
+            gauges: Default::default(),
+            trace: TraceSummary {
+                sample_every: self.tracer.sample_every(),
+                capacity: self.tracer.capacity(),
+                events: self.tracer.events_written(),
+                spans: self.tracer.spans(),
+            },
+        }
     }
 
     /// Snapshot of the routing table, sorted by head name.
@@ -515,6 +577,7 @@ mod tests {
             queue_capacity: 64,
             num_shards,
             placement,
+            ..Default::default()
         })
         .unwrap();
         (pool, heads, spec.d_in)
@@ -597,19 +660,41 @@ mod tests {
         }
         let pm = pool.client.metrics_breakdown();
         assert_eq!(pm.per_shard.len(), 2);
-        use std::sync::atomic::Ordering;
-        let shard_sum: u64 = pm
-            .per_shard
-            .iter()
-            .map(|m| m.counters.responses.load(Ordering::Relaxed))
-            .sum();
-        assert_eq!(shard_sum, pm.merged.counters.responses.load(Ordering::Relaxed));
+        let shard_sum: u64 = pm.per_shard.iter().map(|m| m.counters.responses).sum();
+        assert_eq!(shard_sum, pm.merged.counters.responses);
         assert_eq!(shard_sum, 12);
-        let latency_sum: u64 = pm.per_shard.iter().map(|m| m.latency.count()).sum();
-        assert_eq!(latency_sum, pm.merged.latency.count());
+        let latency_sum: u64 = pm.per_shard.iter().map(|m| m.latency.count).sum();
+        assert_eq!(latency_sum, pm.merged.latency.count);
+        // every batch is attributed to exactly one kernel-dispatch tier
+        assert_eq!(
+            pm.merged.counters.scalar_batches + pm.merged.counters.simd_batches,
+            pm.merged.counters.batches
+        );
         // and the merged breakdown equals the legacy aggregate
+        use std::sync::atomic::Ordering;
         let agg = pool.client.aggregated_metrics();
         assert_eq!(agg.counters.responses.load(Ordering::Relaxed), shard_sum);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stats_snapshot_carries_labels_and_trace_state() {
+        let (pool, heads, d_in) = family_pool(2, Placement::Hash);
+        pool.client.tracer().set_sample_every(1);
+        pool.client.register_family("demo", &heads).unwrap();
+        for (name, _) in &heads {
+            pool.client.infer(name, vec![0.3; d_in]).unwrap();
+        }
+        let snap = pool.client.stats_snapshot();
+        assert_eq!(snap.backend, "family");
+        assert_eq!(snap.policy, "hash");
+        assert!(!snap.kernel.is_empty());
+        assert_eq!(snap.num_shards, 2);
+        assert_eq!(snap.trace.sample_every, 1);
+        assert!(snap.trace.events > 0, "tracing on but no events recorded");
+        // every traced request's span must be recoverable end-to-end
+        let complete = snap.trace.spans.iter().filter(|s| s.is_complete()).count();
+        assert!(complete >= 1, "no complete span among {:?}", snap.trace.spans);
         pool.shutdown();
     }
 }

@@ -15,6 +15,13 @@ pub struct InferRequest {
     pub features: Vec<f32>,
     /// Admission timestamp (end-to-end latency measurement).
     pub enqueued: Instant,
+    /// When the executor routed this request into its head queue
+    /// (initialized to `enqueued`; overwritten on route).  The per-stage
+    /// queue-wait / batch-wait histograms are derived from it.
+    pub routed: Instant,
+    /// Whether the span tracer sampled this request (decided once at
+    /// submit so every stage stamps or skips consistently).
+    pub traced: bool,
     /// Per-request response channel.
     pub resp: mpsc::Sender<InferResponse>,
 }

@@ -25,6 +25,7 @@ use super::batcher::{Batch, BatchPolicy, PendingQueue};
 use super::heads::HeadWeights;
 use super::metrics::{Counters, LatencyHistogram};
 use super::request::{InferRequest, InferResponse};
+use crate::obs::{MetricsSnapshot, Stage, Tracer};
 use crate::runtime::{Backend, BackendConfig};
 
 /// Configuration for one [`Coordinator`] executor.
@@ -35,6 +36,13 @@ pub struct CoordinatorConfig {
     pub policy: BatchPolicy,
     /// bounded admission queue depth; try_submit rejects beyond this
     pub queue_capacity: usize,
+    /// span tracer this executor stamps sampled requests into (shared
+    /// across shards when pooled; the default is an always-off tracer)
+    pub tracer: Arc<Tracer>,
+    /// shard id stamped on this executor's trace events; also partitions
+    /// the request-id space (ids start at `shard << 48`) so ids — and the
+    /// spans assembled from them — are unique across a pool's shards
+    pub shard: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -43,6 +51,8 @@ impl Default for CoordinatorConfig {
             backend: BackendConfig::default(),
             policy: BatchPolicy::default(),
             queue_capacity: 1024,
+            tracer: Tracer::disabled(),
+            shard: 0,
         }
     }
 }
@@ -53,17 +63,36 @@ pub struct Metrics {
     pub latency: LatencyHistogram,
     /// Backend execution latency per batch.
     pub exec_latency: LatencyHistogram,
-    /// Throughput / batching / backpressure counters.
+    /// Admission-queue wait per request (enqueue → routed by the executor).
+    pub queue_wait: LatencyHistogram,
+    /// Batcher wait per request (routed → batch close).
+    pub batch_wait: LatencyHistogram,
+    /// Throughput / batching / backpressure / kernel-dispatch counters.
     pub counters: Counters,
+    /// Span tracer shared by every stage of this executor (always-off by
+    /// default; not folded by [`Metrics::merge_from`]).
+    pub tracer: Arc<Tracer>,
+    /// Shard id stamped on trace events (0 for a single coordinator).
+    pub shard: u32,
 }
 
 impl Metrics {
-    /// Empty metrics set (all histograms and counters at zero).
+    /// Empty metrics set (all histograms and counters at zero, tracing
+    /// off, shard 0).
     pub fn new() -> Metrics {
+        Metrics::for_shard(Tracer::disabled(), 0)
+    }
+
+    /// Empty metrics set stamping trace events as `shard` into `tracer`.
+    pub fn for_shard(tracer: Arc<Tracer>, shard: u32) -> Metrics {
         Metrics {
             latency: LatencyHistogram::new(),
             exec_latency: LatencyHistogram::new(),
+            queue_wait: LatencyHistogram::new(),
+            batch_wait: LatencyHistogram::new(),
             counters: Counters::default(),
+            tracer,
+            shard,
         }
     }
 
@@ -73,7 +102,21 @@ impl Metrics {
     pub fn merge_from(&self, other: &Metrics) {
         self.latency.merge_from(&other.latency);
         self.exec_latency.merge_from(&other.exec_latency);
+        self.queue_wait.merge_from(&other.queue_wait);
+        self.batch_wait.merge_from(&other.batch_wait);
         self.counters.merge_from(&other.counters);
+    }
+
+    /// Coherent plain-value capture of every histogram and counter (see
+    /// [`crate::obs::registry`] for the consistency guarantees).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            latency: self.latency.snapshot(),
+            exec_latency: self.exec_latency.snapshot(),
+            queue_wait: self.queue_wait.snapshot(),
+            batch_wait: self.batch_wait.snapshot(),
+            counters: self.counters.snapshot(),
+        }
     }
 }
 
@@ -109,7 +152,8 @@ impl Coordinator {
     /// Start the executor thread and return (owner handle, client).
     pub fn start(cfg: CoordinatorConfig) -> Result<CoordinatorHandle> {
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_capacity);
-        let metrics = Arc::new(Metrics::new());
+        let shard = cfg.shard;
+        let metrics = Arc::new(Metrics::for_shard(cfg.tracer.clone(), shard));
         let m2 = metrics.clone();
         // the backend must be constructed on the executor thread (not Send);
         // report startup errors back through a one-shot channel
@@ -121,7 +165,11 @@ impl Coordinator {
             .recv()
             .map_err(|_| anyhow::anyhow!("executor died during startup"))?
             .map_err(|e| anyhow::anyhow!("executor startup: {e}"))?;
-        let client = Coordinator { tx, metrics, next_id: Arc::new(AtomicU64::new(1)) };
+        // the shard id partitions the request-id space so ids (and thus
+        // trace spans) are unique across a pool's shards, not just within
+        // one executor
+        let first_id = ((shard as u64) << 48) | 1;
+        let client = Coordinator { tx, metrics, next_id: Arc::new(AtomicU64::new(first_id)) };
         Ok(CoordinatorHandle { client, join: Some(join) })
     }
 
@@ -155,11 +203,21 @@ impl Coordinator {
     pub fn try_submit(&self, head: &str, features: Vec<f32>)
                       -> Result<Receiver<InferResponse>> {
         let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // sampling decision is made ONCE here; when tracing is off this is
+        // a single relaxed load and the request path stays allocation-free
+        let traced = self.metrics.tracer.should_sample(id);
+        if traced {
+            self.metrics.tracer.record(id, Stage::Enqueue, self.metrics.shard);
+        }
+        let enqueued = Instant::now();
         let req = InferRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             head: head.to_string(),
             features,
-            enqueued: Instant::now(),
+            enqueued,
+            routed: enqueued,
+            traced,
             resp: rtx,
         };
         self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
@@ -229,6 +287,9 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
             return;
         }
     };
+    // resolved once: which dispatch counter this backend's batches land in
+    // (backends without a kernel tier — native, pjrt — count as scalar)
+    let simd = backend.kernel_kind().map(|k| k.is_simd()).unwrap_or(false);
     let buckets = backend.spec().batch_buckets.clone();
     let max_bucket = buckets.iter().copied().max().unwrap_or(1);
     let d_in_cap = backend.spec().kan.d_in.max(1);
@@ -285,7 +346,7 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
         for (name, state) in heads.iter_mut() {
             while let Some(batch) = state.queue.try_close(&cfg.policy, &buckets, now) {
                 execute_batch(backend.as_mut(), name, state, batch, &mut scratch,
-                              &mut out_scratch, &metrics);
+                              &mut out_scratch, &metrics, simd);
             }
         }
     }
@@ -298,6 +359,9 @@ fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics
 /// placement is skewed forever.
 fn respond_err(req: InferRequest, msg: impl Into<String>, metrics: &Metrics) {
     metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+    if req.traced {
+        metrics.tracer.record(req.id, Stage::Reply, metrics.shard);
+    }
     let _ = req.resp.send(InferResponse::err(req.id, msg));
 }
 
@@ -334,7 +398,13 @@ fn unregister_head(backend: &mut dyn Backend, heads: &mut HashMap<String, HeadSt
     }
 }
 
-fn route(heads: &mut HashMap<String, HeadState>, req: InferRequest, metrics: &Metrics) {
+fn route(heads: &mut HashMap<String, HeadState>, mut req: InferRequest, metrics: &Metrics) {
+    let now = Instant::now();
+    metrics.queue_wait.record(now.duration_since(req.enqueued));
+    req.routed = now;
+    if req.traced {
+        metrics.tracer.record(req.id, Stage::Route, metrics.shard);
+    }
     match heads.get_mut(&req.head) {
         Some(state) => {
             if req.features.len() != state.d_in {
@@ -360,21 +430,43 @@ fn fail_all(heads: &mut HashMap<String, HeadState>, why: &str, metrics: &Metrics
 }
 
 fn execute_batch(backend: &mut dyn Backend, name: &str, state: &mut HeadState, batch: Batch,
-                 scratch: &mut [f32], out_scratch: &mut Vec<f32>, metrics: &Metrics) {
+                 scratch: &mut [f32], out_scratch: &mut Vec<f32>, metrics: &Metrics,
+                 simd: bool) {
     let bucket = batch.bucket;
     let d_in = state.d_in;
     let n = batch.requests.len();
+    // batch-wait stage + batch-close stamps for every member request
+    let close_t = Instant::now();
+    for req in &batch.requests {
+        metrics.batch_wait.record(close_t.duration_since(req.routed));
+        if req.traced {
+            metrics.tracer.record(req.id, Stage::BatchClose, metrics.shard);
+        }
+    }
     // pad features into the reusable scratch buffer
     let pad = &mut scratch[..bucket * d_in];
     pad.fill(0.0);
     for (i, req) in batch.requests.iter().enumerate() {
         pad[i * d_in..(i + 1) * d_in].copy_from_slice(&req.features);
     }
+    for req in &batch.requests {
+        if req.traced {
+            metrics.tracer.record(req.id, Stage::KernelEnter, metrics.shard);
+        }
+    }
     let t0 = Instant::now();
     let result = backend.execute_into(name, pad, bucket, out_scratch);
     let exec_t = t0.elapsed();
+    for req in &batch.requests {
+        if req.traced {
+            metrics.tracer.record(req.id, Stage::KernelExit, metrics.shard);
+        }
+    }
     metrics.exec_latency.record(exec_t);
     metrics.counters.batches.fetch_add(1, Ordering::Relaxed);
+    let dispatch =
+        if simd { &metrics.counters.simd_batches } else { &metrics.counters.scalar_batches };
+    dispatch.fetch_add(1, Ordering::Relaxed);
     metrics.counters.batched_items.fetch_add(n as u64, Ordering::Relaxed);
     metrics.counters.padded_slots.fetch_add((bucket - n) as u64, Ordering::Relaxed);
     match result {
@@ -384,6 +476,9 @@ fn execute_batch(backend: &mut dyn Backend, name: &str, state: &mut HeadState, b
                 let latency = req.enqueued.elapsed();
                 metrics.latency.record(latency);
                 metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+                if req.traced {
+                    metrics.tracer.record(req.id, Stage::Reply, metrics.shard);
+                }
                 let row = out_scratch[i * d_out..(i + 1) * d_out].to_vec();
                 let _ = req.resp.send(InferResponse::ok(req.id, row, latency));
             }
@@ -392,6 +487,9 @@ fn execute_batch(backend: &mut dyn Backend, name: &str, state: &mut HeadState, b
             let msg = format!("{e:#}");
             for req in batch.requests {
                 metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+                if req.traced {
+                    metrics.tracer.record(req.id, Stage::Reply, metrics.shard);
+                }
                 let _ = req.resp.send(InferResponse::err(req.id, &msg));
             }
         }

@@ -15,6 +15,10 @@
 //! max_wait_ms = 2
 //! queue_capacity = 4096
 //! buckets = [1, 8, 32]          # optional; default ladder capped at max_batch
+//! trace_sample = 16             # span-trace 1-in-N requests (0 = off)
+//! trace_capacity = 4096         # span-ring capacity in events
+//! stats_interval_s = 10         # periodic stats JSON lines (0 = off)
+//! memsim_gauge = false          # deploy-time simulated L2 residency gauge
 //!
 //! [spec]                        # shape/seed for synthetic heads (CI, demos)
 //! d_in = 8
@@ -140,6 +144,19 @@ fn from_doc(doc: &Json, base: &Path) -> Result<DeploymentSpec> {
     }
     if let Some(n) = get_usize(dep, "queue_capacity")? {
         spec.queue_capacity = n;
+    }
+    if let Some(n) = get_usize(dep, "trace_sample")? {
+        spec.trace_sample = n as u64;
+    }
+    if let Some(n) = get_usize(dep, "trace_capacity")? {
+        spec.trace_capacity = n;
+    }
+    if let Some(s) = get_usize(dep, "stats_interval_s")? {
+        spec.stats_interval =
+            (s > 0).then(|| std::time::Duration::from_secs(s as u64));
+    }
+    if let Some(b) = get_bool(dep, "memsim_gauge")? {
+        spec.memsim_gauge = b;
     }
     if let Some(arr) = dep.get("buckets") {
         let arr = arr

@@ -40,6 +40,7 @@ pub use placement::{
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -49,6 +50,7 @@ use super::heads::HeadWeights;
 use super::pool::{ExecutorPool, HeadPlacement, PoolConfig, PoolHandle, PoolMetrics};
 use crate::kan::checkpoint::Checkpoint;
 use crate::memplan::{plan_family, plan_head};
+use crate::obs::{Gauges, StatsSnapshot, TraceConfig, STAGE_COUNT};
 use crate::runtime::{BackendConfig, BackendSpec, KernelMode};
 use crate::vq::Precision;
 
@@ -144,6 +146,18 @@ pub struct DeploymentSpec {
     /// PJRT artifacts directory (defaults to the runtime's default dir).
     #[cfg(feature = "pjrt")]
     pub artifacts_dir: Option<PathBuf>,
+    /// Trace 1-in-N requests through the span ring (`--trace-sample N`);
+    /// 0 (the default) disables tracing entirely.
+    pub trace_sample: u64,
+    /// Span-ring capacity in events (older events are overwritten).
+    pub trace_capacity: usize,
+    /// Emit one stats-snapshot JSON line to stdout this often while
+    /// serving (`--stats-interval S`); `None` disables the emitter.
+    pub stats_interval: Option<Duration>,
+    /// Estimate the family shared-region L2 hit rate with the cache
+    /// simulator at deploy time and surface it as a gauge (family backend
+    /// + VQ heads only; one-shot simulation, not a live probe).
+    pub memsim_gauge: bool,
     heads: Vec<HeadEntry>,
 }
 
@@ -176,8 +190,37 @@ impl DeploymentSpec {
             buckets: None,
             #[cfg(feature = "pjrt")]
             artifacts_dir: None,
+            trace_sample: 0,
+            trace_capacity: TraceConfig::default().capacity,
+            stats_interval: None,
+            memsim_gauge: false,
             heads: Vec::new(),
         }
+    }
+
+    /// Trace 1-in-N requests (builder style; 0 disables tracing).
+    pub fn with_trace_sample(mut self, sample_every: u64) -> Self {
+        self.trace_sample = sample_every;
+        self
+    }
+
+    /// Set the span-ring capacity in events (builder style).
+    pub fn with_trace_capacity(mut self, capacity: usize) -> Self {
+        self.trace_capacity = capacity;
+        self
+    }
+
+    /// Emit periodic stats-snapshot JSON lines while serving (builder
+    /// style; `None` disables the emitter).
+    pub fn with_stats_interval(mut self, interval: Option<Duration>) -> Self {
+        self.stats_interval = interval;
+        self
+    }
+
+    /// Enable the deploy-time memsim L2 residency gauge (builder style).
+    pub fn with_memsim_gauge(mut self, on: bool) -> Self {
+        self.memsim_gauge = on;
+        self
     }
 
     /// Set the shard count (builder style).
@@ -331,6 +374,11 @@ impl DeploymentSpec {
             anyhow::ensure!(heads_per_shard >= 1,
                             "family-co-locate budget must be >= 1");
         }
+        anyhow::ensure!(
+            self.trace_sample == 0 || self.trace_capacity >= STAGE_COUNT,
+            "trace_capacity must hold at least one full span ({STAGE_COUNT} events) \
+             when tracing is on"
+        );
         Ok(())
     }
 
@@ -559,7 +607,21 @@ impl DeploymentSpec {
             queue_capacity: self.queue_capacity,
             num_shards: self.shards,
             placement: self.placement,
+            trace: TraceConfig {
+                sample_every: self.trace_sample,
+                capacity: self.trace_capacity,
+            },
         })?;
+
+        // One-shot cache-simulator estimate of the family shared-region L2
+        // hit rate, computed while the head weights are still on hand
+        // (they move into the pool below).  Best-effort: an unplannable
+        // shape just leaves the gauge unset.
+        let l2_hit_rate = if self.memsim_gauge && self.backend == BackendKind::FamilyArena {
+            simulate_family_l2(&resolved, max_bucket)
+        } else {
+            None
+        };
 
         let d_in = resolved[0].1.d_in();
         let mut deployment = Deployment {
@@ -570,7 +632,12 @@ impl DeploymentSpec {
             d_in,
             heads_meta: Vec::new(),
             family_accounting: BTreeMap::new(),
+            gauges: Arc::new(Gauges::new()),
+            stats_interval: self.stats_interval,
         };
+        if let Some(rate) = l2_hit_rate {
+            deployment.gauges.set_l2_hit_rate(rate);
+        }
         for (entry, weights) in resolved {
             if entry.replicate {
                 deployment.add_replicated_head(&entry.name, weights)?;
@@ -580,6 +647,36 @@ impl DeploymentSpec {
         }
         Ok(deployment)
     }
+}
+
+/// Simulate serving the first family's VQ heads through the cache model
+/// ([`crate::memsim::trace::trace_family_vq_heads`]) and return the L2 hit
+/// rate, or `None` when no family VQ head exists or its shape is
+/// unplannable.  Head count is capped so deploy-time cost stays bounded.
+fn simulate_family_l2(resolved: &[(HeadEntry, HeadWeights)], max_bucket: usize)
+                      -> Option<f64> {
+    use crate::memsim::cache::{Cache, CacheConfig};
+    use crate::memsim::trace::trace_family_vq_heads;
+    let (family, weights) = resolved.iter().find_map(|(entry, weights)| {
+        let fam = entry.family.as_deref()?;
+        matches!(weights, HeadWeights::VqFp32 { .. } | HeadWeights::VqInt8 { .. })
+            .then_some((fam, weights))
+    })?;
+    let n_heads = resolved
+        .iter()
+        .filter(|(e, _)| e.family.as_deref() == Some(family))
+        .count()
+        .clamp(1, 4);
+    let precision = match weights {
+        HeadWeights::VqInt8 { .. } => Precision::Int8,
+        _ => Precision::Fp32,
+    };
+    let kan = weights.implied_kan_spec();
+    let vq = crate::kan::spec::VqSpec { codebook_size: weights.implied_codebook_size() };
+    let plan = plan_family(&kan, &vq, precision, max_bucket).ok()?;
+    let mut cache = Cache::new(CacheConfig::a100_l2());
+    let report = trace_family_vq_heads(&mut cache, &plan, n_heads, 2, 7);
+    Some(report.stats.hit_rate())
 }
 
 /// Per-head byte accounting captured at registration (weights are consumed
@@ -616,6 +713,10 @@ pub struct Deployment {
     d_in: usize,
     heads_meta: Vec<HeadMeta>,
     family_accounting: BTreeMap<String, FamilyBytes>,
+    /// Live residency/occupancy gauges, refreshed on every registration
+    /// change and shared with [`StatsHandle`] clones.
+    gauges: Arc<Gauges>,
+    stats_interval: Option<Duration>,
 }
 
 impl Deployment {
@@ -651,6 +752,7 @@ impl Deployment {
         let pending = self.prepare_meta(name, family, false, &weights);
         let shard = self.handle.client.register_head(name, family, weights)?;
         self.commit_meta(pending);
+        self.refresh_gauges();
         Ok(shard)
     }
 
@@ -660,6 +762,7 @@ impl Deployment {
         let pending = self.prepare_meta(name, None, true, &weights);
         self.handle.client.register_replicated(name, weights)?;
         self.commit_meta(pending);
+        self.refresh_gauges();
         Ok(())
     }
 
@@ -667,6 +770,7 @@ impl Deployment {
     pub fn remove_head(&mut self, name: &str) -> Result<bool> {
         let existed = self.handle.client.remove_head(name)?;
         self.forget_meta(name);
+        self.refresh_gauges();
         Ok(existed)
     }
 
@@ -689,6 +793,51 @@ impl Deployment {
     /// Merged + per-shard metrics (see [`ExecutorPool::metrics_breakdown`]).
     pub fn metrics(&self) -> PoolMetrics {
         self.handle.client.metrics_breakdown()
+    }
+
+    /// Full stats-registry snapshot: pool metrics + labels + trace capture
+    /// from [`ExecutorPool::stats_snapshot`], with this deployment's live
+    /// gauges spliced in.
+    pub fn stats(&self) -> StatsSnapshot {
+        let mut snap = self.handle.client.stats_snapshot();
+        snap.gauges = self.gauges.snapshot();
+        snap
+    }
+
+    /// Cloneable scrape handle for the stats surface (TCP `STATS` verb,
+    /// periodic emitter): pool client + shared gauges, detached from the
+    /// deployment's lifetime management.
+    pub fn stats_handle(&self) -> StatsHandle {
+        StatsHandle {
+            pool: self.handle.client.clone(),
+            gauges: Arc::clone(&self.gauges),
+        }
+    }
+
+    /// The deployment's live gauge set (shared atomics).
+    pub fn gauges(&self) -> &Arc<Gauges> {
+        &self.gauges
+    }
+
+    /// Periodic stats-emitter interval the spec asked for, if any.
+    pub fn stats_interval(&self) -> Option<Duration> {
+        self.stats_interval
+    }
+
+    /// Recompute the residency/occupancy gauges from the current
+    /// registration state (same accounting as [`Deployment::report`]).
+    fn refresh_gauges(&self) {
+        use std::sync::atomic::Ordering;
+        let report = self.report();
+        self.gauges
+            .resident_bytes
+            .store(report.resident_bytes as u64, Ordering::Relaxed);
+        self.gauges
+            .shards_occupied
+            .store(report.shards_occupied as u64, Ordering::Relaxed);
+        self.gauges
+            .heads
+            .store(self.heads_meta.len() as u64, Ordering::Relaxed);
     }
 
     /// Snapshot report: where every head lives, how many shards each
@@ -809,6 +958,26 @@ impl Deployment {
 struct PendingMeta {
     meta: HeadMeta,
     family_bytes: Option<FamilyBytes>,
+}
+
+/// Cloneable scrape handle over one deployment's stats surface: the pool
+/// client (metrics, labels, trace ring) plus the deployment's shared gauge
+/// set.  Hand clones to the TCP server and the periodic emitter thread;
+/// scraping never blocks the serving path.
+#[derive(Clone)]
+pub struct StatsHandle {
+    pool: ExecutorPool,
+    gauges: Arc<Gauges>,
+}
+
+impl StatsHandle {
+    /// Capture one coherent [`StatsSnapshot`] (pool metrics + gauges +
+    /// trace spans).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut snap = self.pool.stats_snapshot();
+        snap.gauges = self.gauges.snapshot();
+        snap
+    }
 }
 
 /// Resolve one head entry's weights: in-memory weights clone, checkpoint

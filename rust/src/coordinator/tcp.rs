@@ -4,6 +4,11 @@
 //! Response: {"id": N, "scores": [..d_out floats..]}
 //!         | {"error": "..."}
 //!
+//! A connection may also scrape the stats registry: the bare line `STATS`
+//! (or `{"cmd": "stats"}`) replies with one [`StatsSnapshot`] JSON object,
+//! and `{"cmd": "stats", "format": "prometheus"}` wraps the Prometheus
+//! text exposition in `{"prometheus": "..."}`.
+//!
 //! One thread per connection (std::net) — request concurrency is bounded by
 //! the coordinator's admission queue, not by connection count.  This is the
 //! deployment-shaped entry point `share-kan serve --tcp ADDR` exposes; unit
@@ -27,20 +32,45 @@ use anyhow::Result;
 use super::pool::ExecutorPool;
 use super::request::InferResponse;
 use super::server::Coordinator;
+use super::serving::StatsHandle;
+use crate::obs::StatsSnapshot;
 use crate::util::json::{self, Json};
 
-/// What a [`TcpServer`] fronts: one executor or a sharded pool.
+/// What a [`TcpServer`] fronts: one executor or a sharded pool (the pool
+/// optionally carries a deployment [`StatsHandle`] so `STATS` replies
+/// include the deployment gauges).
 #[derive(Clone)]
 enum TcpTarget {
     Single(Coordinator),
-    Pool(ExecutorPool),
+    Pool(ExecutorPool, Option<StatsHandle>),
 }
 
 impl TcpTarget {
     fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
         match self {
             TcpTarget::Single(c) => c.infer(head, features),
-            TcpTarget::Pool(p) => p.infer(head, features),
+            TcpTarget::Pool(p, _) => p.infer(head, features),
+        }
+    }
+
+    /// Capture the stats registry this server fronts.  A bare coordinator
+    /// has no pool labels or gauges; its merged metrics still scrape.
+    fn stats(&self) -> StatsSnapshot {
+        match self {
+            TcpTarget::Single(c) => {
+                let merged = c.metrics().snapshot();
+                StatsSnapshot {
+                    backend: "single".to_string(),
+                    policy: "none".to_string(),
+                    kernel: "unknown".to_string(),
+                    num_shards: 1,
+                    per_shard: vec![merged.clone()],
+                    merged,
+                    ..Default::default()
+                }
+            }
+            TcpTarget::Pool(_, Some(stats)) => stats.snapshot(),
+            TcpTarget::Pool(p, None) => p.stats_snapshot(),
         }
     }
 }
@@ -65,7 +95,15 @@ impl TcpServer {
     /// route by the pool's placement table, so a TCP deployment serves
     /// any shard count.
     pub fn start_pool(pool: ExecutorPool, addr: &str) -> Result<TcpServer> {
-        Self::start_target(TcpTarget::Pool(pool), addr)
+        Self::start_target(TcpTarget::Pool(pool, None), addr)
+    }
+
+    /// Like [`TcpServer::start_pool`], with a deployment [`StatsHandle`]
+    /// so `STATS` replies carry the deployment gauges (resident bytes,
+    /// occupancy, memsim L2) — what `serve --deployment --tcp` uses.
+    pub fn start_pool_with_stats(pool: ExecutorPool, stats: StatsHandle, addr: &str)
+                                 -> Result<TcpServer> {
+        Self::start_target(TcpTarget::Pool(pool, Some(stats)), addr)
     }
 
     fn start_target(target: TcpTarget, addr: &str) -> Result<TcpServer> {
@@ -150,7 +188,22 @@ fn handle_line(line: &str, target: &TcpTarget) -> Result<Json> {
     if line.is_empty() {
         anyhow::bail!("empty request");
     }
+    // bare scrape verb (curl/netcat-friendly): "STATS" on its own line
+    if line.eq_ignore_ascii_case("stats") {
+        return Ok(target.stats().to_json());
+    }
     let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    // JSON scrape form: {"cmd": "stats"[, "format": "prometheus"]}
+    if req.get("cmd").and_then(|j| j.as_str()) == Some("stats") {
+        let snap = target.stats();
+        return match req.get("format").and_then(|j| j.as_str()) {
+            Some("prometheus") => {
+                Ok(Json::obj(vec![("prometheus", Json::str(snap.to_prometheus()))]))
+            }
+            None | Some("json") => Ok(snap.to_json()),
+            Some(other) => anyhow::bail!("unknown stats format '{other}'"),
+        };
+    }
     let head = req
         .get("head")
         .and_then(|j| j.as_str())
@@ -254,5 +307,41 @@ impl TcpClient {
                     .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
                     .collect()
             })
+    }
+
+    /// Scrape the server's stats registry as a JSON document (the `STATS`
+    /// verb; what `share-kan stats --tcp` prints).
+    pub fn stats(&mut self) -> std::result::Result<Json, ClientError> {
+        self.round_trip("STATS")
+    }
+
+    /// Scrape the stats registry in Prometheus text exposition format.
+    pub fn stats_prometheus(&mut self) -> std::result::Result<String, ClientError> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("stats")),
+            ("format", Json::str("prometheus")),
+        ]);
+        let resp = self.round_trip(&json::to_string(&req))?;
+        resp.get("prometheus")
+            .and_then(|j| j.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| ClientError::Protocol("missing prometheus body".into()))
+    }
+
+    /// Send one raw line and parse the one-line JSON reply, surfacing
+    /// server-side `error` replies as [`ClientError::Server`].
+    fn round_trip(&mut self, line: &str) -> std::result::Result<Json, ClientError> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            return Err(ClientError::Protocol("connection closed before reply".into()));
+        }
+        let resp = json::parse(reply.trim())
+            .map_err(|e| ClientError::Protocol(format!("bad reply: {e}")))?;
+        if let Some(err) = resp.get("error").and_then(|j| j.as_str()) {
+            return Err(ClientError::Server(err.to_string()));
+        }
+        Ok(resp)
     }
 }

@@ -69,6 +69,7 @@ fn serving_bench(wb: &Workbench, requests: usize) -> Result<Vec<ServingRow>> {
             },
             policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
             queue_capacity: 4096,
+            ..Default::default()
         })?;
         let c = handle.client.clone();
         c.add_head("h", head)?;

@@ -39,6 +39,7 @@ pub fn run(wb: &Workbench, rates: &[f64], n_per_rate: usize) -> Result<Vec<LoadP
             },
             policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
             queue_capacity: 8192,
+            ..Default::default()
         })?;
         let c = handle.client.clone();
         c.add_head("h", HeadWeights::from_checkpoint(&head_ck)?)?;

@@ -61,6 +61,7 @@ pub mod kan;
 pub mod memplan;
 #[allow(missing_docs)]
 pub mod memsim;
+pub mod obs;
 #[allow(missing_docs)]
 pub mod pruning;
 #[allow(missing_docs)]

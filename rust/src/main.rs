@@ -28,6 +28,15 @@
 //!            deployment would materialize — disjoint, aligned, covered,
 //!            index widths exact, family accounting reconciled — and emit
 //!            machine-readable JSON findings; exit 1 on any finding)
+//!   stats    --tcp ADDR [--prom]
+//!            (scrape a running server's stats registry: merged + per-shard
+//!            metrics, per-stage latency, gauges and trace spans as one
+//!            JSON object, or Prometheus text with --prom)
+//!
+//! Every serve mode accepts the observability flags `--trace-sample N`
+//! (span-trace 1-in-N requests), `--trace-capacity N` (span-ring size),
+//! `--stats-interval S` (print one stats JSON line every S seconds) and
+//! `--memsim-gauge` (deploy-time simulated L2 residency gauge).
 //!
 //! The default build serves everything through the pure-Rust native
 //! backend — no Python, no PJRT, no artifacts/ directory.  With
@@ -39,7 +48,8 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use share_kan::coordinator::{
-    BackendKind, DeploymentSpec, ExecutorPool, HeadWeights, Placement, TcpServer,
+    BackendKind, Deployment, DeploymentSpec, ExecutorPool, HeadWeights, Placement, TcpClient,
+    TcpServer,
 };
 use share_kan::data::{standard_splits, Pcg32};
 use share_kan::eval::mean_average_precision;
@@ -51,7 +61,7 @@ use share_kan::util::cli::Args;
 use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
 
-const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify> [options]
+const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify|stats> [options]
   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]   (pjrt builds only)
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
            --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
@@ -64,7 +74,9 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify> [
            --family [--heads N] [--k 512] [--int8] [--shards N] [--heads-per-shard N]   (family arena + placement accounting)
            --deployment deploy.toml   (placement dry-run)
   verify   --deployment deploy.toml   (static plan verification; JSON findings, exit 1 on any)
-common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)";
+  stats    --tcp ADDR [--prom]   (scrape a running server's stats registry)
+common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)
+serve observability: [--trace-sample N] [--trace-capacity N] [--stats-interval S] [--memsim-gauge]";
 
 fn main() {
     let args = Args::from_env();
@@ -95,6 +107,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "plan" => cmd_plan(args),
         "verify" => cmd_verify(args),
+        "stats" => cmd_stats(args),
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -340,6 +353,66 @@ fn drive_load(client: &ExecutorPool, heads: &[String], d_in: usize, n: usize) ->
     Ok(())
 }
 
+/// Apply the serve observability flags (`--trace-sample N`,
+/// `--trace-capacity N`, `--stats-interval S`, `--memsim-gauge`) onto a
+/// deployment spec; CLI flags override deployment-file values.
+fn apply_obs_flags(args: &Args, mut spec: DeploymentSpec) -> Result<DeploymentSpec> {
+    if let Some(v) = args.get("trace-sample") {
+        spec.trace_sample = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--trace-sample expects an integer, got '{v}'"))?;
+    }
+    if let Some(v) = args.get("trace-capacity") {
+        spec.trace_capacity = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--trace-capacity expects an integer, got '{v}'"))?;
+    }
+    if let Some(v) = args.get("stats-interval") {
+        let s: u64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--stats-interval expects seconds, got '{v}'"))?;
+        spec.stats_interval = (s > 0).then(|| Duration::from_secs(s));
+    }
+    if args.flag("memsim-gauge") {
+        spec.memsim_gauge = true;
+    }
+    Ok(spec)
+}
+
+/// Start the periodic stats emitter when the deployment asked for one: a
+/// detached thread printing one stats-snapshot JSON line per interval
+/// (scraping never touches the serving path).
+fn spawn_stats_emitter(dep: &Deployment) {
+    if let Some(interval) = dep.stats_interval() {
+        let stats = dep.stats_handle();
+        std::thread::Builder::new()
+            .name("share-kan-stats".into())
+            .spawn(move || loop {
+                std::thread::sleep(interval);
+                println!("{}",
+                         share_kan::util::json::to_string(&stats.snapshot().to_json()));
+            })
+            .ok();
+    }
+}
+
+/// `stats --tcp ADDR [--prom]`: scrape a running server's stats registry
+/// over the TCP `STATS` verb and print it (JSON by default, Prometheus
+/// text exposition with `--prom`).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get("tcp").context("--tcp ADDR required")?;
+    let sock: std::net::SocketAddr = addr
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--tcp expects host:port, got '{addr}'"))?;
+    let mut client = TcpClient::connect(sock)?;
+    if args.flag("prom") {
+        println!("{}", client.stats_prometheus()?.trim_end());
+    } else {
+        println!("{}", share_kan::util::json::to_string(&client.stats()?));
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(file) = args.get("deployment") {
         return cmd_serve_deployment(args, file);
@@ -387,11 +460,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         spec.head("default", head)
     };
-    let dep = spec.deploy()?;
+    let dep = apply_obs_flags(args, spec)?.deploy()?;
+    spawn_stats_emitter(&dep);
 
     if let Some(addr) = args.get("tcp") {
         // long-running TCP mode: newline-delimited JSON until Ctrl-C
-        let server = TcpServer::start_pool(dep.client().clone(), addr)?;
+        let server = TcpServer::start_pool_with_stats(
+            dep.client().clone(), dep.stats_handle(), addr)?;
         println!("listening on {} — protocol: {{\"head\":\"default\",\"features\":[..]}}\\n",
                  server.addr());
         loop {
@@ -449,11 +524,13 @@ fn cmd_serve_family(args: &Args, list: &str) -> Result<()> {
         .with_max_batch(args.get_usize("max-batch", 128).max(1))
         .with_max_wait(Duration::from_millis(args.get_u64("max-wait-ms", 2)))
         .family("family", heads);
-    let dep = spec.deploy()?;
+    let dep = apply_obs_flags(args, spec)?.deploy()?;
     println!("{}", dep.report().summary());
+    spawn_stats_emitter(&dep);
 
     if let Some(addr) = args.get("tcp") {
-        let server = TcpServer::start_pool(dep.client().clone(), addr)?;
+        let server = TcpServer::start_pool_with_stats(
+            dep.client().clone(), dep.stats_handle(), addr)?;
         println!("listening on {} — protocol: {{\"head\":\"<stem>\",\"features\":[..]}}\\n",
                  server.addr());
         loop {
@@ -484,11 +561,13 @@ fn cmd_serve_deployment(args: &Args, file: &str) -> Result<()> {
         spec.placement = placement_arg(args)?;
     }
     let names = spec.head_names();
-    let dep = spec.deploy()?;
+    let dep = apply_obs_flags(args, spec)?.deploy()?;
     println!("{}", dep.report().summary());
+    spawn_stats_emitter(&dep);
 
     if let Some(addr) = args.get("tcp") {
-        let server = TcpServer::start_pool(dep.client().clone(), addr)?;
+        let server = TcpServer::start_pool_with_stats(
+            dep.client().clone(), dep.stats_handle(), addr)?;
         println!("listening on {} — protocol: {{\"head\":\"<name>\",\"features\":[..]}}\\n",
                  server.addr());
         loop {
@@ -502,7 +581,7 @@ fn cmd_serve_deployment(args: &Args, file: &str) -> Result<()> {
     let pm = dep.metrics();
     for (s, m) in pm.per_shard.iter().enumerate() {
         println!("  shard {s}: {} responses, p95 {:?}, mean batch {:.1}",
-                 m.counters.responses.load(std::sync::atomic::Ordering::Relaxed),
+                 m.counters.responses,
                  m.latency.percentile(0.95),
                  m.counters.mean_batch_size());
     }

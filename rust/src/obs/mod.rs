@@ -1,0 +1,32 @@
+//! End-to-end serving observability: span tracing, the metrics registry,
+//! and the scrapeable stats surface.
+//!
+//! Three pieces (ARCHITECTURE.md §7):
+//!
+//! * [`trace`] — per-request **span tracing**: a lock-free fixed-capacity
+//!   ring of stage-stamped events (enqueue → route → batch-close →
+//!   kernel-enter/exit → reply) shared by every client handle and executor
+//!   shard.  Sampling is 1-in-N by request id (`serve --trace-sample N`);
+//!   when off, the hot-path cost is a single relaxed atomic load.
+//! * [`registry`] — the **metrics registry**: plain-value coherent
+//!   snapshots ([`MetricsSnapshot`]) of the live serving atomics, with
+//!   per-stage histograms, kernel-dispatch counters, arena gauges, and
+//!   intra-bucket-interpolated percentiles; merged pool views are exact
+//!   folds of per-shard captures.
+//! * the **exposition surface** — [`StatsSnapshot::to_json`] /
+//!   [`StatsSnapshot::to_prometheus`], served by the TCP `STATS` verb,
+//!   the `share-kan stats` CLI, and `serve --stats-interval S`.
+//!
+//! This module is a leaf: it depends only on `util::json`, and the
+//! coordinator/runtime layers depend on it — never the other way around.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    CountersSnapshot, Gauges, GaugesSnapshot, HistogramSnapshot, MetricsSnapshot, StatsSnapshot,
+    TraceSummary,
+};
+pub use trace::{
+    assemble_spans, RequestSpan, Stage, StageStamp, TraceConfig, TraceEvent, Tracer, STAGE_COUNT,
+};

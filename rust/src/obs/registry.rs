@@ -1,0 +1,612 @@
+//! The metrics registry: plain-value coherent snapshots of the serving
+//! counters/histograms, arena gauges, and the JSON / Prometheus
+//! exposition formats behind the TCP `STATS` verb and `share-kan stats`.
+//!
+//! The live metrics (`coordinator::Metrics`) are lock-free atomics updated
+//! from hot paths; reading them field-by-field mid-traffic yields sums
+//! that disagree with each other (e.g. `responses > requests`).  This
+//! module defines the *snapshot* types those atomics are captured into —
+//! each capture is taken with causality-ordered reads (see
+//! `Counters::snapshot`) and every derived view (merged pool totals,
+//! percentiles, padding fractions) is computed from the ONE captured
+//! value set, so a snapshot is internally consistent by construction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::trace::{RequestSpan, Stage};
+
+/// Plain-value capture of one `LatencyHistogram` (log2 buckets over µs).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// bucket i counts samples in `[2^i µs, 2^(i+1) µs)`
+    pub buckets: Vec<u64>,
+    /// Total samples (always equals the bucket sum — enforced at capture).
+    pub count: u64,
+    /// Sum of all samples in µs.
+    pub sum_us: u64,
+    /// Largest recorded sample in µs.
+    pub max_us: u64,
+}
+
+impl HistogramSnapshot {
+    /// Mean sample in µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// Percentile in µs with intra-bucket linear interpolation.
+    ///
+    /// The target rank's bucket `[2^i, 2^(i+1))` is located by cumulative
+    /// count, then the value is interpolated linearly by rank within the
+    /// bucket and clamped to the recorded maximum — so percentiles no
+    /// longer snap to power-of-two boundaries (a p50 of 1535 samples
+    /// spread over `[1024, 2048)` reports ≈1536 µs, not 2048 µs).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            if b > 0 && acc + b >= target {
+                let lower = (1u64 << i) as f64;
+                let upper = (1u64 << (i + 1)) as f64;
+                let frac = (target - acc) as f64 / b as f64;
+                return (lower + frac * (upper - lower)).min(self.max_us as f64);
+            }
+            acc += b;
+        }
+        self.max_us as f64
+    }
+
+    /// [`HistogramSnapshot::percentile_us`] as a [`Duration`].
+    pub fn percentile(&self, p: f64) -> Duration {
+        Duration::from_micros(self.percentile_us(p).round() as u64)
+    }
+
+    /// Fold another snapshot in (exact: bucket-wise sums, max of maxes).
+    pub fn add(&mut self, other: &HistogramSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (mine, theirs) in self.buckets.iter_mut().zip(&other.buckets) {
+            *mine += theirs;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Compact JSON digest (count, mean, p50/p90/p99/p999, max — µs).
+    pub fn digest_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_us", Json::num(self.mean_us())),
+            ("p50_us", Json::num(self.percentile_us(0.50))),
+            ("p90_us", Json::num(self.percentile_us(0.90))),
+            ("p99_us", Json::num(self.percentile_us(0.99))),
+            ("p999_us", Json::num(self.percentile_us(0.999))),
+            ("max_us", Json::num(self.max_us as f64)),
+        ])
+    }
+}
+
+/// Plain-value capture of the coordinator `Counters` (one consistent set).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CountersSnapshot {
+    /// Requests submitted (admitted or rejected).
+    pub requests: u64,
+    /// Responses sent (success or error).
+    pub responses: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Live rows across all executed batches.
+    pub batched_items: u64,
+    /// Padding rows added by bucket rounding.
+    pub padded_slots: u64,
+    /// Requests rejected by admission-queue backpressure.
+    pub rejected: u64,
+    /// Batches executed by the scalar kernel tier (includes the native
+    /// reference backend, which *is* the scalar tier).
+    pub scalar_batches: u64,
+    /// Batches executed by a SIMD kernel tier (AVX2+FMA / NEON).
+    pub simd_batches: u64,
+}
+
+impl CountersSnapshot {
+    /// Requests admitted but not yet answered at capture time.  Never
+    /// underflows: the capture orders reads so `requests ≥ responses +
+    /// rejected` holds within one snapshot.
+    pub fn inflight(&self) -> u64 {
+        self.requests.saturating_sub(self.responses + self.rejected)
+    }
+
+    /// Mean live rows per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_items as f64 / self.batches as f64
+    }
+
+    /// Fraction of executed slots that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        if self.batched_items + self.padded_slots == 0 {
+            return 0.0;
+        }
+        self.padded_slots as f64 / (self.batched_items + self.padded_slots) as f64
+    }
+
+    /// Fold another snapshot in (exact field-wise sums).
+    pub fn add(&mut self, other: &CountersSnapshot) {
+        self.requests += other.requests;
+        self.responses += other.responses;
+        self.batches += other.batches;
+        self.batched_items += other.batched_items;
+        self.padded_slots += other.padded_slots;
+        self.rejected += other.rejected;
+        self.scalar_batches += other.scalar_batches;
+        self.simd_batches += other.simd_batches;
+    }
+}
+
+/// Plain-value capture of one executor's full metrics set.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// End-to-end request latency (enqueue → response).
+    pub latency: HistogramSnapshot,
+    /// Backend execution latency per batch.
+    pub exec_latency: HistogramSnapshot,
+    /// Admission-queue wait per request (enqueue → routed).
+    pub queue_wait: HistogramSnapshot,
+    /// Batcher wait per request (routed → batch close).
+    pub batch_wait: HistogramSnapshot,
+    /// Throughput / batching / backpressure / kernel-dispatch counters.
+    pub counters: CountersSnapshot,
+}
+
+impl MetricsSnapshot {
+    /// Fold another snapshot in (exact).  The pool's merged view is the
+    /// fold of its per-shard snapshots, so `merged == Σ per_shard` holds
+    /// by construction — the property the breakdown used to violate by
+    /// re-reading live atomics per view.
+    pub fn add(&mut self, other: &MetricsSnapshot) {
+        self.latency.add(&other.latency);
+        self.exec_latency.add(&other.exec_latency);
+        self.queue_wait.add(&other.queue_wait);
+        self.batch_wait.add(&other.batch_wait);
+        self.counters.add(&other.counters);
+    }
+
+    /// JSON rendering: counters plus latency/stage digests.
+    pub fn to_json(&self) -> Json {
+        let c = &self.counters;
+        Json::obj(vec![
+            (
+                "counters",
+                Json::obj(vec![
+                    ("requests", Json::num(c.requests as f64)),
+                    ("responses", Json::num(c.responses as f64)),
+                    ("rejected", Json::num(c.rejected as f64)),
+                    ("inflight", Json::num(c.inflight() as f64)),
+                    ("batches", Json::num(c.batches as f64)),
+                    ("batched_items", Json::num(c.batched_items as f64)),
+                    ("padded_slots", Json::num(c.padded_slots as f64)),
+                    ("mean_batch", Json::num(c.mean_batch_size())),
+                    ("padding_fraction", Json::num(c.padding_fraction())),
+                ]),
+            ),
+            (
+                "kernel_batches",
+                Json::obj(vec![
+                    ("scalar", Json::num(c.scalar_batches as f64)),
+                    ("simd", Json::num(c.simd_batches as f64)),
+                ]),
+            ),
+            ("latency_us", self.latency.digest_json()),
+            (
+                "stages",
+                Json::obj(vec![
+                    ("queue_wait_us", self.queue_wait.digest_json()),
+                    ("batch_wait_us", self.batch_wait.digest_json()),
+                    ("exec_us", self.exec_latency.digest_json()),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Live deployment-level gauges (atomics; shared via `Arc` between the
+/// deployment handle, the TCP server and the periodic stats emitter).
+#[derive(Debug, Default)]
+pub struct Gauges {
+    /// Resident serving bytes across all shards (from `Deployment::report`).
+    pub resident_bytes: AtomicU64,
+    /// Shards with at least one head registered.
+    pub shards_occupied: AtomicU64,
+    /// Heads currently deployed.
+    pub heads: AtomicU64,
+    /// Simulated L2 hit rate in parts-per-million; `u64::MAX` = not set
+    /// (memsim gauge disabled or backend not family-resident).
+    pub l2_hit_rate_ppm: AtomicU64,
+}
+
+/// Sentinel for an unset [`Gauges::l2_hit_rate_ppm`].
+const L2_UNSET: u64 = u64::MAX;
+
+impl Gauges {
+    /// Fresh gauge set with the L2 gauge unset.
+    pub fn new() -> Gauges {
+        let g = Gauges::default();
+        g.l2_hit_rate_ppm.store(L2_UNSET, Ordering::Relaxed);
+        g
+    }
+
+    /// Set the simulated L2 hit-rate gauge (fraction in `[0, 1]`).
+    pub fn set_l2_hit_rate(&self, fraction: f64) {
+        let ppm = (fraction.clamp(0.0, 1.0) * 1e6).round() as u64;
+        self.l2_hit_rate_ppm.store(ppm, Ordering::Relaxed);
+    }
+
+    /// Capture plain values.
+    pub fn snapshot(&self) -> GaugesSnapshot {
+        let ppm = self.l2_hit_rate_ppm.load(Ordering::Relaxed);
+        GaugesSnapshot {
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            shards_occupied: self.shards_occupied.load(Ordering::Relaxed),
+            heads: self.heads.load(Ordering::Relaxed),
+            l2_hit_rate: if ppm == L2_UNSET { None } else { Some(ppm as f64 / 1e6) },
+        }
+    }
+}
+
+/// Plain-value capture of [`Gauges`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GaugesSnapshot {
+    /// Resident serving bytes across all shards.
+    pub resident_bytes: u64,
+    /// Shards with at least one head registered.
+    pub shards_occupied: u64,
+    /// Heads currently deployed.
+    pub heads: u64,
+    /// Simulated L2 hit rate in `[0, 1]`, when the memsim gauge is on.
+    pub l2_hit_rate: Option<f64>,
+}
+
+impl GaugesSnapshot {
+    fn to_json(self) -> Json {
+        let mut pairs = vec![
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+            ("shards_occupied", Json::num(self.shards_occupied as f64)),
+            ("heads", Json::num(self.heads as f64)),
+        ];
+        pairs.push((
+            "l2_hit_rate",
+            match self.l2_hit_rate {
+                Some(r) => Json::num(r),
+                None => Json::Null,
+            },
+        ));
+        Json::obj(pairs)
+    }
+}
+
+/// Capture of the span tracer's state at snapshot time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Sampling period (0 = tracing off).
+    pub sample_every: u64,
+    /// Ring capacity in events.
+    pub capacity: usize,
+    /// Total events written since startup (monotone).
+    pub events: u64,
+    /// Per-request spans recovered from the ring.
+    pub spans: Vec<RequestSpan>,
+}
+
+impl TraceSummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sample_every", Json::num(self.sample_every as f64)),
+            ("capacity", Json::num(self.capacity as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("spans", Json::Arr(self.spans.iter().map(span_json).collect())),
+        ])
+    }
+}
+
+fn span_json(span: &RequestSpan) -> Json {
+    let stages = span
+        .stages
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("stage", Json::str(s.stage.name())),
+                ("t_us", Json::num(s.t_us as f64)),
+                ("shard", Json::num(s.shard as f64)),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("id", Json::num(span.id as f64)),
+        ("complete", Json::Bool(span.is_complete())),
+        ("stages", Json::Arr(stages)),
+    ];
+    match span.total_us() {
+        Some(t) => pairs.push(("total_us", Json::num(t as f64))),
+        None => pairs.push(("total_us", Json::Null)),
+    }
+    if span.is_complete() {
+        // named stage-pair durations; they partition total_us exactly
+        let d = |a: Stage, b: Stage| {
+            let t0 = span.stamp(a).map(|s| s.t_us).unwrap_or(0);
+            let t1 = span.stamp(b).map(|s| s.t_us).unwrap_or(0);
+            Json::num(t1.saturating_sub(t0) as f64)
+        };
+        pairs.push((
+            "durations_us",
+            Json::obj(vec![
+                ("queue_wait", d(Stage::Enqueue, Stage::Route)),
+                ("batch_wait", d(Stage::Route, Stage::BatchClose)),
+                ("dispatch", d(Stage::BatchClose, Stage::KernelEnter)),
+                ("exec", d(Stage::KernelEnter, Stage::KernelExit)),
+                ("reply", d(Stage::KernelExit, Stage::Reply)),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// The full registry snapshot: everything the `STATS` verb / `share-kan
+/// stats` CLI exposes, captured coherently at one point in time.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    /// Backend label (`native` / `arena` / `family` / `pjrt`).
+    pub backend: String,
+    /// Placement/policy label for pools (`round-robin`, `least-loaded`, …).
+    pub policy: String,
+    /// Resolved kernel tier label (`scalar` / `avx2+fma` / `neon`).
+    pub kernel: String,
+    /// Number of executor shards.
+    pub num_shards: usize,
+    /// Pool-wide metrics (exact fold of `per_shard`).
+    pub merged: MetricsSnapshot,
+    /// Per-shard metrics, indexed by shard id.
+    pub per_shard: Vec<MetricsSnapshot>,
+    /// Deployment-level gauges.
+    pub gauges: GaugesSnapshot,
+    /// Span-tracer capture.
+    pub trace: TraceSummary,
+}
+
+impl StatsSnapshot {
+    /// Render the registry as one JSON object (the `STATS` reply body).
+    pub fn to_json(&self) -> Json {
+        let per_shard = self
+            .per_shard
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let c = &m.counters;
+                Json::obj(vec![
+                    ("shard", Json::num(i as f64)),
+                    ("requests", Json::num(c.requests as f64)),
+                    ("responses", Json::num(c.responses as f64)),
+                    ("rejected", Json::num(c.rejected as f64)),
+                    ("inflight", Json::num(c.inflight() as f64)),
+                    ("batches", Json::num(c.batches as f64)),
+                    ("mean_batch", Json::num(c.mean_batch_size())),
+                    ("p50_us", Json::num(m.latency.percentile_us(0.50))),
+                    ("p99_us", Json::num(m.latency.percentile_us(0.99))),
+                ])
+            })
+            .collect();
+        let pairs = vec![
+            ("backend", Json::str(self.backend.as_str())),
+            ("policy", Json::str(self.policy.as_str())),
+            ("kernel", Json::str(self.kernel.as_str())),
+            ("shards", Json::num(self.num_shards as f64)),
+            ("gauges", self.gauges.to_json()),
+            ("per_shard", Json::Arr(per_shard)),
+            ("trace", self.trace.to_json()),
+        ];
+        let mut obj = match Json::obj(pairs) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        // splice the merged metrics' keys in at the top level
+        if let Json::Obj(m) = self.merged.to_json() {
+            obj.extend(m);
+        }
+        Json::Obj(obj)
+    }
+
+    /// Render the registry in Prometheus text exposition format
+    /// (`share_kan_*` metric families; one scrape's worth of samples).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let c = &self.merged.counters;
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP share_kan_{name} {help}");
+            let _ = writeln!(out, "# TYPE share_kan_{name} counter");
+            let _ = writeln!(out, "share_kan_{name} {v}");
+        };
+        counter("requests_total", "Requests submitted (admitted or rejected).", c.requests);
+        counter("responses_total", "Responses sent (success or error).", c.responses);
+        counter("rejected_total", "Requests rejected by backpressure.", c.rejected);
+        counter("batches_total", "Batches executed.", c.batches);
+        counter("batched_items_total", "Live rows across executed batches.", c.batched_items);
+        counter("padded_slots_total", "Padding rows added by bucket rounding.", c.padded_slots);
+        let _ = writeln!(out, "# HELP share_kan_kernel_batches_total Batches per kernel tier.");
+        let _ = writeln!(out, "# TYPE share_kan_kernel_batches_total counter");
+        let _ = writeln!(
+            out,
+            "share_kan_kernel_batches_total{{kernel=\"scalar\"}} {}",
+            c.scalar_batches
+        );
+        let _ =
+            writeln!(out, "share_kan_kernel_batches_total{{kernel=\"simd\"}} {}", c.simd_batches);
+        let _ = writeln!(out, "# HELP share_kan_inflight Requests admitted but unanswered.");
+        let _ = writeln!(out, "# TYPE share_kan_inflight gauge");
+        let _ = writeln!(out, "share_kan_inflight {}", c.inflight());
+        let _ = writeln!(out, "# HELP share_kan_resident_bytes Resident serving bytes.");
+        let _ = writeln!(out, "# TYPE share_kan_resident_bytes gauge");
+        let _ = writeln!(out, "share_kan_resident_bytes {}", self.gauges.resident_bytes);
+        let _ = writeln!(out, "# HELP share_kan_heads Deployed heads.");
+        let _ = writeln!(out, "# TYPE share_kan_heads gauge");
+        let _ = writeln!(out, "share_kan_heads {}", self.gauges.heads);
+        if let Some(r) = self.gauges.l2_hit_rate {
+            let _ = writeln!(out, "# HELP share_kan_l2_hit_rate Simulated L2 hit rate.");
+            let _ = writeln!(out, "# TYPE share_kan_l2_hit_rate gauge");
+            let _ = writeln!(out, "share_kan_l2_hit_rate {r}");
+        }
+        let _ = writeln!(out, "# HELP share_kan_latency_us Latency quantiles by stage (µs).");
+        let _ = writeln!(out, "# TYPE share_kan_latency_us summary");
+        let stages: [(&str, &HistogramSnapshot); 4] = [
+            ("e2e", &self.merged.latency),
+            ("queue_wait", &self.merged.queue_wait),
+            ("batch_wait", &self.merged.batch_wait),
+            ("exec", &self.merged.exec_latency),
+        ];
+        for (label, h) in stages {
+            for (q, qs) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")] {
+                let _ = writeln!(
+                    out,
+                    "share_kan_latency_us{{stage=\"{label}\",quantile=\"{qs}\"}} {}",
+                    h.percentile_us(q)
+                );
+            }
+            let _ = writeln!(out, "share_kan_latency_us_sum{{stage=\"{label}\"}} {}", h.sum_us);
+            let _ = writeln!(out, "share_kan_latency_us_count{{stage=\"{label}\"}} {}", h.count);
+        }
+        let _ = writeln!(out, "# HELP share_kan_shard_responses_total Responses per shard.");
+        let _ = writeln!(out, "# TYPE share_kan_shard_responses_total counter");
+        for (i, m) in self.per_shard.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "share_kan_shard_responses_total{{shard=\"{i}\"}} {}",
+                m.counters.responses
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist_of(samples: &[u64]) -> HistogramSnapshot {
+        let mut h = HistogramSnapshot { buckets: vec![0; 30], ..Default::default() };
+        for &us in samples {
+            let b = (64 - us.max(1).leading_zeros() as usize - 1).min(29);
+            h.buckets[b] += 1;
+            h.count += 1;
+            h.sum_us += us;
+            h.max_us = h.max_us.max(us);
+        }
+        h
+    }
+
+    #[test]
+    fn interpolated_percentile_tracks_exact_reference() {
+        // 1024 samples exactly filling bucket [1024, 2048): the exact p-th
+        // percentile is a known rank, and linear interpolation must land
+        // within 1% of it instead of snapping to the 2048 boundary.
+        let samples: Vec<u64> = (1024..2048).collect();
+        let h = hist_of(&samples);
+        for p in [0.10, 0.50, 0.90, 0.99] {
+            let exact_rank = ((p * samples.len() as f64).ceil() as usize).max(1) - 1;
+            let exact = samples[exact_rank] as f64;
+            let got = h.percentile_us(p);
+            assert!(
+                (got - exact).abs() / exact < 0.01,
+                "p{p}: interpolated {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_clamps_to_max() {
+        let h = hist_of(&[10]);
+        assert_eq!(h.percentile_us(0.5), 10.0);
+        assert_eq!(h.percentile_us(0.99), 10.0);
+        assert_eq!(h.percentile(0.5), Duration::from_micros(10));
+    }
+
+    #[test]
+    fn empty_histogram_snapshot() {
+        let h = HistogramSnapshot::default();
+        assert_eq!(h.percentile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_add_is_exact() {
+        let mut a = hist_of(&[10, 100, 1000]);
+        let b = hist_of(&[50, 5000]);
+        a.add(&b);
+        assert_eq!(a.count, 5);
+        assert_eq!(a.sum_us, 6160);
+        assert_eq!(a.max_us, 5000);
+        let mut ca = CountersSnapshot { requests: 3, responses: 2, ..Default::default() };
+        let cb = CountersSnapshot { requests: 4, responses: 4, rejected: 1, ..Default::default() };
+        ca.add(&cb);
+        assert_eq!(ca.requests, 7);
+        assert_eq!(ca.inflight(), 7 - 6 - 1);
+    }
+
+    #[test]
+    fn gauges_l2_sentinel() {
+        let g = Gauges::new();
+        assert_eq!(g.snapshot().l2_hit_rate, None);
+        g.set_l2_hit_rate(0.93);
+        let s = g.snapshot();
+        assert!((s.l2_hit_rate.unwrap() - 0.93).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_json_has_top_level_schema_keys() {
+        let snap = StatsSnapshot {
+            backend: "native".into(),
+            policy: "single".into(),
+            kernel: "scalar".into(),
+            num_shards: 1,
+            per_shard: vec![MetricsSnapshot::default()],
+            ..Default::default()
+        };
+        let j = snap.to_json();
+        for key in
+            ["backend", "kernel", "shards", "counters", "latency_us", "stages", "gauges",
+             "per_shard", "trace", "kernel_batches"]
+        {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        let text = crate::util::json::to_string(&j);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("backend").and_then(|b| b.as_str()), Some("native"));
+    }
+
+    #[test]
+    fn prometheus_rendering_contains_families() {
+        let snap = StatsSnapshot::default();
+        let text = snap.to_prometheus();
+        for family in [
+            "share_kan_requests_total",
+            "share_kan_responses_total",
+            "share_kan_latency_us{stage=\"e2e\",quantile=\"0.99\"}",
+            "share_kan_kernel_batches_total{kernel=\"simd\"}",
+            "share_kan_resident_bytes",
+        ] {
+            assert!(text.contains(family), "missing {family} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,424 @@
+//! Per-request span tracing: a lock-free fixed-capacity ring of
+//! stage-stamped events.
+//!
+//! The serving pipeline stamps a sampled request at each stage it crosses
+//! (enqueue → route → batch-close → kernel-enter → kernel-exit → reply);
+//! the [`Tracer`] stores each stamp as one fixed-size slot of atomics in a
+//! preallocated ring, so recording is wait-free and allocation-free from
+//! any number of shard executor threads.  When sampling is off the entire
+//! hot-path cost is ONE relaxed atomic load per request
+//! ([`Tracer::should_sample`]); nothing else is touched.
+//!
+//! Readers ([`Tracer::snapshot`]) reconstruct events with a seqlock-style
+//! per-slot protocol: writers stamp the slot's sequence odd while the
+//! payload is in flight and even (unique per ring lap) when complete, so a
+//! torn read — a slot overwritten mid-snapshot — is detected and skipped
+//! rather than surfaced as a garbled event.  Tracing is diagnostics, not
+//! accounting: a snapshot is a best-effort consistent *sample*, while the
+//! metrics registry ([`super::registry`]) remains the exact source of
+//! counts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Pipeline stage a trace event stamps, in request order.
+///
+/// Consecutive stage timestamps of one request partition its end-to-end
+/// latency exactly: queue-wait (`Enqueue→Route`), batch-wait
+/// (`Route→BatchClose`), dispatch (`BatchClose→KernelEnter`), execution
+/// (`KernelEnter→KernelExit`) and reply fan-out (`KernelExit→Reply`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Request admitted into the bounded submission queue (`try_submit`).
+    Enqueue = 0,
+    /// Executor routed the request into its head's pending queue.
+    Route = 1,
+    /// Dynamic batcher closed the batch containing the request.
+    BatchClose = 2,
+    /// Backend batch execution started (`execute_into` entry).
+    KernelEnter = 3,
+    /// Backend batch execution returned.
+    KernelExit = 4,
+    /// Response sent on the per-request channel (success or error).
+    Reply = 5,
+}
+
+/// Number of [`Stage`] variants (a complete span has one stamp per stage).
+pub const STAGE_COUNT: usize = 6;
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Enqueue,
+        Stage::Route,
+        Stage::BatchClose,
+        Stage::KernelEnter,
+        Stage::KernelExit,
+        Stage::Reply,
+    ];
+
+    /// Stable lowercase label for JSON / Prometheus exposition.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Enqueue => "enqueue",
+            Stage::Route => "route",
+            Stage::BatchClose => "batch_close",
+            Stage::KernelEnter => "kernel_enter",
+            Stage::KernelExit => "kernel_exit",
+            Stage::Reply => "reply",
+        }
+    }
+
+    /// Pipeline position (0-based) of this stage.
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Stage::code`]; `None` for out-of-range codes (e.g. a
+    /// torn slot that slipped past sequence validation).
+    pub fn from_code(code: u8) -> Option<Stage> {
+        Stage::ALL.get(code as usize).copied()
+    }
+}
+
+/// One decoded trace event: request `id` crossed `stage` on `shard` at
+/// `t_us` microseconds after the tracer's epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Id of the traced request (pool-global: ids are unique per client
+    /// handle and the pool routes one request to exactly one shard).
+    pub request_id: u64,
+    /// Pipeline stage crossed.
+    pub stage: Stage,
+    /// Executor shard that stamped the event (0 for a single coordinator;
+    /// client-side `Enqueue` stamps carry the routed shard).
+    pub shard: u32,
+    /// Microseconds since the tracer's epoch ([`Tracer::new`] time).
+    pub t_us: u64,
+}
+
+/// Tracing knobs carried by `PoolConfig` / `DeploymentSpec`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Record 1-in-N requests (`request id % N == 0`); 0 disables tracing.
+    pub sample_every: u64,
+    /// Ring capacity in events; older events are overwritten.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { sample_every: 0, capacity: 4096 }
+    }
+}
+
+/// One ring slot: a seqlock-protected fixed-size event record.
+///
+/// `seq` is 0 while never written, `2*ticket + 1` while a writer owns the
+/// slot, `2*ticket + 2` once the payload is complete — unique per ring lap,
+/// so a reader that observes the same even value before and after reading
+/// the payload knows the payload is whole.
+struct Slot {
+    seq: AtomicU64,
+    request_id: AtomicU64,
+    t_us: AtomicU64,
+    /// `stage as u64 | (shard as u64) << 8`
+    meta: AtomicU64,
+}
+
+/// Lock-free fixed-capacity ring buffer of stage-stamped trace events.
+///
+/// Shared (`Arc`) between every client handle and executor shard of a
+/// deployment; all writers interleave into one ring so a snapshot yields a
+/// globally ordered event stream.  See the module docs for the protocol.
+pub struct Tracer {
+    epoch: Instant,
+    sample_every: AtomicU64,
+    /// next write ticket; slot = ticket % capacity
+    cursor: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl Tracer {
+    /// Ring of `capacity` events (rounded up to at least 1) sampling 1-in-
+    /// `sample_every` requests (0 = tracing off).
+    pub fn new(capacity: usize, sample_every: u64) -> Tracer {
+        let cap = capacity.max(1);
+        Tracer {
+            epoch: Instant::now(),
+            sample_every: AtomicU64::new(sample_every),
+            cursor: AtomicU64::new(0),
+            slots: (0..cap)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    request_id: AtomicU64::new(0),
+                    t_us: AtomicU64::new(0),
+                    meta: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    /// A minimal always-off tracer (the default when no tracing knobs are
+    /// set): one slot, sampling disabled, so it costs almost nothing.
+    pub fn disabled() -> Arc<Tracer> {
+        Arc::new(Tracer::new(1, 0))
+    }
+
+    /// Build from [`TraceConfig`].
+    pub fn from_config(cfg: TraceConfig) -> Arc<Tracer> {
+        Arc::new(Tracer::new(cfg.capacity, cfg.sample_every))
+    }
+
+    /// Current sampling period (0 = off).
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every.load(Ordering::Relaxed)
+    }
+
+    /// Change the sampling period at runtime (0 = off).
+    pub fn set_sample_every(&self, n: u64) {
+        self.sample_every.store(n, Ordering::Relaxed);
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events written since construction (≥ capacity ⇒ the ring has
+    /// wrapped and older events were overwritten).
+    pub fn events_written(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Whether request `id` is sampled under the current period.  This is
+    /// the ONLY call on the un-traced hot path: one relaxed load, no
+    /// allocation, no writes.
+    #[inline]
+    pub fn should_sample(&self, id: u64) -> bool {
+        let n = self.sample_every.load(Ordering::Relaxed);
+        n != 0 && id % n == 0
+    }
+
+    /// Microseconds since this tracer's epoch (the shared timebase all
+    /// events are stamped in).
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one event (wait-free, allocation-free).  Callers gate on the
+    /// request's sampled flag; `record` itself always writes.
+    pub fn record(&self, request_id: u64, stage: Stage, shard: u32) {
+        let t_us = self.now_us();
+        let ticket = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        // seqlock write: odd while in flight, even (unique per lap) when done
+        slot.seq.store(2 * ticket + 1, Ordering::Release);
+        slot.request_id.store(request_id, Ordering::Relaxed);
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.meta.store(stage.code() as u64 | ((shard as u64) << 8), Ordering::Relaxed);
+        slot.seq.store(2 * ticket + 2, Ordering::Release);
+    }
+
+    /// Decode every currently valid slot, sorted by timestamp (ties broken
+    /// by request id then stage order).  Slots being overwritten during the
+    /// scan are skipped, not torn — see the module docs.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue; // never written, or a writer is mid-flight
+            }
+            let request_id = slot.request_id.load(Ordering::Relaxed);
+            let t_us = slot.t_us.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            // re-validate: unchanged even seq ⇒ the payload reads were whole
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue;
+            }
+            let Some(stage) = Stage::from_code((meta & 0xff) as u8) else {
+                continue;
+            };
+            out.push(TraceEvent { request_id, stage, shard: (meta >> 8) as u32, t_us });
+        }
+        out.sort_by_key(|e| (e.t_us, e.request_id, e.stage.code()));
+        out
+    }
+
+    /// Snapshot the ring and assemble per-request spans (sorted by first
+    /// stamp time).
+    pub fn spans(&self) -> Vec<RequestSpan> {
+        assemble_spans(&self.snapshot())
+    }
+}
+
+/// One stage crossing inside a [`RequestSpan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageStamp {
+    /// Stage crossed.
+    pub stage: Stage,
+    /// Microseconds since the tracer epoch.
+    pub t_us: u64,
+    /// Shard that stamped it.
+    pub shard: u32,
+}
+
+/// All recovered stage stamps of one traced request, in pipeline order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Traced request id.
+    pub id: u64,
+    /// Stage stamps sorted by pipeline order (a wrapped ring may have
+    /// dropped leading stamps, so this can be a suffix of the pipeline).
+    pub stages: Vec<StageStamp>,
+}
+
+impl RequestSpan {
+    /// Whether every pipeline stage was recovered (nothing overwritten).
+    pub fn is_complete(&self) -> bool {
+        self.stages.len() == STAGE_COUNT
+            && self.stages.iter().zip(Stage::ALL).all(|(s, want)| s.stage == want)
+    }
+
+    /// Stamp for one stage, if recovered.
+    pub fn stamp(&self, stage: Stage) -> Option<&StageStamp> {
+        self.stages.iter().find(|s| s.stage == stage)
+    }
+
+    /// End-to-end span duration (`Enqueue` → `Reply`), when both ends were
+    /// recovered.
+    pub fn total_us(&self) -> Option<u64> {
+        let first = self.stamp(Stage::Enqueue)?;
+        let last = self.stamp(Stage::Reply)?;
+        Some(last.t_us.saturating_sub(first.t_us))
+    }
+
+    /// Durations between consecutive recovered stamps, labeled
+    /// `"<from>→<to>"`.  For a complete span these sum EXACTLY to
+    /// [`RequestSpan::total_us`] — the partition property the stats smoke
+    /// test pins.
+    pub fn stage_durations_us(&self) -> Vec<(String, u64)> {
+        self.stages
+            .windows(2)
+            .map(|w| {
+                (
+                    format!("{}→{}", w[0].stage.name(), w[1].stage.name()),
+                    w[1].t_us.saturating_sub(w[0].t_us),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Group a snapshot's events into per-request spans, sorted by each span's
+/// first stamp time.  Duplicate stamps for the same (request, stage) —
+/// possible only if ids wrap the ring twice — keep the earliest.
+pub fn assemble_spans(events: &[TraceEvent]) -> Vec<RequestSpan> {
+    let mut by_id: std::collections::BTreeMap<u64, Vec<StageStamp>> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        let stamps = by_id.entry(e.request_id).or_default();
+        if stamps.iter().all(|s| s.stage != e.stage) {
+            stamps.push(StageStamp { stage: e.stage, t_us: e.t_us, shard: e.shard });
+        }
+    }
+    let mut spans: Vec<RequestSpan> = by_id
+        .into_iter()
+        .map(|(id, mut stages)| {
+            stages.sort_by_key(|s| s.stage.code());
+            RequestSpan { id, stages }
+        })
+        .collect();
+    spans.sort_by_key(|s| s.stages.first().map(|st| st.t_us).unwrap_or(0));
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_codes_round_trip() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.code() as usize, i);
+            assert_eq!(Stage::from_code(s.code()), Some(*s));
+        }
+        assert_eq!(Stage::from_code(STAGE_COUNT as u8), None);
+    }
+
+    #[test]
+    fn disabled_tracer_samples_nothing() {
+        let t = Tracer::disabled();
+        for id in 0..100 {
+            assert!(!t.should_sample(id));
+        }
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_in_id() {
+        let t = Tracer::new(16, 4);
+        for id in 0..32u64 {
+            assert_eq!(t.should_sample(id), id % 4 == 0, "id {id}");
+        }
+        t.set_sample_every(1);
+        assert!(t.should_sample(7));
+        t.set_sample_every(0);
+        assert!(!t.should_sample(0));
+    }
+
+    #[test]
+    fn record_and_snapshot_round_trip() {
+        let t = Tracer::new(64, 1);
+        t.record(3, Stage::Enqueue, 1);
+        t.record(3, Stage::Route, 1);
+        t.record(3, Stage::Reply, 1);
+        let events = t.snapshot();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].stage, Stage::Enqueue);
+        assert!(events.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        let spans = assemble_spans(&events);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].id, 3);
+        assert_eq!(spans[0].stages.len(), 3);
+    }
+
+    #[test]
+    fn span_durations_partition_total() {
+        let events = [
+            TraceEvent { request_id: 9, stage: Stage::Enqueue, shard: 0, t_us: 10 },
+            TraceEvent { request_id: 9, stage: Stage::Route, shard: 2, t_us: 25 },
+            TraceEvent { request_id: 9, stage: Stage::BatchClose, shard: 2, t_us: 40 },
+            TraceEvent { request_id: 9, stage: Stage::KernelEnter, shard: 2, t_us: 41 },
+            TraceEvent { request_id: 9, stage: Stage::KernelExit, shard: 2, t_us: 90 },
+            TraceEvent { request_id: 9, stage: Stage::Reply, shard: 2, t_us: 95 },
+        ];
+        let spans = assemble_spans(&events);
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].is_complete());
+        assert_eq!(spans[0].total_us(), Some(85));
+        let durations = spans[0].stage_durations_us();
+        assert_eq!(durations.len(), STAGE_COUNT - 1);
+        let sum: u64 = durations.iter().map(|(_, d)| *d).sum();
+        assert_eq!(sum, 85);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_events() {
+        let t = Tracer::new(8, 1);
+        for id in 0..20u64 {
+            t.record(id, Stage::Enqueue, 0);
+        }
+        assert_eq!(t.events_written(), 20);
+        let events = t.snapshot();
+        assert_eq!(events.len(), 8);
+        // only the newest capacity-many ids survive the wrap
+        for e in &events {
+            assert!(e.request_id >= 12, "stale id {} survived wrap", e.request_id);
+        }
+    }
+}

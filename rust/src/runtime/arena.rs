@@ -59,6 +59,23 @@ pub struct ArenaStats {
     pub batches: u64,
     /// Total rows executed (bucket slots, padding included).
     pub rows: u64,
+    /// Batches dispatched to the scalar kernel tier.
+    pub scalar_batches: u64,
+    /// Batches dispatched to a SIMD kernel tier (AVX2+FMA / NEON).
+    pub simd_batches: u64,
+}
+
+impl ArenaStats {
+    /// Count one executed batch under the tier that dispatched it.
+    fn count_batch(&mut self, kind: KernelKind, bucket: usize) {
+        self.batches += 1;
+        self.rows += bucket as u64;
+        if kind.is_simd() {
+            self.simd_batches += 1;
+        } else {
+            self.scalar_batches += 1;
+        }
+    }
 }
 
 /// Planner-assigned byte ranges for one VQ layer's tables.
@@ -332,6 +349,10 @@ impl Backend for ArenaBackend {
         &self.spec
     }
 
+    fn kernel_kind(&self) -> Option<KernelKind> {
+        Some(self.kernel)
+    }
+
     fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()> {
         weights.validate(&self.spec.kan, self.spec.vq.codebook_size)?;
         let head = Self::build_head(&self.spec, weights)?;
@@ -433,8 +454,7 @@ impl Backend for ArenaBackend {
 
         out.clear();
         out.extend_from_slice(&pong[..bucket * d_out]);
-        self.stats.batches += 1;
-        self.stats.rows += bucket as u64;
+        self.stats.count_batch(kind, bucket);
         Ok(())
     }
 }
@@ -749,6 +769,10 @@ impl Backend for FamilyArenaBackend {
         &self.spec
     }
 
+    fn kernel_kind(&self) -> Option<KernelKind> {
+        Some(self.private.kernel())
+    }
+
     fn register_head(&mut self, name: &str, weights: &HeadWeights) -> Result<()> {
         weights.validate(&self.spec.kan, self.spec.vq.codebook_size)?;
         match weights {
@@ -818,8 +842,7 @@ impl Backend for FamilyArenaBackend {
                 // dense/MLP heads (and unknown names, which error there)
                 // are served from the private per-head arenas
                 self.private.execute_into(head, x, bucket, out)?;
-                self.stats.batches += 1;
-                self.stats.rows += bucket as u64;
+                self.stats.count_batch(self.private.kernel(), bucket);
                 return Ok(());
             }
         };
@@ -885,8 +908,7 @@ impl Backend for FamilyArenaBackend {
 
         out.clear();
         out.extend_from_slice(&pong[..bucket * d_out]);
-        self.stats.batches += 1;
-        self.stats.rows += bucket as u64;
+        self.stats.count_batch(kind, bucket);
         Ok(())
     }
 }
@@ -931,6 +953,9 @@ mod tests {
         }
         assert_eq!(b.stats.batches, 1);
         assert_eq!(b.stats.rows, 4);
+        // every batch lands in exactly one dispatch-tier counter
+        assert_eq!(b.stats.scalar_batches + b.stats.simd_batches, 1);
+        assert_eq!(b.kernel_kind(), Some(b.kernel()));
     }
 
     #[test]

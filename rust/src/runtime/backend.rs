@@ -17,7 +17,7 @@
 
 use anyhow::Result;
 
-use super::kernels::KernelMode;
+use super::kernels::{KernelKind, KernelMode};
 use crate::coordinator::heads::HeadWeights;
 use crate::kan::spec::{KanSpec, VqSpec};
 
@@ -106,6 +106,14 @@ pub trait Backend {
 
     /// The shape/batching contract this backend serves under.
     fn spec(&self) -> &BackendSpec;
+
+    /// The kernel tier this backend resolved at construction, when it has
+    /// one (the arena backends report their dispatched tier; backends with
+    /// no tier concept — native reference, PJRT — return `None` and the
+    /// coordinator's dispatch counters bucket them as scalar).
+    fn kernel_kind(&self) -> Option<KernelKind> {
+        None
+    }
 
     /// Register (or replace) a head: validate shapes against the spec and
     /// perform any per-head preparation (weight upload, executable warm-up).

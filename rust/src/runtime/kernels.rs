@@ -159,6 +159,13 @@ impl KernelKind {
             KernelKind::Neon => "neon",
         }
     }
+
+    /// Whether this is a SIMD tier (anything but the scalar reference) —
+    /// the split the coordinator's kernel-dispatch counters report
+    /// (`Counters::{scalar_batches, simd_batches}`).
+    pub fn is_simd(self) -> bool {
+        !matches!(self, KernelKind::Scalar)
+    }
 }
 
 impl std::fmt::Display for KernelKind {

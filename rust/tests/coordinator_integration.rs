@@ -18,6 +18,7 @@ fn native_cfg(policy: BatchPolicy, queue_capacity: usize) -> CoordinatorConfig {
         backend: BackendConfig::Native(BackendSpec::default()),
         policy,
         queue_capacity,
+        ..Default::default()
     }
 }
 
@@ -32,6 +33,7 @@ fn misconfigured_buckets_fail_at_startup_not_at_request_time() {
             backend: BackendConfig::Native(spec),
             policy: BatchPolicy::default(),
             queue_capacity: 16,
+            ..Default::default()
         });
         let err = format!("{:#}", r.err().expect("startup must fail"));
         assert!(err.contains("batch_buckets"), "buckets {buckets:?}: {err}");
@@ -297,6 +299,7 @@ fn failure_injection_missing_artifacts_dir() {
         },
         policy: BatchPolicy::default(),
         queue_capacity: 4,
+        ..Default::default()
     });
     assert!(r.is_err(), "startup must fail cleanly without artifacts");
 }
@@ -322,6 +325,7 @@ fn backpressure_rejects_when_queue_full() {
         backend: BackendConfig::Native(spec),
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
         queue_capacity: 4,
+        ..Default::default()
     })
     .unwrap();
     let c = handle.client.clone();

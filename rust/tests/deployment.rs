@@ -5,7 +5,6 @@
 //! typed client errors.
 
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
 
 use share_kan::coordinator::{
     BackendKind, ClientError, DeploymentSpec, HeadWeights, Placement, TcpClient, TcpServer,
@@ -116,12 +115,8 @@ fn builder_deployment_serves_and_reports() {
     // per-shard breakdown sums to the merged view
     let pm = dep.metrics();
     assert_eq!(pm.per_shard.len(), 2);
-    let per_shard_sum: u64 = pm
-        .per_shard
-        .iter()
-        .map(|m| m.counters.responses.load(Ordering::Relaxed))
-        .sum();
-    assert_eq!(per_shard_sum, pm.merged.counters.responses.load(Ordering::Relaxed));
+    let per_shard_sum: u64 = pm.per_shard.iter().map(|m| m.counters.responses).sum();
+    assert_eq!(per_shard_sum, pm.merged.counters.responses);
     assert_eq!(per_shard_sum, heads.len() as u64);
     dep.shutdown();
 }

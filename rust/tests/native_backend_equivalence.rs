@@ -31,6 +31,7 @@ fn assert_served_matches_reference(vq_ck: &Checkpoint, batch_sizes: &[usize]) {
             backend: BackendConfig::Native(spec.clone()),
             policy: BatchPolicy { max_batch: n, max_wait: Duration::from_millis(200) },
             queue_capacity: 64,
+            ..Default::default()
         })
         .unwrap();
         let c = handle.client.clone();
@@ -92,6 +93,7 @@ fn served_scores_match_manual_pli_eval() {
         backend: BackendConfig::Native(BackendSpec::for_head(&head)),
         policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
         queue_capacity: 8,
+        ..Default::default()
     })
     .unwrap();
     let c = handle.client.clone();

@@ -1,0 +1,232 @@
+//! End-to-end stats-surface integration: the TCP `STATS` verb's JSON
+//! schema, counter monotonicity across scrapes, traced-span recovery with
+//! the exact stage-partition property, equivalence (tracing must never
+//! change scores), deployment gauges, and the Prometheus exposition.
+
+use share_kan::coordinator::{
+    BackendKind, DeploymentSpec, HeadWeights, Placement, TcpClient, TcpServer,
+};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::spec::KanSpec;
+use share_kan::util::json::Json;
+use share_kan::vq::universal::compress_family;
+use share_kan::vq::Precision;
+
+const SPEC: KanSpec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
+
+fn family_heads(n: usize, seed: u64) -> Vec<(String, HeadWeights)> {
+    let cks: Vec<Checkpoint> =
+        (0..n).map(|i| synthetic_dense(&SPEC, seed + i as u64)).collect();
+    let refs: Vec<&Checkpoint> = cks.iter().collect();
+    compress_family(&refs, &SPEC, 8, Precision::Int8, seed)
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            (format!("h{i}"), HeadWeights::from_checkpoint(&c.to_checkpoint()).unwrap())
+        })
+        .collect()
+}
+
+fn traced_family_spec(heads: Vec<(String, HeadWeights)>) -> DeploymentSpec {
+    DeploymentSpec::new(BackendKind::FamilyArena)
+        .with_shards(2)
+        .with_placement(Placement::Hash)
+        .with_trace_sample(1)
+        .family("fam", heads)
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing numeric key '{key}' in {j:?}"))
+}
+
+#[test]
+fn tcp_stats_scrape_validates_schema_and_monotone_counters() {
+    let heads = family_heads(4, 500);
+    let names: Vec<String> = heads.iter().map(|(n, _)| n.clone()).collect();
+    let dep = traced_family_spec(heads).deploy().unwrap();
+    let server = TcpServer::start_pool_with_stats(
+        dep.client().clone(), dep.stats_handle(), "127.0.0.1:0")
+        .unwrap();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+
+    let mut rng = Pcg32::seeded(11);
+    for i in 0..40 {
+        let scores = client
+            .infer(&names[i % names.len()], &rng.normal_vec(SPEC.d_in, 0.0, 1.0))
+            .unwrap();
+        assert_eq!(scores.len(), SPEC.d_out);
+    }
+
+    let stats = client.stats().unwrap();
+    // identity labels
+    assert_eq!(stats.get("backend").and_then(|j| j.as_str()), Some("family"));
+    assert_eq!(stats.get("policy").and_then(|j| j.as_str()), Some("hash"));
+    assert!(stats.get("kernel").and_then(|j| j.as_str()).is_some());
+    assert_eq!(num(&stats, "shards") as usize, 2);
+    // counters: every request answered, none rejected
+    let counters = stats.get("counters").expect("counters object");
+    assert_eq!(num(counters, "requests") as u64, 40);
+    assert_eq!(num(counters, "responses") as u64, 40);
+    assert_eq!(num(counters, "rejected") as u64, 0);
+    // kernel dispatch accounted per batch
+    let kb = stats.get("kernel_batches").expect("kernel_batches object");
+    assert_eq!(
+        (num(kb, "scalar") + num(kb, "simd")) as u64,
+        num(counters, "batches") as u64
+    );
+    // end-to-end and per-stage latency digests
+    let latency = stats.get("latency_us").expect("latency_us object");
+    assert_eq!(num(latency, "count") as u64, 40);
+    let stages = stats.get("stages").expect("stages object");
+    for key in ["queue_wait_us", "batch_wait_us", "exec_us"] {
+        let digest = stages.get(key).unwrap_or_else(|| panic!("missing stages.{key}"));
+        assert!(num(digest, "count") > 0.0, "stages.{key} recorded nothing");
+    }
+    // per-shard breakdown folds to the merged counters
+    let per_shard = stats.get("per_shard").and_then(|j| j.as_arr()).expect("per_shard");
+    assert_eq!(per_shard.len(), 2);
+    let shard_sum: f64 = per_shard.iter().map(|s| num(s, "responses")).sum();
+    assert_eq!(shard_sum as u64, 40);
+    // trace section is live (sample_every=1 records every request)
+    let trace = stats.get("trace").expect("trace object");
+    assert_eq!(num(trace, "sample_every") as u64, 1);
+    let events1 = num(trace, "events") as u64;
+    assert!(events1 > 0, "tracing on but no events recorded");
+    assert!(trace.get("spans").and_then(|j| j.as_arr()).is_some());
+
+    // counters are monotone across scrapes
+    for _ in 0..10 {
+        client.infer(&names[0], &rng.normal_vec(SPEC.d_in, 0.0, 1.0)).unwrap();
+    }
+    let stats2 = client.stats().unwrap();
+    assert_eq!(num(stats2.get("counters").unwrap(), "responses") as u64, 50);
+    assert!(num(stats2.get("trace").unwrap(), "events") as u64 >= events1);
+
+    server.shutdown();
+    dep.shutdown();
+}
+
+#[test]
+fn traced_spans_partition_end_to_end_latency() {
+    let heads = family_heads(2, 700);
+    let names: Vec<String> = heads.iter().map(|(n, _)| n.clone()).collect();
+    let dep = traced_family_spec(heads).deploy().unwrap();
+    let mut rng = Pcg32::seeded(3);
+    for i in 0..20 {
+        dep.client()
+            .infer(&names[i % names.len()], rng.normal_vec(SPEC.d_in, 0.0, 1.0))
+            .unwrap();
+    }
+    let snap = dep.stats();
+    let complete: Vec<_> =
+        snap.trace.spans.iter().filter(|s| s.is_complete()).collect();
+    assert!(!complete.is_empty(), "no complete span among {:?}", snap.trace.spans);
+    for span in &complete {
+        // stamps in pipeline order never go backwards in time
+        assert!(span.stages.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        // the stage durations partition the end-to-end span EXACTLY
+        let total = span.total_us().expect("complete span has a total");
+        let sum: u64 = span.stage_durations_us().iter().map(|(_, d)| *d).sum();
+        assert_eq!(sum, total, "stage durations must sum to the span total");
+        // and the span total is consistent with the latency histogram's
+        // observed maximum (the 5%-agreement acceptance bound, plus slack
+        // for the histogram recording just before the Reply stamp)
+        let bound = snap.merged.latency.max_us as f64 * 1.05 + 2_000.0;
+        assert!(
+            (total as f64) <= bound,
+            "span total {total}µs exceeds latency max bound {bound}µs"
+        );
+    }
+    dep.shutdown();
+}
+
+#[test]
+fn tracing_does_not_change_scores() {
+    let seed = 900;
+    let mut rng = Pcg32::seeded(17);
+    let inputs: Vec<Vec<f32>> =
+        (0..16).map(|_| rng.normal_vec(SPEC.d_in, 0.0, 1.0)).collect();
+
+    let run = |traced: bool| -> Vec<Vec<f32>> {
+        let heads = family_heads(3, seed);
+        let names: Vec<String> = heads.iter().map(|(n, _)| n.clone()).collect();
+        let mut spec = DeploymentSpec::new(BackendKind::FamilyArena)
+            .with_shards(2)
+            .family("fam", heads);
+        if traced {
+            spec = spec.with_trace_sample(1);
+        }
+        let dep = spec.deploy().unwrap();
+        let out = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                dep.client().infer(&names[i % names.len()], x.clone()).unwrap().scores
+            })
+            .collect();
+        dep.shutdown();
+        out
+    };
+
+    let untraced = run(false);
+    let traced = run(true);
+    // bitwise: tracing stamps timestamps, it must never touch the math
+    assert_eq!(untraced, traced);
+}
+
+#[test]
+fn gauges_track_deployment_residency_and_memsim() {
+    let heads = family_heads(3, 1100);
+    let n_heads = heads.len() as u64;
+    let dep = traced_family_spec(heads).with_memsim_gauge(true).deploy().unwrap();
+    let report = dep.report();
+    let g = dep.stats().gauges;
+    assert_eq!(g.resident_bytes, report.resident_bytes as u64);
+    assert_eq!(g.shards_occupied, report.shards_occupied as u64);
+    assert_eq!(g.heads, n_heads);
+    let l2 = g.l2_hit_rate.expect("memsim gauge enabled on a family deployment");
+    assert!((0.0..=1.0).contains(&l2), "hit rate {l2} out of range");
+
+    // removing a head updates the gauges
+    let removed = {
+        let report = dep.report();
+        report.placements[0].head.clone()
+    };
+    let mut dep = dep;
+    assert!(dep.remove_head(&removed).unwrap());
+    assert_eq!(dep.stats().gauges.heads, n_heads - 1);
+    dep.shutdown();
+}
+
+#[test]
+fn prometheus_exposition_contains_core_families() {
+    let heads = family_heads(2, 1300);
+    let names: Vec<String> = heads.iter().map(|(n, _)| n.clone()).collect();
+    let dep = traced_family_spec(heads).deploy().unwrap();
+    let server = TcpServer::start_pool_with_stats(
+        dep.client().clone(), dep.stats_handle(), "127.0.0.1:0")
+        .unwrap();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let features = vec![0.25f32; SPEC.d_in];
+    for name in &names {
+        client.infer(name, &features).unwrap();
+    }
+    let text = client.stats_prometheus().unwrap();
+    for needle in [
+        "share_kan_requests_total",
+        "share_kan_responses_total",
+        "share_kan_kernel_batches_total",
+        "share_kan_latency_us",
+        "share_kan_resident_bytes",
+        "stage=",
+        "quantile=",
+    ] {
+        assert!(text.contains(needle), "prometheus text missing '{needle}':\n{text}");
+    }
+    server.shutdown();
+    dep.shutdown();
+}

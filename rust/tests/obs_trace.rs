@@ -1,0 +1,105 @@
+//! Trace-ring behavior under adversarial conditions: wraparound with
+//! newest-event retention, concurrent writers from every shard, sampling
+//! determinism, and the zero-allocation guarantee of the hot path (both
+//! with sampling off and while actually recording).
+
+mod common;
+
+#[global_allocator]
+static ALLOCATOR: common::CountingAlloc = common::CountingAlloc;
+
+use std::hint::black_box;
+
+use share_kan::obs::{assemble_spans, Stage, Tracer, STAGE_COUNT};
+
+#[test]
+fn wraparound_keeps_exactly_the_newest_events() {
+    let t = Tracer::new(8, 1);
+    for id in 0..100u64 {
+        t.record(id, Stage::Enqueue, 0);
+    }
+    assert_eq!(t.events_written(), 100);
+    let events = t.snapshot();
+    assert_eq!(events.len(), 8, "ring must hold exactly its capacity");
+    // single-threaded writes: the survivors are precisely the last lap
+    let mut ids: Vec<u64> = events.iter().map(|e| e.request_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (92..100).collect::<Vec<u64>>());
+}
+
+#[test]
+fn concurrent_writers_from_all_shards_produce_untorn_complete_spans() {
+    const SHARDS: u32 = 8;
+    const IDS_PER_SHARD: u64 = 20;
+    // capacity > total events: nothing is overwritten, so every span must
+    // be recovered complete even though writers interleave freely
+    let t = Tracer::new((SHARDS as usize) * (IDS_PER_SHARD as usize) * STAGE_COUNT, 1);
+    std::thread::scope(|s| {
+        for shard in 0..SHARDS {
+            let t = &t;
+            s.spawn(move || {
+                for n in 0..IDS_PER_SHARD {
+                    let id = ((shard as u64) << 48) | n;
+                    for stage in Stage::ALL {
+                        t.record(id, stage, shard);
+                    }
+                }
+            });
+        }
+    });
+    let expected = (SHARDS as u64) * IDS_PER_SHARD * STAGE_COUNT as u64;
+    assert_eq!(t.events_written(), expected);
+    let events = t.snapshot();
+    assert_eq!(events.len(), expected as usize, "no event lost or torn");
+    let spans = assemble_spans(&events);
+    assert_eq!(spans.len(), (SHARDS as u64 * IDS_PER_SHARD) as usize);
+    for span in &spans {
+        assert!(span.is_complete(), "span {:#x} missing stages", span.id);
+        // every stamp of one request came from the one shard that owns it
+        let shard = (span.id >> 48) as u32;
+        assert!(span.stages.iter().all(|s| s.shard == shard));
+        // consecutive stage durations partition the total exactly
+        let total = span.total_us().unwrap();
+        let durs = span.stage_durations_us();
+        assert_eq!(durs.iter().map(|(_, d)| *d).sum::<u64>(), total);
+    }
+}
+
+#[test]
+fn sampling_is_deterministic_and_runtime_tunable() {
+    let t = Tracer::new(16, 4);
+    for id in 0..64u64 {
+        assert_eq!(t.should_sample(id), id % 4 == 0, "id {id}");
+    }
+    // 0 disables sampling outright
+    t.set_sample_every(0);
+    assert!((0..64u64).all(|id| !t.should_sample(id)));
+    // and 1 samples everything
+    t.set_sample_every(1);
+    assert!((0..64u64).all(|id| t.should_sample(id)));
+    // a disabled tracer never samples any id
+    let off = Tracer::disabled();
+    assert!((0..1024u64).all(|id| !off.should_sample(id)));
+}
+
+#[test]
+fn hot_path_allocates_nothing() {
+    // sampling off: the entire per-request cost is one relaxed load
+    let off = Tracer::disabled();
+    let allocs = common::count_allocs(|| {
+        for id in 0..10_000u64 {
+            black_box(off.should_sample(black_box(id)));
+        }
+    });
+    assert_eq!(allocs, 0, "should_sample allocated {allocs} times with sampling off");
+
+    // sampling on: record() writes preallocated slots only
+    let on = Tracer::new(64, 1);
+    let allocs = common::count_allocs(|| {
+        for id in 0..1_000u64 {
+            on.record(black_box(id), Stage::KernelEnter, 3);
+        }
+    });
+    assert_eq!(allocs, 0, "record allocated {allocs} times on the traced path");
+    assert_eq!(on.events_written(), 1_000);
+}

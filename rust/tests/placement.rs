@@ -89,6 +89,7 @@ fn hash_placement_is_bitwise_identical_to_fnv1a() {
         queue_capacity: 16,
         num_shards: 3,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     for name in ["task0", "some-head", "x"] {
@@ -116,6 +117,7 @@ fn all_policies_match_single_coordinator_bitwise() {
             backend: BackendConfig::FamilyArena(backend_spec(mode)),
             policy,
             queue_capacity: 256,
+            ..Default::default()
         })
         .unwrap();
         for (name, head) in &heads {
@@ -128,6 +130,7 @@ fn all_policies_match_single_coordinator_bitwise() {
                 queue_capacity: 256,
                 num_shards: 4,
                 placement,
+                ..Default::default()
             })
             .unwrap();
             pool.client.register_family("fam", &heads).unwrap();
@@ -227,6 +230,7 @@ fn remove_and_readd_places_afresh_under_new_policy_semantics() {
         queue_capacity: 64,
         num_shards: 4,
         placement: Placement::FamilyCoLocate { heads_per_shard: 4 },
+        ..Default::default()
     })
     .unwrap();
     let c = &pool.client;

@@ -44,6 +44,7 @@ fn pool_matches_single_executor_bitwise() {
         backend: BackendConfig::Arena(backend_spec()),
         policy,
         queue_capacity: 256,
+        ..Default::default()
     })
     .unwrap();
     let pool = ExecutorPool::start(PoolConfig {
@@ -52,6 +53,7 @@ fn pool_matches_single_executor_bitwise() {
         queue_capacity: 256,
         num_shards: 3,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     for (name, head) in &heads {
@@ -91,6 +93,7 @@ fn pool_dispatches_forced_kernel_modes_bitwise_equal() {
                 queue_capacity: 128,
                 num_shards: 2,
                 placement: Placement::Hash,
+                ..Default::default()
             })
             .unwrap()
         })
@@ -128,6 +131,7 @@ fn routing_is_deterministic_and_shard_local() {
         queue_capacity: 128,
         num_shards: 4,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     let c = &pool.client;
@@ -173,6 +177,7 @@ fn shard_aware_hot_swap_and_remove() {
         queue_capacity: 128,
         num_shards: 2,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     let c = &pool.client;
@@ -202,6 +207,7 @@ fn aggregated_metrics_sum_across_shards() {
         queue_capacity: 128,
         num_shards: 3,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     let c = &pool.client;
@@ -236,6 +242,7 @@ fn unknown_head_fails_cleanly_through_pool() {
         queue_capacity: 16,
         num_shards: 2,
         placement: Placement::Hash,
+        ..Default::default()
     })
     .unwrap();
     assert!(pool.client.infer("nope", vec![0.0; 6]).is_err());

@@ -22,7 +22,15 @@ use share_kan::vq::{compress_layer, normalize_grids, r_squared};
 fn req(id: u64, t: Instant) -> InferRequest {
     let (tx, rx) = std::sync::mpsc::channel();
     std::mem::forget(rx); // keep the channel alive for the test's lifetime
-    InferRequest { id, head: "h".into(), features: vec![0.0], enqueued: t, resp: tx }
+    InferRequest {
+        id,
+        head: "h".into(),
+        features: vec![0.0],
+        enqueued: t,
+        routed: t,
+        traced: false,
+        resp: tx,
+    }
 }
 
 #[test]
