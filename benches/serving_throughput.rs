@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use share_kan::coordinator::{
     BackendKind, BatchPolicy, Coordinator, CoordinatorConfig, DeploymentSpec, ExecutorPool,
-    HeadWeights, InferResponse, Placement, PoolConfig,
+    FaultPlan, HeadWeights, InferResponse, Placement, PoolConfig,
 };
 use share_kan::data::rng::Pcg32;
 use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
@@ -526,6 +526,94 @@ fn main() {
             ("resident_bytes", Json::num(report.resident_bytes as f64)),
         ]));
         dep.shutdown();
+    }
+
+    // ---- failover workload: tail latency + error count while a scripted
+    // ---- fault plan kills one shard a quarter of the way through the
+    // ---- run, with and without head replication --------------------------
+    use std::sync::atomic::Ordering;
+    let fo_requests = if smoke { 400 } else { 4000 };
+    let fo_head = HeadWeights::from_checkpoint(
+        &compress(&dense_ck, &spec, k, Precision::Int8, 31).unwrap().to_checkpoint(),
+    )
+    .unwrap();
+    // the hash fallback of an empty pool predicts where Placement::Hash
+    // will pin the head, so the plan kills the shard that actually owns it
+    let probe = ExecutorPool::start(PoolConfig {
+        backend: BackendConfig::Arena(BackendSpec::default()),
+        policy,
+        queue_capacity: 64,
+        num_shards: 2,
+        placement: Placement::Hash,
+        ..Default::default()
+    })
+    .unwrap();
+    let victim = probe.client.shard_for("default");
+    probe.shutdown();
+
+    println!("{:-<100}", "");
+    println!(
+        "failover workload: 2 shards, scripted kill of shard {victim} at request \
+         {}/{fo_requests}, closed loop",
+        fo_requests / 4
+    );
+    for (label, replicate) in [("replicated", true), ("pinned", false)] {
+        let plan = FaultPlan::new(29).kill_shard_at(victim, fo_requests as u64 / 4);
+        let pool = ExecutorPool::start(PoolConfig {
+            backend: BackendConfig::Arena(BackendSpec::default()),
+            policy,
+            queue_capacity: 4096,
+            num_shards: 2,
+            placement: Placement::Hash,
+            fault: Some(plan.injector()),
+            reconnect_interval: None,
+            ..Default::default()
+        })
+        .unwrap();
+        if replicate {
+            pool.client.register_replicated("default", fo_head.clone()).unwrap();
+        } else {
+            pool.client.register_head("default", None, fo_head.clone()).unwrap();
+        }
+        let mut rng = Pcg32::seeded(17);
+        let mut errors = 0usize;
+        let mut lat: Vec<Duration> = Vec::with_capacity(fo_requests);
+        for _ in 0..fo_requests {
+            let t = Instant::now();
+            match pool.client.infer("default", rng.normal_vec(spec.d_in, 0.0, 1.0)) {
+                Ok(_) => lat.push(t.elapsed()),
+                Err(_) => errors += 1,
+            }
+        }
+        lat.sort_unstable();
+        let p99 = lat
+            .get(((lat.len() as f64 * 0.99) as usize).min(lat.len().saturating_sub(1)))
+            .copied()
+            .unwrap_or_default();
+        let agg = pool.client.aggregated_metrics();
+        let failovers = agg.counters.failovers.load(Ordering::Relaxed);
+        let shards_up = pool.client.shards_up();
+        println!(
+            "{label:<11}  served {:>5}  errors {errors:>5}  p99 {:>8.0}us  \
+             failovers {failovers:>5}  shards up {shards_up}/2",
+            lat.len(),
+            us(p99)
+        );
+        if replicate {
+            assert_eq!(errors, 0, "a replicated head must ride out the kill error-free");
+        } else {
+            assert!(errors > 0, "a pinned head must surface errors once its shard dies");
+        }
+        results.push(Json::obj(vec![
+            ("name", Json::str(format!("failover/{label}_kill"))),
+            ("requests", Json::num(fo_requests as f64)),
+            ("served", Json::num(lat.len() as f64)),
+            ("errors", Json::num(errors as f64)),
+            ("p99_us", Json::num(us(p99))),
+            ("failovers", Json::num(failovers as f64)),
+            ("shards_up", Json::num(shards_up as f64)),
+        ]));
+        pool.shutdown();
     }
 
     write_results("BENCH_serving.json", "serving_throughput", results).unwrap();

@@ -73,6 +73,10 @@ pub enum FindingKind {
     SizeMismatch,
     /// The plan's name → offset index disagrees with its buffer list.
     IndexDesync,
+    /// A head would lose its last live placement under a scripted fault
+    /// plan (a pinned head on a killed shard, or a replicated head whose
+    /// every replica shard is killed).
+    NoLivePlacement,
 }
 
 impl FindingKind {
@@ -92,6 +96,7 @@ impl FindingKind {
             FindingKind::UnexpectedBuffer => "unexpected-buffer",
             FindingKind::SizeMismatch => "size-mismatch",
             FindingKind::IndexDesync => "index-desync",
+            FindingKind::NoLivePlacement => "no-live-placement",
         }
     }
 }
@@ -651,6 +656,38 @@ pub fn check_access(plan: &Plan, name: &str, offset: usize,
     Ok(())
 }
 
+/// Fault dry-run for a deployment's placements: with the shards in
+/// `killed` down, every head must keep at least one live placement.
+/// `heads` pairs each head name with its placement — `Some(shard)` for a
+/// pinned head, `None` for a replicated head (one copy per shard).  A
+/// pinned head on a killed shard, or a replicated head with every one of
+/// the `num_shards` shards killed, produces a
+/// [`FindingKind::NoLivePlacement`] finding.  This is the static half of
+/// the failover story: `share-kan verify --deployment ... --kill 0,2`
+/// proves a fault plan survivable before any executor starts.
+pub fn verify_live_placements(heads: &[(String, Option<usize>)], num_shards: usize,
+                              killed: &[usize]) -> VerifyReport {
+    let mut r = VerifyReport::new("fault-dry-run");
+    let live = (0..num_shards).filter(|s| !killed.contains(s)).count();
+    for (head, shard) in heads {
+        match shard {
+            Some(s) if killed.contains(s) => {
+                r.push(FindingKind::NoLivePlacement, head,
+                       format!("pinned to shard {s}, which the fault plan kills \
+                                (replicate the head or move it off the doomed shard)"));
+            }
+            Some(_) => {}
+            None if live == 0 => {
+                r.push(FindingKind::NoLivePlacement, head,
+                       format!("replicated across all {num_shards} shards, but the fault \
+                                plan kills every one of them"));
+            }
+            None => {}
+        }
+    }
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -729,6 +766,25 @@ mod tests {
         assert_eq!(e.kind, FindingKind::OutOfArena);
         // unknown owner
         assert!(check_access(plan, "nope", 0, 4).is_err());
+    }
+
+    #[test]
+    fn fault_dry_run_flags_doomed_heads() {
+        let heads = vec![
+            ("pinned0".to_string(), Some(0)),
+            ("pinned1".to_string(), Some(1)),
+            ("repl".to_string(), None),
+        ];
+        // killing shard 0 dooms only the head pinned there
+        let r = verify_live_placements(&heads, 2, &[0]);
+        assert_eq!(r.findings().len(), 1);
+        assert!(r.has(FindingKind::NoLivePlacement));
+        assert_eq!(r.findings()[0].subject, "pinned0");
+        // no kills: clean
+        assert!(verify_live_placements(&heads, 2, &[]).is_ok());
+        // killing every shard also dooms the replicated head
+        let r = verify_live_placements(&heads, 2, &[0, 1]);
+        assert_eq!(r.findings().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Failover code is only trustworthy if every path through it can be
+//! exercised *reproducibly*: real process kills and wall-clock sleeps make
+//! failure tests flaky and slow, so this module scripts faults against
+//! request **counts** instead.  A [`FaultPlan`] declares what goes wrong
+//! and when ("kill shard 1 at its 40th request", "drop the reply to shard
+//! 0's 7th request"), compiles into a shared [`FaultInjector`], and the
+//! transports consult the injector at well-defined seams:
+//!
+//! * the in-process pool transport asks [`FaultInjector::on_request`]
+//!   before submitting to a local shard (a `KillShard` answer marks the
+//!   shard down and re-routes — the failover path, without any process);
+//! * the TCP client ([`super::tcp::TcpClient`]) asks `on_request` before
+//!   each wire round-trip and maps the answer onto transport errors
+//!   (`DropReply`/`DelayReplyMs` → timeout, `GarbageFrame` → protocol
+//!   error, `KillShard` → connection reset);
+//! * the remote-shard worker ([`super::remote::RemoteShard`]) asks
+//!   [`FaultInjector::on_connect`] before dialing, so `RefuseConnect` and
+//!   sticky kills exercise the reconnect/backoff path.
+//!
+//! Everything is keyed on per-shard request counters and sticky flags —
+//! never on time — so a seeded plan replays the same fault schedule on
+//! every run.  The seed additionally drives [`FaultInjector::garbage_line`],
+//! the generator the TCP robustness tests reuse for malformed frames.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::data::rng::Pcg32;
+
+/// Highest shard index the injector tracks state for; faults declared on
+/// shards at or above this are ignored (pools this wide are out of scope
+/// for fault testing).
+pub const MAX_FAULT_SHARDS: usize = 256;
+
+/// What a fault does when its rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The shard dies: sticky — every later request and connection
+    /// attempt fails until [`FaultInjector::clear`] revives it.
+    KillShard,
+    /// The reply to one request is swallowed (the client observes a read
+    /// timeout).
+    DropReply,
+    /// The reply to one request is delayed by this many milliseconds (a
+    /// delay at or beyond the client's request timeout observes as a
+    /// timeout; shorter delays are delivered normally — no real sleep is
+    /// ever taken by the injector).
+    DelayReplyMs(u64),
+    /// Connection attempts to the shard are refused: sticky until
+    /// [`FaultInjector::clear`].
+    RefuseConnect,
+    /// The reply to one request is replaced by a seeded garbage frame
+    /// (the client observes a protocol error).
+    GarbageFrame,
+}
+
+/// One scripted fault: fire [`FaultRule::kind`] on [`FaultRule::shard`]
+/// when that shard's request counter reaches [`FaultRule::at_request`]
+/// (1-based; `0` means "from the start", before any request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRule {
+    /// Shard index the fault targets.
+    pub shard: usize,
+    /// 1-based request ordinal on that shard that triggers the fault;
+    /// `0` applies the fault before any traffic (sticky kinds only).
+    pub at_request: u64,
+    /// What happens when the rule fires.
+    pub kind: FaultKind,
+}
+
+/// A seeded, scriptable schedule of faults.  Build one with the fluent
+/// methods, then compile it into the shared [`FaultInjector`] the
+/// transports consult:
+///
+/// ```
+/// use share_kan::coordinator::fault::FaultPlan;
+/// let plan = FaultPlan::new(42).kill_shard_at(1, 40).drop_reply_at(0, 7);
+/// let injector = plan.injector();
+/// assert!(!injector.is_killed(1));
+/// ```
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// An empty plan; `seed` drives the garbage-frame generator and any
+    /// seed-derived scheduling helpers.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    /// Add an arbitrary rule.
+    pub fn rule(mut self, rule: FaultRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Kill `shard` when its request counter reaches `at_request`
+    /// (1-based; 0 = dead from the start).  Sticky until cleared.
+    pub fn kill_shard_at(self, shard: usize, at_request: u64) -> Self {
+        self.rule(FaultRule { shard, at_request, kind: FaultKind::KillShard })
+    }
+
+    /// Kill one of `num_shards` shards at `at_request`, the victim picked
+    /// deterministically from the plan's seed.
+    pub fn kill_one_of(self, num_shards: usize, at_request: u64) -> Self {
+        let victim = Pcg32::seeded(self.seed).below(num_shards.max(1));
+        self.kill_shard_at(victim, at_request)
+    }
+
+    /// Swallow the reply to `shard`'s `at_request`-th request.
+    pub fn drop_reply_at(self, shard: usize, at_request: u64) -> Self {
+        self.rule(FaultRule { shard, at_request, kind: FaultKind::DropReply })
+    }
+
+    /// Delay the reply to `shard`'s `at_request`-th request by `ms`
+    /// milliseconds (observed, never slept; see [`FaultKind::DelayReplyMs`]).
+    pub fn delay_reply_at(self, shard: usize, at_request: u64, ms: u64) -> Self {
+        self.rule(FaultRule { shard, at_request, kind: FaultKind::DelayReplyMs(ms) })
+    }
+
+    /// Refuse connection attempts to `shard` from the start; sticky until
+    /// cleared (exercises reconnect/backoff paths).
+    pub fn refuse_connect(self, shard: usize) -> Self {
+        self.rule(FaultRule { shard, at_request: 0, kind: FaultKind::RefuseConnect })
+    }
+
+    /// Replace the reply to `shard`'s `at_request`-th request with a
+    /// seeded garbage frame.
+    pub fn garbage_frame_at(self, shard: usize, at_request: u64) -> Self {
+        self.rule(FaultRule { shard, at_request, kind: FaultKind::GarbageFrame })
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The scripted rules, in declaration order.
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Shards any `KillShard` rule targets — the shard set a placement
+    /// dry-run must assume dead (see
+    /// [`crate::analysis::verify_live_placements`]).
+    pub fn killed_shards(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .rules
+            .iter()
+            .filter(|r| r.kind == FaultKind::KillShard)
+            .map(|r| r.shard)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Compile the plan into a shared injector (rules with
+    /// `at_request == 0` are applied immediately).
+    pub fn injector(&self) -> Arc<FaultInjector> {
+        let injector = FaultInjector {
+            seed: self.seed,
+            rules: self.rules.clone(),
+            state: (0..MAX_FAULT_SHARDS).map(|_| ShardFaultState::default()).collect(),
+        };
+        for rule in &self.rules {
+            if rule.at_request == 0 {
+                injector.apply_sticky(rule.shard, rule.kind);
+            }
+        }
+        Arc::new(injector)
+    }
+}
+
+/// Per-shard sticky flags + request counter.
+#[derive(Default)]
+struct ShardFaultState {
+    requests: AtomicU64,
+    killed: AtomicBool,
+    refusing: AtomicBool,
+}
+
+/// Compiled, shareable form of a [`FaultPlan`]: per-shard request
+/// counters and sticky kill/refuse flags, consulted by the transports.
+/// All state is atomic; the injector is cheap to consult and safe to
+/// share across every shard's submit path.
+pub struct FaultInjector {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    state: Vec<ShardFaultState>,
+}
+
+impl FaultInjector {
+    /// An injector that never fires (the default wired into pools and
+    /// clients when no plan is declared).
+    pub fn none() -> Arc<FaultInjector> {
+        FaultPlan::new(0).injector()
+    }
+
+    /// Account one request against `shard` and return the fault (if any)
+    /// that applies to it.  A killed shard answers
+    /// [`FaultKind::KillShard`] for every request without advancing its
+    /// counter; otherwise the counter increments and any rule scheduled
+    /// for exactly this ordinal fires (sticky kinds latch their flag).
+    pub fn on_request(&self, shard: usize) -> Option<FaultKind> {
+        let st = self.state.get(shard)?;
+        if st.killed.load(Ordering::Acquire) {
+            return Some(FaultKind::KillShard);
+        }
+        let n = st.requests.fetch_add(1, Ordering::AcqRel) + 1;
+        let mut fired = None;
+        for rule in &self.rules {
+            if rule.shard == shard && rule.at_request == n {
+                self.apply_sticky(shard, rule.kind);
+                fired = Some(rule.kind);
+            }
+        }
+        fired
+    }
+
+    /// Whether a connection attempt to `shard` should be refused (sticky
+    /// refuse-connect, or the shard is killed).
+    pub fn on_connect(&self, shard: usize) -> bool {
+        self.state
+            .get(shard)
+            .map(|st| {
+                st.refusing.load(Ordering::Acquire) || st.killed.load(Ordering::Acquire)
+            })
+            .unwrap_or(false)
+    }
+
+    /// Manually kill `shard` (sticky), as if a `KillShard` rule fired.
+    pub fn kill(&self, shard: usize) {
+        self.apply_sticky(shard, FaultKind::KillShard);
+    }
+
+    /// Lift `shard`'s sticky kill/refuse flags — the "process restarted"
+    /// event a reconnector observes.  Request counters keep running.
+    pub fn clear(&self, shard: usize) {
+        if let Some(st) = self.state.get(shard) {
+            st.killed.store(false, Ordering::Release);
+            st.refusing.store(false, Ordering::Release);
+        }
+    }
+
+    /// Whether `shard` is currently killed.
+    pub fn is_killed(&self, shard: usize) -> bool {
+        self.state
+            .get(shard)
+            .map(|st| st.killed.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
+    /// Requests accounted against `shard` so far.
+    pub fn requests_seen(&self, shard: usize) -> u64 {
+        self.state
+            .get(shard)
+            .map(|st| st.requests.load(Ordering::Acquire))
+            .unwrap_or(0)
+    }
+
+    /// A seeded malformed frame — printable, newline-free, and never
+    /// valid JSON (it starts with `#!`).  `salt` varies the bytes per
+    /// call site; the same `(seed, salt)` pair always yields the same
+    /// frame, so robustness tests replay exactly.
+    pub fn garbage_line(&self, salt: u64) -> String {
+        let mut rng = Pcg32::seeded(self.seed ^ salt.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        const ALPHABET: &[u8] = b"{}[]()<>!#%&*:,\"\\xyzqwk0147 ";
+        let len = 8 + rng.below(56);
+        let mut line = String::with_capacity(len + 2);
+        line.push_str("#!");
+        for _ in 0..len {
+            line.push(ALPHABET[rng.below(ALPHABET.len())] as char);
+        }
+        line
+    }
+
+    fn apply_sticky(&self, shard: usize, kind: FaultKind) {
+        if let Some(st) = self.state.get(shard) {
+            match kind {
+                FaultKind::KillShard => st.killed.store(true, Ordering::Release),
+                FaultKind::RefuseConnect => st.refusing.store(true, Ordering::Release),
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_fire_on_exact_request_ordinals() {
+        let injector = FaultPlan::new(7)
+            .drop_reply_at(0, 2)
+            .garbage_frame_at(0, 3)
+            .injector();
+        assert_eq!(injector.on_request(0), None);
+        assert_eq!(injector.on_request(0), Some(FaultKind::DropReply));
+        assert_eq!(injector.on_request(0), Some(FaultKind::GarbageFrame));
+        assert_eq!(injector.on_request(0), None);
+        assert_eq!(injector.requests_seen(0), 4);
+        // other shards are untouched
+        assert_eq!(injector.on_request(1), None);
+    }
+
+    #[test]
+    fn kill_is_sticky_until_cleared() {
+        let injector = FaultPlan::new(1).kill_shard_at(2, 1).injector();
+        assert!(!injector.is_killed(2));
+        assert_eq!(injector.on_request(2), Some(FaultKind::KillShard));
+        assert!(injector.is_killed(2));
+        // every later request fails without advancing the counter
+        assert_eq!(injector.on_request(2), Some(FaultKind::KillShard));
+        assert_eq!(injector.requests_seen(2), 1);
+        assert!(injector.on_connect(2), "killed shard refuses connections");
+        injector.clear(2);
+        assert!(!injector.is_killed(2));
+        assert_eq!(injector.on_request(2), None);
+    }
+
+    #[test]
+    fn zero_ordinal_rules_apply_from_the_start() {
+        let injector = FaultPlan::new(3).refuse_connect(1).kill_shard_at(0, 0).injector();
+        assert!(injector.on_connect(1));
+        assert!(injector.is_killed(0));
+        assert!(!injector.on_connect(2));
+    }
+
+    #[test]
+    fn garbage_lines_are_seeded_and_never_json() {
+        let a = FaultPlan::new(9).injector();
+        let b = FaultPlan::new(9).injector();
+        assert_eq!(a.garbage_line(4), b.garbage_line(4), "same seed+salt replays");
+        assert_ne!(a.garbage_line(4), a.garbage_line(5), "salt varies the frame");
+        let line = a.garbage_line(4);
+        assert!(line.starts_with("#!"));
+        assert!(!line.contains('\n'));
+        assert!(crate::util::json::parse(&line).is_err(), "garbage parsed as JSON: {line}");
+    }
+
+    #[test]
+    fn killed_shards_lists_kill_rules_once() {
+        let plan = FaultPlan::new(0).kill_shard_at(3, 5).kill_shard_at(1, 2).kill_shard_at(3, 9);
+        assert_eq!(plan.killed_shards(), vec![1, 3]);
+    }
+
+    #[test]
+    fn none_injector_never_fires() {
+        let injector = FaultInjector::none();
+        for shard in 0..4 {
+            for _ in 0..8 {
+                assert_eq!(injector.on_request(shard), None);
+            }
+            assert!(!injector.on_connect(shard));
+        }
+    }
+
+    #[test]
+    fn seeded_victim_selection_is_deterministic() {
+        let a = FaultPlan::new(11).kill_one_of(4, 10);
+        let b = FaultPlan::new(11).kill_one_of(4, 10);
+        assert_eq!(a.rules(), b.rules());
+        assert!(a.rules()[0].shard < 4);
+    }
+}

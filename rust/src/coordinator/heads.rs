@@ -115,6 +115,60 @@ impl HeadWeights {
         }
     }
 
+    /// Serialize the head back into a checkpoint — the exact inverse of
+    /// [`HeadWeights::from_checkpoint`] (same meta `model` tag, same
+    /// tensor keys, Int8 scales split back into per-layer rows), so
+    /// `from_checkpoint(&w.to_checkpoint())` reproduces `w` bit for bit.
+    /// The remote-shard register protocol ships heads through this.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        use crate::util::json::Json;
+        let model = match self {
+            HeadWeights::Mlp { .. } => "mlp",
+            HeadWeights::DenseKan { .. } => "dense_kan",
+            HeadWeights::VqFp32 { .. } => "vq_kan_fp32",
+            HeadWeights::VqInt8 { .. } => "vq_kan_int8",
+        };
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str(model))]));
+        match self {
+            HeadWeights::Mlp { w1, b1, w2, b2 } => {
+                ck.insert("w1", w1.clone());
+                ck.insert("b1", b1.clone());
+                ck.insert("w2", w2.clone());
+                ck.insert("b2", b2.clone());
+            }
+            HeadWeights::DenseKan { grids0, grids1 } => {
+                ck.insert("grids0", grids0.clone());
+                ck.insert("grids1", grids1.clone());
+            }
+            HeadWeights::VqFp32 { cb0, idx0, g0, bs0, cb1, idx1, g1, bs1 } => {
+                ck.insert("cb0", cb0.clone());
+                ck.insert("idx0", idx0.clone());
+                ck.insert("g0", g0.clone());
+                ck.insert("bias_sum0", bs0.clone());
+                ck.insert("cb1", cb1.clone());
+                ck.insert("idx1", idx1.clone());
+                ck.insert("g1", g1.clone());
+                ck.insert("bias_sum1", bs1.clone());
+            }
+            HeadWeights::VqInt8 { cbq0, idx0, gq0, bs0, cbq1, idx1, gq1, bs1, scales } => {
+                ck.insert("cbq0", cbq0.clone());
+                ck.insert("idx0", idx0.clone());
+                ck.insert("gq0", gq0.clone());
+                ck.insert("bias_sum0", bs0.clone());
+                ck.insert("cbq1", cbq1.clone());
+                ck.insert("idx1", idx1.clone());
+                ck.insert("gq1", gq1.clone());
+                ck.insert("bias_sum1", bs1.clone());
+                // invert the [2, 3] concatenation from_checkpoint performs
+                let mut s = scales.as_f32();
+                s.resize(6, 0.0);
+                ck.insert("scales0", Tensor::from_f32(&[3], &s[0..3]));
+                ck.insert("scales1", Tensor::from_f32(&[3], &s[3..6]));
+            }
+        }
+        ck
+    }
+
     /// Input feature dimension, for request validation.
     pub fn d_in(&self) -> usize {
         match self {
@@ -244,6 +298,33 @@ mod tests {
         assert_eq!(h.model(), "dense_kan_fwd");
         assert_eq!(h.d_out(), 2);
         assert_eq!(h.weight_bytes(), 48 * 4);
+    }
+
+    #[test]
+    fn to_checkpoint_inverts_from_checkpoint() {
+        // the Int8 variant exercises the scales0/scales1 <-> [2,3] split
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("vq_kan_int8"))]));
+        ck.insert("cbq0", Tensor::from_i8(&[4, 5], &[7; 20]));
+        ck.insert("idx0", Tensor::from_i32(&[2, 3], &[0, 1, 2, 3, 0, 1]));
+        ck.insert("gq0", Tensor::from_i8(&[2, 3], &[-3; 6]));
+        ck.insert("bias_sum0", Tensor::from_f32(&[3], &[0.5, -1.0, 2.0]));
+        ck.insert("cbq1", Tensor::from_i8(&[4, 5], &[-9; 20]));
+        ck.insert("idx1", Tensor::from_i32(&[3, 2], &[3, 2, 1, 0, 3, 2]));
+        ck.insert("gq1", Tensor::from_i8(&[3, 2], &[5; 6]));
+        ck.insert("bias_sum1", Tensor::from_f32(&[2], &[1.25, -0.75]));
+        ck.insert("scales0", Tensor::from_f32(&[3], &[0.1, -4.0, 0.25]));
+        ck.insert("scales1", Tensor::from_f32(&[3], &[0.2, -3.0, 0.5]));
+        let head = HeadWeights::from_checkpoint(&ck).unwrap();
+        let back = head.to_checkpoint();
+        assert_eq!(back.meta.get("model").unwrap().as_str(), Some("vq_kan_int8"));
+        assert_eq!(back.tensors.len(), ck.tensors.len());
+        for (name, t) in &ck.tensors {
+            let b = back.get(name).unwrap_or_else(|| panic!("missing '{name}'"));
+            assert_eq!(b, t, "tensor '{name}' must survive the round trip bitwise");
+        }
+        // and the round trip through the re-parsed checkpoint is exact
+        let again = HeadWeights::from_checkpoint(&back).unwrap();
+        assert_eq!(again.weight_bytes(), head.weight_bytes());
     }
 
     #[test]

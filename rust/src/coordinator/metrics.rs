@@ -149,6 +149,13 @@ pub struct Counters {
     pub scalar_batches: AtomicU64,
     /// Batches executed by a SIMD kernel tier (AVX2+FMA / NEON).
     pub simd_batches: AtomicU64,
+    /// Requests redirected to this shard because their routed shard was
+    /// down (counted on the shard that ABSORBED the request, so the merged
+    /// view is the fold of the per-shard views).
+    pub failovers: AtomicU64,
+    /// Remote-transport retry attempts (reconnect-and-resend after an I/O
+    /// or protocol failure; zero for in-process shards).
+    pub retries: AtomicU64,
 }
 
 impl Counters {
@@ -163,6 +170,8 @@ impl Counters {
             (&self.rejected, &other.rejected),
             (&self.scalar_batches, &other.scalar_batches),
             (&self.simd_batches, &other.simd_batches),
+            (&self.failovers, &other.failovers),
+            (&self.retries, &other.retries),
         ] {
             mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
         }
@@ -184,6 +193,8 @@ impl Counters {
         let padded_slots = self.padded_slots.load(Ordering::Relaxed);
         let scalar_batches = self.scalar_batches.load(Ordering::Relaxed);
         let simd_batches = self.simd_batches.load(Ordering::Relaxed);
+        let failovers = self.failovers.load(Ordering::Relaxed);
+        let retries = self.retries.load(Ordering::Relaxed);
         let requests = self.requests.load(Ordering::Acquire).max(responses + rejected);
         CountersSnapshot {
             requests,
@@ -194,6 +205,8 @@ impl Counters {
             rejected,
             scalar_batches,
             simd_batches,
+            failovers,
+            retries,
         }
     }
 

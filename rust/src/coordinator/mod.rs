@@ -1,13 +1,16 @@
 //! L3 serving coordinator (the paper's deployment story): bounded admission,
 //! dynamic batching to AOT buckets, hot-swappable compressed heads, metrics,
-//! a sharded executor pool ([`pool`]) for horizontal scale-out, and the
-//! declarative deployment API ([`serving`]: [`DeploymentSpec`] +
-//! pluggable shard-placement policies).
+//! a sharded executor pool ([`pool`]) for horizontal scale-out with remote
+//! executors and failover ([`remote`], [`fault`]), and the declarative
+//! deployment API ([`serving`]: [`DeploymentSpec`] + pluggable
+//! shard-placement policies).
 
 pub mod batcher;
+pub mod fault;
 pub mod heads;
 pub mod metrics;
 pub mod pool;
+pub mod remote;
 pub mod request;
 pub mod server;
 pub mod serving;
@@ -15,13 +18,16 @@ pub mod tcp;
 pub mod workload;
 
 pub use batcher::{Batch, BatchPolicy, PendingQueue};
+pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultRule};
 pub use heads::HeadWeights;
 pub use metrics::{Counters, LatencyHistogram};
-pub use pool::{ExecutorPool, HeadPlacement, PoolConfig, PoolHandle, PoolMetrics};
+pub use pool::{ExecutorPool, HeadPlacement, PoolConfig, PoolHandle, PoolMetrics, RouteError};
+pub use remote::{RemoteConfig, RemoteShard};
 pub use request::{InferRequest, InferResponse};
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
 pub use serving::{
     BackendKind, Deployment, DeploymentReport, DeploymentSpec, FamilyCoLocate, FamilyResidency,
-    HashPlacement, LeastLoaded, Placement, PlacementPolicy, ShardLoad, StatsHandle,
+    HashPlacement, LeastLoaded, Placement, PlacementPolicy, RemoteShardSpec, ShardLoad,
+    StatsHandle,
 };
 pub use tcp::{ClientError, TcpClient, TcpServer};

@@ -2,16 +2,34 @@
 //! handle (the horizontal scale-out of the single vLLM-style engine loop,
 //! toward the ROADMAP's "heavy traffic from millions of users").
 //!
-//! Each shard is a full [`Coordinator`] — its own executor thread, its own
-//! backend instance (constructed from a cloned [`BackendConfig`]), its own
-//! admission queue and batcher.  Head→shard placement is decided **once at
-//! registration** by a pluggable [`PlacementPolicy`] (default:
-//! [`super::serving::HashPlacement`], FNV-1a over the head name — bitwise
-//! identical to the pool's historical routing) and recorded in a routing
-//! table shared by every client handle; request routing is a table lookup,
-//! never a per-request hash.  That is what makes placement policies
-//! hot-swap-safe: `remove_head` drops the table entry, and a later
-//! re-registration is placed afresh by whatever policy the pool runs.
+//! Each shard slot is either a full in-process [`Coordinator`] — its own
+//! executor thread, its own backend instance (constructed from a cloned
+//! [`BackendConfig`]), its own admission queue and batcher — or a
+//! [`RemoteShard`]: the same submit surface backed by a standalone
+//! `share-kan shard --listen` process reached over the TCP line protocol
+//! (selected per slot via [`PoolConfig::remotes`]).  Head→shard placement
+//! is decided **once at registration** by a pluggable [`PlacementPolicy`]
+//! (default: [`super::serving::HashPlacement`], FNV-1a over the head name —
+//! bitwise identical to the pool's historical routing) and recorded in a
+//! routing table shared by every client handle; request routing is a table
+//! lookup, never a per-request hash.  That is what makes placement
+//! policies hot-swap-safe: `remove_head` drops the table entry, and a
+//! later re-registration is placed afresh by whatever policy the pool
+//! runs.
+//!
+//! **Failure model.**  Every slot carries a shared up/down flag.  Remote
+//! slots flip themselves down when their transport budget (connect
+//! timeout + bounded retries) is exhausted; any slot can be scripted down
+//! by a deterministic [`FaultInjector`] kill rule or marked down
+//! explicitly.  Routing consults the flags atomically: requests for a
+//! **replicated** head skip down shards and are absorbed by the next live
+//! replica (counted in the absorbing shard's `failovers` counter and
+//! stamped as a `redirect` trace event); requests for a head *placed* on
+//! a down shard fail fast with a typed [`RouteError`].  A background
+//! reconnector probes down remote slots every
+//! [`PoolConfig::reconnect_interval`], re-registers the heads they should
+//! host (weights are retained pool-side for exactly this purpose) and
+//! flips them back up.
 //!
 //! Requests inherit the owning shard's batching and backpressure; metrics
 //! aggregate across shards on demand ([`ExecutorPool::aggregated_metrics`])
@@ -22,20 +40,28 @@
 //! *any* placement policy (pinned by `rust/tests/pool_integration.rs` and
 //! `rust/tests/placement.rs`) — placement changes only how much traffic the
 //! pool sustains and how many times shared regions are materialized, never
-//! what it computes.
+//! what it computes.  Remote slots extend the same chain: the executor
+//! process runs the same backend from the same shipped checkpoint
+//! (`rust/tests/remote_shard.rs`).
 
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::batcher::BatchPolicy;
+use super::fault::{FaultInjector, FaultKind};
 use super::heads::HeadWeights;
+use super::remote::{RemoteConfig, RemoteExecConfig, RemoteShard, RemoteShardHandle};
 use super::request::InferResponse;
 use super::server::{Coordinator, CoordinatorConfig, CoordinatorHandle, Metrics};
 use super::serving::placement::{hash_shard, Placement, PlacementPolicy, ShardLoad};
-use crate::obs::{MetricsSnapshot, StatsSnapshot, TraceConfig, TraceSummary, Tracer};
+use crate::obs::{
+    GaugesSnapshot, MetricsSnapshot, StatsSnapshot, TraceConfig, TraceSummary, Tracer,
+};
 use crate::runtime::{BackendConfig, BackendSpec};
 
 /// Configuration for an [`ExecutorPool`] (one entry per knob, applied to
@@ -55,6 +81,17 @@ pub struct PoolConfig {
     /// span-tracing knobs; ONE tracer ring is shared by every shard so a
     /// snapshot yields a globally ordered event stream (default: off)
     pub trace: TraceConfig,
+    /// per-slot remote executors: `remotes[i] = Some(cfg)` makes shard `i`
+    /// a [`RemoteShard`] dialing that address instead of an in-process
+    /// coordinator; missing/`None` slots stay local (default: all local)
+    pub remotes: Vec<Option<RemoteConfig>>,
+    /// deterministic fault plan driving scripted kills/transport faults
+    /// (tests and the failover bench); `None` injects nothing
+    pub fault: Option<Arc<FaultInjector>>,
+    /// poll interval of the background reconnector that restores down
+    /// remote shards (probe + re-register retained heads); `None` disables
+    /// it — recovery then only happens via [`ExecutorPool::recover`]
+    pub reconnect_interval: Option<Duration>,
 }
 
 impl Default for PoolConfig {
@@ -66,6 +103,9 @@ impl Default for PoolConfig {
             num_shards: 4,
             placement: Placement::Hash,
             trace: TraceConfig::default(),
+            remotes: Vec::new(),
+            fault: None,
+            reconnect_interval: Some(Duration::from_millis(500)),
         }
     }
 }
@@ -85,6 +125,118 @@ fn backend_labels(cfg: &BackendConfig) -> (String, String) {
         BackendConfig::FamilyArena(spec) => ("family".into(), kernel_label(spec)),
         #[cfg(feature = "pjrt")]
         BackendConfig::Pjrt { .. } => ("pjrt".into(), "pjrt".into()),
+    }
+}
+
+/// The executor configuration forwarded to remote shard processes, derived
+/// from the pool's own knobs so local and remote shards compute and batch
+/// identically (the equivalence-chain requirement).
+fn remote_exec_config(cfg: &PoolConfig) -> Result<RemoteExecConfig> {
+    let (backend, spec) = match &cfg.backend {
+        BackendConfig::Native(spec) => ("native", spec),
+        BackendConfig::Arena(spec) => ("arena", spec),
+        BackendConfig::FamilyArena(spec) => ("family", spec),
+        #[cfg(feature = "pjrt")]
+        BackendConfig::Pjrt { .. } => {
+            anyhow::bail!("remote shards cannot forward a pjrt backend")
+        }
+    };
+    Ok(RemoteExecConfig {
+        backend: backend.to_string(),
+        kernel: spec.kernel.to_string(),
+        buckets: spec.batch_buckets.clone(),
+        max_batch: cfg.policy.max_batch,
+        max_wait_ms: cfg.policy.max_wait.as_millis() as u64,
+        queue_capacity: cfg.queue_capacity,
+    })
+}
+
+/// Typed routing failures surfaced by submit paths when liveness rules out
+/// every candidate shard (downcastable from the `anyhow` error chain).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// The head is not in the routing table and its hash-fallback shard is
+    /// down, so there is nowhere sensible to send the request.
+    UnknownHead(String),
+    /// The head is placed on exactly one shard and that shard is down
+    /// (placed heads have no replica to absorb the traffic).
+    ShardDown {
+        /// head the request named
+        head: String,
+        /// the down owning shard
+        shard: usize,
+    },
+    /// The head is replicated but every shard is currently down.
+    AllReplicasDown(String),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownHead(h) => {
+                write!(f, "unknown head '{h}' and its fallback shard is down")
+            }
+            RouteError::ShardDown { head, shard } => {
+                write!(f, "head '{head}' is placed on shard {shard}, which is down")
+            }
+            RouteError::AllReplicasDown(h) => {
+                write!(f, "head '{h}' is replicated but every shard is down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// One shard slot: an in-process coordinator or a remote executor client.
+/// Both expose identical submit/registration/metrics surfaces, so routing
+/// never cares which one it resolved to.
+#[derive(Clone)]
+enum ShardExec {
+    Local(Coordinator),
+    Remote(RemoteShard),
+}
+
+impl ShardExec {
+    fn is_local(&self) -> bool {
+        matches!(self, ShardExec::Local(_))
+    }
+
+    fn metrics(&self) -> &Metrics {
+        match self {
+            ShardExec::Local(c) => c.metrics(),
+            ShardExec::Remote(r) => r.metrics(),
+        }
+    }
+
+    fn try_submit_from(&self, head: &str, features: Vec<f32>, redirected_from: Option<u32>)
+                       -> Result<Receiver<InferResponse>> {
+        match self {
+            ShardExec::Local(c) => c.try_submit_from(head, features, redirected_from),
+            ShardExec::Remote(r) => r.try_submit_from(head, features, redirected_from),
+        }
+    }
+
+    fn infer_from(&self, head: &str, features: Vec<f32>, redirected_from: Option<u32>)
+                  -> Result<InferResponse> {
+        match self {
+            ShardExec::Local(c) => c.infer_from(head, features, redirected_from),
+            ShardExec::Remote(r) => r.infer_from(head, features, redirected_from),
+        }
+    }
+
+    fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
+        match self {
+            ShardExec::Local(c) => c.add_head(name, weights),
+            ShardExec::Remote(r) => r.add_head(name, weights),
+        }
+    }
+
+    fn remove_head(&self, name: &str) -> Result<bool> {
+        match self {
+            ShardExec::Local(c) => c.remove_head(name),
+            ShardExec::Remote(r) => r.remove_head(name),
+        }
     }
 }
 
@@ -124,23 +276,36 @@ pub struct PoolMetrics {
 }
 
 /// Client handle over the shard set; cloneable across threads.  All clones
-/// share one routing table, so placement decisions are visible everywhere.
+/// share one routing table and one set of liveness flags, so placement
+/// decisions and failovers are visible everywhere.
 #[derive(Clone)]
 pub struct ExecutorPool {
-    shards: Vec<Coordinator>,
+    shards: Vec<ShardExec>,
+    /// per-slot liveness; remote slots share theirs with the transport
+    /// workers (which flip it down on budget exhaustion)
+    up: Vec<Arc<AtomicBool>>,
     placement: Arc<dyn PlacementPolicy>,
     routing: Arc<RwLock<HashMap<String, RouteEntry>>>,
+    /// weights retained for re-registration on remote-shard recovery
+    /// (populated only when the pool has at least one remote slot)
+    retained: Arc<RwLock<HashMap<String, HeadWeights>>>,
     round_robin: Arc<AtomicUsize>,
     tracer: Arc<Tracer>,
+    fault: Arc<FaultInjector>,
+    has_remote: bool,
     backend_label: String,
     kernel_label: String,
 }
 
-/// Owner handle that joins every shard executor on drop.
+/// Owner handle that joins every shard executor (and the background
+/// reconnector, if running) on shutdown or drop.
 pub struct PoolHandle {
     /// Cloneable client handle over the shard set.
     pub client: ExecutorPool,
     handles: Vec<CoordinatorHandle>,
+    remote_handles: Vec<RemoteShardHandle>,
+    reconnector_stop: Option<Arc<AtomicBool>>,
+    reconnector: Option<JoinHandle<()>>,
 }
 
 impl ExecutorPool {
@@ -157,31 +322,71 @@ impl ExecutorPool {
     pub fn start_with_policy(cfg: PoolConfig, placement: Arc<dyn PlacementPolicy>)
                              -> Result<PoolHandle> {
         anyhow::ensure!(cfg.num_shards >= 1, "pool needs at least one shard");
+        anyhow::ensure!(
+            cfg.remotes.len() <= cfg.num_shards,
+            "remote slot list names {} shards but the pool has {}",
+            cfg.remotes.len(),
+            cfg.num_shards
+        );
         let (backend_label, kernel_label) = backend_labels(&cfg.backend);
         let tracer = Tracer::from_config(cfg.trace);
-        let mut handles = Vec::with_capacity(cfg.num_shards);
+        let fault = cfg.fault.clone().unwrap_or_else(FaultInjector::none);
+        let has_remote = cfg.remotes.iter().any(|r| r.is_some());
+        let exec_cfg = if has_remote { Some(remote_exec_config(&cfg)?) } else { None };
+        let mut handles = Vec::new();
+        let mut remote_handles = Vec::new();
         let mut shards = Vec::with_capacity(cfg.num_shards);
+        let mut up = Vec::with_capacity(cfg.num_shards);
         for shard in 0..cfg.num_shards {
-            let handle = Coordinator::start(CoordinatorConfig {
-                backend: cfg.backend.clone(),
-                policy: cfg.policy,
-                queue_capacity: cfg.queue_capacity,
-                tracer: tracer.clone(),
-                shard: shard as u32,
-            })?;
-            shards.push(handle.client.clone());
-            handles.push(handle);
+            match cfg.remotes.get(shard).cloned().flatten() {
+                Some(rc) => {
+                    let exec = exec_cfg.clone().expect("exec config derived when remotes exist");
+                    let (client, handle) =
+                        RemoteShard::start(shard, rc, exec, tracer.clone(), fault.clone())?;
+                    up.push(client.up_flag());
+                    shards.push(ShardExec::Remote(client));
+                    remote_handles.push(handle);
+                }
+                None => {
+                    let handle = Coordinator::start(CoordinatorConfig {
+                        backend: cfg.backend.clone(),
+                        policy: cfg.policy,
+                        queue_capacity: cfg.queue_capacity,
+                        tracer: tracer.clone(),
+                        shard: shard as u32,
+                    })?;
+                    up.push(Arc::new(AtomicBool::new(true)));
+                    shards.push(ShardExec::Local(handle.client.clone()));
+                    handles.push(handle);
+                }
+            }
         }
         let client = ExecutorPool {
             shards,
+            up,
             placement,
             routing: Arc::new(RwLock::new(HashMap::new())),
+            retained: Arc::new(RwLock::new(HashMap::new())),
             round_robin: Arc::new(AtomicUsize::new(0)),
             tracer,
+            fault,
+            has_remote,
             backend_label,
             kernel_label,
         };
-        Ok(PoolHandle { client, handles })
+        let (reconnector_stop, reconnector) = match cfg.reconnect_interval {
+            Some(interval) if has_remote => {
+                let stop = Arc::new(AtomicBool::new(false));
+                let pool = client.clone();
+                let flag = stop.clone();
+                let t = std::thread::Builder::new()
+                    .name("share-kan-reconnect".to_string())
+                    .spawn(move || reconnect_loop(pool, flag, interval))?;
+                (Some(stop), Some(t))
+            }
+            _ => (None, None),
+        };
+        Ok(PoolHandle { client, handles, remote_handles, reconnector_stop, reconnector })
     }
 
     /// Number of executor shards behind this handle.
@@ -197,7 +402,8 @@ impl ExecutorPool {
     /// The shard requests for `head` currently route to: the routing-table
     /// entry for placed heads, the FNV-1a [`hash_shard`] fallback for
     /// heads never registered through this pool.  For replicated heads
-    /// this reports the shard the *next* round-robin submission would hit.
+    /// this reports the shard the *next* round-robin submission would hit
+    /// (liveness redirects not applied — this is the table view).
     pub fn shard_for(&self, head: &str) -> usize {
         match self.read_routing().get(head) {
             Some(RouteEntry { shard: Some(s), .. }) => *s,
@@ -214,9 +420,88 @@ impl ExecutorPool {
         self.read_routing().get(head).and_then(|e| e.shard)
     }
 
-    /// Direct access to one shard's coordinator (tests, per-shard metrics).
+    /// Direct access to one **local** shard's coordinator (tests,
+    /// per-shard metrics).
+    ///
+    /// # Panics
+    ///
+    /// Panics if slot `i` is a remote shard — use
+    /// [`ExecutorPool::shard_metrics`] for slot-agnostic access.
     pub fn shard(&self, i: usize) -> &Coordinator {
-        &self.shards[i]
+        match &self.shards[i] {
+            ShardExec::Local(c) => c,
+            ShardExec::Remote(r) => {
+                panic!("shard {i} is remote ({}); use shard_metrics()", r.addr())
+            }
+        }
+    }
+
+    /// Live metrics for slot `i`, local or remote.
+    pub fn shard_metrics(&self, i: usize) -> &Metrics {
+        self.shards[i].metrics()
+    }
+
+    /// Whether slot `i` is backed by a remote executor process.
+    pub fn is_remote(&self, i: usize) -> bool {
+        !self.shards[i].is_local()
+    }
+
+    /// Whether slot `i` is currently marked up in the routing state.
+    pub fn is_up(&self, i: usize) -> bool {
+        self.up[i].load(Ordering::Acquire)
+    }
+
+    /// Number of slots currently marked up.
+    pub fn shards_up(&self) -> usize {
+        self.up.iter().filter(|f| f.load(Ordering::Acquire)).count()
+    }
+
+    /// Mark slot `i` down: routing atomically stops sending it traffic
+    /// (replicated heads fail over, placed heads answer [`RouteError`]).
+    pub fn mark_down(&self, i: usize) {
+        self.up[i].store(false, Ordering::Release);
+    }
+
+    /// Restore slot `i`: clears any scripted kill latched for it in the
+    /// fault injector, then flips a local slot back up directly or runs
+    /// the full remote recovery ([`ExecutorPool::reconnect_now`]).
+    pub fn recover(&self, i: usize) -> Result<()> {
+        self.fault.clear(i);
+        match &self.shards[i] {
+            ShardExec::Local(_) => {
+                self.up[i].store(true, Ordering::Release);
+                Ok(())
+            }
+            ShardExec::Remote(_) => self.reconnect_now(i),
+        }
+    }
+
+    /// One synchronous recovery attempt for slot `i`: health-probe the
+    /// executor, re-register every head this slot should host (placed
+    /// here or replicated) from the retained weights, then flip the slot
+    /// up.  No-op beyond the flag flip for local slots.  This is exactly
+    /// what the background reconnector runs on its poll interval.
+    pub fn reconnect_now(&self, i: usize) -> Result<()> {
+        let ShardExec::Remote(remote) = &self.shards[i] else {
+            self.up[i].store(true, Ordering::Release);
+            return Ok(());
+        };
+        remote.probe()?;
+        // collect under the locks, push over the wire with them released
+        let to_restore: Vec<(String, HeadWeights)> = {
+            let routing = self.read_routing();
+            let retained = self.read_retained();
+            routing
+                .iter()
+                .filter(|(_, e)| e.shard == Some(i) || e.shard.is_none())
+                .filter_map(|(name, _)| retained.get(name).map(|w| (name.clone(), w.clone())))
+                .collect()
+        };
+        for (name, weights) in to_restore {
+            remote.add_head(&name, weights)?;
+        }
+        self.up[i].store(true, Ordering::Release);
+        Ok(())
     }
 
     /// Register (or hot-swap replace) a head, placing it by this pool's
@@ -263,6 +548,7 @@ impl ExecutorPool {
             }
         };
         // Phase 2 — blocking registration on the owning shard, lock released.
+        let retained = self.has_remote.then(|| weights.clone());
         match self.shards[shard].add_head(name, weights) {
             Ok(()) => {
                 // hot-swap may re-tag the family; commit the final entry
@@ -271,6 +557,10 @@ impl ExecutorPool {
                     name.to_string(),
                     RouteEntry { shard: Some(shard), family: family.map(str::to_string) },
                 );
+                drop(routing);
+                if let Some(w) = retained {
+                    self.write_retained().insert(name.to_string(), w);
+                }
                 Ok(shard)
             }
             Err(e) => {
@@ -309,7 +599,9 @@ impl ExecutorPool {
 
     /// Register one head on **every** shard; requests for it round-robin
     /// across shards (the single-head multi-shard deployment shape, where
-    /// name routing would leave all but one shard idle).
+    /// name routing would leave all but one shard idle).  Replication is
+    /// also what buys failover: while a shard is down, its share of the
+    /// traffic is absorbed by the live replicas.
     pub fn register_replicated(&self, name: &str, weights: HeadWeights) -> Result<()> {
         // reserve under the lock (round-robin routing starts immediately;
         // shards answer "unknown head" until their copy is live), then
@@ -335,6 +627,9 @@ impl ExecutorPool {
                 return Err(e);
             }
         }
+        if self.has_remote {
+            self.write_retained().insert(name.to_string(), weights);
+        }
         Ok(())
     }
 
@@ -354,17 +649,27 @@ impl ExecutorPool {
 
     /// Unregister a head; returns whether it existed.  Replicated heads
     /// are removed from every shard; heads never registered through this
-    /// pool fall back to their hash shard (legacy behavior).
+    /// pool fall back to their hash shard (legacy behavior).  Replica
+    /// copies on shards currently marked down are skipped — a recovered
+    /// shard is rebuilt from the retained set, which no longer carries
+    /// the head.
     pub fn remove_head(&self, name: &str) -> Result<bool> {
         // detach from routing first (lock released before the shard RPCs,
         // which block on the executors)
         let entry = self.write_routing().remove(name);
+        if self.has_remote {
+            self.write_retained().remove(name);
+        }
         match entry {
             Some(RouteEntry { shard: Some(s), .. }) => self.shards[s].remove_head(name),
             Some(RouteEntry { shard: None, .. }) => {
                 let mut existed = false;
-                for shard in &self.shards {
-                    existed |= shard.remove_head(name)?;
+                for (i, shard) in self.shards.iter().enumerate() {
+                    match shard.remove_head(name) {
+                        Ok(e) => existed |= e,
+                        Err(_) if !self.is_up(i) => {}
+                        Err(e) => return Err(e),
+                    }
                 }
                 Ok(existed)
             }
@@ -372,15 +677,19 @@ impl ExecutorPool {
         }
     }
 
-    /// Submit a request to the owning shard; per-shard backpressure.
+    /// Submit a request to the owning (or failover) shard; per-shard
+    /// backpressure.  Fails with a downcastable [`RouteError`] when
+    /// liveness rules out every candidate shard.
     pub fn try_submit(&self, head: &str, features: Vec<f32>)
                       -> Result<Receiver<InferResponse>> {
-        self.shards[self.route(head)].try_submit(head, features)
+        let (shard, redirected) = self.resolve(head)?;
+        self.shards[shard].try_submit_from(head, features, redirected)
     }
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
-        self.shards[self.route(head)].infer(head, features)
+        let (shard, redirected) = self.resolve(head)?;
+        self.shards[shard].infer_from(head, features, redirected)
     }
 
     /// Aggregate metrics across all shards into a fresh snapshot
@@ -419,8 +728,9 @@ impl ExecutorPool {
     }
 
     /// Full stats-registry capture for the exposition surface (TCP `STATS`
-    /// verb, `share-kan stats`).  Deployment-level gauges are zero here;
-    /// `serving::Deployment` layers them on via its own stats handle.
+    /// verb, `share-kan stats`).  Deployment-level gauges are zero here
+    /// except the liveness gauge; `serving::Deployment` layers the rest on
+    /// via its own stats handle.
     pub fn stats_snapshot(&self) -> StatsSnapshot {
         let pm = self.metrics_breakdown();
         StatsSnapshot {
@@ -430,7 +740,7 @@ impl ExecutorPool {
             num_shards: self.shards.len(),
             merged: pm.merged,
             per_shard: pm.per_shard,
-            gauges: Default::default(),
+            gauges: GaugesSnapshot { shards_up: self.shards_up() as u64, ..Default::default() },
             trace: TraceSummary {
                 sample_every: self.tracer.sample_every(),
                 capacity: self.tracer.capacity(),
@@ -471,16 +781,72 @@ impl ExecutorPool {
         touched.iter().filter(|&&t| t).count()
     }
 
-    /// Submit-time shard resolution: routing-table lookup, round-robin for
-    /// replicated heads, hash fallback for unknown heads (which the owning
-    /// shard answers with a clean "unknown head" error).
-    fn route(&self, head: &str) -> usize {
-        match self.read_routing().get(head) {
-            Some(RouteEntry { shard: Some(s), .. }) => *s,
-            Some(RouteEntry { shard: None, .. }) => {
-                self.round_robin.fetch_add(1, Ordering::Relaxed) % self.shards.len()
+    /// Submit-time shard resolution with scripted faults and failover
+    /// applied: liveness routing first ([`ExecutorPool::route`]), then any
+    /// exact-ordinal kill the fault plan scripts for a local slot flips it
+    /// down and re-routes (remote slots take their faults at the transport
+    /// layer instead, so each shard sees ONE request-ordinal stream).
+    /// Returns the absorbing shard plus the shard the request was
+    /// redirected *from*, if any — the absorbing shard's `failovers`
+    /// counter is incremented here.
+    fn resolve(&self, head: &str) -> Result<(usize, Option<u32>)> {
+        let (mut shard, mut redirected) = self.route(head).map_err(anyhow::Error::new)?;
+        // bounded: each kill marks a shard down, and route() errors once
+        // liveness rules every candidate out
+        for _ in 0..=self.shards.len() {
+            if !self.shards[shard].is_local() {
+                break;
             }
-            None => hash_shard(head, self.shards.len()),
+            match self.fault.on_request(shard) {
+                Some(FaultKind::KillShard) => {
+                    self.mark_down(shard);
+                    let down = shard as u32;
+                    let (s, r) = self.route(head).map_err(anyhow::Error::new)?;
+                    shard = s;
+                    redirected = Some(r.unwrap_or(down));
+                }
+                _ => break,
+            }
+        }
+        if redirected.is_some() {
+            self.shards[shard].metrics().counters.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((shard, redirected))
+    }
+
+    /// Routing-table + liveness resolution: table lookup for placed heads
+    /// (down owner → typed error), round-robin over **live** shards for
+    /// replicated heads (recording the down shard skipped when the natural
+    /// target was down), hash fallback for unknown heads.
+    fn route(&self, head: &str) -> Result<(usize, Option<u32>), RouteError> {
+        let n = self.shards.len();
+        match self.read_routing().get(head) {
+            Some(RouteEntry { shard: Some(s), .. }) => {
+                if self.is_up(*s) {
+                    Ok((*s, None))
+                } else {
+                    Err(RouteError::ShardDown { head: head.to_string(), shard: *s })
+                }
+            }
+            Some(RouteEntry { shard: None, .. }) => {
+                let start = self.round_robin.fetch_add(1, Ordering::Relaxed) % n;
+                for i in 0..n {
+                    let s = (start + i) % n;
+                    if self.is_up(s) {
+                        let redirected = if i == 0 { None } else { Some(start as u32) };
+                        return Ok((s, redirected));
+                    }
+                }
+                Err(RouteError::AllReplicasDown(head.to_string()))
+            }
+            None => {
+                let s = hash_shard(head, n);
+                if self.is_up(s) {
+                    Ok((s, None))
+                } else {
+                    Err(RouteError::UnknownHead(head.to_string()))
+                }
+            }
         }
     }
 
@@ -527,20 +893,69 @@ impl ExecutorPool {
     fn write_routing(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, RouteEntry>> {
         self.routing.write().unwrap_or_else(|e| e.into_inner())
     }
+
+    fn read_retained(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, HeadWeights>> {
+        self.retained.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write_retained(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, HeadWeights>> {
+        self.retained.write().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Background recovery loop: poll down remote slots, probe + re-register.
+/// Parked (not slept) between polls so shutdown can interrupt immediately.
+fn reconnect_loop(pool: ExecutorPool, stop: Arc<AtomicBool>, interval: Duration) {
+    loop {
+        std::thread::park_timeout(interval);
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        for i in 0..pool.num_shards() {
+            if pool.is_remote(i) && !pool.is_up(i) {
+                // best-effort: a dead executor stays down until it answers
+                let _ = pool.reconnect_now(i);
+            }
+        }
+    }
 }
 
 impl PoolHandle {
-    /// Graceful shutdown: stop and join every shard executor.
-    pub fn shutdown(self) {
-        for h in self.handles {
+    /// Graceful shutdown: stop the reconnector, then stop and join every
+    /// shard executor (local threads and remote worker pools).
+    pub fn shutdown(mut self) {
+        self.stop_reconnector();
+        for h in self.handles.drain(..) {
             h.shutdown();
         }
+        for h in self.remote_handles.drain(..) {
+            h.shutdown();
+        }
+    }
+
+    fn stop_reconnector(&mut self) {
+        if let Some(stop) = self.reconnector_stop.take() {
+            stop.store(true, Ordering::Release);
+        }
+        if let Some(t) = self.reconnector.take() {
+            t.thread().unpark();
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for PoolHandle {
+    fn drop(&mut self) {
+        // shard handles join themselves on drop; the reconnector would
+        // otherwise keep a pool clone alive forever
+        self.stop_reconnector();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fault::FaultPlan;
 
     #[test]
     fn zero_shards_rejected() {
@@ -548,11 +963,9 @@ mod tests {
         assert!(ExecutorPool::start(cfg).is_err());
     }
 
-    fn family_pool(num_shards: usize, placement: Placement)
-                   -> (PoolHandle, Vec<(String, HeadWeights)>, usize) {
+    fn family_heads() -> (Vec<(String, HeadWeights)>, usize, BackendSpec) {
         use crate::kan::checkpoint::synthetic_dense;
         use crate::kan::spec::KanSpec;
-        use crate::runtime::BackendSpec;
         use crate::vq::Precision;
 
         let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 6 };
@@ -571,16 +984,21 @@ mod tests {
             })
             .collect();
         let bspec = BackendSpec::for_head(&heads[0].1).with_buckets(&[1, 4]);
+        (heads, spec.d_in, bspec)
+    }
+
+    fn family_pool(num_shards: usize, placement: Placement)
+                   -> (PoolHandle, Vec<(String, HeadWeights)>, usize) {
+        let (heads, d_in, bspec) = family_heads();
         let pool = ExecutorPool::start(PoolConfig {
             backend: BackendConfig::FamilyArena(bspec),
-            policy: BatchPolicy::default(),
             queue_capacity: 64,
             num_shards,
             placement,
             ..Default::default()
         })
         .unwrap();
-        (pool, heads, spec.d_in)
+        (pool, heads, d_in)
     }
 
     #[test]
@@ -690,11 +1108,65 @@ mod tests {
         assert_eq!(snap.policy, "hash");
         assert!(!snap.kernel.is_empty());
         assert_eq!(snap.num_shards, 2);
+        assert_eq!(snap.gauges.shards_up, 2);
         assert_eq!(snap.trace.sample_every, 1);
         assert!(snap.trace.events > 0, "tracing on but no events recorded");
         // every traced request's span must be recoverable end-to-end
         let complete = snap.trace.spans.iter().filter(|s| s.is_complete()).count();
         assert!(complete >= 1, "no complete span among {:?}", snap.trace.spans);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn scripted_kill_fails_over_replicated_head() {
+        // kill shard 0 at its 3rd admitted request: every request must
+        // still answer (absorbed by the live replica), and the kill must
+        // show in the liveness gauge and the failover counter
+        let (heads, d_in, bspec) = family_heads();
+        let plan = FaultPlan::new(7).kill_shard_at(0, 3);
+        let pool = ExecutorPool::start(PoolConfig {
+            backend: BackendConfig::FamilyArena(bspec),
+            queue_capacity: 64,
+            num_shards: 2,
+            fault: Some(plan.injector()),
+            reconnect_interval: None,
+            ..Default::default()
+        })
+        .unwrap();
+        pool.client.register_replicated("default", heads[0].1.clone()).unwrap();
+        for _ in 0..8 {
+            pool.client.infer("default", vec![0.1; d_in]).unwrap();
+        }
+        assert!(!pool.client.is_up(0), "scripted kill flips shard 0 down");
+        assert_eq!(pool.client.shards_up(), 1);
+        let pm = pool.client.metrics_breakdown();
+        assert_eq!(pm.merged.counters.responses, 8, "no request lost across the kill");
+        assert!(pm.merged.counters.failovers > 0, "redirects counted");
+        // recovery clears the scripted kill latch and restores round-robin
+        pool.client.recover(0).unwrap();
+        assert_eq!(pool.client.shards_up(), 2);
+        pool.client.infer("default", vec![0.1; d_in]).unwrap();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn down_shard_routes_are_typed_errors() {
+        let (pool, heads, d_in) = family_pool(2, Placement::Hash);
+        let (name, w) = &heads[0];
+        let s = pool.client.register_head(name, None, w.clone()).unwrap();
+        pool.client.mark_down(s);
+        let err = pool.client.infer(name, vec![0.1; d_in]).unwrap_err();
+        let route = err.downcast_ref::<RouteError>().expect("typed route error");
+        assert_eq!(*route, RouteError::ShardDown { head: name.clone(), shard: s });
+        pool.client.recover(s).unwrap();
+        assert!(pool.client.infer(name, vec![0.1; d_in]).is_ok());
+        // a replicated head with every shard down is its own typed error
+        pool.client.register_replicated("default", w.clone()).unwrap();
+        pool.client.mark_down(0);
+        pool.client.mark_down(1);
+        let err = pool.client.infer("default", vec![0.1; d_in]).unwrap_err();
+        assert_eq!(err.downcast_ref::<RouteError>(),
+                   Some(&RouteError::AllReplicasDown("default".to_string())));
         pool.shutdown();
     }
 }

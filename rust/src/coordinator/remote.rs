@@ -1,0 +1,550 @@
+//! Remote shard executors: a pool shard slot backed by a standalone
+//! `share-kan shard --listen` process instead of an in-process
+//! [`super::server::Coordinator`].
+//!
+//! A [`RemoteShard`] is the client half: it mirrors the coordinator's
+//! submit semantics exactly (bounded admission queue, `requests`/
+//! `rejected`/`responses` accounting, trace stamps), but hands admitted
+//! requests to a small pool of worker threads that speak the
+//! newline-delimited-JSON TCP protocol ([`super::tcp`]) to the executor
+//! process.  Workers reconnect lazily, retry transport failures with
+//! bounded exponential backoff (counted in `Counters::retries`), and mark
+//! the shard **down** (a shared [`AtomicBool`] the pool's routing table
+//! reads) when an attempt budget is exhausted — the signal that triggers
+//! head failover to replicas.
+//!
+//! Head registration travels over the same wire: [`RemoteShard::add_head`]
+//! serializes the head's [`Checkpoint`] (SKPT bytes, hex-armored) plus the
+//! executor configuration into a `register` verb, so a freshly started
+//! shard process needs no local files — the deployment pushes everything.
+//! Control operations use a fresh timeout-bounded connection per call so
+//! they never queue behind inference traffic.
+//!
+//! Application-level errors the remote server reports
+//! ([`ClientError::Server`] — unknown head, shape mismatch, backend
+//! failure) are **not** retried and do **not** mark the shard down: the
+//! process answered, so the shard is alive.
+
+use std::io;
+use std::net::ToSocketAddrs;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::fault::FaultInjector;
+use super::heads::HeadWeights;
+use super::request::InferResponse;
+use super::server::Metrics;
+use super::tcp::{ClientError, TcpClient};
+use crate::obs::{Stage, Tracer};
+use crate::util::json::{self, Json};
+
+/// Connection and retry policy for one remote shard slot.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// Executor address, `"host:port"`.
+    pub addr: String,
+    /// TCP connect deadline per attempt.
+    pub connect_timeout: Duration,
+    /// Socket read/write deadline per request round-trip.
+    pub request_timeout: Duration,
+    /// Transport-failure retries per request beyond the first attempt
+    /// (application-level server errors are never retried).
+    pub retries: u32,
+    /// Base backoff before retry attempt 1; doubles per further attempt.
+    pub backoff: Duration,
+    /// Worker threads (= concurrent in-flight connections) for this slot.
+    pub connections: usize,
+    /// Bounded admission-queue depth (mirrors the local coordinator's
+    /// backpressure behaviour).
+    pub queue_capacity: usize,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            addr: String::new(),
+            connect_timeout: Duration::from_secs(1),
+            request_timeout: Duration::from_secs(5),
+            retries: 2,
+            backoff: Duration::from_millis(10),
+            connections: 2,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl RemoteConfig {
+    /// Config for `addr` with default timeouts/retries.
+    pub fn for_addr(addr: impl Into<String>) -> RemoteConfig {
+        RemoteConfig { addr: addr.into(), ..RemoteConfig::default() }
+    }
+}
+
+/// Executor configuration forwarded to the standalone shard process on
+/// head registration (it builds its backend from this plus the shipped
+/// checkpoint — no local files needed).
+#[derive(Debug, Clone)]
+pub struct RemoteExecConfig {
+    /// Backend label: `"native"`, `"arena"` or `"family"`.
+    pub backend: String,
+    /// Kernel mode label: `"auto"`, `"scalar"` or `"simd"`.
+    pub kernel: String,
+    /// AOT batch buckets.
+    pub buckets: Vec<usize>,
+    /// Dynamic-batcher max batch size.
+    pub max_batch: usize,
+    /// Dynamic-batcher max wait in milliseconds.
+    pub max_wait_ms: u64,
+    /// Remote executor's own admission-queue depth.
+    pub queue_capacity: usize,
+}
+
+impl Default for RemoteExecConfig {
+    fn default() -> Self {
+        RemoteExecConfig {
+            backend: "arena".to_string(),
+            kernel: "auto".to_string(),
+            buckets: vec![1, 8],
+            max_batch: 8,
+            max_wait_ms: 1,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+enum Job {
+    Infer {
+        id: u64,
+        head: String,
+        features: Vec<f32>,
+        enqueued: Instant,
+        traced: bool,
+        resp: mpsc::Sender<InferResponse>,
+    },
+    Shutdown,
+}
+
+/// Shared worker context (everything the transport loop needs).
+struct WorkerCtx {
+    shard: usize,
+    cfg: RemoteConfig,
+    metrics: Arc<Metrics>,
+    up: Arc<AtomicBool>,
+    fault: Arc<FaultInjector>,
+}
+
+/// Client half of a remote shard slot; cloneable across threads (mirrors
+/// [`super::server::Coordinator`]).
+#[derive(Clone)]
+pub struct RemoteShard {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    cfg: Arc<RemoteConfig>,
+    exec: Arc<RemoteExecConfig>,
+    shard: usize,
+    up: Arc<AtomicBool>,
+    fault: Arc<FaultInjector>,
+}
+
+/// Owner handle joining the worker threads on shutdown/drop.
+pub struct RemoteShardHandle {
+    tx: SyncSender<Job>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RemoteShard {
+    /// Start the worker pool for one remote slot.  No connection is made
+    /// yet — workers dial lazily on first traffic, so a deployment can
+    /// start before its executors.
+    pub fn start(shard: usize, cfg: RemoteConfig, exec: RemoteExecConfig, tracer: Arc<Tracer>,
+                 fault: Arc<FaultInjector>) -> Result<(RemoteShard, RemoteShardHandle)> {
+        anyhow::ensure!(!cfg.addr.is_empty(), "remote shard {shard}: empty address");
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_capacity.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::for_shard(tracer, shard as u32));
+        let up = Arc::new(AtomicBool::new(true));
+        let mut workers = Vec::new();
+        for w in 0..cfg.connections.max(1) {
+            let ctx = WorkerCtx {
+                shard,
+                cfg: cfg.clone(),
+                metrics: metrics.clone(),
+                up: up.clone(),
+                fault: fault.clone(),
+            };
+            let rx = rx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("share-kan-remote-{shard}-{w}"))
+                    .spawn(move || worker_loop(rx, ctx))?,
+            );
+        }
+        let client = RemoteShard {
+            tx: tx.clone(),
+            metrics,
+            next_id: Arc::new(AtomicU64::new(((shard as u64) << 48) | 1)),
+            cfg: Arc::new(cfg),
+            exec: Arc::new(exec),
+            shard,
+            up,
+            fault,
+        };
+        Ok((client, RemoteShardHandle { tx, workers }))
+    }
+
+    /// Live metrics for this slot (latency + request accounting; batch
+    /// counters stay zero — batching happens inside the remote executor,
+    /// visible in its own `STATS`).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The executor address this slot dials.
+    pub fn addr(&self) -> &str {
+        &self.cfg.addr
+    }
+
+    /// Whether the slot is currently marked up (shared with the pool's
+    /// routing table).
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::Acquire)
+    }
+
+    /// The shared up/down flag (the pool stores this in its routing state).
+    pub(crate) fn up_flag(&self) -> Arc<AtomicBool> {
+        self.up.clone()
+    }
+
+    /// Submit mirroring [`super::server::Coordinator::try_submit`]:
+    /// bounded queue, reject-on-full, identical counter/trace semantics.
+    pub(crate) fn try_submit_from(&self, head: &str, features: Vec<f32>,
+                                  redirected_from: Option<u32>)
+                                  -> Result<mpsc::Receiver<InferResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let traced = self.metrics.tracer.should_sample(id);
+        if traced {
+            self.metrics.tracer.record(id, Stage::Enqueue, self.metrics.shard);
+            if let Some(from) = redirected_from {
+                self.metrics.tracer.record(id, Stage::Redirect, from);
+            }
+        }
+        let job = Job::Infer {
+            id,
+            head: head.to_string(),
+            features,
+            enqueued: Instant::now(),
+            traced,
+            resp: rtx,
+        };
+        self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("admission queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("remote shard workers down"),
+        }
+    }
+
+    /// Blocking submit-and-wait (mirrors `Coordinator::infer`).
+    pub(crate) fn infer_from(&self, head: &str, features: Vec<f32>,
+                             redirected_from: Option<u32>) -> Result<InferResponse> {
+        let rx = self.try_submit_from(head, features, redirected_from)?;
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?;
+        if let Some(e) = &resp.error {
+            anyhow::bail!("inference failed: {e}");
+        }
+        Ok(resp)
+    }
+
+    /// Push a head to the remote executor: ships the executor config and
+    /// the head's checkpoint (hex-armored SKPT bytes) in one `register`
+    /// verb over a fresh timeout-bounded connection.
+    pub fn add_head(&self, name: &str, weights: HeadWeights) -> Result<()> {
+        let ck = weights.to_checkpoint();
+        let mut bytes = Vec::new();
+        ck.write_to(&mut bytes)?;
+        let req = Json::obj(vec![
+            ("cmd", Json::str("register")),
+            ("head", Json::str(name)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("backend", Json::str(self.exec.backend.as_str())),
+                    ("kernel", Json::str(self.exec.kernel.as_str())),
+                    (
+                        "buckets",
+                        Json::Arr(self.exec.buckets.iter().map(|&b| Json::num(b as f64)).collect()),
+                    ),
+                    ("max_batch", Json::num(self.exec.max_batch as f64)),
+                    ("max_wait_ms", Json::num(self.exec.max_wait_ms as f64)),
+                    ("queue_capacity", Json::num(self.exec.queue_capacity as f64)),
+                ]),
+            ),
+            ("checkpoint", Json::str(hex_encode(&bytes))),
+        ]);
+        let reply = self.control(&json::to_string(&req))?;
+        anyhow::ensure!(
+            reply.get("ok").and_then(|j| j.as_bool()) == Some(true),
+            "remote shard {}: register '{name}' not acknowledged",
+            self.shard
+        );
+        Ok(())
+    }
+
+    /// Remove a head on the remote executor; returns whether it existed.
+    pub fn remove_head(&self, name: &str) -> Result<bool> {
+        let req =
+            Json::obj(vec![("cmd", Json::str("remove")), ("head", Json::str(name))]);
+        let reply = self.control(&json::to_string(&req))?;
+        Ok(reply.get("existed").and_then(|j| j.as_bool()).unwrap_or(false))
+    }
+
+    /// Health-probe the executor over a fresh connection; returns its
+    /// registered head count.  An `Err` means the process is unreachable —
+    /// what the pool's reconnector polls before re-registering heads.
+    pub fn probe(&self) -> Result<u64> {
+        let reply = self.control("{\"cmd\": \"health\"}")?;
+        anyhow::ensure!(
+            reply.get("ok").and_then(|j| j.as_bool()) == Some(true),
+            "remote shard {}: health not acknowledged",
+            self.shard
+        );
+        Ok(reply.get("heads").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64)
+    }
+
+    /// One control round-trip on a fresh timeout-bounded connection
+    /// (control ops never queue behind inference traffic).
+    fn control(&self, line: &str) -> Result<Json> {
+        if self.fault.on_connect(self.shard) {
+            anyhow::bail!("remote shard {} at {}: injected connect refusal", self.shard,
+                          self.cfg.addr);
+        }
+        let mut client = TcpClient::connect_with_timeouts(&self.cfg.addr,
+                                                          self.cfg.connect_timeout,
+                                                          self.cfg.request_timeout)
+            .map_err(|e| {
+                anyhow::anyhow!("remote shard {} at {}: {e}", self.shard, self.cfg.addr)
+            })?;
+        client
+            .request(line)
+            .map_err(|e| anyhow::anyhow!("remote shard {} at {}: {e}", self.shard, self.cfg.addr))
+    }
+}
+
+impl RemoteShardHandle {
+    /// Stop the workers after the queue drains and join them.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for RemoteShardHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, ctx: WorkerCtx) {
+    let mut conn: Option<TcpClient> = None;
+    loop {
+        // hold the lock only for the dequeue, never for network I/O
+        let job = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        match job {
+            Ok(Job::Infer { id, head, features, enqueued, traced, resp }) => {
+                let reply = match run_request(&mut conn, &ctx, &head, &features) {
+                    Ok(scores) => InferResponse::ok(id, scores, enqueued.elapsed()),
+                    Err(e) => {
+                        if !matches!(e, ClientError::Server(_)) {
+                            // transport budget exhausted: the process is
+                            // unreachable — flip the shared down flag the
+                            // routing table reads
+                            ctx.up.store(false, Ordering::Release);
+                        }
+                        InferResponse::err(id, format!("remote shard {}: {e}", ctx.shard))
+                    }
+                };
+                // every admitted request is answered exactly once — same
+                // invariant as the local executor's respond paths
+                ctx.metrics.latency.record(enqueued.elapsed());
+                ctx.metrics.counters.responses.fetch_add(1, Ordering::Relaxed);
+                if traced {
+                    ctx.metrics.tracer.record(id, Stage::Reply, ctx.shard as u32);
+                }
+                let _ = resp.send(reply);
+            }
+            Ok(Job::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+/// One request with bounded retry-with-backoff.  Server-side application
+/// errors return immediately (the shard is alive); transport failures drop
+/// the connection and retry up to the budget.
+fn run_request(conn: &mut Option<TcpClient>, ctx: &WorkerCtx, head: &str, features: &[f32])
+               -> std::result::Result<Vec<f32>, ClientError> {
+    let mut last = ClientError::Io(io::Error::new(io::ErrorKind::NotConnected, "never attempted"));
+    for attempt in 0..=ctx.cfg.retries {
+        if attempt > 0 {
+            ctx.metrics.counters.retries.fetch_add(1, Ordering::Relaxed);
+            let backoff = ctx.cfg.backoff.saturating_mul(1u32 << (attempt - 1).min(16));
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+        }
+        let client = match ensure_conn(conn, ctx) {
+            Ok(c) => c,
+            Err(e) => {
+                last = e;
+                continue;
+            }
+        };
+        match client.infer(head, features) {
+            Ok(scores) => return Ok(scores),
+            Err(ClientError::Server(msg)) => return Err(ClientError::Server(msg)),
+            Err(e) => {
+                *conn = None; // poison the connection; redial on retry
+                last = e;
+            }
+        }
+    }
+    Err(last)
+}
+
+fn ensure_conn<'a>(conn: &'a mut Option<TcpClient>, ctx: &WorkerCtx)
+                   -> std::result::Result<&'a mut TcpClient, ClientError> {
+    if conn.is_none() {
+        if ctx.fault.on_connect(ctx.shard) {
+            return Err(ClientError::Io(io::Error::new(io::ErrorKind::ConnectionRefused,
+                                                      "injected: connect refused")));
+        }
+        let mut c = TcpClient::connect_with_timeouts(&ctx.cfg.addr, ctx.cfg.connect_timeout,
+                                                     ctx.cfg.request_timeout)?;
+        c.inject_faults(ctx.fault.clone(), ctx.shard);
+        *conn = Some(c);
+    }
+    Ok(conn.as_mut().expect("connection just established"))
+}
+
+/// Resolve `"host:port"` to the first socket address.
+pub(crate) fn resolve_addr(addr: &str) -> io::Result<std::net::SocketAddr> {
+    addr.to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput,
+                                      format!("address '{addr}' resolved to nothing")))
+}
+
+/// Lowercase hex armor for binary payloads on the JSON line protocol.
+pub(crate) fn hex_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push(char::from_digit((b >> 4) as u32, 16).expect("nibble < 16"));
+        out.push(char::from_digit((b & 0xf) as u32, 16).expect("nibble < 16"));
+    }
+    out
+}
+
+/// Inverse of [`hex_encode`]; rejects odd lengths and non-hex digits.
+pub(crate) fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    anyhow::ensure!(s.len() % 2 == 0, "hex payload has odd length {}", s.len());
+    let digits = s.as_bytes();
+    let mut out = Vec::with_capacity(digits.len() / 2);
+    for pair in digits.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16);
+        let lo = (pair[1] as char).to_digit(16);
+        match (hi, lo) {
+            (Some(h), Some(l)) => out.push(((h << 4) | l) as u8),
+            _ => anyhow::bail!("invalid hex byte '{}{}'", pair[0] as char, pair[1] as char),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_round_trips() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        let hex = hex_encode(&bytes);
+        assert_eq!(hex.len(), 512);
+        assert_eq!(hex_decode(&hex).unwrap(), bytes);
+        assert!(hex_decode("abc").is_err(), "odd length rejected");
+        assert!(hex_decode("zz").is_err(), "non-hex rejected");
+        assert_eq!(hex_encode(&[0x00, 0xff, 0x1a]), "00ff1a");
+    }
+
+    #[test]
+    fn unreachable_executor_marks_down_and_answers_every_request() {
+        // point at a port nothing listens on, with a tiny budget: every
+        // request must still get a typed error response and the slot must
+        // flip down — no hangs, no lost replies
+        let cfg = RemoteConfig {
+            addr: "127.0.0.1:1".to_string(),
+            connect_timeout: Duration::from_millis(50),
+            request_timeout: Duration::from_millis(50),
+            retries: 1,
+            backoff: Duration::ZERO,
+            connections: 1,
+            queue_capacity: 8,
+        };
+        let (shard, handle) =
+            RemoteShard::start(3, cfg, RemoteExecConfig::default(), Tracer::disabled(),
+                               FaultInjector::none())
+                .unwrap();
+        assert!(shard.is_up());
+        let err = shard.infer_from("h", vec![0.0; 4], None).unwrap_err();
+        assert!(err.to_string().contains("remote shard 3"), "typed remote error: {err}");
+        assert!(!shard.is_up(), "transport exhaustion marks the slot down");
+        let m = shard.metrics().counters.snapshot();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.responses, 1);
+        assert_eq!(m.inflight(), 0);
+        assert_eq!(m.retries, 1, "one retry beyond the first attempt");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn injected_refusal_blocks_control_ops() {
+        let injector = crate::coordinator::fault::FaultPlan::new(5).refuse_connect(0).injector();
+        let cfg = RemoteConfig {
+            addr: "127.0.0.1:1".to_string(),
+            connect_timeout: Duration::from_millis(50),
+            ..RemoteConfig::default()
+        };
+        let (shard, handle) = RemoteShard::start(0, cfg, RemoteExecConfig::default(),
+                                                 Tracer::disabled(), injector)
+            .unwrap();
+        let err = shard.probe().unwrap_err();
+        assert!(err.to_string().contains("injected"), "refusal surfaces typed: {err}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn resolve_addr_parses_host_port() {
+        let a = resolve_addr("127.0.0.1:9000").unwrap();
+        assert_eq!(a.port(), 9000);
+        assert!(resolve_addr("not an address").is_err());
+    }
+}

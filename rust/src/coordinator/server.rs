@@ -202,6 +202,16 @@ impl Coordinator {
     /// Applies backpressure by rejecting when the admission queue is full.
     pub fn try_submit(&self, head: &str, features: Vec<f32>)
                       -> Result<Receiver<InferResponse>> {
+        self.try_submit_from(head, features, None)
+    }
+
+    /// Submit with failover provenance: when the pool redirected this
+    /// request away from a down shard, `redirected_from` names that shard
+    /// and a [`Stage::Redirect`] event is stamped (carrying the *source*
+    /// shard id) between enqueue and routing so traces show the hop.
+    pub(crate) fn try_submit_from(&self, head: &str, features: Vec<f32>,
+                                  redirected_from: Option<u32>)
+                                  -> Result<Receiver<InferResponse>> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // sampling decision is made ONCE here; when tracing is off this is
@@ -209,6 +219,9 @@ impl Coordinator {
         let traced = self.metrics.tracer.should_sample(id);
         if traced {
             self.metrics.tracer.record(id, Stage::Enqueue, self.metrics.shard);
+            if let Some(from) = redirected_from {
+                self.metrics.tracer.record(id, Stage::Redirect, from);
+            }
         }
         let enqueued = Instant::now();
         let req = InferRequest {
@@ -233,7 +246,14 @@ impl Coordinator {
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, head: &str, features: Vec<f32>) -> Result<InferResponse> {
-        let rx = self.try_submit(head, features)?;
+        self.infer_from(head, features, None)
+    }
+
+    /// Blocking submit-and-wait carrying failover provenance (see
+    /// [`Coordinator::try_submit_from`]).
+    pub(crate) fn infer_from(&self, head: &str, features: Vec<f32>,
+                             redirected_from: Option<u32>) -> Result<InferResponse> {
+        let rx = self.try_submit_from(head, features, redirected_from)?;
         let resp = rx.recv().map_err(|_| anyhow::anyhow!("response channel closed"))?;
         if let Some(e) = &resp.error {
             anyhow::bail!("inference failed: {e}");

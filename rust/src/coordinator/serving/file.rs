@@ -28,6 +28,13 @@
 //! k = 16                        # codebook size for synthetic compression
 //! seed = 42
 //!
+//! [[shard]]                     # optional: back a pool slot with a remote
+//! index = 1                     # executor process (`share-kan shard --listen`)
+//! remote = "127.0.0.1:7201"     # host:port the executor listens on
+//! connect_timeout_ms = 1000     # optional dial deadline
+//! request_timeout_ms = 5000     # optional per-request socket deadline
+//! retries = 2                   # optional bounded retry-with-backoff budget
+//!
 //! [[head]]
 //! name = "solo"                 # default: checkpoint file stem
 //! path = "heads/solo.skpt"      # relative to the deployment file
@@ -62,7 +69,7 @@ use anyhow::{Context, Result};
 
 use super::super::heads::HeadWeights;
 use super::placement::Placement;
-use super::{BackendKind, DeploymentSpec};
+use super::{BackendKind, DeploymentSpec, RemoteShardSpec};
 use crate::kan::checkpoint::{synthetic_dense, Checkpoint};
 use crate::kan::spec::{KanSpec, VqSpec};
 use crate::util::json::Json;
@@ -176,6 +183,25 @@ fn from_doc(doc: &Json, base: &Path) -> Result<DeploymentSpec> {
     #[cfg(feature = "pjrt")]
     if let Some(dir) = get_str(dep, "artifacts_dir")? {
         spec.artifacts_dir = Some(resolve(base, dir));
+    }
+
+    let shards_tbl = doc.get("shard").and_then(|j| j.as_arr()).unwrap_or(&[]);
+    for (i, sh) in shards_tbl.iter().enumerate() {
+        let index = get_usize(sh, "index")?
+            .ok_or_else(|| anyhow::anyhow!("shard #{}: needs 'index'", i + 1))?;
+        let addr = get_str(sh, "remote")?
+            .ok_or_else(|| anyhow::anyhow!("shard #{}: needs 'remote' (host:port)", i + 1))?;
+        let mut remote = RemoteShardSpec::new(index, addr);
+        if let Some(ms) = get_usize(sh, "connect_timeout_ms")? {
+            remote.connect_timeout_ms = ms as u64;
+        }
+        if let Some(ms) = get_usize(sh, "request_timeout_ms")? {
+            remote.request_timeout_ms = ms as u64;
+        }
+        if let Some(n) = get_usize(sh, "retries")? {
+            remote.retries = n as u32;
+        }
+        spec = spec.remote_shard(remote);
     }
 
     // shape + seeds for synthetic sources

@@ -46,8 +46,10 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::batcher::BatchPolicy;
+use super::fault::FaultPlan;
 use super::heads::HeadWeights;
 use super::pool::{ExecutorPool, HeadPlacement, PoolConfig, PoolHandle, PoolMetrics};
+use super::remote::RemoteConfig;
 use crate::kan::checkpoint::Checkpoint;
 use crate::memplan::{plan_family, plan_head};
 use crate::obs::{Gauges, StatsSnapshot, TraceConfig, STAGE_COUNT};
@@ -100,6 +102,37 @@ impl std::fmt::Display for BackendKind {
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => "pjrt",
         })
+    }
+}
+
+/// One shard slot served by a standalone `share-kan shard --listen`
+/// process instead of an in-process executor (the `[[shard]]` table of a
+/// deployment file).
+#[derive(Debug, Clone)]
+pub struct RemoteShardSpec {
+    /// Pool slot index this executor backs (`0..shards`).
+    pub index: usize,
+    /// Executor address, `"host:port"`.
+    pub addr: String,
+    /// TCP connect deadline per attempt, in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Socket read/write deadline per request round-trip, in milliseconds.
+    pub request_timeout_ms: u64,
+    /// Transport-failure retries per request beyond the first attempt.
+    pub retries: u32,
+}
+
+impl RemoteShardSpec {
+    /// A remote slot for `addr` with default timeouts (1 s connect, 5 s
+    /// request) and 2 retries.
+    pub fn new(index: usize, addr: impl Into<String>) -> RemoteShardSpec {
+        RemoteShardSpec {
+            index,
+            addr: addr.into(),
+            connect_timeout_ms: 1_000,
+            request_timeout_ms: 5_000,
+            retries: 2,
+        }
     }
 }
 
@@ -158,6 +191,10 @@ pub struct DeploymentSpec {
     /// simulator at deploy time and surface it as a gauge (family backend
     /// + VQ heads only; one-shot simulation, not a live probe).
     pub memsim_gauge: bool,
+    /// Shard slots backed by remote `share-kan shard` executor processes
+    /// (`[[shard]]` tables in a deployment file); slots not named here run
+    /// in-process.
+    pub remote_shards: Vec<RemoteShardSpec>,
     heads: Vec<HeadEntry>,
 }
 
@@ -194,8 +231,15 @@ impl DeploymentSpec {
             trace_capacity: TraceConfig::default().capacity,
             stats_interval: None,
             memsim_gauge: false,
+            remote_shards: Vec::new(),
             heads: Vec::new(),
         }
+    }
+
+    /// Back one shard slot with a remote executor process (builder style).
+    pub fn remote_shard(mut self, spec: RemoteShardSpec) -> Self {
+        self.remote_shards.push(spec);
+        self
     }
 
     /// Trace 1-in-N requests (builder style; 0 disables tracing).
@@ -379,6 +423,26 @@ impl DeploymentSpec {
             "trace_capacity must hold at least one full span ({STAGE_COUNT} events) \
              when tracing is on"
         );
+        let mut remote_slots = BTreeSet::new();
+        for r in &self.remote_shards {
+            anyhow::ensure!(
+                r.index < self.shards,
+                "remote shard index {} out of range (pool has {} shards)",
+                r.index,
+                self.shards
+            );
+            anyhow::ensure!(!r.addr.is_empty(), "remote shard {} has an empty address", r.index);
+            anyhow::ensure!(
+                remote_slots.insert(r.index),
+                "shard {} is named by two [[shard]] entries",
+                r.index
+            );
+        }
+        #[cfg(feature = "pjrt")]
+        anyhow::ensure!(
+            !(self.backend == BackendKind::Pjrt && !self.remote_shards.is_empty()),
+            "remote shards cannot forward a pjrt backend"
+        );
         Ok(())
     }
 
@@ -514,6 +578,20 @@ impl DeploymentSpec {
         Ok(report)
     }
 
+    /// Dry-run this spec's placements against a scripted fault plan:
+    /// every head must keep at least one live placement after the plan's
+    /// shard kills land.  A pinned head on a killed shard, or a
+    /// replicated head whose every replica shard is killed, produces a
+    /// [`FindingKind::NoLivePlacement`](crate::analysis::FindingKind)
+    /// finding — `share-kan verify --deployment ... --kill 0,2` surfaces
+    /// this before any process starts.
+    pub fn verify_fault_plan(&self, plan: &FaultPlan) -> Result<crate::analysis::VerifyReport> {
+        let placements = self.simulate_placements()?;
+        let pairs: Vec<(String, Option<usize>)> =
+            placements.into_iter().map(|p| (p.head, p.shard)).collect();
+        Ok(crate::analysis::verify_live_placements(&pairs, self.shards, &plan.killed_shards()))
+    }
+
     /// Static mirror of [`Deployment::report`]'s resident-byte total: the
     /// exact bytes a fresh deployment of this spec would report, computed
     /// from [`DeploymentSpec::simulate_placements`] and the same per-head
@@ -601,6 +679,17 @@ impl DeploymentSpec {
                     .unwrap_or_else(crate::runtime::default_artifacts_dir),
             },
         };
+        let mut remotes: Vec<Option<RemoteConfig>> = vec![None; self.shards];
+        for r in &self.remote_shards {
+            remotes[r.index] = Some(RemoteConfig {
+                addr: r.addr.clone(),
+                connect_timeout: Duration::from_millis(r.connect_timeout_ms),
+                request_timeout: Duration::from_millis(r.request_timeout_ms),
+                retries: r.retries,
+                queue_capacity: self.queue_capacity,
+                ..RemoteConfig::default()
+            });
+        }
         let handle = ExecutorPool::start(PoolConfig {
             backend,
             policy: BatchPolicy { max_batch: self.max_batch, max_wait: self.max_wait },
@@ -611,6 +700,9 @@ impl DeploymentSpec {
                 sample_every: self.trace_sample,
                 capacity: self.trace_capacity,
             },
+            remotes,
+            fault: None,
+            reconnect_interval: Some(Duration::from_millis(500)),
         })?;
 
         // One-shot cache-simulator estimate of the family shared-region L2
@@ -800,7 +892,9 @@ impl Deployment {
     /// gauges spliced in.
     pub fn stats(&self) -> StatsSnapshot {
         let mut snap = self.handle.client.stats_snapshot();
+        let shards_up = snap.gauges.shards_up;
         snap.gauges = self.gauges.snapshot();
+        snap.gauges.shards_up = shards_up;
         snap
     }
 
@@ -975,7 +1069,9 @@ impl StatsHandle {
     /// trace spans).
     pub fn snapshot(&self) -> StatsSnapshot {
         let mut snap = self.pool.stats_snapshot();
+        let shards_up = snap.gauges.shards_up;
         snap.gauges = self.gauges.snapshot();
+        snap.gauges.shards_up = shards_up;
         snap
     }
 }

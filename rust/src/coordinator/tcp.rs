@@ -12,37 +12,67 @@
 //! One thread per connection (std::net) — request concurrency is bounded by
 //! the coordinator's admission queue, not by connection count.  This is the
 //! deployment-shaped entry point `share-kan serve --tcp ADDR` exposes; unit
-//! and integration tests drive it over localhost.  A server fronts either a
-//! single executor ([`TcpServer::start`]) or a sharded pool
-//! ([`TcpServer::start_pool`] — what `serve --deployment --tcp` uses), so
-//! routing-table placement applies to network traffic too.
+//! and integration tests drive it over localhost.  A server fronts a
+//! single executor ([`TcpServer::start`]), a sharded pool
+//! ([`TcpServer::start_pool`] — what `serve --deployment --tcp` uses), or a
+//! **standalone shard executor** ([`TcpServer::start_shard`] — the
+//! `share-kan shard --listen` process a pool's remote slots dial), so
+//! routing-table placement applies to network traffic too.  A shard
+//! executor additionally accepts `register` / `remove` / `health` verbs:
+//! heads arrive over the wire as hex-armored SKPT checkpoints, so the
+//! process starts empty and the deployment pushes everything.
+//!
+//! Request lines are bounded ([`MAX_LINE_BYTES`]): a frame that declares
+//! or streams more than that is answered with a typed error and the
+//! connection is closed, so a misbehaving peer cannot balloon server
+//! memory.
 //!
 //! On the client side, failures are **typed** ([`ClientError`]): an
 //! application-level error the server reports (unknown head, shape
 //! mismatch, backend failure) is [`ClientError::Server`] carrying the
 //! server's message, distinct from protocol violations and socket I/O.
+//! Every client socket carries read/write deadlines
+//! ([`TcpClient::connect_with_timeouts`]), so a stalled or silent server
+//! surfaces as [`ClientError::Io`] instead of hanging the caller, and a
+//! [`FaultInjector`] can be attached ([`TcpClient::inject_faults`]) to
+//! replay scripted transport faults deterministically.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
+use super::batcher::BatchPolicy;
+use super::fault::{FaultInjector, FaultKind};
+use super::heads::HeadWeights;
 use super::pool::ExecutorPool;
+use super::remote::{hex_decode, resolve_addr};
 use super::request::InferResponse;
-use super::server::Coordinator;
+use super::server::{Coordinator, CoordinatorConfig, CoordinatorHandle};
 use super::serving::StatsHandle;
-use crate::obs::StatsSnapshot;
+use crate::kan::checkpoint::Checkpoint;
+use crate::obs::{MetricsSnapshot, StatsSnapshot, Tracer};
+use crate::runtime::{BackendConfig, BackendSpec, KernelMode};
 use crate::util::json::{self, Json};
 
-/// What a [`TcpServer`] fronts: one executor or a sharded pool (the pool
+/// Upper bound on one request line (bytes, newline included).  Covers
+/// hex-armored checkpoint registration for every head size this repo
+/// ships; anything larger is a protocol violation.
+pub const MAX_LINE_BYTES: usize = 4 << 20;
+
+/// What a [`TcpServer`] fronts: one executor, a sharded pool (the pool
 /// optionally carries a deployment [`StatsHandle`] so `STATS` replies
-/// include the deployment gauges).
+/// include the deployment gauges), or a standalone shard executor that
+/// builds its coordinator lazily from wire registrations.
 #[derive(Clone)]
 enum TcpTarget {
     Single(Coordinator),
     Pool(ExecutorPool, Option<StatsHandle>),
+    Shard(ShardHost),
 }
 
 impl TcpTarget {
@@ -50,6 +80,10 @@ impl TcpTarget {
         match self {
             TcpTarget::Single(c) => c.infer(head, features),
             TcpTarget::Pool(p, _) => p.infer(head, features),
+            TcpTarget::Shard(s) => match s.coordinator() {
+                Some(c) => c.infer(head, features),
+                None => anyhow::bail!("shard has no heads registered"),
+            },
         }
     }
 
@@ -57,22 +91,150 @@ impl TcpTarget {
     /// has no pool labels or gauges; its merged metrics still scrape.
     fn stats(&self) -> StatsSnapshot {
         match self {
-            TcpTarget::Single(c) => {
-                let merged = c.metrics().snapshot();
-                StatsSnapshot {
-                    backend: "single".to_string(),
-                    policy: "none".to_string(),
-                    kernel: "unknown".to_string(),
-                    num_shards: 1,
-                    per_shard: vec![merged.clone()],
-                    merged,
-                    ..Default::default()
-                }
-            }
+            TcpTarget::Single(c) => single_stats("single", Some(c)),
             TcpTarget::Pool(_, Some(stats)) => stats.snapshot(),
             TcpTarget::Pool(p, None) => p.stats_snapshot(),
+            TcpTarget::Shard(s) => single_stats("shard", s.coordinator().as_ref()),
         }
     }
+}
+
+/// Stats for a target fronting one (possibly not-yet-built) executor.
+fn single_stats(backend: &str, c: Option<&Coordinator>) -> StatsSnapshot {
+    let merged = c.map(|c| c.metrics().snapshot()).unwrap_or_else(MetricsSnapshot::default);
+    StatsSnapshot {
+        backend: backend.to_string(),
+        policy: "none".to_string(),
+        kernel: "unknown".to_string(),
+        num_shards: 1,
+        per_shard: vec![merged.clone()],
+        merged,
+        ..Default::default()
+    }
+}
+
+/// A standalone shard executor's state: the coordinator is built on the
+/// FIRST `register` verb (backend config arrives on the wire), then heads
+/// hot-swap in and out of it.
+#[derive(Clone, Default)]
+struct ShardHost {
+    inner: Arc<Mutex<ShardState>>,
+}
+
+#[derive(Default)]
+struct ShardState {
+    handle: Option<CoordinatorHandle>,
+    heads: HashSet<String>,
+}
+
+impl ShardHost {
+    fn lock(&self) -> std::sync::MutexGuard<'_, ShardState> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Clone out the executor client (infer runs OUTSIDE the lock).
+    fn coordinator(&self) -> Option<Coordinator> {
+        self.lock().handle.as_ref().map(|h| h.client.clone())
+    }
+
+    /// Handle a `register` verb: decode the shipped checkpoint, build the
+    /// coordinator on first use from the wire config, then add the head.
+    fn register(&self, req: &Json) -> Result<Json> {
+        let head = req
+            .get("head")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow::anyhow!("register: missing 'head'"))?
+            .to_string();
+        let hex = req
+            .get("checkpoint")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow::anyhow!("register: missing 'checkpoint'"))?;
+        let bytes = hex_decode(hex)?;
+        let ck = Checkpoint::read_from(&mut bytes.as_slice())
+            .map_err(|e| anyhow::anyhow!("register: bad checkpoint payload: {e}"))?;
+        let weights = HeadWeights::from_checkpoint(&ck)?;
+        let client = {
+            let mut st = self.lock();
+            if st.handle.is_none() {
+                let cfg = shard_coordinator_config(req.get("config"), &weights)?;
+                st.handle = Some(Coordinator::start(cfg)?);
+            }
+            st.handle.as_ref().expect("just initialized").client.clone()
+        };
+        // blocking executor round-trip happens with the lock released
+        client.add_head(&head, weights)?;
+        let mut st = self.lock();
+        st.heads.insert(head);
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("heads", Json::num(st.heads.len() as f64)),
+        ]))
+    }
+
+    /// Handle a `remove` verb; reports whether the head existed.
+    fn remove(&self, req: &Json) -> Result<Json> {
+        let head = req
+            .get("head")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow::anyhow!("remove: missing 'head'"))?
+            .to_string();
+        let client = self.coordinator();
+        let existed = match client {
+            Some(c) => c.remove_head(&head)?,
+            None => false,
+        };
+        let mut st = self.lock();
+        st.heads.remove(&head);
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("existed", Json::Bool(existed)),
+            ("heads", Json::num(st.heads.len() as f64)),
+        ]))
+    }
+
+    fn health(&self) -> Json {
+        let st = self.lock();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("heads", Json::num(st.heads.len() as f64)),
+        ])
+    }
+}
+
+/// Build the executor config a `register` verb describes (see
+/// [`super::remote::RemoteExecConfig`] for the field meanings).
+fn shard_coordinator_config(cfg: Option<&Json>, weights: &HeadWeights)
+                            -> Result<CoordinatorConfig> {
+    let get = |key: &str| cfg.and_then(|c| c.get(key));
+    let kernel: KernelMode = get("kernel")
+        .and_then(|j| j.as_str())
+        .unwrap_or("auto")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let max_batch = get("max_batch").and_then(|j| j.as_usize()).unwrap_or(8).max(1);
+    let mut buckets: Vec<usize> = get("buckets")
+        .and_then(|j| j.as_arr())
+        .map(|arr| arr.iter().filter_map(|j| j.as_usize()).collect())
+        .unwrap_or_default();
+    if buckets.is_empty() {
+        buckets = vec![1, max_batch];
+    }
+    let max_wait_ms = get("max_wait_ms").and_then(|j| j.as_f64()).unwrap_or(1.0).max(0.0) as u64;
+    let queue_capacity = get("queue_capacity").and_then(|j| j.as_usize()).unwrap_or(1024).max(1);
+    let spec = BackendSpec::for_head(weights).with_buckets(&buckets).with_kernel(kernel);
+    let backend = match get("backend").and_then(|j| j.as_str()).unwrap_or("arena") {
+        "native" => BackendConfig::Native(spec),
+        "arena" => BackendConfig::Arena(spec),
+        "family" => BackendConfig::FamilyArena(spec),
+        other => anyhow::bail!("unknown remote backend '{other}'"),
+    };
+    Ok(CoordinatorConfig {
+        backend,
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        queue_capacity,
+        tracer: Tracer::disabled(),
+        shard: 0,
+    })
 }
 
 /// Newline-delimited-JSON TCP front-end over a [`Coordinator`] or an
@@ -104,6 +266,15 @@ impl TcpServer {
     pub fn start_pool_with_stats(pool: ExecutorPool, stats: StatsHandle, addr: &str)
                                  -> Result<TcpServer> {
         Self::start_target(TcpTarget::Pool(pool, Some(stats)), addr)
+    }
+
+    /// Bind a standalone shard executor (the `share-kan shard --listen`
+    /// process).  It starts with no backend and no heads; the first
+    /// `register` verb ships the executor config and builds the
+    /// coordinator, so remote deployments need no local files on the
+    /// shard host.
+    pub fn start_shard(addr: &str) -> Result<TcpServer> {
+        Self::start_target(TcpTarget::Shard(ShardHost::default()), addr)
     }
 
     fn start_target(target: TcpTarget, addr: &str) -> Result<TcpServer> {
@@ -172,8 +343,22 @@ fn handle_conn(stream: TcpStream, target: TcpTarget) -> Result<()> {
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        // bounded read: a frame longer than MAX_LINE_BYTES (newline never
+        // seen within the limit) gets a typed error and the connection is
+        // dropped — an unbounded read_line would let one peer balloon
+        // server memory
+        let n = (&mut reader).take(MAX_LINE_BYTES as u64 + 1).read_line(&mut line)?;
+        if n == 0 {
             return Ok(()); // connection closed
+        }
+        if n > MAX_LINE_BYTES {
+            let reply = Json::obj(vec![(
+                "error",
+                Json::str(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+            )]);
+            writer.write_all(json::to_string(&reply).as_bytes())?;
+            writer.write_all(b"\n")?;
+            return Ok(());
         }
         let reply = match handle_line(line.trim(), &target) {
             Ok(j) => j,
@@ -194,15 +379,39 @@ fn handle_line(line: &str, target: &TcpTarget) -> Result<Json> {
     }
     let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     // JSON scrape form: {"cmd": "stats"[, "format": "prometheus"]}
-    if req.get("cmd").and_then(|j| j.as_str()) == Some("stats") {
-        let snap = target.stats();
-        return match req.get("format").and_then(|j| j.as_str()) {
-            Some("prometheus") => {
-                Ok(Json::obj(vec![("prometheus", Json::str(snap.to_prometheus()))]))
-            }
-            None | Some("json") => Ok(snap.to_json()),
-            Some(other) => anyhow::bail!("unknown stats format '{other}'"),
-        };
+    match req.get("cmd").and_then(|j| j.as_str()) {
+        Some("stats") => {
+            let snap = target.stats();
+            return match req.get("format").and_then(|j| j.as_str()) {
+                Some("prometheus") => {
+                    Ok(Json::obj(vec![("prometheus", Json::str(snap.to_prometheus()))]))
+                }
+                None | Some("json") => Ok(snap.to_json()),
+                Some(other) => anyhow::bail!("unknown stats format '{other}'"),
+            };
+        }
+        // liveness probe (all targets answer; shard executors add a head
+        // count — what the pool's reconnector polls)
+        Some("health") => {
+            return Ok(match target {
+                TcpTarget::Shard(s) => s.health(),
+                _ => Json::obj(vec![("ok", Json::Bool(true))]),
+            });
+        }
+        // head management verbs, shard executors only
+        Some("register") => {
+            return match target {
+                TcpTarget::Shard(s) => s.register(&req),
+                _ => anyhow::bail!("register: not a shard executor"),
+            };
+        }
+        Some("remove") => {
+            return match target {
+                TcpTarget::Shard(s) => s.remove(&req),
+                _ => anyhow::bail!("remove: not a shard executor"),
+            };
+        }
+        _ => {}
     }
     let head = req
         .get("head")
@@ -263,18 +472,92 @@ impl From<std::io::Error> for ClientError {
     }
 }
 
-/// Minimal blocking client for tests/examples.
+/// Default connect deadline for [`TcpClient::connect`].
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Default socket read/write deadline for [`TcpClient::connect`] — every
+/// client socket has one, so a silent server can never hang a caller
+/// indefinitely (the regression `TcpClient::infer` used to have).
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Minimal blocking client for tests/examples and the remote-shard
+/// transport.  Always carries socket deadlines; optionally carries a
+/// [`FaultInjector`] binding for deterministic fault replay.
 pub struct TcpClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    io_timeout: Duration,
+    fault: Option<(Arc<FaultInjector>, usize)>,
 }
 
 impl TcpClient {
-    /// Connect to a [`TcpServer`].
+    /// Connect to a [`TcpServer`] with the default deadlines
+    /// ([`DEFAULT_CONNECT_TIMEOUT`] / [`DEFAULT_IO_TIMEOUT`]).
     pub fn connect(addr: std::net::SocketAddr) -> Result<TcpClient> {
-        let stream = TcpStream::connect(addr)?;
+        Self::connect_with_timeouts(&addr.to_string(), DEFAULT_CONNECT_TIMEOUT,
+                                    DEFAULT_IO_TIMEOUT)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Connect with explicit deadlines: `connect_timeout` bounds the dial,
+    /// `io_timeout` (must be nonzero) bounds every read/write, so a
+    /// stalled server surfaces as [`ClientError::Io`] with
+    /// `ErrorKind::WouldBlock`/`TimedOut` instead of blocking forever.
+    pub fn connect_with_timeouts(addr: &str, connect_timeout: Duration, io_timeout: Duration)
+                                 -> std::result::Result<TcpClient, ClientError> {
+        let sock = resolve_addr(addr)?;
+        let stream = TcpStream::connect_timeout(&sock, connect_timeout)?;
+        stream.set_read_timeout(Some(io_timeout))?;
+        stream.set_write_timeout(Some(io_timeout))?;
         let peer = stream.try_clone()?;
-        Ok(TcpClient { reader: BufReader::new(stream), writer: peer })
+        Ok(TcpClient {
+            reader: BufReader::new(stream),
+            writer: peer,
+            io_timeout,
+            fault: None,
+        })
+    }
+
+    /// Bind a fault injector: before every [`TcpClient::infer`] the
+    /// injector is consulted for `shard` and scripted faults map onto
+    /// transport errors (kill → connection reset, drop/long-delay →
+    /// timeout, garbage → protocol error) without real sockets failing or
+    /// wall-clock sleeps — see [`super::fault`].
+    pub fn inject_faults(&mut self, injector: Arc<FaultInjector>, shard: usize) {
+        self.fault = Some((injector, shard));
+    }
+
+    /// Map a scripted fault for this request (if any) onto the transport
+    /// error the real failure would produce.  `Ok(())` means proceed.
+    fn injected_fault(&mut self) -> std::result::Result<(), ClientError> {
+        let Some((injector, shard)) = &self.fault else {
+            return Ok(());
+        };
+        match injector.on_request(*shard) {
+            Some(FaultKind::KillShard) => Err(ClientError::Io(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "injected: shard killed",
+            ))),
+            Some(FaultKind::DropReply) => Err(ClientError::Io(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "injected: reply dropped",
+            ))),
+            Some(FaultKind::DelayReplyMs(ms)) => {
+                if Duration::from_millis(ms) >= self.io_timeout {
+                    Err(ClientError::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("injected: reply delayed {ms}ms past the read deadline"),
+                    )))
+                } else {
+                    Ok(()) // shorter than the deadline: delivered normally
+                }
+            }
+            Some(FaultKind::GarbageFrame) => {
+                let salt = injector.requests_seen(*shard);
+                Err(ClientError::Protocol(format!("bad reply: {}", injector.garbage_line(salt))))
+            }
+            Some(FaultKind::RefuseConnect) | None => Ok(()),
+        }
     }
 
     /// Send one request and block for its scores.  Server-side
@@ -283,6 +566,7 @@ impl TcpClient {
     /// [`ClientError::Io`] / [`ClientError::Protocol`].
     pub fn infer(&mut self, head: &str, features: &[f32])
                  -> std::result::Result<Vec<f32>, ClientError> {
+        self.injected_fault()?;
         let req = Json::obj(vec![
             ("head", Json::str(head)),
             ("features", Json::Arr(features.iter().map(|&f| Json::num(f as f64)).collect())),
@@ -326,6 +610,13 @@ impl TcpClient {
             .and_then(|j| j.as_str())
             .map(str::to_string)
             .ok_or_else(|| ClientError::Protocol("missing prometheus body".into()))
+    }
+
+    /// Raw verb round-trip for the remote-shard control protocol
+    /// (`register` / `remove` / `health` lines built by
+    /// [`super::remote::RemoteShard`]).
+    pub(crate) fn request(&mut self, line: &str) -> std::result::Result<Json, ClientError> {
+        self.round_trip(line)
     }
 
     /// Send one raw line and parse the one-line JSON reply, surfacing

@@ -51,6 +51,14 @@ impl Checkpoint {
 
     pub fn save(&self, path: &Path) -> io::Result<()> {
         let mut w = BufWriter::new(File::create(path)?);
+        self.write_to(&mut w)?;
+        w.flush()
+    }
+
+    /// Serialize the checkpoint into any writer in the SKPT format
+    /// (identical bytes to [`Checkpoint::save`]; the remote-shard register
+    /// protocol ships checkpoints through this over TCP).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
         let meta = json::to_string(&self.meta);
@@ -58,13 +66,20 @@ impl Checkpoint {
         w.write_all(meta.as_bytes())?;
         w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
         for (name, t) in &self.tensors {
-            write_tensor(&mut w, name, t)?;
+            write_tensor(w, name, t)?;
         }
-        w.flush()
+        Ok(())
     }
 
     pub fn load(path: &Path) -> io::Result<Checkpoint> {
         let mut r = BufReader::new(File::open(path)?);
+        Self::read_from(&mut r)
+    }
+
+    /// Deserialize a checkpoint from any reader in the SKPT format
+    /// (mirror of [`Checkpoint::write_to`], same validation as
+    /// [`Checkpoint::load`]).
+    pub fn read_from<R: Read>(r: &mut R) -> io::Result<Checkpoint> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -161,6 +176,21 @@ mod tests {
         assert_eq!(loaded.tensors.len(), 3);
         assert_eq!(loaded.get("grids0").unwrap().as_f32()[23], 23.0);
         assert_eq!(loaded.get("cb_q").unwrap().as_i8(), vec![-1, 0, 1, 127]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn in_memory_roundtrip_matches_file_bytes() {
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("mlp"))]));
+        ck.insert("w1", Tensor::from_f32(&[2, 2], &[1.0, -2.0, 3.5, 0.25]));
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let path = tmp("wire.skpt");
+        ck.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), buf, "wire bytes == file bytes");
+        let back = Checkpoint::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.meta.get("model").unwrap().as_str(), Some("mlp"));
+        assert_eq!(back.get("w1").unwrap().as_f32(), ck.get("w1").unwrap().as_f32());
         std::fs::remove_file(path).ok();
     }
 

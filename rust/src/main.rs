@@ -23,11 +23,17 @@
 //!            | --family [--heads N] [--shards N] (shared vs marginal and
 //!            placement byte accounting) | --deployment deploy.toml
 //!            (placement dry-run, no executors started)
-//!   verify   --deployment deploy.toml
+//!   verify   --deployment deploy.toml [--kill 0,2]
 //!            (static plan verification: prove every arena layout the
 //!            deployment would materialize — disjoint, aligned, covered,
 //!            index widths exact, family accounting reconciled — and emit
-//!            machine-readable JSON findings; exit 1 on any finding)
+//!            machine-readable JSON findings; exit 1 on any finding.
+//!            `--kill` adds a fault dry-run: every head must keep at least
+//!            one live placement with those shards down)
+//!   shard    --listen ADDR
+//!            (standalone remote shard executor: binds the TCP shard
+//!            protocol and waits for a pool with `[[shard]]` entries in
+//!            its deployment file to register heads and route requests)
 //!   stats    --tcp ADDR [--prom]
 //!            (scrape a running server's stats registry: merged + per-shard
 //!            metrics, per-stage latency, gauges and trace spans as one
@@ -61,7 +67,7 @@ use share_kan::util::cli::Args;
 use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
 
-const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify|stats> [options]
+const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify|stats|shard> [options]
   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]   (pjrt builds only)
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
            --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
@@ -73,8 +79,9 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify|st
   plan     [--k 512] [--int8] [--max-batch 128] [--head ck.skpt]
            --family [--heads N] [--k 512] [--int8] [--shards N] [--heads-per-shard N]   (family arena + placement accounting)
            --deployment deploy.toml   (placement dry-run)
-  verify   --deployment deploy.toml   (static plan verification; JSON findings, exit 1 on any)
+  verify   --deployment deploy.toml [--kill 0,2]   (static plan verification + fault dry-run; JSON findings, exit 1 on any)
   stats    --tcp ADDR [--prom]   (scrape a running server's stats registry)
+  shard    --listen ADDR   (standalone remote shard executor for [[shard]] deployment entries)
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)
 serve observability: [--trace-sample N] [--trace-capacity N] [--stats-interval S] [--memsim-gauge]";
 
@@ -108,6 +115,7 @@ fn run(args: &Args) -> Result<()> {
         "plan" => cmd_plan(args),
         "verify" => cmd_verify(args),
         "stats" => cmd_stats(args),
+        "shard" => cmd_shard(args),
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -600,10 +608,37 @@ fn cmd_serve_deployment(args: &Args, file: &str) -> Result<()> {
 fn cmd_verify(args: &Args) -> Result<()> {
     let file = args.get("deployment").context("--deployment required")?;
     let spec = DeploymentSpec::from_file(Path::new(file))?;
-    let report = spec.verify()?;
+    let mut report = spec.verify()?;
+    if let Some(list) = args.get("kill") {
+        let mut plan = share_kan::coordinator::FaultPlan::new(0);
+        for part in list.split(',').filter(|s| !s.is_empty()) {
+            let shard: usize = part
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--kill expects shard indices, got '{part}'"))?;
+            plan = plan.kill_shard_at(shard, 0);
+        }
+        report.merge(spec.verify_fault_plan(&plan)?);
+    }
     println!("{}", share_kan::util::json::to_string(&report.to_json()));
     report.into_result()?;
     Ok(())
+}
+
+/// `shard --listen ADDR`: run a standalone remote shard executor.  The
+/// process binds the TCP shard protocol and idles; a pool deployed with
+/// `[[shard]]` entries pointing here pushes its backend config + head
+/// checkpoints over the `register` verb and then routes inference to it
+/// like any in-process shard.  Kill the process to exercise failover;
+/// restart it and the pool's reconnector re-registers the heads.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let addr = args.get("listen").context("--listen ADDR required")?;
+    let server = TcpServer::start_shard(addr)?;
+    println!("shard executor listening on {} — awaiting register/infer/health verbs",
+             server.addr());
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {

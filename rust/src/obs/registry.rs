@@ -118,6 +118,11 @@ pub struct CountersSnapshot {
     pub scalar_batches: u64,
     /// Batches executed by a SIMD kernel tier (AVX2+FMA / NEON).
     pub simd_batches: u64,
+    /// Requests absorbed by this shard after a failover redirect away
+    /// from a down shard.
+    pub failovers: u64,
+    /// Remote-transport retry attempts (zero for in-process shards).
+    pub retries: u64,
 }
 
 impl CountersSnapshot {
@@ -154,6 +159,8 @@ impl CountersSnapshot {
         self.rejected += other.rejected;
         self.scalar_batches += other.scalar_batches;
         self.simd_batches += other.simd_batches;
+        self.failovers += other.failovers;
+        self.retries += other.retries;
     }
 }
 
@@ -201,6 +208,8 @@ impl MetricsSnapshot {
                     ("padded_slots", Json::num(c.padded_slots as f64)),
                     ("mean_batch", Json::num(c.mean_batch_size())),
                     ("padding_fraction", Json::num(c.padding_fraction())),
+                    ("failovers", Json::num(c.failovers as f64)),
+                    ("retries", Json::num(c.retries as f64)),
                 ]),
             ),
             (
@@ -262,6 +271,7 @@ impl Gauges {
             resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
             shards_occupied: self.shards_occupied.load(Ordering::Relaxed),
             heads: self.heads.load(Ordering::Relaxed),
+            shards_up: 0,
             l2_hit_rate: if ppm == L2_UNSET { None } else { Some(ppm as f64 / 1e6) },
         }
     }
@@ -276,6 +286,9 @@ pub struct GaugesSnapshot {
     pub shards_occupied: u64,
     /// Heads currently deployed.
     pub heads: u64,
+    /// Shards currently up (live in the routing table).  Spliced in live
+    /// by the pool / deployment handle — [`Gauges::snapshot`] leaves it 0.
+    pub shards_up: u64,
     /// Simulated L2 hit rate in `[0, 1]`, when the memsim gauge is on.
     pub l2_hit_rate: Option<f64>,
 }
@@ -286,6 +299,7 @@ impl GaugesSnapshot {
             ("resident_bytes", Json::num(self.resident_bytes as f64)),
             ("shards_occupied", Json::num(self.shards_occupied as f64)),
             ("heads", Json::num(self.heads as f64)),
+            ("shards_up", Json::num(self.shards_up as f64)),
         ];
         pairs.push((
             "l2_hit_rate",
@@ -445,6 +459,8 @@ impl StatsSnapshot {
         counter("batches_total", "Batches executed.", c.batches);
         counter("batched_items_total", "Live rows across executed batches.", c.batched_items);
         counter("padded_slots_total", "Padding rows added by bucket rounding.", c.padded_slots);
+        counter("failovers_total", "Requests redirected away from down shards.", c.failovers);
+        counter("retries_total", "Remote-transport retry attempts.", c.retries);
         let _ = writeln!(out, "# HELP share_kan_kernel_batches_total Batches per kernel tier.");
         let _ = writeln!(out, "# TYPE share_kan_kernel_batches_total counter");
         let _ = writeln!(
@@ -463,6 +479,9 @@ impl StatsSnapshot {
         let _ = writeln!(out, "# HELP share_kan_heads Deployed heads.");
         let _ = writeln!(out, "# TYPE share_kan_heads gauge");
         let _ = writeln!(out, "share_kan_heads {}", self.gauges.heads);
+        let _ = writeln!(out, "# HELP share_kan_shards_up Shards currently up.");
+        let _ = writeln!(out, "# TYPE share_kan_shards_up gauge");
+        let _ = writeln!(out, "share_kan_shards_up {}", self.gauges.shards_up);
         if let Some(r) = self.gauges.l2_hit_rate {
             let _ = writeln!(out, "# HELP share_kan_l2_hit_rate Simulated L2 hit rate.");
             let _ = writeln!(out, "# TYPE share_kan_l2_hit_rate gauge");

@@ -43,13 +43,21 @@ pub enum Stage {
     KernelExit = 4,
     /// Response sent on the per-request channel (success or error).
     Reply = 5,
+    /// Failover hop: the pool redirected this request away from a down
+    /// shard (the event's `shard` field names the shard redirected FROM).
+    /// Out-of-band — not part of the ordered pipeline partition, so it is
+    /// excluded from [`Stage::ALL`] and a span carrying one is never
+    /// "complete" in the exact-partition sense.
+    Redirect = 6,
 }
 
-/// Number of [`Stage`] variants (a complete span has one stamp per stage).
+/// Number of *pipeline* [`Stage`] variants (a complete span has one stamp
+/// per pipeline stage; the out-of-band [`Stage::Redirect`] is not counted).
 pub const STAGE_COUNT: usize = 6;
 
 impl Stage {
-    /// All stages in pipeline order.
+    /// All *pipeline* stages in order (excludes the out-of-band
+    /// [`Stage::Redirect`]).
     pub const ALL: [Stage; STAGE_COUNT] = [
         Stage::Enqueue,
         Stage::Route,
@@ -68,6 +76,7 @@ impl Stage {
             Stage::KernelEnter => "kernel_enter",
             Stage::KernelExit => "kernel_exit",
             Stage::Reply => "reply",
+            Stage::Redirect => "redirect",
         }
     }
 
@@ -77,8 +86,13 @@ impl Stage {
     }
 
     /// Inverse of [`Stage::code`]; `None` for out-of-range codes (e.g. a
-    /// torn slot that slipped past sequence validation).
+    /// torn slot that slipped past sequence validation).  Knows the
+    /// out-of-band [`Stage::Redirect`] too, so snapshot decoding does not
+    /// drop failover events.
     pub fn from_code(code: u8) -> Option<Stage> {
+        if code == Stage::Redirect.code() {
+            return Some(Stage::Redirect);
+        }
         Stage::ALL.get(code as usize).copied()
     }
 }
@@ -347,7 +361,25 @@ mod tests {
             assert_eq!(s.code() as usize, i);
             assert_eq!(Stage::from_code(s.code()), Some(*s));
         }
-        assert_eq!(Stage::from_code(STAGE_COUNT as u8), None);
+        // the out-of-band redirect stage decodes but is not in ALL
+        assert_eq!(Stage::from_code(6), Some(Stage::Redirect));
+        assert!(!Stage::ALL.contains(&Stage::Redirect));
+        assert_eq!(Stage::from_code(7), None);
+    }
+
+    #[test]
+    fn redirect_stamp_keeps_span_incomplete() {
+        // a failed-over request carries an extra out-of-band stamp; it must
+        // never be counted as a "complete" exact-partition span
+        let t = Tracer::new(16, 1);
+        t.record(4, Stage::Enqueue, 1);
+        t.record(4, Stage::Redirect, 0); // redirected away from shard 0
+        t.record(4, Stage::Reply, 1);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 1);
+        assert!(!spans[0].is_complete());
+        let stamp = spans[0].stamp(Stage::Redirect).expect("redirect stamp survives decode");
+        assert_eq!(stamp.shard, 0);
     }
 
     #[test]

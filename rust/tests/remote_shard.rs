@@ -1,0 +1,233 @@
+//! Remote shard executors end to end: a pool slot backed by a standalone
+//! shard process (here an in-test [`TcpServer::start_shard`]) must join
+//! the equivalence chain bit-for-bit — remote == pooled == single, under
+//! forced-scalar and forced-SIMD kernels — and must fail over and recover
+//! under the scripted fault injector exactly like a local slot.
+
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use share_kan::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, ExecutorPool, FaultPlan, HeadWeights, Placement,
+    PoolConfig, RemoteConfig, TcpServer,
+};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{BackendConfig, BackendSpec, KernelMode};
+
+const D_IN: usize = 6;
+
+fn vq_head(seed: u64) -> HeadWeights {
+    use share_kan::vq::{compress, Precision};
+    let spec = KanSpec { d_in: D_IN, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let dense = synthetic_dense(&spec, 42);
+    let ck = compress(&dense, &spec, 16, Precision::Int8, seed).unwrap().to_checkpoint();
+    HeadWeights::from_checkpoint(&ck).unwrap()
+}
+
+fn backend(kernel: KernelMode) -> BackendConfig {
+    BackendConfig::Arena(BackendSpec::for_head(&vq_head(100)).with_buckets(&[1, 4, 8])
+        .with_kernel(kernel))
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) }
+}
+
+/// The equivalence backbone, extended over the wire: the same heads
+/// registered into a single coordinator, an all-local pool, and a pool
+/// whose shard 1 is a remote executor process must score identical inputs
+/// bitwise identically (the JSON number encoding round-trips every f32
+/// exactly), for every kernel mode this host can force.
+#[test]
+fn remote_matches_pooled_matches_single_bitwise() {
+    for kernel in common::kernel_modes() {
+        let shard_srv = TcpServer::start_shard("127.0.0.1:0").unwrap();
+
+        let single = Coordinator::start(CoordinatorConfig {
+            backend: backend(kernel),
+            policy: policy(),
+            queue_capacity: 256,
+            ..Default::default()
+        })
+        .unwrap();
+        let local = ExecutorPool::start(PoolConfig {
+            backend: backend(kernel),
+            policy: policy(),
+            queue_capacity: 256,
+            num_shards: 2,
+            placement: Placement::Hash,
+            reconnect_interval: None,
+            ..Default::default()
+        })
+        .unwrap();
+        let remote = ExecutorPool::start(PoolConfig {
+            backend: backend(kernel),
+            policy: policy(),
+            queue_capacity: 256,
+            num_shards: 2,
+            placement: Placement::Hash,
+            remotes: vec![None, Some(RemoteConfig::for_addr(shard_srv.addr().to_string()))],
+            reconnect_interval: None,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(!remote.client.is_remote(0));
+        assert!(remote.client.is_remote(1));
+
+        let heads: Vec<(String, HeadWeights)> =
+            (0..4).map(|i| (format!("task{i}"), vq_head(100 + i as u64))).collect();
+        for (name, w) in &heads {
+            single.client.add_head(name, w.clone()).unwrap();
+            local.client.register_head(name, None, w.clone()).unwrap();
+            remote.client.register_head(name, None, w.clone()).unwrap();
+        }
+        // the chain only proves something if some head actually crossed
+        // the wire: hash placement must put at least one on shard 1
+        assert!(heads.iter().any(|(n, _)| remote.client.shard_for(n) == 1),
+                "no head landed on the remote slot; widen the head set");
+
+        let mut rng = Pcg32::seeded(4242);
+        for round in 0..20 {
+            for (name, _) in &heads {
+                let x = rng.normal_vec(D_IN, 0.0, 1.0);
+                let a = single.client.infer(name, x.clone()).unwrap().scores;
+                let b = local.client.infer(name, x.clone()).unwrap().scores;
+                let c = remote.client.infer(name, x).unwrap().scores;
+                assert_eq!(a.len(), 4);
+                for i in 0..a.len() {
+                    assert_eq!(a[i].to_bits(), b[i].to_bits(),
+                               "single vs pooled diverged: {name} round {round} lane {i}");
+                    assert_eq!(a[i].to_bits(), c[i].to_bits(),
+                               "single vs remote diverged: {name} round {round} lane {i}");
+                }
+            }
+        }
+        assert_eq!(remote.client.aggregated_metrics().counters.inflight(), 0);
+        remote.shutdown();
+        local.shutdown();
+        single.shutdown();
+        shard_srv.shutdown();
+    }
+}
+
+/// Failover and recovery for a remote slot: killing the transport (via
+/// the injector, deterministically) flips the routing table to the
+/// surviving replica after at most a transitional error, the failover
+/// counter accounts for the redirected traffic, and `recover` re-probes
+/// the executor and re-registers the retained heads.
+#[test]
+fn remote_slot_fails_over_and_recovers() {
+    let shard_srv = TcpServer::start_shard("127.0.0.1:0").unwrap();
+    let injector = FaultPlan::new(13).injector();
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: backend(KernelMode::Scalar),
+        policy: policy(),
+        queue_capacity: 256,
+        num_shards: 2,
+        placement: Placement::Hash,
+        remotes: vec![
+            None,
+            Some(RemoteConfig {
+                retries: 0, // fail fast; the test scripts the faults
+                ..RemoteConfig::for_addr(shard_srv.addr().to_string())
+            }),
+        ],
+        fault: Some(injector.clone()),
+        reconnect_interval: None,
+        ..Default::default()
+    })
+    .unwrap();
+    let c = &pool.client;
+    c.register_replicated("default", vq_head(100)).unwrap();
+
+    let mut rng = Pcg32::seeded(6);
+    for _ in 0..6 {
+        c.infer("default", rng.normal_vec(D_IN, 0.0, 1.0)).unwrap();
+    }
+    assert_eq!(c.shards_up(), 2);
+
+    // scripted transport kill: every request (and redial) against shard 1
+    // now fails at the wire.  The first request routed there surfaces a
+    // transitional error and flips the liveness flag; everything after
+    // rides the surviving replica.
+    injector.kill(1);
+    let mut transitional = 0usize;
+    for _ in 0..10 {
+        let down_before = !c.is_up(1);
+        match c.infer("default", rng.normal_vec(D_IN, 0.0, 1.0)) {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(!down_before,
+                        "requests must not fail once the routing table knows shard 1 is down: {e:#}");
+                transitional += 1;
+            }
+        }
+        if !c.is_up(1) {
+            break;
+        }
+    }
+    assert!(!c.is_up(1), "the killed remote must be marked down");
+    assert!(transitional <= 10);
+    for _ in 0..20 {
+        c.infer("default", rng.normal_vec(D_IN, 0.0, 1.0)).unwrap();
+    }
+    let agg = c.aggregated_metrics();
+    assert!(agg.counters.failovers.load(Ordering::Relaxed) > 0,
+            "redirected traffic must be accounted as failovers");
+    assert_eq!(agg.counters.inflight(), 0);
+
+    // recovery: clear the fault, re-probe, re-register retained heads
+    c.recover(1).unwrap();
+    assert!(c.is_up(1));
+    assert_eq!(c.shards_up(), 2);
+    for _ in 0..8 {
+        c.infer("default", rng.normal_vec(D_IN, 0.0, 1.0)).unwrap();
+    }
+    assert_eq!(c.aggregated_metrics().counters.inflight(), 0);
+    pool.shutdown();
+    shard_srv.shutdown();
+}
+
+/// A placed (non-replicated) head whose owning slot is remote: register
+/// ships the checkpoint over the wire, remove round-trips `existed`, and
+/// re-registering hot-swaps it back in.
+#[test]
+fn placed_head_on_remote_slot_round_trips() {
+    let shard_srv = TcpServer::start_shard("127.0.0.1:0").unwrap();
+    let pool = ExecutorPool::start(PoolConfig {
+        backend: backend(KernelMode::Scalar),
+        policy: policy(),
+        queue_capacity: 128,
+        num_shards: 2,
+        placement: Placement::Hash,
+        remotes: vec![None, Some(RemoteConfig::for_addr(shard_srv.addr().to_string()))],
+        reconnect_interval: None,
+        ..Default::default()
+    })
+    .unwrap();
+    let c = &pool.client;
+    // find a name the hash placement pins to the remote slot
+    let name = (0..64)
+        .map(|i| format!("task{i}"))
+        .find(|n| c.shard_for(n) == 1)
+        .expect("some name must hash to shard 1");
+
+    c.register_head(&name, None, vq_head(7)).unwrap();
+    assert_eq!(c.shard_for(&name), 1);
+    let mut rng = Pcg32::seeded(9);
+    assert_eq!(c.infer(&name, rng.normal_vec(D_IN, 0.0, 1.0)).unwrap().scores.len(), 4);
+
+    assert!(c.remove_head(&name).unwrap(), "remove must report the head existed");
+    assert!(c.infer(&name, rng.normal_vec(D_IN, 0.0, 1.0)).is_err(),
+            "a removed head must not serve");
+
+    c.register_head(&name, None, vq_head(7)).unwrap();
+    assert_eq!(c.infer(&name, rng.normal_vec(D_IN, 0.0, 1.0)).unwrap().scores.len(), 4);
+    assert_eq!(c.aggregated_metrics().counters.inflight(), 0);
+    pool.shutdown();
+    shard_srv.shutdown();
+}

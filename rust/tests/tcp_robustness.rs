@@ -1,0 +1,194 @@
+//! TCP protocol robustness: the server must survive malformed peers —
+//! truncated frames, oversized lines, garbage verbs, mid-frame
+//! disconnects — answering typed errors where a reply is possible and
+//! never leaking inflight accounting; and the client must never hang on
+//! a silent server (the socket-deadline regression) or on scripted
+//! transport faults.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use share_kan::coordinator::tcp::MAX_LINE_BYTES;
+use share_kan::coordinator::{
+    BatchPolicy, ClientError, Coordinator, CoordinatorConfig, CoordinatorHandle, FaultPlan,
+    HeadWeights, TcpClient, TcpServer,
+};
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::synthetic_dense;
+use share_kan::kan::spec::KanSpec;
+use share_kan::runtime::{BackendConfig, BackendSpec};
+
+const D_IN: usize = 6;
+
+fn vq_head(seed: u64) -> HeadWeights {
+    use share_kan::vq::{compress, Precision};
+    let spec = KanSpec { d_in: D_IN, d_hidden: 9, d_out: 4, grid_size: 7 };
+    let dense = synthetic_dense(&spec, 42);
+    let ck = compress(&dense, &spec, 16, Precision::Int8, seed).unwrap().to_checkpoint();
+    HeadWeights::from_checkpoint(&ck).unwrap()
+}
+
+fn start_server() -> (CoordinatorHandle, TcpServer) {
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend: BackendConfig::Arena(BackendSpec::for_head(&vq_head(100)).with_buckets(&[1, 4])),
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        queue_capacity: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    coord.client.add_head("default", vq_head(100)).unwrap();
+    let server = TcpServer::start(coord.client.clone(), "127.0.0.1:0").unwrap();
+    (coord, server)
+}
+
+/// Raw one-line round-trip over a fresh socket (no TcpClient niceties, so
+/// malformed frames reach the server byte-for-byte).
+fn raw_round_trip(addr: std::net::SocketAddr, line: &[u8]) -> Option<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writer.write_all(line).unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).ok().filter(|&n| n > 0).map(|_| reply)
+}
+
+#[test]
+fn server_survives_malformed_frames_without_leaking_inflight() {
+    let (coord, server) = start_server();
+    let addr = server.addr();
+
+    // truncated frame: bytes then EOF, newline never sent — the server
+    // parses the partial line, answers a typed error, and moves on
+    let reply = raw_round_trip(addr, b"{\"head\":\"default\",\"feat");
+    if let Some(r) = reply {
+        assert!(r.contains("error"), "truncated frame must get a typed error: {r}");
+    }
+
+    // garbage that is not JSON at all (the fault injector's seeded frame)
+    let garbage = FaultPlan::new(5).injector().garbage_line(1);
+    let reply = raw_round_trip(addr, format!("{garbage}\n").as_bytes()).unwrap();
+    assert!(reply.contains("bad json"), "garbage frame must get a typed error: {reply}");
+
+    // a known verb aimed at the wrong target is refused, typed
+    let reply =
+        raw_round_trip(addr, b"{\"cmd\":\"register\",\"head\":\"x\",\"checkpoint\":\"00\"}\n")
+            .unwrap();
+    assert!(reply.contains("not a shard executor"), "got: {reply}");
+
+    // unknown verbs fall through to inference parsing and error there
+    let reply = raw_round_trip(addr, b"{\"cmd\":\"frobnicate\"}\n").unwrap();
+    assert!(reply.contains("error"), "unknown verb must get a typed error: {reply}");
+
+    // mid-frame disconnect: write half a request and slam the connection
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"{\"head\":\"def").unwrap();
+        // dropped here without newline or shutdown handshake
+    }
+
+    // the server is still healthy: a well-formed client round-trips
+    let mut client = TcpClient::connect(addr).unwrap();
+    let mut rng = Pcg32::seeded(3);
+    for _ in 0..4 {
+        let scores = client.infer("default", &rng.normal_vec(D_IN, 0.0, 1.0)).unwrap();
+        assert_eq!(scores.len(), 4);
+    }
+    assert!(server.connections_accepted() >= 5);
+    // nothing above may leave a request in flight
+    assert_eq!(coord.client.metrics().counters.inflight(), 0);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_line_is_rejected_and_connection_closed() {
+    let (coord, server) = start_server();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // declared-length abuse: one frame larger than the server's line bound
+    let big = vec![b'x'; MAX_LINE_BYTES + 4096];
+    writer.write_all(&big).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(reply.contains("exceeds"), "oversized frame must be refused, got: {reply}");
+    // the connection is closed after the refusal, not left half-read
+    reply.clear();
+    assert_eq!(reader.read_line(&mut reply).unwrap(), 0, "server must close the connection");
+
+    // and the server still serves fresh connections
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    assert_eq!(client.infer("default", &[0.0; D_IN]).unwrap().len(), 4);
+    assert_eq!(coord.client.metrics().counters.inflight(), 0);
+    server.shutdown();
+    coord.shutdown();
+}
+
+/// Regression: `TcpClient::infer` used to block forever on a server that
+/// accepts but never replies.  Every client socket now carries a read
+/// deadline, so the stall surfaces as [`ClientError::Io`] promptly.
+#[test]
+fn silent_server_times_out_instead_of_hanging() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        // accept one connection, read its request, never write a reply
+        if let Ok((mut s, _)) = listener.accept() {
+            let mut buf = [0u8; 4096];
+            while let Ok(n) = s.read(&mut buf) {
+                if n == 0 {
+                    break;
+                }
+            }
+        }
+    });
+    let mut client = TcpClient::connect_with_timeouts(
+        &addr.to_string(),
+        Duration::from_secs(1),
+        Duration::from_millis(150),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let err = client.infer("default", &[0.0; D_IN]).unwrap_err();
+    assert!(matches!(err, ClientError::Io(_)), "want Io timeout, got {err}");
+    assert!(t0.elapsed() < Duration::from_secs(10), "the deadline must bound the stall");
+    drop(client); // closes the socket; the holder thread sees EOF
+    hold.join().unwrap();
+}
+
+/// The scripted transport faults surface as the typed errors the real
+/// failures would produce — deterministically, with no wall-clock sleeps:
+/// a delay past the read deadline is an immediate `Io` timeout, a dropped
+/// reply an `Io` timeout, a garbage frame a `Protocol` error, and a
+/// sub-deadline delay is delivered normally.
+#[test]
+fn injected_faults_map_to_typed_client_errors() {
+    let (coord, server) = start_server();
+    let plan = FaultPlan::new(9)
+        .garbage_frame_at(0, 1)
+        .drop_reply_at(0, 2)
+        .delay_reply_at(0, 3, 60_000) // past the 30 s default deadline
+        .delay_reply_at(0, 4, 1); // within the deadline: delivered
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    client.inject_faults(plan.injector(), 0);
+    let x = [0.0f32; D_IN];
+
+    let t0 = Instant::now();
+    assert!(matches!(client.infer("default", &x).unwrap_err(), ClientError::Protocol(_)));
+    assert!(matches!(client.infer("default", &x).unwrap_err(), ClientError::Io(_)));
+    assert!(matches!(client.infer("default", &x).unwrap_err(), ClientError::Io(_)));
+    assert_eq!(client.infer("default", &x).unwrap().len(), 4);
+    // the drop/delay faults are injected, not slept through
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    assert_eq!(coord.client.metrics().counters.inflight(), 0);
+    server.shutdown();
+    coord.shutdown();
+}
