@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Bench: the LUTHAM forward path per variant and batch bucket, through
 //! the execution-backend trait.  This is the hot path exactly as the
 //! serving coordinator drives it (padded batch in, scores out), on the

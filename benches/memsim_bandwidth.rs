@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Bench: cache-simulator throughput (probes/sec) and the §5.5 analysis
 //! wall time at paper scale — the memsim substrate must be fast enough to
 //! replay multi-million-edge traces.

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Bench: end-to-end serving throughput through the coordinator (batching +
 //! routing + backend execution), per head variant, batching policy and
 //! backend (native vs arena), plus a multi-head workload comparing ONE
@@ -268,6 +270,26 @@ fn main() {
             ("p50_us", Json::num(h.percentile_us(0.5))),
             ("p99_us", Json::num(h.percentile_us(0.99))),
             ("samples", Json::num(h.count as f64)),
+        ]));
+    }
+
+    // per-lock contention under the pooled multi-head load: every named
+    // lock/queue the util::sync registry saw, with ops / blocked / wait-ns
+    // counters (cumulative over this process — dominated by the pooled
+    // runs above)
+    println!("per-lock contention (util::sync registry):");
+    for c in share_kan::util::sync::LockRegistry::global().contention() {
+        println!(
+            "  {:<18} {:<7} ops {:>9}  blocked {:>7}  wait {:>11}ns",
+            c.name, c.kind, c.ops, c.blocked, c.wait_ns
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::str(format!("contention/{}", c.name))),
+            ("kind", Json::str(c.kind)),
+            ("rank", Json::num(c.rank as f64)),
+            ("ops", Json::num(c.ops as f64)),
+            ("blocked", Json::num(c.blocked as f64)),
+            ("wait_ns", Json::num(c.wait_ns as f64)),
         ]));
     }
 

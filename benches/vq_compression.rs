@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Bench: compression-pipeline throughput — k-means fit, assignment, and
 //! full gain-shape-bias compression per layer size and K.
 //!

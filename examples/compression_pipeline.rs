@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Compression-pipeline walkthrough: dense checkpoint -> gain-shape-bias
 //! decomposition -> k-means codebooks (K sweep) -> Int8 quantization ->
 //! R² / size / static-memory-plan report.  Pure Rust end to end.

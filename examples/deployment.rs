@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! File-driven deployment demo: the whole serving topology — backend,
 //! shards, placement policy, two synthetic universal-codebook families —
 //! read from `examples/deployment.toml` and compiled into a running

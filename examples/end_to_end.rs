@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! END-TO-END DRIVER (DESIGN.md §6): proves the layers compose on a real
 //! small workload, entirely through the pluggable backend stack.
 //!

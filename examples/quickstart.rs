@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Quickstart: the smallest useful tour of the public API.
 //!
 //! 1. build a dense KAN head (synthetic weights — training needs the

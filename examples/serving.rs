@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Multi-head hot-swap serving demo (paper §1 "Deployment Context" and
 //! §6.2 "Scalable Mixtures of Experts"): many lightweight compressed heads
 //! share one serving stack; heads register and retire while traffic flows.

@@ -1,0 +1,879 @@
+//! Static concurrency verification: lock-order acyclicity, channel-topology
+//! deadlock freedom, the atomic-ordering protocol audit, and a
+//! deterministic interleaving explorer for the failover state machine.
+//!
+//! PR 6 proved every arena *layout* before it runs; this module does the
+//! same for the *concurrency topology* the serving stack grew in PRs 5–8.
+//! Three properties, each a pure function from declared data to a
+//! [`VerifyReport`] (typed findings, JSON out, never a panic in release):
+//!
+//! 1. **Lock-order acyclicity** ([`verify_lock_order`]).  Every production
+//!    lock is constructed through [`crate::util::sync`] with a declared
+//!    rank; [`DECLARED_HOLD_EDGES`](crate::util::sync::DECLARED_HOLD_EDGES)
+//!    lists each documented may-hold-while-acquiring pair.  The checker
+//!    proves each edge strictly increases in rank and that the edge graph
+//!    has no cycle, then cross-checks the *runtime* registry: an
+//!    undeclared lock, a rank disagreement, or a lockdep-witnessed
+//!    inversion recorded by a debug build each become a typed finding.
+//! 2. **Channel-topology deadlock freedom** ([`ChannelGraph::verify`]).
+//!    The graph of bounded blocking edges (admission queues, remote job
+//!    queues, synchronous RPC hops) must contain no cycle of
+//!    potentially-full edges; `coordinator::serving::DeploymentSpec`
+//!    builds the graph for a concrete deployment and
+//!    `share-kan verify --concurrency [--deployment file.toml]` runs it.
+//! 3. **Atomic protocol audit** ([`verify_atomics`]).  Each file with
+//!    `Ordering::*` sites declares its protocol contract
+//!    ([`ATOMIC_CONTRACTS`]): which orderings the protocol allows and
+//!    which fences must exist.  The audit scans the sources and flags any
+//!    site outside its contract.
+//!
+//! [`InterleavingExplorer`] is the dynamic companion: a seeded virtual
+//! scheduler that exhaustively enumerates (and replays from a single
+//! seed) the small interleavings of the pool's failover operations —
+//! the model-checking analogue of PR 8's scripted fault plans
+//! (`rust/tests/failover_interleavings.rs` drives it).
+
+use super::{FindingKind, VerifyReport};
+use crate::data::rng::Pcg32;
+use crate::util::sync::{HoldEdge, LockDecl, LockRegistry, DECLARED_HOLD_EDGES, DECLARED_LOCKS};
+
+// ---------------------------------------------------------------------------
+// 1. lock-order acyclicity + registry cross-check
+// ---------------------------------------------------------------------------
+
+/// Verify the production lock hierarchy: the declared table and hold
+/// edges, cross-checked against the global registry (including any
+/// debug-build lockdep witnesses recorded so far in this process).
+pub fn verify_lock_order() -> VerifyReport {
+    verify_lock_order_with(LockRegistry::global(), DECLARED_LOCKS, DECLARED_HOLD_EDGES)
+}
+
+/// [`verify_lock_order`] against an explicit registry and declaration
+/// set — the seam the mutation tests corrupt (a mis-ranked pair in a
+/// fixture table must produce exactly
+/// [`FindingKind::LockOrderViolation`]).
+pub fn verify_lock_order_with(registry: &LockRegistry, decls: &[LockDecl],
+                              edges: &[HoldEdge]) -> VerifyReport {
+    let mut report = VerifyReport::new("concurrency/locks");
+
+    // (a) the declared table itself: unique names
+    for (i, d) in decls.iter().enumerate() {
+        if decls[..i].iter().any(|p| p.name == d.name) {
+            report.push(FindingKind::LockRankConflict, d.name,
+                        "declared more than once in the rank table");
+        }
+    }
+    let rank_of = |name: &str| decls.iter().find(|d| d.name == name).map(|d| d.rank);
+
+    // (b) every declared hold edge strictly increases in rank
+    for e in edges {
+        match (rank_of(e.from), rank_of(e.to)) {
+            (Some(rf), Some(rt)) => {
+                if rf >= rt {
+                    report.push(
+                        FindingKind::LockOrderViolation,
+                        format!("{} -> {}", e.from, e.to),
+                        format!(
+                            "hold edge at {} does not increase rank: {} (rank {rf}) \
+                             held while acquiring {} (rank {rt})",
+                            e.site, e.from, e.to
+                        ),
+                    );
+                }
+            }
+            _ => {
+                let missing = if rank_of(e.from).is_none() { e.from } else { e.to };
+                report.push(
+                    FindingKind::UndeclaredLock,
+                    missing,
+                    format!("hold edge at {} references an undeclared lock", e.site),
+                );
+            }
+        }
+    }
+
+    // (c) explicit acyclicity proof over the declared edge graph (does
+    // not rest on rank uniqueness: a cycle is reported even if (b) was
+    // silenced by equal ranks on a doctored table)
+    if let Some(cycle) = find_cycle(decls, edges) {
+        report.push(FindingKind::LockOrderViolation, cycle.join(" -> "),
+                    "declared hold edges form a cycle");
+    }
+
+    // (d) runtime registry vs the declared table
+    for (name, rank, kind) in registry.nodes() {
+        match decls.iter().find(|d| d.name == name) {
+            None => {
+                report.push(
+                    FindingKind::UndeclaredLock,
+                    name,
+                    format!("registered at runtime (rank {rank}, kind {}) but absent \
+                             from the declared hierarchy",
+                            kind.label()),
+                );
+            }
+            Some(d) => {
+                if d.rank != rank {
+                    report.push(
+                        FindingKind::LockRankConflict,
+                        name,
+                        format!("registered with rank {rank} but declared rank {}", d.rank),
+                    );
+                }
+                if d.kind != kind.label() {
+                    report.push(
+                        FindingKind::LockRankConflict,
+                        name,
+                        format!("registered as {} but declared as {}", kind.label(), d.kind),
+                    );
+                }
+            }
+        }
+    }
+    for (name, first, conflicting) in registry.rank_conflicts() {
+        report.push(
+            FindingKind::LockRankConflict,
+            name,
+            format!("registered twice with disagreeing ranks: {first} then {conflicting}"),
+        );
+    }
+
+    // (e) lockdep witnesses: rank inversions actually observed by a debug
+    // build (release builds record none), plus any witnessed nesting the
+    // hierarchy does not declare
+    for v in registry.violations() {
+        report.push(
+            FindingKind::LockOrderViolation,
+            format!("{} -> {}", v.held, v.acquired),
+            format!(
+                "witnessed acquisition of {} (rank {}) while holding {} (rank {})",
+                v.acquired, v.acquired_rank, v.held, v.held_rank
+            ),
+        );
+    }
+    for (held, acquired) in registry.witnessed_edges() {
+        let declared = edges.iter().any(|e| e.from == held && e.to == acquired);
+        let ok_rank = matches!((rank_of(held), rank_of(acquired)), (Some(a), Some(b)) if a < b);
+        if !declared && ok_rank {
+            report.push(
+                FindingKind::LockOrderViolation,
+                format!("{held} -> {acquired}"),
+                "witnessed nesting is rank-consistent but undeclared; add it to \
+                 DECLARED_HOLD_EDGES",
+            );
+        }
+    }
+
+    report
+}
+
+/// DFS cycle search over the declared hold-edge graph; returns the node
+/// names of one cycle if any exists.
+fn find_cycle(decls: &[LockDecl], edges: &[HoldEdge]) -> Option<Vec<String>> {
+    let names: Vec<&str> = decls.iter().map(|d| d.name).collect();
+    let idx = |n: &str| names.iter().position(|&m| m == n);
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); names.len()];
+    for e in edges {
+        if let (Some(f), Some(t)) = (idx(e.from), idx(e.to)) {
+            adj[f].push(t);
+        }
+    }
+    // 0 = unvisited, 1 = on stack, 2 = done
+    let mut color = vec![0u8; names.len()];
+    let mut parent = vec![usize::MAX; names.len()];
+    for start in 0..names.len() {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut stack = vec![(start, 0usize)];
+        color[start] = 1;
+        while let Some(&mut (u, ref mut ei)) = stack.last_mut() {
+            if *ei < adj[u].len() {
+                let v = adj[u][*ei];
+                *ei += 1;
+                match color[v] {
+                    0 => {
+                        color[v] = 1;
+                        parent[v] = u;
+                        stack.push((v, 0));
+                    }
+                    1 => {
+                        // reconstruct u -> ... -> v -> u
+                        let mut path = vec![names[v].to_string()];
+                        let mut cur = u;
+                        while cur != v && cur != usize::MAX {
+                            path.push(names[cur].to_string());
+                            cur = parent[cur];
+                        }
+                        path.push(names[v].to_string());
+                        path.reverse();
+                        return Some(path);
+                    }
+                    _ => {}
+                }
+            } else {
+                color[u] = 2;
+                stack.pop();
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// 2. channel-topology deadlock freedom
+// ---------------------------------------------------------------------------
+
+/// One directed communication edge of the channel topology.
+#[derive(Debug, Clone)]
+pub struct ChanEdge {
+    /// Source node index.
+    pub from: usize,
+    /// Destination node index.
+    pub to: usize,
+    /// Channel name (`server.admission[2]`, `reply`, …).
+    pub label: String,
+    /// Bounded capacity, or `None` for an unbounded channel (a reply
+    /// channel can never be "full", so it can never carry a deadlock).
+    pub capacity: Option<usize>,
+    /// Whether any producer performs a *blocking* send on this edge
+    /// (try-send-with-rejection edges apply backpressure instead of
+    /// blocking and cannot deadlock).
+    pub blocking: bool,
+}
+
+impl ChanEdge {
+    /// An edge can participate in a queue-full deadlock cycle only if it
+    /// is bounded *and* some producer blocks on it.
+    pub fn potentially_full(&self) -> bool {
+        self.capacity.is_some() && self.blocking
+    }
+}
+
+/// The channel topology of a deployment: threads/processes as nodes,
+/// queues and synchronous hops as directed edges.  Deadlock freedom is
+/// the absence of a directed cycle of [`ChanEdge::potentially_full`]
+/// edges: in any blocked configuration, some edge of the cycle would have
+/// to be full while its consumer waits on another full edge, and an
+/// acyclic potentially-full graph always has a consumer that can drain.
+#[derive(Debug, Clone, Default)]
+pub struct ChannelGraph {
+    names: Vec<String>,
+    edges: Vec<ChanEdge>,
+}
+
+impl ChannelGraph {
+    /// Empty graph.
+    pub fn new() -> ChannelGraph {
+        ChannelGraph::default()
+    }
+
+    /// Intern a node by name (same name → same index).
+    pub fn node(&mut self, name: &str) -> usize {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return i;
+        }
+        self.names.push(name.to_string());
+        self.names.len() - 1
+    }
+
+    /// Add a directed edge.
+    pub fn edge(&mut self, from: usize, to: usize, label: impl Into<String>,
+                capacity: Option<usize>, blocking: bool) {
+        self.edges.push(ChanEdge { from, to, label: label.into(), capacity, blocking });
+    }
+
+    /// All edges (for reports and tests).
+    pub fn edges(&self) -> &[ChanEdge] {
+        &self.edges
+    }
+
+    /// Node names (for reports and tests).
+    pub fn nodes(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Prove deadlock freedom: no directed cycle of potentially-full
+    /// edges.  Each discovered cycle is one [`FindingKind::QueueCycle`]
+    /// finding naming the nodes and edge labels along it.
+    pub fn verify(&self) -> VerifyReport {
+        let mut report = VerifyReport::new("concurrency/channels");
+        let n = self.names.len();
+        let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n]; // (to, edge idx)
+        for (ei, e) in self.edges.iter().enumerate() {
+            if e.from >= n || e.to >= n {
+                report.push(
+                    FindingKind::QueueCycle,
+                    e.label.clone(),
+                    format!("edge references node {} outside the graph ({} nodes)",
+                            e.from.max(e.to), n),
+                );
+                continue;
+            }
+            if e.potentially_full() {
+                adj[e.from].push((e.to, ei));
+            }
+        }
+        let mut color = vec![0u8; n];
+        let mut parent_edge = vec![usize::MAX; n];
+        for start in 0..n {
+            if color[start] != 0 {
+                continue;
+            }
+            let mut stack = vec![(start, 0usize)];
+            color[start] = 1;
+            while let Some(&mut (u, ref mut ei)) = stack.last_mut() {
+                if *ei < adj[u].len() {
+                    let (v, edge_idx) = adj[u][*ei];
+                    *ei += 1;
+                    match color[v] {
+                        0 => {
+                            color[v] = 1;
+                            parent_edge[v] = edge_idx;
+                            stack.push((v, 0));
+                        }
+                        1 => {
+                            // cycle v -> ... -> u -> v
+                            let mut labels = vec![self.edges[edge_idx].label.clone()];
+                            let mut cur = u;
+                            while cur != v && parent_edge[cur] != usize::MAX {
+                                let pe = &self.edges[parent_edge[cur]];
+                                labels.push(pe.label.clone());
+                                cur = pe.from;
+                            }
+                            labels.reverse();
+                            report.push(
+                                FindingKind::QueueCycle,
+                                self.names[v].clone(),
+                                format!(
+                                    "cycle of potentially-full edges: {} (a blocked \
+                                     producer on each edge can starve every consumer)",
+                                    labels.join(" -> ")
+                                ),
+                            );
+                            // one finding per cycle entry point is enough
+                            color[v] = 2;
+                        }
+                        _ => {}
+                    }
+                } else {
+                    color[u] = 2;
+                    stack.pop();
+                }
+            }
+        }
+        report
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. atomic-ordering protocol audit
+// ---------------------------------------------------------------------------
+
+/// The declared atomic-ordering contract for one source file: which
+/// `Ordering::*` variants its protocol allows, and which fences must be
+/// present for the protocol to work at all.
+#[derive(Debug, Clone, Copy)]
+pub struct AtomicContract {
+    /// Source path relative to the crate root (`src/obs/trace.rs`).
+    pub file: &'static str,
+    /// Protocol name (appears in findings).
+    pub protocol: &'static str,
+    /// Orderings the protocol allows in this file.
+    pub allowed: &'static [&'static str],
+    /// Orderings at least one site must use (the protocol's load-bearing
+    /// fences — a "weakening" mutation that relaxes them is caught here).
+    pub required: &'static [&'static str],
+    /// What the protocol guarantees.
+    pub doc: &'static str,
+}
+
+/// Every audited file.  A file with `Ordering::*` sites and no contract
+/// here fails the repo-level audit test, so new atomics must declare
+/// their protocol to land.
+pub const ATOMIC_CONTRACTS: &[AtomicContract] = &[
+    AtomicContract {
+        file: "src/obs/trace.rs",
+        protocol: "seqlock",
+        allowed: &["Relaxed", "Acquire", "Release"],
+        required: &["Acquire", "Release"],
+        doc: "odd/even sequence stamps published with Release, snapshot reads \
+              Acquire + re-validate; payload itself Relaxed",
+    },
+    AtomicContract {
+        file: "src/obs/registry.rs",
+        protocol: "gauges",
+        allowed: &["Relaxed"],
+        required: &[],
+        doc: "independent gauge cells; no cross-cell invariant",
+    },
+    AtomicContract {
+        file: "src/coordinator/metrics.rs",
+        protocol: "counter-snapshot",
+        allowed: &["Relaxed", "Acquire", "Release"],
+        required: &["Acquire"],
+        doc: "responses/rejected read Acquire before requests so the snapshot \
+              satisfies requests >= responses + rejected",
+    },
+    AtomicContract {
+        file: "src/coordinator/pool.rs",
+        protocol: "up-flags",
+        allowed: &["Relaxed", "Acquire", "Release"],
+        required: &["Acquire", "Release"],
+        doc: "per-shard liveness flags: Release store on transition, Acquire \
+              load before routing to the shard",
+    },
+    AtomicContract {
+        file: "src/coordinator/remote.rs",
+        protocol: "up-flags",
+        allowed: &["Relaxed", "Acquire", "Release"],
+        required: &["Release"],
+        doc: "transport exhaustion publishes down with a Release store",
+    },
+    AtomicContract {
+        file: "src/coordinator/server.rs",
+        protocol: "counters",
+        allowed: &["Relaxed"],
+        required: &[],
+        doc: "request-id allocation and monotone counters; no ordering needed",
+    },
+    AtomicContract {
+        file: "src/coordinator/serving/mod.rs",
+        protocol: "gauges",
+        allowed: &["Relaxed"],
+        required: &[],
+        doc: "deployment gauges written once after placement",
+    },
+    AtomicContract {
+        file: "src/main.rs",
+        protocol: "counters",
+        allowed: &["Relaxed"],
+        required: &[],
+        doc: "CLI progress reads of monotone counters",
+    },
+    AtomicContract {
+        file: "src/coordinator/tcp.rs",
+        protocol: "counters",
+        allowed: &["Relaxed"],
+        required: &[],
+        doc: "accept counter and stop flag polled by one acceptor thread",
+    },
+    AtomicContract {
+        file: "src/coordinator/fault.rs",
+        protocol: "fault-flags",
+        allowed: &["Relaxed", "Acquire", "Release", "AcqRel"],
+        required: &[],
+        doc: "per-shard fault cells armed by tests, consumed AcqRel on the \
+              request path",
+    },
+    AtomicContract {
+        file: "src/util/sync.rs",
+        protocol: "contention-counters",
+        allowed: &["Relaxed"],
+        required: &[],
+        doc: "monotone per-lock statistics; no cross-counter invariant",
+    },
+];
+
+/// Scan `source` for `Ordering::*` sites and check them against
+/// `contract`, pushing findings into `report`.  Pure text in, findings
+/// out — the seam the mutation tests feed doctored sources through.
+pub fn audit_atomics_source(report: &mut VerifyReport, contract: &AtomicContract, source: &str) {
+    let mut seen: Vec<&str> = Vec::new();
+    for (pos, _) in source.match_indices("Ordering::") {
+        let rest = &source[pos + "Ordering::".len()..];
+        let ident: &str = rest
+            .split(|c: char| !c.is_ascii_alphanumeric() && c != '_')
+            .next()
+            .unwrap_or("");
+        if ident.is_empty() {
+            continue;
+        }
+        if !seen.contains(&ident) {
+            seen.push(ident);
+        }
+        if !contract.allowed.contains(&ident) {
+            // line number for the report (1-based)
+            let line = source[..pos].bytes().filter(|&b| b == b'\n').count() + 1;
+            report.push(
+                FindingKind::UndeclaredAtomicOrdering,
+                format!("{}:{line}", contract.file),
+                format!(
+                    "Ordering::{ident} is outside the '{}' contract (allowed: {})",
+                    contract.protocol,
+                    contract.allowed.join(", ")
+                ),
+            );
+        }
+    }
+    for req in contract.required {
+        if !seen.contains(req) {
+            report.push(
+                FindingKind::UndeclaredAtomicOrdering,
+                contract.file,
+                format!(
+                    "'{}' requires at least one Ordering::{req} site ({}), none found",
+                    contract.protocol, contract.doc
+                ),
+            );
+        }
+    }
+}
+
+/// Audit every contracted file against its declared protocol, reading
+/// sources relative to the crate root baked in at compile time.  Files
+/// that cannot be read (an installed binary far from its sources) are
+/// skipped — the audit is a repo/CI gate, and CI always runs it from the
+/// checkout.
+pub fn verify_atomics() -> VerifyReport {
+    let mut report = VerifyReport::new("concurrency/atomics");
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    for contract in ATOMIC_CONTRACTS {
+        if let Ok(source) = std::fs::read_to_string(root.join(contract.file)) {
+            audit_atomics_source(&mut report, contract, &source);
+        }
+    }
+    report
+}
+
+/// The full static pass behind `share-kan verify --concurrency`: lock
+/// order + registry cross-check + atomic audit.  Channel topology is
+/// per-deployment and merged in by the caller
+/// (`DeploymentSpec::channel_graph().verify()`).
+pub fn verify_static() -> VerifyReport {
+    let mut report = VerifyReport::new("concurrency");
+    report.merge(verify_lock_order());
+    report.merge(verify_atomics());
+    report
+}
+
+// ---------------------------------------------------------------------------
+// 4. deterministic interleaving explorer
+// ---------------------------------------------------------------------------
+
+/// Exhaustive enumeration of the interleavings of N sequential virtual
+/// threads, each with a fixed number of operations.
+///
+/// A *schedule* is the sequence of thread indices in execution order
+/// (thread `t` appears exactly `ops_per_thread[t]` times).  Schedules are
+/// ranked lexicographically, so rank `r` is a **replay seed**: the same
+/// rank always produces the same schedule, and iterating `0..total()`
+/// visits every interleaving exactly once — the model-checking analogue
+/// of PR 8's scripted fault plans.
+#[derive(Debug, Clone)]
+pub struct InterleavingExplorer {
+    counts: Vec<usize>,
+}
+
+impl InterleavingExplorer {
+    /// Explorer over `ops_per_thread[t]` operations for each thread `t`.
+    pub fn new(ops_per_thread: &[usize]) -> InterleavingExplorer {
+        InterleavingExplorer { counts: ops_per_thread.to_vec() }
+    }
+
+    /// Number of distinct interleavings (the multinomial coefficient), or
+    /// `None` if it overflows `u128`.
+    pub fn total(&self) -> Option<u128> {
+        multinomial(&self.counts)
+    }
+
+    /// The `rank`-th schedule in lexicographic order, or `None` when
+    /// `rank >= total()` (or the total overflows).
+    pub fn schedule(&self, rank: u128) -> Option<Vec<usize>> {
+        let total = self.total()?;
+        if rank >= total {
+            return None;
+        }
+        let mut remaining = self.counts.clone();
+        let mut left: usize = remaining.iter().sum();
+        let mut r = rank;
+        let mut out = Vec::with_capacity(left);
+        while left > 0 {
+            for t in 0..remaining.len() {
+                if remaining[t] == 0 {
+                    continue;
+                }
+                remaining[t] -= 1;
+                let sub = multinomial(&remaining)?;
+                if r < sub {
+                    out.push(t);
+                    left -= 1;
+                    break;
+                }
+                r -= sub;
+                remaining[t] += 1;
+            }
+        }
+        Some(out)
+    }
+
+    /// A schedule replayable from a single seed: the seed drives a
+    /// [`Pcg32`] draw of a rank, so identical seeds always produce
+    /// identical schedule traces (asserted by the explorer test suite).
+    pub fn schedule_for_seed(&self, seed: u64) -> Vec<usize> {
+        let mut rng = Pcg32::seeded(seed);
+        if let Some(total) = self.total() {
+            if total > 0 {
+                let wide =
+                    ((rng.next_u32() as u128) << 32) | rng.next_u32() as u128;
+                if let Some(s) = self.schedule(wide % total) {
+                    return s;
+                }
+            }
+        }
+        // unrankable (astronomically many interleavings): draw each step
+        // among runnable threads, still fully determined by the seed
+        let mut remaining = self.counts.clone();
+        let mut left: usize = remaining.iter().sum();
+        let mut out = Vec::with_capacity(left);
+        while left > 0 {
+            let runnable: Vec<usize> =
+                (0..remaining.len()).filter(|&t| remaining[t] > 0).collect();
+            let t = runnable[rng.below(runnable.len())];
+            remaining[t] -= 1;
+            left -= 1;
+            out.push(t);
+        }
+        out
+    }
+
+    /// Iterate every schedule in lexicographic order (rank 0, 1, …).
+    pub fn schedules(&self) -> impl Iterator<Item = Vec<usize>> + '_ {
+        let total = self.total().unwrap_or(0);
+        (0..total).filter_map(move |r| self.schedule(r))
+    }
+}
+
+/// Exact multinomial coefficient `(Σcounts)! / Π(counts[i]!)` in `u128`,
+/// `None` on overflow.  Computed as a product of binomials so every
+/// intermediate value is an integer.
+fn multinomial(counts: &[usize]) -> Option<u128> {
+    let mut total: u128 = 1;
+    let mut n: u128 = 0;
+    for &c in counts {
+        // total *= C(n + c, c), computed incrementally and exactly
+        let mut binom: u128 = 1;
+        for i in 1..=(c as u128) {
+            binom = binom.checked_mul(n + i)? / i;
+        }
+        total = total.checked_mul(binom)?;
+        n += c as u128;
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::sync::{BoundedQueue, OrderedMutex};
+
+    #[test]
+    fn declared_hierarchy_verifies_clean() {
+        let reg = LockRegistry::new(); // empty registry: pure table check
+        let r = verify_lock_order_with(&reg, DECLARED_LOCKS, DECLARED_HOLD_EDGES);
+        assert!(r.is_ok(), "{:?}", r.findings());
+    }
+
+    #[test]
+    fn production_wrappers_register_declared_nodes_only() {
+        let reg = LockRegistry::new();
+        let _m = OrderedMutex::new_in(&reg, "tcp.shard_state",
+                                      crate::util::sync::ranks::TCP_SHARD_STATE, ());
+        let _q = BoundedQueue::channel_in::<u8>(&reg, "server.admission", 4);
+        let r = verify_lock_order_with(&reg, DECLARED_LOCKS, DECLARED_HOLD_EDGES);
+        assert!(r.is_ok(), "{:?}", r.findings());
+    }
+
+    #[test]
+    fn mis_ranked_edge_is_a_lock_order_violation() {
+        let decls: &[LockDecl] = &[
+            LockDecl { name: "fix.a", rank: 20, kind: "mutex", doc: "" },
+            LockDecl { name: "fix.b", rank: 10, kind: "mutex", doc: "" },
+        ];
+        let edges: &[HoldEdge] =
+            &[HoldEdge { from: "fix.a", to: "fix.b", site: "fixture" }];
+        let reg = LockRegistry::new();
+        let r = verify_lock_order_with(&reg, decls, edges);
+        assert!(r.has(FindingKind::LockOrderViolation));
+    }
+
+    #[test]
+    fn declared_cycle_is_found_even_with_equal_ranks() {
+        let decls: &[LockDecl] = &[
+            LockDecl { name: "c.a", rank: 10, kind: "mutex", doc: "" },
+            LockDecl { name: "c.b", rank: 10, kind: "mutex", doc: "" },
+        ];
+        let edges: &[HoldEdge] = &[
+            HoldEdge { from: "c.a", to: "c.b", site: "f1" },
+            HoldEdge { from: "c.b", to: "c.a", site: "f2" },
+        ];
+        let r = verify_lock_order_with(&LockRegistry::new(), decls, edges);
+        assert!(r.has(FindingKind::LockOrderViolation));
+        let cycle = r
+            .findings()
+            .iter()
+            .find(|f| f.detail.contains("cycle"))
+            .expect("explicit cycle finding");
+        assert!(cycle.subject.contains("c.a") && cycle.subject.contains("c.b"));
+    }
+
+    #[test]
+    fn undeclared_runtime_lock_is_flagged() {
+        let reg = LockRegistry::new();
+        let _rogue = OrderedMutex::new_in(&reg, "rogue.lock", 7, ());
+        let r = verify_lock_order_with(&reg, DECLARED_LOCKS, DECLARED_HOLD_EDGES);
+        assert!(r.has(FindingKind::UndeclaredLock));
+    }
+
+    #[test]
+    fn acyclic_channel_graph_verifies_clean() {
+        let mut g = ChannelGraph::new();
+        let client = g.node("client");
+        let exec = g.node("executor");
+        g.edge(client, exec, "admission", Some(1024), true);
+        g.edge(exec, client, "reply", None, false);
+        assert!(g.verify().is_ok());
+    }
+
+    #[test]
+    fn full_queue_cycle_is_found() {
+        let mut g = ChannelGraph::new();
+        let a = g.node("a");
+        let b = g.node("b");
+        g.edge(a, b, "a->b", Some(1), true);
+        g.edge(b, a, "b->a", Some(1), true);
+        let r = g.verify();
+        assert!(r.has(FindingKind::QueueCycle));
+    }
+
+    #[test]
+    fn unbounded_or_nonblocking_edges_break_cycles() {
+        let mut g = ChannelGraph::new();
+        let a = g.node("a");
+        let b = g.node("b");
+        // bounded but rejecting (try_send): applies backpressure, no block
+        g.edge(a, b, "a->b", Some(1), false);
+        g.edge(b, a, "b->a", Some(1), true);
+        assert!(g.verify().is_ok());
+        // unbounded return edge
+        let mut g2 = ChannelGraph::new();
+        let a = g2.node("a");
+        let b = g2.node("b");
+        g2.edge(a, b, "a->b", Some(1), true);
+        g2.edge(b, a, "b->a", None, true);
+        assert!(g2.verify().is_ok());
+    }
+
+    #[test]
+    fn atomic_audit_flags_ordering_outside_contract() {
+        let contract = &ATOMIC_CONTRACTS[0]; // seqlock: SeqCst not allowed
+        let mut r = VerifyReport::new("fixture");
+        audit_atomics_source(
+            &mut r,
+            contract,
+            "seq.store(1, Ordering::Release);\nlet s = seq.load(Ordering::SeqCst);\n\
+             let p = payload.load(Ordering::Acquire);",
+        );
+        assert!(r.has(FindingKind::UndeclaredAtomicOrdering));
+        let f = &r.findings()[0];
+        assert!(f.subject.ends_with(":2"), "line number in subject: {}", f.subject);
+    }
+
+    #[test]
+    fn atomic_audit_flags_missing_required_fence() {
+        let contract = &ATOMIC_CONTRACTS[0];
+        let mut r = VerifyReport::new("fixture");
+        // weakened seqlock: the Release publication was relaxed away
+        audit_atomics_source(&mut r, contract,
+                             "seq.store(1, Ordering::Relaxed); x.load(Ordering::Acquire);");
+        assert!(r.has(FindingKind::UndeclaredAtomicOrdering));
+    }
+
+    #[cfg(not(miri))] // reads the sources from disk
+    #[test]
+    fn shipped_sources_satisfy_their_atomic_contracts() {
+        let r = verify_atomics();
+        assert!(r.is_ok(), "{:?}", r.findings());
+    }
+
+    #[cfg(not(miri))] // reads the sources from disk
+    #[test]
+    fn every_file_with_ordering_sites_has_a_contract() {
+        // sweep src/ for files touching std::sync::atomic and require a
+        // contract row (cmp::Ordering users don't count)
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let mut stack = vec![root];
+        let mut missing: Vec<String> = Vec::new();
+        // assembled at runtime so this file does not match its own needle
+        let needle = String::from("std::sync::") + "atomic";
+        while let Some(dir) = stack.pop() {
+            for entry in std::fs::read_dir(&dir).unwrap() {
+                let path = entry.unwrap().path();
+                if path.is_dir() {
+                    stack.push(path);
+                } else if path.extension().is_some_and(|e| e == "rs") {
+                    let source = std::fs::read_to_string(&path).unwrap();
+                    if source.contains(&needle) && source.contains("Ordering::") {
+                        let rel = path
+                            .strip_prefix(std::path::Path::new(env!("CARGO_MANIFEST_DIR")))
+                            .unwrap()
+                            .to_string_lossy()
+                            .replace('\\', "/");
+                        if !ATOMIC_CONTRACTS.iter().any(|c| c.file == rel) {
+                            missing.push(rel);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(missing.is_empty(),
+                "files with Ordering sites but no AtomicContract: {missing:?}");
+    }
+
+    #[test]
+    fn multinomial_counts_match_enumeration() {
+        let ex = InterleavingExplorer::new(&[2, 2]);
+        assert_eq!(ex.total(), Some(6));
+        let all: Vec<Vec<usize>> = ex.schedules().collect();
+        assert_eq!(all.len(), 6);
+        // all distinct, all valid multiset permutations
+        for (i, s) in all.iter().enumerate() {
+            assert_eq!(s.iter().filter(|&&t| t == 0).count(), 2);
+            assert_eq!(s.iter().filter(|&&t| t == 1).count(), 2);
+            for other in &all[..i] {
+                assert_ne!(s, other);
+            }
+        }
+        // lexicographic: rank 0 is [0,0,1,1], last is [1,1,0,0]
+        assert_eq!(all[0], vec![0, 0, 1, 1]);
+        assert_eq!(all[5], vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn schedule_rank_roundtrip_is_exhaustive() {
+        let ex = InterleavingExplorer::new(&[2, 1, 2]);
+        let total = ex.total().unwrap();
+        assert_eq!(total, 30);
+        assert!(ex.schedule(total).is_none());
+        let mut seen: Vec<Vec<usize>> = Vec::new();
+        for r in 0..total {
+            let s = ex.schedule(r).unwrap();
+            assert!(!seen.contains(&s));
+            seen.push(s);
+        }
+    }
+
+    #[test]
+    fn identical_seed_identical_schedule() {
+        let ex = InterleavingExplorer::new(&[3, 2, 2]);
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+            assert_eq!(ex.schedule_for_seed(seed), ex.schedule_for_seed(seed));
+        }
+        // different seeds explore different interleavings at least once
+        let distinct = (0..16u64)
+            .map(|s| ex.schedule_for_seed(s))
+            .collect::<std::collections::BTreeSet<_>>();
+        assert!(distinct.len() > 1);
+    }
+}

@@ -30,6 +30,8 @@
 //! findings), and the debug/`shadow-bounds` shadow bounds-checker
 //! ([`check_access`]) that tags every arena access with its owning region.
 
+pub mod concurrency;
+
 use std::fmt;
 
 use crate::coordinator::heads::HeadWeights;
@@ -77,6 +79,23 @@ pub enum FindingKind {
     /// plan (a pinned head on a killed shard, or a replicated head whose
     /// every replica shard is killed).
     NoLivePlacement,
+    /// A lock acquisition order contradicts the declared rank hierarchy:
+    /// a declared hold-edge whose rank does not strictly increase, or a
+    /// lockdep-witnessed acquisition recorded by a debug build.
+    LockOrderViolation,
+    /// A lock or channel registered at runtime is absent from the
+    /// declared hierarchy ([`crate::util::sync::DECLARED_LOCKS`]).
+    UndeclaredLock,
+    /// A lock registered with a rank or kind that disagrees with its
+    /// declaration (or a second registration disagreeing with the first).
+    LockRankConflict,
+    /// The channel topology contains a cycle of bounded, blocking
+    /// ("potentially-full") edges — a queue-full deadlock is reachable.
+    QueueCycle,
+    /// An `Ordering::*` site outside its file's declared atomic-protocol
+    /// contract (an ordering the protocol does not allow, or a required
+    /// fence the file no longer contains).
+    UndeclaredAtomicOrdering,
 }
 
 impl FindingKind {
@@ -97,6 +116,11 @@ impl FindingKind {
             FindingKind::SizeMismatch => "size-mismatch",
             FindingKind::IndexDesync => "index-desync",
             FindingKind::NoLivePlacement => "no-live-placement",
+            FindingKind::LockOrderViolation => "lock-order-violation",
+            FindingKind::UndeclaredLock => "undeclared-lock",
+            FindingKind::LockRankConflict => "lock-rank-conflict",
+            FindingKind::QueueCycle => "queue-cycle",
+            FindingKind::UndeclaredAtomicOrdering => "undeclared-atomic-ordering",
         }
     }
 }
@@ -689,6 +713,7 @@ pub fn verify_live_placements(heads: &[(String, Option<usize>)], num_shards: usi
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kan::spec::VqSpec;

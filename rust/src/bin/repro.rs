@@ -43,7 +43,7 @@ const USAGE: &str = "repro <fig1|spectral|table1|fig3|table3|table2|pareto|bandw
 fn run(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get_or(
         "artifacts",
-        share_kan::runtime::default_artifacts_dir().to_str().unwrap(),
+        share_kan::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
     ));
     let mut cfg = if args.flag("quick") { ExpConfig::quick() } else { ExpConfig::default() };
     cfg.seed = args.get_u64("seed", cfg.seed);

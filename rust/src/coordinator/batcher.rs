@@ -108,6 +108,7 @@ impl PendingQueue {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::mpsc;

@@ -285,6 +285,7 @@ pub fn pad_codebook(cb: &[f32], k_actual: usize, g: usize, k_target: usize) -> R
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::json::Json;

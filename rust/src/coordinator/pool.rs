@@ -48,7 +48,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -63,6 +63,9 @@ use crate::obs::{
     GaugesSnapshot, MetricsSnapshot, StatsSnapshot, TraceConfig, TraceSummary, Tracer,
 };
 use crate::runtime::{BackendConfig, BackendSpec};
+use crate::util::sync::{
+    ranks, LockRegistry, OrderedReadGuard, OrderedRwLock, OrderedWriteGuard,
+};
 
 /// Configuration for an [`ExecutorPool`] (one entry per knob, applied to
 /// every shard identically).
@@ -285,10 +288,10 @@ pub struct ExecutorPool {
     /// workers (which flip it down on budget exhaustion)
     up: Vec<Arc<AtomicBool>>,
     placement: Arc<dyn PlacementPolicy>,
-    routing: Arc<RwLock<HashMap<String, RouteEntry>>>,
+    routing: Arc<OrderedRwLock<HashMap<String, RouteEntry>>>,
     /// weights retained for re-registration on remote-shard recovery
     /// (populated only when the pool has at least one remote slot)
-    retained: Arc<RwLock<HashMap<String, HeadWeights>>>,
+    retained: Arc<OrderedRwLock<HashMap<String, HeadWeights>>>,
     round_robin: Arc<AtomicUsize>,
     tracer: Arc<Tracer>,
     fault: Arc<FaultInjector>,
@@ -340,7 +343,12 @@ impl ExecutorPool {
         for shard in 0..cfg.num_shards {
             match cfg.remotes.get(shard).cloned().flatten() {
                 Some(rc) => {
-                    let exec = exec_cfg.clone().expect("exec config derived when remotes exist");
+                    let Some(exec) = exec_cfg.clone() else {
+                        anyhow::bail!(
+                            "shard {shard} is remote but no executor config was derived \
+                             from the backend"
+                        );
+                    };
                     let (client, handle) =
                         RemoteShard::start(shard, rc, exec, tracer.clone(), fault.clone())?;
                     up.push(client.up_flag());
@@ -365,8 +373,16 @@ impl ExecutorPool {
             shards,
             up,
             placement,
-            routing: Arc::new(RwLock::new(HashMap::new())),
-            retained: Arc::new(RwLock::new(HashMap::new())),
+            routing: Arc::new(OrderedRwLock::new(
+                "pool.routing",
+                ranks::POOL_ROUTING,
+                HashMap::new(),
+            )),
+            retained: Arc::new(OrderedRwLock::new(
+                "pool.retained",
+                ranks::POOL_RETAINED,
+                HashMap::new(),
+            )),
             round_robin: Arc::new(AtomicUsize::new(0)),
             tracer,
             fault,
@@ -741,6 +757,7 @@ impl ExecutorPool {
             merged: pm.merged,
             per_shard: pm.per_shard,
             gauges: GaugesSnapshot { shards_up: self.shards_up() as u64, ..Default::default() },
+            locks: LockRegistry::global().contention(),
             trace: TraceSummary {
                 sample_every: self.tracer.sample_every(),
                 capacity: self.tracer.capacity(),
@@ -886,20 +903,20 @@ impl ExecutorPool {
         loads
     }
 
-    fn read_routing(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, RouteEntry>> {
-        self.routing.read().unwrap_or_else(|e| e.into_inner())
+    fn read_routing(&self) -> OrderedReadGuard<'_, HashMap<String, RouteEntry>> {
+        self.routing.read()
     }
 
-    fn write_routing(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, RouteEntry>> {
-        self.routing.write().unwrap_or_else(|e| e.into_inner())
+    fn write_routing(&self) -> OrderedWriteGuard<'_, HashMap<String, RouteEntry>> {
+        self.routing.write()
     }
 
-    fn read_retained(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, HeadWeights>> {
-        self.retained.read().unwrap_or_else(|e| e.into_inner())
+    fn read_retained(&self) -> OrderedReadGuard<'_, HashMap<String, HeadWeights>> {
+        self.retained.read()
     }
 
-    fn write_retained(&self) -> std::sync::RwLockWriteGuard<'_, HashMap<String, HeadWeights>> {
-        self.retained.write().unwrap_or_else(|e| e.into_inner())
+    fn write_retained(&self) -> OrderedWriteGuard<'_, HashMap<String, HeadWeights>> {
+        self.retained.write()
     }
 }
 
@@ -953,6 +970,7 @@ impl Drop for PoolHandle {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::fault::FaultPlan;

@@ -28,8 +28,8 @@
 use std::io;
 use std::net::ToSocketAddrs;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -42,6 +42,9 @@ use super::server::Metrics;
 use super::tcp::{ClientError, TcpClient};
 use crate::obs::{Stage, Tracer};
 use crate::util::json::{self, Json};
+use crate::util::sync::{
+    ranks, BoundedQueue, BoundedReceiver, BoundedSender, OrderedMutex,
+};
 
 /// Connection and retry policy for one remote shard slot.
 #[derive(Debug, Clone)]
@@ -142,7 +145,7 @@ struct WorkerCtx {
 /// [`super::server::Coordinator`]).
 #[derive(Clone)]
 pub struct RemoteShard {
-    tx: SyncSender<Job>,
+    tx: BoundedSender<Job>,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     cfg: Arc<RemoteConfig>,
@@ -154,7 +157,7 @@ pub struct RemoteShard {
 
 /// Owner handle joining the worker threads on shutdown/drop.
 pub struct RemoteShardHandle {
-    tx: SyncSender<Job>,
+    tx: BoundedSender<Job>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -165,8 +168,8 @@ impl RemoteShard {
     pub fn start(shard: usize, cfg: RemoteConfig, exec: RemoteExecConfig, tracer: Arc<Tracer>,
                  fault: Arc<FaultInjector>) -> Result<(RemoteShard, RemoteShardHandle)> {
         anyhow::ensure!(!cfg.addr.is_empty(), "remote shard {shard}: empty address");
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_capacity.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        let (tx, rx) = BoundedQueue::channel::<Job>("remote.jobs", cfg.queue_capacity.max(1));
+        let rx = Arc::new(OrderedMutex::new("remote.job_rx", ranks::REMOTE_JOB_RX, rx));
         let metrics = Arc::new(Metrics::for_shard(tracer, shard as u32));
         let up = Arc::new(AtomicBool::new(true));
         let mut workers = Vec::new();
@@ -362,12 +365,12 @@ impl Drop for RemoteShardHandle {
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, ctx: WorkerCtx) {
+fn worker_loop(rx: Arc<OrderedMutex<BoundedReceiver<Job>>>, ctx: WorkerCtx) {
     let mut conn: Option<TcpClient> = None;
     loop {
         // hold the lock only for the dequeue, never for network I/O
         let job = {
-            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            let guard = rx.lock();
             guard.recv()
         };
         match job {
@@ -443,7 +446,11 @@ fn ensure_conn<'a>(conn: &'a mut Option<TcpClient>, ctx: &WorkerCtx)
         c.inject_faults(ctx.fault.clone(), ctx.shard);
         *conn = Some(c);
     }
-    Ok(conn.as_mut().expect("connection just established"))
+    match conn.as_mut() {
+        Some(c) => Ok(c),
+        None => Err(ClientError::Io(io::Error::new(io::ErrorKind::NotConnected,
+                                                   "connection slot empty after dial"))),
+    }
 }
 
 /// Resolve `"host:port"` to the first socket address.
@@ -456,10 +463,11 @@ pub(crate) fn resolve_addr(addr: &str) -> io::Result<std::net::SocketAddr> {
 
 /// Lowercase hex armor for binary payloads on the JSON line protocol.
 pub(crate) fn hex_encode(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
     let mut out = String::with_capacity(bytes.len() * 2);
     for b in bytes {
-        out.push(char::from_digit((b >> 4) as u32, 16).expect("nibble < 16"));
-        out.push(char::from_digit((b & 0xf) as u32, 16).expect("nibble < 16"));
+        out.push(DIGITS[(b >> 4) as usize] as char);
+        out.push(DIGITS[(b & 0xf) as usize] as char);
     }
     out
 }
@@ -481,6 +489,7 @@ pub(crate) fn hex_decode(s: &str) -> Result<Vec<u8>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -14,7 +14,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -27,6 +27,7 @@ use super::metrics::{Counters, LatencyHistogram};
 use super::request::{InferRequest, InferResponse};
 use crate::obs::{MetricsSnapshot, Stage, Tracer};
 use crate::runtime::{Backend, BackendConfig};
+use crate::util::sync::{BoundedQueue, BoundedReceiver, BoundedSender};
 
 /// Configuration for one [`Coordinator`] executor.
 pub struct CoordinatorConfig {
@@ -136,7 +137,7 @@ enum Msg {
 /// Client handle; cloneable across threads.
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: SyncSender<Msg>,
+    tx: BoundedSender<Msg>,
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
 }
@@ -151,7 +152,7 @@ pub struct CoordinatorHandle {
 impl Coordinator {
     /// Start the executor thread and return (owner handle, client).
     pub fn start(cfg: CoordinatorConfig) -> Result<CoordinatorHandle> {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_capacity);
+        let (tx, rx) = BoundedQueue::channel::<Msg>("server.admission", cfg.queue_capacity);
         let shard = cfg.shard;
         let metrics = Arc::new(Metrics::for_shard(cfg.tracer.clone(), shard));
         let m2 = metrics.clone();
@@ -295,7 +296,7 @@ struct HeadState {
     queue: PendingQueue,
 }
 
-fn executor_loop(cfg: CoordinatorConfig, rx: Receiver<Msg>, metrics: Arc<Metrics>,
+fn executor_loop(cfg: CoordinatorConfig, rx: BoundedReceiver<Msg>, metrics: Arc<Metrics>,
                  ready: mpsc::Sender<Result<(), String>>) {
     let mut backend: Box<dyn Backend> = match cfg.backend.build() {
         Ok(b) => {

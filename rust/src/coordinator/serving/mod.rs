@@ -592,6 +592,56 @@ impl DeploymentSpec {
         Ok(crate::analysis::verify_live_placements(&pairs, self.shards, &plan.killed_shards()))
     }
 
+    /// The bounded-channel topology a deployment of this spec would run,
+    /// for [`ChannelGraph::verify`](crate::analysis::concurrency::ChannelGraph::verify)'s
+    /// deadlock-freedom proof (`share-kan verify --concurrency
+    /// --deployment file.toml`).
+    ///
+    /// Modelled edges, matching the wiring in [`DeploymentSpec::deploy`]:
+    ///
+    /// * **Local shard `i`** — the pool client sends into the shard's
+    ///   admission queue (`server.admission`, capacity
+    ///   `queue_capacity`; infer traffic is `try_send` with rejection,
+    ///   but control verbs block, so the edge is conservatively
+    ///   blocking), and the executor answers on a per-request
+    ///   **unbounded** reply channel — unbounded edges can never be
+    ///   full, which is exactly what breaks every request/reply cycle.
+    /// * **Remote shard `i`** — the client feeds the bounded
+    ///   `remote.jobs` queue drained by the worker threads; each worker
+    ///   performs a synchronous TCP RPC against the remote executor
+    ///   process (a blocking rendezvous hop, capacity 1) whose own
+    ///   admission queue and reply channels mirror the local shape.
+    pub fn channel_graph(&self) -> Result<crate::analysis::concurrency::ChannelGraph> {
+        self.validate()?;
+        let mut g = crate::analysis::concurrency::ChannelGraph::new();
+        let client = g.node("pool.client");
+        let remote: BTreeSet<usize> = self.remote_shards.iter().map(|r| r.index).collect();
+        for shard in 0..self.shards {
+            if remote.contains(&shard) {
+                let workers = g.node(&format!("remote{shard}.workers"));
+                let server = g.node(&format!("remote{shard}.server"));
+                let exec = g.node(&format!("remote{shard}.executor"));
+                g.edge(client, workers, format!("remote.jobs[{shard}]"),
+                       Some(self.queue_capacity.max(1)), true);
+                // synchronous RPC: request blocks until the acceptor
+                // reads it; replies ride the same stream back
+                g.edge(workers, server, format!("tcp.rpc[{shard}]"), Some(1), true);
+                g.edge(server, workers, format!("tcp.reply[{shard}]"), None, false);
+                // the remote process runs the same admission/reply shape
+                g.edge(server, exec, format!("remote{shard}.admission"),
+                       Some(self.queue_capacity), true);
+                g.edge(exec, server, format!("remote{shard}.reply"), None, false);
+                g.edge(workers, client, format!("remote.reply[{shard}]"), None, false);
+            } else {
+                let exec = g.node(&format!("shard{shard}.executor"));
+                g.edge(client, exec, format!("server.admission[{shard}]"),
+                       Some(self.queue_capacity), true);
+                g.edge(exec, client, format!("server.reply[{shard}]"), None, false);
+            }
+        }
+        Ok(g)
+    }
+
     /// Static mirror of [`Deployment::report`]'s resident-byte total: the
     /// exact bytes a fresh deployment of this spec would report, computed
     /// from [`DeploymentSpec::simulate_placements`] and the same per-head

@@ -265,6 +265,7 @@ impl std::fmt::Display for Placement {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

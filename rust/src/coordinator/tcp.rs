@@ -41,7 +41,7 @@ use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -58,6 +58,7 @@ use crate::kan::checkpoint::Checkpoint;
 use crate::obs::{MetricsSnapshot, StatsSnapshot, Tracer};
 use crate::runtime::{BackendConfig, BackendSpec, KernelMode};
 use crate::util::json::{self, Json};
+use crate::util::sync::{ranks, OrderedMutex, OrderedMutexGuard};
 
 /// Upper bound on one request line (bytes, newline included).  Covers
 /// hex-armored checkpoint registration for every head size this repo
@@ -116,9 +117,9 @@ fn single_stats(backend: &str, c: Option<&Coordinator>) -> StatsSnapshot {
 /// A standalone shard executor's state: the coordinator is built on the
 /// FIRST `register` verb (backend config arrives on the wire), then heads
 /// hot-swap in and out of it.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 struct ShardHost {
-    inner: Arc<Mutex<ShardState>>,
+    inner: Arc<OrderedMutex<ShardState>>,
 }
 
 #[derive(Default)]
@@ -127,9 +128,21 @@ struct ShardState {
     heads: HashSet<String>,
 }
 
+impl Default for ShardHost {
+    fn default() -> Self {
+        ShardHost {
+            inner: Arc::new(OrderedMutex::new(
+                "tcp.shard_state",
+                ranks::TCP_SHARD_STATE,
+                ShardState::default(),
+            )),
+        }
+    }
+}
+
 impl ShardHost {
-    fn lock(&self) -> std::sync::MutexGuard<'_, ShardState> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock(&self) -> OrderedMutexGuard<'_, ShardState> {
+        self.inner.lock()
     }
 
     /// Clone out the executor client (infer runs OUTSIDE the lock).
@@ -159,7 +172,10 @@ impl ShardHost {
                 let cfg = shard_coordinator_config(req.get("config"), &weights)?;
                 st.handle = Some(Coordinator::start(cfg)?);
             }
-            st.handle.as_ref().expect("just initialized").client.clone()
+            let Some(h) = st.handle.as_ref() else {
+                anyhow::bail!("register: shard executor unavailable after initialization");
+            };
+            h.client.clone()
         };
         // blocking executor round-trip happens with the lock released
         client.add_head(&head, weights)?;

@@ -66,6 +66,7 @@ pub fn bursty_schedule(n: usize, high_rps: f64, low_rps: f64, phase: Duration,
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -30,6 +30,10 @@
 //!            machine-readable JSON findings; exit 1 on any finding.
 //!            `--kill` adds a fault dry-run: every head must keep at least
 //!            one live placement with those shards down)
+//!   verify   --concurrency [--deployment deploy.toml]
+//!            (static concurrency verification: lock-rank hierarchy proof,
+//!            atomic-ordering protocol audit, and — with a deployment —
+//!            the channel-topology deadlock-freedom proof)
 //!   shard    --listen ADDR
 //!            (standalone remote shard executor: binds the TCP shard
 //!            protocol and waits for a pool with `[[shard]]` entries in
@@ -80,6 +84,7 @@ const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify|st
            --family [--heads N] [--k 512] [--int8] [--shards N] [--heads-per-shard N]   (family arena + placement accounting)
            --deployment deploy.toml   (placement dry-run)
   verify   --deployment deploy.toml [--kill 0,2]   (static plan verification + fault dry-run; JSON findings, exit 1 on any)
+           --concurrency [--deployment deploy.toml]   (lock-order + atomic-audit + channel-deadlock proofs)
   stats    --tcp ADDR [--prom]   (scrape a running server's stats registry)
   shard    --listen ADDR   (standalone remote shard executor for [[shard]] deployment entries)
 common: --artifacts DIR (pjrt backend; default ./artifacts or $SHARE_KAN_ARTIFACTS)
@@ -101,7 +106,7 @@ fn main() {
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or(
         "artifacts",
-        share_kan::runtime::default_artifacts_dir().to_str().unwrap(),
+        share_kan::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
     ))
 }
 
@@ -605,7 +610,23 @@ fn cmd_serve_deployment(args: &Args, file: &str) -> Result<()> {
 /// shared-vs-marginal byte accounting.  Output is one machine-readable
 /// JSON object (`{"label","ok","findings":[{kind,subject,detail}..]}`);
 /// the process exits 1 when any finding is present.
+///
+/// `verify --concurrency` runs the static concurrency pass instead: the
+/// lock-rank hierarchy proof (declared table + hold edges + any lockdep
+/// witnesses), the atomic-ordering protocol audit, and — when
+/// `--deployment` is also given — the channel-topology deadlock-freedom
+/// proof for that spec.  Same JSON/exit-code contract.
 fn cmd_verify(args: &Args) -> Result<()> {
+    if args.flag("concurrency") {
+        let mut report = share_kan::analysis::concurrency::verify_static();
+        if let Some(file) = args.get("deployment") {
+            let spec = DeploymentSpec::from_file(Path::new(file))?;
+            report.merge(spec.channel_graph()?.verify());
+        }
+        println!("{}", share_kan::util::json::to_string(&report.to_json()));
+        report.into_result()?;
+        return Ok(());
+    }
     let file = args.get("deployment").context("--deployment required")?;
     let spec = DeploymentSpec::from_file(Path::new(file))?;
     let mut report = spec.verify()?;
@@ -684,7 +705,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let paper = plan_vq_head(&KanSpec { grid_size: 10, ..KanSpec::paper_scale() },
                              &VqSpec { codebook_size: 65536 }, Precision::Int8, 1)
         .map_err(|e| anyhow::anyhow!(e))?;
-    let cb = paper.lookup("layer0/codebook").unwrap();
+    let cb = paper
+        .lookup("layer0/codebook")
+        .ok_or_else(|| anyhow::anyhow!("paper-scale plan is missing layer0/codebook"))?;
     println!("paper-scale check: per-layer Int8 codebook = {} bytes (paper Eq. 6: 655 KB)",
              cb.size);
     Ok(())

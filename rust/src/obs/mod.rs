@@ -17,8 +17,10 @@
 //!   [`StatsSnapshot::to_prometheus`], served by the TCP `STATS` verb,
 //!   the `share-kan stats` CLI, and `serve --stats-interval S`.
 //!
-//! This module is a leaf: it depends only on `util::json`, and the
-//! coordinator/runtime layers depend on it — never the other way around.
+//! This module is a leaf: it depends only on `util::json` and the
+//! `util::sync` lock registry (whose per-lock contention counters ride in
+//! [`StatsSnapshot::locks`]); the coordinator/runtime layers depend on it —
+//! never the other way around.
 
 pub mod registry;
 pub mod trace;

@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::util::json::Json;
+use crate::util::sync::ContentionSnapshot;
 
 use super::trace::{RequestSpan, Stage};
 
@@ -396,6 +397,9 @@ pub struct StatsSnapshot {
     pub per_shard: Vec<MetricsSnapshot>,
     /// Deployment-level gauges.
     pub gauges: GaugesSnapshot,
+    /// Per-lock/per-queue contention counters from the global
+    /// [`crate::util::sync::LockRegistry`] (sorted by node name).
+    pub locks: Vec<ContentionSnapshot>,
     /// Span-tracer capture.
     pub trace: TraceSummary,
 }
@@ -422,6 +426,20 @@ impl StatsSnapshot {
                 ])
             })
             .collect();
+        let locks = self
+            .locks
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(l.name)),
+                    ("kind", Json::str(l.kind)),
+                    ("rank", Json::num(l.rank as f64)),
+                    ("ops", Json::num(l.ops as f64)),
+                    ("blocked", Json::num(l.blocked as f64)),
+                    ("wait_ns", Json::num(l.wait_ns as f64)),
+                ])
+            })
+            .collect();
         let pairs = vec![
             ("backend", Json::str(self.backend.as_str())),
             ("policy", Json::str(self.policy.as_str())),
@@ -429,6 +447,7 @@ impl StatsSnapshot {
             ("shards", Json::num(self.num_shards as f64)),
             ("gauges", self.gauges.to_json()),
             ("per_shard", Json::Arr(per_shard)),
+            ("locks", Json::Arr(locks)),
             ("trace", self.trace.to_json()),
         ];
         let mut obj = match Json::obj(pairs) {
@@ -515,11 +534,40 @@ impl StatsSnapshot {
                 m.counters.responses
             );
         }
+        if !self.locks.is_empty() {
+            let _ = writeln!(out, "# HELP share_kan_lock_ops_total Lock/queue operations.");
+            let _ = writeln!(out, "# TYPE share_kan_lock_ops_total counter");
+            for l in &self.locks {
+                let _ = writeln!(out, "share_kan_lock_ops_total{{lock=\"{}\"}} {}", l.name, l.ops);
+            }
+            let _ = writeln!(
+                out,
+                "# HELP share_kan_lock_blocked_total Contended acquisitions / full-queue sends."
+            );
+            let _ = writeln!(out, "# TYPE share_kan_lock_blocked_total counter");
+            for l in &self.locks {
+                let _ = writeln!(
+                    out,
+                    "share_kan_lock_blocked_total{{lock=\"{}\"}} {}",
+                    l.name, l.blocked
+                );
+            }
+            let _ = writeln!(out, "# HELP share_kan_lock_wait_ns_total Blocked wall time (ns).");
+            let _ = writeln!(out, "# TYPE share_kan_lock_wait_ns_total counter");
+            for l in &self.locks {
+                let _ = writeln!(
+                    out,
+                    "share_kan_lock_wait_ns_total{{lock=\"{}\"}} {}",
+                    l.name, l.wait_ns
+                );
+            }
+        }
         out
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -605,13 +653,36 @@ mod tests {
         let j = snap.to_json();
         for key in
             ["backend", "kernel", "shards", "counters", "latency_us", "stages", "gauges",
-             "per_shard", "trace", "kernel_batches"]
+             "per_shard", "locks", "trace", "kernel_batches"]
         {
             assert!(j.get(key).is_some(), "missing key {key}");
         }
         let text = crate::util::json::to_string(&j);
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.get("backend").and_then(|b| b.as_str()), Some("native"));
+    }
+
+    #[test]
+    fn lock_contention_rows_render() {
+        let snap = StatsSnapshot {
+            locks: vec![ContentionSnapshot {
+                name: "pool.routing",
+                rank: 100,
+                kind: "rwlock",
+                ops: 7,
+                blocked: 2,
+                wait_ns: 1500,
+            }],
+            ..Default::default()
+        };
+        let j = snap.to_json();
+        let locks = j.get("locks").and_then(|l| l.as_arr()).unwrap();
+        assert_eq!(locks.len(), 1);
+        assert_eq!(locks[0].get("name").and_then(|n| n.as_str()), Some("pool.routing"));
+        assert_eq!(locks[0].get("blocked").and_then(|b| b.as_f64()), Some(2.0));
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("share_kan_lock_blocked_total{lock=\"pool.routing\"} 2"));
+        assert!(prom.contains("share_kan_lock_ops_total{lock=\"pool.routing\"} 7"));
     }
 
     #[test]

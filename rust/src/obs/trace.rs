@@ -352,6 +352,7 @@ pub fn assemble_spans(events: &[TraceEvent]) -> Vec<RequestSpan> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -6,4 +6,5 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;
+pub mod sync;
 pub mod toml;

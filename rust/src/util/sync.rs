@@ -1,0 +1,883 @@
+//! Named, rank-ordered synchronization wrappers and the central
+//! lock/channel registry behind `share-kan verify --concurrency`.
+//!
+//! Every lock and bounded queue on the serving path is constructed through
+//! one of these wrappers with a **declared rank** and a **node name**:
+//!
+//! * [`OrderedMutex`] / [`OrderedRwLock`] — `std::sync` locks that register
+//!   themselves in the global [`LockRegistry`], recover from poisoning
+//!   (matching the coordinator's historical `unwrap_or_else(into_inner)`
+//!   idiom), and count contention (acquisitions that had to block, plus
+//!   blocked wall time) into per-lock atomics surfaced by the stats
+//!   snapshot and the `contention/*` bench rows.
+//! * [`BoundedQueue`] — a registered `mpsc::sync_channel` whose send
+//!   handles count submissions and `Full` rejections, so the channel
+//!   topology the static checker proves deadlock-free is the one the
+//!   binary actually runs.
+//!
+//! The lock hierarchy itself is **data**: [`DECLARED_LOCKS`] is the rank
+//! table and [`DECLARED_HOLD_EDGES`] the documented may-hold-while-
+//! acquiring pairs.  `analysis::concurrency` proves the declared edges
+//! strictly increase in rank (hence the hierarchy is acyclic) and
+//! cross-checks every *registered* node against the table — an undeclared
+//! lock or a rank mismatch is a typed finding, never a panic.
+//!
+//! In debug builds the wrappers additionally run a lockdep-style witness:
+//! a thread-local stack of held nodes records every actual acquisition
+//! order, and any acquisition that does not strictly increase the rank is
+//! recorded as an [`OrderViolation`] in the registry (again: recorded, not
+//! panicked — the static checker turns it into a finding).  Release builds
+//! compile the witness machinery out entirely; what remains on the hot
+//! path is one relaxed counter increment and a `try_lock` fast path, with
+//! no allocation.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SendError, SyncSender, TryRecvError,
+                      TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard,
+                TryLockError};
+use std::time::Duration;
+
+/// Position of a lock in the declared hierarchy: a thread may only acquire
+/// a node whose rank is **strictly greater** than every node it already
+/// holds.
+pub type Rank = u32;
+
+/// Canonical ranks for every production lock (the declared hierarchy).
+/// Gaps are deliberate so future locks can slot in without renumbering.
+pub mod ranks {
+    use super::Rank;
+    /// `ExecutorPool` routing table (`pool.routing`).
+    pub const POOL_ROUTING: Rank = 100;
+    /// `ExecutorPool` retained-weights map (`pool.retained`) — acquired
+    /// while `pool.routing` is held in `reconnect_now`, hence the higher
+    /// rank.
+    pub const POOL_RETAINED: Rank = 200;
+    /// Standalone shard-host state (`tcp.shard_state`).
+    pub const TCP_SHARD_STATE: Rank = 300;
+    /// Remote-shard shared job receiver (`remote.job_rx`) — leaf: nothing
+    /// is acquired while it is held.
+    pub const REMOTE_JOB_RX: Rank = 400;
+}
+
+/// What kind of node a registry entry is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// An [`OrderedMutex`].
+    Mutex,
+    /// An [`OrderedRwLock`].
+    RwLock,
+    /// A [`BoundedQueue`] channel with its configured capacity.
+    Channel {
+        /// Bounded capacity of the underlying `sync_channel`.
+        capacity: usize,
+    },
+}
+
+impl NodeKind {
+    /// Stable label for snapshots and findings ("mutex" / "rwlock" /
+    /// "channel").
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodeKind::Mutex => "mutex",
+            NodeKind::RwLock => "rwlock",
+            NodeKind::Channel { .. } => "channel",
+        }
+    }
+}
+
+/// One entry of the declared lock/channel hierarchy ([`DECLARED_LOCKS`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LockDecl {
+    /// Registry node name (`pool.routing`, `remote.jobs`, …).
+    pub name: &'static str,
+    /// Declared rank (see [`ranks`]).  Channels never enter the
+    /// held-stack and register at rank 0.
+    pub rank: Rank,
+    /// Node kind label this name must register as.
+    pub kind: &'static str,
+    /// What the node protects / carries.
+    pub doc: &'static str,
+}
+
+/// A documented may-hold-while-acquiring pair: while `from` is held,
+/// `to` may be acquired at `site`.  The static checker proves
+/// `rank(from) < rank(to)` for every edge, which makes the whole declared
+/// hierarchy acyclic.
+#[derive(Debug, Clone, Copy)]
+pub struct HoldEdge {
+    /// Node already held.
+    pub from: &'static str,
+    /// Node acquired while `from` is held.
+    pub to: &'static str,
+    /// Code location of the nesting.
+    pub site: &'static str,
+}
+
+/// The declared rank table: every production lock and bounded channel.
+/// `analysis::concurrency::verify_lock_order` fails any *registered* node
+/// that is missing here or disagrees on rank/kind.
+pub const DECLARED_LOCKS: &[LockDecl] = &[
+    LockDecl {
+        name: "pool.routing",
+        rank: ranks::POOL_ROUTING,
+        kind: "rwlock",
+        doc: "head -> shard routing table shared by every pool client",
+    },
+    LockDecl {
+        name: "pool.retained",
+        rank: ranks::POOL_RETAINED,
+        kind: "rwlock",
+        doc: "weights retained for re-registration on remote-shard recovery",
+    },
+    LockDecl {
+        name: "tcp.shard_state",
+        rank: ranks::TCP_SHARD_STATE,
+        kind: "mutex",
+        doc: "standalone shard-host executor state (register/remove/stats)",
+    },
+    LockDecl {
+        name: "remote.job_rx",
+        rank: ranks::REMOTE_JOB_RX,
+        kind: "mutex",
+        doc: "shared dequeue end of the remote-shard job queue",
+    },
+    LockDecl {
+        name: "server.admission",
+        rank: 0,
+        kind: "channel",
+        doc: "bounded admission queue into one executor thread",
+    },
+    LockDecl {
+        name: "remote.jobs",
+        rank: 0,
+        kind: "channel",
+        doc: "bounded job queue feeding a remote shard's worker connections",
+    },
+];
+
+/// Every declared lock-nesting in the coordinator.  One edge today: the
+/// reconnector snapshots routing and retained weights under both read
+/// locks before pushing re-registrations over the wire.
+pub const DECLARED_HOLD_EDGES: &[HoldEdge] = &[HoldEdge {
+    from: "pool.routing",
+    to: "pool.retained",
+    site: "ExecutorPool::reconnect_now",
+}];
+
+/// Per-node contention counters (atomics; one relaxed increment per
+/// operation on the uncontended path, no allocation).
+#[derive(Debug, Default)]
+pub struct NodeStats {
+    /// Lock acquisitions, or channel submissions.
+    pub ops: AtomicU64,
+    /// Acquisitions that had to block (lock was held), or channel sends
+    /// rejected/stalled because the queue was full.
+    pub blocked: AtomicU64,
+    /// Wall time spent blocked, nanoseconds (measured only on the
+    /// contended path; not measured under Miri).
+    pub wait_ns: AtomicU64,
+}
+
+impl NodeStats {
+    fn note_blocked(&self) {
+        self.blocked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_op(&self) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_wait(&self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.wait_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+/// Plain-value per-node stats capture for the registry snapshot
+/// (`StatsSnapshot.locks`) and the `contention/*` bench rows.
+#[derive(Debug, Clone)]
+pub struct ContentionSnapshot {
+    /// Registry node name.
+    pub name: &'static str,
+    /// Declared rank the node registered with.
+    pub rank: Rank,
+    /// Node kind label ("mutex" / "rwlock" / "channel").
+    pub kind: &'static str,
+    /// Total acquisitions / submissions.
+    pub ops: u64,
+    /// Acquisitions that blocked / sends that found the queue full.
+    pub blocked: u64,
+    /// Nanoseconds spent blocked (0 under Miri).
+    pub wait_ns: u64,
+}
+
+/// A witnessed acquisition that did not strictly increase the held rank
+/// (debug builds only).  Recorded, never panicked; surfaced as a
+/// `lock-order-violation` finding by `analysis::concurrency`.
+#[derive(Debug, Clone)]
+pub struct OrderViolation {
+    /// Node already held when the violation occurred.
+    pub held: &'static str,
+    /// Rank of the held node.
+    pub held_rank: Rank,
+    /// Node whose acquisition violated the order.
+    pub acquired: &'static str,
+    /// Rank of the acquired node.
+    pub acquired_rank: Rank,
+}
+
+struct NodeRecord {
+    name: &'static str,
+    rank: Rank,
+    kind: NodeKind,
+    stats: Arc<NodeStats>,
+    /// A later registration disagreed with this one on rank: the first
+    /// declaration wins, the conflict becomes a finding.
+    conflicting_rank: Option<Rank>,
+}
+
+struct RegistryInner {
+    nodes: Mutex<Vec<NodeRecord>>,
+    /// Witnessed (held -> acquired) node-index pairs, debug builds only.
+    edges: Mutex<BTreeSet<(u32, u32)>>,
+    violations: Mutex<Vec<OrderViolation>>,
+}
+
+/// The central lock/channel registry.  Production wrappers register in
+/// [`LockRegistry::global`]; test fixtures that deliberately misuse locks
+/// build an isolated registry with [`LockRegistry::new`] so their
+/// violations never pollute the global verification result.
+#[derive(Clone)]
+pub struct LockRegistry {
+    inner: Arc<RegistryInner>,
+}
+
+impl Default for LockRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LockRegistry {
+    /// Fresh, empty registry (isolated — for fixtures and tests).
+    pub fn new() -> LockRegistry {
+        LockRegistry {
+            inner: Arc::new(RegistryInner {
+                nodes: Mutex::new(Vec::new()),
+                edges: Mutex::new(BTreeSet::new()),
+                violations: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// The process-wide registry every production wrapper registers in.
+    pub fn global() -> &'static LockRegistry {
+        static GLOBAL: OnceLock<LockRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(LockRegistry::new)
+    }
+
+    #[cfg(debug_assertions)]
+    fn id(&self) -> usize {
+        Arc::as_ptr(&self.inner) as usize
+    }
+
+    fn lock_nodes(&self) -> MutexGuard<'_, Vec<NodeRecord>> {
+        self.inner.nodes.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register (or re-attach to) a node.  Same name + same rank + same
+    /// kind label reuses the existing record, so stats accumulate across
+    /// wrapper instances (every pool the process starts shares one
+    /// `pool.routing` row); a rank disagreement is recorded for the
+    /// checker instead of panicking.
+    fn register(&self, name: &'static str, rank: Rank, kind: NodeKind)
+                -> (u32, Arc<NodeStats>) {
+        let mut nodes = self.lock_nodes();
+        if let Some((idx, rec)) = nodes.iter_mut().enumerate().find(|(_, r)| r.name == name) {
+            if rec.rank != rank && rec.conflicting_rank.is_none() {
+                rec.conflicting_rank = Some(rank);
+            }
+            return (idx as u32, rec.stats.clone());
+        }
+        let stats = Arc::new(NodeStats::default());
+        nodes.push(NodeRecord { name, rank, kind, stats: stats.clone(), conflicting_rank: None });
+        ((nodes.len() - 1) as u32, stats)
+    }
+
+    /// Every node currently registered: `(name, rank, kind)`.
+    pub fn nodes(&self) -> Vec<(&'static str, Rank, NodeKind)> {
+        self.lock_nodes().iter().map(|r| (r.name, r.rank, r.kind)).collect()
+    }
+
+    /// Nodes whose later registrations disagreed on rank:
+    /// `(name, first_rank, conflicting_rank)`.
+    pub fn rank_conflicts(&self) -> Vec<(&'static str, Rank, Rank)> {
+        self.lock_nodes()
+            .iter()
+            .filter_map(|r| r.conflicting_rank.map(|c| (r.name, r.rank, c)))
+            .collect()
+    }
+
+    /// Witnessed acquisition orders `(held, acquired)` by node name —
+    /// debug builds record these on every nested acquire; release builds
+    /// return an empty set.
+    pub fn witnessed_edges(&self) -> Vec<(&'static str, &'static str)> {
+        let nodes = self.lock_nodes();
+        let edges = self.inner.edges.lock().unwrap_or_else(|e| e.into_inner());
+        edges
+            .iter()
+            .filter_map(|&(a, b)| {
+                Some((nodes.get(a as usize)?.name, nodes.get(b as usize)?.name))
+            })
+            .collect()
+    }
+
+    /// Witnessed rank violations (debug builds; empty in release).
+    pub fn violations(&self) -> Vec<OrderViolation> {
+        self.inner.violations.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Plain-value contention capture of every node, sorted by name.
+    pub fn contention(&self) -> Vec<ContentionSnapshot> {
+        let mut out: Vec<ContentionSnapshot> = self
+            .lock_nodes()
+            .iter()
+            .map(|r| ContentionSnapshot {
+                name: r.name,
+                rank: r.rank,
+                kind: r.kind.label(),
+                ops: r.stats.ops.load(Ordering::Relaxed),
+                blocked: r.stats.blocked.load(Ordering::Relaxed),
+                wait_ns: r.stats.wait_ns.load(Ordering::Relaxed),
+            })
+            .collect();
+        out.sort_by_key(|s| s.name);
+        out
+    }
+
+    /// Record a witnessed (held -> acquired) edge, flagging it when the
+    /// rank does not strictly increase.  Violations are deduplicated by
+    /// node pair and capped so a hot loop cannot grow the table unbounded.
+    #[cfg(debug_assertions)]
+    fn witness(&self, held_idx: u32, held_rank: Rank, acq_idx: u32, acq_rank: Rank) {
+        let fresh = {
+            let mut edges = self.inner.edges.lock().unwrap_or_else(|e| e.into_inner());
+            edges.insert((held_idx, acq_idx))
+        };
+        if acq_rank > held_rank || !fresh {
+            return;
+        }
+        let (held, acquired) = {
+            let nodes = self.lock_nodes();
+            match (nodes.get(held_idx as usize), nodes.get(acq_idx as usize)) {
+                (Some(h), Some(a)) => (h.name, a.name),
+                _ => return,
+            }
+        };
+        let mut v = self.inner.violations.lock().unwrap_or_else(|e| e.into_inner());
+        if v.len() < 256 {
+            v.push(OrderViolation {
+                held,
+                held_rank,
+                acquired,
+                acquired_rank: acq_rank,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lockdep witness: thread-local held stack (debug builds only)
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod lockdep {
+    use super::{LockRegistry, Rank};
+    use std::cell::RefCell;
+
+    #[derive(Clone, Copy)]
+    struct HeldEntry {
+        registry: usize,
+        node: u32,
+        rank: Rank,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<HeldEntry>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Pops its held-stack entry on drop (entries can drop out of LIFO
+    /// order — guards are droppable in any order — so removal is
+    /// last-matching, not strictly stack-top).
+    pub struct HeldToken {
+        registry: usize,
+        node: u32,
+    }
+
+    pub fn acquire(registry: &LockRegistry, node: u32, rank: Rank) -> HeldToken {
+        let id = registry.id();
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            for e in held.iter().filter(|e| e.registry == id) {
+                registry.witness(e.node, e.rank, node, rank);
+            }
+            held.push(HeldEntry { registry: id, node, rank });
+        });
+        HeldToken { registry: id, node }
+    }
+
+    impl Drop for HeldToken {
+        fn drop(&mut self) {
+            HELD.with(|held| {
+                let mut held = held.borrow_mut();
+                if let Some(pos) = held
+                    .iter()
+                    .rposition(|e| e.registry == self.registry && e.node == self.node)
+                {
+                    held.remove(pos);
+                }
+            });
+        }
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod lockdep {
+    use super::{LockRegistry, Rank};
+
+    /// Zero-sized in release builds: the witness machinery compiles out.
+    pub struct HeldToken;
+
+    #[inline(always)]
+    pub fn acquire(_registry: &LockRegistry, _node: u32, _rank: Rank) -> HeldToken {
+        HeldToken
+    }
+}
+
+use lockdep::HeldToken;
+
+#[cfg(not(miri))]
+fn blocked_span_start() -> Option<std::time::Instant> {
+    Some(std::time::Instant::now())
+}
+
+#[cfg(miri)]
+fn blocked_span_start() -> Option<std::time::Instant> {
+    None
+}
+
+// ---------------------------------------------------------------------------
+// OrderedMutex
+// ---------------------------------------------------------------------------
+
+/// A named, ranked `std::sync::Mutex` registered in the lock registry.
+///
+/// `lock()` recovers from poisoning (a panicked holder does not take the
+/// serving path down with it) and counts contention; in debug builds it
+/// also records the acquisition into the lockdep witness.
+pub struct OrderedMutex<T> {
+    registry: LockRegistry,
+    node: u32,
+    rank: Rank,
+    stats: Arc<NodeStats>,
+    inner: Mutex<T>,
+}
+
+/// Guard returned by [`OrderedMutex::lock`].
+pub struct OrderedMutexGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    _held: HeldToken,
+}
+
+impl<T> std::ops::Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> OrderedMutex<T> {
+    /// New mutex registered in the global registry.
+    pub fn new(name: &'static str, rank: Rank, value: T) -> OrderedMutex<T> {
+        Self::new_in(LockRegistry::global(), name, rank, value)
+    }
+
+    /// New mutex registered in an explicit registry (fixtures/tests).
+    pub fn new_in(registry: &LockRegistry, name: &'static str, rank: Rank, value: T)
+                  -> OrderedMutex<T> {
+        let (node, stats) = registry.register(name, rank, NodeKind::Mutex);
+        OrderedMutex { registry: registry.clone(), node, rank, stats, inner: Mutex::new(value) }
+    }
+
+    /// Acquire, recovering from poisoning and counting contention.
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T> {
+        self.stats.note_op();
+        let held = lockdep::acquire(&self.registry, self.node, self.rank);
+        let guard = match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(e)) => e.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                self.stats.note_blocked();
+                let t0 = blocked_span_start();
+                let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(t0) = t0 {
+                    self.stats.add_wait(t0.elapsed());
+                }
+                g
+            }
+        };
+        OrderedMutexGuard { guard, _held: held }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedRwLock
+// ---------------------------------------------------------------------------
+
+/// A named, ranked `std::sync::RwLock` registered in the lock registry.
+/// Read and write acquisitions share one rank: the hierarchy orders
+/// *locks*, not access modes.
+pub struct OrderedRwLock<T> {
+    registry: LockRegistry,
+    node: u32,
+    rank: Rank,
+    stats: Arc<NodeStats>,
+    inner: RwLock<T>,
+}
+
+/// Shared guard returned by [`OrderedRwLock::read`].
+pub struct OrderedReadGuard<'a, T> {
+    guard: RwLockReadGuard<'a, T>,
+    _held: HeldToken,
+}
+
+/// Exclusive guard returned by [`OrderedRwLock::write`].
+pub struct OrderedWriteGuard<'a, T> {
+    guard: RwLockWriteGuard<'a, T>,
+    _held: HeldToken,
+}
+
+impl<T> std::ops::Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> OrderedRwLock<T> {
+    /// New rwlock registered in the global registry.
+    pub fn new(name: &'static str, rank: Rank, value: T) -> OrderedRwLock<T> {
+        Self::new_in(LockRegistry::global(), name, rank, value)
+    }
+
+    /// New rwlock registered in an explicit registry (fixtures/tests).
+    pub fn new_in(registry: &LockRegistry, name: &'static str, rank: Rank, value: T)
+                  -> OrderedRwLock<T> {
+        let (node, stats) = registry.register(name, rank, NodeKind::RwLock);
+        OrderedRwLock { registry: registry.clone(), node, rank, stats, inner: RwLock::new(value) }
+    }
+
+    /// Acquire shared, recovering from poisoning and counting contention.
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        self.stats.note_op();
+        let held = lockdep::acquire(&self.registry, self.node, self.rank);
+        let guard = match self.inner.try_read() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(e)) => e.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                self.stats.note_blocked();
+                let t0 = blocked_span_start();
+                let g = self.inner.read().unwrap_or_else(|e| e.into_inner());
+                if let Some(t0) = t0 {
+                    self.stats.add_wait(t0.elapsed());
+                }
+                g
+            }
+        };
+        OrderedReadGuard { guard, _held: held }
+    }
+
+    /// Acquire exclusive, recovering from poisoning and counting
+    /// contention.
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        self.stats.note_op();
+        let held = lockdep::acquire(&self.registry, self.node, self.rank);
+        let guard = match self.inner.try_write() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(e)) => e.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                self.stats.note_blocked();
+                let t0 = blocked_span_start();
+                let g = self.inner.write().unwrap_or_else(|e| e.into_inner());
+                if let Some(t0) = t0 {
+                    self.stats.add_wait(t0.elapsed());
+                }
+                g
+            }
+        };
+        OrderedWriteGuard { guard, _held: held }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BoundedQueue
+// ---------------------------------------------------------------------------
+
+/// Factory for registered bounded channels ([`BoundedQueue::channel`]).
+pub struct BoundedQueue;
+
+impl BoundedQueue {
+    /// A bounded `mpsc::sync_channel` registered in the global registry
+    /// under `name` with its capacity, so the channel-topology checker
+    /// sees exactly the queues the binary runs.
+    pub fn channel<T>(name: &'static str, capacity: usize)
+                      -> (BoundedSender<T>, BoundedReceiver<T>) {
+        Self::channel_in(LockRegistry::global(), name, capacity)
+    }
+
+    /// Same, in an explicit registry (fixtures/tests).
+    pub fn channel_in<T>(registry: &LockRegistry, name: &'static str, capacity: usize)
+                         -> (BoundedSender<T>, BoundedReceiver<T>) {
+        let (_, stats) = registry.register(name, 0, NodeKind::Channel { capacity });
+        let (tx, rx) = std::sync::mpsc::sync_channel(capacity);
+        (BoundedSender { tx, stats }, BoundedReceiver { rx })
+    }
+}
+
+/// Sending half of a [`BoundedQueue`] channel; counts submissions and
+/// `Full` events into the registry node.
+pub struct BoundedSender<T> {
+    tx: SyncSender<T>,
+    stats: Arc<NodeStats>,
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        BoundedSender { tx: self.tx.clone(), stats: self.stats.clone() }
+    }
+}
+
+impl<T> BoundedSender<T> {
+    /// Non-blocking send; a `Full` rejection is counted as a blocked op
+    /// (this is the backpressure path the admission queues use).
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        self.stats.note_op();
+        let r = self.tx.try_send(value);
+        if matches!(r, Err(TrySendError::Full(_))) {
+            self.stats.note_blocked();
+        }
+        r
+    }
+
+    /// Blocking send (control-plane messages); a send that finds the
+    /// queue full counts as blocked, including its wait time.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        self.stats.note_op();
+        match self.tx.try_send(value) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Disconnected(v)) => Err(SendError(v)),
+            Err(TrySendError::Full(v)) => {
+                self.stats.note_blocked();
+                let t0 = blocked_span_start();
+                let r = self.tx.send(v);
+                if let Some(t0) = t0 {
+                    self.stats.add_wait(t0.elapsed());
+                }
+                r
+            }
+        }
+    }
+}
+
+/// Receiving half of a [`BoundedQueue`] channel (thin wrapper; dequeue
+/// operations pass straight through to the `std` receiver).
+pub struct BoundedReceiver<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocking receive (see [`Receiver::recv`]).
+    pub fn recv(&self) -> Result<T, std::sync::mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    /// Receive with a deadline (see [`Receiver::recv_timeout`]).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+
+    /// Non-blocking receive (see [`Receiver::try_recv`]).
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        self.rx.try_recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(reg: &LockRegistry, name: &'static str, rank: Rank) -> OrderedMutex<u32> {
+        OrderedMutex::new_in(reg, name, rank, 0)
+    }
+
+    #[test]
+    fn uncontended_lock_counts_ops_not_blocks() {
+        let reg = LockRegistry::new();
+        let a = m(&reg, "t.a", 10);
+        for _ in 0..5 {
+            let mut g = a.lock();
+            *g += 1;
+        }
+        let snap = reg.contention();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].ops, 5);
+        assert_eq!(snap[0].blocked, 0);
+        assert_eq!(*a.lock(), 5);
+    }
+
+    #[test]
+    fn rwlock_read_write_roundtrip() {
+        let reg = LockRegistry::new();
+        let l = OrderedRwLock::new_in(&reg, "t.rw", 10, vec![1, 2, 3]);
+        {
+            let r = l.read();
+            assert_eq!(r.len(), 3);
+        }
+        l.write().push(4);
+        assert_eq!(l.read().len(), 4);
+        assert_eq!(reg.contention()[0].ops, 3);
+    }
+
+    #[test]
+    fn in_rank_order_records_no_violation() {
+        let reg = LockRegistry::new();
+        let lo = m(&reg, "t.lo", 10);
+        let hi = m(&reg, "t.hi", 20);
+        {
+            let _a = lo.lock();
+            let _b = hi.lock();
+        }
+        assert!(reg.violations().is_empty());
+        #[cfg(debug_assertions)]
+        assert_eq!(reg.witnessed_edges(), vec![("t.lo", "t.hi")]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn rank_inversion_is_witnessed_not_panicked() {
+        let reg = LockRegistry::new();
+        let lo = m(&reg, "t.lo", 10);
+        let hi = m(&reg, "t.hi", 20);
+        {
+            let _b = hi.lock();
+            let _a = lo.lock(); // wrong order: recorded, no panic
+        }
+        let v = reg.violations();
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].held, v[0].acquired), ("t.hi", "t.lo"));
+        // deduplicated on repeat
+        {
+            let _b = hi.lock();
+            let _a = lo.lock();
+        }
+        assert_eq!(reg.violations().len(), 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn out_of_order_guard_drop_keeps_stack_consistent() {
+        let reg = LockRegistry::new();
+        let a = m(&reg, "t.a", 10);
+        let b = m(&reg, "t.b", 20);
+        let c = m(&reg, "t.c", 30);
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga); // drop the *lower* guard first
+        let _gc = c.lock(); // only t.b is held now: edge (b, c), rank ok
+        drop(gb);
+        assert!(reg.violations().is_empty());
+    }
+
+    #[test]
+    fn rank_conflict_is_recorded() {
+        let reg = LockRegistry::new();
+        let _a = m(&reg, "t.dup", 10);
+        let _b = m(&reg, "t.dup", 99);
+        assert_eq!(reg.rank_conflicts(), vec![("t.dup", 10, 99)]);
+    }
+
+    #[test]
+    fn bounded_channel_counts_full_rejections() {
+        let reg = LockRegistry::new();
+        let (tx, rx) = BoundedQueue::channel_in::<u32>(&reg, "t.q", 2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert!(matches!(tx.try_send(3), Err(TrySendError::Full(3))));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.try_recv().unwrap(), 2);
+        assert!(rx.try_recv().is_err());
+        let snap = reg.contention();
+        let q = snap.iter().find(|s| s.name == "t.q").unwrap();
+        assert_eq!(q.kind, "channel");
+        assert_eq!(q.ops, 3);
+        assert_eq!(q.blocked, 1);
+    }
+
+    #[test]
+    fn contention_is_counted_across_threads() {
+        let reg = LockRegistry::new();
+        let l = Arc::new(OrderedMutex::new_in(&reg, "t.hot", 10, 0u64));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        *l.lock() += 1;
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(*l.lock(), 400);
+        let snap = reg.contention();
+        assert_eq!(snap[0].ops, 401);
+        // blocked is scheduling-dependent; it must never exceed ops
+        assert!(snap[0].blocked <= snap[0].ops);
+    }
+
+    #[test]
+    fn declared_table_is_well_formed() {
+        // names unique; every hold edge references declared names
+        let mut names: Vec<&str> = DECLARED_LOCKS.iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), DECLARED_LOCKS.len());
+        for e in DECLARED_HOLD_EDGES {
+            assert!(DECLARED_LOCKS.iter().any(|d| d.name == e.from), "{}", e.from);
+            assert!(DECLARED_LOCKS.iter().any(|d| d.name == e.to), "{}", e.to);
+        }
+    }
+}

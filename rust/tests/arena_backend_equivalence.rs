@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Cross-backend equivalence: the arena-resident backend must reproduce the
 //! native backend **bit for bit** for every head variant — Dense, MLP, and
 //! VQ (fp32 and Int8) — including on bucket-padded batches.  This pins the

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Paper §5.5: the compressed head's working set — codebook, packed
 //! indices, Int8 gains, biases, activation scratch — stays L2-resident.
 //! Here the claim is checked against the **actual serving layout**: the

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! The arena backend's acceptance contract: after head registration, the
 //! per-batch hot path (`execute_into` with a warmed, caller-reused output
 //! vector) performs **zero heap allocations** — the LUTHAM property the

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Shared test support: a counting global allocator for zero-alloc
 //! assertions (used by `arena_zero_alloc.rs` and
 //! `family_arena_equivalence.rs`) and the kernel-dispatch mode

@@ -1,0 +1,228 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
+//! Mutation suite for the static concurrency verifier
+//! (`share_kan::analysis::concurrency`), mirroring `plan_verify.rs` for
+//! the concurrency topology: seed one structural corruption at a time —
+//! invert a lock-rank pair, close a cycle of full bounded queues, relax
+//! an atomic ordering outside its contract, register a lock outside the
+//! declared hierarchy — and assert the checker reports exactly the right
+//! typed finding, never a panic.
+//!
+//! Also pins the clean side: the shipped lock hierarchy, the atomic
+//! contracts of every shipped source, and the channel topology of both
+//! example deployment files must all verify with zero findings (the same
+//! proofs CI runs through `share-kan verify --concurrency`).
+
+use std::path::Path;
+
+use share_kan::analysis::concurrency::{
+    audit_atomics_source, verify_lock_order, verify_lock_order_with, verify_static, ChannelGraph,
+    ATOMIC_CONTRACTS,
+};
+use share_kan::analysis::{FindingKind, VerifyReport};
+use share_kan::coordinator::DeploymentSpec;
+use share_kan::util::sync::{
+    BoundedQueue, HoldEdge, LockDecl, LockRegistry, OrderedMutex, DECLARED_HOLD_EDGES,
+    DECLARED_LOCKS,
+};
+
+fn example(name: &str) -> DeploymentSpec {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples").join(name);
+    DeploymentSpec::from_file(&path).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// clean side: the shipped hierarchy, sources, and deployments prove out
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_example_deployments_have_deadlock_free_channel_topologies() {
+    for file in ["deployment.toml", "deployment_remote.toml"] {
+        let spec = example(file);
+        let graph = spec.channel_graph().unwrap();
+        let r = graph.verify();
+        assert!(r.is_ok(), "{file}: {:?}", r.findings());
+        // the model is non-trivial: every shard contributes an admission
+        // edge and an unbounded reply edge
+        assert!(graph.edges().len() >= 2 * spec.shards, "{file}");
+        assert!(graph.edges().iter().any(|e| e.capacity.is_none()), "{file}");
+    }
+}
+
+#[test]
+fn remote_deployment_models_the_rpc_hop() {
+    let spec = example("deployment_remote.toml");
+    let graph = spec.channel_graph().unwrap();
+    assert!(graph.edges().iter().any(|e| e.label.starts_with("remote.jobs")));
+    assert!(graph.edges().iter().any(|e| e.label.starts_with("tcp.rpc")));
+    assert!(graph.nodes().iter().any(|n| n.contains("remote")));
+}
+
+#[test]
+fn static_concurrency_pass_is_clean() {
+    // the exact pass behind `share-kan verify --concurrency`: declared
+    // hierarchy + runtime registry + atomic contracts of the shipped
+    // sources (read from the checkout, as in CI)
+    let r = verify_static();
+    assert!(r.is_ok(), "{:?}", r.findings());
+}
+
+#[test]
+fn deployed_pool_registers_only_declared_locks() {
+    // an actual deployment constructs the production locks and queues
+    // through util::sync, populating the global registry; the hierarchy
+    // proof must still be clean afterwards, and the contention snapshot
+    // must carry the registered nodes
+    let spec = example("deployment.toml");
+    let dep = spec.deploy().unwrap();
+    let r = verify_lock_order();
+    assert!(r.is_ok(), "{:?}", r.findings());
+    let contention = LockRegistry::global().contention();
+    assert!(contention.iter().any(|c| c.name == "pool.routing"), "{contention:?}");
+    assert!(contention.iter().any(|c| c.name == "server.admission"), "{contention:?}");
+    dep.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// mutations: each corruption maps to exactly the right finding kind
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank_inversion_is_a_lock_order_violation() {
+    let decls: &[LockDecl] = &[
+        LockDecl { name: "mut.routing", rank: 200, kind: "rwlock", doc: "" },
+        LockDecl { name: "mut.retained", rank: 100, kind: "rwlock", doc: "" },
+    ];
+    let edges: &[HoldEdge] =
+        &[HoldEdge { from: "mut.routing", to: "mut.retained", site: "fixture" }];
+    let r = verify_lock_order_with(&LockRegistry::new(), decls, edges);
+    assert!(r.has(FindingKind::LockOrderViolation), "{:?}", r.findings());
+    assert!(!r.has(FindingKind::QueueCycle));
+    let f = r.findings().iter().find(|f| f.kind == FindingKind::LockOrderViolation).unwrap();
+    assert!(f.subject.contains("mut.routing") && f.subject.contains("mut.retained"));
+}
+
+#[test]
+fn undeclared_runtime_lock_is_flagged() {
+    // isolated registry so the deliberate rogue never pollutes the
+    // global verification other tests run
+    let reg = LockRegistry::new();
+    let _rogue = OrderedMutex::new_in(&reg, "rogue.cache", 550, ());
+    let r = verify_lock_order_with(&reg, DECLARED_LOCKS, DECLARED_HOLD_EDGES);
+    assert!(r.has(FindingKind::UndeclaredLock), "{:?}", r.findings());
+}
+
+#[test]
+fn disagreeing_ranks_are_a_rank_conflict() {
+    let reg = LockRegistry::new();
+    let _a = OrderedMutex::new_in(&reg, "tcp.shard_state", 300, ());
+    let _b = OrderedMutex::new_in(&reg, "tcp.shard_state", 310, ());
+    let r = verify_lock_order_with(&reg, DECLARED_LOCKS, DECLARED_HOLD_EDGES);
+    assert!(r.has(FindingKind::LockRankConflict), "{:?}", r.findings());
+}
+
+#[test]
+fn full_queue_cycle_is_a_queue_cycle_finding() {
+    // two bounded blocking queues feeding each other: the classic
+    // producer-consumer deadlock shape
+    let mut g = ChannelGraph::new();
+    let a = g.node("stage.a");
+    let b = g.node("stage.b");
+    g.edge(a, b, "a->b", Some(4), true);
+    g.edge(b, a, "b->a", Some(4), true);
+    let r = g.verify();
+    assert!(r.has(FindingKind::QueueCycle), "{:?}", r.findings());
+    let f = r.findings().iter().find(|f| f.kind == FindingKind::QueueCycle).unwrap();
+    assert!(f.detail.contains("a->b") && f.detail.contains("b->a"), "{}", f.detail);
+}
+
+#[test]
+fn breaking_any_edge_of_the_cycle_restores_deadlock_freedom() {
+    // the same cycle, fixed three ways: unbounded reply, try-send
+    // backpressure, or dropping the back edge entirely
+    for fix in 0..3 {
+        let mut g = ChannelGraph::new();
+        let a = g.node("stage.a");
+        let b = g.node("stage.b");
+        g.edge(a, b, "a->b", Some(4), true);
+        match fix {
+            0 => g.edge(b, a, "b->a", None, true),
+            1 => g.edge(b, a, "b->a", Some(4), false),
+            _ => {}
+        }
+        assert!(g.verify().is_ok(), "fix {fix}");
+    }
+}
+
+#[test]
+fn relaxed_ordering_outside_contract_is_flagged_with_its_line() {
+    // doctor a seqlock source: SeqCst is outside the declared protocol
+    let contract = ATOMIC_CONTRACTS.iter().find(|c| c.protocol == "seqlock").unwrap();
+    let mut r = VerifyReport::new("fixture");
+    audit_atomics_source(
+        &mut r,
+        contract,
+        "seq.store(s + 1, Ordering::Release);\n\
+         payload.store(v, Ordering::Relaxed);\n\
+         let snap = seq.load(Ordering::SeqCst);\n\
+         let ok = seq.load(Ordering::Acquire) == snap;",
+    );
+    assert!(r.has(FindingKind::UndeclaredAtomicOrdering), "{:?}", r.findings());
+    let f = &r.findings()[0];
+    assert!(f.subject.ends_with(":3"), "line in subject: {}", f.subject);
+    assert!(f.detail.contains("SeqCst"), "{}", f.detail);
+}
+
+#[test]
+fn weakening_a_required_fence_is_flagged() {
+    // the mutation that relaxes the load-bearing Release publication away
+    let contract = ATOMIC_CONTRACTS.iter().find(|c| c.protocol == "seqlock").unwrap();
+    let mut r = VerifyReport::new("fixture");
+    audit_atomics_source(
+        &mut r,
+        contract,
+        "seq.store(s + 1, Ordering::Relaxed);\nlet snap = seq.load(Ordering::Acquire);",
+    );
+    assert!(r.has(FindingKind::UndeclaredAtomicOrdering), "{:?}", r.findings());
+}
+
+// ---------------------------------------------------------------------------
+// surfaces: JSON shape and queue runtime semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn findings_serialize_with_kebab_case_kinds() {
+    let decls: &[LockDecl] = &[
+        LockDecl { name: "j.a", rank: 2, kind: "mutex", doc: "" },
+        LockDecl { name: "j.b", rank: 1, kind: "mutex", doc: "" },
+    ];
+    let edges: &[HoldEdge] = &[HoldEdge { from: "j.a", to: "j.b", site: "fixture" }];
+    let r = verify_lock_order_with(&LockRegistry::new(), decls, edges);
+    let json = share_kan::util::json::to_string(&r.to_json());
+    assert!(json.contains("\"lock-order-violation\""), "{json}");
+    assert!(json.contains("\"findings\""), "{json}");
+    assert!(json.contains("\"ok\""), "{json}");
+
+    let mut g = ChannelGraph::new();
+    let a = g.node("a");
+    let b = g.node("b");
+    g.edge(a, b, "ab", Some(1), true);
+    g.edge(b, a, "ba", Some(1), true);
+    let json = share_kan::util::json::to_string(&g.verify().to_json());
+    assert!(json.contains("\"queue-cycle\""), "{json}");
+}
+
+#[test]
+fn bounded_queue_counts_backpressure_rejections() {
+    let reg = LockRegistry::new();
+    let (tx, rx) = BoundedQueue::channel_in::<u32>(&reg, "server.admission", 2);
+    assert!(tx.try_send(1).is_ok());
+    assert!(tx.try_send(2).is_ok());
+    assert!(tx.try_send(3).is_err()); // full: rejected, not blocked
+    let snap = reg.contention();
+    let q = snap.iter().find(|c| c.name == "server.admission").unwrap();
+    assert_eq!(q.blocked, 1, "{snap:?}");
+    assert_eq!(rx.recv().unwrap(), 1);
+    drop(rx);
+    assert!(tx.send(4).is_err()); // receiver gone: typed error, no panic
+}

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Integration: the serving coordinator end-to-end on the native backend.
 //!
 //! These tests run unconditionally — the native backend serves the PLI

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Integration: the declarative deployment API end-to-end — spec
 //! validation, TOML/JSON file-driven deployments (synthetic heads and
 //! checkpoint paths), dry-run-vs-live placement agreement, the per-shard

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Family-arena acceptance suite (PR 3 tentpole): serving a head through
 //! the shared-codebook [`FamilyArenaBackend`] must be **bit-for-bit**
 //! identical to serving the same head from its own private `ArenaBackend`

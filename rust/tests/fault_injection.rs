@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Deterministic fault-injection suite: scripted shard kills against a
 //! live pool under concurrent traffic.  The [`FaultPlan`] fires at exact
 //! request ordinals — no real process kills, no wall-clock sleeps as

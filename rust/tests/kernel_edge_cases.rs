@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Adversarial-input pinning for the hot-path kernels: NaN, ±inf and huge
 //! magnitudes flow through `tanh` → `clamp` → grid interpolation with
 //! *unspecified-looking* but in fact deterministic results, and kernel

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Cross-backend equivalence: a compressed checkpoint served through the
 //! coordinator on the native backend must reproduce `VqModel::forward`
 //! **bit for bit** — including on bucket-padded batches — and the PLI layer

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! End-to-end stats-surface integration: the TCP `STATS` verb's JSON
 //! schema, counter monotonicity across scrapes, traced-span recovery with
 //! the exact stage-partition property, equivalence (tracing must never

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Trace-ring behavior under adversarial conditions: wraparound with
 //! newest-event retention, concurrent writers from every shard, sampling
 //! determinism, and the zero-allocation guarantee of the hot path (both

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! End-to-end pipeline integration: train (HLO train-step driven from Rust)
 //! -> compress (VQ) -> evaluate (mAP) -> serve.  A miniature of
 //! examples/end_to_end.rs kept small enough for `cargo test`.

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Placement-policy integration suite — the load-bearing guarantees of the
 //! `serving` redesign:
 //!

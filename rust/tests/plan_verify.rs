@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Mutation suite for the static plan verifier (`share_kan::analysis`):
 //! corrupt a real LUTHAM plan one structural property at a time — overlap
 //! two regions, misalign a base, shrink/grow a packed-index width, alias

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Integration: the sharded executor pool end-to-end — deterministic
 //! head→shard routing, shard-aware hot-swap, aggregated metrics, and the
 //! load-bearing guarantee that a pooled deployment is **bitwise identical**

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Property tests over coordinator/compression/memplan invariants.
 //!
 //! Built on the in-tree seeded property harness (util::prop) since proptest

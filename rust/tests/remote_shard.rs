@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Remote shard executors end to end: a pool slot backed by a standalone
 //! shard process (here an in-test [`TcpServer::start_shard`]) must join
 //! the equivalence chain bit-for-bit — remote == pooled == single, under

@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! Integration: PJRT artifacts vs the pure-Rust reference evaluator.
 //!
 //! These tests require the `pjrt` feature and `make artifacts` to have been

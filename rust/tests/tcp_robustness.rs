@@ -1,3 +1,5 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
 //! TCP protocol robustness: the server must survive malformed peers —
 //! truncated frames, oversized lines, garbage verbs, mid-frame
 //! disconnects — answering typed errors where a reply is possible and
