@@ -1,0 +1,175 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
+//! Bench: native training step — FlashKAN active-bases vs dense all-bases
+//! forward+backward across grid sizes, plus the trained → compressed
+//! accuracy-vs-bytes row.
+//!
+//! The scaling story this pins: the active path touches 2 of G knots per
+//! edge, so its cost is flat in G; the all-bases path a conventional KAN
+//! implementation pays multiply-accumulates every knot, so it scales ~O(G).
+//! Both compute bit-identical results (rust/tests/flashkan_parity.rs), so
+//! the gap is pure cost, not accuracy.
+//!
+//! Run: cargo bench --bench train_step [-- --smoke]
+//! Writes BENCH_train.json.
+
+use share_kan::data::dataset::standard_splits;
+use share_kan::data::rng::Pcg32;
+use share_kan::eval::mean_average_precision;
+use share_kan::kan::eval::DenseModel;
+use share_kan::kan::spec::KanSpec;
+use share_kan::kan::flash::dense_layer_allbases;
+use share_kan::train::autodiff::{dense_backward, dense_backward_allbases, dense_forward};
+use share_kan::train::{NativeKanTrainer, TrainConfig};
+use share_kan::util::bench::{write_results, Bencher};
+use share_kan::util::json::Json;
+use share_kan::vq::{compress, load_compressed, Precision};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let bencher = if smoke {
+        Bencher {
+            warmup: std::time::Duration::from_millis(20),
+            target_time: std::time::Duration::from_millis(80),
+            max_iters: 2_000,
+        }
+    } else {
+        Bencher::quick()
+    };
+    let mut results: Vec<Json> = Vec::new();
+    let mut rng = Pcg32::seeded(1);
+
+    // one edge set, G swept over two orders of magnitude: the paper's
+    // resolution axis, here measured as training-step cost
+    let (b, n_in, n_out) = (16usize, 32usize, 32usize);
+    let g_sweep: &[usize] = if smoke { &[8, 32, 128] } else { &[8, 32, 128, 512] };
+    println!("train step: FlashKAN active (O(k)) vs all-bases (O(G)), b={b} edges={n_in}x{n_out}");
+    println!("{:-<100}", "");
+    let mut means: Vec<(usize, &str, f64)> = Vec::new();
+    for &g in g_sweep {
+        let grids = rng.normal_vec(n_in * n_out * g, 0.0, 0.5);
+        let x = rng.normal_vec(b * n_in, 0.0, 1.0);
+        let gout = rng.normal_vec(b * n_out, 0.0, 1.0);
+        let mut ggrids = vec![0f32; grids.len()];
+        let mut gx = vec![0f32; x.len()];
+
+        for path in ["flash", "dense"] {
+            let r = bencher.run(&format!("{path}/fwd_bwd g={g}"), || {
+                if path == "flash" {
+                    let (out, taps) = dense_forward(&x, b, &grids, n_in, n_out, g);
+                    ggrids.iter_mut().for_each(|v| *v = 0.0);
+                    dense_backward(&taps, b, &grids, n_in, n_out, g, &gout,
+                                   &mut ggrids, Some(&mut gx));
+                    std::hint::black_box((&out, &ggrids, &gx));
+                } else {
+                    let (out, taps) = dense_layer_allbases(&x, b, &grids, n_in, n_out, g);
+                    ggrids.iter_mut().for_each(|v| *v = 0.0);
+                    dense_backward_allbases(&taps, b, &grids, n_in, n_out, g, &gout,
+                                            &mut ggrids, Some(&mut gx));
+                    std::hint::black_box((&out, &ggrids, &gx));
+                }
+            });
+            println!("{}   {:>10.0} samples/s", r.report(), r.throughput(b as f64));
+            let mut j = r.to_json();
+            if let Json::Obj(ref mut m) = j {
+                m.insert("path".into(), Json::str(path));
+                m.insert("g".into(), Json::num(g as f64));
+                m.insert("batch".into(), Json::num(b as f64));
+                m.insert("edges".into(), Json::num((n_in * n_out) as f64));
+                m.insert("samples_per_s".into(), Json::num(r.throughput(b as f64)));
+            }
+            results.push(j);
+            means.push((g, path, r.mean_ns));
+        }
+    }
+
+    // scaling-gap rows: dense/flash cost ratio per G — flat-in-G active
+    // path vs ~linear dense path means the ratio grows with G
+    println!("\nall-bases / active cost ratio per G");
+    println!("{:-<100}", "");
+    for &g in g_sweep {
+        let find = |p: &str| {
+            means.iter().find(|(gg, pp, _)| *gg == g && *pp == p).map(|(_, _, ns)| *ns)
+        };
+        if let (Some(flash_ns), Some(dense_ns)) = (find("flash"), find("dense")) {
+            let ratio = dense_ns / flash_ns;
+            println!("  g={g:<5} {ratio:>6.2}x");
+            results.push(Json::obj(vec![
+                ("name", Json::str(format!("scaling_gap g={g}"))),
+                ("g", Json::num(g as f64)),
+                ("flash_mean_ns", Json::num(flash_ns)),
+                ("dense_mean_ns", Json::num(dense_ns)),
+                ("dense_over_flash", Json::num(ratio)),
+            ]));
+        }
+    }
+
+    // accuracy-vs-bytes: a real (small) native training run, then the
+    // compression pipeline — the end-to-end row the paper's Table 1 plots
+    let spec = if smoke {
+        KanSpec { d_in: 12, d_hidden: 16, d_out: 6, grid_size: 8 }
+    } else {
+        KanSpec { d_in: 24, d_hidden: 32, d_out: 10, grid_size: 10 }
+    };
+    let steps = if smoke { 150 } else { 600 };
+    let splits = standard_splits(5, spec.d_in, spec.d_out, if smoke { 512 } else { 2048 },
+                                 128, 256, 128);
+    println!("\ntrained -> compressed accuracy vs bytes ({}x{}x{} g={}, {steps} steps)",
+             spec.d_in, spec.d_hidden, spec.d_out, spec.grid_size);
+    println!("{:-<100}", "");
+    let mut trainer = NativeKanTrainer::new(&spec, 3);
+    let t0 = std::time::Instant::now();
+    let log = trainer
+        .fit(&splits.train, &TrainConfig {
+            steps,
+            base_lr: 1e-2,
+            seed: 1,
+            log_every: (steps / 4).max(1),
+            batch: 16,
+        })
+        .unwrap();
+    let train_wall = t0.elapsed();
+    let ck = trainer.to_checkpoint();
+    let dense_bytes = ck.total_bytes();
+    let dense_model = DenseModel {
+        grids0: ck.require("grids0").unwrap().as_f32(),
+        grids1: ck.require("grids1").unwrap().as_f32(),
+        d_in: spec.d_in,
+        d_hidden: spec.d_hidden,
+        d_out: spec.d_out,
+        g: spec.grid_size,
+    };
+    let eval_map = |scores: &[f32]| {
+        mean_average_precision(scores, &splits.test.y, splits.test.n, spec.d_out)
+    };
+    let dense_map = eval_map(&dense_model.forward(&splits.test.x, splits.test.n));
+    println!("  dense    {:>9} bytes  mAP {dense_map:>6.2}  (train {train_wall:?}, \
+              final loss {:.4})", dense_bytes, log.final_loss);
+    results.push(Json::obj(vec![
+        ("name", Json::str("accuracy_vs_bytes/dense")),
+        ("bytes", Json::num(dense_bytes as f64)),
+        ("map", Json::num(dense_map)),
+        ("train_steps", Json::num(steps as f64)),
+        ("final_loss", Json::num(log.final_loss as f64)),
+        ("train_wall_ms", Json::num(train_wall.as_secs_f64() * 1e3)),
+    ]));
+    let k = if smoke { 32 } else { 64 };
+    for (label, precision) in [("vq_fp32", Precision::Fp32), ("vq_int8", Precision::Int8)] {
+        let vq_ck = compress(&ck, &spec, k, precision, 42).unwrap().to_checkpoint();
+        let bytes = vq_ck.total_bytes();
+        let model = load_compressed(&vq_ck).unwrap();
+        let map = eval_map(&model.forward(&splits.test.x, splits.test.n));
+        println!("  {label:<8} {bytes:>9} bytes  mAP {map:>6.2}  ({:.1}x smaller)",
+                 dense_bytes as f64 / bytes as f64);
+        results.push(Json::obj(vec![
+            ("name", Json::str(format!("accuracy_vs_bytes/{label}"))),
+            ("bytes", Json::num(bytes as f64)),
+            ("map", Json::num(map)),
+            ("k", Json::num(k as f64)),
+            ("compression_ratio", Json::num(dense_bytes as f64 / bytes as f64)),
+        ]));
+    }
+
+    write_results("BENCH_train.json", "train_step", results).unwrap();
+    println!("\nwrote BENCH_train.json");
+}

@@ -1,7 +1,8 @@
 //! `repro` — regenerate every table and figure in the paper's evaluation.
 //!
 //! Usage:
-//!   repro <experiment> [--artifacts DIR] [--quick] [--seed N] [--steps N]
+//!   repro <experiment> [--quick] [--smoke] [--seed N] [--steps N]
+//!   repro --smoke            (CI set: fig1 + table1 + universal, small shapes)
 //!
 //! Experiments (DESIGN.md §5 index):
 //!   fig1       pruning cliff (KAN vs MLP mAP under magnitude pruning)
@@ -16,9 +17,11 @@
 //!   l21        Appendix B group-l21 shrinkage analysis
 //!   all        everything above, in order
 //!
+//! Training runs natively (pure Rust); no PJRT artifacts are needed.
+//! `--smoke` swaps in the CI-scale config (reduced width/grid/splits);
+//! with no experiment named it runs the smoke set used by CI.
+//!
 //! Reports are printed and mirrored to reports/<name>.txt.
-
-use std::path::PathBuf;
 
 use anyhow::Result;
 use share_kan::experiments::{self, ExpConfig, Workbench};
@@ -27,7 +30,7 @@ use share_kan::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    if args.positional.is_empty() || args.flag("help") {
+    if (args.positional.is_empty() && !args.flag("smoke")) || args.flag("help") {
         println!("{}", USAGE);
         return;
     }
@@ -38,20 +41,26 @@ fn main() {
 }
 
 const USAGE: &str = "repro <fig1|spectral|table1|fig3|table3|table2|pareto|bandwidth|isolatent|universal|latency|l21|all> \
-[--artifacts DIR] [--quick] [--seed N] [--steps N]";
+[--quick] [--smoke] [--seed N] [--steps N]";
 
 fn run(args: &Args) -> Result<()> {
-    let artifacts = PathBuf::from(args.get_or(
-        "artifacts",
-        share_kan::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
-    ));
-    let mut cfg = if args.flag("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    let smoke = args.flag("smoke");
+    let mut cfg = if smoke {
+        ExpConfig::smoke()
+    } else if args.flag("quick") {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.train_steps = args.get_usize("steps", cfg.train_steps);
-    let wb = Workbench::new(&artifacts, cfg)?;
+    let wb = Workbench::new(cfg);
 
-    let which = args.positional[0].as_str();
+    let which = args.positional.first().map(String::as_str).unwrap_or("smoke");
     let all = which == "all";
+    // `repro --smoke` with no experiment: the CI set — train, compress,
+    // prune and share end-to-end, producing the paper-style tables
+    let smoke_set = which == "smoke";
     let mut ran = false;
 
     let mut emit = |name: &str, content: String| {
@@ -62,7 +71,7 @@ fn run(args: &Args) -> Result<()> {
         ran = true;
     };
 
-    if all || which == "fig1" {
+    if all || smoke_set || which == "fig1" {
         let sparsities = [0.0, 0.02, 0.05, 0.10, 0.20, 0.30, 0.50, 0.70, 0.90];
         let pts = experiments::pruning_cliff::run(&wb, &sparsities)?;
         let base = wb.base_rate(&experiments::SplitSel::Test);
@@ -72,7 +81,7 @@ fn run(args: &Args) -> Result<()> {
         let r = experiments::spectral_evidence::run(&wb)?;
         emit("spectral_evidence", experiments::spectral_evidence::render(&r));
     }
-    if all || which == "table1" || which == "fig2" {
+    if all || smoke_set || which == "table1" || which == "fig2" {
         let r = experiments::main_results::run(&wb)?;
         emit("table1_main_results", experiments::main_results::render(&r, &wb));
     }
@@ -93,8 +102,8 @@ fn run(args: &Args) -> Result<()> {
         emit("pareto_resolution", experiments::resolution_pareto::render(&pts));
     }
     if all || which == "bandwidth" {
-        let sim_batch = if args.flag("quick") { 4 } else { 16 };
-        let serve_n = if args.flag("quick") { 400 } else { 2000 };
+        let sim_batch = if smoke || args.flag("quick") { 4 } else { 16 };
+        let serve_n = if smoke || args.flag("quick") { 400 } else { 2000 };
         let r = experiments::bandwidth::run(&wb, sim_batch, serve_n)?;
         emit("bandwidth_analysis", experiments::bandwidth::render(&r));
     }
@@ -102,15 +111,15 @@ fn run(args: &Args) -> Result<()> {
         let r = experiments::iso_latent::run(&[5, 10, 20, 40, 80, 128], 4)?;
         emit("isolatent", experiments::iso_latent::render(&r));
     }
-    if all || which == "universal" {
-        let n = if args.flag("quick") { 3 } else { 6 };
+    if all || smoke_set || which == "universal" {
+        let n = if smoke || args.flag("quick") { 3 } else { 6 };
         let r = experiments::universal_basis::run(&wb, n)?;
         emit("universal_basis", experiments::universal_basis::render(&r));
     }
     if all || which == "latency" {
-        let rates: &[f64] = if args.flag("quick") { &[500.0, 2000.0] }
+        let rates: &[f64] = if smoke || args.flag("quick") { &[500.0, 2000.0] }
                             else { &[500.0, 2000.0, 8000.0, 20000.0] };
-        let n = if args.flag("quick") { 300 } else { 1500 };
+        let n = if smoke || args.flag("quick") { 300 } else { 1500 };
         let r = experiments::latency_load::run(&wb, rates, n)?;
         emit("latency_load", experiments::latency_load::render(&r));
     }

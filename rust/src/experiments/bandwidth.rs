@@ -4,8 +4,9 @@
 //! 1. **memsim at paper scale** — the A100 substitution: replay dense vs VQ
 //!    inference traces through the 40 MB L2 model, report hit rates, DRAM
 //!    traffic, roofline times and the "breaking the DRAM speed limit" gap.
-//! 2. **measured serving throughput** — the real coordinator + PJRT CPU
-//!    path at our scale: requests/sec and latency percentiles per variant.
+//! 2. **measured serving throughput** — the real coordinator over the
+//!    arena backend at our scale: requests/sec and latency percentiles per
+//!    variant.
 
 use std::time::Duration;
 
@@ -49,7 +50,7 @@ fn orin_sim(measure: usize) -> BandwidthAnalysis {
 /// Measured serving throughput through the real coordinator.
 fn serving_bench(wb: &Workbench, requests: usize) -> Result<Vec<ServingRow>> {
     let g = wb.spec.grid_size;
-    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let k = wb.cfg.vq_k;
     let (ck, _) = wb.dense_checkpoint(g)?;
     let dense_head = HeadWeights::from_checkpoint(&ck)?;
     let fp32_head =
@@ -64,9 +65,11 @@ fn serving_bench(wb: &Workbench, requests: usize) -> Result<Vec<ServingRow>> {
         ("share_kan_int8", int8_head),
     ] {
         let handle = Coordinator::start(CoordinatorConfig {
-            backend: crate::runtime::BackendConfig::Pjrt {
-                artifacts_dir: crate::runtime::default_artifacts_dir(),
-            },
+            backend: crate::runtime::BackendConfig::Arena(crate::runtime::BackendSpec {
+                kan: wb.spec,
+                vq: VqSpec { codebook_size: k },
+                ..Default::default()
+            }),
             policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
             queue_capacity: 4096,
             ..Default::default()
@@ -163,7 +166,7 @@ pub fn render(r: &BandwidthResults) -> String {
     out.push('\n');
     out.push_str(&render_analysis(&r.orin_scale));
     let mut t = Table::new(
-        "Measured serving throughput (real coordinator + PJRT CPU, our scale)",
+        "Measured serving throughput (real coordinator + arena backend, our scale)",
         &["Variant", "req/s", "p50", "p95", "mean batch"],
     );
     for row in &r.serving {

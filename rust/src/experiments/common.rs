@@ -1,9 +1,13 @@
-//! Shared experiment infrastructure: engine/dataset/checkpoint setup with
-//! on-disk caching so every `repro` subcommand reuses the same trained
-//! heads (runs/ directory), exactly like the paper evaluates one trained
-//! model many ways.
+//! Shared experiment infrastructure: dataset/checkpoint setup with on-disk
+//! caching so every `repro` subcommand reuses the same trained heads
+//! (runs/ directory), exactly like the paper evaluates one trained model
+//! many ways.
+//!
+//! Training runs through the native engine ([`crate::train::native`]), so
+//! the whole experiment suite executes under default features — no PJRT
+//! artifacts required.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
@@ -12,8 +16,7 @@ use crate::eval::mean_average_precision;
 use crate::kan::checkpoint::Checkpoint;
 use crate::kan::eval::{DenseModel, MlpModel, VqModel};
 use crate::kan::spec::KanSpec;
-use crate::runtime::Engine;
-use crate::train::{KanTrainer, MlpTrainer, TrainConfig, TrainLog};
+use crate::train::{NativeKanTrainer, NativeMlpTrainer, TrainConfig, TrainLog};
 
 pub const DEFAULT_SEED: u64 = 42;
 
@@ -27,6 +30,15 @@ pub struct ExpConfig {
     pub n_coco: usize,
     pub train_steps: usize,
     pub base_lr: f32,
+    /// Minibatch size for native training.
+    pub batch: usize,
+    /// Head shape the suite trains and evaluates (grid_size is the default
+    /// G; sweeps override it per run).
+    pub spec: KanSpec,
+    /// VQ codebook size for compressed rows.
+    pub vq_k: usize,
+    /// Grid sizes swept by the resolution-Pareto experiment.
+    pub g_sweep: Vec<usize>,
     pub runs_dir: PathBuf,
 }
 
@@ -42,6 +54,10 @@ impl Default for ExpConfig {
             n_coco: 2048,
             train_steps: 2000,
             base_lr: 2e-2,
+            batch: 16,
+            spec: KanSpec::default(),
+            vq_k: 512,
+            g_sweep: vec![5, 10, 20],
             runs_dir: PathBuf::from("runs"),
         }
     }
@@ -58,36 +74,56 @@ impl ExpConfig {
             ..Default::default()
         }
     }
+
+    /// CI-scale configuration: a reduced-width head and small splits so the
+    /// full train → compress → evaluate chain finishes in seconds
+    /// (`repro --smoke`).  The shapes keep every experiment's mechanism
+    /// intact — G sweep aliasing, VQ sharing, pruning — just smaller.
+    pub fn smoke() -> Self {
+        ExpConfig {
+            n_train: 768,
+            n_val: 128,
+            n_test: 256,
+            n_coco: 256,
+            train_steps: 200,
+            base_lr: 2e-2,
+            spec: KanSpec { d_in: 16, d_hidden: 24, d_out: 8, grid_size: 8 },
+            vq_k: 64,
+            g_sweep: vec![4, 8, 16],
+            runs_dir: PathBuf::from("runs-smoke"),
+            ..Default::default()
+        }
+    }
 }
 
 pub struct Workbench {
-    pub engine: Engine,
     pub cfg: ExpConfig,
     pub splits: Splits,
     pub spec: KanSpec,
 }
 
 impl Workbench {
-    pub fn new(artifacts_dir: &Path, cfg: ExpConfig) -> Result<Workbench> {
-        let engine = Engine::load(artifacts_dir)?;
-        let spec = engine.manifest.kan_spec;
+    pub fn new(cfg: ExpConfig) -> Workbench {
+        let spec = cfg.spec;
         let splits = standard_splits(
             cfg.seed, spec.d_in, spec.d_out, cfg.n_train, cfg.n_val, cfg.n_test, cfg.n_coco,
         );
-        Ok(Workbench { engine, cfg, splits, spec })
+        Workbench { cfg, splits, spec }
     }
 
     fn cache_path(&self, name: &str) -> PathBuf {
+        // shape in the name: smoke and full configs must never collide
+        let s = &self.spec;
         self.cfg.runs_dir.join(format!(
-            "{name}_seed{}_steps{}.skpt",
-            self.cfg.seed, self.cfg.train_steps
+            "{name}_seed{}_steps{}_{}x{}x{}.skpt",
+            self.cfg.seed, self.cfg.train_steps, s.d_in, s.d_hidden, s.d_out
         ))
     }
 
     /// Equal-convergence protocol: gradient signal per knot thins as G
     /// grows (each sample touches 2 of G knots), so the step budget scales
     /// with G — the fixed-epoch analogue of the paper's train-to-300-epochs
-    /// protocol at our scale.  G = grid_size (10) uses cfg.train_steps.
+    /// protocol at our scale.  G = spec.grid_size uses cfg.train_steps.
     pub fn effective_steps(&self, g: usize) -> usize {
         (self.cfg.train_steps * g / self.spec.grid_size).max(200)
     }
@@ -100,7 +136,8 @@ impl Workbench {
         }
         let steps = self.effective_steps(g);
         eprintln!("[train] dense KAN g={g} for {steps} steps...");
-        let mut trainer = KanTrainer::new(&self.engine, g, self.cfg.seed)?;
+        let spec = KanSpec { grid_size: g, ..self.spec };
+        let mut trainer = NativeKanTrainer::new(&spec, self.cfg.seed);
         let log = trainer.fit(
             &self.splits.train,
             &TrainConfig {
@@ -108,9 +145,10 @@ impl Workbench {
                 base_lr: self.cfg.base_lr,
                 seed: self.cfg.seed,
                 log_every: (steps / 40).max(1),
+                batch: self.cfg.batch,
             },
         )?;
-        let ck = trainer.to_checkpoint()?;
+        let ck = trainer.to_checkpoint();
         std::fs::create_dir_all(&self.cfg.runs_dir).ok();
         ck.save(&path).context("saving checkpoint")?;
         Ok((ck, Some(log)))
@@ -123,7 +161,7 @@ impl Workbench {
             return Ok((Checkpoint::load(&path)?, None));
         }
         eprintln!("[train] MLP baseline for {} steps...", self.cfg.train_steps);
-        let mut trainer = MlpTrainer::new(&self.engine, self.cfg.seed)?;
+        let mut trainer = NativeMlpTrainer::new(&self.spec, self.cfg.seed);
         let log = trainer.fit(
             &self.splits.train,
             &TrainConfig {
@@ -131,9 +169,10 @@ impl Workbench {
                 base_lr: 1e-2,
                 seed: self.cfg.seed,
                 log_every: (self.cfg.train_steps / 40).max(1),
+                batch: self.cfg.batch,
             },
         )?;
-        let ck = trainer.to_checkpoint()?;
+        let ck = trainer.to_checkpoint();
         std::fs::create_dir_all(&self.cfg.runs_dir).ok();
         ck.save(&path)?;
         Ok((ck, Some(log)))

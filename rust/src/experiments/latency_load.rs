@@ -28,15 +28,17 @@ pub struct LoadPoint {
 
 pub fn run(wb: &Workbench, rates: &[f64], n_per_rate: usize) -> Result<Vec<LoadPoint>> {
     let g = wb.spec.grid_size;
-    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let k = wb.cfg.vq_k;
     let (ck, _) = wb.dense_checkpoint(g)?;
     let head_ck = compress(&ck, &wb.spec, k, Precision::Int8, 1)?.to_checkpoint();
     let mut out = Vec::new();
     for &rate in rates {
         let handle = Coordinator::start(CoordinatorConfig {
-            backend: crate::runtime::BackendConfig::Pjrt {
-                artifacts_dir: crate::runtime::default_artifacts_dir(),
-            },
+            backend: crate::runtime::BackendConfig::Arena(crate::runtime::BackendSpec {
+                kan: wb.spec,
+                vq: crate::kan::spec::VqSpec { codebook_size: k },
+                ..Default::default()
+            }),
             policy: BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(1) },
             queue_capacity: 8192,
             ..Default::default()
@@ -104,7 +106,7 @@ pub fn render(points: &[LoadPoint]) -> String {
     format!(
         "{}\nbatch size rises with load (deadline-closed -> size-closed batches);\n\
          backpressure (rejections) only at saturation — the §4.3 zero-alloc path\n\
-         keeps the executor from being the bottleneck below the PJRT roofline.\n",
+         keeps the executor from being the bottleneck below the arena roofline.\n",
         t.render()
     )
 }

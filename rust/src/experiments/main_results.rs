@@ -25,7 +25,7 @@ pub struct MainResults {
 
 pub fn run(wb: &Workbench) -> Result<MainResults> {
     let g = wb.spec.grid_size;
-    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let k = wb.cfg.vq_k;
     let (kan_ck, _) = wb.dense_checkpoint(g)?;
     let (mlp_ck, _) = wb.mlp_checkpoint()?;
 

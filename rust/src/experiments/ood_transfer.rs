@@ -70,7 +70,7 @@ impl ActQuantModel {
 
 pub fn run(wb: &Workbench) -> Result<OodResults> {
     let g = wb.spec.grid_size;
-    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let k = wb.cfg.vq_k;
     let (ck, _) = wb.dense_checkpoint(g)?;
     let dense = wb.dense_model(&ck, g)?;
     let fp32 = compress(&ck, &wb.spec, k, P::Fp32, wb.cfg.seed)?.to_eval_model();

@@ -16,7 +16,7 @@ pub struct ParetoPoint {
 
 pub fn run(wb: &Workbench) -> Result<Vec<ParetoPoint>> {
     let mut out = Vec::new();
-    for &g in &wb.engine.manifest.g_sweep.clone() {
+    for &g in &wb.cfg.g_sweep.clone() {
         let (ck, _) = wb.dense_checkpoint(g)?;
         let m = wb.dense_model(&ck, g)?;
         out.push(ParetoPoint {

@@ -59,7 +59,7 @@ pub struct UniversalResults {
 
 pub fn run(wb: &Workbench, n_heads: usize) -> Result<UniversalResults> {
     let g = wb.spec.grid_size;
-    let k = wb.engine.manifest.vq_spec.codebook_size;
+    let k = wb.cfg.vq_k;
     let (base, _) = wb.dense_checkpoint(g)?;
     let heads: Vec<Checkpoint> = (0..n_heads)
         .map(|i| derive_task_head(&base, 1000 + i as u64, 0.1))

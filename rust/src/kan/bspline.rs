@@ -30,6 +30,31 @@ fn blend(t: f32) -> [f32; 4] {
     ]
 }
 
+fn blend_deriv(t: f32) -> [f32; 4] {
+    // d/dt of the uniform cubic blending functions above
+    let t2 = t * t;
+    [
+        -(1.0 - t) * (1.0 - t) / 2.0,
+        (9.0 * t2 - 12.0 * t) / 6.0,
+        (-9.0 * t2 + 6.0 * t + 3.0) / 6.0,
+        t2 / 2.0,
+    ]
+}
+
+/// The k+1 = 4 active cubic bases at one input — the de Boor locality
+/// FlashKAN exploits: of `n_coef` control points only `coef[seg..seg+4]`
+/// influence the value at u, and only these receive gradient.
+#[derive(Debug, Clone, Copy)]
+pub struct ActiveCubic {
+    /// First active control point: `coef[seg..seg+4]` are the live ones.
+    pub seg: usize,
+    /// Basis weights for the four active control points.
+    pub w: [f32; 4],
+    /// d(weight)/du for the four active control points (chain rule through
+    /// the knot-space map, d t / d u = segments / 2).
+    pub dw_du: [f32; 4],
+}
+
 impl CubicSpline {
     pub fn new(coef: Vec<f32>) -> Self {
         assert!(coef.len() >= 4, "cubic spline needs >= 4 control points");
@@ -49,6 +74,57 @@ impl CubicSpline {
         let t = pos - seg as f32;
         let b = blend(t);
         (0..4).map(|j| b[j] * self.coef[seg + j]).sum()
+    }
+
+    /// Locate the active bases at u: segment index, the 4 non-zero basis
+    /// weights, and their u-derivatives.  Everything [`eval_active`],
+    /// [`CubicSpline::deriv`] and a backward pass need, in O(k) — no
+    /// other basis evaluates non-zero here.
+    ///
+    /// [`eval_active`]: CubicSpline::eval_active
+    pub fn active_bases(&self, u: f32) -> ActiveCubic {
+        let segs = self.segments() as f32;
+        let pos = ((u.clamp(-1.0, 1.0) + 1.0) / 2.0) * segs;
+        let seg = (pos.floor() as usize).min(self.segments() - 1);
+        let t = pos - seg as f32;
+        let w = blend(t);
+        let db = blend_deriv(t);
+        let dt_du = segs / 2.0;
+        ActiveCubic {
+            seg,
+            w,
+            dw_du: [db[0] * dt_du, db[1] * dt_du, db[2] * dt_du, db[3] * dt_du],
+        }
+    }
+
+    /// Evaluate via the active-bases footprint — bit-for-bit equal to
+    /// [`CubicSpline::eval`] (identical index math and summation order).
+    pub fn eval_active(&self, u: f32) -> f32 {
+        let a = self.active_bases(u);
+        (0..4).map(|j| a.w[j] * self.coef[a.seg + j]).sum()
+    }
+
+    /// Evaluate through the FULL basis row of length `n_coef` — the O(G+k)
+    /// formulation a conventional implementation uses.  The n_coef - 4
+    /// inactive bases are exactly 0.0 and the sum runs in coefficient-index
+    /// order, so on finite coefficients this is bit-equal to
+    /// [`CubicSpline::eval_active`]: every leading zero term keeps the
+    /// accumulator at +0.0 and every trailing one adds exact 0.0.
+    pub fn eval_dense(&self, u: f32) -> f32 {
+        let a = self.active_bases(u);
+        let mut acc = 0f32;
+        for (i, &c) in self.coef.iter().enumerate() {
+            let w = if i >= a.seg && i < a.seg + 4 { a.w[i - a.seg] } else { 0.0 };
+            acc += w * c;
+        }
+        acc
+    }
+
+    /// d(eval)/du at u (one-sided constant outside [-1, 1] since eval
+    /// clamps).
+    pub fn deriv(&self, u: f32) -> f32 {
+        let a = self.active_bases(u);
+        (0..4).map(|j| a.dw_du[j] * self.coef[a.seg + j]).sum()
     }
 
     /// Least-squares fit to samples (u_i, y_i), u in [-1, 1], with a tiny
@@ -242,6 +318,63 @@ mod tests {
         let tight = 1e-6;
         if tabulation_error(&s, 4, 512) > tight {
             assert_eq!(min_grid_for_tolerance(&s, tight, 4), None);
+        }
+    }
+
+    #[test]
+    fn blend_deriv_matches_finite_difference() {
+        let eps = 1e-3f32;
+        for i in 1..20 {
+            let t = i as f32 / 20.0;
+            let hi = blend(t + eps);
+            let lo = blend(t - eps);
+            let db = blend_deriv(t);
+            for j in 0..4 {
+                let fd = (hi[j] - lo[j]) / (2.0 * eps);
+                assert!((db[j] - fd).abs() < 1e-3, "t={t} j={j}: {} vs {fd}", db[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn active_eval_bitwise_equals_eval() {
+        let mut rng = Pcg32::seeded(6);
+        for &n_coef in &[4usize, 5, 9, 16, 33] {
+            let s = CubicSpline::new(rng.normal_vec(n_coef, 0.0, 1.0));
+            for i in 0..101 {
+                // includes both boundary knots and clamped out-of-range u
+                let u = -1.5 + 3.0 * i as f32 / 100.0;
+                let want = s.eval(u);
+                assert_eq!(want.to_bits(), s.eval_active(u).to_bits(), "n={n_coef} u={u}");
+                assert_eq!(want.to_bits(), s.eval_dense(u).to_bits(), "n={n_coef} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(7);
+        let s = CubicSpline::new(rng.normal_vec(11, 0.0, 1.0));
+        let eps = 1e-3f32;
+        for i in 0..50 {
+            // stay inside the clamp region and off segment boundaries
+            let u = -0.93 + 1.86 * i as f32 / 49.0;
+            let fd = (s.eval(u + eps) - s.eval(u - eps)) / (2.0 * eps);
+            assert!((s.deriv(u) - fd).abs() < 2e-2, "u={u}: {} vs {fd}", s.deriv(u));
+        }
+    }
+
+    #[test]
+    fn active_bases_partition_of_unity() {
+        let s = CubicSpline::new(vec![0.0; 10]);
+        for i in 0..50 {
+            let u = -1.0 + 2.0 * i as f32 / 49.0;
+            let a = s.active_bases(u);
+            assert!(a.seg + 4 <= 10);
+            let sum: f32 = a.w.iter().sum();
+            let dsum: f32 = a.dw_du.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "u={u}: {sum}");
+            assert!(dsum.abs() < 1e-5, "u={u}: {dsum}");
         }
     }
 

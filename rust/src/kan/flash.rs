@@ -1,0 +1,254 @@
+//! FlashKAN-style active-bases evaluation for the PLI KAN layer.
+//!
+//! A G-knot PLI grid is a degree-1 B-spline: at any squashed input u only
+//! k+1 = 2 hat-basis functions are non-zero (the pair straddling u).  The
+//! FlashKAN observation (SNIPPETS.md) is that both the forward pass and the
+//! parameter gradients therefore touch only those 2 of G coefficients per
+//! edge — O(k) work and memory traffic instead of the O(G+k) a dense
+//! basis-matrix formulation pays.  This module is the shared core the
+//! native training path ([`crate::train::autodiff`]) is built on:
+//!
+//! * [`Tap`] caches the active pair (knot index + fraction) plus the tanh
+//!   chain factor for one input, computed with the EXACT op sequence of
+//!   [`crate::kan::eval::dense_layer`] / [`crate::kan::eval::vq_layer`] so
+//!   every forward built on taps is bit-for-bit equal to the serving math.
+//! * [`dense_layer_active`] / [`vq_layer_active`] are tap-driven layer
+//!   forwards pinned bitwise against `kan::eval` by
+//!   `rust/tests/flashkan_parity.rs`.
+//! * [`dense_layer_allbases`] is the O(G) dense-basis reference (what a
+//!   conventional KAN implementation materializes); inactive bases
+//!   contribute exactly 0.0 in the same summation order, so it is ALSO
+//!   bit-equal on finite grids — the parity pin that makes the
+//!   `benches/train_step.rs` dense-vs-flash comparison a pure cost story,
+//!   not an accuracy tradeoff.
+
+/// Active-bases footprint of one raw input against a G-knot PLI grid.
+///
+/// `phi(x) = (1 - frac) * c[i0] + frac * c[i0 + 1]` with `u = tanh(x)`;
+/// `dudx` is the squash chain factor `1 - u²` used by the backward kernels
+/// (`d phi / d x = (c[i0+1] - c[i0]) * (G-1)/2 * dudx`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tap {
+    /// Left knot of the active pair (`i0 <= G - 2`).
+    pub i0: usize,
+    /// Interpolation fraction toward knot `i0 + 1`, in [0, 1].
+    pub frac: f32,
+    /// `d tanh(x) / d x = 1 - tanh(x)²` — 0 at saturation, so gradients
+    /// vanish exactly where the forward is flat.
+    pub dudx: f32,
+}
+
+/// Compute the active tap for raw input `x` against a `g`-knot grid.
+///
+/// This is the exact op sequence of `kan::eval::dense_layer` (tanh squash,
+/// scale, clamp, floor, min) — any forward built from the returned tap
+/// reproduces the dense evaluator bit for bit.
+pub fn tap(x: f32, g: usize) -> Tap {
+    debug_assert!(g >= 2, "PLI grid needs >= 2 knots");
+    let scale = (g - 1) as f32 / 2.0;
+    let u = x.tanh();
+    let pos = ((u + 1.0) * scale).clamp(0.0, (g - 1) as f32);
+    let i0 = (pos.floor() as usize).min(g - 2);
+    let frac = pos - i0 as f32;
+    Tap { i0, frac, dudx: 1.0 - u * u }
+}
+
+/// Taps for a whole `[b, n_in]` input batch (row-major, one tap per entry).
+pub fn layer_taps(x: &[f32], g: usize) -> Vec<Tap> {
+    x.iter().map(|&xi| tap(xi, g)).collect()
+}
+
+/// Fill `out` (length `g`) with the full hat-basis row of a tap: zeros
+/// everywhere except `out[i0] = 1 - frac`, `out[i0 + 1] = frac`.  The O(G)
+/// representation the dense reference path materializes.
+pub fn basis_row(t: &Tap, g: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), g);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    out[t.i0] = 1.0 - t.frac;
+    out[t.i0 + 1] = t.frac;
+}
+
+/// Dense KAN layer forward via active taps — bit-for-bit equal to
+/// [`crate::kan::eval::dense_layer`] (same loops, same addend shape).
+/// Returns `(out [b, n_out], taps [b * n_in])`; the taps are the forward
+/// cache the backward kernels consume.
+pub fn dense_layer_active(
+    x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize, g: usize,
+) -> (Vec<f32>, Vec<Tap>) {
+    assert_eq!(x.len(), b * n_in);
+    assert_eq!(grids.len(), n_in * n_out * g);
+    let taps = layer_taps(x, g);
+    let mut out = vec![0f32; b * n_out];
+    for bi in 0..b {
+        let trow = &taps[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, t) in trow.iter().enumerate() {
+            let base = i * n_out * g;
+            for j in 0..n_out {
+                let row = base + j * g + t.i0;
+                orow[j] += (1.0 - t.frac) * grids[row] + t.frac * grids[row + 1];
+            }
+        }
+    }
+    (out, taps)
+}
+
+/// Dense KAN layer forward through the FULL basis row — the O(G)-per-edge
+/// path a conventional KAN implementation takes (materialize all G basis
+/// values, multiply-accumulate every one).  On finite grids this is
+/// bit-for-bit equal to [`dense_layer_active`]: the G-2 inactive bases are
+/// exactly 0.0 and the inner sum visits knots in the same index order, so
+/// every zero term is an exact no-op on the accumulator.
+pub fn dense_layer_allbases(
+    x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize, g: usize,
+) -> (Vec<f32>, Vec<Tap>) {
+    assert_eq!(x.len(), b * n_in);
+    assert_eq!(grids.len(), n_in * n_out * g);
+    let taps = layer_taps(x, g);
+    let mut out = vec![0f32; b * n_out];
+    let mut basis = vec![0f32; g];
+    for bi in 0..b {
+        let trow = &taps[bi * n_in..(bi + 1) * n_in];
+        let orow = &mut out[bi * n_out..(bi + 1) * n_out];
+        for (i, t) in trow.iter().enumerate() {
+            basis_row(t, g, &mut basis);
+            let base = i * n_out * g;
+            for j in 0..n_out {
+                let row = base + j * g;
+                let mut acc = 0f32;
+                for (n, &w) in basis.iter().enumerate() {
+                    acc += w * grids[row + n];
+                }
+                orow[j] += acc;
+            }
+        }
+    }
+    (out, taps)
+}
+
+/// VQ layer forward via active taps — bit-for-bit equal to
+/// [`crate::kan::eval::vq_layer`].  Returns `(out, taps)`.
+pub fn vq_layer_active(
+    x: &[f32], b: usize, p: &crate::kan::eval::VqLayerParams,
+) -> (Vec<f32>, Vec<Tap>) {
+    assert_eq!(x.len(), b * p.n_in);
+    assert_eq!(p.codebook.len(), p.k * p.g);
+    assert_eq!(p.idx.len(), p.n_in * p.n_out);
+    let g = p.g;
+    let taps = layer_taps(x, g);
+    let mut out = vec![0f32; b * p.n_out];
+    for bi in 0..b {
+        let trow = &taps[bi * p.n_in..(bi + 1) * p.n_in];
+        let orow = &mut out[bi * p.n_out..(bi + 1) * p.n_out];
+        for (i, t) in trow.iter().enumerate() {
+            let erow = i * p.n_out;
+            for j in 0..p.n_out {
+                let k = p.idx[erow + j] as usize;
+                debug_assert!(k < p.k, "codebook index out of range");
+                let c = k * g + t.i0;
+                let interp = (1.0 - t.frac) * p.codebook[c] + t.frac * p.codebook[c + 1];
+                orow[j] += p.gain[erow + j] * interp;
+            }
+        }
+        for j in 0..p.n_out {
+            orow[j] += p.bias_sum[j];
+        }
+    }
+    (out, taps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::kan::eval::{dense_layer, vq_layer, VqLayerParams};
+
+    #[test]
+    fn tap_matches_eval_indexing() {
+        // u = tanh(x) = 0 lands dead center; frac recovers the dense math
+        let g = 11;
+        let t = tap(0.0, g);
+        assert_eq!(t.i0, 5);
+        assert!(t.frac.abs() < 1e-6);
+        assert!((t.dudx - 1.0).abs() < 1e-6);
+        // saturated inputs clamp to the last pair with frac 1.0
+        let hi = tap(1e30, g);
+        assert_eq!(hi.i0, g - 2);
+        assert_eq!(hi.frac, 1.0);
+        assert_eq!(hi.dudx, 0.0);
+        let lo = tap(-1e30, g);
+        assert_eq!(lo.i0, 0);
+        assert_eq!(lo.frac, 0.0);
+    }
+
+    #[test]
+    fn active_forward_bitwise_equals_dense_eval() {
+        let mut rng = Pcg32::seeded(11);
+        for &g in &[2usize, 3, 5, 8, 16] {
+            let (b, n_in, n_out) = (4, 3, 5);
+            let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+            let x = rng.normal_vec(b * n_in, 0.0, 2.0);
+            let want = dense_layer(&x, b, &grids, n_in, n_out, g);
+            let (got, taps) = dense_layer_active(&x, b, &grids, n_in, n_out, g);
+            assert_eq!(taps.len(), b * n_in);
+            for (w, v) in want.iter().zip(&got) {
+                assert_eq!(w.to_bits(), v.to_bits(), "g={g}: {w} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn allbases_forward_bitwise_equals_active() {
+        let mut rng = Pcg32::seeded(12);
+        for &g in &[2usize, 4, 9, 32] {
+            let (b, n_in, n_out) = (3, 4, 3);
+            let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+            // include saturated + boundary inputs among the batch
+            let mut x = rng.normal_vec(b * n_in, 0.0, 1.5);
+            x[0] = 1e30;
+            x[1] = -1e30;
+            x[2] = 0.0;
+            let (active, _) = dense_layer_active(&x, b, &grids, n_in, n_out, g);
+            let (dense, _) = dense_layer_allbases(&x, b, &grids, n_in, n_out, g);
+            for (a, d) in active.iter().zip(&dense) {
+                assert_eq!(a.to_bits(), d.to_bits(), "g={g}: {a} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn vq_active_bitwise_equals_vq_eval() {
+        let mut rng = Pcg32::seeded(13);
+        let (b, n_in, n_out, g, k) = (3, 4, 5, 7, 6);
+        let codebook = rng.normal_vec(k * g, 0.0, 1.0);
+        let idx: Vec<i32> = (0..n_in * n_out).map(|_| rng.below(k) as i32).collect();
+        let gain = rng.normal_vec(n_in * n_out, 0.0, 0.5);
+        let bias = rng.normal_vec(n_out, 0.0, 0.2);
+        let p = VqLayerParams {
+            codebook: &codebook, k, g, idx: &idx, gain: &gain, bias_sum: &bias, n_in, n_out,
+        };
+        let x = rng.normal_vec(b * n_in, 0.0, 1.0);
+        let want = vq_layer(&x, b, &p);
+        let (got, _) = vq_layer_active(&x, b, &p);
+        for (w, v) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), v.to_bits(), "{w} vs {v}");
+        }
+    }
+
+    #[test]
+    fn basis_row_is_partition_of_unity() {
+        let mut rng = Pcg32::seeded(14);
+        let g = 9;
+        let mut row = vec![0f32; g];
+        for _ in 0..50 {
+            let t = tap(rng.normal(), g);
+            basis_row(&t, g, &mut row);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert_eq!(row.iter().filter(|&&v| v != 0.0).count().max(1),
+                       if t.frac == 0.0 || t.frac == 1.0 { 1 } else { 2 });
+        }
+    }
+}

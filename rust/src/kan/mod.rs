@@ -4,6 +4,7 @@
 pub mod bspline;
 pub mod checkpoint;
 pub mod eval;
+pub mod flash;
 pub mod spec;
 
 pub use checkpoint::Checkpoint;

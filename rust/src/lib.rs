@@ -20,12 +20,15 @@
 //!   Needs no artifacts, no external runtime: `cargo build --release &&
 //!   cargo test -q` is fully self-contained.
 //! * **pjrt** (cargo feature `pjrt`) — the PJRT CPU client over AOT-lowered
-//!   HLO artifacts, plus the Rust-driven training loop ([`train`]) and the
-//!   experiment harness ([`experiments`] / the `repro` binary), which step
-//!   through PJRT train-step artifacts.  The workspace vendors a type-level
-//!   xla stub so `--features pjrt` compiles everywhere; executing artifacts
-//!   requires swapping in the real xla-rs bindings and running
-//!   `make artifacts`.
+//!   HLO artifacts, plus the PJRT train-step engine (`train::pjrt`).  The
+//!   workspace vendors a type-level xla stub so `--features pjrt` compiles
+//!   everywhere; executing artifacts requires swapping in the real xla-rs
+//!   bindings and running `make artifacts`.
+//!
+//! Training and the experiment harness ([`train`] / [`experiments`] / the
+//! `repro` binary) run natively under default features: pure-Rust autodiff
+//! over the FlashKAN active-bases kernels ([`kan::flash`]), AdamW, and the
+//! paper's cosine schedule — no artifacts, no external runtime.
 //!
 //! Cross-backend equivalence (coordinator-served outputs vs
 //! `VqModel::forward`, bit for bit) is pinned by
@@ -87,11 +90,10 @@ pub mod util;
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod vq;
 
-// Training and the experiment harness drive PJRT train-step artifacts and
-// therefore only exist behind the `pjrt` feature.
-#[cfg(feature = "pjrt")]
+// Training and the experiment harness run natively under default features
+// (pure-Rust autodiff over the FlashKAN kernels); the PJRT train-step
+// engine remains available behind the `pjrt` feature as train::pjrt.
 #[allow(missing_docs, clippy::unwrap_used, clippy::expect_used)]
 pub mod experiments;
-#[cfg(feature = "pjrt")]
 #[allow(missing_docs, clippy::unwrap_used, clippy::expect_used)]
 pub mod train;

@@ -3,7 +3,10 @@
 //!
 //! Subcommands:
 //!   train    --out ck.skpt [--g 10] [--steps 2000] [--lr 2e-2] [--seed 42]
-//!            (requires the `pjrt` feature + AOT artifacts)
+//!            [--batch 16] [--d-in 64] [--d-hidden 128] [--d-out 20]
+//!            [--mlp] [--assert-improved] [--pjrt]
+//!            (native pure-Rust autodiff by default; --pjrt steps through
+//!            AOT train-step artifacts in `--features pjrt` builds)
 //!   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
 //!            | --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]
 //!            (family mode fits ONE universal codebook over all heads)
@@ -72,7 +75,8 @@ use share_kan::vq::universal::compress_family;
 use share_kan::vq::{compress, load_compressed, Precision};
 
 const USAGE: &str = "share-kan <train|compress|inspect|eval|serve|plan|verify|stats|shard> [options]
-  train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42]   (pjrt builds only)
+  train    --out ck.skpt [--g 10] [--steps 2000] [--lr 0.02] [--seed 42] [--batch 16]
+           [--d-in 64] [--d-hidden 128] [--d-out 20] [--mlp] [--assert-improved] [--pjrt]
   compress --in dense.skpt --out vq.skpt [--k 512] [--int8]
            --family a.skpt,b.skpt,... --out-dir DIR [--k 512] [--int8]   (one universal codebook for all heads)
   inspect  --in ck.skpt
@@ -125,8 +129,72 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use share_kan::train::{NativeKanTrainer, NativeMlpTrainer, TrainConfig};
+
+    if args.flag("pjrt") {
+        #[cfg(feature = "pjrt")]
+        return cmd_train_pjrt(args);
+        #[cfg(not(feature = "pjrt"))]
+        anyhow::bail!(
+            "--pjrt steps through PJRT train-step artifacts; rebuild with \
+             `--features pjrt` (real xla bindings) and run `make artifacts` first"
+        );
+    }
+
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    let d = KanSpec::default();
+    let spec = KanSpec {
+        d_in: args.get_usize("d-in", d.d_in),
+        d_hidden: args.get_usize("d-hidden", d.d_hidden),
+        d_out: args.get_usize("d-out", d.d_out),
+        grid_size: args.get_usize("g", d.grid_size),
+    };
+    let steps = args.get_usize("steps", 2000);
+    let seed = args.get_u64("seed", 42);
+    let cfg = TrainConfig {
+        steps,
+        base_lr: args.get_f64("lr", 2e-2) as f32,
+        seed,
+        log_every: (steps / 20).max(1),
+        batch: args.get_usize("batch", 16),
+    };
+    let data = standard_splits(seed, spec.d_in, spec.d_out, 4096, 1024, 2048, 2048);
+    let (ck, log) = if args.flag("mlp") {
+        println!(
+            "training MLP baseline {}x{}x{} for {steps} steps (native)...",
+            spec.d_in, spec.d_hidden, spec.d_out
+        );
+        let mut trainer = NativeMlpTrainer::new(&spec, seed);
+        let log = trainer.fit(&data.train, &cfg)?;
+        (trainer.to_checkpoint(), log)
+    } else {
+        println!(
+            "training dense KAN {}x{}x{} g={} for {steps} steps (native)...",
+            spec.d_in, spec.d_hidden, spec.d_out, spec.grid_size
+        );
+        let mut trainer = NativeKanTrainer::new(&spec, seed);
+        let log = trainer.fit(&data.train, &cfg)?;
+        (trainer.to_checkpoint(), log)
+    };
+    for (s, l) in &log.losses {
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    ck.save(&out)?;
+    println!("saved {} ({} bytes)", out.display(), ck.total_bytes());
+    if args.flag("assert-improved") {
+        anyhow::ensure!(
+            log.improved(),
+            "loss did not decrease (first {:.4} -> final {:.4})",
+            log.losses.first().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            log.final_loss
+        );
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(args: &Args) -> Result<()> {
     use share_kan::runtime::Engine;
     use share_kan::train::{KanTrainer, TrainConfig};
 
@@ -145,6 +213,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         base_lr: args.get_f64("lr", 2e-2) as f32,
         seed,
         log_every: (steps / 20).max(1),
+        batch: args.get_usize("batch", 16),
     })?;
     for (s, l) in &log.losses {
         println!("  step {s:>5}  loss {l:.4}");
@@ -153,14 +222,6 @@ fn cmd_train(args: &Args) -> Result<()> {
     ck.save(&out)?;
     println!("saved {} ({} bytes)", out.display(), ck.total_bytes());
     Ok(())
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_train(_args: &Args) -> Result<()> {
-    anyhow::bail!(
-        "`train` steps through PJRT train-step artifacts; rebuild with \
-         `--features pjrt` (real xla bindings) and run `make artifacts` first"
-    )
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {

@@ -1,0 +1,392 @@
+//! Pure-Rust forward/backward kernels for the KAN stack.
+//!
+//! The forward passes delegate to [`crate::kan::flash`] (active-bases taps,
+//! bit-for-bit equal to the serving evaluator in [`crate::kan::eval`]); the
+//! backward kernels consume the cached taps, so each parameter gradient
+//! touches only the k = 2 active knots per edge — the FlashKAN O(k)
+//! locality, on the backward pass where a dense basis-matrix formulation
+//! pays O(G) per edge.
+//!
+//! Determinism contract: every kernel accumulates in a fixed loop order
+//! (batch → input → output, knots left before right) with no
+//! parallelism and no reordering, so the same inputs produce bit-identical
+//! gradients on every run and platform.  The trainer loop in
+//! [`crate::train::native`] inherits bit-reproducible loss curves and
+//! checkpoints from this.
+
+use crate::kan::flash::{self, Tap};
+
+/// Dense KAN layer forward; returns `(out [b, n_out], taps [b * n_in])`.
+/// The taps are the backward pass's forward cache.
+pub fn dense_forward(
+    x: &[f32], b: usize, grids: &[f32], n_in: usize, n_out: usize, g: usize,
+) -> (Vec<f32>, Vec<Tap>) {
+    flash::dense_layer_active(x, b, grids, n_in, n_out, g)
+}
+
+/// Dense KAN layer backward via active taps.
+///
+/// `gout` is dL/d(out) `[b, n_out]`; accumulates dL/d(grids) into `ggrids`
+/// (same layout as `grids`, caller zeroes) and, when `gx` is given,
+/// writes dL/d(x) `[b, n_in]` (overwritten, not accumulated).  Only the two
+/// active knots per (input, edge) are touched — O(k) per edge.
+pub fn dense_backward(
+    taps: &[Tap], b: usize, grids: &[f32], n_in: usize, n_out: usize, g: usize,
+    gout: &[f32], ggrids: &mut [f32], mut gx: Option<&mut [f32]>,
+) {
+    assert_eq!(taps.len(), b * n_in);
+    assert_eq!(gout.len(), b * n_out);
+    assert_eq!(ggrids.len(), n_in * n_out * g);
+    assert_eq!(grids.len(), n_in * n_out * g);
+    if let Some(ref gx) = gx {
+        assert_eq!(gx.len(), b * n_in);
+    }
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let trow = &taps[bi * n_in..(bi + 1) * n_in];
+        let grow = &gout[bi * n_out..(bi + 1) * n_out];
+        for (i, t) in trow.iter().enumerate() {
+            let base = i * n_out * g;
+            let mut gxi = 0f32;
+            for j in 0..n_out {
+                let row = base + j * g + t.i0;
+                let go = grow[j];
+                // d out / d grids: the two active hat-basis weights
+                ggrids[row] += (1.0 - t.frac) * go;
+                ggrids[row + 1] += t.frac * go;
+                // d out / d x: slope of the active segment through the
+                // knot-space map and the tanh squash
+                gxi += (grids[row + 1] - grids[row]) * go;
+            }
+            if let Some(ref mut gx) = gx {
+                gx[bi * n_in + i] = gxi * scale * t.dudx;
+            }
+        }
+    }
+}
+
+/// Dense KAN layer backward through the FULL basis row — the O(G)-per-edge
+/// reference a conventional implementation pays: every one of the G knot
+/// gradients gets a multiply-accumulate even though G-2 basis values are
+/// zero.  Bit-equal to [`dense_backward`]'s `ggrids` on a zeroed
+/// accumulator (adding `0.0 * go` to `0.0` is exact); used by the parity
+/// tests and the `benches/train_step.rs` scaling comparison.
+pub fn dense_backward_allbases(
+    taps: &[Tap], b: usize, grids: &[f32], n_in: usize, n_out: usize, g: usize,
+    gout: &[f32], ggrids: &mut [f32], mut gx: Option<&mut [f32]>,
+) {
+    assert_eq!(taps.len(), b * n_in);
+    assert_eq!(gout.len(), b * n_out);
+    assert_eq!(ggrids.len(), n_in * n_out * g);
+    let scale = (g - 1) as f32 / 2.0;
+    let mut basis = vec![0f32; g];
+    for bi in 0..b {
+        let trow = &taps[bi * n_in..(bi + 1) * n_in];
+        let grow = &gout[bi * n_out..(bi + 1) * n_out];
+        for (i, t) in trow.iter().enumerate() {
+            flash::basis_row(t, g, &mut basis);
+            let base = i * n_out * g;
+            let mut gxi = 0f32;
+            for j in 0..n_out {
+                let row = base + j * g;
+                let go = grow[j];
+                for (n, &w) in basis.iter().enumerate() {
+                    ggrids[row + n] += w * go;
+                }
+                gxi += (grids[row + t.i0 + 1] - grids[row + t.i0]) * go;
+            }
+            if let Some(ref mut gx) = gx {
+                gx[bi * n_in + i] = gxi * scale * t.dudx;
+            }
+        }
+    }
+}
+
+/// Gradients of one VQ layer's parameters.
+#[derive(Debug, Clone)]
+pub struct VqGrads {
+    /// dL/d(codebook) `[k, g]`.
+    pub codebook: Vec<f32>,
+    /// dL/d(gain) `[n_in, n_out]`.
+    pub gain: Vec<f32>,
+    /// dL/d(bias_sum) `[n_out]`.
+    pub bias: Vec<f32>,
+}
+
+impl VqGrads {
+    /// Zeroed gradients for a layer of the given shape.
+    pub fn zeros(k: usize, g: usize, n_in: usize, n_out: usize) -> Self {
+        VqGrads {
+            codebook: vec![0.0; k * g],
+            gain: vec![0.0; n_in * n_out],
+            bias: vec![0.0; n_out],
+        }
+    }
+}
+
+/// VQ layer forward; returns `(out [b, n_out], taps)`.
+pub fn vq_forward(
+    x: &[f32], b: usize, p: &crate::kan::eval::VqLayerParams,
+) -> (Vec<f32>, Vec<Tap>) {
+    flash::vq_layer_active(x, b, p)
+}
+
+/// VQ layer backward: accumulates into `grads` (caller zeroes) and, when
+/// `gx` is given, writes dL/d(x) `[b, n_in]`.  Codebook rows shared across
+/// edges accumulate in deterministic bi → i → j order; the assignment
+/// indices are frozen (retraining moves the basis, not the assignment).
+pub fn vq_backward(
+    taps: &[Tap], b: usize, p: &crate::kan::eval::VqLayerParams,
+    gout: &[f32], grads: &mut VqGrads, mut gx: Option<&mut [f32]>,
+) {
+    assert_eq!(taps.len(), b * p.n_in);
+    assert_eq!(gout.len(), b * p.n_out);
+    assert_eq!(grads.codebook.len(), p.k * p.g);
+    assert_eq!(grads.gain.len(), p.n_in * p.n_out);
+    assert_eq!(grads.bias.len(), p.n_out);
+    let g = p.g;
+    let scale = (g - 1) as f32 / 2.0;
+    for bi in 0..b {
+        let trow = &taps[bi * p.n_in..(bi + 1) * p.n_in];
+        let grow = &gout[bi * p.n_out..(bi + 1) * p.n_out];
+        for (i, t) in trow.iter().enumerate() {
+            let erow = i * p.n_out;
+            let mut gxi = 0f32;
+            for j in 0..p.n_out {
+                let k = p.idx[erow + j] as usize;
+                let c = k * g + t.i0;
+                let gn = p.gain[erow + j];
+                let go = grow[j];
+                let interp = (1.0 - t.frac) * p.codebook[c] + t.frac * p.codebook[c + 1];
+                grads.codebook[c] += gn * (1.0 - t.frac) * go;
+                grads.codebook[c + 1] += gn * t.frac * go;
+                grads.gain[erow + j] += interp * go;
+                gxi += gn * (p.codebook[c + 1] - p.codebook[c]) * go;
+            }
+            if let Some(ref mut gx) = gx {
+                gx[bi * p.n_in + i] = gxi * scale * t.dudx;
+            }
+        }
+        for j in 0..p.n_out {
+            grads.bias[j] += grow[j];
+        }
+    }
+}
+
+/// MLP forward cache: hidden pre-relu is not needed, post-relu is.
+#[derive(Debug, Clone)]
+pub struct MlpCache {
+    /// Post-relu hidden activations `[b, d_hidden]`.
+    pub h: Vec<f32>,
+}
+
+/// MLP baseline forward (same math as [`crate::kan::eval::MlpModel`]);
+/// returns `(scores [b, d_out], cache)`.
+pub fn mlp_forward(
+    x: &[f32], b: usize, w1: &[f32], b1: &[f32], w2: &[f32], b2: &[f32],
+    d_in: usize, d_hidden: usize, d_out: usize,
+) -> (Vec<f32>, MlpCache) {
+    assert_eq!(x.len(), b * d_in);
+    let mut h = vec![0f32; b * d_hidden];
+    for bi in 0..b {
+        for j in 0..d_hidden {
+            let mut acc = b1[j];
+            for i in 0..d_in {
+                acc += x[bi * d_in + i] * w1[i * d_hidden + j];
+            }
+            h[bi * d_hidden + j] = acc.max(0.0);
+        }
+    }
+    let mut out = vec![0f32; b * d_out];
+    for bi in 0..b {
+        for j in 0..d_out {
+            let mut acc = b2[j];
+            for i in 0..d_hidden {
+                acc += h[bi * d_hidden + i] * w2[i * d_out + j];
+            }
+            out[bi * d_out + j] = acc;
+        }
+    }
+    (out, MlpCache { h })
+}
+
+/// MLP backward: fills (caller-zeroed) `gw1/gb1/gw2/gb2` given `gout`
+/// `[b, d_out]`.  The relu subgradient at 0 is 0 (matches `max(0.0)`).
+pub fn mlp_backward(
+    x: &[f32], b: usize, cache: &MlpCache, w2: &[f32],
+    d_in: usize, d_hidden: usize, d_out: usize, gout: &[f32],
+    gw1: &mut [f32], gb1: &mut [f32], gw2: &mut [f32], gb2: &mut [f32],
+) {
+    assert_eq!(gout.len(), b * d_out);
+    assert_eq!(gw1.len(), d_in * d_hidden);
+    assert_eq!(gb1.len(), d_hidden);
+    assert_eq!(gw2.len(), d_hidden * d_out);
+    assert_eq!(gb2.len(), d_out);
+    for bi in 0..b {
+        let grow = &gout[bi * d_out..(bi + 1) * d_out];
+        let hrow = &cache.h[bi * d_hidden..(bi + 1) * d_hidden];
+        // layer 2 grads + backprop into hidden
+        let mut gh = vec![0f32; d_hidden];
+        for j in 0..d_out {
+            let go = grow[j];
+            gb2[j] += go;
+            for i in 0..d_hidden {
+                gw2[i * d_out + j] += hrow[i] * go;
+                gh[i] += w2[i * d_out + j] * go;
+            }
+        }
+        // relu mask then layer 1 grads
+        for i in 0..d_hidden {
+            if hrow[i] <= 0.0 {
+                gh[i] = 0.0;
+            }
+        }
+        for j in 0..d_hidden {
+            let ghj = gh[j];
+            if ghj == 0.0 {
+                continue;
+            }
+            gb1[j] += ghj;
+            for i in 0..d_in {
+                gw1[i * d_hidden + j] += x[bi * d_in + i] * ghj;
+            }
+        }
+    }
+}
+
+/// Numerically-stable binary cross-entropy with logits, mean-reduced over
+/// all `b * d_out` entries (the paper's multi-label objective).  Returns
+/// `(loss, dL/d(scores))`.
+///
+/// Per element: `max(z, 0) - z·y + ln(1 + exp(-|z|))`; gradient
+/// `(sigmoid(z) - y) / N`.  The loss accumulates in f64 so logging is
+/// batch-order-stable at f32 print precision.
+pub fn bce_with_logits(scores: &[f32], y: &[f32]) -> (f32, Vec<f32>) {
+    assert_eq!(scores.len(), y.len());
+    assert!(!scores.is_empty());
+    let n = scores.len() as f32;
+    let mut loss = 0f64;
+    let mut grad = Vec::with_capacity(scores.len());
+    for (&z, &t) in scores.iter().zip(y) {
+        loss += (z.max(0.0) - z * t + (-z.abs()).exp().ln_1p()) as f64;
+        grad.push((crate::eval::ap::sigmoid(z) - t) / n);
+    }
+    ((loss / scores.len() as f64) as f32, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn dense_backward_matches_allbases_bitwise() {
+        let mut rng = Pcg32::seeded(21);
+        for &g in &[2usize, 5, 16] {
+            let (b, n_in, n_out) = (4, 3, 5);
+            let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+            let x = rng.normal_vec(b * n_in, 0.0, 1.5);
+            let gout = rng.normal_vec(b * n_out, 0.0, 1.0);
+            let (_, taps) = dense_forward(&x, b, &grids, n_in, n_out, g);
+            let mut ga = vec![0f32; grids.len()];
+            let mut gxa = vec![0f32; x.len()];
+            dense_backward(&taps, b, &grids, n_in, n_out, g, &gout, &mut ga, Some(&mut gxa));
+            let mut gd = vec![0f32; grids.len()];
+            let mut gxd = vec![0f32; x.len()];
+            dense_backward_allbases(&taps, b, &grids, n_in, n_out, g, &gout, &mut gd, Some(&mut gxd));
+            for (a, d) in ga.iter().zip(&gd) {
+                assert_eq!(a.to_bits(), d.to_bits(), "g={g}");
+            }
+            for (a, d) in gxa.iter().zip(&gxd) {
+                assert_eq!(a.to_bits(), d.to_bits(), "g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn bce_known_values() {
+        // z = 0: loss = ln 2, grad = (0.5 - y)/N
+        let (loss, grad) = bce_with_logits(&[0.0, 0.0], &[1.0, 0.0]);
+        assert!((loss - std::f32::consts::LN_2).abs() < 1e-6, "{loss}");
+        assert!((grad[0] + 0.25).abs() < 1e-6);
+        assert!((grad[1] - 0.25).abs() < 1e-6);
+        // huge logits stay finite
+        let (loss, grad) = bce_with_logits(&[80.0, -80.0], &[1.0, 0.0]);
+        assert!(loss.abs() < 1e-6, "{loss}");
+        assert!(grad.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bce_grad_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(22);
+        let z = rng.normal_vec(12, 0.0, 2.0);
+        let y: Vec<f32> = (0..12).map(|_| if rng.uniform() < 0.5 { 0.0 } else { 1.0 }).collect();
+        let (_, grad) = bce_with_logits(&z, &y);
+        let eps = 1e-2f32;
+        for i in 0..z.len() {
+            let mut zp = z.clone();
+            zp[i] += eps;
+            let mut zm = z.clone();
+            zm[i] -= eps;
+            let fd = (bce_with_logits(&zp, &y).0 - bce_with_logits(&zm, &y).0) / (2.0 * eps);
+            assert!((grad[i] - fd).abs() < 1e-3, "i={i}: {} vs {fd}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn mlp_backward_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(23);
+        let (b, d_in, d_hidden, d_out) = (4, 3, 5, 2);
+        let w1 = rng.normal_vec(d_in * d_hidden, 0.0, 0.7);
+        let b1 = rng.normal_vec(d_hidden, 0.0, 0.1);
+        let w2 = rng.normal_vec(d_hidden * d_out, 0.0, 0.7);
+        let b2 = rng.normal_vec(d_out, 0.0, 0.1);
+        let x = rng.normal_vec(b * d_in, 0.0, 1.0);
+        let y: Vec<f32> = (0..b * d_out).map(|_| if rng.uniform() < 0.5 { 0.0 } else { 1.0 }).collect();
+        // returns (loss, relu activation pattern) so the FD check can skip
+        // perturbations that cross a relu kink — FD is invalid there
+        let loss_of = |w1: &[f32], b1: &[f32], w2: &[f32], b2: &[f32]| {
+            let (s, c) = mlp_forward(&x, b, w1, b1, w2, b2, d_in, d_hidden, d_out);
+            let pattern: Vec<bool> = c.h.iter().map(|&v| v > 0.0).collect();
+            (bce_with_logits(&s, &y).0, pattern)
+        };
+        let (s, cache) = mlp_forward(&x, b, &w1, &b1, &w2, &b2, d_in, d_hidden, d_out);
+        let (_, gout) = bce_with_logits(&s, &y);
+        let mut gw1 = vec![0f32; w1.len()];
+        let mut gb1 = vec![0f32; b1.len()];
+        let mut gw2 = vec![0f32; w2.len()];
+        let mut gb2 = vec![0f32; b2.len()];
+        mlp_backward(&x, b, &cache, &w2, d_in, d_hidden, d_out, &gout,
+                     &mut gw1, &mut gb1, &mut gw2, &mut gb2);
+        let eps = 5e-3f32;
+        let mut checked = 0usize;
+        let mut check = |name: &str, analytic: &[f32], param: &[f32], which: usize| {
+            for i in 0..param.len() {
+                let mut hi = param.to_vec();
+                hi[i] += eps;
+                let mut lo = param.to_vec();
+                lo[i] -= eps;
+                let ((lh, ph), (ll, pl)) = match which {
+                    0 => (loss_of(&hi, &b1, &w2, &b2), loss_of(&lo, &b1, &w2, &b2)),
+                    1 => (loss_of(&w1, &hi, &w2, &b2), loss_of(&w1, &lo, &w2, &b2)),
+                    2 => (loss_of(&w1, &b1, &hi, &b2), loss_of(&w1, &b1, &lo, &b2)),
+                    _ => (loss_of(&w1, &b1, &w2, &hi), loss_of(&w1, &b1, &w2, &lo)),
+                };
+                if ph != pl {
+                    continue; // perturbation crossed a relu kink
+                }
+                let fd = (lh - ll) / (2.0 * eps);
+                assert!(
+                    (analytic[i] - fd).abs() < 5e-3 + 0.02 * fd.abs(),
+                    "{name}[{i}]: {} vs {fd}", analytic[i]
+                );
+                checked += 1;
+            }
+        };
+        check("w1", &gw1, &w1, 0);
+        check("b1", &gb1, &b1, 1);
+        check("w2", &gw2, &w2, 2);
+        check("b2", &gb2, &b2, 3);
+        assert!(checked > 20, "kink skips swallowed the test: {checked}");
+    }
+}

@@ -1,22 +1,32 @@
-//! Rust-driven training: the AdamW train-step is an AOT-lowered HLO
-//! artifact (fwd + bwd + optimizer update in one graph); the L3 side owns
-//! the loop — data order, LR schedule, loss logging, checkpointing.
+//! Training: shared loop configuration plus two interchangeable engines.
 //!
-//! This is how the three layers compose end-to-end: L1 kernel math inside
-//! the L2-lowered graph, stepped from Rust through PJRT.
+//! * [`native`] (default features) — pure-Rust forward/backward over the
+//!   FlashKAN active-bases kernels ([`autodiff`]) with AdamW ([`optim`]).
+//!   This is what tier-1 runs: the paper's experiment suite trains through
+//!   it with no external runtime.
+//! * [`pjrt`] (cargo feature `pjrt`) — the original AOT-lowered HLO
+//!   train-step artifacts stepped through PJRT; kept as the cross-check
+//!   path.
+//!
+//! Both engines share [`TrainConfig`] / [`TrainLog`] / [`cosine_lr`] and
+//! the same seeded data-order streams, and both emit
+//! [`crate::kan::checkpoint::Checkpoint`]s in the identical `dense_kan`
+//! format, so everything downstream (compression, serving, repro) is
+//! engine-agnostic.
 
-use anyhow::{Context, Result};
-use xla::Literal;
+pub mod autodiff;
+pub mod native;
+pub mod optim;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::data::dataset::Dataset;
-use crate::data::rng::Pcg32;
-use crate::kan::checkpoint::Checkpoint;
-use crate::kan::spec::KanSpec;
-use crate::runtime::{literal, Engine};
-use crate::tensor::Tensor;
-use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{KanTrainer, MlpTrainer};
+
+pub use native::{NativeKanTrainer, NativeMlpTrainer, VqHeadTrainer};
 
 /// Cosine-annealed learning rate (paper §A.1: 1e-3 with cosine annealing).
+/// Step 0 returns `base`; the final step (`total - 1`) returns 0.
 pub fn cosine_lr(base: f32, step: usize, total: usize) -> f32 {
     if total <= 1 {
         return base;
@@ -25,253 +35,45 @@ pub fn cosine_lr(base: f32, step: usize, total: usize) -> f32 {
     0.5 * base * (1.0 + (std::f32::consts::PI * t).cos())
 }
 
+/// Shared training-loop knobs (both engines).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Number of optimizer steps.
     pub steps: usize,
+    /// Peak learning rate fed to [`cosine_lr`] (paper §A.1: 1e-3).
     pub base_lr: f32,
+    /// Seed for the data-order stream (and nothing else).
     pub seed: u64,
     /// loss log stride (every Nth step recorded)
     pub log_every: usize,
+    /// Minibatch size.  The PJRT engine ignores this and uses the
+    /// artifact's compiled `train_batch`; the native engine honors it.
+    pub batch: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { steps: 600, base_lr: 1e-2, seed: 7, log_every: 10 }
+        TrainConfig { steps: 600, base_lr: 1e-3, seed: 7, log_every: 10, batch: 16 }
     }
 }
 
+/// Loss trace from a training run.
 #[derive(Debug, Clone)]
 pub struct TrainLog {
+    /// `(step, loss)` pairs at `log_every` stride plus the final step.
     pub losses: Vec<(usize, f32)>,
+    /// Loss at the last step.
     pub final_loss: f32,
 }
 
-/// Train the dense KAN head (grid size from the artifact name) on a dataset.
-pub struct KanTrainer<'e> {
-    engine: &'e Engine,
-    artifact: String,
-    spec: KanSpec,
-    params: Vec<Literal>, // [grids0, grids1]
-    opt_m: Vec<Literal>,
-    opt_v: Vec<Literal>,
-    step: usize,
-}
-
-impl<'e> KanTrainer<'e> {
-    /// Initialize with paper §A.1 Gaussian(σ=0.1) grids.
-    pub fn new(engine: &'e Engine, grid_size: usize, seed: u64) -> Result<Self> {
-        let artifact = format!("kan_train_step_g{grid_size}");
-        anyhow::ensure!(
-            engine.manifest.artifacts.contains_key(&artifact),
-            "no train artifact {artifact}"
-        );
-        let spec = KanSpec { grid_size, ..engine.manifest.kan_spec };
-        let mut rng = Pcg32::new(seed, 101);
-        let sizes = [
-            vec![spec.d_in, spec.d_hidden, grid_size],
-            vec![spec.d_hidden, spec.d_out, grid_size],
-        ];
-        let mut params = Vec::new();
-        let mut opt_m = Vec::new();
-        let mut opt_v = Vec::new();
-        for s in &sizes {
-            let n_in = s[0];
-            let n_edges = s[0] * s[1];
-            // linear-start init: each spline begins as a random linear ramp
-            // a·t_k (+ small noise, paper §A.1's σ=0.1 scaled down), so the
-            // layer initially acts like a dense linear map and gradients
-            // reach every knot coherently; knots then specialize.  Pure
-            // per-knot noise leaves high-G grids unable to converge in the
-            // paper's training budget (optimization, not capacity).
-            let slope_std = 1.0 / (n_in as f32).sqrt();
-            let mut init = Vec::with_capacity(n_edges * grid_size);
-            for _ in 0..n_edges {
-                let a = slope_std * rng.normal();
-                for k in 0..grid_size {
-                    let t = -1.0 + 2.0 * k as f32 / (grid_size - 1) as f32;
-                    init.push(a * t + 0.02 * rng.normal());
-                }
-            }
-            params.push(literal::to_literal(&Tensor::from_f32(s, &init))?);
-            opt_m.push(literal::to_literal(&Tensor::zeros(s, crate::tensor::DType::F32))?);
-            opt_v.push(literal::to_literal(&Tensor::zeros(s, crate::tensor::DType::F32))?);
+impl TrainLog {
+    /// True when the final loss improved on the first recorded loss — the
+    /// smoke-level "training actually trains" assertion.
+    pub fn improved(&self) -> bool {
+        match self.losses.first() {
+            Some(&(_, first)) => self.final_loss < first,
+            None => false,
         }
-        Ok(KanTrainer { engine, artifact, spec, params, opt_m, opt_v, step: 0 })
-    }
-
-    pub fn spec(&self) -> KanSpec {
-        self.spec
-    }
-
-    /// One AdamW step on a batch; returns the loss.
-    pub fn step_batch(&mut self, x: &[f32], y: &[f32], lr: f32) -> Result<f32> {
-        let b = self.engine.manifest.train_batch;
-        anyhow::ensure!(x.len() == b * self.spec.d_in, "batch x size");
-        anyhow::ensure!(y.len() == b * self.spec.d_out, "batch y size");
-        self.step += 1;
-        let exe = self.engine.executable(&self.artifact)?;
-        let step_l = literal::scalar_f32(self.step as f32)?;
-        let lr_l = literal::scalar_f32(lr)?;
-        let x_l = literal::to_literal(&Tensor::from_f32(&[b, self.spec.d_in], x))?;
-        let y_l = literal::to_literal(&Tensor::from_f32(&[b, self.spec.d_out], y))?;
-        let inputs: Vec<&Literal> = self
-            .params
-            .iter()
-            .chain(self.opt_m.iter())
-            .chain(self.opt_v.iter())
-            .chain([&step_l, &lr_l, &x_l, &y_l])
-            .collect();
-        let mut out = self.engine.execute_on(&exe, &inputs)?;
-        anyhow::ensure!(out.len() == 7, "train step returns 7 outputs, got {}", out.len());
-        let loss = literal::literal_scalar_f32(&out[6])?;
-        // rotate new state in (params', m', v')
-        let mut it = out.drain(..);
-        self.params = vec![it.next().unwrap(), it.next().unwrap()];
-        self.opt_m = vec![it.next().unwrap(), it.next().unwrap()];
-        self.opt_v = vec![it.next().unwrap(), it.next().unwrap()];
-        Ok(loss)
-    }
-
-    /// Full training run over a dataset with shuffled minibatches.
-    pub fn fit(&mut self, data: &Dataset, cfg: &TrainConfig) -> Result<TrainLog> {
-        let b = self.engine.manifest.train_batch;
-        anyhow::ensure!(data.n >= b, "dataset smaller than a batch");
-        let mut order_rng = Pcg32::new(cfg.seed, 103);
-        let mut order: Vec<usize> = order_rng.permutation(data.n);
-        let mut cursor = 0usize;
-        let mut losses = Vec::new();
-        let mut last = f32::NAN;
-        for s in 0..cfg.steps {
-            if cursor + b > data.n {
-                order = order_rng.permutation(data.n);
-                cursor = 0;
-            }
-            let idx = &order[cursor..cursor + b];
-            cursor += b;
-            let (x, y) = data.gather_batch(idx);
-            let lr = cosine_lr(cfg.base_lr, s, cfg.steps);
-            last = self.step_batch(&x, &y, lr)?;
-            anyhow::ensure!(last.is_finite(), "loss diverged at step {s}: {last}");
-            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
-                losses.push((s, last));
-            }
-        }
-        Ok(TrainLog { losses, final_loss: last })
-    }
-
-    /// Extract the trained grids as a dense checkpoint.
-    pub fn to_checkpoint(&self) -> Result<Checkpoint> {
-        let g0 = literal::from_literal(&self.params[0]).context("grids0")?;
-        let g1 = literal::from_literal(&self.params[1]).context("grids1")?;
-        let mut ck = Checkpoint::new(Json::obj(vec![
-            ("model", Json::str("dense_kan")),
-            ("grid_size", Json::num(self.spec.grid_size as f64)),
-            ("d_in", Json::num(self.spec.d_in as f64)),
-            ("d_hidden", Json::num(self.spec.d_hidden as f64)),
-            ("d_out", Json::num(self.spec.d_out as f64)),
-            ("steps", Json::num(self.step as f64)),
-        ]));
-        ck.insert("grids0", g0);
-        ck.insert("grids1", g1);
-        Ok(ck)
-    }
-}
-
-/// Train the MLP baseline head (Table 1 row 1).
-pub struct MlpTrainer<'e> {
-    engine: &'e Engine,
-    params: Vec<Literal>, // [w1, b1, w2, b2]
-    opt_m: Vec<Literal>,
-    opt_v: Vec<Literal>,
-    step: usize,
-    d_in: usize,
-    #[allow(dead_code)]
-    d_hidden: usize,
-    d_out: usize,
-}
-
-impl<'e> MlpTrainer<'e> {
-    pub fn new(engine: &'e Engine, seed: u64) -> Result<Self> {
-        let spec = engine.manifest.kan_spec;
-        let (d_in, d_hidden, d_out) = (spec.d_in, spec.d_hidden, spec.d_out);
-        let mut rng = Pcg32::new(seed, 107);
-        let s1 = (2.0 / d_in as f32).sqrt();
-        let s2 = (2.0 / d_hidden as f32).sqrt();
-        let shapes: [(Vec<usize>, f32); 4] = [
-            (vec![d_in, d_hidden], s1),
-            (vec![d_hidden], 0.0),
-            (vec![d_hidden, d_out], s2),
-            (vec![d_out], 0.0),
-        ];
-        let mut params = Vec::new();
-        let mut opt_m = Vec::new();
-        let mut opt_v = Vec::new();
-        for (s, std) in &shapes {
-            let n: usize = s.iter().product();
-            let init = if *std > 0.0 { rng.normal_vec(n, 0.0, *std) } else { vec![0.0; n] };
-            params.push(literal::to_literal(&Tensor::from_f32(s, &init))?);
-            opt_m.push(literal::to_literal(&Tensor::zeros(s, crate::tensor::DType::F32))?);
-            opt_v.push(literal::to_literal(&Tensor::zeros(s, crate::tensor::DType::F32))?);
-        }
-        Ok(MlpTrainer { engine, params, opt_m, opt_v, step: 0, d_in, d_hidden, d_out })
-    }
-
-    pub fn step_batch(&mut self, x: &[f32], y: &[f32], lr: f32) -> Result<f32> {
-        let b = self.engine.manifest.train_batch;
-        self.step += 1;
-        let exe = self.engine.executable("mlp_train_step")?;
-        let step_l = literal::scalar_f32(self.step as f32)?;
-        let lr_l = literal::scalar_f32(lr)?;
-        let x_l = literal::to_literal(&Tensor::from_f32(&[b, self.d_in], x))?;
-        let y_l = literal::to_literal(&Tensor::from_f32(&[b, self.d_out], y))?;
-        let inputs: Vec<&Literal> = self
-            .params
-            .iter()
-            .chain(self.opt_m.iter())
-            .chain(self.opt_v.iter())
-            .chain([&step_l, &lr_l, &x_l, &y_l])
-            .collect();
-        let mut out = self.engine.execute_on(&exe, &inputs)?;
-        anyhow::ensure!(out.len() == 13, "mlp train step returns 13 outputs");
-        let loss = literal::literal_scalar_f32(&out[12])?;
-        let rest: Vec<Literal> = out.drain(..12).collect();
-        self.params = rest[0..4].to_vec();
-        self.opt_m = rest[4..8].to_vec();
-        self.opt_v = rest[8..12].to_vec();
-        Ok(loss)
-    }
-
-    pub fn fit(&mut self, data: &Dataset, cfg: &TrainConfig) -> Result<TrainLog> {
-        let b = self.engine.manifest.train_batch;
-        let mut order_rng = Pcg32::new(cfg.seed, 109);
-        let mut order = order_rng.permutation(data.n);
-        let mut cursor = 0usize;
-        let mut losses = Vec::new();
-        let mut last = f32::NAN;
-        for s in 0..cfg.steps {
-            if cursor + b > data.n {
-                order = order_rng.permutation(data.n);
-                cursor = 0;
-            }
-            let (x, y) = data.gather_batch(&order[cursor..cursor + b]);
-            cursor += b;
-            let lr = cosine_lr(cfg.base_lr, s, cfg.steps);
-            last = self.step_batch(&x, &y, lr)?;
-            anyhow::ensure!(last.is_finite(), "loss diverged at step {s}");
-            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
-                losses.push((s, last));
-            }
-        }
-        Ok(TrainLog { losses, final_loss: last })
-    }
-
-    pub fn to_checkpoint(&self) -> Result<Checkpoint> {
-        let names = ["w1", "b1", "w2", "b2"];
-        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("mlp"))]));
-        for (n, l) in names.iter().zip(&self.params) {
-            ck.insert(n, literal::from_literal(l)?);
-        }
-        Ok(ck)
     }
 }
 
@@ -291,5 +93,31 @@ mod tests {
             assert!(lr <= prev + 1e-9);
             prev = lr;
         }
+    }
+
+    #[test]
+    fn cosine_lr_endpoints_exact() {
+        // satellite regression: step 0 == base, final step == 0 — and the
+        // default base_lr matches the paper's §A.1 value.
+        for &total in &[2usize, 10, 600] {
+            let base = 0.37;
+            assert_eq!(cosine_lr(base, 0, total), base, "total={total}");
+            let end = cosine_lr(base, total - 1, total);
+            assert!(end.abs() < base * 1e-6, "total={total}: {end}");
+        }
+        // degenerate single-step schedule holds the base rate
+        assert_eq!(cosine_lr(0.5, 0, 1), 0.5);
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.base_lr, 1e-3, "paper §A.1 default");
+    }
+
+    #[test]
+    fn train_log_improved() {
+        let log = TrainLog { losses: vec![(0, 1.0), (10, 0.4)], final_loss: 0.4 };
+        assert!(log.improved());
+        let flat = TrainLog { losses: vec![(0, 0.4)], final_loss: 0.4 };
+        assert!(!flat.improved());
+        let empty = TrainLog { losses: vec![], final_loss: f32::NAN };
+        assert!(!empty.improved());
     }
 }

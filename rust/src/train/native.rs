@@ -1,0 +1,464 @@
+//! Pure-Rust training engine: the FlashKAN autodiff kernels + AdamW under
+//! the same seeded loop as the PJRT path.
+//!
+//! [`NativeKanTrainer`] / [`NativeMlpTrainer`] mirror the PJRT trainers
+//! exactly — identical init RNG streams (101/107), identical data-order
+//! streams (103/109), identical logging cadence, and byte-identical
+//! checkpoint formats — so everything downstream of a checkpoint cannot
+//! tell which engine produced it.  [`VqHeadTrainer`] closes the serving
+//! loop: it retrains a compressed head's basis (codebook/gain/bias, frozen
+//! assignments) so a live deployment can hot-swap an online-refreshed head.
+//!
+//! Determinism: kernels accumulate in fixed order
+//! ([`crate::train::autodiff`]) and the loop introduces no other
+//! nondeterminism, so the same seed yields a bit-identical loss curve and
+//! checkpoint on every run (pinned by `rust/tests/train_native.rs`).
+
+use anyhow::Result;
+
+use super::autodiff::{
+    bce_with_logits, dense_backward, dense_forward, mlp_backward, mlp_forward, vq_backward,
+    vq_forward, VqGrads,
+};
+use super::optim::AdamW;
+use super::{cosine_lr, TrainConfig, TrainLog};
+use crate::data::dataset::Dataset;
+use crate::data::rng::Pcg32;
+use crate::kan::checkpoint::Checkpoint;
+use crate::kan::eval::{VqLayerParams, VqModel};
+use crate::kan::spec::KanSpec;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Shared minibatch scheduler: same reshuffle-on-wrap behavior as the PJRT
+/// trainers, parameterized by the engine's RNG stream.
+struct BatchOrder {
+    rng: Pcg32,
+    order: Vec<usize>,
+    cursor: usize,
+    n: usize,
+}
+
+impl BatchOrder {
+    fn new(seed: u64, stream: u64, n: usize) -> Self {
+        let mut rng = Pcg32::new(seed, stream);
+        let order = rng.permutation(n);
+        BatchOrder { rng, order, cursor: 0, n }
+    }
+
+    fn next(&mut self, b: usize) -> &[usize] {
+        if self.cursor + b > self.n {
+            self.order = self.rng.permutation(self.n);
+            self.cursor = 0;
+        }
+        let idx = &self.order[self.cursor..self.cursor + b];
+        self.cursor += b;
+        idx
+    }
+}
+
+/// Paper §A.1 linear-start grid init — the exact draw sequence of the PJRT
+/// `KanTrainer` (stream 101): per edge a random slope `a·t_k` plus small
+/// per-knot noise.
+fn init_grids(rng: &mut Pcg32, n_in: usize, n_out: usize, g: usize) -> Vec<f32> {
+    let n_edges = n_in * n_out;
+    let slope_std = 1.0 / (n_in as f32).sqrt();
+    let mut init = Vec::with_capacity(n_edges * g);
+    for _ in 0..n_edges {
+        let a = slope_std * rng.normal();
+        for k in 0..g {
+            let t = -1.0 + 2.0 * k as f32 / (g - 1) as f32;
+            init.push(a * t + 0.02 * rng.normal());
+        }
+    }
+    init
+}
+
+/// Train the dense KAN head natively (no PJRT, no artifacts).
+pub struct NativeKanTrainer {
+    spec: KanSpec,
+    grids: [Vec<f32>; 2],
+    opt_m: [Vec<f32>; 2],
+    opt_v: [Vec<f32>; 2],
+    opt: AdamW,
+    step: usize,
+}
+
+impl NativeKanTrainer {
+    /// Initialize with the same seeded draw sequence as the PJRT trainer.
+    pub fn new(spec: &KanSpec, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 101);
+        let dims = spec.layer_dims();
+        let g = spec.grid_size;
+        let g0 = init_grids(&mut rng, dims[0].0, dims[0].1, g);
+        let g1 = init_grids(&mut rng, dims[1].0, dims[1].1, g);
+        let m0 = vec![0f32; g0.len()];
+        let m1 = vec![0f32; g1.len()];
+        NativeKanTrainer {
+            spec: *spec,
+            opt_m: [m0.clone(), m1.clone()],
+            opt_v: [m0, m1],
+            grids: [g0, g1],
+            opt: AdamW::default(),
+            step: 0,
+        }
+    }
+
+    /// Head shape this trainer was built for.
+    pub fn spec(&self) -> KanSpec {
+        self.spec
+    }
+
+    /// One AdamW step on a `[b, d_in]` / `[b, d_out]` batch; returns the
+    /// BCE-with-logits loss.
+    pub fn step_batch(&mut self, x: &[f32], y: &[f32], b: usize, lr: f32) -> Result<f32> {
+        let s = self.spec;
+        anyhow::ensure!(x.len() == b * s.d_in, "batch x size");
+        anyhow::ensure!(y.len() == b * s.d_out, "batch y size");
+        self.step += 1;
+        let g = s.grid_size;
+        let (h, taps0) = dense_forward(x, b, &self.grids[0], s.d_in, s.d_hidden, g);
+        let (scores, taps1) = dense_forward(&h, b, &self.grids[1], s.d_hidden, s.d_out, g);
+        let (loss, gout) = bce_with_logits(&scores, y);
+        let mut ggrids1 = vec![0f32; self.grids[1].len()];
+        let mut gh = vec![0f32; b * s.d_hidden];
+        dense_backward(&taps1, b, &self.grids[1], s.d_hidden, s.d_out, g, &gout,
+                       &mut ggrids1, Some(&mut gh));
+        let mut ggrids0 = vec![0f32; self.grids[0].len()];
+        dense_backward(&taps0, b, &self.grids[0], s.d_in, s.d_hidden, g, &gh,
+                       &mut ggrids0, None);
+        self.opt.step(&mut self.grids[0], &ggrids0, &mut self.opt_m[0], &mut self.opt_v[0],
+                      lr, self.step);
+        self.opt.step(&mut self.grids[1], &ggrids1, &mut self.opt_m[1], &mut self.opt_v[1],
+                      lr, self.step);
+        Ok(loss)
+    }
+
+    /// Full training run over a dataset with shuffled minibatches — the
+    /// same loop shape (and data-order stream 103) as the PJRT trainer.
+    pub fn fit(&mut self, data: &Dataset, cfg: &TrainConfig) -> Result<TrainLog> {
+        let b = cfg.batch;
+        anyhow::ensure!(b > 0, "batch must be positive");
+        anyhow::ensure!(data.n >= b, "dataset smaller than a batch");
+        anyhow::ensure!(data.d_in == self.spec.d_in, "dataset d_in mismatch");
+        let mut sched = BatchOrder::new(cfg.seed, 103, data.n);
+        let mut losses = Vec::new();
+        let mut last = f32::NAN;
+        for s in 0..cfg.steps {
+            let (x, y) = data.gather_batch(sched.next(b));
+            let lr = cosine_lr(cfg.base_lr, s, cfg.steps);
+            last = self.step_batch(&x, &y, b, lr)?;
+            anyhow::ensure!(last.is_finite(), "loss diverged at step {s}: {last}");
+            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+                losses.push((s, last));
+            }
+        }
+        Ok(TrainLog { losses, final_loss: last })
+    }
+
+    /// Extract the trained grids as a dense checkpoint — identical meta and
+    /// tensor layout to the PJRT trainer's.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let s = self.spec;
+        let mut ck = Checkpoint::new(Json::obj(vec![
+            ("model", Json::str("dense_kan")),
+            ("grid_size", Json::num(s.grid_size as f64)),
+            ("d_in", Json::num(s.d_in as f64)),
+            ("d_hidden", Json::num(s.d_hidden as f64)),
+            ("d_out", Json::num(s.d_out as f64)),
+            ("steps", Json::num(self.step as f64)),
+        ]));
+        ck.insert("grids0",
+                  Tensor::from_f32(&[s.d_in, s.d_hidden, s.grid_size], &self.grids[0]));
+        ck.insert("grids1",
+                  Tensor::from_f32(&[s.d_hidden, s.d_out, s.grid_size], &self.grids[1]));
+        ck
+    }
+}
+
+/// Train the MLP baseline head natively (Table 1 row 1).
+pub struct NativeMlpTrainer {
+    d_in: usize,
+    d_hidden: usize,
+    d_out: usize,
+    params: [Vec<f32>; 4], // [w1, b1, w2, b2]
+    opt_m: [Vec<f32>; 4],
+    opt_v: [Vec<f32>; 4],
+    opt: AdamW,
+    step: usize,
+}
+
+impl NativeMlpTrainer {
+    /// He init, same seeded draw sequence as the PJRT trainer (stream 107).
+    pub fn new(spec: &KanSpec, seed: u64) -> Self {
+        let (d_in, d_hidden, d_out) = (spec.d_in, spec.d_hidden, spec.d_out);
+        let mut rng = Pcg32::new(seed, 107);
+        let s1 = (2.0 / d_in as f32).sqrt();
+        let s2 = (2.0 / d_hidden as f32).sqrt();
+        let params = [
+            rng.normal_vec(d_in * d_hidden, 0.0, s1),
+            vec![0f32; d_hidden],
+            rng.normal_vec(d_hidden * d_out, 0.0, s2),
+            vec![0f32; d_out],
+        ];
+        let zeros = |p: &[Vec<f32>; 4]| {
+            [
+                vec![0f32; p[0].len()],
+                vec![0f32; p[1].len()],
+                vec![0f32; p[2].len()],
+                vec![0f32; p[3].len()],
+            ]
+        };
+        let opt_m = zeros(&params);
+        let opt_v = zeros(&params);
+        NativeMlpTrainer { d_in, d_hidden, d_out, params, opt_m, opt_v,
+                           opt: AdamW::default(), step: 0 }
+    }
+
+    /// One AdamW step; returns the BCE-with-logits loss.
+    pub fn step_batch(&mut self, x: &[f32], y: &[f32], b: usize, lr: f32) -> Result<f32> {
+        anyhow::ensure!(x.len() == b * self.d_in, "batch x size");
+        anyhow::ensure!(y.len() == b * self.d_out, "batch y size");
+        self.step += 1;
+        let (d_in, d_hidden, d_out) = (self.d_in, self.d_hidden, self.d_out);
+        let (scores, cache) = mlp_forward(x, b, &self.params[0], &self.params[1],
+                                          &self.params[2], &self.params[3],
+                                          d_in, d_hidden, d_out);
+        let (loss, gout) = bce_with_logits(&scores, y);
+        let mut grads = [
+            vec![0f32; self.params[0].len()],
+            vec![0f32; self.params[1].len()],
+            vec![0f32; self.params[2].len()],
+            vec![0f32; self.params[3].len()],
+        ];
+        {
+            let (gw1, rest) = grads.split_at_mut(1);
+            let (gb1, rest) = rest.split_at_mut(1);
+            let (gw2, gb2) = rest.split_at_mut(1);
+            mlp_backward(x, b, &cache, &self.params[2], d_in, d_hidden, d_out, &gout,
+                         &mut gw1[0], &mut gb1[0], &mut gw2[0], &mut gb2[0]);
+        }
+        for i in 0..4 {
+            self.opt.step(&mut self.params[i], &grads[i], &mut self.opt_m[i],
+                          &mut self.opt_v[i], lr, self.step);
+        }
+        Ok(loss)
+    }
+
+    /// Full training run (data-order stream 109, matching the PJRT loop).
+    pub fn fit(&mut self, data: &Dataset, cfg: &TrainConfig) -> Result<TrainLog> {
+        let b = cfg.batch;
+        anyhow::ensure!(b > 0, "batch must be positive");
+        anyhow::ensure!(data.n >= b, "dataset smaller than a batch");
+        let mut sched = BatchOrder::new(cfg.seed, 109, data.n);
+        let mut losses = Vec::new();
+        let mut last = f32::NAN;
+        for s in 0..cfg.steps {
+            let (x, y) = data.gather_batch(sched.next(b));
+            let lr = cosine_lr(cfg.base_lr, s, cfg.steps);
+            last = self.step_batch(&x, &y, b, lr)?;
+            anyhow::ensure!(last.is_finite(), "loss diverged at step {s}");
+            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+                losses.push((s, last));
+            }
+        }
+        Ok(TrainLog { losses, final_loss: last })
+    }
+
+    /// Trained params as an `mlp` checkpoint (same layout as the PJRT
+    /// trainer's).
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new(Json::obj(vec![("model", Json::str("mlp"))]));
+        ck.insert("w1", Tensor::from_f32(&[self.d_in, self.d_hidden], &self.params[0]));
+        ck.insert("b1", Tensor::from_f32(&[self.d_hidden], &self.params[1]));
+        ck.insert("w2", Tensor::from_f32(&[self.d_hidden, self.d_out], &self.params[2]));
+        ck.insert("b2", Tensor::from_f32(&[self.d_out], &self.params[3]));
+        ck
+    }
+}
+
+/// Online basis retrain for a compressed head: trains codebooks, gains and
+/// biases with the VQ assignments frozen (the paper's sole-head seam — the
+/// shared basis moves, the per-edge structure doesn't).  The retrained head
+/// serializes back to a standard `vq_kan_fp32` checkpoint, so it flows
+/// through the normal load path and hot-swaps into a live deployment.
+pub struct VqHeadTrainer {
+    model: VqModel,
+    // m/v per trained tensor: cb0, gain0, bias0, cb1, gain1, bias1
+    opt_m: [Vec<f32>; 6],
+    opt_v: [Vec<f32>; 6],
+    opt: AdamW,
+    step: usize,
+}
+
+impl VqHeadTrainer {
+    /// Wrap a compressed head for retraining.
+    pub fn new(model: VqModel) -> Self {
+        let zeros = |m: &VqModel| {
+            [
+                vec![0f32; m.codebook0.len()],
+                vec![0f32; m.gain0.len()],
+                vec![0f32; m.bias_sum0.len()],
+                vec![0f32; m.codebook1.len()],
+                vec![0f32; m.gain1.len()],
+                vec![0f32; m.bias_sum1.len()],
+            ]
+        };
+        let opt_m = zeros(&model);
+        let opt_v = zeros(&model);
+        VqHeadTrainer { model, opt_m, opt_v, opt: AdamW::default(), step: 0 }
+    }
+
+    /// The current (retrained) model.
+    pub fn model(&self) -> &VqModel {
+        &self.model
+    }
+
+    /// Consume the trainer, yielding the retrained model.
+    pub fn into_model(self) -> VqModel {
+        self.model
+    }
+
+    /// One AdamW step on the basis parameters; returns the loss.
+    pub fn step_batch(&mut self, x: &[f32], y: &[f32], b: usize, lr: f32) -> Result<f32> {
+        let m = &self.model;
+        anyhow::ensure!(x.len() == b * m.d_in, "batch x size");
+        anyhow::ensure!(y.len() == b * m.d_out, "batch y size");
+        self.step += 1;
+        let (loss, g0, g1) = {
+            let p0 = VqLayerParams {
+                codebook: &m.codebook0, k: m.k, g: m.g, idx: &m.idx0, gain: &m.gain0,
+                bias_sum: &m.bias_sum0, n_in: m.d_in, n_out: m.d_hidden,
+            };
+            let p1 = VqLayerParams {
+                codebook: &m.codebook1, k: m.k, g: m.g, idx: &m.idx1, gain: &m.gain1,
+                bias_sum: &m.bias_sum1, n_in: m.d_hidden, n_out: m.d_out,
+            };
+            let (h, taps0) = vq_forward(x, b, &p0);
+            let (scores, taps1) = vq_forward(&h, b, &p1);
+            let (loss, gout) = bce_with_logits(&scores, y);
+            let mut g1 = VqGrads::zeros(m.k, m.g, m.d_hidden, m.d_out);
+            let mut gh = vec![0f32; b * m.d_hidden];
+            vq_backward(&taps1, b, &p1, &gout, &mut g1, Some(&mut gh));
+            let mut g0 = VqGrads::zeros(m.k, m.g, m.d_in, m.d_hidden);
+            vq_backward(&taps0, b, &p0, &gh, &mut g0, None);
+            (loss, g0, g1)
+        };
+        let t = self.step;
+        let m = &mut self.model;
+        self.opt.step(&mut m.codebook0, &g0.codebook, &mut self.opt_m[0], &mut self.opt_v[0], lr, t);
+        self.opt.step(&mut m.gain0, &g0.gain, &mut self.opt_m[1], &mut self.opt_v[1], lr, t);
+        self.opt.step(&mut m.bias_sum0, &g0.bias, &mut self.opt_m[2], &mut self.opt_v[2], lr, t);
+        self.opt.step(&mut m.codebook1, &g1.codebook, &mut self.opt_m[3], &mut self.opt_v[3], lr, t);
+        self.opt.step(&mut m.gain1, &g1.gain, &mut self.opt_m[4], &mut self.opt_v[4], lr, t);
+        self.opt.step(&mut m.bias_sum1, &g1.bias, &mut self.opt_m[5], &mut self.opt_v[5], lr, t);
+        Ok(loss)
+    }
+
+    /// Full retrain run (its own data-order stream, 105).
+    pub fn fit(&mut self, data: &Dataset, cfg: &TrainConfig) -> Result<TrainLog> {
+        let b = cfg.batch;
+        anyhow::ensure!(b > 0, "batch must be positive");
+        anyhow::ensure!(data.n >= b, "dataset smaller than a batch");
+        let mut sched = BatchOrder::new(cfg.seed, 105, data.n);
+        let mut losses = Vec::new();
+        let mut last = f32::NAN;
+        for s in 0..cfg.steps {
+            let (x, y) = data.gather_batch(sched.next(b));
+            let lr = cosine_lr(cfg.base_lr, s, cfg.steps);
+            last = self.step_batch(&x, &y, b, lr)?;
+            anyhow::ensure!(last.is_finite(), "loss diverged at step {s}");
+            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+                losses.push((s, last));
+            }
+        }
+        Ok(TrainLog { losses, final_loss: last })
+    }
+
+    /// Serialize the retrained head as a `vq_kan_fp32` checkpoint — the
+    /// same tensor names and meta keys as
+    /// [`crate::vq::pipeline::Compressed::to_checkpoint`], so
+    /// `load_compressed` and the serving head loader consume it unchanged.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let m = &self.model;
+        let mut ck = Checkpoint::new(Json::obj(vec![
+            ("model", Json::str("vq_kan_fp32")),
+            ("codebook_size", Json::num(m.k as f64)),
+            ("grid_size", Json::num(m.g as f64)),
+            ("d_in", Json::num(m.d_in as f64)),
+            ("d_hidden", Json::num(m.d_hidden as f64)),
+            ("d_out", Json::num(m.d_out as f64)),
+            ("retrain_steps", Json::num(self.step as f64)),
+        ]));
+        ck.insert("idx0", Tensor::from_i32(&[m.d_in, m.d_hidden], &m.idx0));
+        ck.insert("bias_sum0", Tensor::from_f32(&[m.d_hidden], &m.bias_sum0));
+        ck.insert("cb0", Tensor::from_f32(&[m.k, m.g], &m.codebook0));
+        ck.insert("g0", Tensor::from_f32(&[m.d_in, m.d_hidden], &m.gain0));
+        ck.insert("idx1", Tensor::from_i32(&[m.d_hidden, m.d_out], &m.idx1));
+        ck.insert("bias_sum1", Tensor::from_f32(&[m.d_out], &m.bias_sum1));
+        ck.insert("cb1", Tensor::from_f32(&[m.k, m.g], &m.codebook1));
+        ck.insert("g1", Tensor::from_f32(&[m.d_hidden, m.d_out], &m.gain1));
+        ck
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::standard_splits;
+
+    fn tiny_spec() -> KanSpec {
+        KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 5 }
+    }
+
+    fn tiny_data(spec: &KanSpec) -> Dataset {
+        standard_splits(5, spec.d_in, spec.d_out, 128, 16, 16, 16).train
+    }
+
+    #[test]
+    fn kan_loss_decreases() {
+        let spec = tiny_spec();
+        let data = tiny_data(&spec);
+        let mut tr = NativeKanTrainer::new(&spec, 3);
+        let cfg = TrainConfig { steps: 80, base_lr: 5e-3, seed: 1, log_every: 10, batch: 16 };
+        let log = tr.fit(&data, &cfg).unwrap();
+        assert!(log.improved(), "{:?}", log.losses);
+        let ck = tr.to_checkpoint();
+        assert_eq!(ck.meta.get("model").unwrap().as_str(), Some("dense_kan"));
+        assert_eq!(ck.require("grids0").unwrap().as_f32().len(),
+                   spec.d_in * spec.d_hidden * spec.grid_size);
+    }
+
+    #[test]
+    fn mlp_loss_decreases() {
+        let spec = tiny_spec();
+        let data = tiny_data(&spec);
+        let mut tr = NativeMlpTrainer::new(&spec, 3);
+        let cfg = TrainConfig { steps: 80, base_lr: 5e-3, seed: 1, log_every: 10, batch: 16 };
+        let log = tr.fit(&data, &cfg).unwrap();
+        assert!(log.improved(), "{:?}", log.losses);
+    }
+
+    #[test]
+    fn vq_retrain_loss_decreases_and_roundtrips() {
+        use crate::vq::pipeline::{compress, load_compressed};
+        use crate::vq::storage::Precision;
+        let spec = tiny_spec();
+        let data = tiny_data(&spec);
+        let dense = crate::kan::checkpoint::synthetic_dense(&spec, 9);
+        let comp = compress(&dense, &spec, 8, Precision::Fp32, 42).unwrap();
+        let mut tr = VqHeadTrainer::new(comp.to_eval_model());
+        let cfg = TrainConfig { steps: 60, base_lr: 5e-3, seed: 2, log_every: 10, batch: 16 };
+        let log = tr.fit(&data, &cfg).unwrap();
+        assert!(log.improved(), "{:?}", log.losses);
+        // checkpoint roundtrip preserves the retrained forward bitwise
+        let ck = tr.to_checkpoint();
+        let back = load_compressed(&ck).unwrap();
+        let x = &data.x[..4 * spec.d_in];
+        let want = tr.model().forward(x, 4);
+        let got = back.forward(x, 4);
+        for (w, v) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), v.to_bits());
+        }
+    }
+}

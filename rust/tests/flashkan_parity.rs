@@ -1,0 +1,165 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
+//! FlashKAN parity pin: active-bases evaluation must be **bit-for-bit**
+//! equal to the dense `kan::eval` forward on Fp32 — property-tested across
+//! grid sizes, including inputs landing exactly on boundary knots and deep
+//! in tanh saturation.  This is the contract that lets the native training
+//! path ([`share_kan::train`]) produce checkpoints indistinguishable from
+//! models evaluated through the serving kernels: the forward the gradients
+//! were computed against IS the forward that serves.
+//!
+//! Built on the in-tree seeded property harness (util::prop); every failure
+//! reports a reproducing seed.
+
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::bspline::{pli_eval, CubicSpline};
+use share_kan::kan::eval::{dense_layer, vq_layer, VqLayerParams};
+use share_kan::kan::flash::{
+    basis_row, dense_layer_active, dense_layer_allbases, layer_taps, tap, vq_layer_active,
+};
+use share_kan::prop_assert;
+use share_kan::util::prop::check;
+
+/// Draw a batch that mixes generic gaussian inputs with the adversarial
+/// cases: exact knot positions (u = tanh(x) on a grid point), segment
+/// boundaries, zero, and ±saturation.
+fn adversarial_batch(rng: &mut Pcg32, n: usize, g: usize) -> Vec<f32> {
+    let mut x = rng.normal_vec(n, 0.0, 1.5);
+    if n >= 6 {
+        x[0] = 1e30; // clamps to the last knot pair, frac == 1.0
+        x[1] = -1e30; // first pair, frac == 0.0
+        x[2] = 0.0; // dead center
+        // land u exactly on an interior knot: u = -1 + 2k/(g-1)
+        let k = 1 + rng.below(g.saturating_sub(2).max(1));
+        let u = -1.0 + 2.0 * k as f32 / (g - 1) as f32;
+        // atanh via ln: x = 0.5 * ln((1+u)/(1-u))
+        x[3] = 0.5 * ((1.0 + u) / (1.0 - u)).ln();
+        x[4] = 1.0;
+        x[5] = -1.0;
+    }
+    x
+}
+
+#[test]
+fn prop_active_forward_bitwise_equals_dense_eval() {
+    check("flash dense parity", 0xF1A5, 150, |rng| {
+        let g = 2 + rng.below(31); // 2..=32, includes the degenerate 2-knot grid
+        let b = 1 + rng.below(6);
+        let n_in = 1 + rng.below(6);
+        let n_out = 1 + rng.below(6);
+        let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+        let x = adversarial_batch(rng, b * n_in, g);
+        let want = dense_layer(&x, b, &grids, n_in, n_out, g);
+        let (got, taps) = dense_layer_active(&x, b, &grids, n_in, n_out, g);
+        prop_assert!(taps.len() == b * n_in, "tap count");
+        for (e, (w, v)) in want.iter().zip(&got).enumerate() {
+            prop_assert!(w.to_bits() == v.to_bits(),
+                         "g={g} b={b} {n_in}x{n_out} elem {e}: {w} != {v}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allbases_bitwise_equals_active() {
+    // the O(G) dense-basis reference sums G-2 exact zeros in the same knot
+    // order — bit-equality here is what makes the train_step bench a pure
+    // cost comparison rather than an accuracy tradeoff
+    check("allbases parity", 0xF1A6, 100, |rng| {
+        let g = 2 + rng.below(31);
+        let (b, n_in, n_out) = (1 + rng.below(4), 1 + rng.below(5), 1 + rng.below(5));
+        let grids = rng.normal_vec(n_in * n_out * g, 0.0, 1.0);
+        let x = adversarial_batch(rng, b * n_in, g);
+        let (active, ta) = dense_layer_active(&x, b, &grids, n_in, n_out, g);
+        let (dense, td) = dense_layer_allbases(&x, b, &grids, n_in, n_out, g);
+        prop_assert!(ta == td, "tap caches differ");
+        for (e, (a, d)) in active.iter().zip(&dense).enumerate() {
+            prop_assert!(a.to_bits() == d.to_bits(), "g={g} elem {e}: {a} != {d}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vq_active_bitwise_equals_vq_eval() {
+    check("flash vq parity", 0xF1A7, 100, |rng| {
+        let g = 2 + rng.below(15);
+        let k = 1 + rng.below(12);
+        let (b, n_in, n_out) = (1 + rng.below(4), 1 + rng.below(5), 1 + rng.below(5));
+        let codebook = rng.normal_vec(k * g, 0.0, 1.0);
+        let idx: Vec<i32> = (0..n_in * n_out).map(|_| rng.below(k) as i32).collect();
+        let gain = rng.normal_vec(n_in * n_out, 0.0, 0.5);
+        let bias = rng.normal_vec(n_out, 0.0, 0.2);
+        let p = VqLayerParams {
+            codebook: &codebook, k, g, idx: &idx, gain: &gain, bias_sum: &bias, n_in, n_out,
+        };
+        let x = adversarial_batch(rng, b * n_in, g);
+        let want = vq_layer(&x, b, &p);
+        let (got, _) = vq_layer_active(&x, b, &p);
+        for (e, (w, v)) in want.iter().zip(&got).enumerate() {
+            prop_assert!(w.to_bits() == v.to_bits(), "g={g} k={k} elem {e}: {w} != {v}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tap_matches_scalar_pli_eval() {
+    // one tap against one grid row reproduces the hand-rolled PLI kernel
+    // that the arena/SIMD serving backends are themselves pinned against
+    check("tap vs pli_eval", 0xF1A8, 200, |rng| {
+        let g = 2 + rng.below(31);
+        let grid = rng.normal_vec(g, 0.0, 1.0);
+        let x = adversarial_batch(rng, 8, g);
+        for &xi in &x {
+            let t = tap(xi, g);
+            prop_assert!(t.i0 <= g - 2, "i0 {} out of range (g={g})", t.i0);
+            prop_assert!(t.frac >= 0.0 && t.frac <= 1.0, "frac {}", t.frac);
+            let got = (1.0 - t.frac) * grid[t.i0] + t.frac * grid[t.i0 + 1];
+            let want = pli_eval(&grid, xi.tanh());
+            prop_assert!(got.to_bits() == want.to_bits(),
+                         "g={g} x={xi}: {got} != {want}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_basis_rows_partition_of_unity() {
+    check("hat partition of unity", 0xF1A9, 150, |rng| {
+        let g = 2 + rng.below(31);
+        let x = adversarial_batch(rng, 12, g);
+        let taps = layer_taps(&x, g);
+        let mut row = vec![0f32; g];
+        for t in &taps {
+            basis_row(t, g, &mut row);
+            let sum: f32 = row.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-6, "g={g}: sum {sum}");
+            let nonzero = row.iter().filter(|&&v| v != 0.0).count();
+            prop_assert!(nonzero <= 2, "g={g}: {nonzero} active bases");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cubic_active_bitwise_equals_eval() {
+    // same story one degree up: the 4-wide cubic active window must agree
+    // with both the production eval and the all-coefficients reference
+    check("cubic active parity", 0xF1AA, 150, |rng| {
+        let n_coef = 4 + rng.below(30);
+        let spline = CubicSpline::new(rng.normal_vec(n_coef, 0.0, 1.0));
+        for _ in 0..8 {
+            // cover the clamp region beyond [-1, 1] too
+            let u = rng.uniform_in(-1.5, 1.5);
+            let want = spline.eval(u);
+            let active = spline.eval_active(u);
+            let dense = spline.eval_dense(u);
+            prop_assert!(want.to_bits() == active.to_bits(),
+                         "n={n_coef} u={u}: eval {want} != active {active}");
+            prop_assert!(want.to_bits() == dense.to_bits(),
+                         "n={n_coef} u={u}: eval {want} != dense {dense}");
+        }
+        Ok(())
+    });
+}

@@ -43,7 +43,10 @@ fn train_compress_eval_pipeline() {
     // 1) train the dense head for a short run
     let mut trainer = KanTrainer::new(&eng, spec.grid_size, 7).unwrap();
     let log = trainer
-        .fit(&data.train, &TrainConfig { steps: 150, base_lr: 2e-2, seed: 1, log_every: 25 })
+        .fit(
+            &data.train,
+            &TrainConfig { steps: 150, base_lr: 2e-2, seed: 1, log_every: 25, batch: 16 },
+        )
         .unwrap();
     // loss must come down materially from the start
     let first = log.losses.first().unwrap().1;

@@ -1,0 +1,359 @@
+#![allow(clippy::unwrap_used, clippy::expect_used)] // test/bench code: panics are assertions
+
+//! Gradient correctness + determinism suite for the native training path.
+//!
+//! Central finite differences check every parameter class the trainers
+//! update — dense spline coefficients (both layers), VQ codebook rows,
+//! per-edge gains, folded biases — and the input gradient that chains the
+//! two layers.  The loss surface is piecewise-smooth: perturbing a layer-0
+//! parameter can push a hidden activation across a knot boundary, where FD
+//! is invalid, so every check compares the active-knot pattern at both
+//! perturbed points and skips crossings (asserting enough coordinates
+//! survive that the test keeps teeth).
+//!
+//! Determinism: the kernels accumulate in fixed order, so the same seed
+//! must give a bit-identical loss curve and byte-identical checkpoint
+//! across two independent runs — the contract ARCHITECTURE.md §10 states.
+
+use share_kan::data::dataset::standard_splits;
+use share_kan::data::rng::Pcg32;
+use share_kan::kan::checkpoint::{synthetic_dense, Checkpoint};
+use share_kan::kan::eval::VqLayerParams;
+use share_kan::kan::flash::Tap;
+use share_kan::kan::spec::KanSpec;
+use share_kan::train::autodiff::{
+    bce_with_logits, dense_backward, dense_forward, vq_backward, vq_forward, VqGrads,
+};
+use share_kan::train::{NativeKanTrainer, NativeMlpTrainer, TrainConfig, VqHeadTrainer};
+use share_kan::vq::{compress, Precision};
+
+const EPS: f32 = 3e-3;
+
+/// |analytic - fd| within absolute + relative slack appropriate for f32
+/// losses differenced at EPS.
+fn close(analytic: f32, fd: f32) -> bool {
+    (analytic - fd).abs() < 5e-3 + 2e-2 * fd.abs()
+}
+
+/// The active-knot pattern of a tap cache — FD checks compare patterns at
+/// x+eps and x-eps and skip coordinates whose perturbation crossed a knot.
+fn knot_pattern(taps: &[Tap]) -> Vec<usize> {
+    taps.iter().map(|t| t.i0).collect()
+}
+
+// ---------------------------------------------------------------- dense KAN
+
+struct DenseSetup {
+    b: usize,
+    spec: KanSpec,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    grids0: Vec<f32>,
+    grids1: Vec<f32>,
+}
+
+fn dense_setup() -> DenseSetup {
+    let spec = KanSpec { d_in: 3, d_hidden: 4, d_out: 2, grid_size: 5 };
+    let b = 4;
+    let mut rng = Pcg32::seeded(31);
+    DenseSetup {
+        b,
+        spec,
+        x: rng.normal_vec(b * spec.d_in, 0.0, 1.0),
+        y: (0..b * spec.d_out).map(|_| if rng.uniform() < 0.5 { 0.0 } else { 1.0 }).collect(),
+        grids0: rng.normal_vec(spec.d_in * spec.d_hidden * spec.grid_size, 0.0, 0.8),
+        grids1: rng.normal_vec(spec.d_hidden * spec.d_out * spec.grid_size, 0.0, 0.8),
+    }
+}
+
+/// Two-layer dense loss + the layer-1 knot pattern (the only pattern that
+/// can shift under a layer-0 parameter or input perturbation; layer-0 taps
+/// depend on x alone).
+fn dense_loss(s: &DenseSetup, grids0: &[f32], grids1: &[f32], x: &[f32]) -> (f32, Vec<usize>) {
+    let sp = s.spec;
+    let g = sp.grid_size;
+    let (h, _) = dense_forward(x, s.b, grids0, sp.d_in, sp.d_hidden, g);
+    let (scores, taps1) = dense_forward(&h, s.b, grids1, sp.d_hidden, sp.d_out, g);
+    (bce_with_logits(&scores, &s.y).0, knot_pattern(&taps1))
+}
+
+#[test]
+fn dense_grid_gradients_match_finite_difference() {
+    let s = dense_setup();
+    let sp = s.spec;
+    let g = sp.grid_size;
+    let (h, taps0) = dense_forward(&s.x, s.b, &s.grids0, sp.d_in, sp.d_hidden, g);
+    let (scores, taps1) = dense_forward(&h, s.b, &s.grids1, sp.d_hidden, sp.d_out, g);
+    let (_, gout) = bce_with_logits(&scores, &s.y);
+    let mut gg1 = vec![0f32; s.grids1.len()];
+    let mut gh = vec![0f32; s.b * sp.d_hidden];
+    dense_backward(&taps1, s.b, &s.grids1, sp.d_hidden, sp.d_out, g, &gout,
+                   &mut gg1, Some(&mut gh));
+    let mut gg0 = vec![0f32; s.grids0.len()];
+    dense_backward(&taps0, s.b, &s.grids0, sp.d_in, sp.d_hidden, g, &gh, &mut gg0, None);
+
+    // layer 1: loss is smooth in grids1 (taps are fixed by h) — check all
+    for i in 0..s.grids1.len() {
+        let mut hi = s.grids1.clone();
+        hi[i] += EPS;
+        let mut lo = s.grids1.clone();
+        lo[i] -= EPS;
+        let (lh, _) = dense_loss(&s, &s.grids0, &hi, &s.x);
+        let (ll, _) = dense_loss(&s, &s.grids0, &lo, &s.x);
+        let fd = (lh - ll) / (2.0 * EPS);
+        assert!(close(gg1[i], fd), "grids1[{i}]: analytic {} vs fd {fd}", gg1[i]);
+    }
+
+    // layer 0: a perturbation can move h across a layer-1 knot; skip those
+    let mut checked = 0usize;
+    for i in 0..s.grids0.len() {
+        let mut hi = s.grids0.clone();
+        hi[i] += EPS;
+        let mut lo = s.grids0.clone();
+        lo[i] -= EPS;
+        let (lh, ph) = dense_loss(&s, &hi, &s.grids1, &s.x);
+        let (ll, pl) = dense_loss(&s, &lo, &s.grids1, &s.x);
+        if ph != pl {
+            continue;
+        }
+        let fd = (lh - ll) / (2.0 * EPS);
+        assert!(close(gg0[i], fd), "grids0[{i}]: analytic {} vs fd {fd}", gg0[i]);
+        checked += 1;
+    }
+    assert!(checked > s.grids0.len() / 2,
+            "knot-crossing skips swallowed the layer-0 check: {checked}");
+}
+
+#[test]
+fn dense_input_gradient_matches_finite_difference() {
+    let s = dense_setup();
+    let sp = s.spec;
+    let g = sp.grid_size;
+    let (h, taps0) = dense_forward(&s.x, s.b, &s.grids0, sp.d_in, sp.d_hidden, g);
+    let (scores, taps1) = dense_forward(&h, s.b, &s.grids1, sp.d_hidden, sp.d_out, g);
+    let (_, gout) = bce_with_logits(&scores, &s.y);
+    let mut gg1 = vec![0f32; s.grids1.len()];
+    let mut gh = vec![0f32; s.b * sp.d_hidden];
+    dense_backward(&taps1, s.b, &s.grids1, sp.d_hidden, sp.d_out, g, &gout,
+                   &mut gg1, Some(&mut gh));
+    let mut gg0 = vec![0f32; s.grids0.len()];
+    let mut gx = vec![0f32; s.x.len()];
+    dense_backward(&taps0, s.b, &s.grids0, sp.d_in, sp.d_hidden, g, &gh,
+                   &mut gg0, Some(&mut gx));
+
+    let mut checked = 0usize;
+    for i in 0..s.x.len() {
+        let mut hi = s.x.clone();
+        hi[i] += EPS;
+        let mut lo = s.x.clone();
+        lo[i] -= EPS;
+        // an input perturbation can cross a knot in EITHER layer's taps
+        let (lh, p1h) = dense_loss(&s, &s.grids0, &s.grids1, &hi);
+        let (ll, p1l) = dense_loss(&s, &s.grids0, &s.grids1, &lo);
+        let p0h = knot_pattern(&dense_forward(&hi, s.b, &s.grids0, sp.d_in, sp.d_hidden, g).1);
+        let p0l = knot_pattern(&dense_forward(&lo, s.b, &s.grids0, sp.d_in, sp.d_hidden, g).1);
+        if p1h != p1l || p0h != p0l {
+            continue;
+        }
+        let fd = (lh - ll) / (2.0 * EPS);
+        assert!(close(gx[i], fd), "x[{i}]: analytic {} vs fd {fd}", gx[i]);
+        checked += 1;
+    }
+    assert!(checked > s.x.len() / 2, "knot-crossing skips: only {checked} checked");
+}
+
+// ----------------------------------------------------------------- VQ head
+
+struct VqSetup {
+    b: usize,
+    d_in: usize,
+    d_hidden: usize,
+    d_out: usize,
+    k: usize,
+    g: usize,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    cb0: Vec<f32>,
+    gain0: Vec<f32>,
+    bias0: Vec<f32>,
+    idx0: Vec<i32>,
+    cb1: Vec<f32>,
+    gain1: Vec<f32>,
+    bias1: Vec<f32>,
+    idx1: Vec<i32>,
+}
+
+fn vq_setup() -> VqSetup {
+    let (b, d_in, d_hidden, d_out, k, g) = (4, 3, 4, 2, 6, 5);
+    let mut rng = Pcg32::seeded(33);
+    VqSetup {
+        b, d_in, d_hidden, d_out, k, g,
+        x: rng.normal_vec(b * d_in, 0.0, 1.0),
+        y: (0..b * d_out).map(|_| if rng.uniform() < 0.5 { 0.0 } else { 1.0 }).collect(),
+        cb0: rng.normal_vec(k * g, 0.0, 0.8),
+        gain0: rng.normal_vec(d_in * d_hidden, 0.0, 0.6),
+        bias0: rng.normal_vec(d_hidden, 0.0, 0.2),
+        idx0: (0..d_in * d_hidden).map(|_| rng.below(k) as i32).collect(),
+        cb1: rng.normal_vec(k * g, 0.0, 0.8),
+        gain1: rng.normal_vec(d_hidden * d_out, 0.0, 0.6),
+        bias1: rng.normal_vec(d_out, 0.0, 0.2),
+        idx1: (0..d_hidden * d_out).map(|_| rng.below(k) as i32).collect(),
+    }
+}
+
+/// Two-layer VQ loss with one parameter vector substituted, plus the
+/// layer-1 knot pattern for kink detection.
+#[allow(clippy::too_many_arguments)]
+fn vq_loss(
+    s: &VqSetup, cb0: &[f32], gain0: &[f32], bias0: &[f32],
+    cb1: &[f32], gain1: &[f32], bias1: &[f32],
+) -> (f32, Vec<usize>) {
+    let p0 = VqLayerParams {
+        codebook: cb0, k: s.k, g: s.g, idx: &s.idx0, gain: gain0, bias_sum: bias0,
+        n_in: s.d_in, n_out: s.d_hidden,
+    };
+    let p1 = VqLayerParams {
+        codebook: cb1, k: s.k, g: s.g, idx: &s.idx1, gain: gain1, bias_sum: bias1,
+        n_in: s.d_hidden, n_out: s.d_out,
+    };
+    let (h, _) = vq_forward(&s.x, s.b, &p0);
+    let (scores, taps1) = vq_forward(&h, s.b, &p1);
+    (bce_with_logits(&scores, &s.y).0, knot_pattern(&taps1))
+}
+
+#[test]
+fn vq_parameter_gradients_match_finite_difference() {
+    let s = vq_setup();
+    let p0 = VqLayerParams {
+        codebook: &s.cb0, k: s.k, g: s.g, idx: &s.idx0, gain: &s.gain0, bias_sum: &s.bias0,
+        n_in: s.d_in, n_out: s.d_hidden,
+    };
+    let p1 = VqLayerParams {
+        codebook: &s.cb1, k: s.k, g: s.g, idx: &s.idx1, gain: &s.gain1, bias_sum: &s.bias1,
+        n_in: s.d_hidden, n_out: s.d_out,
+    };
+    let (h, taps0) = vq_forward(&s.x, s.b, &p0);
+    let (scores, taps1) = vq_forward(&h, s.b, &p1);
+    let (_, gout) = bce_with_logits(&scores, &s.y);
+    let mut g1 = VqGrads::zeros(s.k, s.g, s.d_hidden, s.d_out);
+    let mut gh = vec![0f32; s.b * s.d_hidden];
+    vq_backward(&taps1, s.b, &p1, &gout, &mut g1, Some(&mut gh));
+    let mut g0 = VqGrads::zeros(s.k, s.g, s.d_in, s.d_hidden);
+    vq_backward(&taps0, s.b, &p0, &gh, &mut g0, None);
+
+    // closures perturb one coordinate of one parameter class at a time
+    let mut checked = 0usize;
+    let mut skipped = 0usize;
+    let mut check = |name: &str, analytic: &[f32], layer0: bool, which: usize| {
+        let base: &[f32] = match (layer0, which) {
+            (true, 0) => &s.cb0,
+            (true, 1) => &s.gain0,
+            (true, _) => &s.bias0,
+            (false, 0) => &s.cb1,
+            (false, 1) => &s.gain1,
+            (false, _) => &s.bias1,
+        };
+        for i in 0..base.len() {
+            let mut hi = base.to_vec();
+            hi[i] += EPS;
+            let mut lo = base.to_vec();
+            lo[i] -= EPS;
+            let eval = |p: &[f32]| match (layer0, which) {
+                (true, 0) => vq_loss(&s, p, &s.gain0, &s.bias0, &s.cb1, &s.gain1, &s.bias1),
+                (true, 1) => vq_loss(&s, &s.cb0, p, &s.bias0, &s.cb1, &s.gain1, &s.bias1),
+                (true, _) => vq_loss(&s, &s.cb0, &s.gain0, p, &s.cb1, &s.gain1, &s.bias1),
+                (false, 0) => vq_loss(&s, &s.cb0, &s.gain0, &s.bias0, p, &s.gain1, &s.bias1),
+                (false, 1) => vq_loss(&s, &s.cb0, &s.gain0, &s.bias0, &s.cb1, p, &s.bias1),
+                (false, _) => vq_loss(&s, &s.cb0, &s.gain0, &s.bias0, &s.cb1, &s.gain1, p),
+            };
+            let (lh, ph) = eval(&hi);
+            let (ll, pl) = eval(&lo);
+            if layer0 && ph != pl {
+                skipped += 1; // hidden activation crossed a layer-1 knot
+                continue;
+            }
+            let fd = (lh - ll) / (2.0 * EPS);
+            assert!(close(analytic[i], fd),
+                    "{name}[{i}]: analytic {} vs fd {fd}", analytic[i]);
+            checked += 1;
+        }
+    };
+    check("cb0", &g0.codebook, true, 0);
+    check("gain0", &g0.gain, true, 1);
+    check("bias0", &g0.bias, true, 2);
+    check("cb1", &g1.codebook, false, 0);
+    check("gain1", &g1.gain, false, 1);
+    check("bias1", &g1.bias, false, 2);
+    assert!(checked > 60, "kink skips swallowed the test: {checked} checked, {skipped} skipped");
+}
+
+// ------------------------------------------------------------- determinism
+
+fn checkpoint_bytes(ck: &Checkpoint) -> Vec<u8> {
+    let mut buf = Vec::new();
+    ck.write_to(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn same_seed_gives_bit_identical_run() {
+    let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 5 };
+    let data = standard_splits(11, spec.d_in, spec.d_out, 128, 16, 16, 16).train;
+    let cfg = TrainConfig { steps: 60, base_lr: 5e-3, seed: 4, log_every: 7, batch: 16 };
+    let run = || {
+        let mut tr = NativeKanTrainer::new(&spec, 9);
+        let log = tr.fit(&data, &cfg).unwrap();
+        (log, checkpoint_bytes(&tr.to_checkpoint()))
+    };
+    let (log_a, bytes_a) = run();
+    let (log_b, bytes_b) = run();
+    assert_eq!(log_a.losses.len(), log_b.losses.len());
+    for ((sa, la), (sb, lb)) in log_a.losses.iter().zip(&log_b.losses) {
+        assert_eq!(sa, sb);
+        assert_eq!(la.to_bits(), lb.to_bits(), "loss curve diverged at step {sa}");
+    }
+    assert_eq!(log_a.final_loss.to_bits(), log_b.final_loss.to_bits());
+    assert_eq!(bytes_a, bytes_b, "checkpoints differ byte-wise");
+    // and a different seed actually changes the run (the test has teeth)
+    let mut tr = NativeKanTrainer::new(&spec, 10);
+    let other = checkpoint_bytes(&tr.to_checkpoint());
+    assert_ne!(bytes_a, other, "seed must matter");
+}
+
+#[test]
+fn mlp_same_seed_gives_bit_identical_run() {
+    let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 5 };
+    let data = standard_splits(12, spec.d_in, spec.d_out, 128, 16, 16, 16).train;
+    let cfg = TrainConfig { steps: 50, base_lr: 5e-3, seed: 4, log_every: 9, batch: 16 };
+    let run = || {
+        let mut tr = NativeMlpTrainer::new(&spec, 9);
+        let log = tr.fit(&data, &cfg).unwrap();
+        (log, checkpoint_bytes(&tr.to_checkpoint()))
+    };
+    let (log_a, bytes_a) = run();
+    let (log_b, bytes_b) = run();
+    for ((_, la), (_, lb)) in log_a.losses.iter().zip(&log_b.losses) {
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+    assert_eq!(bytes_a, bytes_b);
+}
+
+#[test]
+fn vq_retrainer_same_seed_gives_bit_identical_run() {
+    let spec = KanSpec { d_in: 6, d_hidden: 8, d_out: 3, grid_size: 5 };
+    let data = standard_splits(13, spec.d_in, spec.d_out, 128, 16, 16, 16).train;
+    let dense = synthetic_dense(&spec, 21);
+    let cfg = TrainConfig { steps: 40, base_lr: 5e-3, seed: 6, log_every: 8, batch: 16 };
+    let run = || {
+        let comp = compress(&dense, &spec, 8, Precision::Fp32, 42).unwrap();
+        let mut tr = VqHeadTrainer::new(comp.to_eval_model());
+        let log = tr.fit(&data, &cfg).unwrap();
+        (log, checkpoint_bytes(&tr.to_checkpoint()))
+    };
+    let (log_a, bytes_a) = run();
+    let (log_b, bytes_b) = run();
+    for ((_, la), (_, lb)) in log_a.losses.iter().zip(&log_b.losses) {
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+    assert_eq!(bytes_a, bytes_b);
+}
